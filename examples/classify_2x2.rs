@@ -1,0 +1,41 @@
+//! The 2×2 RFNN as a reconfigurable binary classifier (paper §IV-A,
+//! Fig. 12): train on the four scenarios against the virtual-VNA measured
+//! device and report test accuracies vs the paper's.
+//!
+//! Run: `cargo run --release --example classify_2x2`
+
+use rfnn::bench::figures::render_grid;
+use rfnn::dataset::synth2d::{generate, Scenario};
+use rfnn::device::testbench::TestBench;
+use rfnn::device::vna::MeasuredUnitCell;
+use rfnn::device::State;
+use rfnn::math::rng::Rng;
+use rfnn::nn::rfnn2x2::{train, TrainConfig};
+
+fn main() {
+    let cell = MeasuredUnitCell::fabricate(0x2023);
+    let bench = TestBench::new(move |st| cell.t_block(st), 11);
+    let dev = |st: State, v1: f64, v4: f64| bench.measure_voltages(st, v1, v4);
+
+    println!("case        paper   ours    state");
+    for sc in Scenario::ALL {
+        let mut rng = Rng::new(4200 + sc as u64);
+        let all = generate(sc, 800, &mut rng);
+        let (tr, te) = all.split(0.8, &mut rng);
+        let model = train(&dev, &tr, &TrainConfig::default());
+        let acc = model.accuracy(&dev, &te);
+        println!(
+            "{:<11} {:>4.0}%   {:>5.1}%  {}",
+            sc.name(),
+            sc.paper_accuracy() * 100.0,
+            acc * 100.0,
+            model.state.label()
+        );
+        if sc == Scenario::Corner {
+            println!("\ndecision map (corner case, 31×31, '#'=1 ' '=0):");
+            let grid = model.yhat_grid(&dev, 30.0, 31);
+            println!("{}", render_grid(&grid));
+        }
+    }
+    println!("expected shape: separable cases well above the ring case (two-cut limit).");
+}

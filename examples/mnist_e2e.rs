@@ -1,0 +1,125 @@
+//! End-to-end driver (deliverable (b)/EXPERIMENTS.md): train the paper's
+//! 4-layer RFNN — 784 → Dense(8) → leaky-ReLU → **8×8 measured analog mesh
+//! + |.|** → Dense(10) → softmax — with Algorithm I (DSPSA on the 56
+//! discrete device states + SGD on the digital layers), alongside its
+//! digital twin; log the loss curve, report test accuracies and the
+//! confusion matrix, then serve the trained analog model through the PJRT
+//! runtime to prove all three layers compose.
+//!
+//! Run: `cargo run --release --example mnist_e2e -- [--train N] [--epochs N]`
+
+use rfnn::cli::Args;
+use rfnn::coordinator::batcher::BatchPolicy;
+use rfnn::coordinator::server::{Backend, ModelBundle, Server, ServerConfig};
+use rfnn::dataset::mnist::load_or_synthesize;
+use rfnn::mesh::propagate::MeshBackend;
+use rfnn::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
+use rfnn::nn::sgd::SgdConfig;
+use rfnn::runtime::Manifest;
+use std::time::Duration;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_train = args.get_or("train", 3000usize);
+    let n_test = args.get_or("test", 1000usize);
+    let epochs = args.get_or("epochs", 40usize);
+    let lr = args.get_or("lr", 0.02f64);
+    let seed = args.get_or("seed", 2023u64);
+
+    println!("== MNIST RFNN end-to-end (paper Fig. 14-16) ==");
+    println!("workload: {n_train} train / {n_test} test, {epochs} epochs, lr {lr}, batch 10");
+    println!("(paper: 50k/10k, 100 iterations, lr 0.005 — scaled to this 1-core testbed)\n");
+    let (tr, te) = load_or_synthesize(n_train, n_test, seed);
+    let cfg = MnistTrainConfig {
+        epochs,
+        sgd: SgdConfig { lr, batch_size: 10, momentum: 0.0 },
+        ..Default::default()
+    };
+
+    // --- analog: measured 8×8 mesh (28 virtual-VNA devices) + DSPSA ---
+    let t0 = std::time::Instant::now();
+    let mut analog = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: seed ^ 0xAA }, seed);
+    analog.train(&tr, &cfg);
+    let analog_time = t0.elapsed();
+    let a_test = analog.test_accuracy(&te);
+
+    // --- digital twin: unconstrained 8×8 matrix, same structure ---
+    let t0 = std::time::Instant::now();
+    let mut digital = MnistRfnn::digital(8, seed);
+    digital.train(&tr, &cfg);
+    let digital_time = t0.elapsed();
+    let d_test = digital.test_accuracy(&te);
+
+    println!("loss curves (every {} epochs):", (epochs / 10).max(1));
+    println!("epoch  analog(acc err)    digital(acc err)");
+    for (a, d) in analog.history.iter().zip(&digital.history).step_by((epochs / 10).max(1)) {
+        println!(
+            "{:>4}   {:.3} {:.3}        {:.3} {:.3}",
+            a.epoch + 1,
+            a.train_acc,
+            a.train_loss,
+            d.train_acc,
+            d.train_loss
+        );
+    }
+    let a_tr = analog.history.last().unwrap().train_acc;
+    let d_tr = digital.history.last().unwrap().train_acc;
+    println!("\n            train    test     wall");
+    println!("analog      {:>5.1}%  {:>5.1}%  {:.1?}", a_tr * 100.0, a_test * 100.0, analog_time);
+    println!("digital     {:>5.1}%  {:>5.1}%  {:.1?}", d_tr * 100.0, d_test * 100.0, digital_time);
+    println!("paper       91.7%   91.6%   (analog)   |   94.1%  93.1%  (digital)");
+
+    println!("\nconfusion matrix (analog, % per true class):");
+    let cm = analog.confusion(&te);
+    print!("     ");
+    for p in 0..10 {
+        print!("{p:>5}");
+    }
+    println!();
+    for (c, row) in cm.iter().enumerate() {
+        let total: usize = row.iter().sum::<usize>().max(1);
+        print!("  {c}: ");
+        for &v in row {
+            print!("{:>5.0}", 100.0 * v as f64 / total as f64);
+        }
+        println!();
+    }
+
+    // --- serve the trained analog model through PJRT (L3→runtime→L2→L1) ---
+    println!("\n== serving the trained model through the PJRT runtime ==");
+    let bundle = ModelBundle::from_trained(&analog).expect("bundle");
+    let artifacts = Manifest::default_dir();
+    let backend = if artifacts.join("manifest.json").exists() {
+        println!("backend: PJRT (AOT HLO from {artifacts:?})");
+        Backend::Pjrt(artifacts)
+    } else {
+        println!("backend: native (run `make artifacts` for the PJRT path)");
+        Backend::Native
+    };
+    let srv = Server::start(ServerConfig {
+        batch: BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) },
+        bundle,
+        backend,
+    });
+    let mut correct = 0usize;
+    let n_serve = te.len().min(500);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_serve {
+        let img: Vec<f32> = te.images[i].iter().map(|&v| v as f32).collect();
+        let resp = srv.client.infer(img).expect("infer");
+        if resp.predicted() == te.labels[i] {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "served {n_serve} requests in {:.2?} ({:.0} req/s); served accuracy {:.1}% (direct {:.1}%)",
+        dt,
+        n_serve as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n_serve as f64,
+        100.0 * a_test
+    );
+    println!("{}", srv.metrics.report());
+    srv.shutdown();
+    println!("\nmnist_e2e OK");
+}

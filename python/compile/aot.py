@@ -1,0 +1,139 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts (per batch size B in BATCH_SIZES):
+  rfnn_mnist_fwd[_bB].hlo.txt  -- full 4-layer forward -> probabilities
+  mesh_abs[_bB].hlo.txt        -- analog stage only
+  manifest.json                -- shapes and argument order for rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.mesh import reck_columns
+from .model import mesh_abs_dense_only, mesh_abs_only, rfnn_forward, rfnn_forward_dense
+
+# Mesh geometry (the paper's 8x8 processor: 28 cells, 13 columns).
+N = 8
+COLS = len(reck_columns(N))
+# Exported batch sizes; the rust batcher pads to the nearest.
+BATCH_SIZES = (1, 32, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(out_dir: str) -> dict:
+    coeff_specs = tuple(spec(COLS, N) for _ in range(6))
+    manifest = {
+        "n": N,
+        "cols": COLS,
+        "batch_sizes": list(BATCH_SIZES),
+        "artifacts": {},
+    }
+    for b in BATCH_SIZES:
+        # Serving path: dense precomposed-matrix kernel (§Perf L1 — the
+        # column sweep costs ~67× more under interpret-mode CPU dispatch
+        # and also underutilizes the MXU at N = 8).
+        fwd = jax.jit(rfnn_forward_dense).lower(
+            spec(b, 784), spec(N, 784), spec(N), spec(N, N), spec(N, N), spec(10, N), spec(10)
+        )
+        name = f"rfnn_mnist_fwd_b{b}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(to_hlo_text(fwd))
+        manifest["artifacts"][f"rfnn_mnist_fwd_b{b}"] = {
+            "file": name,
+            "args": ["x", "w1", "b1", "m_re", "m_im", "w2", "b2"],
+            "arg_shapes": [[b, 784], [N, 784], [N], [N, N], [N, N], [10, N], [10]],
+            "result_shape": [b, 10],
+        }
+
+        mesh = jax.jit(mesh_abs_dense_only).lower(spec(b, N), spec(N, N), spec(N, N))
+        name = f"mesh_abs_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(to_hlo_text(mesh))
+        manifest["artifacts"][f"mesh_abs_b{b}"] = {
+            "file": name,
+            "args": ["x", "m_re", "m_im"],
+            "arg_shapes": [[b, N], [N, N], [N, N]],
+            "result_shape": [b, N],
+        }
+
+    # Ablation artifacts: the structural column-sweep variant (the
+    # TPU-shaped schedule; see kernels/mesh.py) at the largest batch.
+    b = BATCH_SIZES[-1]
+    sweep = jax.jit(mesh_abs_only).lower(spec(b, N), coeff_specs)
+    name = f"mesh_sweep_b{b}.hlo.txt"
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(to_hlo_text(sweep))
+    manifest["artifacts"][f"mesh_sweep_b{b}"] = {
+        "file": name,
+        "args": ["x", "ar", "ai", "br", "bi", "cr", "ci"],
+        "arg_shapes": [[b, N]] + [[COLS, N]] * 6,
+        "result_shape": [b, N],
+    }
+    fwd_sweep = jax.jit(rfnn_forward).lower(
+        spec(b, 784), spec(N, 784), spec(N), coeff_specs, spec(10, N), spec(10)
+    )
+    name = f"rfnn_mnist_fwd_sweep_b{b}.hlo.txt"
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(to_hlo_text(fwd_sweep))
+    manifest["artifacts"][f"rfnn_mnist_fwd_sweep_b{b}"] = {
+        "file": name,
+        "args": ["x", "w1", "b1", "ar", "ai", "br", "bi", "cr", "ci", "w2", "b2"],
+        "arg_shapes": [
+            [b, 784], [N, 784], [N],
+            [COLS, N], [COLS, N], [COLS, N], [COLS, N], [COLS, N], [COLS, N],
+            [10, N], [10],
+        ],
+        "result_shape": [b, 10],
+    }
+    # The default-name alias the Makefile tracks.
+    default = os.path.join(out_dir, "rfnn_mnist_fwd.hlo.txt")
+    with open(os.path.join(out_dir, f"rfnn_mnist_fwd_b{BATCH_SIZES[-1]}.hlo.txt")) as src:
+        with open(default, "w") as dst:
+            dst.write(src.read())
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = lower_all(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    total = sum(
+        os.path.getsize(os.path.join(args.out_dir, a["file"]))
+        for a in manifest["artifacts"].values()
+    )
+    print(f"wrote {len(manifest['artifacts'])} artifacts ({total} bytes) to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Layer-1 Pallas kernel: batched complex mesh propagation + |.| detection.
+
+The paper's compute hot-spot is the analog matrix-vector product: a batch
+of (real) hidden activations streams through the N-channel mesh of 2x2
+unit cells and the output magnitudes are detected (the |.| activation of
+eq. 20 is physics, not software).
+
+Hardware adaptation (see DESIGN.md #Hardware-Adaptation): the mesh is a
+sequence of C columns, each a block-diagonal set of 2x2 complex rotations
+on adjacent channel pairs. Instead of a GPU-style scatter per cell, each
+column is encoded as three diagonal coefficient planes so one column step
+is three vector multiplies and two static rolls -- dense, MXU/VPU-friendly
+work with no gather:
+
+    x' = A (.) x  +  B (.) shift_up(x)  +  C (.) shift_down(x)
+
+where for a cell on channels (p, p+1):
+    A[p] = t00, B[p] = t01  (partner below: shift_up brings x[p+1] to p)
+    A[p+1] = t11, C[p+1] = t10
+and untouched channels carry A = 1, B = C = 0.
+
+Complex numbers are carried as separate re/im f32 planes (keeps the kernel
+bf16-ready and avoids relying on complex support in Mosaic). The batch is
+tiled through VMEM via BlockSpec; the (C, N) coefficient planes are tiny
+and stay resident per program instance.
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both pytest and
+the rust runtime execute. Structure (tiling, fusion) is what we optimize.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile: 128 rows x N channels x 2 planes x 4 B = 8 KiB at
+# N = 8 -- far under VMEM; chosen so several buffers double-buffer cleanly.
+DEFAULT_BLOCK_B = 128
+
+
+def _mesh_abs_kernel(xr_ref, xi_ref, ar_ref, ai_ref, br_ref, bi_ref,
+                     cr_ref, ci_ref, out_ref):
+    """One batch tile: propagate through all C columns, emit magnitudes."""
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    n_cols = ar_ref.shape[0]
+
+    # The column count is static (mesh depth = 2N−3), so unroll the sweep:
+    # XLA sees one straight-line fusion region instead of a `while` op with
+    # per-iteration dynamic slices (§Perf: CPU wallclock parity with
+    # lax.fori_loop — within run-to-run noise — but the unrolled HLO is the
+    # TPU-friendly structure: no loop-carried buffer round-trips).
+    for c in range(n_cols):
+        ar = ar_ref[c, :]
+        ai = ai_ref[c, :]
+        br = br_ref[c, :]
+        bi = bi_ref[c, :]
+        cr = cr_ref[c, :]
+        ci = ci_ref[c, :]
+        # Partners: shift_up brings channel p+1 to p; shift_down brings
+        # p-1 to p. Rolls are static-size, lowering to cheap slices.
+        xur = jnp.roll(xr, -1, axis=1)
+        xui = jnp.roll(xi, -1, axis=1)
+        xdr = jnp.roll(xr, 1, axis=1)
+        xdi = jnp.roll(xi, 1, axis=1)
+        # Complex multiply-accumulate, re/im planes.
+        yr = (ar * xr - ai * xi) + (br * xur - bi * xui) + (cr * xdr - ci * xdi)
+        yi = (ar * xi + ai * xr) + (br * xui + bi * xur) + (cr * xdi + ci * xdr)
+        xr, xi = yr, yi
+
+    out_ref[...] = jnp.sqrt(xr * xr + xi * xi)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def mesh_abs(x, coeffs, block_b: int = DEFAULT_BLOCK_B):
+    """Propagate a real batch through the mesh and detect magnitudes.
+
+    Args:
+      x: f32[B, N] real input batch (post-leaky-ReLU activations).
+      coeffs: tuple of six f32[C, N] planes (ar, ai, br, bi, cr, ci).
+      block_b: batch tile size (B must be a multiple, else it is padded).
+
+    Returns:
+      f32[B, N] output magnitudes |mesh @ x|.
+    """
+    ar, ai, br, bi, cr, ci = coeffs
+    b, n = x.shape
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    xr = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    xi = jnp.zeros_like(xr)
+    grid = (xr.shape[0] // bb,)
+
+    batch_spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    coeff_spec = pl.BlockSpec(ar.shape, lambda i: (0, 0))
+    out = pl.pallas_call(
+        _mesh_abs_kernel,
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        grid=grid,
+        in_specs=[batch_spec, batch_spec] + [coeff_spec] * 6,
+        out_specs=batch_spec,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xr, xi, ar, ai, br, bi, cr, ci)
+    return out[:b] if pad else out
+
+
+def coeff_planes_from_columns(n: int, columns):
+    """Build the six (C, N) coefficient planes from mesh columns.
+
+    `columns` is a list of columns; each column is a list of
+    (p, t) tuples where t is a complex 2x2 (nested lists/np-like) acting on
+    channels (p, p+1). Channels not covered by a cell pass through.
+    """
+    import numpy as np
+
+    c_cols = len(columns)
+    ar = np.ones((c_cols, n), np.float32)
+    ai = np.zeros((c_cols, n), np.float32)
+    br = np.zeros((c_cols, n), np.float32)
+    bi = np.zeros((c_cols, n), np.float32)
+    cr = np.zeros((c_cols, n), np.float32)
+    ci = np.zeros((c_cols, n), np.float32)
+    for k, col in enumerate(columns):
+        for p, t in col:
+            t = np.asarray(t, np.complex64)
+            ar[k, p], ai[k, p] = t[0, 0].real, t[0, 0].imag
+            br[k, p], bi[k, p] = t[0, 1].real, t[0, 1].imag
+            ar[k, p + 1], ai[k, p + 1] = t[1, 1].real, t[1, 1].imag
+            cr[k, p + 1], ci[k, p + 1] = t[1, 0].real, t[1, 0].imag
+    return (jnp.asarray(ar), jnp.asarray(ai), jnp.asarray(br),
+            jnp.asarray(bi), jnp.asarray(cr), jnp.asarray(ci))
+
+
+def reck_columns(n: int):
+    """Reck-mesh column layout: list of columns of channel indices p.
+
+    Mirrors rust/src/mesh/topology.rs (signal-flow order, greedy column
+    packing); returns a list of lists of p values.
+    """
+    pairs = []
+    for r in reversed(range(1, n)):
+        for c in range(r):
+            pairs.append(c)
+    pairs.reverse()
+    col_of_channel = [0] * n
+    columns = []
+    for p in pairs:
+        col = max(col_of_channel[p], col_of_channel[p + 1])
+        while len(columns) <= col:
+            columns.append([])
+        columns[col].append(p)
+        col_of_channel[p] = col + 1
+        col_of_channel[p + 1] = col + 1
+    return columns
+
+
+def _mesh_abs_dense_kernel(x_ref, mre_ref, mim_ref, out_ref):
+    """Dense variant: out = |x @ (Mre + j*Mim)^T| for real x.
+
+    Serving-path kernel (#Perf L1): the mesh matrix changes only when DSPSA
+    re-biases the device (once per training step, never per request), so the
+    coordinator precomposes M = prod(columns) and the kernel collapses the
+    13-column sweep into two MXU-shaped matmuls + one elementwise
+    magnitude. On CPU-PJRT this cut the b256 forward from ~65 ms to ~2 ms;
+    on TPU it is also the right shape for N << 128 (the sweep underutilizes
+    the systolic array).
+    """
+    x = x_ref[...]
+    zre = jnp.dot(x, mre_ref[...].T)
+    zim = jnp.dot(x, mim_ref[...].T)
+    out_ref[...] = jnp.sqrt(zre * zre + zim * zim)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def mesh_abs_dense(x, m_re, m_im, block_b: int = DEFAULT_BLOCK_B):
+    """|M @ x| with a precomposed complex mesh matrix (re/im planes).
+
+    Args:
+      x: f32[B, N] real input batch.
+      m_re, m_im: f32[N, N] real/imaginary parts of the composed matrix.
+      block_b: batch tile size.
+
+    Returns:
+      f32[B, N] detected output magnitudes.
+    """
+    b, n = x.shape
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // bb,)
+    batch_spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    m_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _mesh_abs_dense_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=grid,
+        in_specs=[batch_spec, m_spec, m_spec],
+        out_specs=batch_spec,
+        interpret=True,
+    )(xp, m_re, m_im)
+    return out[:b] if pad else out

@@ -1,0 +1,72 @@
+"""Pure-jnp/numpy oracles for the Pallas mesh kernel.
+
+Two independent references:
+  * `mesh_abs_ref` -- same column-sweep algorithm in plain jnp complex64
+    (checks the re/im-plane arithmetic and the roll encoding);
+  * `mesh_abs_dense_ref` -- composes the full NxN complex matrix from the
+    columns and applies it as one matmul (checks the *algorithm* against
+    straight linear algebra, mirroring rust's DiscreteMesh::matrix()).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mesh_abs_ref(x, coeffs):
+    """Column sweep in complex arithmetic: |mesh @ x| for f32[B, N] x."""
+    ar, ai, br, bi, cr, ci = (jnp.asarray(p) for p in coeffs)
+    a = ar + 1j * ai
+    b = br + 1j * bi
+    c = cr + 1j * ci
+    z = x.astype(jnp.complex64)
+    for k in range(a.shape[0]):
+        z = a[k] * z + b[k] * jnp.roll(z, -1, axis=1) + c[k] * jnp.roll(z, 1, axis=1)
+    return jnp.abs(z).astype(jnp.float32)
+
+
+def columns_to_matrix(n: int, columns):
+    """Compose the dense NxN complex transfer matrix from (p, t) columns."""
+    m = np.eye(n, dtype=np.complex64)
+    for col in columns:
+        step = np.eye(n, dtype=np.complex64)
+        for p, t in col:
+            t = np.asarray(t, np.complex64)
+            step[p, p] = t[0, 0]
+            step[p, p + 1] = t[0, 1]
+            step[p + 1, p] = t[1, 0]
+            step[p + 1, p + 1] = t[1, 1]
+        m = step @ m
+    return m
+
+
+def mesh_abs_dense_ref(x, n: int, columns):
+    """|M @ x| with M composed densely (independent of the roll encoding)."""
+    m = columns_to_matrix(n, columns)
+    z = np.asarray(x, np.complex64) @ m.T
+    return np.abs(z).astype(np.float32)
+
+
+def random_unitary_2x2(rng: np.random.Generator):
+    """A Haar-ish random U(2) via the device parameterization t(theta, phi)."""
+    theta = rng.uniform(0.0, np.pi)
+    phi = rng.uniform(0.0, 2.0 * np.pi)
+    c = 1j * np.exp(-0.5j * theta)
+    s, co = np.sin(theta / 2.0), np.cos(theta / 2.0)
+    e = np.exp(-1j * phi)
+    return np.array([[e * s, e * co], [co, -s]], np.complex64) * c
+
+
+def random_columns(n: int, rng: np.random.Generator, density: float = 1.0):
+    """Random mesh columns on the Reck layout (optionally sparsified)."""
+    from ..kernels.mesh import reck_columns
+
+    cols = []
+    for ps in reck_columns(n):
+        col = []
+        for p in ps:
+            if rng.uniform() <= density:
+                col.append((p, random_unitary_2x2(rng)))
+        cols.append(col)
+    return cols

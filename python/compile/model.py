@@ -1,0 +1,86 @@
+"""Layer-2 JAX model: the 4-layer MNIST RFNN forward pass (Fig. 14).
+
+    x[B, 784] -> Dense(784, N) -> leaky-ReLU
+              -> N x N analog mesh + |.| detection   (L1 Pallas kernel)
+              -> Dense(N, 10) -> softmax
+
+The mesh coefficients are *runtime inputs* (not baked weights): the rust
+coordinator recomputes the six (C, N) planes whenever DSPSA changes the
+device states and feeds them with each request batch, exactly as the
+physical device would be re-biased. Python never runs on the request path;
+this module exists to be lowered once by `aot.py`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mesh import mesh_abs, mesh_abs_dense
+
+LEAKY_ALPHA = 0.01
+
+
+def leaky_relu(x, alpha: float = LEAKY_ALPHA):
+    return jnp.where(x >= 0.0, x, alpha * x)
+
+
+def rfnn_forward(x, w1, b1, coeffs, w2, b2):
+    """Full forward pass -> class probabilities.
+
+    Args:
+      x:  f32[B, 784] input images.
+      w1: f32[N, 784], b1: f32[N]   -- digital Dense-1.
+      coeffs: six f32[C, N] planes  -- analog mesh (re/im A/B/C).
+      w2: f32[10, N], b2: f32[10]   -- digital Dense-2.
+    Returns:
+      f32[B, 10] softmax probabilities.
+    """
+    a1 = leaky_relu(x @ w1.T + b1)
+    h2 = mesh_abs(a1, coeffs)
+    logits = h2 @ w2.T + b2
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def rfnn_logits(x, w1, b1, coeffs, w2, b2):
+    """Forward pass up to logits (for losses computed elsewhere)."""
+    a1 = leaky_relu(x @ w1.T + b1)
+    h2 = mesh_abs(a1, coeffs)
+    return h2 @ w2.T + b2
+
+
+def mesh_abs_only(x, coeffs):
+    """Just the analog stage: |mesh @ x| (exported for the serving path
+    that drives the analog block directly)."""
+    return mesh_abs(x, coeffs)
+
+
+def rfnn_forward_dense(x, w1, b1, m_re, m_im, w2, b2):
+    """Serving-path forward: the mesh stage uses the precomposed matrix
+    (see kernels.mesh.mesh_abs_dense — the #Perf L1 optimization). The
+    coordinator recomputes (m_re, m_im) from the device states whenever
+    DSPSA re-biases the mesh."""
+    a1 = leaky_relu(x @ w1.T + b1)
+    h2 = mesh_abs_dense(a1, m_re, m_im)
+    logits = h2 @ w2.T + b2
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def mesh_abs_dense_only(x, m_re, m_im):
+    """Just the analog stage, dense variant."""
+    return mesh_abs_dense(x, m_re, m_im)
+
+
+def reference_forward_np(x, w1, b1, n, columns, w2, b2):
+    """Numpy reference of the full forward (dense mesh matrix), for tests."""
+    import numpy as np
+
+    from .kernels.ref import columns_to_matrix
+
+    a1 = np.asarray(x) @ np.asarray(w1).T + np.asarray(b1)
+    a1 = np.where(a1 >= 0.0, a1, LEAKY_ALPHA * a1)
+    m = columns_to_matrix(n, columns)
+    h2 = np.abs(a1.astype(np.complex64) @ m.T)
+    logits = h2 @ np.asarray(w2).T + np.asarray(b2)
+    e = np.exp(logits - logits.max(axis=-1, keepdims=True))
+    return e / e.sum(axis=-1, keepdims=True)

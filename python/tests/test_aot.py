@@ -1,0 +1,41 @@
+"""AOT pipeline: lowering produces loadable HLO text with stable arity."""
+
+import json
+import os
+import tempfile
+
+from compile import aot
+
+
+def test_lower_all_writes_artifacts_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = aot.lower_all(d)
+        # One fwd + one mesh artifact per batch size, plus the alias.
+        files = set(os.listdir(d))
+        for b in aot.BATCH_SIZES:
+            assert f"rfnn_mnist_fwd_b{b}.hlo.txt" in files
+            assert f"mesh_abs_b{b}.hlo.txt" in files
+        assert "rfnn_mnist_fwd.hlo.txt" in files
+        for key, art in manifest["artifacts"].items():
+            path = os.path.join(d, art["file"])
+            text = open(path).read()
+            assert text.startswith("HloModule"), f"{key} is not HLO text"
+            # The interchange gotcha: text, never serialized protos.
+            assert "ENTRY" in text
+            assert len(art["args"]) == len(art["arg_shapes"])
+
+
+def test_manifest_round_trips_as_json():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = aot.lower_all(d)
+        s = json.dumps(manifest)
+        assert json.loads(s) == manifest
+
+
+def test_hlo_contains_no_custom_calls():
+    """interpret=True must lower the Pallas kernel to plain HLO ops —
+    a Mosaic custom-call would be unexecutable on the rust CPU client."""
+    with tempfile.TemporaryDirectory() as d:
+        aot.lower_all(d)
+        text = open(os.path.join(d, "rfnn_mnist_fwd_b32.hlo.txt")).read()
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()

@@ -1,0 +1,159 @@
+"""L1 correctness: Pallas mesh kernel vs two independent references.
+
+Hypothesis sweeps shapes and mesh contents; assert_allclose against both
+the complex column-sweep reference and the dense-matrix reference.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.mesh import (
+    coeff_planes_from_columns,
+    mesh_abs,
+    reck_columns,
+)
+from compile.kernels.ref import (
+    columns_to_matrix,
+    mesh_abs_dense_ref,
+    mesh_abs_ref,
+    random_columns,
+)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def make_case(n, batch, seed, density=1.0):
+    rng = np.random.default_rng(seed)
+    cols = random_columns(n, rng, density)
+    planes = coeff_planes_from_columns(n, cols)
+    x = rng.normal(size=(batch, n)).astype(np.float32)
+    return x, planes, cols
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8]),
+    batch=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_complex_reference(n, batch, seed):
+    x, planes, _ = make_case(n, batch, seed)
+    got = np.asarray(mesh_abs(x, planes))
+    want = np.asarray(mesh_abs_ref(x, planes))
+    assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    density=st.sampled_from([0.4, 1.0]),
+)
+def test_kernel_matches_dense_matrix(n, seed, density):
+    x, planes, cols = make_case(n, 17, seed, density)
+    got = np.asarray(mesh_abs(x, planes))
+    want = mesh_abs_dense_ref(x, n, cols)
+    assert_allclose(got, want, **TOL)
+
+
+def test_unitary_mesh_conserves_power():
+    x, planes, _ = make_case(8, 64, 123)
+    y = np.asarray(mesh_abs(x, planes))
+    assert_allclose(
+        (y**2).sum(axis=1), (x**2).sum(axis=1), rtol=1e-4
+    )  # all-unitary cells -> lossless
+
+
+def test_identity_mesh_is_abs():
+    n = 8
+    cols = [[] for _ in reck_columns(n)]  # no cells: pure pass-through
+    planes = coeff_planes_from_columns(n, cols)
+    x = np.random.default_rng(5).normal(size=(9, n)).astype(np.float32)
+    assert_allclose(np.asarray(mesh_abs(x, planes)), np.abs(x), **TOL)
+
+
+@pytest.mark.parametrize("batch", [1, 127, 128, 129, 300])
+def test_batch_padding_edges(batch):
+    """Batch sizes around the VMEM tile boundary must all be exact."""
+    x, planes, _ = make_case(8, batch, 77)
+    got = np.asarray(mesh_abs(x, planes))
+    want = np.asarray(mesh_abs_ref(x, planes))
+    assert got.shape == (batch, 8)
+    assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 64, 512])
+def test_block_size_invariance(block_b):
+    """The tiling is a performance knob, never a numerics knob."""
+    x, planes, _ = make_case(8, 65, 99)
+    base = np.asarray(mesh_abs(x, planes))
+    tiled = np.asarray(mesh_abs(x, planes, block_b=block_b))
+    assert_allclose(tiled, base, rtol=1e-6, atol=1e-6)
+
+
+def test_reck_columns_match_rust_topology():
+    # N=8: 28 cells over 13 columns (2N-3); N=4: 6 cells over 5 columns.
+    cols8 = reck_columns(8)
+    assert sum(len(c) for c in cols8) == 28
+    assert len(cols8) == 13
+    cols4 = reck_columns(4)
+    assert sum(len(c) for c in cols4) == 6
+    assert len(cols4) == 5
+    # No channel conflicts within a column.
+    for col in cols8:
+        used = set()
+        for p in col:
+            assert p not in used and p + 1 not in used
+            used.update((p, p + 1))
+
+
+def test_composed_matrix_is_unitary():
+    rng = np.random.default_rng(11)
+    cols = random_columns(8, rng)
+    m = columns_to_matrix(8, cols)
+    assert_allclose(m @ m.conj().T, np.eye(8), atol=1e-5)
+
+
+# ---------------------------------------------------------------- dense --
+
+from compile.kernels.mesh import mesh_abs_dense  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8, 16]),
+    batch=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_kernel_matches_sweep(n, batch, seed):
+    """The serving-path dense kernel equals the column-sweep kernel."""
+    x, planes, cols = make_case(n, batch, seed)
+    m = columns_to_matrix(n, cols)
+    got = np.asarray(
+        mesh_abs_dense(x, m.real.astype(np.float32), m.imag.astype(np.float32))
+    )
+    want = np.asarray(mesh_abs(x, planes))
+    assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_dense_kernel_identity():
+    n = 8
+    x = np.random.default_rng(4).normal(size=(12, n)).astype(np.float32)
+    eye = np.eye(n, dtype=np.float32)
+    zero = np.zeros((n, n), np.float32)
+    got = np.asarray(mesh_abs_dense(x, eye, zero))
+    assert_allclose(got, np.abs(x), **TOL)
+
+
+@pytest.mark.parametrize("batch", [1, 127, 129, 257])
+def test_dense_kernel_padding_edges(batch):
+    x, planes, cols = make_case(8, batch, 31)
+    m = columns_to_matrix(8, cols)
+    got = np.asarray(
+        mesh_abs_dense(x, m.real.astype(np.float32), m.imag.astype(np.float32))
+    )
+    assert got.shape == (batch, 8)
+    want = mesh_abs_dense_ref(x, 8, cols)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,61 @@
+"""L2 correctness: the jax RFNN forward vs the numpy reference."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.mesh import coeff_planes_from_columns
+from compile.kernels.ref import random_columns
+from compile.model import reference_forward_np, rfnn_forward, rfnn_logits
+
+
+def make_params(n, seed):
+    rng = np.random.default_rng(seed)
+    w1 = (rng.normal(size=(n, 784)) * 0.05).astype(np.float32)
+    b1 = (rng.normal(size=(n,)) * 0.01).astype(np.float32)
+    w2 = (rng.normal(size=(10, n)) * 0.3).astype(np.float32)
+    b2 = np.zeros((10,), np.float32)
+    cols = random_columns(n, rng)
+    planes = coeff_planes_from_columns(n, cols)
+    return w1, b1, planes, cols, w2, b2
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_forward_matches_numpy_reference(batch, seed):
+    n = 8
+    w1, b1, planes, cols, w2, b2 = make_params(n, seed)
+    x = np.random.default_rng(seed ^ 0xFF).normal(size=(batch, 784)).astype(np.float32)
+    got = np.asarray(rfnn_forward(x, w1, b1, planes, w2, b2))
+    want = reference_forward_np(x, w1, b1, n, cols, w2, b2)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_probabilities_normalized():
+    n = 8
+    w1, b1, planes, _, w2, b2 = make_params(n, 3)
+    x = np.random.default_rng(4).normal(size=(16, 784)).astype(np.float32)
+    p = np.asarray(rfnn_forward(x, w1, b1, planes, w2, b2))
+    assert p.shape == (16, 10)
+    assert (p >= 0).all()
+    assert_allclose(p.sum(axis=1), np.ones(16), rtol=1e-5)
+
+
+def test_logits_consistent_with_probs():
+    n = 8
+    w1, b1, planes, _, w2, b2 = make_params(n, 5)
+    x = np.random.default_rng(6).normal(size=(4, 784)).astype(np.float32)
+    logits = np.asarray(rfnn_logits(x, w1, b1, planes, w2, b2))
+    probs = np.asarray(rfnn_forward(x, w1, b1, planes, w2, b2))
+    e = np.exp(logits - logits.max(axis=1, keepdims=True))
+    assert_allclose(probs, e / e.sum(axis=1, keepdims=True), rtol=1e-5, atol=1e-6)
+
+
+def test_mesh_stage_is_permutation_invariant_to_batch_order():
+    n = 8
+    w1, b1, planes, _, w2, b2 = make_params(n, 7)
+    x = np.random.default_rng(8).normal(size=(6, 784)).astype(np.float32)
+    p = np.asarray(rfnn_forward(x, w1, b1, planes, w2, b2))
+    perm = [3, 1, 5, 0, 2, 4]
+    p2 = np.asarray(rfnn_forward(x[perm], w1, b1, planes, w2, b2))
+    assert_allclose(p2, p[perm], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,21 @@
+//! `cargo bench` entrypoint (harness = false): regenerate every paper
+//! table/figure through the in-repo harness, then run the §Perf
+//! micro-benchmarks. criterion is unavailable offline — see
+//! rfnn::bench::harness for the timing methodology.
+
+fn main() {
+    let quick = std::env::var("RFNN_BENCH_FULL").is_err();
+    if quick {
+        eprintln!("(quick mode; set RFNN_BENCH_FULL=1 for full workloads)");
+    }
+    for name in rfnn::bench::EXPERIMENTS {
+        println!("=== {name} ===");
+        match rfnn::bench::run(name, quick) {
+            Ok(report) => println!("{report}"),
+            Err(e) => {
+                eprintln!("FAILED {name}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! A1 — phase resolution: continuous vs Table-I discrete vs coarser grids
+//!      (the paper's own explanation for the analog accuracy gap).
+//! A2 — fabrication spread: virtual-VNA σ sweep → MNIST accuracy.
+//! A3 — DSPSA on/off: does hardware-in-the-loop state training help over a
+//!      frozen random mesh?
+//! A4 — power compensation: the fixed post-mesh gain on/off.
+//! A5 — failure injection: cells stuck in one state (dead switch).
+//! A6 — batching policy: max_wait sweep → throughput/latency trade.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{Backend, ModelBundle, Server, ServerConfig};
+use crate::dataset::mnist::load_or_synthesize;
+use crate::device::vna::FabSpread;
+use crate::device::State;
+use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
+use crate::nn::sgd::SgdConfig;
+use crate::util::table::Table;
+use std::time::Duration;
+
+fn cfg(epochs: usize) -> MnistTrainConfig {
+    MnistTrainConfig {
+        epochs,
+        sgd: SgdConfig { lr: 0.05, batch_size: 10, momentum: 0.0 },
+        ..Default::default()
+    }
+}
+
+/// A1 + A3 + A4: train the analog net under variations, report test acc.
+pub fn mnist_ablations(quick: bool) -> String {
+    let (n_train, n_test, epochs) = if quick { (500, 300, 12) } else { (2000, 1000, 25) };
+    let (tr, te) = load_or_synthesize(n_train, n_test, 99);
+    let mut t = Table::new(&["variant", "test acc"]);
+
+    // Baseline: measured mesh, DSPSA on, gain on.
+    let mut base = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 1 }, 1);
+    base.train(&tr, &cfg(epochs));
+    t.row(&["measured + DSPSA + gain (baseline)".into(), pct(base.test_accuracy(&te))]);
+
+    // A1: ideal (lossless) discrete phases.
+    let mut ideal = MnistRfnn::analog(8, MeshBackend::Ideal, 1);
+    ideal.train(&tr, &cfg(epochs));
+    t.row(&["ideal discrete phases".into(), pct(ideal.test_accuracy(&te))]);
+
+    // A3: DSPSA off (mesh frozen at initial states).
+    let mut frozen = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 1 }, 1);
+    let mut c = cfg(epochs);
+    c.dspsa_every = usize::MAX; // never propose
+    frozen.train(&tr, &c);
+    t.row(&["DSPSA off (frozen mesh)".into(), pct(frozen.test_accuracy(&te))]);
+
+    // A4: power-compensation gain off.
+    let mut nogain = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 1 }, 1);
+    nogain.hidden_gain = 1.0;
+    nogain.train(&tr, &cfg(epochs));
+    t.row(&["gain compensation off".into(), pct(nogain.test_accuracy(&te))]);
+
+    // Digital reference.
+    let mut dig = MnistRfnn::digital(8, 1);
+    dig.train(&tr, &cfg(epochs));
+    t.row(&["digital twin".into(), pct(dig.test_accuracy(&te))]);
+
+    format!(
+        "Ablation A1/A3/A4 — MNIST test accuracy ({n_train} train, {epochs} epochs)\n{}",
+        t.render()
+    )
+}
+
+/// A2: fabrication-spread sweep — how much imperfection the network absorbs.
+pub fn spread_sweep(quick: bool) -> String {
+    let (n_train, n_test, epochs) = if quick { (400, 250, 10) } else { (1500, 800, 20) };
+    let (tr, te) = load_or_synthesize(n_train, n_test, 7);
+    let mut t = Table::new(&["len_err σ", "mesh loss (dB)", "test acc"]);
+    for &mult in &[0.0, 1.0, 3.0, 6.0] {
+        let d = FabSpread::default();
+        let spread = FabSpread {
+            len_err: d.len_err * mult,
+            hybrid_err: d.hybrid_err * mult,
+            arm_err: d.arm_err * mult,
+            noise: d.noise,
+        };
+        // A custom mesh from devices with this spread.
+        let mut mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+        // Replace blocks by measured ones at the given spread via states:
+        // simplest faithful route — build a Measured mesh whose devices use
+        // the scaled spread through the vna factory.
+        let mesh_meas = build_spread_mesh(8, spread, 1000);
+        let loss = mesh_meas.mean_loss_db();
+        let mut net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+        // Swap in the spread mesh (same channel count).
+        net.hidden = crate::nn::rfnn_mnist::Hidden::Analog(mesh_meas);
+        net.hidden_gain = 10f64.powf(loss / 20.0);
+        net.train(&tr, &cfg(epochs));
+        t.row(&[format!("{mult}×"), format!("{loss:.1}"), pct(net.test_accuracy(&te))]);
+        mesh.set_state(0, State { theta: 0, phi: 0 }); // keep borrowckr quiet about unused
+    }
+    format!(
+        "Ablation A2 — fabrication-spread sweep ({n_train} train, {epochs} epochs)\n{}\
+         expected: graceful degradation (training absorbs device spread)\n",
+        t.render()
+    )
+}
+
+fn build_spread_mesh(n: usize, spread: FabSpread, seed: u64) -> DiscreteMesh {
+    use crate::device::vna::MeasuredUnitCell;
+    // DiscreteMesh only exposes seed-based measured construction; emulate a
+    // custom-spread mesh by fabricating devices and writing their blocks in
+    // via the public states/blocks path: rebuild with Measured then patch.
+    let mut mesh = DiscreteMesh::new(n, MeshBackend::Ideal);
+    let cells = mesh.cells();
+    let devices: Vec<MeasuredUnitCell> =
+        (0..cells).map(|i| MeasuredUnitCell::fabricate_with(seed + i as u64, spread)).collect();
+    mesh.replace_blocks(|cell, st| devices[cell].t_block(st));
+    mesh
+}
+
+/// A5: failure injection — k cells stuck at L1L1 (dead switch bias line).
+pub fn stuck_cells(quick: bool) -> String {
+    let (n_train, n_test, epochs) = if quick { (400, 250, 10) } else { (1500, 800, 20) };
+    let (tr, te) = load_or_synthesize(n_train, n_test, 17);
+    let mut t = Table::new(&["stuck cells", "test acc"]);
+    for &k in &[0usize, 4, 12, 28] {
+        let mut net = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 5 }, 5);
+        let mut c = cfg(epochs);
+        c.seed = 5;
+        // Mark the first k cells stuck: DSPSA still proposes, but the mesh
+        // ignores state changes for those cells.
+        if let crate::nn::rfnn_mnist::Hidden::Analog(mesh) = &mut net.hidden {
+            mesh.set_stuck(k);
+        }
+        net.train(&tr, &c);
+        t.row(&[format!("{k}/28"), pct(net.test_accuracy(&te))]);
+    }
+    format!(
+        "Ablation A5 — dead-switch injection (cells stuck at L1L1)\n{}\
+         expected: digital layers route around moderate failures; full-stuck still trains\n",
+        t.render()
+    )
+}
+
+/// A6: batching policy sweep on the native backend.
+pub fn batching_sweep(quick: bool) -> String {
+    let waits_us = if quick { vec![100u64, 2000] } else { vec![50u64, 200, 1000, 2000, 5000] };
+    let requests = if quick { 2000 } else { 8000 };
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 7);
+    let bundle = ModelBundle::from_trained(&net).unwrap();
+    let (ds, _) = load_or_synthesize(128, 1, 3);
+    let images: Vec<Vec<f32>> =
+        ds.images.iter().map(|img| img.iter().map(|&v| v as f32).collect()).collect();
+    let mut t = Table::new(&["max_wait (µs)", "req/s", "mean batch", "p99 latency (µs)"]);
+    for &wait in &waits_us {
+        let srv = Server::start(ServerConfig {
+            batch: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(wait) },
+            bundle: bundle.clone(),
+            backend: Backend::Native,
+        });
+        let t0 = std::time::Instant::now();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        for k in 0..requests {
+            srv.client.submit(images[k % images.len()].clone(), reply_tx.clone()).unwrap();
+        }
+        drop(reply_tx);
+        let mut served = 0;
+        while reply_rx.recv().is_ok() {
+            served += 1;
+        }
+        let rps = served as f64 / t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("{wait}"),
+            format!("{rps:.0}"),
+            format!("{:.1}", srv.metrics.mean_batch_size()),
+            format!("{}", srv.metrics.latency.percentile_us(0.99)),
+        ]);
+        srv.shutdown();
+    }
+    format!("Ablation A6 — batching policy sweep (native backend, open loop)\n{}", t.render())
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+/// Run all ablations.
+pub fn all(quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&mnist_ablations(quick));
+    out.push('\n');
+    out.push_str(&spread_sweep(quick));
+    out.push('\n');
+    out.push_str(&stuck_cells(quick));
+    out.push('\n');
+    out.push_str(&batching_sweep(quick));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn batching_sweep_runs() {
+        let r = super::batching_sweep(true);
+        assert!(r.contains("req/s"), "{r}");
+    }
+}

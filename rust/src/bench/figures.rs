@@ -1,0 +1,419 @@
+//! Regenerators for Table I and Figs. 3, 5, 6, 8, 9, 10, 12.
+
+use crate::dataset::synth2d::{generate, wedge, Scenario};
+use crate::device::circuit::UnitCellCircuit;
+use crate::device::testbench::TestBench;
+use crate::device::vna::MeasuredUnitCell;
+use crate::device::{ideal, State};
+use crate::math::rng::Rng;
+use crate::math::{deg, mag_to_db};
+use crate::microwave::microstrip::Substrate;
+use crate::microwave::phase_shifter::{SwitchModel, SwitchedLinePhaseShifter, N_STATES, TABLE_I_DEG};
+use crate::microwave::{F0, Z0};
+use crate::nn::rfnn2x2::{dividing_lines, ideal_device, train, train_post, TrainConfig};
+use crate::util::table::Table;
+
+/// Standard virtual-VNA device used across experiments (one "prototype").
+pub fn prototype_device() -> MeasuredUnitCell {
+    MeasuredUnitCell::fabricate(0x2023)
+}
+
+/// Render a ŷ grid as a compact ASCII map (rows top-down = V1 descending,
+/// like the paper's plots).
+pub fn render_grid(grid: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    for row in grid.iter().rev() {
+        for &y in row {
+            out.push(if y >= 0.9 {
+                '#'
+            } else if y >= 0.5 {
+                '+'
+            } else if y >= 0.1 {
+                '.'
+            } else {
+                ' '
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fraction of a grid classified '1'.
+fn ones_fraction(grid: &[Vec<f64>]) -> f64 {
+    let total: usize = grid.iter().map(Vec::len).sum();
+    let ones: usize = grid.iter().flatten().filter(|&&y| y >= 0.5).count();
+    ones as f64 / total as f64
+}
+
+/// Mean angular orientation (from the V4 axis) of the '1' region.
+fn ones_orientation(grid: &[Vec<f64>]) -> f64 {
+    let n = grid.len();
+    let (mut sx, mut sy, mut cnt) = (0.0, 0.0, 0.0);
+    for (i, row) in grid.iter().enumerate() {
+        for (j, &y) in row.iter().enumerate() {
+            if y >= 0.5 && (i > 0 || j > 0) {
+                let ang = (i as f64 / (n - 1) as f64).atan2(j as f64 / (n - 1) as f64);
+                sx += ang.cos();
+                sy += ang.sin();
+                cnt += 1.0;
+            }
+        }
+    }
+    if cnt == 0.0 {
+        f64::NAN
+    } else {
+        (sy / cnt).atan2(sx / cnt)
+    }
+}
+
+// ------------------------------------------------------------- Table I --
+
+/// Table I: the six switched-line phase differences at 2 GHz.
+pub fn table1() -> String {
+    let ps = SwitchedLinePhaseShifter::design(Substrate::ro4360g2(), Z0, F0, SwitchModel::jsw6_33dr());
+    let mut t = Table::new(&["path", "paper (deg)", "designed (deg)", "IL at f0 (dB)", "length (mm)"]);
+    for n in 0..N_STATES {
+        t.row(&[
+            format!("L{}", n + 1),
+            format!("{}", TABLE_I_DEG[n]),
+            format!("{:.2}", ps.excess_phase(F0, n).to_degrees()),
+            format!("{:.2}", ps.insertion_loss_db(F0, n)),
+            format!("{:.1}", ps.path_length(n) * 1e3),
+        ]);
+    }
+    format!("Table I — switched-line phase shifter states\n{}", t.render())
+}
+
+// -------------------------------------------------------------- Fig. 3 --
+
+/// Fig. 3(c)(d): voltage and power transfer vs θ at P1 = 0.5 mW,
+/// P4 = 1.5 mW (in phase).
+pub fn fig3() -> String {
+    let (p1, p4) = (0.5e-3, 1.5e-3);
+    let mut t = Table::new(&["θ (deg)", "|V21| (V)", "|V31| (V)", "|V24| (V)", "|V34| (V)", "P2 (mW)", "P3 (mW)"]);
+    let mut max_p2: (f64, f64) = (0.0, 0.0);
+    for k in 0..=24 {
+        let theta = k as f64 * 2.0 * std::f64::consts::PI / 24.0;
+        let (v21, v31, v24, v34) = ideal::voltage_transfer(theta, 0.0, p1, p4);
+        let (p2, p3) = ideal::power_transfer(theta, 0.0, p1, p4);
+        if p2 > max_p2.1 {
+            max_p2 = (theta, p2);
+        }
+        t.row(&[
+            format!("{:.0}", theta.to_degrees()),
+            format!("{:.4}", v21.abs()),
+            format!("{:.4}", v31.abs()),
+            format!("{:.4}", v24.abs()),
+            format!("{:.4}", v34.abs()),
+            format!("{:.4}", p2 * 1e3),
+            format!("{:.4}", p3 * 1e3),
+        ]);
+    }
+    format!(
+        "Fig. 3(c,d) — transfer vs θ (P1=0.5 mW, P4=1.5 mW, in phase)\n{}\
+         peak P2 = {:.3} mW at θ = {:.0}° (theory: P1+P4 = 2 mW; P3 there ≈ 0)\n",
+        t.render(),
+        max_p2.1 * 1e3,
+        max_p2.0.to_degrees()
+    )
+}
+
+// -------------------------------------------------------------- Fig. 5 --
+
+/// Fig. 5: frequency response of the circuit model. Return loss at states
+/// L1L1 / L6L6 and insertion loss for states LnL1.
+pub fn fig5(quick: bool) -> String {
+    let cell = UnitCellCircuit::prototype();
+    let points = if quick { 11 } else { 81 };
+    let freqs: Vec<f64> =
+        (0..points).map(|k| 1.0e9 + 2.0e9 * k as f64 / (points - 1) as f64).collect();
+    let mut out = String::new();
+
+    // (a)/(b): return loss of all four ports at L1L1 and L6L6.
+    for st in [State { theta: 0, phi: 0 }, State { theta: 5, phi: 5 }] {
+        let mut t = Table::new(&["f (GHz)", "S11 (dB)", "S22 (dB)", "S33 (dB)", "S44 (dB)"]);
+        for &f in freqs.iter().step_by(if quick { 1 } else { 8 }) {
+            let s = cell.sparams(f, st);
+            t.row(&[
+                format!("{:.2}", f / 1e9),
+                format!("{:.1}", mag_to_db(s.s(0, 0).abs())),
+                format!("{:.1}", mag_to_db(s.s(1, 1).abs())),
+                format!("{:.1}", mag_to_db(s.s(2, 2).abs())),
+                format!("{:.1}", mag_to_db(s.s(3, 3).abs())),
+            ]);
+        }
+        out.push_str(&format!("Fig. 5 return loss, state {}\n{}", st.label(), t.render()));
+        // Match bandwidth at f0.
+        let s0 = cell.sparams(F0, st);
+        let worst =
+            (0..4).map(|p| mag_to_db(s0.s(p, p).abs())).fold(f64::NEG_INFINITY, f64::max);
+        out.push_str(&format!("worst port match at f0: {worst:.1} dB\n\n"));
+    }
+
+    // (c)-(f): insertion loss LnL1 across frequency — report f0 row.
+    let mut t = Table::new(&["state", "|S21| dB", "|S31| dB", "|S24| dB", "|S34| dB"]);
+    for n in 0..N_STATES {
+        let s = cell.sparams(F0, State { theta: n, phi: 0 });
+        t.row(&[
+            format!("L{}L1", n + 1),
+            format!("{:.1}", mag_to_db(s.s(1, 0).abs())),
+            format!("{:.1}", mag_to_db(s.s(2, 0).abs())),
+            format!("{:.1}", mag_to_db(s.s(1, 3).abs())),
+            format!("{:.1}", mag_to_db(s.s(2, 3).abs())),
+        ]);
+    }
+    out.push_str(&format!("Fig. 5(c–f) insertion loss at f0 = 2 GHz\n{}", t.render()));
+    out.push_str(
+        "expected shape: S21/S34 increase L1→L6 while S24/S31 decrease (power steers cross→bar)\n",
+    );
+    out
+}
+
+// -------------------------------------------------------------- Fig. 6 --
+
+/// Fig. 6: |S| at 2 GHz vs θ state — theory vs circuit simulation vs
+/// virtual-VNA measurement.
+pub fn fig6() -> String {
+    let cell = UnitCellCircuit::prototype();
+    let meas = prototype_device();
+    let mut t = Table::new(&[
+        "state", "src", "|S21|", "|S31|", "|S24|", "|S34|",
+    ]);
+    for n in 0..N_STATES {
+        let st = State { theta: n, phi: 0 };
+        let (i21, i31, i24, i34) = ideal::s_params(deg(TABLE_I_DEG[n]), deg(TABLE_I_DEG[0]));
+        t.row(&[
+            format!("L{}L1", n + 1),
+            "theory".into(),
+            format!("{:.3}", i21.abs()),
+            format!("{:.3}", i31.abs()),
+            format!("{:.3}", i24.abs()),
+            format!("{:.3}", i34.abs()),
+        ]);
+        let s = cell.sparams(F0, st);
+        t.row(&[
+            String::new(),
+            "sim".into(),
+            format!("{:.3}", s.s(1, 0).abs()),
+            format!("{:.3}", s.s(2, 0).abs()),
+            format!("{:.3}", s.s(1, 3).abs()),
+            format!("{:.3}", s.s(2, 3).abs()),
+        ]);
+        let m = meas.measure(F0, st);
+        t.row(&[
+            String::new(),
+            "meas".into(),
+            format!("{:.3}", m.s(1, 0).abs()),
+            format!("{:.3}", m.s(2, 0).abs()),
+            format!("{:.3}", m.s(1, 3).abs()),
+            format!("{:.3}", m.s(2, 3).abs()),
+        ]);
+    }
+    format!(
+        "Fig. 6 — |S| at 2 GHz vs θ state (φ = L1)\n{}\
+         expected shape: sim/meas track theory's sin/cos(θ/2) with maxima slightly below theory\n",
+        t.render()
+    )
+}
+
+// -------------------------------------------------------------- Fig. 8 --
+
+/// Fig. 8: trained ŷ distribution over the input space and the analytic
+/// dividing lines (eqs. 25–26).
+pub fn fig8() -> String {
+    let mut rng = Rng::new(88);
+    // Wedge aligned with L4 (θ = 104°), ψ = 25°, inputs 0–1 V.
+    let theta = deg(TABLE_I_DEG[3]);
+    let ds = wedge(theta, deg(25.0), 600, 1.0, &mut rng);
+    let dev = ideal_device();
+    let cfg = TrainConfig { gamma: 1.0, ..Default::default() };
+    let (model, _) = train_post(&dev, &ds, State { theta: 3, phi: 5 }, &cfg);
+    let acc = model.accuracy(&dev, &ds);
+    let grid = model.yhat_grid(&dev, 1.0, 41);
+    // Dividing lines in *normalized-h* units: rescale w by h_scale to get
+    // voltage-domain coefficients.
+    let post_v = crate::nn::rfnn2x2::PostParams {
+        w1: model.post.w1 * model.h_scale,
+        w2: model.post.w2 * model.h_scale,
+        b: model.post.b,
+    };
+    let (sl, vl, ss, vs, psi) = dividing_lines(theta, &post_v);
+    format!(
+        "Fig. 8 — ŷ over the input space (trained wedge classifier, θ = 104°)\n\
+         train accuracy = {acc:.3}; '1' fraction of grid = {:.3}\n\
+         dividing lines: V1 = {:.3}·V4 + {:.4}  and  V1 = {:.3}·V4 + {:.4}; ψ = {:.1}°\n{}",
+        ones_fraction(&grid),
+        sl,
+        vl,
+        ss,
+        vs,
+        psi.to_degrees(),
+        render_grid(&grid)
+    )
+}
+
+// -------------------------------------------------------------- Fig. 9 --
+
+/// Fig. 9: six classifiers from *measured* S-parameters, states LnL6.
+pub fn fig9(quick: bool) -> String {
+    let meas = prototype_device();
+    let bench = TestBench::new(move |st| meas.t_block(st), 0);
+    let dev = |st: State, v1: f64, v4: f64| bench.measure_voltages(st, v1, v4);
+    let mut out = String::from("Fig. 9 — classifiers from measured S-params, states LnL6\n");
+    let grid_n = if quick { 21 } else { 41 };
+    let mut orientations = Vec::new();
+    for n in 0..N_STATES {
+        let theta = deg(TABLE_I_DEG[n]);
+        let mut rng = Rng::new(900 + n as u64);
+        let ds = wedge(theta, deg(22.0), if quick { 200 } else { 500 }, 1.0, &mut rng);
+        let cfg = TrainConfig { gamma: 1.0, phi_state: 5, ..Default::default() };
+        let (model, _) = train_post(&dev, &ds, State { theta: n, phi: 5 }, &cfg);
+        let acc = model.accuracy(&dev, &ds);
+        let grid = model.yhat_grid(&dev, 1.0, grid_n);
+        let orient = ones_orientation(&grid).to_degrees();
+        orientations.push(orient);
+        out.push_str(&format!(
+            "state L{}L6: acc = {acc:.3}, '1' orientation ≈ {orient:.0}° (wedge center {:.0}°)\n",
+            n + 1,
+            theta.to_degrees() / 2.0
+        ));
+        if n == 0 || n == 5 {
+            out.push_str(&render_grid(&grid));
+        }
+    }
+    // Orientation must rotate monotonically with θ (the paper's claim).
+    let monotone = orientations.windows(2).filter(|w| w[1] > w[0] - 3.0).count();
+    out.push_str(&format!(
+        "orientation increases with θ in {monotone}/5 steps (paper: wedge rotates L1→L6)\n"
+    ));
+    out
+}
+
+// ------------------------------------------------------------- Fig. 10 --
+
+/// Fig. 10: classifiers evaluated through the *power measurement* path
+/// (11×11 grid, detector noise) — must match Fig. 9's patterns.
+pub fn fig10(quick: bool) -> String {
+    let meas9 = prototype_device();
+    let bench9 = TestBench::new(move |st| meas9.t_block(st), 0);
+    let meas10 = prototype_device();
+    let bench10 = TestBench::new(move |st| meas10.t_block(st), 42); // with detector noise
+    let mut out = String::from("Fig. 10 — classifiers from measured output power (11×11 grid)\n");
+    let states = if quick { vec![0usize, 5] } else { (0..N_STATES).collect() };
+    for n in states {
+        let theta = deg(TABLE_I_DEG[n]);
+        let mut rng = Rng::new(1000 + n as u64);
+        let ds = wedge(theta, deg(22.0), if quick { 150 } else { 400 }, 1.0, &mut rng);
+        let cfg = TrainConfig { gamma: 1.0, phi_state: 5, ..Default::default() };
+        let devn = |st: State, v1: f64, v4: f64| bench10.measure_voltages(st, v1, v4);
+        let (model, _) = train_post(&devn, &ds, State { theta: n, phi: 5 }, &cfg);
+        let g10 = model.yhat_grid(&devn, 1.0, 11);
+        let dev9 = |st: State, v1: f64, v4: f64| bench9.measure_voltages(st, v1, v4);
+        let g9 = model.yhat_grid(&dev9, 1.0, 11);
+        // Agreement between noiseless-S-param grid and noisy power grid.
+        let mut agree = 0usize;
+        for (r9, r10) in g9.iter().zip(&g10) {
+            for (a, b) in r9.iter().zip(r10) {
+                if (a >= &0.5) == (b >= &0.5) {
+                    agree += 1;
+                }
+            }
+        }
+        out.push_str(&format!(
+            "state L{}L6: decision agreement with Fig. 9 grid = {}/121\n",
+            n + 1,
+            agree
+        ));
+        out.push_str(&render_grid(&g10));
+    }
+    out
+}
+
+// ------------------------------------------------------------- Fig. 12 --
+
+/// Fig. 12: the four classification cases with paper-reported accuracies.
+pub fn fig12(quick: bool) -> String {
+    let meas = prototype_device();
+    let bench = TestBench::new(move |st| meas.t_block(st), 7);
+    let dev = |st: State, v1: f64, v4: f64| bench.measure_voltages(st, v1, v4);
+    let mut t = Table::new(&["case", "paper acc", "ours (test)", "picked state", "n"]);
+    for sc in Scenario::ALL {
+        let mut rng = Rng::new(1200 + sc as u64);
+        let n = if quick { 300 } else { 800 };
+        let all = generate(sc, n, &mut rng);
+        let (tr, te) = all.split(0.8, &mut rng);
+        let cfg = TrainConfig::default();
+        let model = train(&dev, &tr, &cfg);
+        let acc = model.accuracy(&dev, &te);
+        t.row(&[
+            sc.name().into(),
+            format!("{:.0}%", sc.paper_accuracy() * 100.0),
+            format!("{:.1}%", acc * 100.0),
+            model.state.label(),
+            format!("{}", te.len()),
+        ]);
+    }
+    format!(
+        "Fig. 12 — four classification cases (measured device, γ = 1/100)\n{}\
+         expected shape: corner/diagonals well above ring; ring limited by the two-cut geometry\n",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_all_states() {
+        let r = table1();
+        for n in 1..=6 {
+            assert!(r.contains(&format!("L{n}")), "{r}");
+        }
+    }
+
+    #[test]
+    fn fig3_peak_at_total_power() {
+        let r = fig3();
+        assert!(r.contains("peak P2 = 2.000 mW"), "{r}");
+    }
+
+    #[test]
+    fn fig6_has_three_sources_per_state() {
+        let r = fig6();
+        assert_eq!(r.matches("| theory ").count(), 6);
+        assert_eq!(r.matches("| sim ").count(), 6);
+        assert_eq!(r.matches("| meas ").count(), 6);
+    }
+
+    #[test]
+    fn fig8_reports_lines_and_high_accuracy() {
+        let r = fig8();
+        assert!(r.contains("dividing lines"));
+        let acc: f64 = r
+            .lines()
+            .find(|l| l.contains("train accuracy"))
+            .and_then(|l| l.split('=').nth(1))
+            .and_then(|v| v.trim().split(';').next())
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap();
+        assert!(acc > 0.9, "fig8 accuracy {acc}");
+    }
+
+    #[test]
+    fn grid_rendering_shape() {
+        let g = vec![vec![0.0, 1.0], vec![0.6, 0.05]];
+        let s = render_grid(&g);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "+ "); // top row = last grid row [0.6, 0.05]
+        assert_eq!(lines[1], " #");
+    }
+
+    #[test]
+    fn ones_fraction_counts() {
+        let g = vec![vec![0.9, 0.1], vec![0.7, 0.2]];
+        assert!((ones_fraction(&g) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (offline substitute for criterion): warmup,
+//! repeated timed runs, percentile statistics, throughput helpers.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time (ns), sorted ascending.
+    samples_ns: Vec<u64>,
+}
+
+impl BenchStats {
+    /// Median time per iteration (ns).
+    pub fn median_ns(&self) -> u64 {
+        self.samples_ns[self.samples_ns.len() / 2]
+    }
+
+    /// Percentile (0..1) time per iteration (ns).
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let idx = ((self.samples_ns.len() as f64 - 1.0) * q).round() as usize;
+        self.samples_ns[idx]
+    }
+
+    /// Mean time per iteration (ns).
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64
+    }
+
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.median_ns().max(1) as f64
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<38} median {:>10}  p95 {:>10}  ({:.1}/s)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.percentile_ns(0.95)),
+            self.throughput()
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the inner batch so each sample takes
+/// ≥ ~1 ms, with `samples` timed samples after 2 warmup runs.
+pub fn bench(name: &str, samples: usize, mut f: impl FnMut()) -> BenchStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let inner = (Duration::from_millis(1).as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as usize;
+    f();
+    let mut samples_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        samples_ns.push((t.elapsed().as_nanos() as u64) / inner as u64);
+    }
+    samples_ns.sort_unstable();
+    BenchStats { name: name.to_string(), iters: samples * inner, samples_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let stats = bench("noop-ish", 5, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(stats.median_ns() < 10_000_000);
+        assert!(stats.iters >= 5);
+        assert!(stats.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut v = vec![1u64; 256];
+        let stats = bench("sleepless", 8, || {
+            for x in v.iter_mut() {
+                *x = std::hint::black_box(x.wrapping_mul(6364136223846793005).wrapping_add(1));
+            }
+        });
+        assert!(stats.percentile_ns(0.1) <= stats.percentile_ns(0.9));
+        assert!(stats.mean_ns() > 0.0, "workload optimized away");
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert!(fmt_ns(2_500).contains("µs"));
+        assert!(fmt_ns(2_500_000).contains("ms"));
+        assert!(fmt_ns(2_500_000_000).contains(" s"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Figs. 15–16: the MNIST experiment — analog (measured 8×8 mesh + DSPSA)
+//! vs digital twin, training curves and confusion matrix.
+
+use crate::dataset::mnist::load_or_synthesize;
+use crate::mesh::propagate::MeshBackend;
+use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
+use crate::nn::sgd::SgdConfig;
+use crate::util::table::Table;
+
+/// Workload sizes: the paper trains on 50 000 / tests on 10 000 for 100
+/// iterations; the bench default is scaled to this testbed (CPU, 1 core)
+/// and the `mnist_e2e` example runs the fuller configuration.
+pub struct MnistWorkload {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub lr: f64,
+}
+
+impl MnistWorkload {
+    /// Bench-scale workload.
+    pub fn bench(quick: bool) -> Self {
+        if quick {
+            MnistWorkload { n_train: 800, n_test: 400, epochs: 25, lr: 0.05 }
+        } else {
+            MnistWorkload { n_train: 3000, n_test: 1000, epochs: 40, lr: 0.02 }
+        }
+    }
+}
+
+/// Train both networks and return (analog, digital, test accuracies).
+pub fn train_pair(w: &MnistWorkload, seed: u64) -> (MnistRfnn, MnistRfnn, f64, f64) {
+    let (tr, te) = load_or_synthesize(w.n_train, w.n_test, seed);
+    let cfg = MnistTrainConfig {
+        epochs: w.epochs,
+        sgd: SgdConfig { lr: w.lr, batch_size: 10, momentum: 0.0 },
+        ..Default::default()
+    };
+    let mut analog = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: seed ^ 0xAA }, seed);
+    analog.train(&tr, &cfg);
+    let mut digital = MnistRfnn::digital(8, seed);
+    digital.train(&tr, &cfg);
+    let a_acc = analog.test_accuracy(&te);
+    let d_acc = digital.test_accuracy(&te);
+    (analog, digital, a_acc, d_acc)
+}
+
+/// Fig. 15: training accuracy/error curves, analog vs digital.
+pub fn fig15(quick: bool) -> String {
+    let w = MnistWorkload::bench(quick);
+    let (analog, digital, a_acc, d_acc) = train_pair(&w, 2023);
+    let mut t = Table::new(&["epoch", "analog acc", "analog err", "digital acc", "digital err"]);
+    let step = (analog.history.len() / 10).max(1);
+    for (a, d) in analog.history.iter().zip(&digital.history).step_by(step) {
+        t.row(&[
+            format!("{}", a.epoch + 1),
+            format!("{:.3}", a.train_acc),
+            format!("{:.3}", a.train_loss),
+            format!("{:.3}", d.train_acc),
+            format!("{:.3}", d.train_loss),
+        ]);
+    }
+    let a_tr = analog.history.last().map(|h| h.train_acc).unwrap_or(0.0);
+    let d_tr = digital.history.last().map(|h| h.train_acc).unwrap_or(0.0);
+    format!(
+        "Fig. 15 — MNIST training curves, analog (measured mesh + DSPSA) vs digital twin\n\
+         (workload: {} train / {} test, {} epochs — paper: 50k/10k, 100 iters)\n{}\
+         final: analog train {:.1}% / test {:.1}%   digital train {:.1}% / test {:.1}%\n\
+         paper:  analog train 91.7% / test 91.6%   digital train 94.1% / test 93.1%\n\
+         expected shape: analog a few points below digital (discrete-phase penalty)\n",
+        w.n_train,
+        w.n_test,
+        w.epochs,
+        t.render(),
+        a_tr * 100.0,
+        a_acc * 100.0,
+        d_tr * 100.0,
+        d_acc * 100.0,
+    )
+}
+
+/// Fig. 16: confusion matrix of the trained analog RFNN on the test set.
+pub fn fig16(quick: bool) -> String {
+    let w = MnistWorkload::bench(quick);
+    let (analog, _, a_acc, _) = train_pair(&w, 2023);
+    let (_, te) = load_or_synthesize(w.n_train, w.n_test, 2023);
+    let cm = analog.confusion(&te);
+    let mut header = vec!["true\\pred".to_string()];
+    header.extend((0..10).map(|d| d.to_string()));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&header_refs);
+    for (c, row) in cm.iter().enumerate() {
+        let total: usize = row.iter().sum::<usize>().max(1);
+        let mut cells = vec![c.to_string()];
+        cells.extend(row.iter().map(|&v| format!("{:.0}", 100.0 * v as f64 / total as f64)));
+        t.row(&cells);
+    }
+    // Diagonal dominance measure.
+    let diag: usize = (0..10).map(|i| cm[i][i]).sum();
+    let total: usize = cm.iter().flatten().sum();
+    format!(
+        "Fig. 16 — analog RFNN confusion matrix (% per true class)\n{}\
+         diagonal fraction = {:.1}% (test accuracy {:.1}%)\n",
+        t.render(),
+        100.0 * diag as f64 / total as f64,
+        a_acc * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig15_shape_holds() {
+        let r = fig15(true);
+        assert!(r.contains("analog"), "{r}");
+        assert!(r.contains("digital"));
+        // Parse final accuracies and sanity-check the learning happened.
+        let line = r.lines().find(|l| l.starts_with("final:")).unwrap();
+        let nums: Vec<f64> = line
+            .split(|c: char| !c.is_ascii_digit() && c != '.')
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        let analog_test = nums[1] / 100.0;
+        let digital_test = nums[3] / 100.0;
+        assert!(analog_test > 0.3, "analog {analog_test}");
+        assert!(digital_test > 0.4, "digital {digital_test}");
+    }
+}

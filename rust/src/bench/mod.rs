@@ -1,0 +1,57 @@
+//! The paper-experiment harness: one regenerator per table and figure in
+//! the evaluation (DESIGN.md §5 maps experiment ids to modules), plus the
+//! §Perf micro-benchmarks.
+//!
+//! `criterion` is unavailable offline, so [`harness`] provides warmup +
+//! repeated timing with percentile statistics; `rust/benches/
+//! paper_benches.rs` (harness = false) and the `rfnn bench` CLI both call
+//! into this module.
+
+pub mod ablate;
+pub mod figures;
+pub mod harness;
+pub mod mnist_exp;
+pub mod perf;
+pub mod table2;
+
+/// An experiment produces a human-readable report (the paper's rows).
+pub type Report = String;
+
+/// All experiment names, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "fig3", "fig5", "fig6", "fig8", "fig9", "fig10", "fig12", "fig15", "fig16",
+    "table2", "ablate", "perf",
+];
+
+/// Run one experiment by name. `quick` shrinks workloads (CI mode).
+pub fn run(name: &str, quick: bool) -> Result<Report, String> {
+    match name {
+        "table1" => Ok(figures::table1()),
+        "fig3" => Ok(figures::fig3()),
+        "fig5" => Ok(figures::fig5(quick)),
+        "fig6" => Ok(figures::fig6()),
+        "fig8" => Ok(figures::fig8()),
+        "fig9" => Ok(figures::fig9(quick)),
+        "fig10" => Ok(figures::fig10(quick)),
+        "fig12" => Ok(figures::fig12(quick)),
+        "fig15" => Ok(mnist_exp::fig15(quick)),
+        "fig16" => Ok(mnist_exp::fig16(quick)),
+        "table2" => Ok(table2::table2()),
+        "ablate" => Ok(ablate::all(quick)),
+        "perf" => Ok(perf::all(quick)),
+        other => Err(format!("unknown experiment '{other}' (have: {EXPERIMENTS:?})")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_covers_all_names() {
+        for name in super::EXPERIMENTS {
+            // Don't run the heavy ones here; just check dispatch exists by
+            // rejecting unknown names.
+            assert!(super::run("definitely-not-an-experiment", true).is_err());
+            assert!(super::EXPERIMENTS.contains(name));
+        }
+    }
+}

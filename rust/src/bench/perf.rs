@@ -1,0 +1,145 @@
+//! §Perf: micro-benchmarks of the hot paths at each layer.
+//!
+//! L3 native kernels (mesh recompose/apply, full native forward, circuit
+//! evaluation, decomposition) plus the PJRT end-to-end execution when
+//! artifacts are present. Results are recorded in EXPERIMENTS.md §Perf.
+
+use super::harness::{bench, BenchStats};
+use crate::coordinator::server::ModelBundle;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::rng::Rng;
+use crate::math::svd::svd;
+use crate::mesh::decompose::decompose_unitary;
+use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+use crate::nn::rfnn_mnist::MnistRfnn;
+use crate::device::State;
+
+/// Run every perf bench; returns the report.
+pub fn all(quick: bool) -> String {
+    let samples = if quick { 5 } else { 15 };
+    let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
+    for stat in run_benches(samples) {
+        out.push_str(&stat.line());
+        out.push('\n');
+    }
+    out
+}
+
+/// The individual benches (exposed for the bench binary).
+pub fn run_benches(samples: usize) -> Vec<BenchStats> {
+    let mut rng = Rng::new(0xBE7C);
+    let mut results = Vec::new();
+
+    // L3: mesh state recompose (DSPSA inner loop cost).
+    let mut mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+    let mut k = 0usize;
+    results.push(bench("mesh8.set_state (recompose)", samples, || {
+        k = (k + 1) % mesh.cells();
+        mesh.set_state(k, State { theta: k % 6, phi: (k * 2) % 6 });
+    }));
+
+    // L3: mesh apply (per-sample hidden-layer matvec).
+    let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+    let x: Vec<C64> = (0..8).map(|i| C64::new(0.1 * i as f64, 0.0)).collect();
+    results.push(bench("mesh8.apply (complex matvec)", samples, || {
+        std::hint::black_box(mesh.apply(std::hint::black_box(&x)));
+    }));
+
+    // L3: abs-detected batch apply.
+    let xr: Vec<f64> = (0..8).map(|i| 0.2 * i as f64 - 0.5).collect();
+    results.push(bench("mesh8.apply_abs", samples, || {
+        std::hint::black_box(mesh.apply_abs(std::hint::black_box(&xr)));
+    }));
+
+    // L3: full native MNIST forward, batch 32.
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 1);
+    let bundle = ModelBundle::from_trained(&net).unwrap();
+    let img: Vec<f32> = (0..32 * 784).map(|i| ((i % 97) as f32) / 97.0).collect();
+    results.push(bench("native fwd b32 (dense+mesh+dense)", samples, || {
+        std::hint::black_box(bundle.forward_native(std::hint::black_box(&img), 32));
+    }));
+
+    // Math: SVD + decomposition (mesh programming cost).
+    let a = CMat::from_fn(8, 8, |_, _| C64::new(rng.normal(), rng.normal()));
+    results.push(bench("svd 8x8 complex", samples, || {
+        std::hint::black_box(svd(std::hint::black_box(&a)));
+    }));
+    let f = svd(&a);
+    let u = f.u.matmul(&f.vh);
+    results.push(bench("decompose_unitary 8x8", samples, || {
+        std::hint::black_box(decompose_unitary(std::hint::black_box(&u)));
+    }));
+
+    // Microwave: circuit-model evaluation (VNA sweep cost).
+    let cell = crate::device::circuit::UnitCellCircuit::prototype();
+    results.push(bench("unit-cell circuit sparams @f0", samples, || {
+        std::hint::black_box(cell.sparams(2.0e9, State { theta: 3, phi: 1 }));
+    }));
+
+    // PJRT end-to-end (if artifacts present).
+    let dir = crate::runtime::Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        if let Ok(mut engine) = crate::runtime::Engine::cpu(&dir) {
+            let x32 = vec![0.1f32; 32 * 784];
+            let args: Vec<Vec<f32>> = vec![
+                x32,
+                bundle.w1.clone(),
+                bundle.b1.clone(),
+                bundle.m_re.clone(),
+                bundle.m_im.clone(),
+                bundle.w2.clone(),
+                bundle.b2.clone(),
+            ];
+            let arg_refs: Vec<&[f32]> = args.iter().map(|a| a.as_slice()).collect();
+            // compile once
+            let _ = engine.execute_f32("rfnn_mnist_fwd_b32", &arg_refs);
+            results.push(bench("pjrt fwd b32 (dense kernel)", samples, || {
+                std::hint::black_box(engine.execute_f32("rfnn_mnist_fwd_b32", &arg_refs).unwrap());
+            }));
+            // Ablation: the column-sweep kernel variant at b256.
+            let x256 = vec![0.1f32; 256 * 784];
+            let planes = mesh.coeff_planes();
+            let sweep_args: Vec<Vec<f32>> = {
+                let mut v = vec![x256.clone(), bundle.w1.clone(), bundle.b1.clone()];
+                v.extend(planes.iter().cloned());
+                v.push(bundle.w2.clone());
+                v.push(bundle.b2.clone());
+                v
+            };
+            let sweep_refs: Vec<&[f32]> = sweep_args.iter().map(|a| a.as_slice()).collect();
+            if engine.execute_f32("rfnn_mnist_fwd_sweep_b256", &sweep_refs).is_ok() {
+                results.push(bench("pjrt fwd b256 sweep (ablation)", samples.min(5), || {
+                    std::hint::black_box(
+                        engine.execute_f32("rfnn_mnist_fwd_sweep_b256", &sweep_refs).unwrap(),
+                    );
+                }));
+            }
+            let dense_args: Vec<Vec<f32>> = vec![
+                x256,
+                bundle.w1.clone(),
+                bundle.b1.clone(),
+                bundle.m_re.clone(),
+                bundle.m_im.clone(),
+                bundle.w2.clone(),
+                bundle.b2.clone(),
+            ];
+            let dense_refs: Vec<&[f32]> = dense_args.iter().map(|a| a.as_slice()).collect();
+            let _ = engine.execute_f32("rfnn_mnist_fwd_b256", &dense_refs);
+            results.push(bench("pjrt fwd b256 dense (serving)", samples, || {
+                std::hint::black_box(engine.execute_f32("rfnn_mnist_fwd_b256", &dense_refs).unwrap());
+            }));
+        }
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn perf_suite_runs_quick() {
+        let report = super::all(true);
+        assert!(report.contains("mesh8.apply"), "{report}");
+        assert!(report.contains("native fwd"), "{report}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Hand-rolled CLI argument parsing (the offline vendor set has no clap).
+//!
+//! Grammar: `rfnn <command> [--flag[=value] | --flag value | positional]…`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / bare `--key` (value "true").
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Flag as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Flag parsed to any `FromStr`, with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag (present and not "false").
+    pub fn is_set(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("bench fig12 extra");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig12", "extra"]);
+    }
+
+    #[test]
+    fn flags_in_all_styles() {
+        let a = parse("serve --requests 100 --batch=32 --quick");
+        assert_eq!(a.get_or("requests", 0usize), 100);
+        assert_eq!(a.get_or("batch", 0usize), 32);
+        assert!(a.is_set("quick"));
+        assert!(!a.is_set("absent"));
+    }
+
+    #[test]
+    fn flag_value_not_stolen_by_next_flag() {
+        let a = parse("cmd --a --b 7");
+        assert_eq!(a.get("a"), Some("true"));
+        assert_eq!(a.get_or("b", 0u32), 7);
+    }
+
+    #[test]
+    fn defaults_apply_on_parse_failure() {
+        let a = parse("cmd --n notanumber");
+        assert_eq!(a.get_or("n", 42u32), 42);
+    }
+}

@@ -1,0 +1,71 @@
+//! Request/response types for the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// An MNIST inference request.
+pub struct InferRequest {
+    /// Client-assigned id (echoed back).
+    pub id: u64,
+    /// Flattened 28×28 image, values in [0, 1].
+    pub image: Vec<f32>,
+    /// Where to send the response.
+    pub reply: Sender<InferResponse>,
+    /// Enqueue timestamp (for queueing-latency metrics).
+    pub enqueued: Instant,
+}
+
+/// An MNIST inference response.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Class probabilities (length 10).
+    pub probs: Vec<f32>,
+    /// Time spent queued before the batch formed.
+    pub queued_us: u64,
+    /// Batch execution time (shared across the batch).
+    pub service_us: u64,
+}
+
+impl InferResponse {
+    /// Predicted class.
+    pub fn predicted(&self) -> usize {
+        self.probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// A 2×2 classifier request: evaluate `point` under trained classifier
+/// `classifier` (each classifier pins one device θ state).
+pub struct ClassifyRequest {
+    pub id: u64,
+    pub classifier: usize,
+    pub point: [f64; 2],
+    pub reply: Sender<ClassifyResponse>,
+    pub enqueued: Instant,
+}
+
+/// A 2×2 classifier response.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    /// ŷ ∈ [0, 1].
+    pub yhat: f64,
+    /// Whether serving this request required a device re-bias.
+    pub reconfigured: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicted_is_argmax() {
+        let r = InferResponse { id: 1, probs: vec![0.1, 0.6, 0.3], queued_us: 0, service_us: 0 };
+        assert_eq!(r.predicted(), 1);
+    }
+}

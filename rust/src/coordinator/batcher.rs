@@ -1,0 +1,94 @@
+//! Dynamic batching: coalesce queued requests up to a size cap or a
+//! deadline, whichever comes first — the standard serving trade between
+//! throughput (bigger batches amortize dispatch) and tail latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap on batch size (the largest AOT-exported batch).
+    pub max_batch: usize,
+    /// Maximum time the *first* request of a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx`. Blocks until at least one request is
+/// available (or the channel closes → `None`), then keeps pulling until
+/// `max_batch` or the deadline.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn returns_none_on_closed_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn batches_up_to_cap() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        drop(tx);
+    }
+
+    #[test]
+    fn late_arrivals_join_before_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            let _ = tx.send(2);
+        });
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(150) };
+        let b = next_batch(&rx, &policy).unwrap();
+        handle.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+}

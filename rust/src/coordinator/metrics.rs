@@ -1,0 +1,172 @@
+//! Lightweight serving metrics: counters and log-bucketed latency
+//! histograms with percentile extraction (no external deps).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A log₂-bucketed latency histogram over microseconds, lock-free.
+pub struct LatencyHistogram {
+    /// bucket b counts samples in [2^b, 2^{b+1}) µs; bucket 0 covers [0, 2).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..40).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample (microseconds).
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean (µs).
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Maximum (µs).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (µs): upper edge of the bucket containing
+    /// the q-quantile (bucket resolution = 2×).
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (b + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Serving metrics for one worker.
+#[derive(Default)]
+pub struct Metrics {
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+    /// Time spent queued before batch formation.
+    pub queue: LatencyHistogram,
+    /// Per-batch execution time.
+    pub exec: LatencyHistogram,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Padded slots wasted (batch-size rounding cost).
+    pub padded: AtomicU64,
+    /// Device re-bias operations (2×2 scheduler).
+    pub reconfigs: AtomicU64,
+}
+
+impl Metrics {
+    /// Record a completed batch of `n` requests padded to `cap`.
+    pub fn record_batch(&self, n: usize, cap: usize, exec_us: u64) {
+        self.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded.fetch_add((cap - n) as u64, Ordering::Relaxed);
+        self.exec.record(exec_us);
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Human-readable snapshot.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} padded={} reconfigs={}\n\
+             latency µs: mean={:.0} p50≤{} p99≤{} max={}\n\
+             queue   µs: mean={:.0} p99≤{}\n\
+             exec    µs: mean={:.0} p99≤{}",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.padded.load(Ordering::Relaxed),
+            self.reconfigs.load(Ordering::Relaxed),
+            self.latency.mean_us(),
+            self.latency.percentile_us(0.5),
+            self.latency.percentile_us(0.99),
+            self.latency.max_us(),
+            self.queue.mean_us(),
+            self.queue.percentile_us(0.99),
+            self.exec.mean_us(),
+            self.exec.percentile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 220.0).abs() < 1.0);
+        let p50 = h.percentile_us(0.5);
+        assert!((16..=64).contains(&p50), "p50={p50}");
+        let p99 = h.percentile_us(0.99);
+        assert!(p99 >= 1000, "p99={p99}");
+        assert_eq!(h.max_us(), 1000);
+    }
+
+    #[test]
+    fn zero_latency_is_handled() {
+        let h = LatencyHistogram::default();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert!(h.percentile_us(0.5) >= 1);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(3, 4, 100);
+        m.record_batch(4, 4, 200);
+        assert_eq!(m.mean_batch_size(), 3.5);
+        assert_eq!(m.padded.load(Ordering::Relaxed), 1);
+        let r = m.report();
+        assert!(r.contains("requests=7"), "{r}");
+    }
+}

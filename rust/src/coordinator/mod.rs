@@ -1,0 +1,20 @@
+//! The serving layer (Layer-3): request routing, dynamic batching, device
+//! state scheduling and metrics — rust owns the event loop and the request
+//! path end to end.
+//!
+//! Two serving surfaces, mirroring the paper's two applications:
+//!
+//! * **MNIST inference** ([`server`]): requests carry a 784-float image;
+//!   a dynamic batcher ([`batcher`]) coalesces them, the worker pads to
+//!   the nearest AOT-exported batch size, executes the PJRT module
+//!   (dense→mesh→dense, one fused HLO), and fans responses back out.
+//! * **Reconfigurable 2×2 classification** ([`scheduler`]): each request
+//!   names one of the six trained classifiers; the device can serve only
+//!   one θ state at a time, so the scheduler batches per-state and
+//!   minimizes bias reconfigurations while bounding queueing delay.
+
+pub mod api;
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;

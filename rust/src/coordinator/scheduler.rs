@@ -1,0 +1,209 @@
+//! Device-state scheduler for the reconfigurable 2×2 classifier service.
+//!
+//! The physical device serves one θ state at a time; switching states
+//! means re-biasing the SP6T switches. The scheduler keeps one queue per
+//! classifier (device state) and serves the current state's queue until it
+//! drains, a run-length cap fires, or another queue's head request exceeds
+//! the staleness bound — minimizing reconfigurations without starving
+//! minority classifiers.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerPolicy {
+    /// Max requests served in one stay on a state before re-evaluating.
+    pub max_run: usize,
+    /// A queued request older than this forces a switch to its state.
+    pub max_staleness: Duration,
+    /// Max requests returned per batch.
+    pub max_batch: usize,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy {
+            max_run: 64,
+            max_staleness: Duration::from_millis(5),
+            max_batch: 32,
+        }
+    }
+}
+
+/// A per-state batching scheduler over items of type `T`.
+pub struct StateScheduler<T> {
+    queues: Vec<VecDeque<(Instant, T)>>,
+    policy: SchedulerPolicy,
+    current: usize,
+    run: usize,
+    /// Number of state switches performed.
+    pub reconfigs: u64,
+}
+
+impl<T> StateScheduler<T> {
+    /// Create a scheduler over `states` queues.
+    pub fn new(states: usize, policy: SchedulerPolicy) -> Self {
+        StateScheduler {
+            queues: (0..states).map(|_| VecDeque::new()).collect(),
+            policy,
+            current: 0,
+            run: 0,
+            reconfigs: 0,
+        }
+    }
+
+    /// Enqueue an item for `state`.
+    pub fn push(&mut self, state: usize, enqueued: Instant, item: T) {
+        self.queues[state].push_back((enqueued, item));
+    }
+
+    /// Total queued items.
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// The state currently biased on the device.
+    pub fn current_state(&self) -> usize {
+        self.current
+    }
+
+    /// Pick the next batch: `(state, items, reconfigured)`. Returns `None`
+    /// when nothing is queued.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(usize, Vec<T>, bool)> {
+        if self.queued() == 0 {
+            return None;
+        }
+        // A stale head anywhere forces a switch to the *stalest* queue.
+        let stalest = (0..self.queues.len())
+            .filter_map(|s| self.queues[s].front().map(|(t, _)| (s, *t)))
+            .min_by_key(|&(_, t)| t);
+        let mut target = self.current;
+        if let Some((s, t)) = stalest {
+            if now.duration_since(t) > self.policy.max_staleness {
+                target = s;
+            }
+        }
+        // Otherwise stay if the current queue has work and the run cap
+        // hasn't fired; else move to the longest queue.
+        if target == self.current
+            && (self.queues[self.current].is_empty() || self.run >= self.policy.max_run)
+        {
+            target = (0..self.queues.len()).max_by_key(|&s| self.queues[s].len()).unwrap();
+        }
+        let reconfigured = target != self.current;
+        if reconfigured {
+            self.current = target;
+            self.run = 0;
+            self.reconfigs += 1;
+        }
+        let q = &mut self.queues[target];
+        let take = q.len().min(self.policy.max_batch).min(self.policy.max_run - self.run.min(self.policy.max_run - 1));
+        let items: Vec<T> = q.drain(..take).map(|(_, item)| item).collect();
+        self.run += items.len();
+        Some((target, items, reconfigured))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(policy: SchedulerPolicy) -> StateScheduler<u32> {
+        StateScheduler::new(6, policy)
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let mut s = sched(SchedulerPolicy::default());
+        assert!(s.next_batch(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn groups_by_state_to_minimize_switches() {
+        let mut s = sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
+        let t = Instant::now();
+        // Interleaved arrivals across two states.
+        for i in 0..20 {
+            s.push(i % 2, t, i as u32);
+        }
+        let mut switches = 0;
+        while let Some((_, _, reconf)) = s.next_batch(Instant::now()) {
+            if reconf {
+                switches += 1;
+            }
+        }
+        // FIFO would switch ~20 times; grouping needs ≤ 2.
+        assert!(switches <= 2, "switches = {switches}");
+    }
+
+    #[test]
+    fn staleness_forces_switch() {
+        let mut s = sched(SchedulerPolicy {
+            max_staleness: Duration::from_millis(1),
+            max_batch: 4,
+            max_run: 1000,
+        });
+        let old = Instant::now();
+        s.push(3, old, 99); // will become stale
+        std::thread::sleep(Duration::from_millis(3));
+        for i in 0..8 {
+            s.push(0, Instant::now(), i);
+        }
+        // Even though state 0 has the longer queue, the stale head wins.
+        let (state, items, _) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(state, 3);
+        assert_eq!(items, vec![99]);
+    }
+
+    #[test]
+    fn run_cap_rotates_states() {
+        let mut s = sched(SchedulerPolicy {
+            max_run: 4,
+            max_batch: 4,
+            max_staleness: Duration::from_secs(100),
+        });
+        let t = Instant::now();
+        for i in 0..8 {
+            s.push(0, t, i);
+        }
+        for i in 0..4 {
+            s.push(1, t, 100 + i);
+        }
+        let (s0, b0, _) = s.next_batch(t).unwrap();
+        assert_eq!((s0, b0.len()), (0, 4));
+        // Run cap fired → next batch must leave state 0 (longest = state 0
+        // still with 4, tie broken by max; allow either but require that a
+        // full drain eventually serves state 1 without starvation).
+        let mut served1 = false;
+        while let Some((st, items, _)) = s.next_batch(t) {
+            if st == 1 && !items.is_empty() {
+                served1 = true;
+            }
+        }
+        assert!(served1);
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let mut s = sched(SchedulerPolicy { max_batch: 3, ..Default::default() });
+        let t = Instant::now();
+        for i in 0..7 {
+            s.push(2, t, i);
+        }
+        let (_, b, _) = s.next_batch(t).unwrap();
+        assert!(b.len() <= 3);
+    }
+
+    #[test]
+    fn reconfig_counter_counts() {
+        let mut s = sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
+        let t = Instant::now();
+        s.push(4, t, 1);
+        let _ = s.next_batch(t);
+        assert_eq!(s.reconfigs, 1); // initial move 0 → 4
+        s.push(4, t, 2);
+        let _ = s.next_batch(t);
+        assert_eq!(s.reconfigs, 1); // stayed
+    }
+}

@@ -1,0 +1,378 @@
+//! The MNIST inference server: batcher → (PJRT | native) executor → reply.
+//!
+//! The worker thread owns the model bundle (digital weights + the mesh's
+//! coefficient planes) and the execution backend. Requests are coalesced
+//! by the dynamic batcher, padded to the nearest AOT-exported batch size,
+//! executed as ONE fused HLO call (dense → mesh → dense — no per-layer
+//! dispatch on the request path), and fanned back out.
+
+use super::api::{InferRequest, InferResponse};
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+use crate::nn::rfnn_mnist::{Hidden, MnistRfnn};
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything the worker needs to run the model: digital weights as f32
+/// plus the analog mesh's coefficient planes.
+#[derive(Clone, Debug)]
+pub struct ModelBundle {
+    pub n: usize,
+    pub cols: usize,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// Column-sweep coefficient planes (native fallback + sweep ablation).
+    pub planes: [Vec<f32>; 6],
+    /// Precomposed mesh matrix, re/im (the PJRT serving path — §Perf L1:
+    /// the matrix only changes when DSPSA re-biases the device, so the
+    /// coordinator composes it once per state change, not per request).
+    pub m_re: Vec<f32>,
+    pub m_im: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl ModelBundle {
+    /// Export a trained analog [`MnistRfnn`] for serving. The fixed
+    /// power-compensation gain is folded into the coefficient planes so the
+    /// serving path needs no extra scalar.
+    pub fn from_trained(net: &MnistRfnn) -> Result<ModelBundle> {
+        let mesh = match &net.hidden {
+            Hidden::Analog(mesh) => mesh,
+            Hidden::Digital(_) => anyhow::bail!("serving bundle requires the analog network"),
+        };
+        let mut planes = mesh.coeff_planes();
+        // |g·Mx| = g·|Mx| for g > 0: scaling the *last column's* planes by
+        // the gain is equivalent to amplifying the detected magnitudes.
+        let n = mesh.channels();
+        let cols = mesh.kernel_columns();
+        let g = net.hidden_gain as f32;
+        for plane in planes.iter_mut() {
+            for v in plane[(cols - 1) * n..].iter_mut() {
+                *v *= g;
+            }
+        }
+        // Precomposed matrix with the gain folded in.
+        let m = mesh.matrix();
+        let mut m_re = vec![0.0f32; n * n];
+        let mut m_im = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                m_re[i * n + j] = (m[(i, j)].re * net.hidden_gain) as f32;
+                m_im[i * n + j] = (m[(i, j)].im * net.hidden_gain) as f32;
+            }
+        }
+        Ok(ModelBundle {
+            n,
+            cols,
+            w1: net.dense1.w.data().iter().map(|&x| x as f32).collect(),
+            b1: net.dense1.b.iter().map(|&x| x as f32).collect(),
+            planes,
+            m_re,
+            m_im,
+            w2: net.dense2.w.data().iter().map(|&x| x as f32).collect(),
+            b2: net.dense2.b.iter().map(|&x| x as f32).collect(),
+        })
+    }
+
+    /// Native (non-PJRT) forward for one padded batch — the fallback
+    /// backend and the cross-check oracle for the PJRT path.
+    pub fn forward_native(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        use crate::math::c64::C64;
+        let n = self.n;
+        let mut out = vec![0.0f32; batch * 10];
+        for r in 0..batch {
+            let img = &x[r * 784..(r + 1) * 784];
+            // dense1 + leaky relu
+            let mut a1 = vec![0.0f64; n];
+            for (j, a) in a1.iter_mut().enumerate() {
+                let row = &self.w1[j * 784..(j + 1) * 784];
+                let mut acc = self.b1[j] as f64;
+                for (w, v) in row.iter().zip(img) {
+                    acc += *w as f64 * *v as f64;
+                }
+                *a = if acc >= 0.0 { acc } else { 0.01 * acc };
+            }
+            // mesh sweep via coefficient planes
+            let mut z: Vec<C64> = a1.iter().map(|&v| C64::real(v)).collect();
+            for k in 0..self.cols {
+                let at = |p: usize, ch: usize| self.planes[p][k * n + ch] as f64;
+                let mut nxt = vec![C64::ZERO; n];
+                for ch in 0..n {
+                    let a = C64::new(at(0, ch), at(1, ch));
+                    let b = C64::new(at(2, ch), at(3, ch));
+                    let c = C64::new(at(4, ch), at(5, ch));
+                    nxt[ch] = a * z[ch] + b * z[(ch + 1) % n] + c * z[(ch + n - 1) % n];
+                }
+                z = nxt;
+            }
+            let h2: Vec<f64> = z.iter().map(|v| v.abs()).collect();
+            // dense2 + softmax
+            let mut logits = [0.0f64; 10];
+            for (k, l) in logits.iter_mut().enumerate() {
+                let row = &self.w2[k * n..(k + 1) * n];
+                *l = self.b2[k] as f64 + row.iter().zip(&h2).map(|(&w, &h)| w as f64 * h).sum::<f64>();
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+            let s: f64 = exps.iter().sum();
+            for (k, e) in exps.iter().enumerate() {
+                out[r * 10 + k] = (e / s) as f32;
+            }
+        }
+        out
+    }
+}
+
+/// Execution backend specification. The PJRT client is created *inside*
+/// the worker thread (the xla crate's client handles are not `Send`).
+pub enum Backend {
+    /// AOT HLO on a PJRT CPU client over this artifacts directory.
+    Pjrt(std::path::PathBuf),
+    /// Pure-rust forward (no artifacts needed).
+    Native,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub batch: BatchPolicy,
+    pub bundle: ModelBundle,
+    pub backend: Backend,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<InferRequest>,
+    next_id: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Client {
+    /// Synchronous round trip.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferResponse> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(InferRequest { id, image, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Fire-and-forget submission with a shared reply channel.
+    pub fn submit(&self, image: Vec<f32>, reply: Sender<InferResponse>) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(InferRequest { id, image, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(id)
+    }
+}
+
+/// A running server: client handle + worker thread + metrics.
+pub struct Server {
+    pub client: Client,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker.
+    pub fn start(cfg: ServerConfig) -> Server {
+        let (tx, rx) = channel::<InferRequest>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || worker_loop(rx, cfg, m2));
+        Server {
+            client: Client { tx, next_id: Arc::new(std::sync::atomic::AtomicU64::new(0)) },
+            metrics,
+            worker: Some(worker),
+        }
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) {
+        // Dropping the client's sender closes the channel.
+        let Server { client, worker, .. } = &mut self;
+        let _ = client;
+        // Replace the sender so the channel closes when self drops below.
+        if let Some(w) = worker.take() {
+            drop(std::mem::replace(&mut self.client.tx, channel().0));
+            let _ = w.join();
+        }
+    }
+}
+
+enum Runtime {
+    Pjrt(Engine),
+    Native,
+}
+
+fn worker_loop(rx: Receiver<InferRequest>, cfg: ServerConfig, metrics: Arc<Metrics>) {
+    let ServerConfig { batch, bundle, backend } = cfg;
+    // Instantiate the runtime inside the worker thread (PJRT handles are
+    // not Send); fall back to native on any setup failure.
+    let mut runtime = match backend {
+        Backend::Pjrt(dir) => match Engine::cpu(&dir) {
+            Ok(engine) => Runtime::Pjrt(engine),
+            Err(e) => {
+                eprintln!("PJRT setup failed ({e}); serving natively");
+                Runtime::Native
+            }
+        },
+        Backend::Native => Runtime::Native,
+    };
+    // Resolve padded batch sizes available on the backend, and warm-compile
+    // every variant up front so no request pays the JIT cost (§Perf L3:
+    // first-batch compile was ~1 s, inflating early-batch latency 1000×).
+    let exported: Vec<usize> = match &mut runtime {
+        Runtime::Pjrt(engine) => {
+            let mut b = engine.manifest().batch_sizes.clone();
+            b.sort_unstable();
+            for &cap in &b {
+                if let Err(e) = engine.load(&format!("rfnn_mnist_fwd_b{cap}")) {
+                    eprintln!("warmup failed for b{cap}: {e}");
+                }
+            }
+            b
+        }
+        Runtime::Native => vec![batch.max_batch],
+    };
+    while let Some(reqs) = next_batch(&rx, &batch) {
+        let formed = Instant::now();
+        let n = reqs.len();
+        let cap = *exported.iter().find(|&&c| c >= n).unwrap_or(exported.last().unwrap());
+        let n = n.min(cap);
+        // Pad input to the exported batch size.
+        let mut x = vec![0.0f32; cap * 784];
+        for (r, req) in reqs.iter().take(n).enumerate() {
+            x[r * 784..r * 784 + req.image.len().min(784)]
+                .copy_from_slice(&req.image[..req.image.len().min(784)]);
+        }
+        let t0 = Instant::now();
+        let probs = match &mut runtime {
+            Runtime::Pjrt(engine) => {
+                let name = format!("rfnn_mnist_fwd_b{cap}");
+                let args: Vec<&[f32]> = vec![
+                    x.as_slice(),
+                    bundle.w1.as_slice(),
+                    bundle.b1.as_slice(),
+                    bundle.m_re.as_slice(),
+                    bundle.m_im.as_slice(),
+                    bundle.w2.as_slice(),
+                    bundle.b2.as_slice(),
+                ];
+                match engine.execute_f32(&name, &args) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        eprintln!("PJRT execution failed ({e}); falling back to native");
+                        bundle.forward_native(&x, cap)
+                    }
+                }
+            }
+            Runtime::Native => bundle.forward_native(&x, cap),
+        };
+        let exec_us = t0.elapsed().as_micros() as u64;
+        metrics.record_batch(n, cap, exec_us);
+        for (r, req) in reqs.into_iter().enumerate() {
+            if r >= n {
+                continue; // overflowed cap (cannot happen with max_batch ≤ cap)
+            }
+            let queued_us = formed.duration_since(req.enqueued).as_micros() as u64;
+            metrics.queue.record(queued_us);
+            metrics.latency.record(queued_us + exec_us);
+            let _ = req.reply.send(InferResponse {
+                id: req.id,
+                probs: probs[r * 10..(r + 1) * 10].to_vec(),
+                queued_us,
+                service_us: exec_us,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::propagate::MeshBackend;
+
+    fn bundle() -> ModelBundle {
+        let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+        ModelBundle::from_trained(&net).unwrap()
+    }
+
+    #[test]
+    fn native_server_round_trip() {
+        let srv = Server::start(ServerConfig {
+            batch: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) },
+            bundle: bundle(),
+            backend: Backend::Native,
+        });
+        let resp = srv.client.infer(vec![0.5; 784]).unwrap();
+        assert_eq!(resp.probs.len(), 10);
+        let sum: f32 = resp.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+        assert_eq!(srv.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let srv = Server::start(ServerConfig {
+            batch: BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(2) },
+            bundle: bundle(),
+            backend: Backend::Native,
+        });
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = srv.client.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..10 {
+                    let img = vec![(t as f32 + k as f32) / 20.0; 784];
+                    let r = c.infer(img).unwrap();
+                    assert_eq!(r.probs.len(), 10);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 40);
+        // Batching actually happened (mean batch > 1) or at minimum all
+        // batches accounted.
+        assert!(srv.metrics.batches.load(std::sync::atomic::Ordering::Relaxed) <= 40);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pjrt_and_native_agree_when_artifacts_present() {
+        let dir = crate::runtime::Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let b = bundle();
+        let srv_pjrt = Server::start(ServerConfig {
+            batch: BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(10) },
+            bundle: b.clone(),
+            backend: Backend::Pjrt(dir),
+        });
+        let img: Vec<f32> = (0..784).map(|i| (i % 29) as f32 / 29.0).collect();
+        let via_pjrt = srv_pjrt.client.infer(img.clone()).unwrap();
+        srv_pjrt.shutdown();
+        let mut x = vec![0.0f32; 784];
+        x.copy_from_slice(&img);
+        let native = b.forward_native(&x, 1);
+        for (a, bb) in via_pjrt.probs.iter().zip(&native) {
+            assert!((a - bb).abs() < 1e-4, "{a} vs {bb}");
+        }
+    }
+
+    #[test]
+    fn bundle_export_requires_analog() {
+        let net = MnistRfnn::digital(8, 3);
+        assert!(ModelBundle::from_trained(&net).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Workload datasets.
+//!
+//! * [`synth2d`] — the four 2-D binary-classification scenarios of Fig. 12
+//!   (corner, two diagonals, ring), plus the wedge sets of Figs. 8–10.
+//! * [`mnist`] — MNIST IDX loader (used when `RFNN_MNIST_DIR` points at the
+//!   real files) and the procedural MNIST-like digit generator used
+//!   otherwise (the build environment has no network access; see DESIGN.md
+//!   §2 for the substitution rationale).
+
+pub mod mnist;
+pub mod synth2d;
+
+/// A labelled 2-D dataset (features in columns `x`, `y`; labels 0/1).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset2D {
+    pub points: Vec<[f64; 2]>,
+    pub labels: Vec<f64>,
+}
+
+impl Dataset2D {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Split into (train, test) by a deterministic shuffled partition.
+    pub fn split(&self, train_frac: f64, rng: &mut crate::math::rng::Rng) -> (Dataset2D, Dataset2D) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let mk = |ids: &[usize]| Dataset2D {
+            points: ids.iter().map(|&i| self.points[i]).collect(),
+            labels: ids.iter().map(|&i| self.labels[i]).collect(),
+        };
+        (mk(&idx[..n_train]), mk(&idx[n_train..]))
+    }
+}
+
+/// A labelled image dataset (`rows × cols` flattened f64 images in [0,1]).
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub images: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+    pub rows: usize,
+    pub cols: usize,
+    pub classes: usize,
+}
+
+impl ImageDataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Take the first `n` samples (cheap subset for fast tests).
+    pub fn take(&self, n: usize) -> ImageDataset {
+        let n = n.min(self.len());
+        ImageDataset {
+            images: self.images[..n].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            ..*self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn split_partitions() {
+        let ds = Dataset2D {
+            points: (0..100).map(|i| [i as f64, 0.0]).collect(),
+            labels: (0..100).map(|i| (i % 2) as f64).collect(),
+        };
+        let mut rng = Rng::new(1);
+        let (tr, te) = ds.split(0.8, &mut rng);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        let mut all: Vec<i64> = tr.points.iter().chain(&te.points).map(|p| p[0] as i64).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,194 @@
+//! Nonlinear RF activation hardware — the paper's §V extension path:
+//! "power detectors and transistors can be used to design non-linear
+//! activation function and additional static voltage may serve as bias for
+//! each neuron", enabling multi-layer RFNNs without per-layer digital
+//! post-processing.
+//!
+//! Behavioral models, not transistor-level SPICE: what matters for the
+//! network studies is the transfer curve family and its bias knob.
+//!
+//! * [`DiodeDetector`] — square-law power detector with responsivity,
+//!   video-resistance compression and noise floor: the natural "|·|²-ish"
+//!   neuron the paper's own measurement chain already implies.
+//! * [`TransistorLimiter`] — a biased FET amplifier driven into
+//!   compression: tanh-like saturation with a bias-adjustable knee (the
+//!   "static voltage as neuron bias").
+//! * [`RectifierNeuron`] — detector + bias + re-modulation: an RF-domain
+//!   leaky-ReLU usable between two linear mesh layers.
+
+use crate::microwave::Z0;
+
+/// Square-law diode power detector.
+#[derive(Clone, Copy, Debug)]
+pub struct DiodeDetector {
+    /// Small-signal responsivity (V/W).
+    pub responsivity: f64,
+    /// Output compression point (V): output saturates toward this level.
+    pub v_sat: f64,
+    /// Input-referred noise floor (W).
+    pub floor_w: f64,
+}
+
+impl Default for DiodeDetector {
+    fn default() -> Self {
+        // Typical Schottky detector: ~1 mV/µW, ~1 V saturation, −60 dBm floor.
+        DiodeDetector { responsivity: 1.0e3, v_sat: 1.0, floor_w: 1.0e-9 }
+    }
+}
+
+impl DiodeDetector {
+    /// DC output voltage for an RF input of amplitude `v_in` (volts, 50 Ω).
+    pub fn detect(&self, v_in: f64) -> f64 {
+        let p_in = v_in * v_in / (2.0 * Z0);
+        if p_in < self.floor_w {
+            return 0.0;
+        }
+        let linear = self.responsivity * p_in;
+        // Soft compression toward v_sat.
+        self.v_sat * (linear / self.v_sat).tanh()
+    }
+}
+
+/// FET amplifier driven into compression: tanh transfer with gain and a
+/// bias-controlled operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct TransistorLimiter {
+    /// Small-signal voltage gain.
+    pub gain: f64,
+    /// Output saturation amplitude (V).
+    pub v_sat: f64,
+    /// Gate bias offset (V) — shifts the knee (the neuron's threshold).
+    pub bias: f64,
+}
+
+impl TransistorLimiter {
+    /// Output amplitude for input amplitude `v_in`.
+    pub fn transfer(&self, v_in: f64) -> f64 {
+        self.v_sat * ((self.gain * (v_in - self.bias)) / self.v_sat).tanh()
+    }
+}
+
+/// An RF-domain neuron: detect |·|, apply bias, clamp at zero (the diode
+/// only conducts one way), optionally leak — a hardware leaky-ReLU on the
+/// detected envelope, re-modulated onto the carrier for the next layer.
+#[derive(Clone, Copy, Debug)]
+pub struct RectifierNeuron {
+    pub detector: DiodeDetector,
+    /// Static bias voltage subtracted after detection (V).
+    pub bias: f64,
+    /// Leak slope below threshold (0 = hard ReLU).
+    pub leak: f64,
+    /// Re-modulation gain back to RF amplitude.
+    pub remod_gain: f64,
+}
+
+impl Default for RectifierNeuron {
+    fn default() -> Self {
+        RectifierNeuron {
+            detector: DiodeDetector::default(),
+            bias: 0.0,
+            leak: 0.01,
+            remod_gain: 1.0,
+        }
+    }
+}
+
+impl RectifierNeuron {
+    /// Envelope-domain activation: returns the re-modulated RF amplitude.
+    pub fn activate(&self, v_in: f64) -> f64 {
+        let v_det = self.detector.detect(v_in) - self.bias;
+        let rectified = if v_det >= 0.0 { v_det } else { self.leak * v_det };
+        self.remod_gain * rectified
+    }
+
+    /// Apply to a whole layer of detected magnitudes.
+    pub fn activate_layer(&self, v: &[f64]) -> Vec<f64> {
+        v.iter().map(|&x| self.activate(x)).collect()
+    }
+}
+
+/// A two-analog-layer RFNN block: mesh → RF neurons → mesh, no digital
+/// processing in between (the §V multi-layer vision). The caller supplies
+/// the two composed mesh matrices.
+pub fn two_layer_analog_forward(
+    m1: &crate::math::cmat::CMat,
+    neurons: &RectifierNeuron,
+    m2: &crate::math::cmat::CMat,
+    x: &[f64],
+) -> Vec<f64> {
+    use crate::math::c64::C64;
+    let xc: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
+    let h1: Vec<f64> = m1.matvec(&xc).iter().map(|z| z.abs()).collect();
+    let a1 = neurons.activate_layer(&h1);
+    let a1c: Vec<C64> = a1.iter().map(|&v| C64::real(v)).collect();
+    m2.matvec(&a1c).iter().map(|z| z.abs()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detector_is_square_law_at_small_signal() {
+        let d = DiodeDetector::default();
+        let v1 = d.detect(0.01);
+        let v2 = d.detect(0.02); // 2× amplitude → 4× power
+        assert!((v2 / v1 - 4.0).abs() < 0.01, "ratio {}", v2 / v1);
+    }
+
+    #[test]
+    fn detector_saturates() {
+        let d = DiodeDetector::default();
+        let big = d.detect(100.0);
+        assert!(big <= d.v_sat * 1.0001);
+        assert!(d.detect(200.0) <= d.v_sat * 1.0001);
+    }
+
+    #[test]
+    fn detector_floor_gates_small_signals() {
+        let d = DiodeDetector::default();
+        // −70 dBm ≈ 1e-10 W → below the −60 dBm floor.
+        let v_in = (2.0 * Z0 * 1.0e-10f64).sqrt();
+        assert_eq!(d.detect(v_in), 0.0);
+    }
+
+    #[test]
+    fn limiter_bias_shifts_knee() {
+        let base = TransistorLimiter { gain: 10.0, v_sat: 1.0, bias: 0.0 };
+        let biased = TransistorLimiter { bias: 0.1, ..base };
+        assert!((base.transfer(0.1) - biased.transfer(0.2)).abs() < 1e-12);
+        assert!(biased.transfer(0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rectifier_neuron_is_leaky_relu_on_envelope() {
+        let n = RectifierNeuron { bias: 0.2, leak: 0.1, ..Default::default() };
+        // Above threshold: positive output growing with input.
+        let hi = n.activate(0.5);
+        assert!(hi > 0.0);
+        // Below threshold: small negative leak.
+        let lo = n.activate(0.05);
+        assert!(lo < 0.0 && lo.abs() < 0.1 * n.bias + 1e-9, "lo = {lo}");
+    }
+
+    #[test]
+    fn two_layer_block_is_nonlinear() {
+        use crate::math::cmat::CMat;
+        use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+        let mesh1 = DiscreteMesh::new(4, MeshBackend::Ideal);
+        let mut mesh2 = DiscreteMesh::new(4, MeshBackend::Ideal);
+        mesh2.set_state(2, crate::device::State { theta: 3, phi: 1 });
+        let m1: CMat = mesh1.matrix().clone();
+        let m2: CMat = mesh2.matrix().clone();
+        let neurons = RectifierNeuron { bias: 0.05, ..Default::default() };
+        let x = [0.2, 0.1, 0.3, 0.05];
+        let y1 = two_layer_analog_forward(&m1, &neurons, &m2, &x);
+        // Scaling the input by 2 must NOT scale the output by 2 (the bias
+        // breaks homogeneity) — i.e. the block is genuinely nonlinear.
+        let x2: Vec<f64> = x.iter().map(|&v| v * 2.0).collect();
+        let y2 = two_layer_analog_forward(&m1, &neurons, &m2, &x2);
+        let ratio = y2[0] / y1[0];
+        assert!((ratio - 2.0).abs() > 0.05, "block looks linear (ratio {ratio})");
+        assert!(y1.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,273 @@
+//! Circuit-level unit-cell model ("simulation" fidelity).
+//!
+//! Physical assembly per Fig. 2/Fig. 4: branch-line hybrid → {θ phase
+//! shifter ∥ padded reference arm} → branch-line hybrid → φ phase shifter
+//! on P2 (P3 has a plain output trace). All pieces are microstrip models on
+//! the prototype substrate; the 4-port S-matrix is produced for any
+//! frequency and any of the 36 states.
+//!
+//! Design note: the reference arm carries a matched pad equal to the phase
+//! shifter's common-path loss so the interferometer arms stay amplitude-
+//! balanced (otherwise the switch insertion loss alone would cap the
+//! extinction ratio ~12 dB below theory). The *virtual VNA* then perturbs
+//! this balance to produce measurement-like imperfection.
+
+use super::State;
+use crate::microwave::hybrid::BranchLineHybrid;
+use crate::microwave::microstrip::{Microstrip, Substrate};
+use crate::microwave::netlist::{Netlist, PortRef};
+use crate::microwave::phase_shifter::{SwitchModel, SwitchedLinePhaseShifter};
+use crate::microwave::sparams::SMatrix;
+use crate::microwave::{F0, Z0};
+
+/// Tunable imperfections applied to a [`UnitCellCircuit`] (used by the
+/// virtual VNA to emulate fabrication spread; all zero for the nominal
+/// "simulation" device).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Imperfections {
+    /// Multiplicative error on every phase-shifter path length (e.g. 0.01 = +1 %).
+    pub theta_len_err: [f64; 6],
+    /// Multiplicative error on the φ shifter path lengths.
+    pub phi_len_err: [f64; 6],
+    /// Reference-arm amplitude imbalance (linear, 1.0 = balanced).
+    pub ref_arm_gain: f64,
+    /// Extra per-hybrid amplitude error (linear multiplier on through/coupled).
+    pub hybrid_gain_err: f64,
+}
+
+/// The physical 2×2 unit cell.
+#[derive(Clone, Debug)]
+pub struct UnitCellCircuit {
+    hybrid: BranchLineHybrid,
+    theta_ps: SwitchedLinePhaseShifter,
+    phi_ps: SwitchedLinePhaseShifter,
+    /// Reference arm between the hybrids (same common length as the PS).
+    ref_arm: Microstrip,
+    /// Plain output trace on P3 (balances the φ shifter's common delay only
+    /// roughly — like the prototype, P2/P3 output paths are not identical).
+    out_trace: Microstrip,
+    /// Amplitude pad applied to the reference arm (see module docs).
+    ref_pad: f64,
+    imp: Imperfections,
+}
+
+impl UnitCellCircuit {
+    /// The nominal prototype: RO4360G2, 50 Ω, f0 = 2 GHz, JSW6-33DR+ switches.
+    pub fn prototype() -> Self {
+        Self::new(Substrate::ro4360g2(), SwitchModel::jsw6_33dr())
+    }
+
+    /// Build a unit cell on the given substrate and switch model.
+    pub fn new(sub: Substrate, switch: SwitchModel) -> Self {
+        let hybrid = BranchLineHybrid::design(sub, Z0, F0);
+        let theta_ps = SwitchedLinePhaseShifter::design(sub, Z0, F0, switch);
+        let phi_ps = SwitchedLinePhaseShifter::design(sub, Z0, F0, switch);
+        let ref_arm = Microstrip::with_electrical_length(sub, Z0, std::f64::consts::PI, F0);
+        let out_trace = Microstrip::with_electrical_length(sub, Z0, 0.3, F0);
+        // Pad the reference arm by the PS common-path loss at f0 (state L1's
+        // loss minus its excess line loss ≈ switch² + common line).
+        let ps_common_db = theta_ps.insertion_loss_db(F0, 0)
+            - (theta_ps.path_length(0) - ref_arm.length) * ref_arm.alpha(F0) * 8.685_889_638;
+        let ref_line_db = ref_arm.alpha(F0) * ref_arm.length * 8.685_889_638;
+        let ref_pad = crate::math::db_to_mag(-(ps_common_db - ref_line_db).max(0.0));
+        UnitCellCircuit {
+            hybrid,
+            theta_ps,
+            phi_ps,
+            ref_arm,
+            out_trace,
+            ref_pad,
+            imp: Imperfections { ref_arm_gain: 1.0, ..Default::default() },
+        }
+    }
+
+    /// Apply an imperfection set (virtual-VNA fabrication spread).
+    pub fn with_imperfections(mut self, imp: Imperfections) -> Self {
+        self.imp = imp;
+        self
+    }
+
+    /// Access the θ phase shifter (for Table I reporting).
+    pub fn theta_shifter(&self) -> &SwitchedLinePhaseShifter {
+        &self.theta_ps
+    }
+
+    /// Total DC power drawn by the four switches (W) — Table II input.
+    pub fn dc_power(&self) -> f64 {
+        self.theta_ps.dc_power() + self.phi_ps.dc_power()
+    }
+
+    /// Phase-shifter 2-port with length imperfection folded in: we emulate
+    /// an etched-length error by adding the corresponding extra electrical
+    /// delay (and its microscopic loss) as a short line section.
+    fn ps_sparams(&self, ps: &SwitchedLinePhaseShifter, err: f64, f: f64, state: usize) -> SMatrix {
+        let s = ps.sparams(f, state);
+        if err == 0.0 {
+            return s;
+        }
+        let dl = ps.path_length(state) * err;
+        let extra = Microstrip { length: dl.abs(), ..self.ref_arm };
+        let phase = extra.beta(f) * dl; // signed
+        let amp = (-extra.alpha(f) * dl.abs()).exp();
+        SMatrix::cascade(&s, &SMatrix::line(phase, amp))
+    }
+
+    /// Full 4-port S-matrix, ports ordered (P1, P2, P3, P4), at frequency
+    /// `f` and device state `st`.
+    pub fn sparams(&self, f: f64, st: State) -> SMatrix {
+        let mut h_s = self.hybrid.sparams(f);
+        if self.imp.hybrid_gain_err != 0.0 {
+            let g = 1.0 + self.imp.hybrid_gain_err;
+            h_s = SMatrix::new(h_s.mat().scale(crate::math::c64::C64::real(g)));
+        }
+        let theta_s = self.ps_sparams(&self.theta_ps, self.imp.theta_len_err[st.theta], f, st.theta);
+        let phi_s = self.ps_sparams(&self.phi_ps, self.imp.phi_len_err[st.phi], f, st.phi);
+        // Reference arm: plain line + balancing pad (+ imbalance knob). The
+        // pad also carries the θ-shifter's static switch-path phase so the
+        // differential phase between the arms is exactly Table I at f0 —
+        // the prototype's reference trace is length-trimmed the same way.
+        let ref_gain = self.ref_pad * if self.imp.ref_arm_gain == 0.0 { 1.0 } else { self.imp.ref_arm_gain };
+        let switch_static = 2.0 * self.theta_ps.switch.path_phase * (f / F0);
+        let arm = {
+            let line = self.ref_arm.sparams(f, Z0);
+            SMatrix::cascade(&line, &SMatrix::line(switch_static, ref_gain))
+        };
+        let out3 = self.out_trace.sparams(f, Z0);
+
+        let mut nl = Netlist::new();
+        let h1 = nl.add(h_s.clone());
+        let h2 = nl.add(h_s);
+        let tps = nl.add(theta_s);
+        let rarm = nl.add(arm);
+        let pps = nl.add(phi_s);
+        let otr = nl.add(out3);
+        // Paper port convention (0-based locals): hybrid 0=P1-side in,
+        // 1=through out, 2=coupled out, 3=P4-side in.
+        nl.join(h1, 1, tps, 0); // θ arm
+        nl.join(tps, 1, h2, 0);
+        nl.join(h1, 2, rarm, 0); // reference arm
+        nl.join(rarm, 1, h2, 3);
+        nl.join(h2, 1, pps, 0); // φ shifter on P2
+        nl.join(h2, 2, otr, 0); // plain trace on P3
+        nl.reduce(&[
+            PortRef { net: h1, port: 0 },  // P1
+            PortRef { net: pps, port: 1 }, // P2
+            PortRef { net: otr, port: 1 }, // P3
+            PortRef { net: h1, port: 3 },  // P4
+        ])
+    }
+
+    /// The forward 2×2 transfer block `[[S21, S24], [S31, S34]]` at `f`.
+    pub fn t_block(&self, f: f64, st: State) -> crate::math::cmat::CMat {
+        let s = self.sparams(f, st);
+        crate::math::cmat::CMat::from_rows(
+            2,
+            2,
+            &[s.s(1, 0), s.s(1, 3), s.s(2, 0), s.s(2, 3)],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ideal;
+    use crate::math::deg;
+    use crate::microwave::phase_shifter::TABLE_I_DEG;
+
+    fn cell() -> UnitCellCircuit {
+        UnitCellCircuit::prototype()
+    }
+
+    #[test]
+    fn passive_and_reciprocal_all_states() {
+        let c = cell();
+        for st in [State { theta: 0, phi: 0 }, State { theta: 3, phi: 5 }, State { theta: 5, phi: 2 }] {
+            let s = c.sparams(F0, st);
+            assert!(s.is_passive(1e-6), "{}", st.label());
+            assert!(s.is_reciprocal(1e-9), "{}", st.label());
+        }
+    }
+
+    #[test]
+    fn magnitudes_track_ideal_theta_dependence() {
+        // Fig. 6's claim: |S21| etc. follow sin/cos(θ/2) with extra loss.
+        let c = cell();
+        for (n, &th_deg) in TABLE_I_DEG.iter().enumerate() {
+            let st = State { theta: n, phi: 0 };
+            let s = c.sparams(F0, st);
+            let (i21, i31, ..) = ideal::s_params(deg(th_deg), 0.0);
+            // Circuit magnitudes = ideal × overall insertion loss (≈3–5 dB).
+            let loss21 = s.s(1, 0).abs() / i21.abs().max(1e-9);
+            let loss31 = s.s(2, 0).abs() / i31.abs().max(1e-9);
+            assert!(
+                (0.3..1.0).contains(&loss21),
+                "state {n}: |S21| ratio {loss21} (circ {} ideal {})",
+                s.s(1, 0).abs(),
+                i21.abs()
+            );
+            assert!((0.3..1.0).contains(&loss31), "state {n}: |S31| ratio {loss31}");
+        }
+    }
+
+    #[test]
+    fn theta_states_move_power_from_cross_to_bar() {
+        let c = cell();
+        // As θ grows (L1→L6), |S21| (bar-ish) grows and |S31| shrinks.
+        let m = |n: usize| {
+            let s = c.sparams(F0, State { theta: n, phi: 0 });
+            (s.s(1, 0).abs(), s.s(2, 0).abs())
+        };
+        let (s21_l1, s31_l1) = m(0);
+        let (s21_l6, s31_l6) = m(5);
+        assert!(s21_l6 > s21_l1, "S21 should increase L1→L6: {s21_l1} → {s21_l6}");
+        assert!(s31_l6 < s31_l1, "S31 should decrease L1→L6: {s31_l1} → {s31_l6}");
+    }
+
+    #[test]
+    fn phi_changes_port2_phase_not_magnitudes() {
+        let c = cell();
+        let a = c.sparams(F0, State { theta: 2, phi: 0 });
+        let b = c.sparams(F0, State { theta: 2, phi: 4 });
+        assert!((a.s(1, 0).abs() - b.s(1, 0).abs()).abs() < 0.02);
+        // |S31| is only *nearly* φ-independent in the circuit model: the φ
+        // shifter's finite return loss re-enters hybrid B and leaks to P3.
+        assert!((a.s(2, 0).abs() - b.s(2, 0).abs()).abs() < 0.01);
+        let dphi = crate::math::wrap_angle(b.s(1, 0).arg() - a.s(1, 0).arg());
+        // φ L1→L5: expected extra delay = 135° − 29° = 106° (sign negative).
+        assert!(
+            (dphi.to_degrees() + (TABLE_I_DEG[4] - TABLE_I_DEG[0])).abs() < 8.0,
+            "Δφ = {}°",
+            dphi.to_degrees()
+        );
+    }
+
+    #[test]
+    fn ports_are_matched_at_f0() {
+        let c = cell();
+        let s = c.sparams(F0, State { theta: 0, phi: 0 });
+        for p in 0..4 {
+            let rl = -20.0 * s.s(p, p).abs().log10();
+            assert!(rl > 10.0, "port {p} return loss {rl} dB");
+        }
+    }
+
+    #[test]
+    fn response_degrades_off_center() {
+        let c = cell();
+        let st = State { theta: 2, phi: 0 };
+        let at = |f: f64| c.sparams(f, st).s(0, 0).abs();
+        assert!(at(1.5e9) > 2.0 * at(F0), "S11 {} vs {}", at(1.5e9), at(F0));
+    }
+
+    #[test]
+    fn imperfections_shift_response() {
+        let nominal = cell().sparams(F0, State { theta: 1, phi: 1 });
+        let mut imp = Imperfections { ref_arm_gain: 0.95, ..Default::default() };
+        imp.theta_len_err[1] = 0.02;
+        let pert = cell().with_imperfections(imp).sparams(F0, State { theta: 1, phi: 1 });
+        let d = nominal.mat().sub(pert.mat()).max_abs();
+        assert!(d > 1e-3, "imperfections must visibly change S ({d})");
+        assert!(d < 0.3, "but not unrecognizably ({d})");
+    }
+}

@@ -1,0 +1,184 @@
+//! Ideal (lossless, single-frequency) unit-cell model — eqs. (5)–(17).
+
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::microwave::Z0;
+
+/// The 2×2 transfer matrix `t(θ, φ)` of eq. (5), mapping incident voltages
+/// `(V1+, V4+)` to outgoing `(V2−, V3−)`:
+///
+/// `t = j·e^{-jθ/2} · [[e^{-jφ}·sin(θ/2), e^{-jφ}·cos(θ/2)],
+///                     [cos(θ/2),         −sin(θ/2)]]`
+pub fn t_matrix(theta: f64, phi: f64) -> CMat {
+    let c = C64::J * C64::cis(-theta / 2.0);
+    let (s, co) = ((theta / 2.0).sin(), (theta / 2.0).cos());
+    let ph = C64::cis(-phi);
+    CMat::from_rows(
+        2,
+        2,
+        &[c * ph * s, c * ph * co, c * co, c * (-s)],
+    )
+}
+
+/// The four device S-parameters of eqs. (6)–(9):
+/// `(S21, S31, S24, S34)`.
+pub fn s_params(theta: f64, phi: f64) -> (C64, C64, C64, C64) {
+    let t = t_matrix(theta, phi);
+    (t[(0, 0)], t[(1, 0)], t[(0, 1)], t[(1, 1)])
+}
+
+/// Ideal 4-port S-matrix of the device, ports ordered (P1, P2, P3, P4).
+/// Inputs are matched and mutually isolated (the hybrids absorb nothing in
+/// the ideal limit); the output-side 2×2 block is `t(θ, φ)`.
+pub fn s4(theta: f64, phi: f64) -> crate::microwave::sparams::SMatrix {
+    let t = t_matrix(theta, phi);
+    let mut m = CMat::zeros(4, 4);
+    // forward: column P1 → rows P2, P3 ; column P4 → rows P2, P3
+    m[(1, 0)] = t[(0, 0)];
+    m[(2, 0)] = t[(1, 0)];
+    m[(1, 3)] = t[(0, 1)];
+    m[(2, 3)] = t[(1, 1)];
+    // reciprocity
+    m[(0, 1)] = t[(0, 0)];
+    m[(0, 2)] = t[(1, 0)];
+    m[(3, 1)] = t[(0, 1)];
+    m[(3, 2)] = t[(1, 1)];
+    crate::microwave::sparams::SMatrix::new(m)
+}
+
+/// Voltage magnitudes at P2/P3 from each input — eqs. (10)–(13).
+/// `p1_w`, `p4_w` are input powers in watts; returns `(V21, V31, V24, V34)`
+/// as complex voltages (the paper plots their magnitudes in Fig. 3c).
+pub fn voltage_transfer(theta: f64, phi: f64, p1_w: f64, p4_w: f64) -> (C64, C64, C64, C64) {
+    let (s21, s31, s24, s34) = s_params(theta, phi);
+    let v1 = (2.0 * Z0 * p1_w).sqrt();
+    let v4 = (2.0 * Z0 * p4_w).sqrt();
+    (s21 * v1, s31 * v1, s24 * v4, s34 * v4)
+}
+
+/// Output powers at P2/P3 for in-phase inputs — eqs. (14)–(17).
+/// Returns `(P2, P3)` in watts.
+pub fn power_transfer(theta: f64, phi: f64, p1_w: f64, p4_w: f64) -> (f64, f64) {
+    let (v21, v31, v24, v34) = voltage_transfer(theta, phi, p1_w, p4_w);
+    let p2 = (v21 + v24).norm_sqr() / (2.0 * Z0);
+    let p3 = (v31 + v34).norm_sqr() / (2.0 * Z0);
+    (p2, p3)
+}
+
+/// Closed-form eq. (16)–(17) for cross-checking `power_transfer`:
+/// `P2 = (P1+P4)·sin²(θ/2 + Δ)`, `P3 = (P1+P4)·cos²(θ/2 + Δ)`,
+/// `Δ = acos(√P1/√(P1+P4))`.
+pub fn power_transfer_closed_form(theta: f64, p1_w: f64, p4_w: f64) -> (f64, f64) {
+    let total = p1_w + p4_w;
+    let delta = (p1_w.sqrt() / total.sqrt()).acos();
+    let p2 = total * (theta / 2.0 + delta).sin().powi(2);
+    let p3 = total * (theta / 2.0 + delta).cos().powi(2);
+    (p2, p3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::deg;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn t_is_unitary_everywhere() {
+        for k in 0..24 {
+            let th = k as f64 * PI / 6.0;
+            let ph = k as f64 * 0.3;
+            assert!(t_matrix(th, ph).is_unitary(1e-12), "θ={th} φ={ph}");
+        }
+    }
+
+    #[test]
+    fn cross_state_at_theta_zero() {
+        // θ=0: |S21|=0, |S31|=1 (all power crosses).
+        let (s21, s31, _, s34) = s_params(0.0, 0.0);
+        assert!(s21.abs() < 1e-12);
+        assert!((s31.abs() - 1.0).abs() < 1e-12);
+        assert!(s34.abs() < 1e-12);
+    }
+
+    #[test]
+    fn bar_state_at_theta_pi() {
+        // θ=π: |S21|=1, |S31|=0 (bar state).
+        let (s21, s31, s24, _) = s_params(PI, 0.0);
+        assert!((s21.abs() - 1.0).abs() < 1e-12);
+        assert!(s31.abs() < 1e-12);
+        assert!(s24.abs() < 1e-12);
+    }
+
+    #[test]
+    fn phi_only_phases_port2_row() {
+        let (a21, a31, a24, a34) = s_params(1.1, 0.0);
+        let (b21, b31, b24, b34) = s_params(1.1, 0.8);
+        // magnitudes unchanged
+        assert!((a21.abs() - b21.abs()).abs() < 1e-12);
+        assert!((a24.abs() - b24.abs()).abs() < 1e-12);
+        // port-2 row picks up exactly e^{-jφ}
+        assert!((b21 / a21 - C64::cis(-0.8)).abs() < 1e-12);
+        assert!((b24 / a24 - C64::cis(-0.8)).abs() < 1e-12);
+        // port-3 row untouched
+        assert!((a31 - b31).abs() < 1e-12);
+        assert!((a34 - b34).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_to_9_forms() {
+        let (theta, phi) = (deg(104.0), deg(53.0));
+        let c = C64::J * C64::cis(-theta / 2.0);
+        let (s21, s31, s24, s34) = s_params(theta, phi);
+        assert!((s21 - c * C64::cis(-phi) * (theta / 2.0).sin()).abs() < 1e-12);
+        assert!((s31 - c * (theta / 2.0).cos()).abs() < 1e-12);
+        assert!((s24 - c * C64::cis(-phi) * (theta / 2.0).cos()).abs() < 1e-12);
+        assert!((s34 + c * (theta / 2.0).sin()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_conserved() {
+        let (p2, p3) = power_transfer(1.3, 0.4, 0.5e-3, 1.5e-3);
+        assert!((p2 + p3 - 2.0e-3).abs() < 1e-12, "p2+p3 = {}", p2 + p3);
+    }
+
+    #[test]
+    fn power_matches_closed_form_eq16_17() {
+        // Paper's Fig. 3(d) setup: P1 = 0.5 mW, P4 = 1.5 mW, in phase.
+        for k in 0..36 {
+            let th = k as f64 * 2.0 * PI / 36.0;
+            let (p2, p3) = power_transfer(th, 0.0, 0.5e-3, 1.5e-3);
+            let (c2, c3) = power_transfer_closed_form(th, 0.5e-3, 1.5e-3);
+            assert!((p2 - c2).abs() < 1e-9, "θ={th}: {p2} vs {c2}");
+            assert!((p3 - c3).abs() < 1e-9, "θ={th}: {p3} vs {c3}");
+        }
+    }
+
+    #[test]
+    fn fig3d_extremes() {
+        // With P1=0.5, P4=1.5 mW: max P2 = P1+P4 = 2 mW when θ/2+Δ = π/2.
+        let total: f64 = 2.0e-3;
+        let delta = ((0.5e-3f64).sqrt() / total.sqrt()).acos();
+        let th_max = 2.0 * (PI / 2.0 - delta);
+        let (p2, p3) = power_transfer(th_max, 0.0, 0.5e-3, 1.5e-3);
+        assert!((p2 - total).abs() < 1e-9);
+        assert!(p3.abs() < 1e-9);
+    }
+
+    #[test]
+    fn s4_reciprocal_and_forward_block_matches_t() {
+        let s = s4(0.9, 0.3);
+        assert!(s.is_reciprocal(1e-12));
+        let t = t_matrix(0.9, 0.3);
+        assert_eq!(s.s(1, 0), t[(0, 0)]);
+        assert_eq!(s.s(2, 0), t[(1, 0)]);
+        assert_eq!(s.s(1, 3), t[(0, 1)]);
+        assert_eq!(s.s(2, 3), t[(1, 1)]);
+    }
+
+    #[test]
+    fn voltage_transfer_scales_with_sqrt_power() {
+        let (v21a, ..) = voltage_transfer(1.0, 0.0, 1.0e-3, 1.0e-3);
+        let (v21b, ..) = voltage_transfer(1.0, 0.0, 4.0e-3, 1.0e-3);
+        assert!((v21b.abs() / v21a.abs() - 2.0).abs() < 1e-12);
+    }
+}

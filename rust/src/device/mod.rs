@@ -1,0 +1,61 @@
+//! The paper's 2×2 reconfigurable linear RF analog processor (unit cell).
+//!
+//! Three fidelity levels, matching the paper's "theory / simulation /
+//! measurement" triptych (Fig. 6):
+//!
+//! * [`ideal`] — closed-form eq. (5): `t(θ, φ) = j·e^{-jθ/2} ·
+//!   [[e^{-jφ}·sin(θ/2), e^{-jφ}·cos(θ/2)], [cos(θ/2), −sin(θ/2)]]`.
+//! * [`circuit`] — physical branch-line hybrids + switched-line phase
+//!   shifters on RO4360G2, assembled with the netlist reducer; produces the
+//!   frequency responses of Fig. 5 ("simulation").
+//! * [`vna`] — the circuit model with seeded fabrication perturbations and
+//!   measurement noise — the stand-in for the paper's measured prototype
+//!   ("measurement"). See DESIGN.md §2 for the substitution argument.
+//! * [`testbench`] — power-domain excitation/detection used by the RFNN
+//!   experiments (Figs. 10–12): feed voltage magnitudes into P1/P4, read
+//!   detected power at P2/P3.
+
+pub mod activation;
+pub mod circuit;
+pub mod ideal;
+pub mod testbench;
+pub mod vna;
+
+/// A device state: which of the six paths each phase shifter selects.
+/// `L_nL_m` in the paper's notation is `State { theta: n-1, phi: m-1 }`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct State {
+    /// θ phase-shifter path index, 0..6 (paper's L1..L6).
+    pub theta: usize,
+    /// φ phase-shifter path index, 0..6.
+    pub phi: usize,
+}
+
+impl State {
+    /// All 36 states in row-major (θ-major) order.
+    pub fn all() -> impl Iterator<Item = State> {
+        (0..super::microwave::phase_shifter::N_STATES).flat_map(|t| {
+            (0..super::microwave::phase_shifter::N_STATES).map(move |p| State { theta: t, phi: p })
+        })
+    }
+
+    /// Paper-style label, e.g. `L3L6`.
+    pub fn label(&self) -> String {
+        format!("L{}L{}", self.theta + 1, self.phi + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirty_six_states() {
+        assert_eq!(State::all().count(), 36);
+    }
+
+    #[test]
+    fn labels_are_one_based() {
+        assert_eq!(State { theta: 0, phi: 5 }.label(), "L1L6");
+    }
+}

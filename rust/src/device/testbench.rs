@@ -1,0 +1,168 @@
+//! Power-domain test bench — the experiment rig of Figs. 10–12.
+//!
+//! "Feed RF power into ports P1 and P4, measure output power at P2 and P3":
+//! inputs are *voltage magnitudes* (in-phase excitation), outputs are
+//! detected powers with a realistic detector noise floor. This is the
+//! analog forward pass the RFNN training loop sees — a physical S-matrix
+//! application, never a weight lookup.
+
+use super::State;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::rng::Rng;
+use crate::microwave::Z0;
+
+/// RF power-detector model.
+#[derive(Clone, Copy, Debug)]
+pub struct Detector {
+    /// Noise floor (W). Paper §V quotes −60 dBm sensitivity → 1e-9 mW.
+    pub floor_w: f64,
+    /// Relative measurement noise (σ, fraction of reading).
+    pub rel_noise: f64,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Detector { floor_w: 1e-12, rel_noise: 0.002 }
+    }
+}
+
+/// A measurement rig around any 2×2 forward transfer block provider.
+#[derive(Clone, Debug)]
+pub struct TestBench<F: Fn(State) -> CMat> {
+    /// Maps device state → forward transfer block `[[S21,S24],[S31,S34]]`.
+    pub transfer: F,
+    pub detector: Detector,
+    /// Seed for detector noise (0 → noiseless).
+    pub seed: u64,
+}
+
+impl<F: Fn(State) -> CMat> TestBench<F> {
+    /// Create a bench with the default detector.
+    pub fn new(transfer: F, seed: u64) -> Self {
+        TestBench { transfer, detector: Detector::default(), seed }
+    }
+
+    /// Excite with in-phase voltage magnitudes `(v1, v4)` (volts) in state
+    /// `st`; return detected powers `(p2, p3)` in watts.
+    pub fn measure_powers(&self, st: State, v1: f64, v4: f64) -> (f64, f64) {
+        let t = (self.transfer)(st);
+        let vin = [C64::real(v1), C64::real(v4)];
+        let vout = t.matvec(&vin);
+        let p2 = vout[0].norm_sqr() / (2.0 * Z0);
+        let p3 = vout[1].norm_sqr() / (2.0 * Z0);
+        if self.seed == 0 {
+            return (p2, p3);
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ v1.to_bits().rotate_left(7)
+                ^ v4.to_bits().rotate_left(31)
+                ^ ((st.theta as u64) << 16 | st.phi as u64),
+        );
+        let noisy = |p: f64, r: &mut Rng| {
+            (p * (1.0 + self.detector.rel_noise * r.normal()) + self.detector.floor_w * r.uniform())
+                .max(0.0)
+        };
+        (noisy(p2, &mut rng), noisy(p3, &mut rng))
+    }
+
+    /// Detected output *voltage magnitudes* `(|v2|, |v3|)` (volts) — what
+    /// the RFNN hidden layer consumes (the abs(·) activation, eq. 20).
+    pub fn measure_voltages(&self, st: State, v1: f64, v4: f64) -> (f64, f64) {
+        let (p2, p3) = self.measure_powers(st, v1, v4);
+        ((2.0 * Z0 * p2).sqrt(), (2.0 * Z0 * p3).sqrt())
+    }
+
+    /// Sweep the full input space on an `n×n` grid over `[0, vmax]²`
+    /// (the paper uses 11×11, 0–1 V) — returns row-major `(v2, v3)` grids
+    /// indexed `[i_v1][j_v4]`.
+    pub fn grid_sweep(&self, st: State, vmax: f64, n: usize) -> Vec<Vec<(f64, f64)>> {
+        (0..n)
+            .map(|i| {
+                let v1 = vmax * i as f64 / (n - 1) as f64;
+                (0..n)
+                    .map(|j| {
+                        let v4 = vmax * j as f64 / (n - 1) as f64;
+                        self.measure_voltages(st, v1, v4)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ideal;
+    use crate::device::vna::MeasuredUnitCell;
+
+    fn ideal_bench(theta: f64, phi: f64) -> TestBench<impl Fn(State) -> CMat> {
+        TestBench::new(move |_st| ideal::t_matrix(theta, phi), 0)
+    }
+
+    #[test]
+    fn noiseless_matches_eq16() {
+        let b = ideal_bench(1.1, 0.0);
+        // v = sqrt(2 Z0 P): P1 = 0.5 mW, P4 = 1.5 mW.
+        let v1 = (2.0f64 * Z0 * 0.5e-3).sqrt();
+        let v4 = (2.0f64 * Z0 * 1.5e-3).sqrt();
+        let (p2, p3) = b.measure_powers(State { theta: 0, phi: 0 }, v1, v4);
+        let (c2, c3) = ideal::power_transfer_closed_form(1.1, 0.5e-3, 1.5e-3);
+        assert!((p2 - c2).abs() < 1e-12);
+        assert!((p3 - c3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn voltages_are_abs_of_complex_sum() {
+        let b = ideal_bench(0.8, 0.5);
+        let (v2, v3) = b.measure_voltages(State { theta: 0, phi: 0 }, 0.3, 0.7);
+        let t = ideal::t_matrix(0.8, 0.5);
+        let out = t.matvec(&[C64::real(0.3), C64::real(0.7)]);
+        assert!((v2 - out[0].abs()).abs() < 1e-12);
+        assert!((v3 - out[1].abs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let dev = MeasuredUnitCell::fabricate(11);
+        let b = TestBench::new(move |st| dev.t_block(st), 42);
+        let a = b.measure_powers(State { theta: 1, phi: 0 }, 0.5, 0.5);
+        let c = b.measure_powers(State { theta: 1, phi: 0 }, 0.5, 0.5);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn grid_sweep_shape_and_monotonicity() {
+        let b = ideal_bench(1.0, 0.0);
+        let g = b.grid_sweep(State { theta: 0, phi: 0 }, 1.0, 11);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0].len(), 11);
+        // More input power → more total output power.
+        let p = |v: (f64, f64)| v.0 * v.0 + v.1 * v.1;
+        assert!(p(g[10][10]) > p(g[5][5]));
+        assert!(p(g[0][0]) < 1e-18);
+    }
+
+    #[test]
+    fn detector_floor_bounds_small_signals() {
+        let dev = MeasuredUnitCell::fabricate(12);
+        let b = TestBench::new(move |st| dev.t_block(st), 9);
+        let (p2, p3) = b.measure_powers(State { theta: 0, phi: 0 }, 0.0, 0.0);
+        assert!(p2 >= 0.0 && p3 >= 0.0);
+        assert!(p2 < 2.0 * b.detector.floor_w && p3 < 2.0 * b.detector.floor_w);
+    }
+
+    #[test]
+    fn power_conservation_under_measured_device() {
+        // A passive measured device never outputs more power than input.
+        let dev = MeasuredUnitCell::fabricate(13);
+        let b = TestBench::new(move |st| dev.t_block(st), 0);
+        for st in State::all() {
+            let (p2, p3) = b.measure_powers(st, 0.5, 0.8);
+            let pin = (0.5f64 * 0.5 + 0.8 * 0.8) / (2.0 * Z0);
+            assert!(p2 + p3 <= pin * 1.01, "{}: {} > {}", st.label(), p2 + p3, pin);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! # rfnn — Reconfigurable Linear RF Analog Processor & Microwave Neural Network
+//!
+//! Reproduction of *"A Reconfigurable Linear RF Analog Processor for Realizing
+//! Microwave Artificial Neural Network"* (Zhu, Kuo & Wu, IEEE TMTT 2023,
+//! doi:10.1109/TMTT.2023.3293054).
+//!
+//! The library is organized bottom-up:
+//!
+//! * [`math`] — complex arithmetic, small dense complex linear algebra, RNG,
+//!   numerical utilities (no external deps; the build is fully offline).
+//! * [`microwave`] — RF network substrate: S-parameter algebra, ABCD two-port
+//!   theory, microstrip transmission-line models, quadrature (branch-line)
+//!   hybrids, switched-line discrete phase shifters, Touchstone I/O.
+//! * [`device`] — the paper's 2×2 unit cell: ideal analytic model (eqs. 5–9),
+//!   a frequency-dependent circuit-level model, and a "virtual VNA" that
+//!   produces synthetic *measured* S-parameters with fabrication imperfection
+//!   and noise (substitute for the paper's hardware prototype).
+//! * [`mesh`] — N×N linear processor synthesis: rotation decomposition
+//!   (eqs. 27–30), SVD-based arbitrary-matrix synthesis, discrete-state
+//!   quantization, and lossy mesh simulation built from unit-cell S-params.
+//! * [`nn`] — neural-network substrate: tensors, layers, losses, SGD,
+//!   DSPSA (Algorithm I), and the paper's 2×2 and 4-layer MNIST RFNN models.
+//! * [`dataset`] — the four Fig. 12 synthetic 2-D classification sets, an
+//!   MNIST IDX loader and a procedural MNIST-like fallback generator.
+//! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts produced by
+//!   `python/compile/aot.py` and executes them on the request path.
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   device-state scheduler, and metrics.
+//! * [`bench`] — the paper-experiment harness regenerating every table/figure.
+//! * [`cli`] — hand-rolled argument parsing for the `rfnn` binary.
+//! * [`testing`] — in-repo property-testing toolkit (offline substitute for
+//!   `proptest`).
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod device;
+pub mod mesh;
+pub mod math;
+pub mod microwave;
+pub mod nn;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+pub use math::c64::C64;
+pub use math::cmat::CMat;

@@ -1,0 +1,362 @@
+//! Dense complex matrices and vectors (row-major, `C64` elements).
+//!
+//! Sized for the paper's workloads: S-parameter blocks (2–8 ports), mesh
+//! unitaries (N ≤ 32), and small NN layers. Not a general BLAS — clarity and
+//! testability first; the `bench::perf` pass optimizes the few hot kernels
+//! that matter (mesh propagation) separately.
+
+use super::c64::C64;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense, row-major complex matrix.
+#[derive(Clone, PartialEq)]
+pub struct CMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<C64>,
+}
+
+impl CMat {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMat { rows, cols, data: vec![C64::ZERO; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = C64::ONE;
+        }
+        m
+    }
+
+    /// Build from a row-major slice of `C64`.
+    pub fn from_rows(rows: usize, cols: usize, data: &[C64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        CMat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build from real row-major data.
+    pub fn from_real(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        CMat { rows, cols, data: data.iter().map(|&x| C64::real(x)).collect() }
+    }
+
+    /// Build by evaluating `f(i, j)` at every entry.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> C64) -> Self {
+        let mut m = CMat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[C64]) -> Self {
+        let mut m = CMat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[C64] {
+        &self.data
+    }
+
+    /// Mutable raw row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [C64] {
+        &mut self.data
+    }
+
+    /// A view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[C64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<C64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Matrix transpose.
+    pub fn transpose(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Conjugate (Hermitian) transpose.
+    pub fn hermitian(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self[(j, i)].conj())
+    }
+
+    /// Elementwise conjugate.
+    pub fn conj(&self) -> CMat {
+        CMat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|z| z.conj()).collect() }
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch: {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = CMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == C64::ZERO {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    /// Sum of two matrices.
+    pub fn add(&self, other: &CMat) -> CMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| a + b).collect(),
+        }
+    }
+
+    /// Difference of two matrices.
+    pub fn sub(&self, other: &CMat) -> CMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| a - b).collect(),
+        }
+    }
+
+    /// Scale by a complex scalar.
+    pub fn scale(&self, s: C64) -> CMat {
+        CMat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&z| z * s).collect() }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|z| z.abs()).fold(0.0, f64::max)
+    }
+
+    /// `true` if `self * self^H ≈ I` within `tol` (unitarity check, eq. 18).
+    pub fn is_unitary(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        let prod = self.matmul(&self.hermitian());
+        prod.sub(&CMat::eye(self.rows)).max_abs() < tol
+    }
+
+    /// `true` if all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|z| z.is_finite())
+    }
+
+    /// Extract the submatrix at rows `r0..r0+h`, cols `c0..c0+w`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> CMat {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols);
+        CMat::from_fn(h, w, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Write `m` into `self` at offset `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, m: &CMat) {
+        assert!(r0 + m.rows <= self.rows && c0 + m.cols <= self.cols);
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                self[(r0 + i, c0 + j)] = m[(i, j)];
+            }
+        }
+    }
+
+    /// Embed a 2×2 matrix into an `n×n` identity at channels `(p, q)` —
+    /// the rotation-matrix structure of eq. (29).
+    pub fn embed_2x2(n: usize, p: usize, q: usize, t: &CMat) -> CMat {
+        assert_eq!((t.rows, t.cols), (2, 2));
+        assert!(p < q && q < n, "need p < q < n, got p={p} q={q} n={n}");
+        let mut m = CMat::eye(n);
+        m[(p, p)] = t[(0, 0)];
+        m[(p, q)] = t[(0, 1)];
+        m[(q, p)] = t[(1, 0)];
+        m[(q, q)] = t[(1, 1)];
+        m
+    }
+}
+
+impl Index<(usize, usize)> for CMat {
+    type Output = C64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &C64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for CMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut C64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for CMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "CMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  ")?;
+            for j in 0..self.cols {
+                write!(f, "{:?}  ", self[(i, j)])?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &CMat, b: &CMat, tol: f64) -> bool {
+        a.sub(b).max_abs() < tol
+    }
+
+    #[test]
+    fn identity_is_matmul_neutral() {
+        let a = CMat::from_real(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(approx(&a.matmul(&CMat::eye(2)), &a, 1e-15));
+        assert!(approx(&CMat::eye(2).matmul(&a), &a, 1e-15));
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = CMat::from_real(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = CMat::from_real(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        let expect = CMat::from_real(2, 2, &[58.0, 64.0, 139.0, 154.0]);
+        assert!(approx(&c, &expect, 1e-12));
+    }
+
+    #[test]
+    fn complex_matmul_uses_complex_arithmetic() {
+        // [j] * [j] = [-1]
+        let j = CMat::from_rows(1, 1, &[C64::J]);
+        let c = j.matmul(&j);
+        assert!((c[(0, 0)] + C64::ONE).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hermitian_conjugates_and_transposes() {
+        let a = CMat::from_rows(1, 2, &[C64::new(1.0, 2.0), C64::new(3.0, -4.0)]);
+        let h = a.hermitian();
+        assert_eq!((h.rows(), h.cols()), (2, 1));
+        assert_eq!(h[(0, 0)], C64::new(1.0, -2.0));
+        assert_eq!(h[(1, 0)], C64::new(3.0, 4.0));
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = CMat::from_real(3, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 10.0]);
+        let x = vec![C64::real(1.0), C64::real(-1.0), C64::real(2.0)];
+        let y = a.matvec(&x);
+        let xm = CMat::from_rows(3, 1, &x);
+        let ym = a.matmul(&xm);
+        for i in 0..3 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn unitary_check_accepts_rotation() {
+        let th = 0.7f64;
+        let u = CMat::from_rows(
+            2,
+            2,
+            &[
+                C64::real(th.cos()),
+                C64::real(-th.sin()),
+                C64::real(th.sin()),
+                C64::real(th.cos()),
+            ],
+        );
+        assert!(u.is_unitary(1e-12));
+    }
+
+    #[test]
+    fn unitary_check_rejects_scaled() {
+        let u = CMat::eye(3).scale(C64::real(1.1));
+        assert!(!u.is_unitary(1e-6));
+    }
+
+    #[test]
+    fn embed_2x2_structure() {
+        let t = CMat::from_rows(2, 2, &[C64::new(0.0, 1.0), C64::real(2.0), C64::real(3.0), C64::new(4.0, -1.0)]);
+        let m = CMat::embed_2x2(4, 1, 2, &t);
+        assert_eq!(m[(0, 0)], C64::ONE);
+        assert_eq!(m[(3, 3)], C64::ONE);
+        assert_eq!(m[(1, 1)], t[(0, 0)]);
+        assert_eq!(m[(1, 2)], t[(0, 1)]);
+        assert_eq!(m[(2, 1)], t[(1, 0)]);
+        assert_eq!(m[(2, 2)], t[(1, 1)]);
+        assert_eq!(m[(0, 1)], C64::ZERO);
+    }
+
+    #[test]
+    fn block_round_trip() {
+        let a = CMat::from_fn(4, 4, |i, j| C64::new(i as f64, j as f64));
+        let b = a.block(1, 2, 2, 2);
+        let mut c = CMat::zeros(4, 4);
+        c.set_block(1, 2, &b);
+        assert_eq!(c[(1, 2)], a[(1, 2)]);
+        assert_eq!(c[(2, 3)], a[(2, 3)]);
+        assert_eq!(c[(0, 0)], C64::ZERO);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let a = CMat::from_real(1, 2, &[3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-14);
+    }
+}

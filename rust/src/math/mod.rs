@@ -1,0 +1,61 @@
+//! Numerical substrate: complex arithmetic, dense complex linear algebra,
+//! SVD, deterministic RNG, and misc numerical helpers. Everything is
+//! implemented in-repo because the build environment is fully offline.
+
+pub mod c64;
+pub mod cmat;
+pub mod rng;
+pub mod svd;
+
+/// Wrap an angle to `(-pi, pi]`.
+pub fn wrap_angle(mut a: f64) -> f64 {
+    use std::f64::consts::PI;
+    while a > PI {
+        a -= 2.0 * PI;
+    }
+    while a <= -PI {
+        a += 2.0 * PI;
+    }
+    a
+}
+
+/// Degrees → radians.
+#[inline]
+pub fn deg(d: f64) -> f64 {
+    d.to_radians()
+}
+
+/// Decibels → linear voltage ratio.
+#[inline]
+pub fn db_to_mag(db: f64) -> f64 {
+    10f64.powf(db / 20.0)
+}
+
+/// Linear voltage ratio → decibels.
+#[inline]
+pub fn mag_to_db(mag: f64) -> f64 {
+    20.0 * mag.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn wrap_angle_range() {
+        for k in -10..10 {
+            let a = wrap_angle(0.3 + k as f64 * 2.0 * PI);
+            assert!((a - 0.3).abs() < 1e-9);
+        }
+        assert!((wrap_angle(PI) - PI).abs() < 1e-15);
+        assert!((wrap_angle(-PI) - PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn db_round_trip() {
+        for &db in &[-30.0, -3.0, 0.0, 6.0] {
+            assert!((mag_to_db(db_to_mag(db)) - db).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Rotation decomposition (eqs. 27–30) and SVD synthesis (eq. 31).
+//!
+//! Any N×N unitary `U` factors as `U = T_1·T_2⋯T_S·D^H` with
+//! `S = N(N−1)/2`, where each `T_k` embeds one unit-cell matrix
+//! `t(θ_k, φ_k)` (eq. 5) on an adjacent channel pair and `D` is a diagonal
+//! phase layer. The factors are found by progressively nulling `U^H` with
+//! right-multiplied cell matrices (the Reck procedure the paper cites
+//! [45]). Signal-flow realization: input phases `D^H`, then cells
+//! `T_S … T_1` in mesh order.
+
+use super::topology::MeshTopology;
+use crate::device::ideal::t_matrix;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::svd::svd;
+use std::f64::consts::PI;
+
+/// One programmed unit cell: channel pair + continuous phases.
+#[derive(Clone, Copy, Debug)]
+pub struct CellSetting {
+    /// Upper channel (cell crosses `p` and `q = p+1`).
+    pub p: usize,
+    pub q: usize,
+    /// Internal phase θ (radians) — power-splitting control.
+    pub theta: f64,
+    /// Output phase φ (radians).
+    pub phi: f64,
+}
+
+/// A fully programmed mesh: input phase layer + cells in signal-flow order.
+#[derive(Clone, Debug)]
+pub struct MeshProgram {
+    pub n: usize,
+    /// Input phase of channel `i`: the signal is multiplied by
+    /// `e^{j·input_phases[i]}` before entering the mesh.
+    pub input_phases: Vec<f64>,
+    /// Cells in signal-flow order (matches `MeshTopology::reck(n)`).
+    pub cells: Vec<CellSetting>,
+}
+
+impl MeshProgram {
+    /// Apply the programmed mesh to a vector (ideal cells).
+    pub fn apply(&self, x: &[C64]) -> Vec<C64> {
+        assert_eq!(x.len(), self.n);
+        let mut y: Vec<C64> = x
+            .iter()
+            .zip(&self.input_phases)
+            .map(|(&v, &ph)| v * C64::cis(ph))
+            .collect();
+        for c in &self.cells {
+            let t = t_matrix(c.theta, c.phi);
+            let (yp, yq) = (y[c.p], y[c.q]);
+            y[c.p] = t[(0, 0)] * yp + t[(0, 1)] * yq;
+            y[c.q] = t[(1, 0)] * yp + t[(1, 1)] * yq;
+        }
+        y
+    }
+
+    /// Compose the full N×N transfer matrix (ideal cells).
+    pub fn matrix(&self) -> CMat {
+        let mut m = CMat::diag(&self.input_phases.iter().map(|&p| C64::cis(p)).collect::<Vec<_>>());
+        for c in &self.cells {
+            let t = t_matrix(c.theta, c.phi);
+            // m ← embed(t) · m, done row-wise (only rows p, q change).
+            for j in 0..self.n {
+                let mp = m[(c.p, j)];
+                let mq = m[(c.q, j)];
+                m[(c.p, j)] = t[(0, 0)] * mp + t[(0, 1)] * mq;
+                m[(c.q, j)] = t[(1, 0)] * mp + t[(1, 1)] * mq;
+            }
+        }
+        m
+    }
+
+    /// The topology this program assumes.
+    pub fn topology(&self) -> MeshTopology {
+        MeshTopology::reck(self.n)
+    }
+}
+
+/// Decompose a unitary `u` into a [`MeshProgram`]. Panics if `u` is not
+/// square; accuracy degrades gracefully if `u` is only approximately
+/// unitary (the residual lands in the reconstruction error).
+pub fn decompose_unitary(u: &CMat) -> MeshProgram {
+    assert!(u.is_square(), "decompose_unitary needs a square matrix");
+    let n = u.rows();
+    let topo = MeshTopology::reck(n);
+    let mut v = u.hermitian();
+
+    // Nulling order (reverse signal flow): rows r = n-1 .. 1, cols c = 0 .. r-1.
+    let mut null_cells: Vec<CellSetting> = Vec::with_capacity(topo.cells());
+    for r in (1..n).rev() {
+        for c in 0..r {
+            let (theta, phi) = if v[(r, c)].abs() < 1e-14 {
+                // Already null: park the cell in the bar state (θ = π keeps
+                // the channels unmixed; t(π, 0) = diag(1, −1)).
+                (PI, 0.0)
+            } else {
+                let z = -(v[(r, c + 1)] / v[(r, c)]);
+                (2.0 * z.abs().atan(), -z.arg())
+            };
+            let cell = CellSetting { p: c, q: c + 1, theta, phi };
+            // v ← v · embed(t): columns c, c+1 mix.
+            let t = t_matrix(theta, phi);
+            for row in 0..n {
+                let a = v[(row, c)];
+                let b = v[(row, c + 1)];
+                v[(row, c)] = a * t[(0, 0)] + b * t[(1, 0)];
+                v[(row, c + 1)] = a * t[(0, 1)] + b * t[(1, 1)];
+            }
+            debug_assert!(v[(r, c)].abs() < 1e-9, "null failed at ({r},{c}): {:?}", v[(r, c)]);
+            null_cells.push(cell);
+        }
+    }
+
+    // v is now diagonal D with unimodular entries; U = T_1⋯T_S·D^H, so the
+    // input phase layer is D^H = conj(D).
+    let input_phases: Vec<f64> = (0..n).map(|i| -v[(i, i)].arg()).collect();
+    null_cells.reverse(); // signal-flow order
+    MeshProgram { n, input_phases, cells: null_cells }
+}
+
+/// SVD synthesis of an arbitrary real or complex matrix (eq. 31):
+/// `M = σ_max · U·diag(σ/σ_max)·V^H`. Returns the two mesh programs, the
+/// normalized diagonal (all entries ≤ 1, realizable as attenuation), and
+/// the global scale `σ_max` (absorbed digitally, or by distributing gain).
+pub struct SvdSynthesis {
+    pub u_mesh: MeshProgram,
+    /// Normalized singular values (σ/σ_max), each in [0, 1].
+    pub diag: Vec<f64>,
+    pub vh_mesh: MeshProgram,
+    /// Global scale factor σ_max.
+    pub scale: f64,
+}
+
+impl SvdSynthesis {
+    /// Apply `M·x` through the synthesized stack (ideal cells).
+    pub fn apply(&self, x: &[C64]) -> Vec<C64> {
+        let mut y = self.vh_mesh.apply(x);
+        for (yi, &d) in y.iter_mut().zip(&self.diag) {
+            *yi = *yi * d;
+        }
+        let mut z = self.u_mesh.apply(&y);
+        for zi in z.iter_mut() {
+            *zi = *zi * self.scale;
+        }
+        z
+    }
+
+    /// Compose the synthesized matrix.
+    pub fn matrix(&self) -> CMat {
+        let d = CMat::diag(&self.diag.iter().map(|&x| C64::real(x)).collect::<Vec<_>>());
+        self.u_mesh
+            .matrix()
+            .matmul(&d)
+            .matmul(&self.vh_mesh.matrix())
+            .scale(C64::real(self.scale))
+    }
+}
+
+/// Synthesize an arbitrary matrix via SVD (eq. 31).
+pub fn synthesize_real(m: &CMat) -> SvdSynthesis {
+    assert!(m.is_square(), "synthesis needs a square matrix (pad rectangular targets)");
+    let f = svd(m);
+    let scale = f.s.first().copied().unwrap_or(1.0).max(1e-300);
+    SvdSynthesis {
+        u_mesh: decompose_unitary(&f.u),
+        diag: f.s.iter().map(|&s| s / scale).collect(),
+        vh_mesh: decompose_unitary(&f.vh),
+        scale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    /// Random unitary via QR-free trick: svd of random → U·Vh.
+    fn rand_unitary(rng: &mut Rng, n: usize) -> CMat {
+        let a = CMat::from_fn(n, n, |_, _| C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        f.u.matmul(&f.vh)
+    }
+
+    #[test]
+    fn reconstructs_random_unitaries() {
+        let mut rng = Rng::new(31);
+        for n in [2, 3, 4, 8] {
+            let u = rand_unitary(&mut rng, n);
+            let prog = decompose_unitary(&u);
+            assert_eq!(prog.cells.len(), n * (n - 1) / 2);
+            let err = prog.matrix().sub(&u).max_abs();
+            assert!(err < 1e-9, "n={n}: reconstruction error {err}");
+        }
+    }
+
+    #[test]
+    fn program_matches_topology_order() {
+        let mut rng = Rng::new(32);
+        let u = rand_unitary(&mut rng, 5);
+        let prog = decompose_unitary(&u);
+        let topo = MeshTopology::reck(5);
+        for (cell, pair) in prog.cells.iter().zip(topo.pairs()) {
+            assert_eq!((cell.p, cell.q), pair);
+        }
+    }
+
+    #[test]
+    fn apply_agrees_with_matrix() {
+        let mut rng = Rng::new(33);
+        let u = rand_unitary(&mut rng, 4);
+        let prog = decompose_unitary(&u);
+        let x: Vec<C64> = (0..4).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let y1 = prog.apply(&x);
+        let y2 = prog.matrix().matvec(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((*a - *b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn identity_decomposes_and_reconstructs() {
+        let prog = decompose_unitary(&CMat::eye(4));
+        assert!(prog.matrix().sub(&CMat::eye(4)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn permutation_matrix_decomposes() {
+        // A hard case: full channel permutation (every cell must cross).
+        let mut p = CMat::zeros(4, 4);
+        for i in 0..4 {
+            p[(i, 3 - i)] = C64::ONE;
+        }
+        let prog = decompose_unitary(&p);
+        assert!(prog.matrix().sub(&p).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn theta_within_physical_range() {
+        // The nulling construction keeps θ ∈ [0, π] (the device's full
+        // cross↔bar range).
+        let mut rng = Rng::new(34);
+        let u = rand_unitary(&mut rng, 8);
+        for cell in &decompose_unitary(&u).cells {
+            assert!((0.0..=PI + 1e-12).contains(&cell.theta), "θ = {}", cell.theta);
+        }
+    }
+
+    #[test]
+    fn svd_synthesis_reconstructs_arbitrary_real() {
+        let mut rng = Rng::new(35);
+        for n in [2, 4, 8] {
+            let m = CMat::from_fn(n, n, |_, _| C64::real(rng.normal()));
+            let syn = synthesize_real(&m);
+            let err = syn.matrix().sub(&m).max_abs();
+            assert!(err < 1e-8, "n={n}: err {err}");
+            // Diagonal is normalized (physically realizable attenuation).
+            assert!(syn.diag.iter().all(|&d| (0.0..=1.0 + 1e-12).contains(&d)));
+            // And apply() agrees.
+            let x: Vec<C64> = (0..n).map(|_| C64::real(rng.normal())).collect();
+            let y1 = syn.apply(&x);
+            let y2 = m.matvec(&x);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((*a - *b).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn near_unitary_input_degrades_gracefully() {
+        let mut rng = Rng::new(36);
+        let u = rand_unitary(&mut rng, 4);
+        // Perturb slightly off-unitary.
+        let pert = CMat::from_fn(4, 4, |i, j| u[(i, j)] + C64::new(rng.normal(), rng.normal()) * 1e-4);
+        let prog = decompose_unitary(&pert);
+        let err = prog.matrix().sub(&pert).max_abs();
+        assert!(err < 1e-2, "err {err}");
+    }
+}

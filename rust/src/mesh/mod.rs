@@ -1,0 +1,24 @@
+//! N×N linear RF analog processor built from 2×2 unit cells (paper §IV-B).
+//!
+//! * [`topology`] — the Reck-triangle arrangement of Fig. 13: which cell
+//!   crosses which adjacent channel pair, in signal-flow order, and the
+//!   physical column grouping.
+//! * [`decompose`] — rotation decomposition (eqs. 27–30): factor an
+//!   arbitrary N×N unitary into `N(N−1)/2` device matrices plus a diagonal
+//!   phase layer, and SVD synthesis of arbitrary real matrices (eq. 31).
+//! * [`quantize`] — map continuous cell phases onto the 36 discrete states
+//!   of the prototype (Table I), the paper's main precision limit.
+//! * [`propagate`] — forward simulation of a programmed mesh, either with
+//!   ideal analytic cells or with per-cell *measured* (virtual-VNA) unit
+//!   cells — how the 8×8 processor of the MNIST RFNN is "constructed based
+//!   on the measured S-parameters of the unit cell".
+
+pub mod decompose;
+pub mod tensor_train;
+pub mod propagate;
+pub mod quantize;
+pub mod topology;
+
+pub use decompose::{decompose_unitary, synthesize_real, CellSetting, MeshProgram};
+pub use propagate::{DiscreteMesh, MeshBackend};
+pub use topology::MeshTopology;

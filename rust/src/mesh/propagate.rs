@@ -1,0 +1,374 @@
+//! Discrete-mesh forward simulation — the paper's 8×8 processor
+//! "constructed based on the measured S-parameters of the unit cell".
+//!
+//! A [`DiscreteMesh`] is a fixed Reck topology where every cell is one
+//! physical 2×2 device in one of its 36 states. The backend selects the
+//! fidelity: ideal analytic cells at Table-I phases, or per-cell
+//! virtual-VNA *measured* transfer blocks (each cell a distinct fabricated
+//! device with its own imperfections — as on a real board of 28 unit
+//! cells). The composed N×N matrix is cached and incrementally rebuilt on
+//! state changes, because DSPSA training toggles states every minibatch.
+
+use super::quantize::state_t_matrix;
+use super::topology::MeshTopology;
+use crate::device::vna::MeasuredUnitCell;
+use crate::device::State;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+
+/// Cell fidelity backend.
+#[derive(Clone)]
+pub enum MeshBackend {
+    /// Ideal analytic `t(θ, φ)` at the discrete Table-I phases.
+    Ideal,
+    /// Measured (virtual-VNA) transfer blocks; one fabricated device per
+    /// cell, seeds derived from `base_seed`.
+    Measured { base_seed: u64 },
+}
+
+/// An N-channel mesh of discrete-state unit cells.
+pub struct DiscreteMesh {
+    topo: MeshTopology,
+    backend: MeshBackend,
+    /// Per-cell measured devices (empty for the ideal backend).
+    devices: Vec<MeasuredUnitCell>,
+    /// Per-cell 6×6 lookup of transfer blocks (precomputed: state changes
+    /// are frequent during training, measurement is deterministic).
+    blocks: Vec<Vec<CMat>>,
+    states: Vec<State>,
+    /// Cells whose bias lines are broken: state changes are ignored
+    /// (failure-injection ablation A5).
+    stuck: usize,
+    cached: CMat,
+}
+
+impl DiscreteMesh {
+    /// Build a mesh with all cells in state `L1L1`.
+    pub fn new(n: usize, backend: MeshBackend) -> Self {
+        let topo = MeshTopology::reck(n);
+        let cells = topo.cells();
+        let devices: Vec<MeasuredUnitCell> = match &backend {
+            MeshBackend::Ideal => Vec::new(),
+            MeshBackend::Measured { base_seed } => {
+                (0..cells).map(|i| MeasuredUnitCell::fabricate(base_seed.wrapping_add(i as u64))).collect()
+            }
+        };
+        // Precompute all 36 blocks per cell.
+        let blocks: Vec<Vec<CMat>> = (0..cells)
+            .map(|i| {
+                State::all()
+                    .map(|st| match &backend {
+                        MeshBackend::Ideal => state_t_matrix(st),
+                        MeshBackend::Measured { .. } => devices[i].t_block(st),
+                    })
+                    .collect()
+            })
+            .collect();
+        let states = vec![State { theta: 0, phi: 0 }; cells];
+        let mut mesh =
+            DiscreteMesh { topo, backend, devices, blocks, states, stuck: 0, cached: CMat::eye(n) };
+        mesh.recompose();
+        mesh
+    }
+
+    /// Replace every cell's 36-state transfer-block table (custom device
+    /// populations for ablation studies, e.g. non-default fab spread).
+    pub fn replace_blocks(&mut self, f: impl Fn(usize, State) -> CMat) {
+        for i in 0..self.cells() {
+            self.blocks[i] = State::all().map(|st| f(i, st)).collect();
+        }
+        self.recompose();
+    }
+
+    /// Mark the first `k` cells as stuck at their current state (dead
+    /// switch-bias lines — failure injection). Subsequent state writes to
+    /// those cells are ignored.
+    pub fn set_stuck(&mut self, k: usize) {
+        self.stuck = k.min(self.cells());
+    }
+
+    /// Number of channels.
+    pub fn channels(&self) -> usize {
+        self.topo.channels()
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.topo.cells()
+    }
+
+    /// Current per-cell states.
+    pub fn states(&self) -> &[State] {
+        &self.states
+    }
+
+    /// The topology.
+    pub fn topology(&self) -> &MeshTopology {
+        &self.topo
+    }
+
+    /// The backend.
+    pub fn backend(&self) -> &MeshBackend {
+        &self.backend
+    }
+
+    /// The physical device instance behind cell `i` (measured backend
+    /// only) — exposed for ablation studies and failure injection.
+    pub fn device(&self, i: usize) -> Option<&MeasuredUnitCell> {
+        self.devices.get(i)
+    }
+
+    /// Transfer block of cell `i` in state `st` (from the lookup).
+    fn block(&self, i: usize, st: State) -> &CMat {
+        &self.blocks[i][st.theta * crate::microwave::phase_shifter::N_STATES + st.phi]
+    }
+
+    /// Set all cell states and recompose the cached matrix. Stuck cells
+    /// keep their current state.
+    pub fn set_states(&mut self, states: &[State]) {
+        assert_eq!(states.len(), self.cells());
+        for (i, &st) in states.iter().enumerate() {
+            if i >= self.stuck {
+                self.states[i] = st;
+            }
+        }
+        self.recompose();
+    }
+
+    /// Set one cell's state and recompose (ignored for stuck cells).
+    pub fn set_state(&mut self, cell: usize, st: State) {
+        if cell >= self.stuck {
+            self.states[cell] = st;
+        }
+        self.recompose();
+    }
+
+    /// Encode states as a flat integer vector (θ0, φ0, θ1, φ1, …) — the
+    /// DSPSA optimization variable.
+    pub fn encode_states(&self) -> Vec<usize> {
+        self.states.iter().flat_map(|s| [s.theta, s.phi]).collect()
+    }
+
+    /// Decode a flat integer vector into states (inverse of
+    /// [`Self::encode_states`]) and apply it.
+    pub fn set_encoded(&mut self, code: &[usize]) {
+        assert_eq!(code.len(), 2 * self.cells());
+        for (i, ch) in code.chunks(2).enumerate() {
+            if i >= self.stuck {
+                self.states[i] = State { theta: ch[0], phi: ch[1] };
+            }
+        }
+        self.recompose();
+    }
+
+    /// The composed N×N transfer matrix.
+    pub fn matrix(&self) -> &CMat {
+        &self.cached
+    }
+
+    fn recompose(&mut self) {
+        let n = self.channels();
+        let mut m = CMat::eye(n);
+        for (i, (p, q)) in self.topo.pairs().enumerate() {
+            let t = self.block(i, self.states[i]).clone();
+            for j in 0..n {
+                let mp = m[(p, j)];
+                let mq = m[(q, j)];
+                m[(p, j)] = t[(0, 0)] * mp + t[(0, 1)] * mq;
+                m[(q, j)] = t[(1, 0)] * mp + t[(1, 1)] * mq;
+            }
+        }
+        self.cached = m;
+    }
+
+    /// Forward-propagate a complex vector through the mesh.
+    pub fn apply(&self, x: &[C64]) -> Vec<C64> {
+        self.cached.matvec(x)
+    }
+
+    /// Forward-propagate a real vector and detect output magnitudes — the
+    /// hidden-layer path of the MNIST RFNN (abs activation, eq. 20).
+    pub fn apply_abs(&self, x: &[f64]) -> Vec<f64> {
+        let xc: Vec<C64> = x.iter().map(|&v| C64::real(v)).collect();
+        self.apply(&xc).iter().map(|z| z.abs()).collect()
+    }
+
+    /// Export the six `(C, N)` coefficient planes `(ar, ai, br, bi, cr,
+    /// ci)` consumed by the AOT-compiled mesh kernel (see
+    /// `python/compile/kernels/mesh.py`): per column, a cell on channels
+    /// `(p, p+1)` contributes `A[p]=t00, B[p]=t01, A[p+1]=t11, C[p+1]=t10`;
+    /// untouched channels pass through with `A=1`.
+    pub fn coeff_planes(&self) -> [Vec<f32>; 6] {
+        let n = self.channels();
+        let columns = self.topo.columns();
+        let c_cols = columns.len();
+        let mut planes: [Vec<f32>; 6] = [
+            vec![0.0; c_cols * n], // ar
+            vec![0.0; c_cols * n], // ai
+            vec![0.0; c_cols * n], // br
+            vec![0.0; c_cols * n], // bi
+            vec![0.0; c_cols * n], // cr
+            vec![0.0; c_cols * n], // ci
+        ];
+        for k in 0..c_cols {
+            for ch in 0..n {
+                planes[0][k * n + ch] = 1.0; // identity pass-through
+            }
+            for &cell in &columns[k] {
+                let (p, q) = self.topo.pair(cell);
+                let t = self.block(cell, self.states[cell]);
+                planes[0][k * n + p] = t[(0, 0)].re as f32;
+                planes[1][k * n + p] = t[(0, 0)].im as f32;
+                planes[2][k * n + p] = t[(0, 1)].re as f32;
+                planes[3][k * n + p] = t[(0, 1)].im as f32;
+                planes[0][k * n + q] = t[(1, 1)].re as f32;
+                planes[1][k * n + q] = t[(1, 1)].im as f32;
+                planes[4][k * n + q] = t[(1, 0)].re as f32;
+                planes[5][k * n + q] = t[(1, 0)].im as f32;
+            }
+        }
+        planes
+    }
+
+    /// Number of kernel columns (`C` in the coefficient-plane shape).
+    pub fn kernel_columns(&self) -> usize {
+        self.topo.columns().len()
+    }
+
+    /// Mean insertion loss of the composed matrix in dB: how much power a
+    /// uniformly-excited input loses end to end (0 dB for ideal unitary).
+    pub fn mean_loss_db(&self) -> f64 {
+        let n = self.channels();
+        let gram = self.cached.hermitian().matmul(&self.cached);
+        let avg_gain: f64 = (0..n).map(|i| gram[(i, i)].re).sum::<f64>() / n as f64;
+        -10.0 * avg_gain.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_mesh_is_unitary_for_any_states() {
+        let mut mesh = DiscreteMesh::new(4, MeshBackend::Ideal);
+        assert!(mesh.matrix().is_unitary(1e-10));
+        let states: Vec<State> =
+            (0..mesh.cells()).map(|i| State { theta: i % 6, phi: (i * 2) % 6 }).collect();
+        mesh.set_states(&states);
+        assert!(mesh.matrix().is_unitary(1e-10));
+    }
+
+    #[test]
+    fn measured_mesh_is_lossy_but_close_in_shape() {
+        let mut ideal = DiscreteMesh::new(4, MeshBackend::Ideal);
+        let mut meas = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: 100 });
+        let states: Vec<State> =
+            (0..ideal.cells()).map(|i| State { theta: (i * 3) % 6, phi: i % 6 }).collect();
+        ideal.set_states(&states);
+        meas.set_states(&states);
+        let loss = meas.mean_loss_db();
+        assert!(loss > 1.0, "measured mesh should be lossy ({loss} dB)");
+        assert!(loss < 40.0, "but not dead ({loss} dB)");
+        // Unitarity broken but matrix finite.
+        assert!(meas.matrix().is_finite());
+        assert!(!meas.matrix().is_unitary(1e-3));
+    }
+
+    #[test]
+    fn set_state_matches_full_recompose() {
+        let mut a = DiscreteMesh::new(5, MeshBackend::Ideal);
+        let mut b = DiscreteMesh::new(5, MeshBackend::Ideal);
+        let mut states = vec![State { theta: 0, phi: 0 }; a.cells()];
+        states[3] = State { theta: 4, phi: 2 };
+        a.set_states(&states);
+        b.set_state(3, State { theta: 4, phi: 2 });
+        assert!(a.matrix().sub(b.matrix()).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let mut mesh = DiscreteMesh::new(4, MeshBackend::Ideal);
+        let states: Vec<State> =
+            (0..mesh.cells()).map(|i| State { theta: (i * 5) % 6, phi: (i + 1) % 6 }).collect();
+        mesh.set_states(&states);
+        let code = mesh.encode_states();
+        let mut other = DiscreteMesh::new(4, MeshBackend::Ideal);
+        other.set_encoded(&code);
+        assert_eq!(other.states(), mesh.states());
+        assert!(other.matrix().sub(mesh.matrix()).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn apply_matches_matrix() {
+        let mesh = DiscreteMesh::new(6, MeshBackend::Measured { base_seed: 3 });
+        let x: Vec<C64> = (0..6).map(|i| C64::new(i as f64 * 0.1, -0.05 * i as f64)).collect();
+        let y1 = mesh.apply(&x);
+        let y2 = mesh.matrix().matvec(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_abs_nonnegative_and_consistent() {
+        let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+        let x = vec![0.5; 8];
+        let y = mesh.apply_abs(&x);
+        assert_eq!(y.len(), 8);
+        assert!(y.iter().all(|&v| v >= 0.0));
+        // Ideal unitary: power conserved → Σ|y|² = Σ|x|².
+        let pin: f64 = x.iter().map(|v| v * v).sum();
+        let pout: f64 = y.iter().map(|v| v * v).sum();
+        assert!((pin - pout).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_mesh_deterministic_per_seed() {
+        let a = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: 9 });
+        let b = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: 9 });
+        assert!(a.matrix().sub(b.matrix()).max_abs() == 0.0);
+        let c = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: 10 });
+        assert!(a.matrix().sub(c.matrix()).max_abs() > 1e-6);
+    }
+
+    #[test]
+    fn coeff_planes_reproduce_composed_matrix() {
+        // Apply the roll-encoded column sweep (the kernel's algorithm) and
+        // compare against the cached dense matrix.
+        let mut mesh = DiscreteMesh::new(8, MeshBackend::Measured { base_seed: 55 });
+        let states: Vec<State> =
+            (0..mesh.cells()).map(|i| State { theta: (i * 2) % 6, phi: (i * 3) % 6 }).collect();
+        mesh.set_states(&states);
+        let n = 8;
+        let planes = mesh.coeff_planes();
+        let c_cols = mesh.kernel_columns();
+        let x: Vec<C64> = (0..n).map(|i| C64::new(0.3 * i as f64 - 1.0, 0.1 * i as f64)).collect();
+        let mut z = x.clone();
+        for k in 0..c_cols {
+            let at = |plane: usize, ch: usize| planes[plane][k * n + ch] as f64;
+            let mut next = vec![C64::ZERO; n];
+            for ch in 0..n {
+                let a = C64::new(at(0, ch), at(1, ch));
+                let b = C64::new(at(2, ch), at(3, ch));
+                let c = C64::new(at(4, ch), at(5, ch));
+                let up = z[(ch + 1) % n];
+                let dn = z[(ch + n - 1) % n];
+                next[ch] = a * z[ch] + b * up + c * dn;
+            }
+            z = next;
+        }
+        let want = mesh.apply(&x);
+        for (got, want) in z.iter().zip(&want) {
+            assert!((*got - *want).abs() < 1e-6, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn eight_by_eight_paper_configuration() {
+        let mesh = DiscreteMesh::new(8, MeshBackend::Measured { base_seed: 2023 });
+        assert_eq!(mesh.cells(), 28); // paper: 28 devices
+        assert_eq!(mesh.channels(), 8);
+        assert!(mesh.matrix().is_finite());
+    }
+}

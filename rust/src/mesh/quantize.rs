@@ -1,0 +1,167 @@
+//! Phase quantization — mapping continuous cell programs onto the
+//! prototype's 36 discrete states (Table I).
+//!
+//! The paper's central hardware limitation: each phase shifter offers only
+//! six fixed phases (29°…154°), so a synthesized mesh can only be realized
+//! approximately. This module quantizes programs and quantifies the error
+//! (the source of the analog network's accuracy gap in Fig. 15).
+
+use super::decompose::{CellSetting, MeshProgram};
+use crate::device::ideal::t_matrix;
+use crate::device::State;
+use crate::math::deg;
+use crate::math::wrap_angle;
+use crate::microwave::phase_shifter::TABLE_I_DEG;
+
+/// Nearest discrete θ-path index for a continuous θ (radians), by absolute
+/// phase distance. θ is first folded into [0, π] (the device's physical
+/// splitting range — sin²(θ/2) is what matters).
+pub fn nearest_theta_state(theta: f64) -> usize {
+    let t = fold_theta(theta);
+    TABLE_I_DEG
+        .iter()
+        .enumerate()
+        .min_by(|a, b| {
+            let da = (deg(*a.1) - t).abs();
+            let db = (deg(*b.1) - t).abs();
+            da.partial_cmp(&db).unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Nearest discrete φ-path index for a continuous φ (radians), by wrapped
+/// angular distance.
+pub fn nearest_phi_state(phi: f64) -> usize {
+    TABLE_I_DEG
+        .iter()
+        .enumerate()
+        .min_by(|a, b| {
+            let da = wrap_angle(deg(*a.1) - phi).abs();
+            let db = wrap_angle(deg(*b.1) - phi).abs();
+            da.partial_cmp(&db).unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Fold θ into `[0, π]` preserving the splitting ratio `sin²(θ/2)`…
+/// approximately: the map `θ → 2π − θ` flips the sign of the cross terms,
+/// which the φ layer can partially absorb. We fold conservatively and let
+/// the quantization-error metric report the damage.
+fn fold_theta(theta: f64) -> f64 {
+    let t = theta.rem_euclid(2.0 * std::f64::consts::PI);
+    if t > std::f64::consts::PI {
+        2.0 * std::f64::consts::PI - t
+    } else {
+        t
+    }
+}
+
+/// Quantize one cell to a device [`State`].
+pub fn quantize_cell(c: &CellSetting) -> State {
+    State { theta: nearest_theta_state(c.theta), phi: nearest_phi_state(c.phi) }
+}
+
+/// The quantized program: per-cell discrete states plus an error report.
+#[derive(Clone, Debug)]
+pub struct QuantizedProgram {
+    pub states: Vec<State>,
+    /// Per-cell Frobenius error ‖t(θ,φ) − t(θ_q,φ_q)‖_F.
+    pub cell_errors: Vec<f64>,
+}
+
+impl QuantizedProgram {
+    /// Worst per-cell error.
+    pub fn max_error(&self) -> f64 {
+        self.cell_errors.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean per-cell error.
+    pub fn mean_error(&self) -> f64 {
+        if self.cell_errors.is_empty() {
+            0.0
+        } else {
+            self.cell_errors.iter().sum::<f64>() / self.cell_errors.len() as f64
+        }
+    }
+}
+
+/// Quantize a whole mesh program onto Table-I states.
+pub fn quantize_program(prog: &MeshProgram) -> QuantizedProgram {
+    let mut states = Vec::with_capacity(prog.cells.len());
+    let mut cell_errors = Vec::with_capacity(prog.cells.len());
+    for c in &prog.cells {
+        let st = quantize_cell(c);
+        states.push(st);
+        let t_cont = t_matrix(c.theta, c.phi);
+        let t_disc = t_matrix(deg(TABLE_I_DEG[st.theta]), deg(TABLE_I_DEG[st.phi]));
+        cell_errors.push(t_disc.sub(&t_cont).fro_norm());
+    }
+    QuantizedProgram { states, cell_errors }
+}
+
+/// The ideal cell matrix of a discrete state (Table I phases).
+pub fn state_t_matrix(st: State) -> crate::math::cmat::CMat {
+    t_matrix(deg(TABLE_I_DEG[st.theta]), deg(TABLE_I_DEG[st.phi]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn exact_table_phases_map_to_themselves() {
+        for (i, &d) in TABLE_I_DEG.iter().enumerate() {
+            assert_eq!(nearest_theta_state(deg(d)), i);
+            assert_eq!(nearest_phi_state(deg(d)), i);
+        }
+    }
+
+    #[test]
+    fn midpoints_pick_nearer_neighbor() {
+        // 29° and 53°: 40° is closer to 29°? |40-29|=11 < |40-53|=13 → L1.
+        assert_eq!(nearest_theta_state(deg(40.0)), 0);
+        assert_eq!(nearest_theta_state(deg(42.0)), 1);
+    }
+
+    #[test]
+    fn theta_folding() {
+        // 2π − 29° folds to 29°.
+        assert_eq!(nearest_theta_state(2.0 * PI - deg(29.0)), 0);
+        // θ slightly above π folds below π.
+        assert_eq!(nearest_theta_state(PI + 0.1), nearest_theta_state(PI - 0.1));
+    }
+
+    #[test]
+    fn phi_wraps() {
+        // φ = −206° ≡ 154°.
+        assert_eq!(nearest_phi_state(deg(-206.0)), 5);
+    }
+
+    #[test]
+    fn quantize_program_reports_errors() {
+        use crate::math::cmat::CMat;
+        use crate::math::rng::Rng;
+        use crate::math::svd::svd;
+        let mut rng = Rng::new(77);
+        let a = CMat::from_fn(4, 4, |_, _| crate::math::c64::C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        let u = f.u.matmul(&f.vh);
+        let prog = super::super::decompose::decompose_unitary(&u);
+        let q = quantize_program(&prog);
+        assert_eq!(q.states.len(), prog.cells.len());
+        // Errors are bounded: ‖t1 − t2‖_F ≤ 2√2 for unitary 2×2s… and
+        // nonzero in general for random targets.
+        assert!(q.max_error() <= 2.0 * (2.0f64).sqrt() + 1e-9);
+        assert!(q.mean_error() > 0.0);
+    }
+
+    #[test]
+    fn state_t_matrix_is_unitary() {
+        for st in State::all() {
+            assert!(state_t_matrix(st).is_unitary(1e-12));
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Tensor-train (TT) factorized synaptic interconnections — the paper's §V
+//! scaling proposal (refs. [50], [51]): replace one huge N×N mesh with a
+//! chain of small TT cores, each realizable as a modest analog processor,
+//! "greatly reducing the number of processor devices with little precision
+//! degradation".
+//!
+//! A weight matrix `W ∈ R^{M×N}` with `M = Π m_k`, `N = Π n_k` factors as
+//! TT cores `G_k ∈ R^{r_{k-1} × (m_k·n_k) × r_k}`. The matvec contracts one
+//! core at a time, so the analog substrate only ever multiplies by
+//! `r_{k-1}·m_k × r_k·n_k` blocks — e.g. a 256×256 layer with 2 cores of
+//! rank 8 needs 2 meshes of ≤128ch instead of one 256-channel mesh
+//! (device count ∝ N(N−1)/2 per mesh makes this a large saving).
+
+use crate::math::rng::Rng;
+use crate::nn::tensor::Mat;
+
+/// A TT-factorized linear operator for 2-core decompositions
+/// `W[(i1,i2),(j1,j2)] = Σ_r G1[i1,j1,r] · G2[r,i2,j2]`.
+#[derive(Clone, Debug)]
+pub struct TT2 {
+    /// Output mode sizes (m1, m2) with M = m1·m2.
+    pub m: (usize, usize),
+    /// Input mode sizes (n1, n2) with N = n1·n2.
+    pub n: (usize, usize),
+    /// TT rank r.
+    pub rank: usize,
+    /// Core 1: shape [m1, n1, r] flattened row-major.
+    pub g1: Vec<f64>,
+    /// Core 2: shape [r, m2, n2] flattened row-major.
+    pub g2: Vec<f64>,
+}
+
+impl TT2 {
+    /// Random TT operator (for training from scratch, as [51] does).
+    pub fn random(m: (usize, usize), n: (usize, usize), rank: usize, rng: &mut Rng) -> TT2 {
+        let s1 = (2.0 / (n.0 * rank) as f64).sqrt();
+        let s2 = (2.0 / n.1 as f64).sqrt();
+        TT2 {
+            m,
+            n,
+            rank,
+            g1: (0..m.0 * n.0 * rank).map(|_| rng.normal() * s1).collect(),
+            g2: (0..rank * m.1 * n.1).map(|_| rng.normal() * s2).collect(),
+        }
+    }
+
+    /// Number of parameters (vs `m1·m2·n1·n2` dense).
+    pub fn params(&self) -> usize {
+        self.g1.len() + self.g2.len()
+    }
+
+    /// Dense parameter count of the equivalent full matrix.
+    pub fn dense_params(&self) -> usize {
+        self.m.0 * self.m.1 * self.n.0 * self.n.1
+    }
+
+    /// Unit-cell count if each contraction is realized as an analog mesh:
+    /// one `m1·r`-channel mesh + one `r·m2`-channel-ish mesh (square upper
+    /// bound `c(c-1)/2` each, c = max(in, out) per stage).
+    pub fn mesh_cells(&self) -> usize {
+        let c1 = (self.m.0 * self.rank).max(self.n.0);
+        let c2 = (self.rank * self.n.1).max(self.m.1 * self.rank);
+        c1 * (c1 - 1) / 2 + c2 * (c2 - 1) / 2
+    }
+
+    /// Unit-cell count of the direct dense realization (two unitary meshes
+    /// of max(M, N) channels via SVD).
+    pub fn dense_mesh_cells(&self) -> usize {
+        let c = (self.m.0 * self.m.1).max(self.n.0 * self.n.1);
+        c * (c - 1) // U and V^H meshes
+    }
+
+    /// Reconstruct the dense matrix (for tests / error measurement).
+    pub fn to_dense(&self) -> Mat {
+        let (m1, m2) = self.m;
+        let (n1, n2) = self.n;
+        let r = self.rank;
+        let mut w = Mat::zeros(m1 * m2, n1 * n2);
+        for i1 in 0..m1 {
+            for i2 in 0..m2 {
+                for j1 in 0..n1 {
+                    for j2 in 0..n2 {
+                        let mut acc = 0.0;
+                        for k in 0..r {
+                            acc += self.g1[(i1 * n1 + j1) * r + k]
+                                * self.g2[(k * m2 + i2) * n2 + j2];
+                        }
+                        w[(i1 * m2 + i2, j1 * n2 + j2)] = acc;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// TT matvec without materializing the dense matrix:
+    /// contract core 2 then core 1 (cost O(r·N + r·M·n1) vs O(M·N)).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let (m1, m2) = self.m;
+        let (n1, n2) = self.n;
+        let r = self.rank;
+        assert_eq!(x.len(), n1 * n2);
+        // t[k][i2][j1] = Σ_{j2} G2[k,i2,j2] · x[j1,j2]
+        let mut t = vec![0.0; r * m2 * n1];
+        for k in 0..r {
+            for i2 in 0..m2 {
+                for j1 in 0..n1 {
+                    let mut acc = 0.0;
+                    for j2 in 0..n2 {
+                        acc += self.g2[(k * m2 + i2) * n2 + j2] * x[j1 * n2 + j2];
+                    }
+                    t[(k * m2 + i2) * n1 + j1] = acc;
+                }
+            }
+        }
+        // y[i1,i2] = Σ_{j1,k} G1[i1,j1,k] · t[k,i2,j1]
+        let mut y = vec![0.0; m1 * m2];
+        for i1 in 0..m1 {
+            for i2 in 0..m2 {
+                let mut acc = 0.0;
+                for j1 in 0..n1 {
+                    for k in 0..r {
+                        acc += self.g1[(i1 * n1 + j1) * r + k] * t[(k * m2 + i2) * n1 + j1];
+                    }
+                }
+                y[i1 * m2 + i2] = acc;
+            }
+        }
+        y
+    }
+
+    /// TT-SVD style 2-core factorization of a dense matrix: reshape
+    /// `W[M×N] → A[(m1·n1) × (m2·n2)]` and truncate its SVD at `rank`.
+    /// Returns the TT2 and the relative Frobenius truncation error.
+    pub fn factor(w: &Mat, m: (usize, usize), n: (usize, usize), rank: usize) -> (TT2, f64) {
+        let (m1, m2) = m;
+        let (n1, n2) = n;
+        assert_eq!(w.rows(), m1 * m2);
+        assert_eq!(w.cols(), n1 * n2);
+        // Reshape: A[(i1,j1),(i2,j2)] = W[(i1,i2),(j1,j2)]
+        let a = crate::math::cmat::CMat::from_fn(m1 * n1, m2 * n2, |rj, ck| {
+            let (i1, j1) = (rj / n1, rj % n1);
+            let (i2, j2) = (ck / n2, ck % n2);
+            crate::math::c64::C64::real(w[(i1 * m2 + i2, j1 * n2 + j2)])
+        });
+        let f = crate::math::svd::svd(&a);
+        let r = rank.min(f.s.len());
+        let mut g1 = vec![0.0; m1 * n1 * r];
+        let mut g2 = vec![0.0; r * m2 * n2];
+        for k in 0..r {
+            let sk = f.s[k].sqrt();
+            for rj in 0..m1 * n1 {
+                g1[rj * r + k] = f.u[(rj, k)].re * sk;
+            }
+            for ck in 0..m2 * n2 {
+                let (i2, j2) = (ck / n2, ck % n2);
+                g2[(k * m2 + i2) * n2 + j2] = f.vh[(k, ck)].re * sk;
+            }
+        }
+        let err2: f64 = f.s[r..].iter().map(|s| s * s).sum();
+        let total2: f64 = f.s.iter().map(|s| s * s).sum();
+        let rel = if total2 > 0.0 { (err2 / total2).sqrt() } else { 0.0 };
+        (TT2 { m, n, rank: r, g1, g2 }, rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(1);
+        let tt = TT2::random((4, 4), (4, 4), 3, &mut rng);
+        let w = tt.to_dense();
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin()).collect();
+        let via_tt = tt.matvec(&x);
+        let xm = Mat::from_rows(16, 1, &x);
+        let direct = w.matmul(&xm);
+        for i in 0..16 {
+            assert!((via_tt[i] - direct[(i, 0)]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn full_rank_factorization_is_exact() {
+        let mut rng = Rng::new(2);
+        let w = Mat::from_fn(16, 16, |_, _| rng.normal());
+        // Max rank of the reshaped 16×16 unfolding is 16.
+        let (tt, err) = TT2::factor(&w, (4, 4), (4, 4), 16);
+        assert!(err < 1e-10, "rel err {err}");
+        let back = tt.to_dense();
+        assert!(w.zip(&back, |a, b| (a - b).abs()).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let mut rng = Rng::new(3);
+        let w = Mat::from_fn(16, 16, |_, _| rng.normal());
+        let errs: Vec<f64> =
+            [1, 2, 4, 8, 16].iter().map(|&r| TT2::factor(&w, (4, 4), (4, 4), r).1).collect();
+        for pair in errs.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-12, "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn low_rank_matrix_compresses_losslessly() {
+        // Build a matrix whose (m1n1)×(m2n2) unfolding has rank 2.
+        let mut rng = Rng::new(4);
+        let u = Mat::from_fn(16, 2, |_, _| rng.normal());
+        let v = Mat::from_fn(2, 16, |_, _| rng.normal());
+        let a = u.matmul(&v); // rank-2 unfolding A[(i1,j1),(i2,j2)]
+        // Fold A back into W layout.
+        let mut w = Mat::zeros(16, 16);
+        for rj in 0..16 {
+            for ck in 0..16 {
+                let (i1, j1) = (rj / 4, rj % 4);
+                let (i2, j2) = (ck / 4, ck % 4);
+                w[(i1 * 4 + i2, j1 * 4 + j2)] = a[(rj, ck)];
+            }
+        }
+        let (tt, err) = TT2::factor(&w, (4, 4), (4, 4), 2);
+        assert!(err < 1e-10, "rel err {err}");
+        assert_eq!(tt.params(), 4 * 4 * 2 + 2 * 4 * 4);
+    }
+
+    #[test]
+    fn parameter_and_device_savings() {
+        // §V scaling claim: TT needs far fewer devices than a flat mesh.
+        let mut rng = Rng::new(5);
+        let tt = TT2::random((16, 16), (16, 16), 8, &mut rng);
+        assert_eq!(tt.dense_params(), 65536);
+        assert!(tt.params() < tt.dense_params() / 10, "params {}", tt.params());
+        assert!(
+            tt.mesh_cells() < tt.dense_mesh_cells() / 2,
+            "cells {} vs dense {}",
+            tt.mesh_cells(),
+            tt.dense_mesh_cells()
+        );
+    }
+}

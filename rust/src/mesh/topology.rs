@@ -1,0 +1,131 @@
+//! Mesh topology: the Reck-triangle cell arrangement of Fig. 13.
+
+/// The fixed wiring of an N-channel mesh: an ordered list of unit cells,
+/// each crossing an adjacent channel pair `(p, p+1)`, in **signal-flow
+/// order** (the order a wavefront encounters them).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MeshTopology {
+    n: usize,
+    /// Channel pairs in signal-flow order.
+    pairs: Vec<(usize, usize)>,
+}
+
+impl MeshTopology {
+    /// The Reck (triangular) arrangement used by the paper's decomposition
+    /// (eq. 28): `N(N−1)/2` cells. Signal-flow order is the reverse of the
+    /// nulling order used in [`super::decompose`].
+    pub fn reck(n: usize) -> Self {
+        assert!(n >= 2, "mesh needs at least 2 channels");
+        // Nulling order: rows r = n-1 .. 1, columns c = 0 .. r-1, channel
+        // pair (c, c+1). Signal flow reverses it.
+        let mut pairs = Vec::with_capacity(n * (n - 1) / 2);
+        for r in (1..n).rev() {
+            for c in 0..r {
+                pairs.push((c, c + 1));
+            }
+        }
+        pairs.reverse();
+        MeshTopology { n, pairs }
+    }
+
+    /// Number of channels.
+    pub fn channels(&self) -> usize {
+        self.n
+    }
+
+    /// Number of unit cells — `N(N−1)/2` for the Reck mesh (28 for N = 8,
+    /// matching the paper's "28 RFNN devices").
+    pub fn cells(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Channel pair of cell `i` (signal-flow order).
+    pub fn pair(&self, i: usize) -> (usize, usize) {
+        self.pairs[i]
+    }
+
+    /// Iterate channel pairs in signal-flow order.
+    pub fn pairs(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.pairs.iter().copied()
+    }
+
+    /// Group cells into physical columns (Fig. 13): a cell goes into the
+    /// earliest column in which its channels are not already used by a
+    /// previous (signal-flow) cell of the same or a later column.
+    /// Returns, per column, the cell indices it contains.
+    pub fn columns(&self) -> Vec<Vec<usize>> {
+        let mut col_of_channel = vec![0usize; self.n]; // next free column per channel
+        let mut columns: Vec<Vec<usize>> = Vec::new();
+        for (i, &(p, q)) in self.pairs.iter().enumerate() {
+            let col = col_of_channel[p].max(col_of_channel[q]);
+            if columns.len() <= col {
+                columns.resize_with(col + 1, Vec::new);
+            }
+            columns[col].push(i);
+            col_of_channel[p] = col + 1;
+            col_of_channel[q] = col + 1;
+        }
+        columns
+    }
+
+    /// Longest signal path in cells (mesh depth = number of columns); sets
+    /// the latency estimate in Table II.
+    pub fn depth(&self) -> usize {
+        self.columns().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_count_is_n_choose_2() {
+        for n in 2..=10 {
+            let t = MeshTopology::reck(n);
+            assert_eq!(t.cells(), n * (n - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn paper_sizes() {
+        // §IV-B: 8×8 processor from 28 devices; Fig. 13: 4×4 from 6.
+        assert_eq!(MeshTopology::reck(8).cells(), 28);
+        assert_eq!(MeshTopology::reck(4).cells(), 6);
+    }
+
+    #[test]
+    fn pairs_are_adjacent_and_in_range() {
+        let t = MeshTopology::reck(6);
+        for (p, q) in t.pairs() {
+            assert_eq!(q, p + 1);
+            assert!(q < 6);
+        }
+    }
+
+    #[test]
+    fn columns_partition_cells_without_channel_conflicts() {
+        let t = MeshTopology::reck(8);
+        let cols = t.columns();
+        let total: usize = cols.iter().map(|c| c.len()).sum();
+        assert_eq!(total, t.cells());
+        for col in &cols {
+            let mut used = vec![false; 8];
+            for &i in col {
+                let (p, q) = t.pair(i);
+                assert!(!used[p] && !used[q], "channel conflict in column");
+                used[p] = true;
+                used[q] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn depth_reasonable() {
+        // Reck mesh depth is 2N−3.
+        for n in 2..=8 {
+            let d = MeshTopology::reck(n).depth();
+            assert_eq!(d, if n == 2 { 1 } else { 2 * n - 3 }, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Two-port ABCD (chain) matrices and S ↔ ABCD conversion.
+//!
+//! ABCD is the natural representation for cascading series/shunt elements
+//! and line sections; the branch-line hybrid's even/odd half-circuits are
+//! built here and converted back to S-parameters (Pozar ch. 4/7).
+
+use super::sparams::SMatrix;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+
+/// A 2×2 ABCD chain matrix `[V1; I1] = A · [V2; I2]` (port-2 current
+/// flowing out).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Abcd {
+    pub a: C64,
+    pub b: C64,
+    pub c: C64,
+    pub d: C64,
+}
+
+impl Abcd {
+    /// Identity (zero-length through).
+    pub fn identity() -> Self {
+        Abcd { a: C64::ONE, b: C64::ZERO, c: C64::ZERO, d: C64::ONE }
+    }
+
+    /// A series impedance `Z`.
+    pub fn series(z: C64) -> Self {
+        Abcd { a: C64::ONE, b: z, c: C64::ZERO, d: C64::ONE }
+    }
+
+    /// A shunt admittance `Y`.
+    pub fn shunt(y: C64) -> Self {
+        Abcd { a: C64::ONE, b: C64::ZERO, c: y, d: C64::ONE }
+    }
+
+    /// A transmission-line section with characteristic impedance `z0` and
+    /// complex electrical length `γl = α·l + j·β·l`.
+    pub fn tline(z0: f64, gamma_l: C64) -> Self {
+        // cosh/sinh of a complex argument, by components.
+        let (g, b) = (gamma_l.re, gamma_l.im);
+        let cosh = C64::new(g.cosh() * b.cos(), g.sinh() * b.sin());
+        let sinh = C64::new(g.sinh() * b.cos(), g.cosh() * b.sin());
+        Abcd { a: cosh, b: sinh * z0, c: sinh / z0, d: cosh }
+    }
+
+    /// Lossless line of electrical length `theta` (radians) and impedance `z0`.
+    pub fn lossless_line(z0: f64, theta: f64) -> Self {
+        Abcd {
+            a: C64::real(theta.cos()),
+            b: C64::new(0.0, z0 * theta.sin()),
+            c: C64::new(0.0, theta.sin() / z0),
+            d: C64::real(theta.cos()),
+        }
+    }
+
+    /// Open-circuited stub of impedance `z0` and electrical length `theta`,
+    /// as a shunt element: `Y_in = j·tan(theta)/z0`.
+    pub fn open_stub(z0: f64, theta: f64) -> Self {
+        Abcd::shunt(C64::new(0.0, theta.tan() / z0))
+    }
+
+    /// Short-circuited shunt stub: `Y_in = -j·cot(theta)/z0`.
+    pub fn short_stub(z0: f64, theta: f64) -> Self {
+        Abcd::shunt(C64::new(0.0, -1.0 / (theta.tan() * z0)))
+    }
+
+    /// Chain (cascade) product `self · next`.
+    pub fn then(&self, next: &Abcd) -> Abcd {
+        Abcd {
+            a: self.a * next.a + self.b * next.c,
+            b: self.a * next.b + self.b * next.d,
+            c: self.c * next.a + self.d * next.c,
+            d: self.c * next.b + self.d * next.d,
+        }
+    }
+
+    /// Convert to S-parameters referenced to real `z0`.
+    pub fn to_s(&self, z0: f64) -> SMatrix {
+        let (a, b, c, d) = (self.a, self.b, self.c, self.d);
+        let bz = b / z0;
+        let cz = c * z0;
+        let denom = a + bz + cz + d;
+        let s11 = (a + bz - cz - d) / denom;
+        let s12 = (a * d - b * c) * 2.0 / denom;
+        let s21 = C64::real(2.0) / denom;
+        let s22 = (-a + bz - cz + d) / denom;
+        SMatrix::new(CMat::from_rows(2, 2, &[s11, s12, s21, s22]))
+    }
+
+    /// Input reflection coefficient seen looking into port 1 with port 2
+    /// terminated in `z0` (used for even/odd half-circuit analysis).
+    pub fn gamma_in(&self, z0: f64) -> C64 {
+        let zin = (self.a * z0 + self.b) / (self.c * z0 + self.d);
+        (zin - C64::real(z0)) / (zin + C64::real(z0))
+    }
+
+    /// Transmission coefficient port1→port2 with matched terminations.
+    pub fn t_matched(&self, z0: f64) -> C64 {
+        self.to_s(z0).s(1, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    fn approx(a: C64, b: C64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn identity_is_perfect_through() {
+        let s = Abcd::identity().to_s(50.0);
+        assert!(approx(s.s(0, 0), C64::ZERO, 1e-15));
+        assert!(approx(s.s(1, 0), C64::ONE, 1e-15));
+    }
+
+    #[test]
+    fn matched_series_z0_attenuates_symmetrically() {
+        // A 50 Ω series resistor in a 50 Ω system: S21 = 2/(2 + Z/Z0) = 2/3.
+        let s = Abcd::series(C64::real(50.0)).to_s(50.0);
+        assert!(approx(s.s(1, 0), C64::real(2.0 / 3.0), 1e-12));
+        assert!(approx(s.s(0, 0), C64::real(1.0 / 3.0), 1e-12));
+    }
+
+    #[test]
+    fn quarter_wave_line_is_minus_j_through() {
+        let s = Abcd::lossless_line(50.0, PI / 2.0).to_s(50.0);
+        assert!(approx(s.s(1, 0), -C64::J, 1e-12));
+        assert!(approx(s.s(0, 0), C64::ZERO, 1e-12));
+    }
+
+    #[test]
+    fn quarter_wave_transformer_matches() {
+        // Z0=70.711 quarter-wave section matches 100 Ω to 50 Ω: in a 50 Ω
+        // measurement system it shows |S11| = 1/3 (mismatch of 100 vs 50),
+        // but the Zin looking into the line terminated by 100 Ω is 50 Ω.
+        let line = Abcd::lossless_line(70.710678, PI / 2.0);
+        // Zin = Z0^2/ZL:
+        let zl = C64::real(100.0);
+        let zin = (line.a * zl + line.b) / (line.c * zl + line.d);
+        assert!(approx(zin, C64::real(50.0), 1e-6));
+    }
+
+    #[test]
+    fn lossless_line_equals_tline_with_zero_alpha() {
+        let a = Abcd::lossless_line(60.0, 0.7);
+        let b = Abcd::tline(60.0, C64::new(0.0, 0.7));
+        assert!(approx(a.a, b.a, 1e-12));
+        assert!(approx(a.b, b.b, 1e-12));
+        assert!(approx(a.c, b.c, 1e-12));
+        assert!(approx(a.d, b.d, 1e-12));
+    }
+
+    #[test]
+    fn lossy_line_attenuates() {
+        let s = Abcd::tline(50.0, C64::new(0.115, PI)).to_s(50.0); // ~1 dB loss
+        let db = -20.0 * s.s(1, 0).abs().log10();
+        assert!((db - 1.0).abs() < 0.02, "loss = {db} dB");
+    }
+
+    #[test]
+    fn cascade_associative() {
+        let x = Abcd::series(C64::new(10.0, 5.0));
+        let y = Abcd::shunt(C64::new(0.01, -0.02));
+        let z = Abcd::lossless_line(50.0, 1.0);
+        let l = x.then(&y).then(&z);
+        let r = x.then(&y.then(&z));
+        assert!(approx(l.a, r.a, 1e-12) && approx(l.b, r.b, 1e-12));
+        assert!(approx(l.c, r.c, 1e-12) && approx(l.d, r.d, 1e-12));
+    }
+
+    #[test]
+    fn reciprocity_ad_minus_bc_is_one() {
+        let m = Abcd::lossless_line(42.0, 0.33).then(&Abcd::shunt(C64::new(0.0, 0.02)));
+        let det = m.a * m.d - m.b * m.c;
+        assert!(approx(det, C64::ONE, 1e-12));
+    }
+
+    #[test]
+    fn open_stub_quarter_wave_shorts() {
+        // λ/4 open stub presents ~infinite admittance → S21 ≈ 0.
+        let s = Abcd::open_stub(50.0, PI / 2.0 - 1e-9).to_s(50.0);
+        assert!(s.s(1, 0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stub_s_matrix_lossless() {
+        let s = Abcd::open_stub(50.0, 0.6).to_s(50.0);
+        assert!(s.is_lossless(1e-12));
+        let s = Abcd::short_stub(50.0, 0.6).to_s(50.0);
+        assert!(s.is_lossless(1e-12));
+    }
+}

@@ -1,0 +1,195 @@
+//! Quadrature (90°) hybrid — the 3-dB branch-line directional coupler that
+//! is the heart of the paper's 2×2 unit cell (eq. 3).
+//!
+//! Two models:
+//! * [`ideal_hybrid`] — the textbook S-matrix of eq. (3), exact at all
+//!   frequencies (used by the theory curves).
+//! * [`BranchLineHybrid`] — a physical branch-line coupler on a microstrip
+//!   substrate, analyzed by even/odd-mode decomposition (Pozar §7.5) with
+//!   conductor + dielectric loss. At `f0` it converges to the ideal matrix;
+//!   away from `f0` it produces the frequency roll-off seen in Fig. 5.
+//!
+//! Port convention (paper's Fig. 2): 1 = input, 2 = through (−90°),
+//! 3 = coupled (−180°), 4 = isolated / second input.
+
+use super::abcd::Abcd;
+use super::microstrip::{Microstrip, Substrate};
+use super::sparams::SMatrix;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use std::f64::consts::{FRAC_1_SQRT_2, PI};
+
+/// The ideal quadrature-hybrid S-matrix of eq. (3):
+/// `S = -1/√2 · [[0 j 1 0],[j 0 0 1],[1 0 0 j],[0 1 j 0]]`.
+pub fn ideal_hybrid() -> SMatrix {
+    let c = C64::real(-FRAC_1_SQRT_2);
+    let j = C64::J;
+    let o = C64::ZERO;
+    let i = C64::ONE;
+    SMatrix::new(
+        CMat::from_rows(4, 4, &[o, j, i, o, j, o, o, i, i, o, o, j, o, i, j, o]).scale(c),
+    )
+}
+
+/// Complex tanh by components (for lossy stub input admittance).
+fn ctanh(z: C64) -> C64 {
+    let (g, b) = (z.re, z.im);
+    let cosh = C64::new(g.cosh() * b.cos(), g.sinh() * b.sin());
+    let sinh = C64::new(g.sinh() * b.cos(), g.cosh() * b.sin());
+    sinh / cosh
+}
+
+/// A physical branch-line hybrid: two λ/4 series arms of Z0/√2 and two λ/4
+/// shunt arms of Z0, realized as microstrip on `sub` with design center `f0`.
+#[derive(Clone, Copy, Debug)]
+pub struct BranchLineHybrid {
+    /// Series (main) arm: Z0/√2, λ/4 at f0.
+    series: Microstrip,
+    /// Shunt (branch) arm: Z0, λ/4 at f0 (half-length stubs appear in the
+    /// even/odd half-circuits).
+    shunt: Microstrip,
+    /// System impedance.
+    z0: f64,
+}
+
+impl BranchLineHybrid {
+    /// Design a branch-line hybrid for system impedance `z0` centered at `f0`.
+    pub fn design(sub: Substrate, z0: f64, f0: f64) -> Self {
+        let series = Microstrip::with_electrical_length(sub, z0 * FRAC_1_SQRT_2, PI / 2.0, f0);
+        let shunt = Microstrip::with_electrical_length(sub, z0, PI / 2.0, f0);
+        BranchLineHybrid { series, shunt, z0 }
+    }
+
+    /// Even/odd half-circuit: open (`even=true`) or shorted (`even=false`)
+    /// λ/8 stubs flanking the λ/4 series arm.
+    fn half_circuit(&self, f: f64, even: bool) -> Abcd {
+        // Lossy stub input admittance: open → Y0·tanh(γ·l/2); short → Y0·coth.
+        let gamma_half = C64::new(
+            self.shunt.alpha(f) * self.shunt.length / 2.0,
+            self.shunt.beta(f) * self.shunt.length / 2.0,
+        );
+        let y0 = 1.0 / self.shunt.z0();
+        let t = ctanh(gamma_half);
+        let y = if even { t * y0 } else { t.inv() * y0 };
+        let stub = Abcd::shunt(y);
+        stub.then(&self.series.abcd(f)).then(&stub)
+    }
+
+    /// Full 4-port S-matrix at frequency `f` via even/odd superposition and
+    /// the coupler's 4-fold symmetry.
+    pub fn sparams(&self, f: f64) -> SMatrix {
+        let e = self.half_circuit(f, true).to_s(self.z0);
+        let o = self.half_circuit(f, false).to_s(self.z0);
+        let (ge, te) = (e.s(0, 0), e.s(1, 0));
+        let (go, to) = (o.s(0, 0), o.s(1, 0));
+        let s11 = (ge + go) * 0.5;
+        let s21 = (te + to) * 0.5;
+        let s31 = (te - to) * 0.5;
+        let s41 = (ge - go) * 0.5;
+        SMatrix::new(CMat::from_rows(
+            4,
+            4,
+            &[
+                s11, s21, s31, s41, //
+                s21, s11, s41, s31, //
+                s31, s41, s11, s21, //
+                s41, s31, s21, s11,
+            ],
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microwave::{F0, Z0};
+
+    #[test]
+    fn ideal_hybrid_matches_eq3_entries() {
+        let s = ideal_hybrid();
+        let c = -FRAC_1_SQRT_2;
+        assert!((s.s(1, 0) - C64::new(0.0, c)).abs() < 1e-15); // S21 = -j/√2
+        assert!((s.s(2, 0) - C64::real(c)).abs() < 1e-15); // S31 = -1/√2
+        assert!((s.s(3, 0)).abs() < 1e-15); // S41 = 0 (isolated)
+        assert!((s.s(0, 0)).abs() < 1e-15); // matched
+        assert!((s.s(1, 3) - C64::real(c)).abs() < 1e-15); // S24 = -1/√2
+        assert!((s.s(2, 3) - C64::new(0.0, c)).abs() < 1e-15); // S34 = -j/√2
+    }
+
+    #[test]
+    fn ideal_hybrid_is_unitary_and_reciprocal() {
+        let s = ideal_hybrid();
+        assert!(s.is_lossless(1e-12));
+        assert!(s.is_reciprocal(1e-12));
+    }
+
+    #[test]
+    fn ideal_hybrid_splits_power_equally() {
+        let s = ideal_hybrid();
+        let p2 = s.s(1, 0).norm_sqr();
+        let p3 = s.s(2, 0).norm_sqr();
+        assert!((p2 - 0.5).abs() < 1e-12);
+        assert!((p3 - 0.5).abs() < 1e-12);
+    }
+
+    fn lossless_sub() -> Substrate {
+        // Effectively lossless substrate to compare against the ideal matrix.
+        Substrate { eps_r: 6.15, tan_d: 0.0, height: 0.508e-3, sigma: 1e30 }
+    }
+
+    #[test]
+    fn branchline_at_f0_approaches_ideal() {
+        let h = BranchLineHybrid::design(lossless_sub(), Z0, F0);
+        let s = h.sparams(F0);
+        let ideal = ideal_hybrid();
+        for i in 0..4 {
+            for j in 0..4 {
+                let d = (s.s(i, j) - ideal.s(i, j)).abs();
+                assert!(d < 2e-3, "S[{i}][{j}] differs by {d}: {:?} vs {:?}", s.s(i, j), ideal.s(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn branchline_lossless_sub_is_unitary() {
+        let h = BranchLineHybrid::design(lossless_sub(), Z0, F0);
+        for &f in &[1.6e9, 2.0e9, 2.4e9] {
+            let s = h.sparams(f);
+            assert!(s.is_lossless(1e-6), "not unitary at {f}");
+            assert!(s.is_reciprocal(1e-9));
+        }
+    }
+
+    #[test]
+    fn branchline_real_board_slightly_lossy() {
+        let h = BranchLineHybrid::design(Substrate::ro4360g2(), Z0, F0);
+        let s = h.sparams(F0);
+        let total_out: f64 = (0..4).map(|i| s.s(i, 0).norm_sqr()).sum();
+        assert!(total_out < 1.0, "passive: {total_out}");
+        assert!(total_out > 0.9, "not absurdly lossy: {total_out}");
+        // Still close to 3 dB split.
+        let p2 = s.s(1, 0).norm_sqr();
+        let p3 = s.s(2, 0).norm_sqr();
+        assert!((p2 - p3).abs() < 0.05, "p2={p2} p3={p3}");
+        assert!(s.is_passive(1e-9));
+    }
+
+    #[test]
+    fn branchline_rolls_off_away_from_f0() {
+        let h = BranchLineHybrid::design(Substrate::ro4360g2(), Z0, F0);
+        // Return loss and isolation degrade off-center.
+        let at = |f: f64| h.sparams(f);
+        let s_f0 = at(F0);
+        let s_off = at(1.4e9);
+        assert!(s_off.s(0, 0).abs() > s_f0.s(0, 0).abs() * 3.0, "|S11| should degrade off-center");
+        assert!(s_off.s(3, 0).abs() > s_f0.s(3, 0).abs(), "isolation should degrade off-center");
+    }
+
+    #[test]
+    fn branchline_quadrature_phase_at_f0() {
+        let h = BranchLineHybrid::design(Substrate::ro4360g2(), Z0, F0);
+        let s = h.sparams(F0);
+        let dphi = crate::math::wrap_angle(s.s(2, 0).arg() - s.s(1, 0).arg());
+        assert!((dphi.abs() - PI / 2.0).abs() < 0.03, "quadrature: {}", dphi.to_degrees());
+    }
+}

@@ -1,0 +1,255 @@
+//! Microstrip transmission-line theory (Hammerstad–Jensen), with conductor
+//! and dielectric loss — the physical substrate of the paper's prototype
+//! (Rogers RO4360G2, εr = 6.15) and of the §V scaling study (εr = 10,
+//! h = 0.125 mm, f0 = 10 GHz, ~0.25 dB/λ).
+
+use super::abcd::Abcd;
+use super::sparams::SMatrix;
+use super::C0;
+use crate::math::c64::C64;
+
+/// Free-space wave impedance (Ω).
+const ETA0: f64 = 376.730_313_668;
+/// Vacuum permeability (H/m).
+const MU0: f64 = 1.256_637_062_12e-6;
+
+/// A PCB substrate definition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Substrate {
+    /// Relative dielectric constant.
+    pub eps_r: f64,
+    /// Loss tangent.
+    pub tan_d: f64,
+    /// Substrate height (m).
+    pub height: f64,
+    /// Conductor conductivity (S/m).
+    pub sigma: f64,
+}
+
+impl Substrate {
+    /// Rogers RO4360G2 — the paper's prototype board (εr = 6.15).
+    /// Height 0.508 mm (20 mil) is the common laminate choice; the paper
+    /// does not state it, and the unit-cell behaviour is insensitive to it
+    /// once lines are synthesized to 50 Ω.
+    pub fn ro4360g2() -> Self {
+        Substrate { eps_r: 6.15, tan_d: 0.0038, height: 0.508e-3, sigma: 5.8e7 }
+    }
+
+    /// The §V scaling substrate: εr = 10, h = 0.125 mm.
+    pub fn scaling_study() -> Self {
+        Substrate { eps_r: 10.0, tan_d: 0.0035, height: 0.125e-3, sigma: 5.8e7 }
+    }
+}
+
+/// Hammerstad–Jensen effective permittivity for width/height ratio `u`.
+pub fn eps_eff(u: f64, eps_r: f64) -> f64 {
+    assert!(u > 0.0, "w/h must be positive");
+    let a = 1.0
+        + (1.0 / 49.0) * ((u.powi(4) + (u / 52.0).powi(2)) / (u.powi(4) + 0.432)).ln()
+        + (1.0 / 18.7) * (1.0 + (u / 18.1).powi(3)).ln();
+    let b = 0.564 * ((eps_r - 0.9) / (eps_r + 3.0)).powf(0.053);
+    (eps_r + 1.0) / 2.0 + (eps_r - 1.0) / 2.0 * (1.0 + 10.0 / u).powf(-a * b)
+}
+
+/// Hammerstad–Jensen characteristic impedance (Ω) for `u = w/h`.
+pub fn z0_microstrip(u: f64, eps_r: f64) -> f64 {
+    let f = 6.0 + (2.0 * std::f64::consts::PI - 6.0) * (-((30.666 / u).powf(0.7528))).exp();
+    let z01 = ETA0 / (2.0 * std::f64::consts::PI) * ((f / u) + (1.0 + (2.0 / u).powi(2)).sqrt()).ln();
+    z01 / eps_eff(u, eps_r).sqrt()
+}
+
+/// Synthesize the `w/h` ratio that realizes impedance `z0` (Ω) on `eps_r`,
+/// by bisection (Z0 is monotonically decreasing in u).
+pub fn synthesize_u(z0: f64, eps_r: f64) -> f64 {
+    let (mut lo, mut hi) = (0.05, 40.0);
+    let zlo = z0_microstrip(hi, eps_r);
+    let zhi = z0_microstrip(lo, eps_r);
+    assert!(z0 > zlo && z0 < zhi, "target Z0={z0} outside synthesizable range [{zlo:.1}, {zhi:.1}]");
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if z0_microstrip(mid, eps_r) > z0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// A physical microstrip line: substrate + trace width + length.
+#[derive(Clone, Copy, Debug)]
+pub struct Microstrip {
+    pub sub: Substrate,
+    /// Trace width (m).
+    pub width: f64,
+    /// Physical length (m).
+    pub length: f64,
+}
+
+impl Microstrip {
+    /// Synthesize a line with the given characteristic impedance and
+    /// *electrical* length (radians) at frequency `f` (Hz).
+    pub fn with_electrical_length(sub: Substrate, z0: f64, theta_at_f: f64, f: f64) -> Self {
+        let u = synthesize_u(z0, sub.eps_r);
+        let width = u * sub.height;
+        let line = Microstrip { sub, width, length: 1.0 };
+        let beta = line.beta(f);
+        Microstrip { sub, width, length: theta_at_f / beta }
+    }
+
+    /// `w/h` ratio.
+    pub fn u(&self) -> f64 {
+        self.width / self.sub.height
+    }
+
+    /// Effective permittivity (quasi-static).
+    pub fn eps_eff(&self) -> f64 {
+        eps_eff(self.u(), self.sub.eps_r)
+    }
+
+    /// Characteristic impedance (Ω).
+    pub fn z0(&self) -> f64 {
+        z0_microstrip(self.u(), self.sub.eps_r)
+    }
+
+    /// Phase constant β (rad/m) at frequency `f`.
+    pub fn beta(&self, f: f64) -> f64 {
+        2.0 * std::f64::consts::PI * f / C0 * self.eps_eff().sqrt()
+    }
+
+    /// Guided wavelength (m) at `f`.
+    pub fn guided_wavelength(&self, f: f64) -> f64 {
+        2.0 * std::f64::consts::PI / self.beta(f)
+    }
+
+    /// Conductor attenuation α_c (Np/m) at `f` — Rs/(Z0·w) approximation.
+    pub fn alpha_c(&self, f: f64) -> f64 {
+        let rs = (std::f64::consts::PI * f * MU0 / self.sub.sigma).sqrt();
+        rs / (self.z0() * self.width)
+    }
+
+    /// Dielectric attenuation α_d (Np/m) at `f`.
+    pub fn alpha_d(&self, f: f64) -> f64 {
+        let k0 = 2.0 * std::f64::consts::PI * f / C0;
+        let ee = self.eps_eff();
+        let er = self.sub.eps_r;
+        k0 * er * (ee - 1.0) * self.sub.tan_d / (2.0 * ee.sqrt() * (er - 1.0))
+    }
+
+    /// Total attenuation (Np/m).
+    pub fn alpha(&self, f: f64) -> f64 {
+        self.alpha_c(f) + self.alpha_d(f)
+    }
+
+    /// Loss in dB per guided wavelength at `f`.
+    pub fn db_per_wavelength(&self, f: f64) -> f64 {
+        self.alpha(f) * self.guided_wavelength(f) * 8.685_889_638
+    }
+
+    /// λg / w ratio — the paper's §V figure of merit χ.
+    pub fn chi(&self, f: f64) -> f64 {
+        self.guided_wavelength(f) / self.width
+    }
+
+    /// ABCD chain matrix at frequency `f`.
+    pub fn abcd(&self, f: f64) -> Abcd {
+        let gamma_l = C64::new(self.alpha(f) * self.length, self.beta(f) * self.length);
+        Abcd::tline(self.z0(), gamma_l)
+    }
+
+    /// Two-port S-parameters at `f`, referenced to `z_ref`.
+    pub fn sparams(&self, f: f64, z_ref: f64) -> SMatrix {
+        self.abcd(f).to_s(z_ref)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microwave::{F0, Z0};
+
+    #[test]
+    fn eps_eff_bounds() {
+        // εeff must lie between (εr+1)/2 (air side) and εr.
+        for &u in &[0.2, 0.5, 1.0, 2.0, 5.0, 10.0] {
+            let e = eps_eff(u, 6.15);
+            assert!(e > (6.15 + 1.0) / 2.0 && e < 6.15, "u={u} eps_eff={e}");
+        }
+    }
+
+    #[test]
+    fn eps_eff_increases_with_width() {
+        // Wider lines confine more field in the dielectric.
+        assert!(eps_eff(5.0, 6.15) > eps_eff(0.5, 6.15));
+    }
+
+    #[test]
+    fn z0_decreases_with_width() {
+        assert!(z0_microstrip(0.5, 6.15) > z0_microstrip(2.0, 6.15));
+    }
+
+    #[test]
+    fn z0_sanity_alumina_like() {
+        // Known reference point: εr≈9.8, u≈0.95 gives ~50 Ω (Pozar
+        // example-level accuracy; H-J is within ~1%).
+        let z = z0_microstrip(0.95, 9.8);
+        assert!((z - 50.0).abs() < 2.5, "z={z}");
+    }
+
+    #[test]
+    fn synthesis_round_trips() {
+        for &z in &[30.0, 50.0, 70.7, 100.0] {
+            let u = synthesize_u(z, 6.15);
+            let z_back = z0_microstrip(u, 6.15);
+            assert!((z_back - z).abs() < 1e-6, "z={z} back={z_back}");
+        }
+    }
+
+    #[test]
+    fn quarter_wave_line_behaves() {
+        let ms = Microstrip::with_electrical_length(
+            Substrate::ro4360g2(),
+            Z0,
+            std::f64::consts::PI / 2.0,
+            F0,
+        );
+        let s = ms.sparams(F0, Z0);
+        // ~ -90° through phase, small loss, good match.
+        let s21 = s.s(1, 0);
+        assert!(s.s(0, 0).abs() < 0.02, "|S11|={}", s.s(0, 0).abs());
+        assert!((s21.arg().to_degrees() + 90.0).abs() < 1.5, "arg={}", s21.arg().to_degrees());
+        assert!(s21.abs() > 0.97 && s21.abs() < 1.0);
+    }
+
+    #[test]
+    fn loss_scales_with_length() {
+        let sub = Substrate::ro4360g2();
+        let u = synthesize_u(Z0, sub.eps_r);
+        let short = Microstrip { sub, width: u * sub.height, length: 0.01 };
+        let long = Microstrip { sub, width: u * sub.height, length: 0.10 };
+        let l_short = -20.0 * short.sparams(F0, Z0).s(1, 0).abs().log10();
+        let l_long = -20.0 * long.sparams(F0, Z0).s(1, 0).abs().log10();
+        assert!(l_long > 5.0 * l_short, "short={l_short} long={l_long}");
+    }
+
+    #[test]
+    fn scaling_study_loss_near_paper_estimate() {
+        // §V: "typical microstrip insertion loss on such board is around
+        // 0.25 dB per wavelength" (εr=10, h=0.125 mm, 10 GHz, 50 Ω).
+        let sub = Substrate::scaling_study();
+        let u = synthesize_u(50.0, sub.eps_r);
+        let ms = Microstrip { sub, width: u * sub.height, length: 1.0 };
+        let dbl = ms.db_per_wavelength(10.0e9);
+        assert!((0.1..0.6).contains(&dbl), "dB/λ = {dbl}");
+    }
+
+    #[test]
+    fn beta_matches_wavelength() {
+        let ms = Microstrip { sub: Substrate::ro4360g2(), width: 0.7e-3, length: 0.05 };
+        let f = 2.0e9;
+        let lam = ms.guided_wavelength(f);
+        assert!((ms.beta(f) * lam - 2.0 * std::f64::consts::PI).abs() < 1e-9);
+        // guided wavelength shorter than free-space by sqrt(eps_eff)
+        assert!((lam * ms.eps_eff().sqrt() - C0 / f).abs() < 1e-6);
+    }
+}

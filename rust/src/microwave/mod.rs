@@ -1,0 +1,26 @@
+//! RF/microwave network substrate.
+//!
+//! Everything the paper's prototype is *made of*, modeled in the frequency
+//! domain: S-parameter algebra with general network interconnection
+//! ([`sparams`]), two-port ABCD theory ([`abcd`]), microstrip transmission
+//! lines on the paper's Rogers RO4360G2 stackup ([`microstrip`]), branch-line
+//! quadrature hybrids ([`hybrid`]), switched-line discrete phase shifters
+//! with the Mini-Circuits JSW6-33DR+ SP6T switch model ([`phase_shifter`]),
+//! and Touchstone file I/O ([`touchstone`]).
+
+pub mod abcd;
+pub mod hybrid;
+pub mod netlist;
+pub mod microstrip;
+pub mod phase_shifter;
+pub mod sparams;
+pub mod touchstone;
+
+/// System reference impedance (Ω) used throughout the paper.
+pub const Z0: f64 = 50.0;
+
+/// The paper's design center frequency: 2 GHz.
+pub const F0: f64 = 2.0e9;
+
+/// Speed of light in vacuum (m/s).
+pub const C0: f64 = 299_792_458.0;

@@ -1,0 +1,189 @@
+//! Multi-network interconnection by netlist — glue for assembling the unit
+//! cell (hybrid → phase-shifter/reference-arm → hybrid → phase-shifter)
+//! from sub-network S-matrices.
+//!
+//! Usage: add networks (each returns a handle), declare internal
+//! connections, then `reduce()` with the desired external port order.
+
+use super::sparams::SMatrix;
+
+/// Handle to a network added to a [`Netlist`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetId(usize);
+
+/// A global port reference: network + local port.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PortRef {
+    pub net: NetId,
+    pub port: usize,
+}
+
+/// Builder for interconnected S-parameter networks.
+#[derive(Default)]
+pub struct Netlist {
+    nets: Vec<SMatrix>,
+    joins: Vec<(PortRef, PortRef)>,
+}
+
+impl Netlist {
+    /// Create an empty netlist.
+    pub fn new() -> Self {
+        Netlist::default()
+    }
+
+    /// Add a sub-network; returns its handle.
+    pub fn add(&mut self, s: SMatrix) -> NetId {
+        self.nets.push(s);
+        NetId(self.nets.len() - 1)
+    }
+
+    /// Declare a direct connection between two ports.
+    pub fn join(&mut self, a: NetId, pa: usize, b: NetId, pb: usize) {
+        assert!(pa < self.nets[a.0].ports(), "port {pa} out of range for net {:?}", a);
+        assert!(pb < self.nets[b.0].ports(), "port {pb} out of range for net {:?}", b);
+        self.joins.push((PortRef { net: a, port: pa }, PortRef { net: b, port: pb }));
+    }
+
+    /// Reduce to a single S-matrix whose ports are `externals`, in order.
+    /// Every port must be either joined exactly once or listed exactly once
+    /// in `externals`.
+    pub fn reduce(self, externals: &[PortRef]) -> SMatrix {
+        // Global port numbering: offsets per network.
+        let mut offset = Vec::with_capacity(self.nets.len());
+        let mut total = 0usize;
+        for n in &self.nets {
+            offset.push(total);
+            total += n.ports();
+        }
+        let gidx = |p: PortRef| offset[p.net.0] + p.port;
+
+        // Validate usage.
+        let mut used = vec![0u8; total];
+        for &(a, b) in &self.joins {
+            used[gidx(a)] += 1;
+            used[gidx(b)] += 1;
+        }
+        for &e in externals {
+            used[gidx(e)] += 1;
+        }
+        assert!(
+            used.iter().all(|&u| u == 1),
+            "every port must be joined or external exactly once (usage: {used:?})"
+        );
+
+        // Block-diagonal composite.
+        let mut big = self.nets[0].clone();
+        for n in &self.nets[1..] {
+            big = SMatrix::block_diag(&big, n);
+        }
+
+        // Apply joins, tracking surviving original-global-ids.
+        let mut ids: Vec<usize> = (0..total).collect();
+        for &(a, b) in &self.joins {
+            let (ga, gb) = (gidx(a), gidx(b));
+            let ka = ids.iter().position(|&x| x == ga).expect("port already consumed");
+            let kb = ids.iter().position(|&x| x == gb).expect("port already consumed");
+            big = big.connect(ka, kb);
+            ids.retain(|&x| x != ga && x != gb);
+        }
+
+        // Permute survivors into the requested external order.
+        let perm: Vec<usize> = externals
+            .iter()
+            .map(|&e| ids.iter().position(|&x| x == gidx(e)).expect("external port was joined"))
+            .collect();
+        assert_eq!(perm.len(), ids.len(), "all surviving ports must be listed in externals");
+        big.permute(&perm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::c64::C64;
+    use crate::math::deg;
+
+    #[test]
+    fn chain_of_lines_adds_phase() {
+        let mut nl = Netlist::new();
+        let a = nl.add(SMatrix::line(deg(20.0), 1.0));
+        let b = nl.add(SMatrix::line(deg(30.0), 1.0));
+        let c = nl.add(SMatrix::line(deg(40.0), 1.0));
+        nl.join(a, 1, b, 0);
+        nl.join(b, 1, c, 0);
+        let s = nl.reduce(&[PortRef { net: a, port: 0 }, PortRef { net: c, port: 1 }]);
+        assert_eq!(s.ports(), 2);
+        assert!((s.s(1, 0) - C64::cis(-deg(90.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn external_order_controls_port_numbering() {
+        let mut nl = Netlist::new();
+        let a = nl.add(SMatrix::line(deg(10.0), 0.5));
+        let s = nl.reduce(&[PortRef { net: a, port: 1 }, PortRef { net: a, port: 0 }]);
+        // Reversed: S(0,1) is now the a-forward direction; trivially symmetric
+        // here, so check both entries survive.
+        assert!((s.s(0, 1).abs() - 0.5).abs() < 1e-12);
+        assert!((s.s(1, 0).abs() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_independent_networks_stay_uncoupled() {
+        let mut nl = Netlist::new();
+        let a = nl.add(SMatrix::line(deg(10.0), 1.0));
+        let b = nl.add(SMatrix::line(deg(20.0), 1.0));
+        let s = nl.reduce(&[
+            PortRef { net: a, port: 0 },
+            PortRef { net: a, port: 1 },
+            PortRef { net: b, port: 0 },
+            PortRef { net: b, port: 1 },
+        ]);
+        assert_eq!(s.ports(), 4);
+        assert!(s.s(2, 0).abs() < 1e-15);
+        assert!((s.s(1, 0) - C64::cis(-deg(10.0))).abs() < 1e-12);
+        assert!((s.s(3, 2) - C64::cis(-deg(20.0))).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly once")]
+    fn double_use_rejected() {
+        let mut nl = Netlist::new();
+        let a = nl.add(SMatrix::line(0.1, 1.0));
+        let b = nl.add(SMatrix::line(0.1, 1.0));
+        nl.join(a, 1, b, 0);
+        // port (a,1) used again as external:
+        let _ = nl.reduce(&[
+            PortRef { net: a, port: 0 },
+            PortRef { net: a, port: 1 },
+            PortRef { net: b, port: 1 },
+        ]);
+    }
+
+    #[test]
+    fn mzi_of_two_ideal_hybrids_is_cross_at_zero_phase() {
+        // Two hybrids back to back with equal arms: eq. (5) with θ = 0 →
+        // t = j·[[0,1],[1,0]] → full cross state.
+        use crate::microwave::hybrid::ideal_hybrid;
+        let mut nl = Netlist::new();
+        let h1 = nl.add(ideal_hybrid());
+        let h2 = nl.add(ideal_hybrid());
+        let arm1 = nl.add(SMatrix::line(0.0, 1.0));
+        let arm2 = nl.add(SMatrix::line(0.0, 1.0));
+        // h1 outputs: port1 (through), port2 (coupled); h2 inputs: port0, port3.
+        nl.join(h1, 1, arm1, 0);
+        nl.join(arm1, 1, h2, 0);
+        nl.join(h1, 2, arm2, 0);
+        nl.join(arm2, 1, h2, 3);
+        let s = nl.reduce(&[
+            PortRef { net: h1, port: 0 }, // P1
+            PortRef { net: h2, port: 1 }, // P2
+            PortRef { net: h2, port: 2 }, // P3
+            PortRef { net: h1, port: 3 }, // P4
+        ]);
+        // θ=0: S21 = 0, S31 = j·1 (cross).
+        assert!(s.s(1, 0).abs() < 1e-12, "S21 = {:?}", s.s(1, 0));
+        assert!((s.s(2, 0) - C64::J).abs() < 1e-12, "S31 = {:?}", s.s(2, 0));
+        // And input match preserved:
+        assert!(s.s(0, 0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,205 @@
+//! Switched-line discrete phase shifter — two SP6T RF switches
+//! (Mini-Circuits JSW6-33DR+) selecting one of six microstrip delay lines
+//! (paper Fig. 4, Table I).
+//!
+//! Each of the two phase shifters in the unit cell contributes one of six
+//! discrete phases `θ_n = β·L_n` (Table I: 29°…154° at 2 GHz), giving the
+//! device its 36 states.
+
+use super::microstrip::{Microstrip, Substrate};
+use super::sparams::SMatrix;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::{db_to_mag, deg};
+
+/// Table I of the paper: discrete phase differences (degrees at 2 GHz)
+/// associated with paths L1…L6.
+pub const TABLE_I_DEG: [f64; 6] = [29.0, 53.0, 75.0, 104.0, 135.0, 154.0];
+
+/// Number of selectable paths per phase shifter.
+pub const N_STATES: usize = 6;
+
+/// Behavioral model of one SP6T switch path (datasheet-level).
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchModel {
+    /// Per-switch insertion loss (dB, positive).
+    pub insertion_loss_db: f64,
+    /// Per-switch port return loss (dB, positive).
+    pub return_loss_db: f64,
+    /// Static phase contribution of the switch path (radians).
+    pub path_phase: f64,
+    /// DC power consumption per switch (W) — Table II energy model input.
+    pub power_w: f64,
+}
+
+impl SwitchModel {
+    /// Mini-Circuits JSW6-33DR+ at ~2 GHz: ≈1.3 dB IL, ≈18 dB RL, 0.12 mW
+    /// (paper §V quotes the 0.12 mW figure).
+    pub fn jsw6_33dr() -> Self {
+        SwitchModel {
+            insertion_loss_db: 1.3,
+            return_loss_db: 18.0,
+            path_phase: deg(20.0),
+            power_w: 0.12e-3,
+        }
+    }
+
+    /// An ideal (lossless, reflectionless) switch — for theory curves.
+    pub fn ideal() -> Self {
+        SwitchModel { insertion_loss_db: 0.0, return_loss_db: 300.0, path_phase: 0.0, power_w: 0.0 }
+    }
+
+    /// Two-port S-matrix of the selected path.
+    pub fn sparams(&self) -> SMatrix {
+        let t = C64::from_polar(db_to_mag(-self.insertion_loss_db), -self.path_phase);
+        let r = C64::real(db_to_mag(-self.return_loss_db));
+        SMatrix::new(CMat::from_rows(2, 2, &[r, t, t, r]))
+    }
+}
+
+/// A 6-state switched-line phase shifter on a microstrip substrate.
+#[derive(Clone, Debug)]
+pub struct SwitchedLinePhaseShifter {
+    /// The six delay lines; `paths[n]` has length `l_common + Δl_n`.
+    paths: Vec<Microstrip>,
+    /// The two SP6T switches (input and output).
+    pub switch: SwitchModel,
+    /// Design center frequency.
+    pub f0: f64,
+    /// Common (state-independent) path length (m), matching the reference
+    /// arm of the unit cell.
+    pub l_common: f64,
+}
+
+impl SwitchedLinePhaseShifter {
+    /// Design the phase shifter so that the *excess* electrical length of
+    /// path `n` at `f0` equals `TABLE_I_DEG[n]` relative to a bare line of
+    /// length `l_common`.
+    pub fn design(sub: Substrate, z0: f64, f0: f64, switch: SwitchModel) -> Self {
+        // A half-wavelength of common routing is representative of the
+        // prototype's meander (Fig. 4); any value works because only the
+        // differential phase matters for the device transfer function.
+        let probe = Microstrip::with_electrical_length(sub, z0, std::f64::consts::PI, f0);
+        let l_common = probe.length;
+        let beta0 = probe.beta(f0);
+        let paths = TABLE_I_DEG
+            .iter()
+            .map(|&p| {
+                let dl = deg(p) / beta0;
+                Microstrip { length: l_common + dl, ..probe }
+            })
+            .collect();
+        SwitchedLinePhaseShifter { paths, switch, f0, l_common }
+    }
+
+    /// Two-port S-parameters of the phase shifter in state `n` at `f`.
+    pub fn sparams(&self, f: f64, state: usize) -> SMatrix {
+        assert!(state < N_STATES, "state {state} out of range");
+        let sw = self.switch.sparams();
+        let line = self.paths[state].sparams(f, 50.0);
+        SMatrix::cascade(&SMatrix::cascade(&sw, &line), &sw)
+    }
+
+    /// Excess phase of state `n` relative to a bare `l_common` line at `f`
+    /// (radians, positive = more delay). At `f0` this reproduces Table I.
+    pub fn excess_phase(&self, f: f64, state: usize) -> f64 {
+        assert!(state < N_STATES);
+        let beta = self.paths[state].beta(f);
+        beta * (self.paths[state].length - self.l_common)
+    }
+
+    /// Insertion loss (dB, positive) of state `n` at `f`.
+    pub fn insertion_loss_db(&self, f: f64, state: usize) -> f64 {
+        -20.0 * self.sparams(f, state).s(1, 0).abs().log10()
+    }
+
+    /// Total DC power drawn by the two switches (W).
+    pub fn dc_power(&self) -> f64 {
+        2.0 * self.switch.power_w
+    }
+
+    /// Physical length of path `n` (m).
+    pub fn path_length(&self, state: usize) -> f64 {
+        self.paths[state].length
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microwave::{F0, Z0};
+
+    fn ps() -> SwitchedLinePhaseShifter {
+        SwitchedLinePhaseShifter::design(Substrate::ro4360g2(), Z0, F0, SwitchModel::jsw6_33dr())
+    }
+
+    #[test]
+    fn table_i_phases_at_f0() {
+        let p = ps();
+        for (n, &want) in TABLE_I_DEG.iter().enumerate() {
+            let got = p.excess_phase(F0, n).to_degrees();
+            assert!((got - want).abs() < 1e-6, "state {n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn phases_monotonic_in_state() {
+        let p = ps();
+        for n in 1..N_STATES {
+            assert!(p.excess_phase(F0, n) > p.excess_phase(F0, n - 1));
+        }
+    }
+
+    #[test]
+    fn excess_phase_scales_with_frequency() {
+        // TEM-ish line: phase ∝ f (quasi-static εeff constant).
+        let p = ps();
+        let p1 = p.excess_phase(1.0e9, 3);
+        let p2 = p.excess_phase(2.0e9, 3);
+        assert!((p2 / p1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn insertion_loss_in_datasheet_ballpark() {
+        // Two 1.3 dB switches + line loss: expect ≈2.6–3.6 dB.
+        let p = ps();
+        for n in 0..N_STATES {
+            let il = p.insertion_loss_db(F0, n);
+            assert!((2.3..4.0).contains(&il), "state {n}: IL = {il} dB");
+        }
+    }
+
+    #[test]
+    fn longer_paths_lose_slightly_more() {
+        let p = ps();
+        assert!(p.insertion_loss_db(F0, 5) > p.insertion_loss_db(F0, 0));
+    }
+
+    #[test]
+    fn sparams_reciprocal_and_passive() {
+        let p = ps();
+        for n in 0..N_STATES {
+            let s = p.sparams(F0, n);
+            assert!(s.is_reciprocal(1e-9));
+            assert!(s.is_passive(1e-9));
+        }
+    }
+
+    #[test]
+    fn ideal_switch_preserves_phase_only() {
+        let p = SwitchedLinePhaseShifter::design(
+            Substrate { tan_d: 0.0, sigma: 1e30, ..Substrate::ro4360g2() },
+            Z0,
+            F0,
+            SwitchModel::ideal(),
+        );
+        let s = p.sparams(F0, 2);
+        assert!((s.s(1, 0).abs() - 1.0).abs() < 1e-6, "|S21| = {}", s.s(1, 0).abs());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn state_bounds_checked() {
+        ps().sparams(F0, 6);
+    }
+}

@@ -1,0 +1,279 @@
+//! N-port S-parameter matrices and general network interconnection.
+//!
+//! The unit-cell circuit model (hybrid → phase-shifter/through → hybrid →
+//! phase-shifter) is assembled by placing sub-network S-matrices block-
+//! diagonally and then joining internal port pairs with the standard
+//! self-connection formula (Filipsson; Monaco & Tiberio), which is exact for
+//! direct (zero-length, reference-impedance-matched) connections.
+
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+
+/// An N-port scattering matrix at a single frequency, referenced to a
+/// common real impedance (50 Ω throughout this library).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SMatrix {
+    m: CMat,
+}
+
+impl SMatrix {
+    /// Wrap an `n×n` complex matrix as an S-matrix.
+    pub fn new(m: CMat) -> Self {
+        assert!(m.is_square(), "S-matrix must be square");
+        SMatrix { m }
+    }
+
+    /// Number of ports.
+    #[inline]
+    pub fn ports(&self) -> usize {
+        self.m.rows()
+    }
+
+    /// Entry `S[i][j]` — response at port `i` from excitation at port `j`
+    /// (0-based indices).
+    #[inline]
+    pub fn s(&self, i: usize, j: usize) -> C64 {
+        self.m[(i, j)]
+    }
+
+    /// Mutable entry access.
+    #[inline]
+    pub fn s_mut(&mut self, i: usize, j: usize) -> &mut C64 {
+        &mut self.m[(i, j)]
+    }
+
+    /// Underlying matrix.
+    #[inline]
+    pub fn mat(&self) -> &CMat {
+        &self.m
+    }
+
+    /// A matched, reciprocal through-connection between two ports.
+    pub fn through() -> Self {
+        SMatrix::new(CMat::from_rows(2, 2, &[C64::ZERO, C64::ONE, C64::ONE, C64::ZERO]))
+    }
+
+    /// Ideal lossless transmission-line segment: through with phase delay
+    /// `e^{-j·theta}` (and optional amplitude `a ≤ 1`).
+    pub fn line(theta: f64, a: f64) -> Self {
+        let t = C64::from_polar(a, -theta);
+        SMatrix::new(CMat::from_rows(2, 2, &[C64::ZERO, t, t, C64::ZERO]))
+    }
+
+    /// Block-diagonal composition: an `(na+nb)`-port network whose first
+    /// `na` ports are `a`'s and the rest are `b`'s (no coupling).
+    pub fn block_diag(a: &SMatrix, b: &SMatrix) -> SMatrix {
+        let na = a.ports();
+        let nb = b.ports();
+        let mut m = CMat::zeros(na + nb, na + nb);
+        m.set_block(0, 0, a.mat());
+        m.set_block(na, na, b.mat());
+        SMatrix::new(m)
+    }
+
+    /// Join ports `k` and `l` of this network with a direct connection and
+    /// return the reduced `(n-2)`-port network. Remaining ports keep their
+    /// relative order.
+    ///
+    /// Self-connection formula: with `Δ = (1 − S_kl)(1 − S_lk) − S_kk·S_ll`,
+    ///
+    /// ```text
+    /// S'_ij = S_ij + [ S_kj·S_il·(1 − S_lk) + S_lj·S_ik·(1 − S_kl)
+    ///                + S_kj·S_ll·S_ik      + S_lj·S_kk·S_il ] / Δ
+    /// ```
+    pub fn connect(&self, k: usize, l: usize) -> SMatrix {
+        let n = self.ports();
+        assert!(k != l && k < n && l < n, "bad ports k={k} l={l} n={n}");
+        let skl = self.s(k, l);
+        let slk = self.s(l, k);
+        let skk = self.s(k, k);
+        let sll = self.s(l, l);
+        let delta = (C64::ONE - skl) * (C64::ONE - slk) - skk * sll;
+        assert!(
+            delta.abs() > 1e-12,
+            "singular interconnection (Δ≈0): resonant loop between ports {k} and {l}"
+        );
+        let keep: Vec<usize> = (0..n).filter(|&p| p != k && p != l).collect();
+        let mut out = CMat::zeros(keep.len(), keep.len());
+        for (oi, &i) in keep.iter().enumerate() {
+            for (oj, &j) in keep.iter().enumerate() {
+                let skj = self.s(k, j);
+                let slj = self.s(l, j);
+                let sik = self.s(i, k);
+                let sil = self.s(i, l);
+                let num = skj * sil * (C64::ONE - slk)
+                    + slj * sik * (C64::ONE - skl)
+                    + skj * sll * sik
+                    + slj * skk * sil;
+                out[(oi, oj)] = self.s(i, j) + num / delta;
+            }
+        }
+        SMatrix::new(out)
+    }
+
+    /// Cascade two 2-port networks: port 2 of `a` into port 1 of `b`.
+    /// Result ports: (port 1 of `a`, port 2 of `b`).
+    pub fn cascade(a: &SMatrix, b: &SMatrix) -> SMatrix {
+        assert_eq!(a.ports(), 2);
+        assert_eq!(b.ports(), 2);
+        // Direct two-port cascade (avoids the general reduction for speed):
+        let d = C64::ONE - a.s(1, 1) * b.s(0, 0);
+        let s11 = a.s(0, 0) + a.s(0, 1) * b.s(0, 0) * a.s(1, 0) / d;
+        let s12 = a.s(0, 1) * b.s(0, 1) / d;
+        let s21 = a.s(1, 0) * b.s(1, 0) / d;
+        let s22 = b.s(1, 1) + b.s(1, 0) * a.s(1, 1) * b.s(0, 1) / d;
+        SMatrix::new(CMat::from_rows(2, 2, &[s11, s12, s21, s22]))
+    }
+
+    /// Reorder ports: `perm[new_index] = old_index`.
+    pub fn permute(&self, perm: &[usize]) -> SMatrix {
+        let n = self.ports();
+        assert_eq!(perm.len(), n);
+        let mut seen = vec![false; n];
+        for &p in perm {
+            assert!(p < n && !seen[p], "invalid permutation");
+            seen[p] = true;
+        }
+        SMatrix::new(CMat::from_fn(n, n, |i, j| self.s(perm[i], perm[j])))
+    }
+
+    /// Lossless (unitary) check: `S^H S = I` within `tol`.
+    pub fn is_lossless(&self, tol: f64) -> bool {
+        self.m.is_unitary(tol)
+    }
+
+    /// Reciprocity check: `S = S^T` within `tol`.
+    pub fn is_reciprocal(&self, tol: f64) -> bool {
+        self.m.sub(&self.m.transpose()).max_abs() < tol
+    }
+
+    /// Passivity check: no excitation can produce net power gain
+    /// (largest singular value of S ≤ 1 + tol).
+    pub fn is_passive(&self, tol: f64) -> bool {
+        let f = crate::math::svd::svd(&self.m);
+        f.s.first().map(|&s| s <= 1.0 + tol).unwrap_or(true)
+    }
+}
+
+/// Join port `pa` of network `a` to port `pb` of network `b`. The result's
+/// ports are `a`'s remaining ports (in order) followed by `b`'s remaining.
+pub fn connect_networks(a: &SMatrix, pa: usize, b: &SMatrix, pb: usize) -> SMatrix {
+    let big = SMatrix::block_diag(a, b);
+    big.connect(pa, a.ports() + pb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::deg;
+
+    fn approx(a: C64, b: C64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn through_cascade_is_identity_like() {
+        let t = SMatrix::through();
+        let c = SMatrix::cascade(&t, &t);
+        assert!(approx(c.s(1, 0), C64::ONE, 1e-15));
+        assert!(approx(c.s(0, 0), C64::ZERO, 1e-15));
+    }
+
+    #[test]
+    fn line_phases_add_under_cascade() {
+        let a = SMatrix::line(deg(30.0), 1.0);
+        let b = SMatrix::line(deg(45.0), 1.0);
+        let c = SMatrix::cascade(&a, &b);
+        assert!(approx(c.s(1, 0), C64::cis(-deg(75.0)), 1e-12));
+        assert!(c.is_lossless(1e-12));
+        assert!(c.is_reciprocal(1e-12));
+    }
+
+    #[test]
+    fn lossy_line_amplitudes_multiply() {
+        let a = SMatrix::line(0.1, 0.9);
+        let b = SMatrix::line(0.2, 0.8);
+        let c = SMatrix::cascade(&a, &b);
+        assert!((c.s(1, 0).abs() - 0.72).abs() < 1e-12);
+        assert!(c.is_passive(1e-9));
+        assert!(!c.is_lossless(1e-3));
+    }
+
+    #[test]
+    fn general_connect_matches_two_port_cascade() {
+        // Mismatched, reflective two-ports: cascade() and the general
+        // connect() must agree.
+        let a = SMatrix::new(CMat::from_rows(
+            2,
+            2,
+            &[
+                C64::new(0.2, 0.1),
+                C64::new(0.0, -0.9),
+                C64::new(0.0, -0.9),
+                C64::new(-0.1, 0.05),
+            ],
+        ));
+        let b = SMatrix::new(CMat::from_rows(
+            2,
+            2,
+            &[
+                C64::new(-0.15, 0.0),
+                C64::new(0.85, 0.2),
+                C64::new(0.85, 0.2),
+                C64::new(0.1, -0.1),
+            ],
+        ));
+        let via_cascade = SMatrix::cascade(&a, &b);
+        let via_connect = connect_networks(&a, 1, &b, 0);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!(
+                    approx(via_cascade.s(i, j), via_connect.s(i, j), 1e-12),
+                    "S{i}{j}: {:?} vs {:?}",
+                    via_cascade.s(i, j),
+                    via_connect.s(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn connect_reduces_port_count_and_keeps_order() {
+        // 3-port: a through (0<->1) plus an isolated port 2 with full
+        // reflection. Connecting 1 to 2's... instead: block_diag of a line
+        // and a 1-port reflector is easiest built by hand.
+        let mut m = CMat::zeros(3, 3);
+        m[(0, 1)] = C64::ONE;
+        m[(1, 0)] = C64::ONE;
+        m[(2, 2)] = C64::from_polar(1.0, -0.4); // reflective 1-port mixed in
+        let net = SMatrix::new(m);
+        // Connect port 1 into the reflector at port 2: port 0 sees the
+        // reflection coefficient through the through-line.
+        let r = net.connect(1, 2);
+        assert_eq!(r.ports(), 1);
+        assert!(approx(r.s(0, 0), C64::from_polar(1.0, -0.4), 1e-12));
+    }
+
+    #[test]
+    fn permute_swaps_rows_and_cols() {
+        let s = SMatrix::new(CMat::from_fn(3, 3, |i, j| C64::new(i as f64, j as f64)));
+        let p = s.permute(&[2, 0, 1]);
+        assert_eq!(p.s(0, 0), s.s(2, 2));
+        assert_eq!(p.s(0, 1), s.s(2, 0));
+        assert_eq!(p.s(1, 2), s.s(0, 1));
+    }
+
+    #[test]
+    fn passivity_rejects_gain() {
+        let s = SMatrix::new(CMat::from_rows(2, 2, &[C64::ZERO, C64::real(1.2), C64::real(1.2), C64::ZERO]));
+        assert!(!s.is_passive(1e-6));
+    }
+
+    #[test]
+    fn matched_attenuators_cascade_through_connect_networks() {
+        let att = |a: f64| SMatrix::line(0.0, a);
+        let c = connect_networks(&att(0.5), 1, &att(0.25), 0);
+        assert!(approx(c.s(1, 0), C64::real(0.125), 1e-12));
+        assert!(approx(c.s(0, 0), C64::ZERO, 1e-12));
+    }
+}

@@ -1,0 +1,268 @@
+//! Touchstone (.sNp) reader/writer — the interchange format for the
+//! library's synthetic "measured" S-parameter datasets (virtual-VNA output
+//! can be dumped, inspected with standard RF tooling, and reloaded).
+//!
+//! Supports Touchstone v1: `# <freq-unit> S <RI|MA|DB> R <z0>`, with the
+//! 2-port column order quirk (S11 S21 S12 S22) handled.
+
+use super::sparams::SMatrix;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use std::fmt::Write as _;
+
+/// One S-parameter dataset: a frequency sweep of N-port matrices.
+#[derive(Clone, Debug)]
+pub struct Touchstone {
+    /// Number of ports.
+    pub ports: usize,
+    /// Reference impedance (Ω).
+    pub z0: f64,
+    /// (frequency in Hz, S-matrix) pairs, ascending in frequency.
+    pub points: Vec<(f64, SMatrix)>,
+}
+
+impl Touchstone {
+    /// Create an empty dataset.
+    pub fn new(ports: usize, z0: f64) -> Self {
+        Touchstone { ports, z0, points: Vec::new() }
+    }
+
+    /// Append a sweep point (must be in ascending frequency order).
+    pub fn push(&mut self, f: f64, s: SMatrix) {
+        assert_eq!(s.ports(), self.ports, "port count mismatch");
+        if let Some(&(last, _)) = self.points.last() {
+            assert!(f > last, "frequencies must ascend");
+        }
+        self.points.push((f, s));
+    }
+
+    /// Nearest-point lookup by frequency.
+    pub fn at(&self, f: f64) -> Option<&SMatrix> {
+        self.points
+            .iter()
+            .min_by(|a, b| (a.0 - f).abs().partial_cmp(&(b.0 - f).abs()).unwrap())
+            .map(|(_, s)| s)
+    }
+
+    /// Serialize in RI (real/imaginary) format with GHz frequencies.
+    pub fn to_string_ri(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "! rfnn virtual-VNA export, {} ports", self.ports);
+        let _ = writeln!(out, "# GHz S RI R {}", self.z0);
+        for (f, s) in &self.points {
+            let _ = write!(out, "{:.9}", f / 1e9);
+            for (i, j) in index_order(self.ports) {
+                let z = s.s(i, j);
+                let _ = write!(out, " {:.12e} {:.12e}", z.re, z.im);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a Touchstone v1 document with `ports` ports.
+    /// (v1 does not encode the port count in the body; it comes from the
+    /// file extension, so the caller must supply it.)
+    pub fn parse(src: &str, ports: usize) -> Result<Touchstone, String> {
+        let mut unit = 1e9; // default GHz
+        let mut fmt = Format::Ri;
+        let mut z0 = 50.0;
+        let mut nums: Vec<f64> = Vec::new();
+        let mut saw_option = false;
+        for line in src.lines() {
+            let line = line.split('!').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                if saw_option {
+                    continue; // v1: only first option line counts
+                }
+                saw_option = true;
+                let toks: Vec<&str> = rest.split_whitespace().collect();
+                let mut i = 0;
+                while i < toks.len() {
+                    match toks[i].to_ascii_uppercase().as_str() {
+                        "HZ" => unit = 1.0,
+                        "KHZ" => unit = 1e3,
+                        "MHZ" => unit = 1e6,
+                        "GHZ" => unit = 1e9,
+                        "S" => {}
+                        "RI" => fmt = Format::Ri,
+                        "MA" => fmt = Format::Ma,
+                        "DB" => fmt = Format::Db,
+                        "R" => {
+                            i += 1;
+                            z0 = toks.get(i).and_then(|t| t.parse().ok()).ok_or("bad R value")?;
+                        }
+                        t => return Err(format!("unsupported option token '{t}'")),
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            for tok in line.split_whitespace() {
+                nums.push(tok.parse::<f64>().map_err(|e| format!("bad number '{tok}': {e}"))?);
+            }
+        }
+        let vals_per_point = 1 + 2 * ports * ports;
+        if nums.is_empty() || nums.len() % vals_per_point != 0 {
+            return Err(format!(
+                "token count {} not a multiple of {vals_per_point} for {ports} ports",
+                nums.len()
+            ));
+        }
+        let mut ts = Touchstone::new(ports, z0);
+        for chunk in nums.chunks(vals_per_point) {
+            let f = chunk[0] * unit;
+            let mut m = CMat::zeros(ports, ports);
+            for (k, (i, j)) in index_order(ports).into_iter().enumerate() {
+                let a = chunk[1 + 2 * k];
+                let b = chunk[2 + 2 * k];
+                m[(i, j)] = match fmt {
+                    Format::Ri => C64::new(a, b),
+                    Format::Ma => C64::from_polar(a, b.to_radians()),
+                    Format::Db => C64::from_polar(10f64.powf(a / 20.0), b.to_radians()),
+                };
+            }
+            ts.push(f, SMatrix::new(m));
+        }
+        Ok(ts)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_string_ri())
+    }
+
+    /// Read from a file, inferring port count from the `.sNp` extension.
+    pub fn load(path: &std::path::Path) -> Result<Touchstone, String> {
+        let ext = path.extension().and_then(|e| e.to_str()).ok_or("missing extension")?;
+        let ports: usize = ext
+            .strip_prefix('s')
+            .and_then(|e| e.strip_suffix('p'))
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| format!("cannot infer ports from extension '{ext}'"))?;
+        let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Touchstone::parse(&src, ports)
+    }
+}
+
+enum Format {
+    Ri,
+    Ma,
+    Db,
+}
+
+/// Matrix traversal order per the v1 spec: row-major, EXCEPT 2-port files
+/// which use S11 S21 S12 S22.
+fn index_order(ports: usize) -> Vec<(usize, usize)> {
+    if ports == 2 {
+        vec![(0, 0), (1, 0), (0, 1), (1, 1)]
+    } else {
+        (0..ports).flat_map(|i| (0..ports).map(move |j| (i, j))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microwave::hybrid::ideal_hybrid;
+
+    fn sweep4() -> Touchstone {
+        let mut ts = Touchstone::new(4, 50.0);
+        for k in 0..5 {
+            let f = 1.8e9 + k as f64 * 0.1e9;
+            // Perturb the ideal hybrid slightly per point so points differ.
+            let mut s = ideal_hybrid();
+            *s.s_mut(0, 0) = C64::new(0.001 * k as f64, -0.002);
+            ts.push(f, s);
+        }
+        ts
+    }
+
+    #[test]
+    fn round_trip_4port_ri() {
+        let ts = sweep4();
+        let text = ts.to_string_ri();
+        let back = Touchstone::parse(&text, 4).expect("parse");
+        assert_eq!(back.points.len(), ts.points.len());
+        for ((f1, s1), (f2, s2)) in ts.points.iter().zip(&back.points) {
+            assert!((f1 - f2).abs() < 1.0);
+            assert!(s1.mat().sub(s2.mat()).max_abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn two_port_column_order_quirk() {
+        // A non-symmetric 2-port distinguishes S21 from S12.
+        let mut ts = Touchstone::new(2, 50.0);
+        let m = CMat::from_rows(
+            2,
+            2,
+            &[C64::real(0.1), C64::real(0.2), C64::real(0.3), C64::real(0.4)],
+        );
+        ts.push(1e9, SMatrix::new(m));
+        let text = ts.to_string_ri();
+        // Data line must read S11(0.1) S21(0.3) S12(0.2) S22(0.4).
+        let data = text.lines().last().unwrap();
+        let toks: Vec<f64> =
+            data.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        assert_eq!(&toks[1..], &[0.1, 0.0, 0.3, 0.0, 0.2, 0.0, 0.4, 0.0]);
+        let back = Touchstone::parse(&text, 2).unwrap();
+        assert!((back.points[0].1.s(1, 0).re - 0.3).abs() < 1e-12);
+        assert!((back.points[0].1.s(0, 1).re - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_ma_format() {
+        let src = "# MHz S MA R 50\n100 0.5 45\n";
+        let ts = Touchstone::parse(src, 1).unwrap();
+        assert_eq!(ts.points.len(), 1);
+        assert!((ts.points[0].0 - 100e6).abs() < 1.0);
+        let s11 = ts.points[0].1.s(0, 0);
+        assert!((s11 - C64::from_polar(0.5, std::f64::consts::FRAC_PI_4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_db_format() {
+        let src = "# Hz S DB R 75\n1000 -6.0205999 90\n";
+        let ts = Touchstone::parse(src, 1).unwrap();
+        assert!((ts.z0 - 75.0).abs() < 1e-12);
+        let s11 = ts.points[0].1.s(0, 0);
+        assert!((s11 - C64::new(0.0, 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let src = "! header comment\n\n# GHz S RI R 50\n! mid comment\n1.0 0.1 0.2 ! inline\n";
+        let ts = Touchstone::parse(src, 1).unwrap();
+        assert_eq!(ts.points.len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Touchstone::parse("# GHz S RI R 50\n1.0 0.1\n", 2).is_err());
+        assert!(Touchstone::parse("# GHz S XX R 50\n", 1).is_err());
+    }
+
+    #[test]
+    fn nearest_lookup() {
+        let ts = sweep4();
+        let s = ts.at(2.04e9).unwrap();
+        // nearest point is 2.0 GHz (k=2) whose S11 re = 0.002
+        assert!((s.s(0, 0).re - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let ts = sweep4();
+        let dir = std::env::temp_dir().join("rfnn_touchstone_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.s4p");
+        ts.save(&path).unwrap();
+        let back = Touchstone::load(&path).unwrap();
+        assert_eq!(back.ports, 4);
+        assert_eq!(back.points.len(), 5);
+    }
+}

@@ -1,0 +1,198 @@
+//! Discrete Simultaneous Perturbation Stochastic Approximation (DSPSA) —
+//! the optimizer the paper uses for the device biasing states
+//! (Algorithm I, citing Wang & Spall [44]).
+//!
+//! The device parameters live on the integer lattice `{lo..=hi}^d` (path
+//! indices of the phase shifters). DSPSA keeps a continuous iterate `x`,
+//! perturbs around the mid-point `π(x) = ⌊x⌋ + ½` with a Rademacher vector
+//! `Δ/2`, measures the loss at the two *integer* neighbors, and descends
+//! the two-point gradient estimate — only 2 loss evaluations per step no
+//! matter how many parameters, which is what makes hardware-in-the-loop
+//! training practical.
+
+use crate::math::rng::Rng;
+
+/// DSPSA hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DspsaConfig {
+    /// Gain numerator `a` in `a_k = a / (k + 1 + A)^α`.
+    pub a: f64,
+    /// Gain stability constant `A`.
+    pub big_a: f64,
+    /// Gain decay exponent `α` (Spall's 0.602 default).
+    pub alpha: f64,
+    /// Smallest admissible integer value.
+    pub lo: i64,
+    /// Largest admissible integer value.
+    pub hi: i64,
+}
+
+impl Default for DspsaConfig {
+    fn default() -> Self {
+        // Tuned for the 6-state phase-shifter lattice.
+        DspsaConfig { a: 1.2, big_a: 10.0, alpha: 0.602, lo: 0, hi: 5 }
+    }
+}
+
+/// One DSPSA proposal: evaluate the loss at `plus` and `minus`, then call
+/// [`Dspsa::update`] with the two measurements.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub plus: Vec<usize>,
+    pub minus: Vec<usize>,
+    deltas: Vec<f64>,
+}
+
+/// The DSPSA optimizer state.
+#[derive(Clone, Debug)]
+pub struct Dspsa {
+    cfg: DspsaConfig,
+    /// Continuous iterate.
+    x: Vec<f64>,
+    k: u64,
+    rng: Rng,
+}
+
+impl Dspsa {
+    /// Start from an integer initial point.
+    pub fn new(cfg: DspsaConfig, init: &[usize], seed: u64) -> Self {
+        let x = init.iter().map(|&v| v as f64).collect();
+        Dspsa { cfg, x, k: 0, rng: Rng::new(seed) }
+    }
+
+    /// Dimension of the parameter vector.
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Draw a perturbation pair around the current iterate.
+    pub fn propose(&mut self) -> Proposal {
+        let d = self.x.len();
+        let mut plus = Vec::with_capacity(d);
+        let mut minus = Vec::with_capacity(d);
+        let mut deltas = Vec::with_capacity(d);
+        for i in 0..d {
+            let delta = self.rng.sign(); // ±1
+            // π(x) = ⌊x⌋ + ½ ; π(x) ± Δ/2 lands on ⌊x⌋ or ⌊x⌋+1.
+            let base = self.x[i].floor();
+            let up = (base as i64 + 1).clamp(self.cfg.lo, self.cfg.hi) as usize;
+            let dn = (base as i64).clamp(self.cfg.lo, self.cfg.hi) as usize;
+            if delta > 0.0 {
+                plus.push(up);
+                minus.push(dn);
+            } else {
+                plus.push(dn);
+                minus.push(up);
+            }
+            deltas.push(delta);
+        }
+        Proposal { plus, minus, deltas }
+    }
+
+    /// Consume the two loss measurements for `p` and descend.
+    pub fn update(&mut self, p: &Proposal, loss_plus: f64, loss_minus: f64) {
+        let ak = self.cfg.a / ((self.k + 1) as f64 + self.cfg.big_a).powf(self.cfg.alpha);
+        let diff = loss_plus - loss_minus;
+        for (xi, &delta) in self.x.iter_mut().zip(&p.deltas) {
+            // ĝ_i = (y⁺ − y⁻) / Δ_i  (Δ_i = ±1).
+            let g = diff * delta;
+            *xi = (*xi - ak * g).clamp(self.cfg.lo as f64, self.cfg.hi as f64);
+        }
+        self.k += 1;
+    }
+
+    /// The current best integer point (rounded iterate).
+    pub fn current(&self) -> Vec<usize> {
+        self.x.iter().map(|&v| v.round().clamp(self.cfg.lo as f64, self.cfg.hi as f64) as usize).collect()
+    }
+
+    /// Convenience: one full DSPSA step against a loss oracle.
+    pub fn step(&mut self, mut loss: impl FnMut(&[usize]) -> f64) {
+        let p = self.propose();
+        let lp = loss(&p.plus);
+        let lm = loss(&p.minus);
+        self.update(&p, lp, lm);
+    }
+
+    /// Iteration counter.
+    pub fn iterations(&self) -> u64 {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposals_stay_on_lattice() {
+        let mut d = Dspsa::new(DspsaConfig::default(), &[0, 5, 3], 1);
+        for _ in 0..100 {
+            let p = d.propose();
+            for (&a, &b) in p.plus.iter().zip(&p.minus) {
+                assert!(a <= 5 && b <= 5);
+                assert!((a as i64 - b as i64).abs() <= 1);
+            }
+            d.update(&p, 1.0, 1.0); // no-op gradient, exercises clamping
+        }
+    }
+
+    #[test]
+    fn converges_on_separable_quadratic() {
+        let target = [4usize, 1, 0, 5, 2, 3];
+        let loss = |s: &[usize]| -> f64 {
+            s.iter().zip(&target).map(|(&a, &t)| ((a as f64) - (t as f64)).powi(2)).sum()
+        };
+        let mut d = Dspsa::new(DspsaConfig::default(), &[2; 6], 7);
+        for _ in 0..400 {
+            d.step(loss);
+        }
+        assert_eq!(d.current(), target.to_vec(), "x = {:?}", d.x);
+    }
+
+    #[test]
+    fn converges_under_noise() {
+        let target = [3usize, 0, 5, 2];
+        let mut noise_rng = Rng::new(99);
+        let mut d = Dspsa::new(DspsaConfig::default(), &[1; 4], 13);
+        for _ in 0..1500 {
+            let p = d.propose();
+            let eval = |s: &[usize], r: &mut Rng| -> f64 {
+                s.iter().zip(&target).map(|(&a, &t)| ((a as f64) - (t as f64)).powi(2)).sum::<f64>()
+                    + 0.3 * r.normal()
+            };
+            let lp = eval(&p.plus, &mut noise_rng);
+            let lm = eval(&p.minus, &mut noise_rng);
+            d.update(&p, lp, lm);
+        }
+        let cur = d.current();
+        let err: f64 = cur.iter().zip(&target).map(|(&a, &t)| ((a as f64) - (t as f64)).abs()).sum();
+        assert!(err <= 1.0, "current {cur:?} vs target {target:?}");
+    }
+
+    #[test]
+    fn coupled_objective() {
+        // loss = (θ0 + θ1 − 6)² + (θ0 − θ1)² → optimum θ0 = θ1 = 3.
+        let loss = |s: &[usize]| -> f64 {
+            let (a, b) = (s[0] as f64, s[1] as f64);
+            (a + b - 6.0).powi(2) + (a - b).powi(2)
+        };
+        let mut d = Dspsa::new(DspsaConfig::default(), &[0, 5], 21);
+        for _ in 0..600 {
+            d.step(loss);
+        }
+        assert_eq!(d.current(), vec![3, 3], "x = {:?}", d.x);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = |seed: u64| {
+            let mut d = Dspsa::new(DspsaConfig::default(), &[2, 2], seed);
+            for _ in 0..50 {
+                d.step(|s| s.iter().map(|&v| v as f64).sum());
+            }
+            d.current()
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

@@ -1,0 +1,203 @@
+//! Layers and activations with hand-derived backward passes.
+
+use super::tensor::Mat;
+use crate::math::rng::Rng;
+
+/// A fully-connected layer `y = x·Wᵀ + b` (batch rows in `x`).
+#[derive(Clone, Debug)]
+pub struct Dense {
+    /// Weights, shape `[out, in]`.
+    pub w: Mat,
+    /// Bias, length `out`.
+    pub b: Vec<f64>,
+    /// Cached input for backward.
+    x: Option<Mat>,
+}
+
+impl Dense {
+    /// He-initialized dense layer.
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        Dense { w: Mat::he_init(out_dim, in_dim, rng), b: vec![0.0; out_dim], x: None }
+    }
+
+    /// Forward pass; caches the input for backward.
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        self.x = Some(x.clone());
+        x.matmul_nt(&self.w).add_row_broadcast(&self.b)
+    }
+
+    /// Forward without caching (inference).
+    pub fn infer(&self, x: &Mat) -> Mat {
+        x.matmul_nt(&self.w).add_row_broadcast(&self.b)
+    }
+
+    /// Backward: given `dL/dy`, returns `dL/dx` and accumulates gradients.
+    pub fn backward(&self, dy: &Mat) -> (Mat, DenseGrads) {
+        let x = self.x.as_ref().expect("forward before backward");
+        let dx = dy.matmul(&self.w);
+        let dw = dy.matmul_tn(x); // [out, in]
+        let db = dy.col_sums();
+        (dx, DenseGrads { dw, db })
+    }
+
+    /// Apply an SGD step `w ← w − lr·dw`, `b ← b − lr·db`.
+    pub fn step(&mut self, g: &DenseGrads, lr: f64) {
+        self.w.axpy(-lr, &g.dw);
+        for (b, &d) in self.b.iter_mut().zip(&g.db) {
+            *b -= lr * d;
+        }
+    }
+}
+
+/// Gradients of a [`Dense`] layer.
+#[derive(Clone, Debug)]
+pub struct DenseGrads {
+    pub dw: Mat,
+    pub db: Vec<f64>,
+}
+
+/// Leaky ReLU activation (paper's hidden-Layer-1 activation).
+pub fn leaky_relu(x: &Mat, alpha: f64) -> Mat {
+    x.map(|v| if v >= 0.0 { v } else { alpha * v })
+}
+
+/// Backward of leaky ReLU: `dL/dx = dL/dy ⊙ f'(x)`.
+pub fn leaky_relu_backward(x: &Mat, dy: &Mat, alpha: f64) -> Mat {
+    x.zip(dy, |xv, dv| if xv >= 0.0 { dv } else { alpha * dv })
+}
+
+/// Sigmoid activation (paper's output activation for binary classification).
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Row-wise softmax (paper's MNIST output activation).
+pub fn softmax_rows(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for i in 0..out.rows() {
+        let row = out.row_mut(i);
+        let m = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Magnitude activation |·| (the physics-native nonlinearity, eq. 20).
+pub fn abs_act(x: &Mat) -> Mat {
+    x.map(f64::abs)
+}
+
+/// Backward of |·| (subgradient 0 at 0).
+pub fn abs_backward(x: &Mat, dy: &Mat) -> Mat {
+    x.zip(dy, |xv, dv| {
+        if xv > 0.0 {
+            dv
+        } else if xv < 0.0 {
+            -dv
+        } else {
+            0.0
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central-difference gradient check for a scalar function of a Mat.
+    fn numgrad(f: &mut dyn FnMut(&Mat) -> f64, x: &Mat, eps: f64) -> Mat {
+        let mut g = Mat::zeros(x.rows(), x.cols());
+        for i in 0..x.rows() {
+            for j in 0..x.cols() {
+                let mut xp = x.clone();
+                xp[(i, j)] += eps;
+                let mut xm = x.clone();
+                xm[(i, j)] -= eps;
+                g[(i, j)] = (f(&xp) - f(&xm)) / (2.0 * eps);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn dense_forward_shape_and_value() {
+        let mut rng = Rng::new(1);
+        let mut d = Dense::new(3, 2, &mut rng);
+        d.w = Mat::from_rows(2, 3, &[1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+        d.b = vec![0.5, -0.5];
+        let x = Mat::from_rows(1, 3, &[1.0, 2.0, 3.0]);
+        let y = d.forward(&x);
+        assert_eq!(y, Mat::from_rows(1, 2, &[1.5, 4.5]));
+    }
+
+    #[test]
+    fn dense_backward_matches_numerical() {
+        let mut rng = Rng::new(2);
+        let mut d = Dense::new(4, 3, &mut rng);
+        let x = Mat::from_fn(2, 4, |_, _| rng.normal());
+        // Loss = sum of outputs → dL/dy = ones.
+        let y = d.forward(&x);
+        let dy = Mat::from_fn(y.rows(), y.cols(), |_, _| 1.0);
+        let (dx, grads) = d.backward(&dy);
+
+        let mut dc = d.clone();
+        let gx = numgrad(&mut |xx: &Mat| dc.infer(xx).data().iter().sum(), &x, 1e-6);
+        assert!(dx.zip(&gx, |a, b| (a - b).abs()).max_abs() < 1e-6);
+
+        // Weight gradient check on one entry.
+        let f_w = |w00: f64| {
+            let mut d2 = d.clone();
+            d2.w[(0, 0)] = w00;
+            d2.infer(&x).data().iter().sum::<f64>()
+        };
+        let eps = 1e-6;
+        let num = (f_w(d.w[(0, 0)] + eps) - f_w(d.w[(0, 0)] - eps)) / (2.0 * eps);
+        assert!((grads.dw[(0, 0)] - num).abs() < 1e-6);
+        // Bias gradient: sum over batch = 2.
+        assert!((grads.db[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaky_relu_and_backward() {
+        let x = Mat::from_rows(1, 4, &[-2.0, -0.5, 0.5, 2.0]);
+        let y = leaky_relu(&x, 0.01);
+        assert_eq!(y, Mat::from_rows(1, 4, &[-0.02, -0.005, 0.5, 2.0]));
+        let dy = Mat::from_rows(1, 4, &[1.0, 1.0, 1.0, 1.0]);
+        let dx = leaky_relu_backward(&x, &dy, 0.01);
+        assert_eq!(dx, Mat::from_rows(1, 4, &[0.01, 0.01, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let x = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0]);
+        let p = softmax_rows(&x);
+        for i in 0..2 {
+            let s: f64 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // Large inputs don't overflow (max-subtraction).
+        assert!(p.data().iter().all(|v| v.is_finite()));
+        assert!((p[(1, 0)] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((sigmoid(3.0) + sigmoid(-3.0) - 1.0).abs() < 1e-12);
+        assert!(sigmoid(100.0) <= 1.0 && sigmoid(-100.0) >= 0.0);
+    }
+
+    #[test]
+    fn abs_backward_signs() {
+        let x = Mat::from_rows(1, 3, &[-1.0, 0.0, 2.0]);
+        let dy = Mat::from_rows(1, 3, &[1.0, 1.0, 1.0]);
+        assert_eq!(abs_backward(&x, &dy), Mat::from_rows(1, 3, &[-1.0, 0.0, 1.0]));
+    }
+}

@@ -1,0 +1,136 @@
+//! Loss functions with fused backward passes.
+
+use super::layers::softmax_rows;
+use super::tensor::Mat;
+
+/// Softmax + cross-entropy over logits, labels as class indices.
+/// Returns `(mean_loss, dL/dlogits)` — the fused backward
+/// `(softmax(z) − onehot(y)) / batch`.
+pub fn softmax_xent(logits: &Mat, labels: &[usize]) -> (f64, Mat) {
+    assert_eq!(logits.rows(), labels.len());
+    let p = softmax_rows(logits);
+    let n = logits.rows() as f64;
+    let mut loss = 0.0;
+    let mut grad = p.clone();
+    for (i, &y) in labels.iter().enumerate() {
+        assert!(y < logits.cols(), "label {y} out of range");
+        loss -= (p[(i, y)].max(1e-300)).ln();
+        grad[(i, y)] -= 1.0;
+    }
+    (loss / n, grad.map(|g| g / n))
+}
+
+/// Binary cross-entropy on a sigmoid output. `z` is the pre-sigmoid logit;
+/// labels in {0, 1}. Returns `(mean_loss, dL/dz)` (fused: `σ(z) − y`).
+pub fn bce_with_logit(z: &[f64], labels: &[f64]) -> (f64, Vec<f64>) {
+    assert_eq!(z.len(), labels.len());
+    let n = z.len() as f64;
+    let mut loss = 0.0;
+    let mut grad = Vec::with_capacity(z.len());
+    for (&zi, &yi) in z.iter().zip(labels) {
+        let p = super::layers::sigmoid(zi);
+        loss -= yi * p.max(1e-300).ln() + (1.0 - yi) * (1.0 - p).max(1e-300).ln();
+        grad.push((p - yi) / n);
+    }
+    (loss / n, grad)
+}
+
+/// Mean squared error. Returns `(mean_loss, dL/dpred)`.
+pub fn mse(pred: &Mat, target: &Mat) -> (f64, Mat) {
+    assert_eq!((pred.rows(), pred.cols()), (target.rows(), target.cols()));
+    let n = (pred.rows() * pred.cols()) as f64;
+    let diff = pred.zip(target, |a, b| a - b);
+    let loss = diff.data().iter().map(|d| d * d).sum::<f64>() / n;
+    (loss, diff.map(|d| 2.0 * d / n))
+}
+
+/// Classification accuracy from logits (or probabilities) and labels.
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
+    let pred = logits.argmax_rows();
+    let correct = pred.iter().zip(labels).filter(|(p, y)| p == y).count();
+    correct as f64 / labels.len() as f64
+}
+
+/// A confusion matrix: `counts[true][pred]`.
+pub fn confusion_matrix(logits: &Mat, labels: &[usize], classes: usize) -> Vec<Vec<usize>> {
+    let pred = logits.argmax_rows();
+    let mut m = vec![vec![0usize; classes]; classes];
+    for (&p, &y) in pred.iter().zip(labels) {
+        m[y][p] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_of_perfect_prediction_is_small() {
+        let logits = Mat::from_rows(2, 3, &[100.0, 0.0, 0.0, 0.0, 100.0, 0.0]);
+        let (l, _) = softmax_xent(&logits, &[0, 1]);
+        assert!(l < 1e-6);
+    }
+
+    #[test]
+    fn xent_uniform_is_log_k() {
+        let logits = Mat::zeros(1, 10);
+        let (l, _) = softmax_xent(&logits, &[3]);
+        assert!((l - (10f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xent_gradient_matches_numerical() {
+        let logits = Mat::from_rows(2, 3, &[0.5, -0.2, 0.1, 1.0, 0.0, -1.0]);
+        let labels = [2usize, 0];
+        let (_, g) = softmax_xent(&logits, &labels);
+        let eps = 1e-6;
+        for i in 0..2 {
+            for j in 0..3 {
+                let mut lp = logits.clone();
+                lp[(i, j)] += eps;
+                let mut lm = logits.clone();
+                lm[(i, j)] -= eps;
+                let num = (softmax_xent(&lp, &labels).0 - softmax_xent(&lm, &labels).0) / (2.0 * eps);
+                assert!((g[(i, j)] - num).abs() < 1e-6, "({i},{j}): {} vs {num}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn bce_gradient_matches_numerical() {
+        let z = [0.3, -1.2, 2.0];
+        let y = [1.0, 0.0, 1.0];
+        let (_, g) = bce_with_logit(&z, &y);
+        let eps = 1e-6;
+        for k in 0..3 {
+            let mut zp = z;
+            zp[k] += eps;
+            let mut zm = z;
+            zm[k] -= eps;
+            let num = (bce_with_logit(&zp, &y).0 - bce_with_logit(&zm, &y).0) / (2.0 * eps);
+            assert!((g[k] - num).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mse_known_value() {
+        let p = Mat::from_rows(1, 2, &[1.0, 2.0]);
+        let t = Mat::from_rows(1, 2, &[0.0, 0.0]);
+        let (l, g) = mse(&p, &t);
+        assert!((l - 2.5).abs() < 1e-12);
+        assert_eq!(g, Mat::from_rows(1, 2, &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn accuracy_and_confusion() {
+        let logits = Mat::from_rows(3, 2, &[0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        let labels = [0usize, 1, 1];
+        assert!((accuracy(&logits, &labels) - 2.0 / 3.0).abs() < 1e-12);
+        let cm = confusion_matrix(&logits, &labels, 2);
+        assert_eq!(cm[0][0], 1);
+        assert_eq!(cm[1][1], 1);
+        assert_eq!(cm[1][0], 1);
+        assert_eq!(cm[0][1], 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Neural-network substrate and the paper's two RFNN models.
+//!
+//! * [`tensor`] — small dense real matrices (the NN working type).
+//! * [`layers`] — dense layers and activations (leaky-ReLU, sigmoid, abs,
+//!   softmax) with hand-derived backward passes.
+//! * [`loss`] — cross-entropy (with fused softmax backward), MSE, binary CE.
+//! * [`sgd`] — minibatch SGD (the paper's optimizer, lr 0.005, batch 10).
+//! * [`dspsa`] — discrete simultaneous-perturbation stochastic
+//!   approximation for the device biasing states (Algorithm I, ref. [44]).
+//! * [`rfnn2x2`] — the 2×2 RFNN binary classifier of §IV-A (eqs. 19–26).
+//! * [`rfnn_mnist`] — the 4-layer MNIST network of §IV-B (Fig. 14), with
+//!   the 8×8 analog mesh hidden layer and its digital twin baseline.
+
+pub mod dspsa;
+pub mod layers;
+pub mod loss;
+pub mod rfnn2x2;
+pub mod rfnn_mnist;
+pub mod sgd;
+pub mod tensor;
+
+pub use tensor::Mat;

@@ -1,0 +1,128 @@
+//! Minibatch SGD — the paper's optimizer for the digital parameters
+//! (§IV-B: batch size 10, learning rate 0.005, shuffled every iteration).
+
+use crate::math::rng::Rng;
+
+/// SGD hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SgdConfig {
+    pub lr: f64,
+    pub batch_size: usize,
+    /// Optional classical momentum (0.0 = plain SGD, the paper's choice).
+    pub momentum: f64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        // The paper's MNIST hyper-parameters.
+        SgdConfig { lr: 0.005, batch_size: 10, momentum: 0.0 }
+    }
+}
+
+/// A scalar-parameter SGD state with optional momentum, for flat parameter
+/// vectors (the 2×2 RFNN post-processing weights).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub cfg: SgdConfig,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    /// Create an optimizer for `n` scalar parameters.
+    pub fn new(cfg: SgdConfig, n: usize) -> Self {
+        Sgd { cfg, velocity: vec![0.0; n] }
+    }
+
+    /// Apply one update: `p ← p − lr·(g + momentum·v)`.
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.velocity.len());
+        for ((p, &g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            *v = self.cfg.momentum * *v + g;
+            *p -= self.cfg.lr * *v;
+        }
+    }
+}
+
+/// Yield shuffled minibatch index slices for one epoch.
+pub struct MiniBatches {
+    indices: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl MiniBatches {
+    /// Shuffle `n` sample indices into batches of `batch` (last may be short).
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
+        assert!(batch > 0);
+        let mut indices: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut indices);
+        MiniBatches { indices, batch, pos: 0 }
+    }
+}
+
+impl Iterator for MiniBatches {
+    type Item = Vec<usize>;
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos >= self.indices.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.indices.len());
+        let out = self.indices[self.pos..end].to_vec();
+        self.pos = end;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_minimizes_quadratic() {
+        // f(p) = Σ (p_i − t_i)², ∇f = 2(p − t).
+        let target = [3.0, -1.0, 0.5];
+        let mut p = vec![0.0; 3];
+        let mut opt = Sgd::new(SgdConfig { lr: 0.1, batch_size: 1, momentum: 0.0 }, 3);
+        for _ in 0..200 {
+            let g: Vec<f64> = p.iter().zip(&target).map(|(&pi, &ti)| 2.0 * (pi - ti)).collect();
+            opt.step(&mut p, &g);
+        }
+        for (pi, ti) in p.iter().zip(&target) {
+            assert!((pi - ti).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_accelerates_along_consistent_gradient() {
+        let grad = [1.0];
+        let mut plain = vec![0.0];
+        let mut fast = vec![0.0];
+        let mut o1 = Sgd::new(SgdConfig { lr: 0.01, batch_size: 1, momentum: 0.0 }, 1);
+        let mut o2 = Sgd::new(SgdConfig { lr: 0.01, batch_size: 1, momentum: 0.9 }, 1);
+        for _ in 0..50 {
+            o1.step(&mut plain, &grad);
+            o2.step(&mut fast, &grad);
+        }
+        assert!(fast[0] < plain[0], "momentum should travel further: {} vs {}", fast[0], plain[0]);
+    }
+
+    #[test]
+    fn minibatches_cover_all_indices_once() {
+        let mut rng = Rng::new(3);
+        let batches: Vec<Vec<usize>> = MiniBatches::new(25, 10, &mut rng).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].len(), 5);
+        let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffling_differs_across_epochs() {
+        let mut rng = Rng::new(4);
+        let e1: Vec<usize> = MiniBatches::new(100, 100, &mut rng).next().unwrap();
+        let e2: Vec<usize> = MiniBatches::new(100, 100, &mut rng).next().unwrap();
+        assert_ne!(e1, e2);
+    }
+}

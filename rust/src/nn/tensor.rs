@@ -1,0 +1,291 @@
+//! Dense real (f64) matrices for the NN layers. Row-major; rows = batch
+//! dimension in layer code. Deliberately minimal — the heavy math in this
+//! library is complex-valued and lives in [`crate::math`]; this type exists
+//! so the NN code reads like NN code.
+
+use crate::math::rng::Rng;
+use std::ops::{Index, IndexMut};
+
+/// A dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build by evaluating `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// He/Kaiming-style init: N(0, √(2/fan_in)) — good for (leaky-)ReLU nets.
+    pub fn he_init(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / cols as f64).sqrt();
+        Mat::from_fn(rows, cols, |_, _| rng.normal() * std)
+    }
+
+    /// A single row vector.
+    pub fn row_vec(data: &[f64]) -> Self {
+        Mat::from_rows(1, data.len(), data)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix product.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                out[(i, j)] = arow.iter().zip(brow).map(|(&a, &b)| a * b).sum();
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary zip.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f64, f64) -> f64) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// In-place `self += alpha * other` (the SGD update kernel).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Add a row vector to every row (bias broadcast).
+    pub fn add_row_broadcast(&self, bias: &[f64]) -> Mat {
+        assert_eq!(bias.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for (o, &b) in out.row_mut(i).iter_mut().zip(bias) {
+                *o += b;
+            }
+        }
+        out
+    }
+
+    /// Column sums (bias gradient).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (acc, &v) in s.iter_mut().zip(self.row(i)) {
+                *acc += v;
+            }
+        }
+        s
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Argmax per row (class prediction).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        assert_eq!(a.matmul(&b), Mat::from_rows(2, 2, &[58.0, 64.0, 139.0, 154.0]));
+    }
+
+    #[test]
+    fn matmul_nt_equals_explicit_transpose() {
+        let a = Mat::from_rows(2, 3, &[1.0, -2.0, 3.0, 0.5, 5.0, -6.0]);
+        let b = Mat::from_rows(4, 3, &(0..12).map(|x| x as f64 * 0.3).collect::<Vec<_>>());
+        let direct = a.matmul(&b.transpose());
+        let fused = a.matmul_nt(&b);
+        assert!(direct.zip(&fused, |x, y| (x - y).abs()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_tn_equals_explicit_transpose() {
+        let a = Mat::from_rows(3, 2, &[1.0, -2.0, 3.0, 0.5, 5.0, -6.0]);
+        let b = Mat::from_rows(3, 4, &(0..12).map(|x| x as f64 * 0.3 - 1.0).collect::<Vec<_>>());
+        let direct = a.transpose().matmul(&b);
+        let fused = a.matmul_tn(&b);
+        assert!(direct.zip(&fused, |x, y| (x - y).abs()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn broadcast_and_colsums_are_adjoint() {
+        // The backward of add_row_broadcast is col_sums.
+        let x = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let y = x.add_row_broadcast(&[10.0, 20.0]);
+        assert_eq!(y, Mat::from_rows(2, 2, &[11.0, 22.0, 13.0, 24.0]));
+        assert_eq!(x.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn axpy_updates_in_place() {
+        let mut a = Mat::from_rows(1, 3, &[1.0, 2.0, 3.0]);
+        let g = Mat::from_rows(1, 3, &[0.5, 0.5, 0.5]);
+        a.axpy(-2.0, &g);
+        assert_eq!(a, Mat::from_rows(1, 3, &[0.0, 1.0, 2.0]));
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let a = Mat::from_rows(2, 3, &[0.1, 0.7, 0.2, 0.9, 0.05, 0.05]);
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Rng::new(5);
+        let m = Mat::he_init(64, 100, &mut rng);
+        let var = m.data().iter().map(|x| x * x).sum::<f64>() / m.data().len() as f64;
+        assert!((var - 0.02).abs() < 0.004, "var = {var}"); // 2/100
+    }
+}

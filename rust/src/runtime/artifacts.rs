@@ -1,0 +1,187 @@
+//! Artifact manifest: what `python/compile/aot.py` exported, with shapes
+//! and argument order (the rust↔HLO ABI).
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Manifest key, e.g. `rfnn_mnist_fwd_b32`.
+    pub name: String,
+    /// File name within the artifacts directory.
+    pub file: String,
+    /// Argument names in call order.
+    pub args: Vec<String>,
+    /// Shape of each argument.
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Result shape.
+    pub result_shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Total element count of argument `i`.
+    pub fn arg_len(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product()
+    }
+
+    /// Total element count of the result.
+    pub fn result_len(&self) -> usize {
+        self.result_shape.iter().product()
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Mesh channel count N.
+    pub n: usize,
+    /// Kernel column count C.
+    pub cols: usize,
+    /// Batch sizes with exported variants.
+    pub batch_sizes: Vec<usize>,
+    /// All artifacts by manifest key.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path:?}: {e} (run `make artifacts`)"))?;
+        let v = parse(&src).ok_or_else(|| format!("malformed JSON in {path:?}"))?;
+        let n = v.get("n").and_then(Json::as_f64).ok_or("missing n")? as usize;
+        let cols = v.get("cols").and_then(Json::as_f64).ok_or("missing cols")? as usize;
+        let batch_sizes = v
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .ok_or("missing batch_sizes")?
+            .iter()
+            .filter_map(|x| x.as_f64().map(|f| f as usize))
+            .collect();
+        let raw = match v.get("artifacts") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err("missing artifacts".into()),
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in raw {
+            let file = spec.get("file").and_then(Json::as_str).ok_or("missing file")?.to_string();
+            let args = spec
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or("missing args")?
+                .iter()
+                .filter_map(|a| a.as_str().map(str::to_string))
+                .collect();
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>, String> {
+                Ok(spec
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_f64().map(|f| f as usize))
+                            .collect()
+                    })
+                    .collect())
+            };
+            let arg_shapes = shapes("arg_shapes")?;
+            let result_shape = spec
+                .get("result_shape")
+                .and_then(Json::as_arr)
+                .ok_or("missing result_shape")?
+                .iter()
+                .filter_map(|d| d.as_f64().map(|f| f as usize))
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, args, arg_shapes, result_shape },
+            );
+        }
+        Ok(Manifest { n, cols, batch_sizes, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Default artifacts dir: `$RFNN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RFNN_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Spec lookup.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts.get(name).ok_or_else(|| {
+            format!("artifact '{name}' not in manifest (have: {:?})", self.artifacts.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Smallest exported batch size ≥ `want` (or the largest available).
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        sizes.iter().copied().find(|&b| b >= want).unwrap_or_else(|| *sizes.last().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rfnn_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 8, "cols": 13, "batch_sizes": [1, 32],
+                "artifacts": {"m_b1": {"file": "m_b1.hlo.txt",
+                  "args": ["x"], "arg_shapes": [[1, 8]], "result_shape": [1, 8]}}}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = fake_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n, 8);
+        assert_eq!(m.cols, 13);
+        assert_eq!(m.batch_sizes, vec![1, 32]);
+        let a = m.get("m_b1").unwrap();
+        assert_eq!(a.arg_len(0), 8);
+        assert_eq!(a.result_len(), 8);
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let dir = fake_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch(1), 1);
+        assert_eq!(m.pick_batch(2), 32);
+        assert_eq!(m.pick_batch(33), 32); // saturates at the largest
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real manifest shape.
+        let dir = Manifest::default_dir();
+        if let Ok(m) = Manifest::load(&dir) {
+            assert_eq!(m.n, 8);
+            for (_, a) in &m.artifacts {
+                assert_eq!(a.args.len(), a.arg_shapes.len());
+                assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python runs exactly once (`make artifacts`); from then on the rust
+//! binary is self-contained: [`artifacts`] reads `manifest.json`,
+//! [`pjrt`] compiles the HLO text on the PJRT CPU client and exposes a
+//! typed `execute` call.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use pjrt::{Engine, LoadedModule};

@@ -1,0 +1,193 @@
+//! PJRT execution: HLO text → compiled executable → typed f32 calls.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (serialized jax≥0.5 protos are rejected by xla_extension 0.5.1).
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A PJRT client plus the executables loaded on it.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: BTreeMap<String, LoadedModule>,
+}
+
+/// One compiled HLO module with its ABI.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// ABI from the manifest (arg order/shapes, result shape).
+    pub spec: ArtifactSpec,
+}
+
+impl Engine {
+    /// Create a CPU engine over the given artifacts directory.
+    pub fn cpu(artifacts_dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, loaded: BTreeMap::new() })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by manifest key; idempotent.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
+        if !self.loaded.contains_key(name) {
+            let spec = self.manifest.get(name).map_err(anyhow::Error::msg)?.clone();
+            let path = self.manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            self.loaded.insert(name.to_string(), LoadedModule { exe, spec });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute a loaded module on f32 buffers (one slice per argument, in
+    /// manifest order). Returns the flattened f32 result.
+    pub fn execute_f32(&mut self, name: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let module = &self.loaded[name];
+        let spec = &module.spec;
+        if args.len() != spec.args.len() {
+            bail!("{name}: expected {} args, got {}", spec.args.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, buf) in args.iter().enumerate() {
+            if buf.len() != spec.arg_len(i) {
+                bail!(
+                    "{name}: arg {} ({}) expected {} elements (shape {:?}), got {}",
+                    i,
+                    spec.args[i],
+                    spec.arg_len(i),
+                    spec.arg_shapes[i],
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = spec.arg_shapes[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf).reshape(&dims).context("reshaping arg literal")?;
+            literals.push(lit);
+        }
+        let result = module.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading f32 result")?;
+        if values.len() != spec.result_len() {
+            bail!("{name}: result expected {} elements, got {}", spec.result_len(), values.len());
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+
+    fn engine() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::cpu(&dir).expect("engine"))
+    }
+
+    fn mesh_planes_f32(mesh: &DiscreteMesh) -> (Vec<f32>, Vec<f32>) {
+        let n = mesh.channels();
+        let m = mesh.matrix();
+        let mut re = vec![0.0f32; n * n];
+        let mut im = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                re[i * n + j] = m[(i, j)].re as f32;
+                im[i * n + j] = m[(i, j)].im as f32;
+            }
+        }
+        (re, im)
+    }
+
+    #[test]
+    fn loads_and_runs_mesh_abs() {
+        let Some(mut eng) = engine() else { return };
+        let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+        let (m_re, m_im) = mesh_planes_f32(&mesh);
+        let x: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let args: Vec<&[f32]> = vec![&x, &m_re, &m_im];
+        let y = eng.execute_f32("mesh_abs_b1", &args).expect("execute");
+        assert_eq!(y.len(), 8);
+        // Cross-check against the native rust mesh.
+        let want = mesh.apply_abs(&x.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for (a, b) in y.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sweep_and_dense_mesh_artifacts_agree() {
+        // The ablation (column-sweep) artifact and the dense serving
+        // artifact compute the same function.
+        let Some(mut eng) = engine() else { return };
+        let mesh = DiscreteMesh::new(8, MeshBackend::Measured { base_seed: 3 });
+        let (m_re, m_im) = mesh_planes_f32(&mesh);
+        let planes = mesh.coeff_planes();
+        let x: Vec<f32> = (0..256 * 8).map(|i| ((i % 13) as f32 - 6.0) / 7.0).collect();
+        let sweep_args: Vec<&[f32]> = std::iter::once(x.as_slice())
+            .chain(planes.iter().map(|p| p.as_slice()))
+            .collect();
+        let y_sweep = eng.execute_f32("mesh_sweep_b256", &sweep_args).expect("sweep");
+        let dense_args: Vec<&[f32]> = vec![&x, &m_re, &m_im];
+        let y_dense = eng.execute_f32("mesh_abs_b256", &dense_args).expect("dense");
+        for (a, b) in y_sweep.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn full_forward_runs_and_normalizes() {
+        let Some(mut eng) = engine() else { return };
+        let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+        let (m_re, m_im) = mesh_planes_f32(&mesh);
+        let x = vec![0.1f32; 784];
+        let w1 = vec![0.01f32; 8 * 784];
+        let b1 = vec![0.0f32; 8];
+        let w2 = vec![0.1f32; 80];
+        let b2 = vec![0.0f32; 10];
+        let args: Vec<&[f32]> = vec![&x, &w1, &b1, &m_re, &m_im, &w2, &b2];
+        let probs = eng.execute_f32("rfnn_mnist_fwd_b1", &args).expect("execute");
+        assert_eq!(probs.len(), 10);
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+    }
+
+    #[test]
+    fn arg_count_mismatch_is_error() {
+        let Some(mut eng) = engine() else { return };
+        let err = eng.execute_f32("mesh_abs_b1", &[]).unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+    }
+
+    #[test]
+    fn arg_shape_mismatch_is_error() {
+        let Some(mut eng) = engine() else { return };
+        let x = vec![0.0f32; 3]; // wrong length
+        let m = vec![0.0f32; 64];
+        let args: Vec<&[f32]> = vec![&x, &m, &m];
+        let err = eng.execute_f32("mesh_abs_b1", &args).unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+    }
+}

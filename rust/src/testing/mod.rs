@@ -1,0 +1,8 @@
+//! Test-support toolkit.
+//!
+//! The offline vendor set has no `proptest`, so [`prop`] provides a small
+//! in-repo property-testing harness: seeded generators, a `forall` runner
+//! with failure reproduction info, and shrinking for the common scalar/vec
+//! shapes used by the library's invariant tests.
+
+pub mod prop;

@@ -1,0 +1,4 @@
+//! Small shared utilities: JSON emission, table formatting, timing.
+
+pub mod json;
+pub mod table;

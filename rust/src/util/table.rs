@@ -1,0 +1,118 @@
+//! Plain-text table rendering for bench/report output (paper-style rows).
+
+/// A simple column-aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of displayable items.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (j, h) in self.header.iter().enumerate() {
+            width[j] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (j, c) in r.iter().enumerate() {
+                width[j] = width[j].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (j, c) in cells.iter().enumerate() {
+                line.push_str("| ");
+                line.push_str(c);
+                for _ in c.chars().count()..width[j] {
+                    line.push(' ');
+                }
+                line.push(' ');
+            }
+            line.push('|');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::new();
+        for w in &width {
+            sep.push('|');
+            for _ in 0..w + 2 {
+                sep.push('-');
+            }
+        }
+        sep.push('|');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn fmt_sig(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let mag = x.abs().log10().floor() as i32;
+    if (-3..6).contains(&mag) {
+        let dec = (digits as i32 - 1 - mag).max(0) as usize;
+        format!("{x:.dec$}")
+    } else {
+        format!("{x:.prec$e}", prec = digits.saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["alpha".into(), "1".into()]);
+        t.row(&["b".into(), "12345".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        Table::new(&["a", "b"]).row(&["only".into()]);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.6, 3), "1235");
+        assert_eq!(fmt_sig(0.0123, 3), "0.0123");
+        assert!(fmt_sig(1.0e9, 3).contains('e'));
+        assert!(fmt_sig(1.0e-7, 3).contains('e'));
+    }
+}
