@@ -13,8 +13,8 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{Backend, ModelBundle, Server, ServerConfig};
 use crate::dataset::mnist::load_or_synthesize;
 use crate::device::vna::FabSpread;
-use crate::device::State;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+use crate::nn::layers::AnalogLinear;
 use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
 use crate::nn::sgd::SgdConfig;
 use crate::util::table::Table;
@@ -81,20 +81,15 @@ pub fn spread_sweep(quick: bool) -> String {
             arm_err: d.arm_err * mult,
             noise: d.noise,
         };
-        // A custom mesh from devices with this spread.
-        let mut mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
-        // Replace blocks by measured ones at the given spread via states:
-        // simplest faithful route — build a Measured mesh whose devices use
-        // the scaled spread through the vna factory.
+        // A custom mesh from devices with this spread, dropped into the
+        // analog network as its LinearProcessor backend.
         let mesh_meas = build_spread_mesh(8, spread, 1000);
         let loss = mesh_meas.mean_loss_db();
-        let mut net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
-        // Swap in the spread mesh (same channel count).
-        net.hidden = crate::nn::rfnn_mnist::Hidden::Analog(mesh_meas);
-        net.hidden_gain = 10f64.powf(loss / 20.0);
+        let gain = 10f64.powf(loss / 20.0);
+        let mut net =
+            MnistRfnn::analog_with(8, AnalogLinear::new(Box::new(mesh_meas)), gain, 3);
         net.train(&tr, &cfg(epochs));
         t.row(&[format!("{mult}×"), format!("{loss:.1}"), pct(net.test_accuracy(&te))]);
-        mesh.set_state(0, State { theta: 0, phi: 0 }); // keep borrowckr quiet about unused
     }
     format!(
         "Ablation A2 — fabrication-spread sweep ({n_train} train, {epochs} epochs)\n{}\
@@ -127,7 +122,7 @@ pub fn stuck_cells(quick: bool) -> String {
         c.seed = 5;
         // Mark the first k cells stuck: DSPSA still proposes, but the mesh
         // ignores state changes for those cells.
-        if let crate::nn::rfnn_mnist::Hidden::Analog(mesh) = &mut net.hidden {
+        if let Some(mesh) = net.analog_layer_mut().and_then(|l| l.mesh_mut()) {
             mesh.set_stuck(k);
         }
         net.train(&tr, &c);

@@ -14,8 +14,16 @@ use crate::mesh::decompose::decompose_unitary;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
 use crate::nn::rfnn_mnist::MnistRfnn;
 use crate::device::State;
+use crate::util::json::Json;
 
-/// Run every perf bench; returns the report.
+/// Batch sizes for the batched-GEMM vs per-vector comparison (the
+/// coordinator's BatchPolicy coalesces up to 256).
+pub const GEMM_BATCHES: [usize; 4] = [1, 8, 64, 256];
+
+/// Run every perf bench; returns the report. Also measures the batched
+/// `apply_batch` path against the per-vector `matvec` loop it replaced
+/// and writes the comparison to `BENCH_pr1.json` (override the path with
+/// `RFNN_BENCH_OUT`) so the perf trajectory tracks this PR.
 pub fn all(quick: bool) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -23,7 +31,94 @@ pub fn all(quick: bool) -> String {
         out.push_str(&stat.line());
         out.push('\n');
     }
+    out.push_str("§Perf — batched GEMM vs per-vector matvec (8×8 mesh)\n");
+    let rows = run_batched_benches(samples);
+    for (b, batched, pervec) in &rows {
+        let speedup = pervec.median_ns() as f64 / batched.median_ns().max(1) as f64;
+        out.push_str(&batched.line());
+        out.push('\n');
+        out.push_str(&pervec.line());
+        out.push('\n');
+        out.push_str(&format!("  batch {b:>3}: batched is {speedup:.2}× the per-vector loop\n"));
+    }
+    let json = batched_report_json(&rows, samples, quick);
+    let path =
+        std::env::var("RFNN_BENCH_OUT").unwrap_or_else(|_| "BENCH_pr1.json".to_string());
+    match std::fs::write(&path, json.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path}\n")),
+        Err(e) => out.push_str(&format!("could not write {path}: {e}\n")),
+    }
     out
+}
+
+/// Time `apply_batch` (one blocked GEMM per call) against the per-vector
+/// loop the refactor replaced, at each batch size in [`GEMM_BATCHES`].
+/// Returns `(batch, batched, per_vector)` stats; each sample times a full
+/// batch, so per-vector cost is `median_ns / batch`.
+///
+/// The baseline deliberately reimplements the PRE-refactor kernel — a
+/// direct row-dot `matvec` per vector, exactly the seed's hot loop — not
+/// today's `matvec` (which now routes through the batch-1 GEMM), so the
+/// recorded speedup measures the real before/after delta.
+pub fn run_batched_benches(samples: usize) -> Vec<(usize, BenchStats, BenchStats)> {
+    let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+    let m = crate::processor::LinearProcessor::matrix(&mesh).clone();
+    let mut out = Vec::new();
+    for &b in &GEMM_BATCHES {
+        let x = CMat::from_fn(8, b, |i, j| {
+            C64::new(0.05 * i as f64 - 0.2 + 0.01 * j as f64, 0.02 * i as f64)
+        });
+        let cols: Vec<Vec<C64>> = (0..b).map(|j| x.col(j)).collect();
+        let batched = bench(&format!("mesh8.apply_batch b{b}"), samples, || {
+            std::hint::black_box(mesh.apply_batch(std::hint::black_box(&x)));
+        });
+        let pervec = bench(&format!("mesh8 pre-PR matvec ×{b}"), samples, || {
+            for c in &cols {
+                let c = std::hint::black_box(c);
+                let y: Vec<C64> = (0..m.rows())
+                    .map(|i| m.row(i).iter().zip(c).map(|(&a, &b)| a * b).sum())
+                    .collect();
+                std::hint::black_box(y);
+            }
+        });
+        out.push((b, batched, pervec));
+    }
+    out
+}
+
+/// The PR-1 perf-trajectory record for [`run_batched_benches`] results.
+/// `samples`/`quick` are provenance — quick `cargo test` runs also write
+/// the file, and the record says which mode produced it.
+pub fn batched_report_json(rows: &[(usize, BenchStats, BenchStats)], samples: usize, quick: bool) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(b, batched, pervec)| {
+            let bv = batched.median_ns() as f64 / *b as f64;
+            let pv = pervec.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("batch", Json::Num(*b as f64)),
+                ("batched_ns_per_vector", Json::Num(bv)),
+                ("pervector_ns_per_vector", Json::Num(pv)),
+                ("batched_vectors_per_sec", Json::Num(1e9 / bv.max(1.0))),
+                ("pervector_vectors_per_sec", Json::Num(1e9 / pv.max(1.0))),
+                ("speedup", Json::Num(pv / bv.max(1.0))),
+            ])
+        })
+        .collect();
+    let speedup_b64 = rows
+        .iter()
+        .find(|(b, ..)| *b == 64)
+        .map(|(_, batched, pervec)| pervec.median_ns() as f64 / batched.median_ns().max(1) as f64)
+        .unwrap_or(0.0);
+    Json::obj(vec![
+        ("pr", Json::Num(1.0)),
+        ("bench", Json::Str("mesh8_apply_batch_vs_pervector".into())),
+        ("n", Json::Num(8.0)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+        ("speedup_at_batch_64", Json::Num(speedup_b64)),
+    ])
 }
 
 /// The individual benches (exposed for the bench binary).
@@ -141,5 +236,22 @@ mod tests {
         let report = super::all(true);
         assert!(report.contains("mesh8.apply"), "{report}");
         assert!(report.contains("native fwd"), "{report}");
+        assert!(report.contains("apply_batch"), "{report}");
+    }
+
+    #[test]
+    fn batched_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_batched_benches(3);
+        assert_eq!(rows.len(), super::GEMM_BATCHES.len());
+        let json = super::batched_report_json(&rows, 3, true);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), super::GEMM_BATCHES.len());
+        for r in results {
+            let s = r.get("speedup").and_then(|v| v.as_f64()).expect("speedup");
+            assert!(s.is_finite() && s > 0.0, "speedup {s}");
+        }
+        assert!(parsed.get("speedup_at_batch_64").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }
 }

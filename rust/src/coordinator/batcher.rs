@@ -79,6 +79,29 @@ mod tests {
     }
 
     #[test]
+    fn disconnect_mid_collection_returns_partial_batch() {
+        // Regression: when the producer disconnects while a batch is still
+        // filling, the items already collected must be returned (a `?` or
+        // early-return on `Disconnected` would drop in-flight requests on
+        // shutdown). The follow-up call then reports the closed channel.
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        tx.send(2u32).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            drop(tx); // disconnect while the batcher is inside recv_timeout
+        });
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(200) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).expect("partial batch must survive disconnect");
+        handle.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+        // Returned at disconnect, not after the full 200 ms window.
+        assert!(t0.elapsed() < Duration::from_millis(150));
+        assert!(next_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
     fn late_arrivals_join_before_deadline() {
         let (tx, rx) = channel();
         tx.send(1u32).unwrap();

@@ -81,6 +81,9 @@ pub struct Metrics {
     pub queue: LatencyHistogram,
     /// Per-batch execution time.
     pub exec: LatencyHistogram,
+    /// Per-batch occupancy (requests per dispatched `apply_batch` call) —
+    /// the log-bucketed histogram doubles as a batch-size distribution.
+    pub batch_size: LatencyHistogram,
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     /// Padded slots wasted (batch-size rounding cost).
@@ -96,6 +99,7 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded.fetch_add((cap - n) as u64, Ordering::Relaxed);
         self.exec.record(exec_us);
+        self.batch_size.record(n as u64);
     }
 
     /// Mean requests per batch.
@@ -114,7 +118,8 @@ impl Metrics {
             "requests={} batches={} mean_batch={:.1} padded={} reconfigs={}\n\
              latency µs: mean={:.0} p50≤{} p99≤{} max={}\n\
              queue   µs: mean={:.0} p99≤{}\n\
-             exec    µs: mean={:.0} p99≤{}",
+             exec    µs: mean={:.0} p99≤{}\n\
+             batch  occ: mean={:.1} max={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
@@ -128,6 +133,10 @@ impl Metrics {
             self.queue.percentile_us(0.99),
             self.exec.mean_us(),
             self.exec.percentile_us(0.99),
+            // Mean/max are exact; the log₂ buckets would make quantiles of
+            // small integer batch sizes up to 2× off, so they are omitted.
+            self.batch_size.mean_us(),
+            self.batch_size.max_us(),
         )
     }
 }
@@ -166,6 +175,8 @@ mod tests {
         m.record_batch(4, 4, 200);
         assert_eq!(m.mean_batch_size(), 3.5);
         assert_eq!(m.padded.load(Ordering::Relaxed), 1);
+        assert!((m.batch_size.mean_us() - 3.5).abs() < 1e-9);
+        assert_eq!(m.batch_size.max_us(), 4);
         let r = m.report();
         assert!(r.contains("requests=7"), "{r}");
     }

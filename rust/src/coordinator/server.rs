@@ -1,34 +1,48 @@
 //! The MNIST inference server: batcher → (PJRT | native) executor → reply.
 //!
-//! The worker thread owns the model bundle (digital weights + the mesh's
-//! coefficient planes) and the execution backend. Requests are coalesced
-//! by the dynamic batcher, padded to the nearest AOT-exported batch size,
-//! executed as ONE fused HLO call (dense → mesh → dense — no per-layer
-//! dispatch on the request path), and fanned back out.
+//! The worker thread owns the model bundle (digital weights + the analog
+//! processor's composed transfer matrix) and the execution backend.
+//! Requests are coalesced by the dynamic batcher, padded to the nearest
+//! AOT-exported batch size, executed as ONE call — the fused HLO module,
+//! or natively one `LinearProcessor::apply_batch` GEMM for the whole
+//! batch (no per-request dispatch on the request path) — and fanned back
+//! out.
 
 use super::api::{InferRequest, InferResponse};
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
-use crate::nn::rfnn_mnist::{Hidden, MnistRfnn};
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::nn::rfnn_mnist::MnistRfnn;
+use crate::processor::LinearProcessor;
 use crate::runtime::Engine;
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
 /// Everything the worker needs to run the model: digital weights as f32
-/// plus the analog mesh's coefficient planes.
+/// plus the gain-folded analog transfer matrix (the native batched-GEMM
+/// backend, and — split re/im as f32 — the PJRT dense-kernel ABI).
+///
+/// The sweep-kernel coefficient planes are deliberately NOT part of the
+/// bundle: nothing on the serving path consumes them (the PJRT worker
+/// sends `m_re`/`m_im`), and exporting them would tie the bundle to
+/// mesh-backed processors only. Callers that need the sweep ABI derive
+/// planes from a [`crate::mesh::DiscreteMesh`] directly
+/// (`coeff_planes`), as `bench::perf` does.
 #[derive(Clone, Debug)]
 pub struct ModelBundle {
     pub n: usize,
-    pub cols: usize,
     pub w1: Vec<f32>,
     pub b1: Vec<f32>,
-    /// Column-sweep coefficient planes (native fallback + sweep ablation).
-    pub planes: [Vec<f32>; 6],
-    /// Precomposed mesh matrix, re/im (the PJRT serving path — §Perf L1:
-    /// the matrix only changes when DSPSA re-biases the device, so the
-    /// coordinator composes it once per state change, not per request).
+    /// Gain-folded analog transfer matrix — the native serving backend,
+    /// executed through [`LinearProcessor::apply_batch`] once per
+    /// coalesced batch (§Perf L1: the matrix only changes when DSPSA
+    /// re-biases the device, so the coordinator composes it once per
+    /// state change, not per request).
+    pub mesh: CMat,
+    /// Same matrix split re/im as f32 (the PJRT dense-kernel ABI).
     pub m_re: Vec<f32>,
     pub m_im: Vec<f32>,
     pub w2: Vec<f32>,
@@ -36,41 +50,30 @@ pub struct ModelBundle {
 }
 
 impl ModelBundle {
-    /// Export a trained analog [`MnistRfnn`] for serving. The fixed
-    /// power-compensation gain is folded into the coefficient planes so the
-    /// serving path needs no extra scalar.
+    /// Export a trained analog [`MnistRfnn`] for serving. Works for ANY
+    /// [`LinearProcessor`] backend — the bundle carries the processor's
+    /// composed transfer matrix (exactly what training executed) with the
+    /// fixed power-compensation gain folded in, so the serving path needs
+    /// no extra scalar and no backend knowledge.
     pub fn from_trained(net: &MnistRfnn) -> Result<ModelBundle> {
-        let mesh = match &net.hidden {
-            Hidden::Analog(mesh) => mesh,
-            Hidden::Digital(_) => anyhow::bail!("serving bundle requires the analog network"),
-        };
-        let mut planes = mesh.coeff_planes();
-        // |g·Mx| = g·|Mx| for g > 0: scaling the *last column's* planes by
-        // the gain is equivalent to amplifying the detected magnitudes.
-        let n = mesh.channels();
-        let cols = mesh.kernel_columns();
-        let g = net.hidden_gain as f32;
-        for plane in planes.iter_mut() {
-            for v in plane[(cols - 1) * n..].iter_mut() {
-                *v *= g;
-            }
-        }
-        // Precomposed matrix with the gain folded in.
-        let m = mesh.matrix();
+        let layer = net
+            .analog_layer()
+            .ok_or_else(|| Error::msg("serving bundle requires the analog network"))?;
+        let (n, _) = layer.processor().dims();
+        let m = layer.processor().matrix().scale(C64::real(net.hidden_gain));
         let mut m_re = vec![0.0f32; n * n];
         let mut m_im = vec![0.0f32; n * n];
         for i in 0..n {
             for j in 0..n {
-                m_re[i * n + j] = (m[(i, j)].re * net.hidden_gain) as f32;
-                m_im[i * n + j] = (m[(i, j)].im * net.hidden_gain) as f32;
+                m_re[i * n + j] = m[(i, j)].re as f32;
+                m_im[i * n + j] = m[(i, j)].im as f32;
             }
         }
         Ok(ModelBundle {
             n,
-            cols,
             w1: net.dense1.w.data().iter().map(|&x| x as f32).collect(),
             b1: net.dense1.b.iter().map(|&x| x as f32).collect(),
-            planes,
+            mesh: m,
             m_re,
             m_im,
             w2: net.dense2.w.data().iter().map(|&x| x as f32).collect(),
@@ -79,38 +82,30 @@ impl ModelBundle {
     }
 
     /// Native (non-PJRT) forward for one padded batch — the fallback
-    /// backend and the cross-check oracle for the PJRT path.
+    /// backend and the cross-check oracle for the PJRT path. The analog
+    /// stage executes as ONE [`LinearProcessor::apply_batch`] GEMM over
+    /// the whole batch.
     pub fn forward_native(&self, x: &[f32], batch: usize) -> Vec<f32> {
-        use crate::math::c64::C64;
         let n = self.n;
-        let mut out = vec![0.0f32; batch * 10];
+        // Layer 1 (digital): dense1 + leaky-ReLU, one column per sample.
+        let mut xb = CMat::zeros(n, batch);
         for r in 0..batch {
             let img = &x[r * 784..(r + 1) * 784];
-            // dense1 + leaky relu
-            let mut a1 = vec![0.0f64; n];
-            for (j, a) in a1.iter_mut().enumerate() {
+            for j in 0..n {
                 let row = &self.w1[j * 784..(j + 1) * 784];
                 let mut acc = self.b1[j] as f64;
                 for (w, v) in row.iter().zip(img) {
                     acc += *w as f64 * *v as f64;
                 }
-                *a = if acc >= 0.0 { acc } else { 0.01 * acc };
+                xb[(j, r)] = C64::real(if acc >= 0.0 { acc } else { 0.01 * acc });
             }
-            // mesh sweep via coefficient planes
-            let mut z: Vec<C64> = a1.iter().map(|&v| C64::real(v)).collect();
-            for k in 0..self.cols {
-                let at = |p: usize, ch: usize| self.planes[p][k * n + ch] as f64;
-                let mut nxt = vec![C64::ZERO; n];
-                for ch in 0..n {
-                    let a = C64::new(at(0, ch), at(1, ch));
-                    let b = C64::new(at(2, ch), at(3, ch));
-                    let c = C64::new(at(4, ch), at(5, ch));
-                    nxt[ch] = a * z[ch] + b * z[(ch + 1) % n] + c * z[(ch + n - 1) % n];
-                }
-                z = nxt;
-            }
-            let h2: Vec<f64> = z.iter().map(|v| v.abs()).collect();
-            // dense2 + softmax
+        }
+        // Layer 2 (analog): the whole batch through the processor trait.
+        let z = LinearProcessor::apply_batch(&self.mesh, &xb);
+        // Layer 3 (digital): |·| detection, dense2, softmax.
+        let mut out = vec![0.0f32; batch * 10];
+        for r in 0..batch {
+            let h2: Vec<f64> = (0..n).map(|j| z[(j, r)].abs()).collect();
             let mut logits = [0.0f64; 10];
             for (k, l) in logits.iter_mut().enumerate() {
                 let row = &self.w2[k * n..(k + 1) * n];
@@ -157,8 +152,8 @@ impl Client {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
             .send(InferRequest { id, image, reply, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+            .map_err(|_| Error::msg("server stopped"))?;
+        rx.recv().map_err(|_| Error::msg("server dropped request"))
     }
 
     /// Fire-and-forget submission with a shared reply channel.
@@ -166,7 +161,7 @@ impl Client {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
             .send(InferRequest { id, image, reply, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+            .map_err(|_| Error::msg("server stopped"))?;
         Ok(id)
     }
 }
@@ -374,5 +369,38 @@ mod tests {
     fn bundle_export_requires_analog() {
         let net = MnistRfnn::digital(8, 3);
         assert!(ModelBundle::from_trained(&net).is_err());
+    }
+
+    #[test]
+    fn bundle_serves_composed_backends_consistently() {
+        // A QuantizedMesh composes an input phase layer on top of the bare
+        // mesh; the bundle must carry the FULL processor matrix (what
+        // training executed), so serving agrees with net.infer.
+        use crate::math::rng::Rng;
+        use crate::math::svd::svd;
+        use crate::mesh::quantize::QuantizedMesh;
+        use crate::nn::layers::AnalogLinear;
+        use crate::nn::Mat;
+        let mut rng = Rng::new(4);
+        let a = CMat::from_fn(8, 8, |_, _| C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        let u = f.u.matmul(&f.vh);
+        let q = QuantizedMesh::program_unitary(&u, MeshBackend::Ideal);
+        let net = MnistRfnn::analog_with(8, AnalogLinear::new(Box::new(q)), 1.0, 5);
+        let b = ModelBundle::from_trained(&net).expect("any processor backend is servable");
+        let x = Mat::from_fn(4, 784, |i, j| ((i * 31 + j) % 17) as f64 / 17.0);
+        let direct = net.infer(&x);
+        let xf: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
+        let served = b.forward_native(&xf, 4);
+        for i in 0..4 {
+            let want = direct.row(i).iter().enumerate().max_by(|p, q| p.1.partial_cmp(q.1).unwrap()).unwrap().0;
+            let got = served[i * 10..(i + 1) * 10]
+                .iter()
+                .enumerate()
+                .max_by(|p, q| p.1.partial_cmp(q.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(want, got, "sample {i}");
+        }
     }
 }

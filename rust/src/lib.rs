@@ -6,8 +6,11 @@
 //!
 //! The library is organized bottom-up:
 //!
-//! * [`math`] — complex arithmetic, small dense complex linear algebra, RNG,
-//!   numerical utilities (no external deps; the build is fully offline).
+//! * [`math`] — complex arithmetic, small dense complex linear algebra
+//!   including the blocked batched GEMM ([`CMat::gemm`]), RNG, numerical
+//!   utilities (no external deps; the build is fully offline).
+//! * [`processor`] — the [`LinearProcessor`] trait: the single execution
+//!   abstraction every linear backend implements (see *Execution model*).
 //! * [`microwave`] — RF network substrate: S-parameter algebra, ABCD two-port
 //!   theory, microstrip transmission-line models, quadrature (branch-line)
 //!   hybrids, switched-line discrete phase shifters, Touchstone I/O.
@@ -18,18 +21,64 @@
 //! * [`mesh`] — N×N linear processor synthesis: rotation decomposition
 //!   (eqs. 27–30), SVD-based arbitrary-matrix synthesis, discrete-state
 //!   quantization, and lossy mesh simulation built from unit-cell S-params.
-//! * [`nn`] — neural-network substrate: tensors, layers, losses, SGD,
+//! * [`nn`] — neural-network substrate: tensors, layers (including the
+//!   shared [`nn::layers::AnalogLinear`] analog stage), losses, SGD,
 //!   DSPSA (Algorithm I), and the paper's 2×2 and 4-layer MNIST RFNN models.
 //! * [`dataset`] — the four Fig. 12 synthetic 2-D classification sets, an
 //!   MNIST IDX loader and a procedural MNIST-like fallback generator.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts produced by
-//!   `python/compile/aot.py` and executes them on the request path.
+//!   `python/compile/aot.py` (gated behind the `pjrt` feature; the default
+//!   offline build substitutes a fail-closed stub and serves natively).
 //! * [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   device-state scheduler, and metrics.
-//! * [`bench`] — the paper-experiment harness regenerating every table/figure.
+//! * [`bench`] — the paper-experiment harness regenerating every table/figure,
+//!   plus the batched-GEMM perf trajectory (`BENCH_pr1.json`).
 //! * [`cli`] — hand-rolled argument parsing for the `rfnn` binary.
 //! * [`testing`] — in-repo property-testing toolkit (offline substitute for
-//!   `proptest`).
+//!   `proptest`) and the cross-backend processor contract tests.
+//!
+//! ## Execution model
+//!
+//! Every linear stage in the system executes through one abstraction,
+//! [`processor::LinearProcessor`]:
+//!
+//! ```text
+//!   trait LinearProcessor:  dims / fidelity / reprogram_cost / matrix
+//!                           apply_batch(X: in×B) -> out×B   (blocked GEMM)
+//!                           apply(x)                        (batch-1 case)
+//!                           state_code / set_state_code     (DSPSA surface)
+//! ```
+//!
+//! Backends, by [`processor::Fidelity`]:
+//!
+//! | backend                    | fidelity    | used by                         |
+//! |----------------------------|-------------|---------------------------------|
+//! | [`CMat`]                   | `Digital`   | reference / digital experiments |
+//! | [`mesh::DiscreteMesh`] (ideal)    | `Ideal`     | lossless discrete-phase mesh    |
+//! | [`mesh::DiscreteMesh`] (measured) | `Measured`  | virtual-VNA hardware stand-in   |
+//! | [`mesh::quantize::QuantizedMesh`] | `Quantized` | Table-I programmed targets      |
+//!
+//! Consumers:
+//!
+//! * the 2×2 RFNN ([`nn::rfnn2x2`]) — its ideal device executes each state's
+//!   2×2 transfer matrix through the trait; training pre-measures whole
+//!   datasets with one `apply_batch` per candidate state;
+//! * the MNIST RFNN ([`nn::rfnn_mnist`]) — the hidden analog stage is an
+//!   [`nn::layers::AnalogLinear`] over `dyn LinearProcessor`; forward,
+//!   inference *and* backward are one batched complex GEMM per minibatch;
+//! * the coordinator — the MNIST server's native backend runs each
+//!   coalesced batch as a single `apply_batch` call, and the 2×2
+//!   [`coordinator::scheduler::ClassifyService`] evaluates each state-batch
+//!   with one batched device call;
+//! * DSPSA reprograms any state-programmed backend through
+//!   `state_code`/`set_state_code` without knowing it is a mesh.
+//!
+//! The batch layout is column-per-vector (`X` is `in × B`, `Y = M·X`), and
+//! [`CMat::matvec`] is literally the `B = 1` special case of the same
+//! register-blocked kernel, so there is exactly one multiply path to test,
+//! benchmark, and optimize (`rust/src/testing/processor_props.rs` pins the
+//! contract across all four backends; `bench::perf` tracks batched vs
+//! per-vector throughput in `BENCH_pr1.json`).
 
 pub mod bench;
 pub mod cli;
@@ -40,9 +89,11 @@ pub mod mesh;
 pub mod math;
 pub mod microwave;
 pub mod nn;
+pub mod processor;
 pub mod runtime;
 pub mod testing;
 pub mod util;
 
 pub use math::c64::C64;
 pub use math::cmat::CMat;
+pub use processor::{Fidelity, LinearProcessor, ReprogramCost};

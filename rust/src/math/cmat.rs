@@ -1,13 +1,19 @@
 //! Dense complex matrices and vectors (row-major, `C64` elements).
 //!
 //! Sized for the paper's workloads: S-parameter blocks (2–8 ports), mesh
-//! unitaries (N ≤ 32), and small NN layers. Not a general BLAS — clarity and
-//! testability first; the `bench::perf` pass optimizes the few hot kernels
-//! that matter (mesh propagation) separately.
+//! unitaries (N ≤ 32), and small NN layers. Not a general BLAS, but the
+//! one hot kernel — the batched complex GEMM behind
+//! [`crate::processor::LinearProcessor::apply_batch`] — is register-blocked
+//! ([`CMat::gemm`]); [`CMat::matvec`] is its batch-1 special case.
 
 use super::c64::C64;
 use std::fmt;
 use std::ops::{Index, IndexMut};
+
+/// Rows per GEMM micro-tile (register block height).
+const GEMM_MR: usize = 4;
+/// Columns per GEMM micro-tile (output panel width).
+const GEMM_NR: usize = 4;
 
 /// A dense, row-major complex matrix.
 #[derive(Clone, PartialEq)]
@@ -137,12 +143,69 @@ impl CMat {
         out
     }
 
-    /// Matrix–vector product.
+    /// Blocked, cache-friendly complex GEMM `self · other` — the batched
+    /// execution kernel. Sweeps `other` in [`GEMM_NR`]-column panels and
+    /// `self` in [`GEMM_MR`]-row blocks, accumulating each `MR×NR`
+    /// micro-tile in registers across the full inner dimension, so every
+    /// loaded panel row of `other` is reused `MR` times and the output is
+    /// written exactly once.
+    pub fn gemm(&self, other: &CMat) -> CMat {
+        assert_eq!(
+            self.cols, other.rows,
+            "gemm shape mismatch: {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let (m, kk, n) = (self.rows, other.rows, other.cols);
+        let mut out = CMat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        let c = &mut out.data;
+        let mut jc = 0;
+        while jc < n {
+            let nr = GEMM_NR.min(n - jc);
+            let mut ic = 0;
+            while ic < m {
+                let mr = GEMM_MR.min(m - ic);
+                let mut acc = [[C64::ZERO; GEMM_NR]; GEMM_MR];
+                if mr == GEMM_MR && nr == GEMM_NR {
+                    // Full tile: fixed-bound loops the compiler can unroll.
+                    for p in 0..kk {
+                        let brow = &b[p * n + jc..p * n + jc + GEMM_NR];
+                        for i in 0..GEMM_MR {
+                            let av = a[(ic + i) * kk + p];
+                            for j in 0..GEMM_NR {
+                                acc[i][j] += av * brow[j];
+                            }
+                        }
+                    }
+                } else {
+                    // Edge tile (m or n not a multiple of the block size).
+                    for p in 0..kk {
+                        let brow = &b[p * n + jc..p * n + jc + nr];
+                        for (i, accrow) in acc.iter_mut().enumerate().take(mr) {
+                            let av = a[(ic + i) * kk + p];
+                            for (j, &bv) in brow.iter().enumerate() {
+                                accrow[j] += av * bv;
+                            }
+                        }
+                    }
+                }
+                for (i, accrow) in acc.iter().enumerate().take(mr) {
+                    let crow = &mut c[(ic + i) * n + jc..(ic + i) * n + jc + nr];
+                    crow.copy_from_slice(&accrow[..nr]);
+                }
+                ic += mr;
+            }
+            jc += nr;
+        }
+        out
+    }
+
+    /// Matrix–vector product — the batch-1 special case of [`Self::gemm`].
     pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
-        (0..self.rows)
-            .map(|i| self.row(i).iter().zip(x).map(|(&a, &b)| a * b).sum())
-            .collect()
+        let xm = CMat { rows: x.len(), cols: 1, data: x.to_vec() };
+        self.gemm(&xm).data
     }
 
     /// Sum of two matrices.
@@ -358,5 +421,43 @@ mod tests {
     fn fro_norm_known() {
         let a = CMat::from_real(1, 2, &[3.0, 4.0]);
         assert!((a.fro_norm() - 5.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn gemm_matches_matmul_across_tile_edges() {
+        // Shapes straddling the MR/NR block boundaries, including the
+        // degenerate 1-row/1-col cases.
+        let mut rng = crate::math::rng::Rng::new(0x6E77);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (2, 2, 1),
+            (3, 5, 7),
+            (4, 4, 4),
+            (5, 4, 3),
+            (8, 8, 64),
+            (9, 7, 65),
+            (16, 16, 33),
+            (1, 9, 2),
+        ] {
+            let a = CMat::from_fn(m, k, |_, _| C64::new(rng.normal(), rng.normal()));
+            let b = CMat::from_fn(k, n, |_, _| C64::new(rng.normal(), rng.normal()));
+            let fast = a.gemm(&b);
+            let slow = a.matmul(&b);
+            assert!(approx(&fast, &slow, 1e-12), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matvec_is_gemm_batch_one() {
+        let mut rng = crate::math::rng::Rng::new(0x6E78);
+        let a = CMat::from_fn(6, 5, |_, _| C64::new(rng.normal(), rng.normal()));
+        let x: Vec<C64> = (0..5).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let y = a.matvec(&x);
+        assert_eq!(y.len(), 6);
+        let xm = CMat::from_rows(5, 1, &x);
+        let ym = a.gemm(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-13);
+        }
     }
 }

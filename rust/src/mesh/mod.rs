@@ -21,4 +21,5 @@ pub mod topology;
 
 pub use decompose::{decompose_unitary, synthesize_real, CellSetting, MeshProgram};
 pub use propagate::{DiscreteMesh, MeshBackend};
+pub use quantize::QuantizedMesh;
 pub use topology::MeshTopology;

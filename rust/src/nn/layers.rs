@@ -1,7 +1,14 @@
-//! Layers and activations with hand-derived backward passes.
+//! Layers and activations with hand-derived backward passes, including the
+//! shared analog linear stage ([`AnalogLinear`]) that routes every
+//! physical-processor forward/backward through one batched
+//! [`LinearProcessor`] call.
 
 use super::tensor::Mat;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
 use crate::math::rng::Rng;
+use crate::mesh::propagate::DiscreteMesh;
+use crate::processor::LinearProcessor;
 
 /// A fully-connected layer `y = x·Wᵀ + b` (batch rows in `x`).
 #[derive(Clone, Debug)]
@@ -54,6 +61,102 @@ impl Dense {
 pub struct DenseGrads {
     pub dw: Mat,
     pub db: Vec<f64>,
+}
+
+/// The analog linear stage: a [`LinearProcessor`] backend driven with real
+/// batch inputs and read out by magnitude detection.
+///
+/// This is the single forward/backward implementation behind both the 2×2
+/// RFNN and the MNIST RFNN hidden layer (and the serving coordinator's
+/// native backend) — the per-vector `matvec` loops those paths used to
+/// duplicate are replaced by one batched complex GEMM per call.
+pub struct AnalogLinear {
+    proc: Box<dyn LinearProcessor>,
+}
+
+impl AnalogLinear {
+    /// Wrap a processor backend.
+    pub fn new(proc: Box<dyn LinearProcessor>) -> Self {
+        AnalogLinear { proc }
+    }
+
+    /// The backend.
+    pub fn processor(&self) -> &dyn LinearProcessor {
+        self.proc.as_ref()
+    }
+
+    /// Mutable backend access (state reprogramming).
+    pub fn processor_mut(&mut self) -> &mut dyn LinearProcessor {
+        self.proc.as_mut()
+    }
+
+    /// The underlying mesh, when the backend has one (hardware-ABI export,
+    /// failure injection).
+    pub fn mesh(&self) -> Option<&DiscreteMesh> {
+        self.proc.as_mesh()
+    }
+
+    /// Mutable counterpart of [`Self::mesh`].
+    pub fn mesh_mut(&mut self) -> Option<&mut DiscreteMesh> {
+        self.proc.as_mesh_mut()
+    }
+
+    /// Batched complex forward `z = gain · M·aᵀ`: rows of `a` are samples.
+    /// Returns `(Re z, Im z)`, each `[B, out]` — one `apply_batch` call.
+    pub fn forward(&self, a: &Mat, gain: f64) -> (Mat, Mat) {
+        let (out, inp) = self.proc.dims();
+        assert_eq!(a.cols(), inp, "analog layer expects {inp} inputs, got {}", a.cols());
+        let b = a.rows();
+        // Column-per-sample batch for the GEMM convention Y = M·X.
+        let x = CMat::from_fn(inp, b, |i, j| C64::real(a[(j, i)]));
+        let y = self.proc.apply_batch(&x);
+        let mut zre = Mat::zeros(b, out);
+        let mut zim = Mat::zeros(b, out);
+        for i in 0..b {
+            for j in 0..out {
+                let z = y[(j, i)];
+                zre[(i, j)] = gain * z.re;
+                zim[(i, j)] = gain * z.im;
+            }
+        }
+        (zre, zim)
+    }
+
+    /// Magnitude detection `h = |z|` (eq. 20) from the split forward output.
+    pub fn detect(zre: &Mat, zim: &Mat) -> Mat {
+        zre.zip(zim, f64::hypot)
+    }
+
+    /// Forward + detection in one call (inference path).
+    pub fn forward_abs(&self, a: &Mat, gain: f64) -> Mat {
+        let (zre, zim) = self.forward(a, gain);
+        Self::detect(&zre, &zim)
+    }
+
+    /// Backward through `h = |gain·M·a|` for real inputs `a`: given the
+    /// cached forward output `z` and the upstream gradient `dh`, returns
+    /// `dL/da` (`[B, in]`).
+    ///
+    /// With `w_k = dh_k · z_k/|z_k|`, `dL/da = Re(conj(W) · gain·M)` — one
+    /// more batched complex GEMM instead of a per-sample triple loop.
+    pub fn backward(&self, zre: &Mat, zim: &Mat, dh: &Mat, gain: f64) -> Mat {
+        let (out, inp) = self.proc.dims();
+        let b = dh.rows();
+        assert_eq!(dh.cols(), out);
+        let wbar = CMat::from_fn(b, out, |i, k| {
+            let z = C64::new(zre[(i, k)], zim[(i, k)]);
+            let mag = z.abs();
+            if mag < 1e-12 {
+                C64::ZERO
+            } else {
+                // conj(w) = dh · conj(z)/|z|
+                z.conj() * (dh[(i, k)] / mag)
+            }
+        });
+        let mg = self.proc.matrix().scale(C64::real(gain));
+        let da = wbar.gemm(&mg);
+        Mat::from_fn(b, inp, |i, j| da[(i, j)].re)
+    }
 }
 
 /// Leaky ReLU activation (paper's hidden-Layer-1 activation).
@@ -199,5 +302,55 @@ mod tests {
         let x = Mat::from_rows(1, 3, &[-1.0, 0.0, 2.0]);
         let dy = Mat::from_rows(1, 3, &[1.0, 1.0, 1.0]);
         assert_eq!(abs_backward(&x, &dy), Mat::from_rows(1, 3, &[-1.0, 0.0, 1.0]));
+    }
+
+    #[test]
+    fn analog_linear_forward_matches_per_vector_reference() {
+        let mut rng = Rng::new(9);
+        let m = CMat::from_fn(4, 3, |_, _| C64::new(rng.normal(), rng.normal()));
+        let layer = AnalogLinear::new(Box::new(m.clone()));
+        let a = Mat::from_fn(5, 3, |_, _| rng.normal());
+        let g = 1.7;
+        let (zre, zim) = layer.forward(&a, g);
+        let h = AnalogLinear::detect(&zre, &zim);
+        for i in 0..5 {
+            let x: Vec<C64> = a.row(i).iter().map(|&v| C64::real(v)).collect();
+            let y = m.matvec(&x);
+            for j in 0..4 {
+                assert!((zre[(i, j)] - g * y[j].re).abs() < 1e-12);
+                assert!((zim[(i, j)] - g * y[j].im).abs() < 1e-12);
+                assert!((h[(i, j)] - g * y[j].abs()).abs() < 1e-12);
+            }
+        }
+        assert!(layer.mesh().is_none()); // digital reference has no mesh
+    }
+
+    #[test]
+    fn analog_linear_backward_matches_numerical() {
+        let mut rng = Rng::new(10);
+        let m = CMat::from_fn(3, 3, |_, _| C64::new(rng.normal(), rng.normal()));
+        let layer = AnalogLinear::new(Box::new(m));
+        let a = Mat::from_fn(2, 3, |_, _| rng.normal());
+        let dh = Mat::from_fn(2, 3, |_, _| rng.normal());
+        let g = 0.8;
+        // Loss L(a) = Σ dh ⊙ |g·M·a|.
+        let loss = |a: &Mat| -> f64 {
+            let (zre, zim) = layer.forward(a, g);
+            let h = AnalogLinear::detect(&zre, &zim);
+            h.zip(&dh, |hv, dv| hv * dv).data().iter().sum()
+        };
+        let (zre, zim) = layer.forward(&a, g);
+        let da = layer.backward(&zre, &zim, &dh, g);
+        let eps = 1e-6;
+        for i in 0..2 {
+            for j in 0..3 {
+                let mut ap = a.clone();
+                ap[(i, j)] += eps;
+                let mut am = a.clone();
+                am[(i, j)] -= eps;
+                let num = (loss(&ap) - loss(&am)) / (2.0 * eps);
+                assert!((da[(i, j)] - num).abs() < 1e-6, "({i},{j}): {} vs {num}", da[(i, j)]);
+            }
+        }
     }
 }

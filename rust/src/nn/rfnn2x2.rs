@@ -12,13 +12,26 @@ use super::loss::bce_with_logit;
 use super::sgd::{MiniBatches, Sgd, SgdConfig};
 use crate::dataset::Dataset2D;
 use crate::device::State;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
 use crate::math::rng::Rng;
 use crate::microwave::phase_shifter::N_STATES;
+use crate::processor::LinearProcessor;
 
 /// The analog device interface: measured output voltage magnitudes
 /// `(|v2|, |v3|)` for in-phase inputs `(v1, v4)` in a given state.
+///
+/// `hidden_batch` is the throughput surface: backends that execute as a
+/// [`LinearProcessor`] serve a whole excitation batch with one
+/// `apply_batch` GEMM; the default loops the scalar path (physical test
+/// benches that genuinely measure one point at a time).
 pub trait AnalogDevice2x2 {
     fn hidden(&self, st: State, v1: f64, v4: f64) -> (f64, f64);
+
+    /// Measure a whole batch of `(v1, v4)` excitations in one state.
+    fn hidden_batch(&self, st: State, inputs: &[(f64, f64)]) -> Vec<(f64, f64)> {
+        inputs.iter().map(|&(v1, v4)| self.hidden(st, v1, v4)).collect()
+    }
 }
 
 impl<F: Fn(State, f64, f64) -> (f64, f64)> AnalogDevice2x2 for F {
@@ -27,12 +40,39 @@ impl<F: Fn(State, f64, f64) -> (f64, f64)> AnalogDevice2x2 for F {
     }
 }
 
-/// An ideal-physics device at the discrete Table-I phases.
-pub fn ideal_device() -> impl AnalogDevice2x2 {
-    |st: State, v1: f64, v4: f64| {
-        let t = crate::mesh::quantize::state_t_matrix(st);
-        let out = t.matvec(&[crate::math::c64::C64::real(v1), crate::math::c64::C64::real(v4)]);
+/// An ideal-physics device at the discrete Table-I phases, executing
+/// through the [`LinearProcessor`] digital-reference backend (one 2×2
+/// transfer matrix per device state, batched GEMM on `hidden_batch`).
+pub struct IdealDevice2x2 {
+    /// 36 state transfer matrices, θ-major (`theta * N_STATES + phi`).
+    t: Vec<CMat>,
+}
+
+impl IdealDevice2x2 {
+    fn proc(&self, st: State) -> &CMat {
+        &self.t[st.theta * N_STATES + st.phi]
+    }
+}
+
+impl AnalogDevice2x2 for IdealDevice2x2 {
+    fn hidden(&self, st: State, v1: f64, v4: f64) -> (f64, f64) {
+        let out = LinearProcessor::apply(self.proc(st), &[C64::real(v1), C64::real(v4)]);
         (out[0].abs(), out[1].abs())
+    }
+
+    fn hidden_batch(&self, st: State, inputs: &[(f64, f64)]) -> Vec<(f64, f64)> {
+        let x = CMat::from_fn(2, inputs.len(), |i, j| {
+            C64::real(if i == 0 { inputs[j].0 } else { inputs[j].1 })
+        });
+        let y = LinearProcessor::apply_batch(self.proc(st), &x);
+        (0..inputs.len()).map(|j| (y[(0, j)].abs(), y[(1, j)].abs())).collect()
+    }
+}
+
+/// Build the ideal device (all 36 state matrices precomposed).
+pub fn ideal_device() -> IdealDevice2x2 {
+    IdealDevice2x2 {
+        t: crate::device::State::all().map(crate::mesh::quantize::state_t_matrix).collect(),
     }
 }
 
@@ -91,6 +131,20 @@ impl Rfnn2x2 {
         sigmoid(self.post.w1 * h1 + self.post.w2 * h2 + self.post.b)
     }
 
+    /// Batched forward: one device call (a single `apply_batch` GEMM for
+    /// processor-backed devices) for a whole coalesced batch of points.
+    pub fn forward_batch<D: AnalogDevice2x2>(&self, dev: &D, xs: &[[f64; 2]]) -> Vec<f64> {
+        let inputs: Vec<(f64, f64)> =
+            xs.iter().map(|x| (self.gamma * x[1], self.gamma * x[0])).collect();
+        dev.hidden_batch(self.state, &inputs)
+            .into_iter()
+            .map(|(h1, h2)| {
+                let (h1, h2) = (h1 * self.h_scale / self.gamma, h2 * self.h_scale / self.gamma);
+                sigmoid(self.post.w1 * h1 + self.post.w2 * h2 + self.post.b)
+            })
+            .collect()
+    }
+
     /// Classify (threshold 0.5).
     pub fn predict<D: AnalogDevice2x2>(&self, dev: &D, x: [f64; 2]) -> f64 {
         if self.forward(dev, x) >= 0.5 {
@@ -137,15 +191,15 @@ pub fn train_post<D: AnalogDevice2x2>(
     cfg: &TrainConfig,
 ) -> (Rfnn2x2, f64) {
     let mut rng = Rng::new(cfg.seed ^ ((state.theta as u64) << 32 | state.phi as u64));
-    // Pre-measure hidden activations once per sample (the device is linear
-    // in its inputs only up to |·|; activations are fixed given the state).
-    let hidden: Vec<(f64, f64)> = ds
-        .points
-        .iter()
-        .map(|p| {
-            let (h1, h2) = dev.hidden(state, cfg.gamma * p[1], cfg.gamma * p[0]);
-            (h1 / cfg.gamma, h2 / cfg.gamma)
-        })
+    // Pre-measure hidden activations for the whole training set in ONE
+    // batched device call (the device is linear in its inputs only up to
+    // |·|; activations are fixed given the state).
+    let inputs: Vec<(f64, f64)> =
+        ds.points.iter().map(|p| (cfg.gamma * p[1], cfg.gamma * p[0])).collect();
+    let hidden: Vec<(f64, f64)> = dev
+        .hidden_batch(state, &inputs)
+        .into_iter()
+        .map(|(h1, h2)| (h1 / cfg.gamma, h2 / cfg.gamma))
         .collect();
     // Normalize activations to ~[0, 1] so the 3-parameter logistic fit is
     // well-conditioned at a fixed learning rate.
@@ -320,6 +374,32 @@ mod tests {
             let h2 = v1 * (theta / 2.0).cos() - v4 * (theta / 2.0).sin();
             let z = post.w1 * h1 + post.w2 * h2 + post.b;
             assert!(z.abs() < 1e-9, "z = {z} at v4 = {v4}");
+        }
+    }
+
+    #[test]
+    fn batched_device_path_matches_scalar() {
+        let dev = ideal_device();
+        let inputs: Vec<(f64, f64)> =
+            (0..23).map(|k| (0.01 * k as f64, 0.3 - 0.02 * k as f64)).collect();
+        for st in [State { theta: 0, phi: 0 }, State { theta: 4, phi: 2 }] {
+            let batched = dev.hidden_batch(st, &inputs);
+            for (k, &(v1, v4)) in inputs.iter().enumerate() {
+                let (h1, h2) = dev.hidden(st, v1, v4);
+                assert!((batched[k].0 - h1).abs() < 1e-13);
+                assert!((batched[k].1 - h2).abs() < 1e-13);
+            }
+        }
+        let model = Rfnn2x2 {
+            state: State { theta: 2, phi: 5 },
+            post: PostParams { w1: 0.7, w2: -0.4, b: 0.1 },
+            gamma: 0.01,
+            h_scale: 0.9,
+        };
+        let pts: Vec<[f64; 2]> = (0..17).map(|k| [k as f64, 30.0 - k as f64]).collect();
+        let yb = model.forward_batch(&dev, &pts);
+        for (k, &p) in pts.iter().enumerate() {
+            assert!((yb[k] - model.forward(&dev, p)).abs() < 1e-13);
         }
     }
 

@@ -1,0 +1,171 @@
+//! The unified execution abstraction for every linear backend.
+//!
+//! Everything in this system that multiplies a vector by a matrix — the
+//! ideal analytic mesh, the measured (virtual-VNA) [`DiscreteMesh`], a
+//! Table-I-quantized mesh, or a plain digital [`CMat`] — is a *linear
+//! processor*: it owns an `out × in` transfer matrix and executes
+//! matrix–matrix products against batches of input vectors. The
+//! [`LinearProcessor`] trait is the single interface the NN layers and the
+//! serving coordinator program against, so swapping fidelity levels (or,
+//! later, sharding across several physical processors) never touches the
+//! forward-path code.
+//!
+//! The hot path is [`LinearProcessor::apply_batch`]: one blocked complex
+//! GEMM ([`CMat::gemm`]) over the whole batch instead of a per-vector
+//! `matvec` loop. Batches are laid out column-wise (`x` has shape
+//! `in × B`, one vector per column), matching the math convention
+//! `Y = M·X`; `apply` is the `B = 1` special case.
+
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::mesh::propagate::DiscreteMesh;
+
+/// How faithfully a backend models the physical processor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Exact digital arithmetic (reference backend; not a device model).
+    Digital,
+    /// Ideal analytic unit cells at the discrete Table-I phases (eq. 5).
+    Ideal,
+    /// A mesh programmed by quantizing a continuous target onto the 36
+    /// discrete states (Table I) — the paper's main precision limit.
+    Quantized,
+    /// Per-cell measured (virtual-VNA) transfer blocks with fabrication
+    /// imperfections and noise — the stand-in for real hardware.
+    Measured,
+}
+
+/// Cost metadata for reprogramming a processor to new weights/states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReprogramCost {
+    /// Number of discrete programmable state variables (0 = weights are
+    /// fixed or directly writable, as for the digital reference).
+    pub state_vars: usize,
+    /// Approximate FLOPs to rebuild the composed transfer matrix after a
+    /// state write (the DSPSA inner-loop cost).
+    pub recompose_flops: u64,
+}
+
+impl ReprogramCost {
+    /// A backend with directly writable weights and no recompose step.
+    pub const FREE: ReprogramCost = ReprogramCost { state_vars: 0, recompose_flops: 0 };
+}
+
+/// A linear backend: an `out × in` transfer matrix plus batched execution.
+///
+/// Implementations only *must* provide the metadata and [`Self::matrix`];
+/// `apply_batch`/`apply` default to the blocked GEMM over the composed
+/// matrix, which is the right answer for every backend that caches its
+/// composition (all current ones do).
+pub trait LinearProcessor: Send {
+    /// `(out_dim, in_dim)` of the transfer matrix.
+    fn dims(&self) -> (usize, usize);
+
+    /// Modelling fidelity of this backend.
+    fn fidelity(&self) -> Fidelity;
+
+    /// Cost of reprogramming this backend to a new state.
+    fn reprogram_cost(&self) -> ReprogramCost;
+
+    /// The composed transfer matrix.
+    fn matrix(&self) -> &CMat;
+
+    /// Execute a whole batch: `Y = M·X` with `x` of shape `in × B` (one
+    /// input vector per column). Returns `out × B`.
+    fn apply_batch(&self, x: &CMat) -> CMat {
+        let (out, inp) = self.dims();
+        assert_eq!(x.rows(), inp, "apply_batch: {out}x{inp} processor, {} input rows", x.rows());
+        self.matrix().gemm(x)
+    }
+
+    /// Execute one vector — the batch-1 special case of [`Self::apply_batch`].
+    fn apply(&self, x: &[C64]) -> Vec<C64> {
+        self.matrix().matvec(x)
+    }
+
+    /// Discrete device states as a flat code (θ0, φ0, θ1, φ1, …), if this
+    /// backend is state-programmed. `None` for fixed-weight backends.
+    fn state_code(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Program the backend from a flat state code; returns `false` if the
+    /// backend has no programmable states.
+    fn set_state_code(&mut self, _code: &[usize]) -> bool {
+        false
+    }
+
+    /// Escape hatch for hardware-ABI export (AOT coefficient planes,
+    /// failure injection): the underlying mesh, when there is one.
+    fn as_mesh(&self) -> Option<&DiscreteMesh> {
+        None
+    }
+
+    /// Mutable counterpart of [`Self::as_mesh`]. Backends that cache a
+    /// derived composition (e.g. a quantized mesh with an input phase
+    /// layer) return `None` to protect cache coherence.
+    fn as_mesh_mut(&mut self) -> Option<&mut DiscreteMesh> {
+        None
+    }
+}
+
+/// The digital reference backend: a plain dense complex matrix.
+impl LinearProcessor for CMat {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Digital
+    }
+
+    fn reprogram_cost(&self) -> ReprogramCost {
+        ReprogramCost::FREE
+    }
+
+    fn matrix(&self) -> &CMat {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn cmat_is_the_digital_reference() {
+        let mut rng = Rng::new(1);
+        let m = CMat::from_fn(3, 5, |_, _| C64::new(rng.normal(), rng.normal()));
+        let p: &dyn LinearProcessor = &m;
+        assert_eq!(p.dims(), (3, 5));
+        assert_eq!(p.fidelity(), Fidelity::Digital);
+        assert_eq!(p.reprogram_cost(), ReprogramCost::FREE);
+        assert!(p.state_code().is_none());
+        assert!(p.as_mesh().is_none());
+    }
+
+    #[test]
+    fn apply_batch_matches_columnwise_apply() {
+        let mut rng = Rng::new(2);
+        let m = CMat::from_fn(4, 4, |_, _| C64::new(rng.normal(), rng.normal()));
+        let x = CMat::from_fn(4, 7, |_, _| C64::new(rng.normal(), rng.normal()));
+        let y = LinearProcessor::apply_batch(&m, &x);
+        assert_eq!((y.rows(), y.cols()), (4, 7));
+        for j in 0..7 {
+            let col = x.col(j);
+            let want = LinearProcessor::apply(&m, &col);
+            for i in 0..4 {
+                assert!((y[(i, j)] - want[i]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "apply_batch")]
+    fn apply_batch_rejects_wrong_input_rows() {
+        let m = CMat::eye(3);
+        let x = CMat::zeros(4, 2);
+        let _ = LinearProcessor::apply_batch(&m, &x);
+    }
+}

@@ -1,0 +1,59 @@
+//! Stub PJRT engine — compiled when the `pjrt` feature is off (the
+//! offline vendor set has no `xla` crate). Mirrors the real engine's API
+//! so callers compile unchanged; construction always fails, which routes
+//! every execution surface onto the native batched-GEMM backend.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use crate::util::error::{Error, Result};
+
+/// Stand-in for the PJRT client; cannot be constructed.
+pub struct Engine {
+    manifest: Manifest,
+}
+
+/// Stand-in for one compiled HLO module.
+pub struct LoadedModule {
+    /// ABI from the manifest (arg order/shapes, result shape).
+    pub spec: ArtifactSpec,
+}
+
+impl Engine {
+    /// Always fails: the build carries no PJRT runtime.
+    pub fn cpu(_artifacts_dir: &std::path::Path) -> Result<Engine> {
+        Err(Error::msg(
+            "PJRT runtime unavailable: built without the `pjrt` feature (the offline \
+             vendor set has no `xla` crate); serving natively",
+        ))
+    }
+
+    /// The manifest (unreachable: no stub engine is ever constructed).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature off)".to_string()
+    }
+
+    /// Load (compile) an artifact by manifest key.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModule> {
+        Err(Error::msg(format!("cannot load '{name}': PJRT runtime unavailable")))
+    }
+
+    /// Execute a loaded module on f32 buffers.
+    pub fn execute_f32(&mut self, name: &str, _args: &[&[f32]]) -> Result<Vec<f32>> {
+        Err(Error::msg(format!("cannot execute '{name}': PJRT runtime unavailable")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_closed() {
+        let err = Engine::cpu(std::path::Path::new("artifacts")).err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT runtime unavailable"), "{err}");
+    }
+}

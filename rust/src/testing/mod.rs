@@ -3,6 +3,11 @@
 //! The offline vendor set has no `proptest`, so [`prop`] provides a small
 //! in-repo property-testing harness: seeded generators, a `forall` runner
 //! with failure reproduction info, and shrinking for the common scalar/vec
-//! shapes used by the library's invariant tests.
+//! shapes used by the library's invariant tests. `processor_props` holds
+//! the cross-backend [`crate::processor::LinearProcessor`] execution
+//! contract (`apply_batch` ≡ column-by-column `matvec` ≡ naive reference).
 
 pub mod prop;
+
+#[cfg(test)]
+mod processor_props;

@@ -1,0 +1,115 @@
+//! Property tests for the [`LinearProcessor`] execution contract:
+//! `apply_batch` over any backend must equal the column-by-column `matvec`
+//! of its composed matrix, which in turn must equal a naive triple-loop
+//! reference (so the blocked GEMM cannot be "self-consistently wrong").
+//!
+//! Backends covered: the digital `CMat` reference, the ideal analytic
+//! mesh, the measured (virtual-VNA) mesh, and the Table-I-quantized mesh.
+//! Dims 2–16, batch 1–64, per the PR-1 contract.
+
+use super::prop::{forall_seeded, Gen};
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::svd::svd;
+use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+use crate::mesh::quantize::QuantizedMesh;
+use crate::processor::LinearProcessor;
+
+/// Naive `M·X` reference: the O(m·k·n) triple loop, no blocking.
+fn naive_gemm(m: &CMat, x: &CMat) -> CMat {
+    assert_eq!(m.cols(), x.rows());
+    CMat::from_fn(m.rows(), x.cols(), |i, j| {
+        let mut acc = C64::ZERO;
+        for k in 0..m.cols() {
+            acc += m[(i, k)] * x[(k, j)];
+        }
+        acc
+    })
+}
+
+/// A random complex batch matrix.
+fn gen_batch(g: &mut Gen, rows: usize, batch: usize) -> CMat {
+    let data: Vec<C64> =
+        (0..rows * batch).map(|_| C64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0))).collect();
+    CMat::from_rows(rows, batch, &data)
+}
+
+/// The contract under test, for one backend instance.
+fn check_processor(p: &dyn LinearProcessor, g: &mut Gen, tol: f64) {
+    let (out, inp) = p.dims();
+    let batch = g.usize_in(1, 64);
+    let x = gen_batch(g, inp, batch);
+    let y = p.apply_batch(&x);
+    assert_eq!((y.rows(), y.cols()), (out, batch));
+    let reference = naive_gemm(p.matrix(), &x);
+    for j in 0..batch {
+        // Column-by-column matvec (the replaced per-vector hot path)…
+        let col = p.apply(&x.col(j));
+        for i in 0..out {
+            assert!(
+                (y[(i, j)] - col[i]).abs() < tol,
+                "batch≠matvec at ({i},{j}): {:?} vs {:?}",
+                y[(i, j)],
+                col[i]
+            );
+            // …and the naive reference.
+            assert!(
+                (y[(i, j)] - reference[(i, j)]).abs() < tol,
+                "batch≠naive at ({i},{j})"
+            );
+        }
+    }
+}
+
+/// A random unitary (SVD of a random complex matrix, singular values
+/// snapped to 1).
+fn gen_unitary(g: &mut Gen, n: usize) -> CMat {
+    let a = CMat::from_fn(n, n, |_, _| C64::new(g.normal(), g.normal()));
+    let f = svd(&a);
+    f.u.matmul(&f.vh)
+}
+
+#[test]
+fn digital_cmat_apply_batch_matches_matvec() {
+    forall_seeded("digital CMat batch ≡ matvec", 0xD161, 30, |g| {
+        let out = g.usize_in(2, 16);
+        let inp = g.usize_in(2, 16);
+        let m = CMat::from_fn(out, inp, |_, _| C64::new(g.normal(), g.normal()));
+        check_processor(&m, g, 1e-11);
+    });
+}
+
+#[test]
+fn ideal_mesh_apply_batch_matches_matvec() {
+    forall_seeded("ideal mesh batch ≡ matvec", 0x1DEA, 12, |g| {
+        let n = g.usize_in(2, 16);
+        let mut mesh = DiscreteMesh::new(n, MeshBackend::Ideal);
+        let states: Vec<usize> = (0..2 * mesh.cells()).map(|_| g.usize_in(0, 5)).collect();
+        mesh.set_encoded(&states);
+        check_processor(&mesh, g, 1e-11);
+    });
+}
+
+#[test]
+fn measured_mesh_apply_batch_matches_matvec() {
+    // Fewer cases: each measured mesh fabricates N(N−1)/2 virtual-VNA
+    // devices (36 circuit evaluations apiece).
+    forall_seeded("measured mesh batch ≡ matvec", 0x3EA5, 5, |g| {
+        let n = g.usize_in(2, 16);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let mut mesh = DiscreteMesh::new(n, MeshBackend::Measured { base_seed: seed });
+        let states: Vec<usize> = (0..2 * mesh.cells()).map(|_| g.usize_in(0, 5)).collect();
+        mesh.set_encoded(&states);
+        check_processor(&mesh, g, 1e-11);
+    });
+}
+
+#[test]
+fn quantized_mesh_apply_batch_matches_matvec() {
+    forall_seeded("quantized mesh batch ≡ matvec", 0x9A47, 8, |g| {
+        let n = g.usize_in(2, 16);
+        let u = gen_unitary(g, n);
+        let q = QuantizedMesh::program_unitary(&u, MeshBackend::Ideal);
+        check_processor(&q, g, 1e-11);
+    });
+}

@@ -1,0 +1,67 @@
+//! Minimal error type for fallible library surfaces (the offline vendor
+//! set has no `anyhow`). A string-message error with `Display`/`Debug`
+//! that prints the message, so `unwrap()`/`expect()` failures stay
+//! readable, plus a `Result` alias defaulting to it.
+
+use std::fmt;
+
+/// A string-message error.
+pub struct Error(String);
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything stringly.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error(m.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn converts_from_strings() {
+        fn fails() -> Result<()> {
+            Err(Error::from("nope"))
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope");
+        let owned: Error = String::from("also nope").into();
+        assert_eq!(owned.to_string(), "also nope");
+    }
+}

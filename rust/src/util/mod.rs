@@ -1,4 +1,5 @@
-//! Small shared utilities: JSON emission, table formatting, timing.
+//! Small shared utilities: error type, JSON emission, table formatting.
 
+pub mod error;
 pub mod json;
 pub mod table;
