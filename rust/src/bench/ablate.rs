@@ -11,6 +11,7 @@
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{Backend, ModelBundle, Server, ServerConfig};
+use crate::coordinator::service::SubmitError;
 use crate::dataset::mnist::load_or_synthesize;
 use crate::device::vna::FabSpread;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
@@ -152,14 +153,33 @@ pub fn batching_sweep(quick: bool) -> String {
             backend: Backend::Native,
         });
         let t0 = std::time::Instant::now();
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        // Open loop against the bounded admission queue: on Overloaded,
+        // drain one in-flight ticket (backpressure), then retry — the
+        // queue sheds instead of blocking or growing without bound.
+        let mut inflight = std::collections::VecDeque::new();
+        let mut served = 0usize;
         for k in 0..requests {
-            srv.client.submit(images[k % images.len()].clone(), reply_tx.clone()).unwrap();
+            loop {
+                match srv.client.submit(images[k % images.len()].clone()) {
+                    Ok(ticket) => {
+                        inflight.push_back(ticket);
+                        break;
+                    }
+                    Err(SubmitError::Overloaded { .. }) => {
+                        if let Some(t) = inflight.pop_front() {
+                            if t.wait().is_ok() {
+                                served += 1;
+                            }
+                        }
+                    }
+                    Err(e) => panic!("A6 submit failed: {e}"),
+                }
+            }
         }
-        drop(reply_tx);
-        let mut served = 0;
-        while reply_rx.recv().is_ok() {
-            served += 1;
+        for t in inflight {
+            if t.wait().is_ok() {
+                served += 1;
+            }
         }
         let rps = served as f64 / t0.elapsed().as_secs_f64();
         t.row(&[

@@ -5,7 +5,11 @@
 //! artifacts are present. Results are recorded in EXPERIMENTS.md §Perf.
 
 use super::harness::{bench, BenchStats};
-use crate::coordinator::server::ModelBundle;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{Backend, ModelBundle};
+use crate::coordinator::service::{
+    Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload, WIRE_VERSION,
+};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::math::rng::Rng;
@@ -20,10 +24,12 @@ use crate::util::json::Json;
 /// coordinator's BatchPolicy coalesces up to 256).
 pub const GEMM_BATCHES: [usize; 4] = [1, 8, 64, 256];
 
-/// Run every perf bench; returns the report. Also measures the batched
+/// Run every perf bench; returns the report. Measures the batched
 /// `apply_batch` path against the per-vector `matvec` loop it replaced
-/// and writes the comparison to `BENCH_pr1.json` (override the path with
-/// `RFNN_BENCH_OUT`) so the perf trajectory tracks this PR.
+/// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`) and the
+/// end-to-end `submit` → `Ticket::wait` serving path through the unified
+/// front door (written to `BENCH_pr2.json`; override with
+/// `RFNN_BENCH2_OUT`) so the perf trajectory tracks each PR.
 pub fn all(quick: bool) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -48,7 +54,94 @@ pub fn all(quick: bool) -> String {
         Ok(()) => out.push_str(&format!("wrote {path}\n")),
         Err(e) => out.push_str(&format!("could not write {path}: {e}\n")),
     }
+    out.push_str("§Perf — end-to-end service submit→wait (MNIST infer, native backend)\n");
+    let svc_rows = run_service_benches(samples);
+    for (b, stats) in &svc_rows {
+        out.push_str(&stats.line());
+        out.push('\n');
+        let per_req = stats.median_ns() as f64 / *b as f64;
+        out.push_str(&format!(
+            "  batch {b:>3}: {:.0} requests/s through the front door\n",
+            1e9 / per_req.max(1.0)
+        ));
+    }
+    let json2 = service_report_json(&svc_rows, samples, quick);
+    let path2 =
+        std::env::var("RFNN_BENCH2_OUT").unwrap_or_else(|_| "BENCH_pr2.json".to_string());
+    match std::fs::write(&path2, json2.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path2}\n")),
+        Err(e) => out.push_str(&format!("could not write {path2}: {e}\n")),
+    }
     out
+}
+
+/// Time the full serving path — `ProcessorService::submit` → batcher →
+/// one `apply_batch` GEMM → `Ticket::wait` — at each in-flight batch size
+/// in [`GEMM_BATCHES`]. Each sample submits `b` infer jobs and drains all
+/// `b` tickets, so `median_ns / b` is the per-request front-door cost
+/// including queueing, coalescing, and reply routing.
+pub fn run_service_benches(samples: usize) -> Vec<(usize, BenchStats)> {
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+    let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
+    let mut pool = ProcessorPool::new();
+    pool.register(
+        "mnist8",
+        Workload::Mnist { bundle, backend: Backend::Native },
+        PoolConfig {
+            queue_depth: 4096,
+            batch: BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("register mnist8");
+    let svc = ProcessorService::new(pool);
+    let img: Vec<f32> = (0..784).map(|i| (i % 61) as f32 / 61.0).collect();
+    let mut out = Vec::new();
+    for &b in &GEMM_BATCHES {
+        let stats = bench(&format!("service submit→wait b{b}"), samples, || {
+            let tickets: Vec<_> = (0..b)
+                .map(|_| {
+                    svc.submit(Job::Infer { processor: "mnist8".into(), image: img.clone() })
+                        .expect("queue depth exceeds max in-flight")
+                })
+                .collect();
+            for t in tickets {
+                match t.wait().expect("worker alive") {
+                    JobResult::Infer { .. } => {}
+                    other => panic!("unexpected result {other:?}"),
+                }
+            }
+        });
+        out.push((b, stats));
+    }
+    out
+}
+
+/// The PR-2 perf-trajectory record for [`run_service_benches`] results.
+pub fn service_report_json(rows: &[(usize, BenchStats)], samples: usize, quick: bool) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(b, stats)| {
+            let per_req = stats.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("batch", Json::Num(*b as f64)),
+                ("ns_per_request", Json::Num(per_req)),
+                ("requests_per_sec", Json::Num(1e9 / per_req.max(1.0))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pr", Json::Num(2.0)),
+        ("bench", Json::Str("service_submit_wait_infer".into())),
+        ("wire_version", Json::Num(WIRE_VERSION as f64)),
+        ("n", Json::Num(8.0)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time `apply_batch` (one blocked GEMM per call) against the per-vector
@@ -237,6 +330,26 @@ mod tests {
         assert!(report.contains("mesh8.apply"), "{report}");
         assert!(report.contains("native fwd"), "{report}");
         assert!(report.contains("apply_batch"), "{report}");
+        assert!(report.contains("service submit"), "{report}");
+    }
+
+    #[test]
+    fn service_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_service_benches(2);
+        assert_eq!(rows.len(), super::GEMM_BATCHES.len());
+        let json = super::service_report_json(&rows, 2, true);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(
+            parsed.get("wire_version").and_then(|v| v.as_f64()),
+            Some(super::WIRE_VERSION as f64)
+        );
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), super::GEMM_BATCHES.len());
+        for r in results {
+            let rps = r.get("requests_per_sec").and_then(|v| v.as_f64()).expect("rps");
+            assert!(rps.is_finite() && rps > 0.0, "requests_per_sec {rps}");
+        }
     }
 
     #[test]

@@ -1,8 +1,33 @@
-//! Hand-rolled CLI argument parsing (the offline vendor set has no clap).
+//! The `rfnn` command layer: hand-rolled argument parsing (the offline
+//! vendor set has no clap) plus the command implementations the binary
+//! dispatches to.
 //!
 //! Grammar: `rfnn <command> [--flag[=value] | --flag value | positional]…`
+//!
+//! `serve` and `job` speak the unified serving API: both register a
+//! default [`ProcessorPool`] (an MNIST bundle, a 2×2 classifier bank, and
+//! a bare 8×8 mesh) and drive it through
+//! [`ProcessorService::submit`]; `job` additionally decodes its input
+//! from — and prints its result in — the versioned wire form
+//! ([`crate::coordinator::service::WIRE_VERSION`]).
 
+use crate::bench;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{Backend, ModelBundle};
+use crate::coordinator::service::{
+    Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, SubmitError, Workload,
+};
+use crate::dataset::mnist::load_or_synthesize;
+use crate::device::State;
+use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+use crate::nn::rfnn2x2::{PostParams, Rfnn2x2};
+use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
+use crate::nn::sgd::SgdConfig;
+use crate::runtime::Manifest;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -60,6 +85,284 @@ impl Args {
     }
 }
 
+const USAGE: &str = "\
+rfnn — reconfigurable linear RF analog processor / microwave neural network
+
+USAGE:
+    rfnn bench <experiment|all> [--quick]     regenerate a paper table/figure
+    rfnn train-mnist [--train N] [--test N] [--epochs N] [--lr F] [--digital]
+    rfnn serve [--requests N] [--batch N] [--depth N] [--native]
+    rfnn job '<wire json>' [--native]         submit one wire-encoded job
+    rfnn info                                 platform + artifact status
+
+serve drives the pooled ProcessorService (mnist8 + cls2x2 + mesh8) with
+mixed infer/classify/raw-apply/reprogram traffic; --depth bounds each
+admission queue (overload sheds, it does not block).
+
+EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf";
+
+/// Dispatch a parsed command line; returns the process exit code.
+pub fn run(args: &Args) -> i32 {
+    match args.command.as_deref() {
+        Some("bench") => cmd_bench(args),
+        Some("train-mnist") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
+        Some("job") => cmd_job(args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            0
+        }
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let quick = args.is_set("quick");
+    let target = args.positional.first().map(String::as_str).unwrap_or("all");
+    let names: Vec<&str> = if target == "all" {
+        bench::EXPERIMENTS.to_vec()
+    } else {
+        vec![target]
+    };
+    for name in names {
+        println!("=== {name} ===");
+        match bench::run(name, quick) {
+            Ok(report) => println!("{report}"),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let n_train = args.get_or("train", 2000usize);
+    let n_test = args.get_or("test", 1000usize);
+    let epochs = args.get_or("epochs", 30usize);
+    let lr = args.get_or("lr", 0.02f64);
+    let seed = args.get_or("seed", 2023u64);
+    let (tr, te) = load_or_synthesize(n_train, n_test, seed);
+    let cfg = MnistTrainConfig {
+        epochs,
+        sgd: SgdConfig { lr, batch_size: 10, momentum: 0.0 },
+        ..Default::default()
+    };
+    let mut net = if args.is_set("digital") {
+        println!("training digital twin ({n_train} samples, {epochs} epochs, lr {lr})");
+        MnistRfnn::digital(8, seed)
+    } else {
+        println!("training analog RFNN ({n_train} samples, {epochs} epochs, lr {lr})");
+        MnistRfnn::analog(8, MeshBackend::Measured { base_seed: seed ^ 0xAA }, seed)
+    };
+    net.train(&tr, &cfg);
+    for h in net.history.iter().step_by((epochs / 10).max(1)) {
+        println!("epoch {:>3}: train acc {:.3} err {:.3}", h.epoch + 1, h.train_acc, h.train_loss);
+    }
+    println!("test accuracy: {:.2}%", 100.0 * net.test_accuracy(&te));
+    0
+}
+
+/// The six demo 2×2 classifiers (fixed post-params; one per θ state) —
+/// enough to exercise state-grouped serving without a training pass.
+/// Public so the service tests and the CLI serve EXACTLY the same bank.
+pub fn demo_classifiers() -> Vec<Rfnn2x2> {
+    (0..6)
+        .map(|theta| Rfnn2x2 {
+            state: State { theta, phi: 5 },
+            post: PostParams { w1: 0.9 - 0.1 * theta as f64, w2: -0.5, b: 0.2 },
+            gamma: 0.01,
+            h_scale: 1.0,
+        })
+        .collect()
+}
+
+/// Build the default three-processor pool: `mnist8` (MNIST bundle over
+/// the requested backend), `cls2x2` (classifier bank), `mesh8` (bare
+/// ideal mesh serving raw applies and reprograms).
+fn default_pool(backend: Backend, cfg: PoolConfig) -> ProcessorPool {
+    let net = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 7 }, 7);
+    let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
+    let mut pool = ProcessorPool::new();
+    pool.register("mnist8", Workload::Mnist { bundle, backend }, cfg).expect("register mnist8");
+    pool.register("cls2x2", Workload::Classify2x2(demo_classifiers()), cfg)
+        .expect("register cls2x2");
+    pool.register("mesh8", Workload::Processor(Box::new(DiscreteMesh::new(8, MeshBackend::Ideal))), cfg)
+        .expect("register mesh8");
+    pool
+}
+
+fn backend_from(args: &Args) -> Backend {
+    if args.is_set("native") {
+        Backend::Native
+    } else {
+        Backend::Pjrt(Manifest::default_dir())
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let requests = args.get_or("requests", 1000usize);
+    let max_batch = args.get_or("batch", 256usize);
+    let depth = args.get_or("depth", 1024usize);
+    let cfg = PoolConfig {
+        queue_depth: depth,
+        batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        ..PoolConfig::default()
+    };
+    let svc = Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg)));
+    let (ds, _) = load_or_synthesize(requests.min(512), 1, 99);
+    let images: Arc<Vec<Vec<f32>>> = Arc::new(
+        ds.images.iter().map(|img| img.iter().map(|&v| v as f32).collect()).collect(),
+    );
+    let overloads = Arc::new(AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    // Four closed-loop MNIST infer clients.
+    let per_thread = requests / 4;
+    for t in 0..4usize {
+        let svc = svc.clone();
+        let images = images.clone();
+        let overloads = overloads.clone();
+        handles.push(std::thread::spawn(move || {
+            for k in 0..per_thread {
+                let img = &images[(t * per_thread + k) % images.len()];
+                loop {
+                    match svc.submit(Job::Infer { processor: "mnist8".into(), image: img.clone() })
+                    {
+                        Ok(ticket) => {
+                            let _ = ticket.wait();
+                            break;
+                        }
+                        Err(SubmitError::Overloaded { .. }) => {
+                            overloads.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                        }
+                        Err(e) => {
+                            eprintln!("infer submit: {e}");
+                            return;
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    // One classify client across all six states.
+    {
+        let svc = svc.clone();
+        let n = requests / 4;
+        handles.push(std::thread::spawn(move || {
+            for k in 0..n {
+                let job = Job::Classify {
+                    processor: "cls2x2".into(),
+                    classifier: k % 6,
+                    point: [k as f64 % 31.0, (3 * k) as f64 % 29.0],
+                };
+                if svc.submit_wait(job).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    // One raw-apply + reprogram client against the bare mesh.
+    {
+        let svc = svc.clone();
+        let n = (requests / 64).max(2);
+        handles.push(std::thread::spawn(move || {
+            use crate::math::c64::C64;
+            use crate::math::cmat::CMat;
+            let x = CMat::from_fn(8, 16, |i, j| {
+                C64::new(0.05 * i as f64 - 0.2 + 0.01 * j as f64, 0.02 * i as f64)
+            });
+            for k in 0..n {
+                let _ = svc.submit_wait(Job::RawApply { processor: "mesh8".into(), x: x.clone() });
+                if k % 8 == 7 {
+                    // 8×8 Reck mesh: 28 cells, 56 state variables.
+                    let code: Vec<usize> = (0..56).map(|i| (i + k) % 6).collect();
+                    let _ =
+                        svc.submit_wait(Job::Reprogram { processor: "mesh8".into(), code });
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{} infer requests in {:.2?} → {:.0} req/s ({} overload sheds)",
+        per_thread * 4,
+        dt,
+        (per_thread * 4) as f64 / dt.as_secs_f64(),
+        overloads.load(Ordering::Relaxed)
+    );
+    println!("{}", svc.metrics().report());
+    for info in svc.pool().processors() {
+        println!(
+            "  {}@v{} {:?} {}×{} queue≤{} kinds {:?}",
+            info.name,
+            info.version,
+            info.fidelity,
+            info.dims.0,
+            info.dims.1,
+            info.capacity,
+            info.kinds.iter().map(|k| k.name()).collect::<Vec<_>>()
+        );
+    }
+    println!("{}", svc.metrics().snapshot().to_string_pretty());
+    0
+}
+
+fn cmd_job(args: &Args) -> i32 {
+    let Some(text) = args.positional.first() else {
+        eprintln!("usage: rfnn job '<wire json>' (see WIRE_VERSION in coordinator::service)");
+        return 2;
+    };
+    let job = match Job::decode(text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bad job: {e}");
+            return 2;
+        }
+    };
+    let svc = ProcessorService::new(default_pool(backend_from(args), PoolConfig::default()));
+    match svc.submit(job) {
+        Ok(ticket) => match ticket.wait() {
+            Ok(result) => {
+                println!("{}", result.to_json().to_string_pretty());
+                i32::from(matches!(result, JobResult::Rejected { .. }))
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("rejected: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("rfnn {} — paper doi:10.1109/TMTT.2023.3293054", env!("CARGO_PKG_VERSION"));
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {:?} (N={}, C={}, batches {:?})", dir, m.n, m.cols, m.batch_sizes);
+            for name in m.artifacts.keys() {
+                println!("  {name}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable — {e}"),
+    }
+    match crate::runtime::Engine::cpu(&dir) {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT: unavailable — {e}"),
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +398,22 @@ mod tests {
     fn defaults_apply_on_parse_failure() {
         let a = parse("cmd --n notanumber");
         assert_eq!(a.get_or("n", 42u32), 42);
+    }
+
+    #[test]
+    fn unknown_command_prints_usage_and_succeeds() {
+        assert_eq!(run(&parse("")), 0);
+        assert_eq!(run(&parse("definitely-not-a-command")), 0);
+    }
+
+    #[test]
+    fn job_command_rejects_malformed_wire_input() {
+        // No positional → usage error; bad JSON → decode error. Neither
+        // should build a pool or panic.
+        assert_eq!(run(&parse("job")), 2);
+        assert_eq!(run(&parse("job {not-json}")), 2);
+        let wrong_version = r#"{"v":999,"kind":"infer","processor":"mnist8","image":[]}"#;
+        let a = Args::parse(["job".to_string(), wrong_version.to_string()]);
+        assert_eq!(run(&a), 2);
     }
 }

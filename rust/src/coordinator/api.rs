@@ -1,7 +1,35 @@
-//! Request/response types for the coordinator.
+//! Legacy request/response shims for the coordinator.
+//!
+//! **Deprecated surface.** These are the PR-1 era per-workload types, kept
+//! only because existing tests and the [`super::scheduler::ClassifyService`]
+//! shim construct them. New code submits a typed
+//! [`super::service::Job`] through
+//! [`super::service::ProcessorService::submit`] and waits on the returned
+//! ticket — reply routing is owned by the service, so request types no
+//! longer carry raw `mpsc::Sender` fields.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
+
+/// Index of the largest value under a NaN-tolerant total order: NaN ranks
+/// below every real number (a NaN probability can never become the
+/// prediction), ties break to the lower index, and an empty slice maps
+/// to 0. This is the serving-path argmax — a bare
+/// `partial_cmp().unwrap()` fold panics the worker thread on the first
+/// NaN probability.
+pub fn nan_safe_argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| {
+            let ka = if a.1.is_nan() { f32::NEG_INFINITY } else { *a.1 };
+            let kb = if b.1.is_nan() { f32::NEG_INFINITY } else { *b.1 };
+            // Strict total order: equal keys fall through to preferring
+            // the lower index, so no Ordering::Equal ambiguity remains.
+            ka.total_cmp(&kb).then(b.0.cmp(&a.0))
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
 
 /// An MNIST inference request.
 pub struct InferRequest {
@@ -28,14 +56,9 @@ pub struct InferResponse {
 }
 
 impl InferResponse {
-    /// Predicted class.
+    /// Predicted class (NaN-tolerant; see [`nan_safe_argmax`]).
     pub fn predicted(&self) -> usize {
-        self.probs
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        nan_safe_argmax(&self.probs)
     }
 }
 
@@ -67,5 +90,29 @@ mod tests {
     fn predicted_is_argmax() {
         let r = InferResponse { id: 1, probs: vec![0.1, 0.6, 0.3], queued_us: 0, service_us: 0 };
         assert_eq!(r.predicted(), 1);
+    }
+
+    #[test]
+    fn predicted_survives_nan_probabilities() {
+        // Regression: the seed folded with `partial_cmp().unwrap()`, which
+        // panics the worker thread on the first NaN probability.
+        let r = InferResponse {
+            id: 1,
+            probs: vec![0.1, f32::NAN, 0.3, 0.2],
+            queued_us: 0,
+            service_us: 0,
+        };
+        assert_eq!(r.predicted(), 2, "NaN must rank below every real probability");
+        let all_nan =
+            InferResponse { id: 2, probs: vec![f32::NAN; 4], queued_us: 0, service_us: 0 };
+        assert_eq!(all_nan.predicted(), 0);
+        let empty = InferResponse { id: 3, probs: vec![], queued_us: 0, service_us: 0 };
+        assert_eq!(empty.predicted(), 0);
+    }
+
+    #[test]
+    fn nan_safe_argmax_breaks_ties_low() {
+        assert_eq!(nan_safe_argmax(&[0.5, 0.5, 0.1]), 0);
+        assert_eq!(nan_safe_argmax(&[f32::NAN, 0.5, 0.5]), 1);
     }
 }

@@ -1,6 +1,11 @@
 //! Dynamic batching: coalesce queued requests up to a size cap or a
 //! deadline, whichever comes first — the standard serving trade between
 //! throughput (bigger batches amortize dispatch) and tail latency.
+//!
+//! [`next_batch`] is generic over the item type and the channel flavour:
+//! the pooled workers of [`crate::coordinator::service`] feed it from
+//! *bounded* admission queues (`sync_channel`), whose `Receiver` is the
+//! same type as the legacy unbounded one.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -39,6 +44,22 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
         }
     }
     Some(batch)
+}
+
+/// Non-blocking top-up: pull everything already queued, up to `max` items.
+/// Workers that keep their own internal queues (the classify worker's
+/// per-state scheduler) use this to fold freshly-arrived work into each
+/// scheduling decision without waiting out a batching deadline. Returns an
+/// empty vector when nothing is pending or the channel is closed.
+pub fn drain_ready<T>(rx: &Receiver<T>, max: usize) -> Vec<T> {
+    let mut out = Vec::new();
+    while out.len() < max {
+        match rx.try_recv() {
+            Ok(item) => out.push(item),
+            Err(_) => break,
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -99,6 +120,19 @@ mod tests {
         // Returned at disconnect, not after the full 200 ms window.
         assert!(t0.elapsed() < Duration::from_millis(150));
         assert!(next_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
+    fn drain_ready_is_non_blocking_and_capped() {
+        let (tx, rx) = channel();
+        assert!(drain_ready(&rx, 8).is_empty());
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(drain_ready(&rx, 3), vec![0, 1, 2]);
+        assert_eq!(drain_ready(&rx, 8), vec![3, 4]);
+        drop(tx);
+        assert!(drain_ready(&rx, 8).is_empty());
     }
 
     #[test]

@@ -1,7 +1,62 @@
 //! Lightweight serving metrics: counters and log-bucketed latency
-//! histograms with percentile extraction (no external deps).
+//! histograms with percentile extraction (no external deps), plus the
+//! per-job-kind admission counters behind the unified
+//! [`crate::coordinator::service::ProcessorService`] front door.
+//!
+//! Occupancy accounting rule: only *compute* dispatches (`Infer`,
+//! `Classify`, `RawApply`) feed [`Metrics::record_batch`] — and therefore
+//! the `batches`/`batch_size`/`padded` occupancy view. `Reprogram` is a
+//! control-plane operation: it bumps its [`KindCounters`] and the
+//! `reconfigs` counter but never pollutes batch occupancy.
 
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The job kinds accepted by the unified serving front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// MNIST inference (784-float image → 10 probabilities).
+    Infer,
+    /// 2×2 classification (point under a named trained classifier).
+    Classify,
+    /// Matrix-free batched apply against a named processor.
+    RawApply,
+    /// Write new θ/φ state codes into a programmable processor.
+    Reprogram,
+}
+
+impl JobKind {
+    /// Every kind, in wire order.
+    pub const ALL: [JobKind; 4] =
+        [JobKind::Infer, JobKind::Classify, JobKind::RawApply, JobKind::Reprogram];
+
+    /// Stable wire/snapshot name.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Infer => "infer",
+            JobKind::Classify => "classify",
+            JobKind::RawApply => "raw_apply",
+            JobKind::Reprogram => "reprogram",
+        }
+    }
+}
+
+/// Admission counters for one job kind. Invariant: `submitted` =
+/// `rejected` + jobs admitted to a queue, and every admitted job is
+/// eventually counted in `served` (workers answer rather than drop).
+///
+/// * `submitted` — jobs that reached a registered processor serving this
+///   kind (accepted *and* shed).
+/// * `served` — jobs answered by a worker (including error answers).
+/// * `rejected` — jobs shed at admission:
+///   [`crate::coordinator::service::SubmitError::Overloaded`] (queue
+///   full) or `Stopped` (worker gone).
+#[derive(Default)]
+pub struct KindCounters {
+    pub submitted: AtomicU64,
+    pub served: AtomicU64,
+    pub rejected: AtomicU64,
+}
 
 /// A log₂-bucketed latency histogram over microseconds, lock-free.
 pub struct LatencyHistogram {
@@ -88,8 +143,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Padded slots wasted (batch-size rounding cost).
     pub padded: AtomicU64,
-    /// Device re-bias operations (2×2 scheduler).
+    /// Device re-bias operations (2×2 scheduler and `Reprogram` jobs).
     pub reconfigs: AtomicU64,
+    /// Per-job-kind admission counters, indexed by [`JobKind`] wire order.
+    pub jobs: [KindCounters; 4],
 }
 
 impl Metrics {
@@ -100,6 +157,26 @@ impl Metrics {
         self.padded.fetch_add((cap - n) as u64, Ordering::Relaxed);
         self.exec.record(exec_us);
         self.batch_size.record(n as u64);
+    }
+
+    /// Counters for one job kind.
+    pub fn job(&self, kind: JobKind) -> &KindCounters {
+        &self.jobs[kind as usize]
+    }
+
+    /// A job reached a registered processor serving its kind.
+    pub fn record_submitted(&self, kind: JobKind) {
+        self.job(kind).submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job was answered by a worker (including error answers).
+    pub fn record_served(&self, kind: JobKind) {
+        self.job(kind).served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job was shed at admission (bounded queue full).
+    pub fn record_rejected(&self, kind: JobKind) {
+        self.job(kind).rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mean requests per batch.
@@ -114,8 +191,23 @@ impl Metrics {
 
     /// Human-readable snapshot.
     pub fn report(&self) -> String {
+        let jobs = JobKind::ALL
+            .iter()
+            .map(|&k| {
+                let c = self.job(k);
+                format!(
+                    "{} sub={} srv={} rej={}",
+                    k.name(),
+                    c.submitted.load(Ordering::Relaxed),
+                    c.served.load(Ordering::Relaxed),
+                    c.rejected.load(Ordering::Relaxed),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" | ");
         format!(
             "requests={} batches={} mean_batch={:.1} padded={} reconfigs={}\n\
+             jobs: {jobs}\n\
              latency µs: mean={:.0} p50≤{} p99≤{} max={}\n\
              queue   µs: mean={:.0} p99≤{}\n\
              exec    µs: mean={:.0} p99≤{}\n\
@@ -138,6 +230,44 @@ impl Metrics {
             self.batch_size.mean_us(),
             self.batch_size.max_us(),
         )
+    }
+
+    /// Machine-readable snapshot (the wire-facing metrics view).
+    pub fn snapshot(&self) -> Json {
+        fn hist(h: &LatencyHistogram) -> Json {
+            Json::obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("mean_us", Json::Num(h.mean_us())),
+                ("p50_us", Json::Num(h.percentile_us(0.5) as f64)),
+                ("p99_us", Json::Num(h.percentile_us(0.99) as f64)),
+                ("max_us", Json::Num(h.max_us() as f64)),
+            ])
+        }
+        let jobs: std::collections::BTreeMap<String, Json> = JobKind::ALL
+            .iter()
+            .map(|&k| {
+                let c = self.job(k);
+                (
+                    k.name().to_string(),
+                    Json::obj(vec![
+                        ("submitted", Json::Num(c.submitted.load(Ordering::Relaxed) as f64)),
+                        ("served", Json::Num(c.served.load(Ordering::Relaxed) as f64)),
+                        ("rejected", Json::Num(c.rejected.load(Ordering::Relaxed) as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch", Json::Num(self.mean_batch_size())),
+            ("padded", Json::Num(self.padded.load(Ordering::Relaxed) as f64)),
+            ("reconfigs", Json::Num(self.reconfigs.load(Ordering::Relaxed) as f64)),
+            ("jobs", Json::Obj(jobs)),
+            ("latency", hist(&self.latency)),
+            ("queue", hist(&self.queue)),
+            ("exec", hist(&self.exec)),
+        ])
     }
 }
 
@@ -179,5 +309,36 @@ mod tests {
         assert_eq!(m.batch_size.max_us(), 4);
         let r = m.report();
         assert!(r.contains("requests=7"), "{r}");
+    }
+
+    #[test]
+    fn per_kind_counters_and_snapshot() {
+        let m = Metrics::default();
+        m.record_submitted(JobKind::Infer);
+        m.record_submitted(JobKind::Infer);
+        m.record_served(JobKind::Infer);
+        m.record_rejected(JobKind::Infer);
+        m.record_submitted(JobKind::Reprogram);
+        m.record_served(JobKind::Reprogram);
+        assert_eq!(m.job(JobKind::Infer).submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.job(JobKind::Infer).served.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job(JobKind::Infer).rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job(JobKind::Reprogram).served.load(Ordering::Relaxed), 1);
+        // Reprogram is control-plane: batch occupancy untouched.
+        assert_eq!(m.batches.load(Ordering::Relaxed), 0);
+        let r = m.report();
+        assert!(r.contains("reprogram sub=1 srv=1 rej=0"), "{r}");
+        let snap = m.snapshot();
+        let text = snap.to_string_pretty();
+        let back = crate::util::json::parse(&text).expect("snapshot is valid JSON");
+        let infer = back.get("jobs").and_then(|j| j.get("infer")).expect("jobs.infer");
+        assert_eq!(infer.get("submitted").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(infer.get("rejected").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn job_kind_names_are_wire_stable() {
+        let names: Vec<&str> = JobKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names, vec!["infer", "classify", "raw_apply", "reprogram"]);
     }
 }

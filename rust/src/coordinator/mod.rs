@@ -1,20 +1,32 @@
-//! The serving layer (Layer-3): request routing, dynamic batching, device
-//! state scheduling and metrics — rust owns the event loop and the request
-//! path end to end.
+//! The serving layer (Layer-3): one typed front door over a pool of named
+//! processors — rust owns the event loop and the request path end to end.
 //!
-//! Two serving surfaces, mirroring the paper's two applications:
+//! Since PR 2 every workload enters through [`service`]:
 //!
-//! * **MNIST inference** ([`server`]): requests carry a 784-float image;
-//!   a dynamic batcher ([`batcher`]) coalesces them, the worker pads to
-//!   the nearest AOT-exported batch size, executes the PJRT module
-//!   (dense→mesh→dense, one fused HLO), and fans responses back out.
-//! * **Reconfigurable 2×2 classification** ([`scheduler`]): each request
-//!   names one of the six trained classifiers; the device can serve only
-//!   one θ state at a time, so the scheduler batches per-state and
-//!   minimizes bias reconfigurations while bounding queueing delay.
+//! * [`service::ProcessorPool`] maps names to versioned worker threads,
+//!   each serving one [`service::Workload`] (MNIST bundle, 2×2 classifier
+//!   bank, or a bare [`crate::processor::LinearProcessor`]).
+//! * [`service::ProcessorService::submit`] admits a typed
+//!   [`service::Job`] (`Infer` / `Classify` / `RawApply` / `Reprogram`)
+//!   against a *bounded* queue — overload sheds with
+//!   [`service::SubmitError::Overloaded`] instead of blocking — and
+//!   returns a [`service::Ticket`] that owns the reply route.
+//! * Jobs and results round-trip through a versioned
+//!   [`crate::util::json`] wire form ([`service::WIRE_VERSION`]), shared
+//!   by the CLI, the benches, and future network transports.
+//!
+//! The supporting machinery keeps its own modules: dynamic batching
+//! ([`batcher`]) coalesces MNIST infer jobs into single
+//! `apply_batch` GEMMs; the per-state scheduler ([`scheduler`]) groups 2×2
+//! classify jobs to minimize device re-biases; [`metrics`] tracks
+//! latency/occupancy histograms plus per-job-kind admission counters; and
+//! [`server`] holds the MNIST model bundle + executor along with the
+//! legacy single-workload `Server`/`Client` shim ([`api`] carries the
+//! legacy request types).
 
 pub mod api;
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
+pub mod service;

@@ -1,11 +1,18 @@
-//! Device-state scheduler for the reconfigurable 2×2 classifier service.
+//! Device-state scheduling for the reconfigurable 2×2 classifier.
 //!
 //! The physical device serves one θ state at a time; switching states
-//! means re-biasing the SP6T switches. The scheduler keeps one queue per
-//! classifier (device state) and serves the current state's queue until it
-//! drains, a run-length cap fires, or another queue's head request exceeds
-//! the staleness bound — minimizing reconfigurations without starving
-//! minority classifiers.
+//! means re-biasing the SP6T switches. [`StateScheduler`] keeps one queue
+//! per classifier (device state) and serves the current state's queue
+//! until it drains, a run-length cap fires, or another queue's head
+//! request exceeds the staleness bound — minimizing reconfigurations
+//! without starving minority classifiers.
+//!
+//! [`StateScheduler`] is generic over the queued item and is the grouping
+//! engine behind the pooled classify worker in
+//! [`super::service`] (which queues
+//! [`super::service::JobHandle`]s). [`ClassifyService`] below is the
+//! legacy pre-pool surface over [`super::api::ClassifyRequest`], kept as a
+//! deprecated shim for callers that drive the scheduler synchronously.
 
 use super::api::{ClassifyRequest, ClassifyResponse};
 use crate::nn::rfnn2x2::{AnalogDevice2x2, Rfnn2x2};
@@ -107,9 +114,13 @@ impl<T> StateScheduler<T> {
     }
 }
 
-/// The 2×2 classification service: a [`StateScheduler`] over
-/// [`ClassifyRequest`]s plus one trained classifier per device state,
-/// evaluated against a shared physical device.
+/// **Legacy shim.** The pre-pool 2×2 classification service: a
+/// [`StateScheduler`] over [`ClassifyRequest`]s plus one trained
+/// classifier per device state, evaluated against a shared physical
+/// device. New code registers a
+/// [`super::service::Workload::Classify2x2`] in a
+/// [`super::service::ProcessorPool`] and submits
+/// [`super::service::Job::Classify`] jobs instead.
 ///
 /// Each coalesced state-batch is dispatched as a **single** device call —
 /// [`Rfnn2x2::forward_batch`] → `hidden_batch` → one

@@ -1,25 +1,33 @@
-//! The MNIST inference server: batcher → (PJRT | native) executor → reply.
+//! MNIST serving: the model bundle, the (PJRT | native) executor, and a
+//! thin legacy `Server`/`Client` shim over the unified service.
 //!
-//! The worker thread owns the model bundle (digital weights + the analog
-//! processor's composed transfer matrix) and the execution backend.
-//! Requests are coalesced by the dynamic batcher, padded to the nearest
-//! AOT-exported batch size, executed as ONE call — the fused HLO module,
-//! or natively one `LinearProcessor::apply_batch` GEMM for the whole
-//! batch (no per-request dispatch on the request path) — and fanned back
-//! out.
+//! Since PR 2 the serving loop itself lives in
+//! [`super::service`]: [`Server::start`] just registers a
+//! [`super::service::Workload::Mnist`] worker in a one-processor pool and
+//! [`Client::infer`] submits a typed [`super::service::Job::Infer`]
+//! through the shared front door. What remains here is the MNIST-specific
+//! substance:
+//!
+//! * [`ModelBundle`] — the exported digital weights + composed analog
+//!   transfer matrix (and its split-f32 PJRT ABI form);
+//! * [`MnistExecutor`] — owns the runtime (AOT PJRT engine or the native
+//!   batched-GEMM fallback), warm-compiles every exported batch size, and
+//!   executes one padded batch per call. The pooled MNIST worker and any
+//!   external executor drive this one implementation.
 
-use super::api::{InferRequest, InferResponse};
-use super::batcher::{next_batch, BatchPolicy};
+use super::api::InferResponse;
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
+use super::service::{
+    Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, SubmitError, Ticket, Workload,
+};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::nn::rfnn_mnist::MnistRfnn;
 use crate::processor::LinearProcessor;
 use crate::runtime::Engine;
 use crate::util::error::{Error, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Everything the worker needs to run the model: digital weights as f32
 /// plus the gain-folded analog transfer matrix (the native batched-GEMM
@@ -138,66 +146,24 @@ pub struct ServerConfig {
     pub backend: Backend,
 }
 
-/// Handle for submitting requests.
-#[derive(Clone)]
-pub struct Client {
-    tx: Sender<InferRequest>,
-    next_id: Arc<std::sync::atomic::AtomicU64>,
-}
+/// Name the legacy shim registers its one MNIST worker under.
+pub const MNIST_PROCESSOR: &str = "mnist";
 
-impl Client {
-    /// Synchronous round trip.
-    pub fn infer(&self, image: Vec<f32>) -> Result<InferResponse> {
-        let (reply, rx) = channel();
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(InferRequest { id, image, reply, enqueued: Instant::now() })
-            .map_err(|_| Error::msg("server stopped"))?;
-        rx.recv().map_err(|_| Error::msg("server dropped request"))
-    }
+/// Admission-queue depth for the legacy shim — generous, because the old
+/// server was unbounded and its callers (the A6 ablation's open loop)
+/// predate backpressure handling.
+const LEGACY_QUEUE_DEPTH: usize = 4096;
 
-    /// Fire-and-forget submission with a shared reply channel.
-    pub fn submit(&self, image: Vec<f32>, reply: Sender<InferResponse>) -> Result<u64> {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(InferRequest { id, image, reply, enqueued: Instant::now() })
-            .map_err(|_| Error::msg("server stopped"))?;
-        Ok(id)
-    }
-}
-
-/// A running server: client handle + worker thread + metrics.
-pub struct Server {
-    pub client: Client,
-    pub metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
-}
-
-impl Server {
-    /// Spawn the worker.
-    pub fn start(cfg: ServerConfig) -> Server {
-        let (tx, rx) = channel::<InferRequest>();
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || worker_loop(rx, cfg, m2));
-        Server {
-            client: Client { tx, next_id: Arc::new(std::sync::atomic::AtomicU64::new(0)) },
-            metrics,
-            worker: Some(worker),
-        }
-    }
-
-    /// Stop accepting requests and join the worker.
-    pub fn shutdown(mut self) {
-        // Dropping the client's sender closes the channel.
-        let Server { client, worker, .. } = &mut self;
-        let _ = client;
-        // Replace the sender so the channel closes when self drops below.
-        if let Some(w) = worker.take() {
-            drop(std::mem::replace(&mut self.client.tx, channel().0));
-            let _ = w.join();
-        }
-    }
+/// The MNIST execution backend: an AOT PJRT engine (padded to exported
+/// batch sizes, warm-compiled up front) or the native batched-GEMM
+/// forward. One implementation drives the pooled MNIST worker; it is
+/// public so external executors can host the same model.
+pub struct MnistExecutor {
+    bundle: ModelBundle,
+    runtime: Runtime,
+    /// Sorted AOT-exported batch capacities; empty for the native backend
+    /// (which pads nothing and executes exact-size batches).
+    exported: Vec<usize>,
 }
 
 enum Runtime {
@@ -205,86 +171,146 @@ enum Runtime {
     Native,
 }
 
-fn worker_loop(rx: Receiver<InferRequest>, cfg: ServerConfig, metrics: Arc<Metrics>) {
-    let ServerConfig { batch, bundle, backend } = cfg;
-    // Instantiate the runtime inside the worker thread (PJRT handles are
-    // not Send); fall back to native on any setup failure.
-    let mut runtime = match backend {
-        Backend::Pjrt(dir) => match Engine::cpu(&dir) {
-            Ok(engine) => Runtime::Pjrt(engine),
-            Err(e) => {
-                eprintln!("PJRT setup failed ({e}); serving natively");
-                Runtime::Native
-            }
-        },
-        Backend::Native => Runtime::Native,
-    };
-    // Resolve padded batch sizes available on the backend, and warm-compile
-    // every variant up front so no request pays the JIT cost (§Perf L3:
-    // first-batch compile was ~1 s, inflating early-batch latency 1000×).
-    let exported: Vec<usize> = match &mut runtime {
-        Runtime::Pjrt(engine) => {
-            let mut b = engine.manifest().batch_sizes.clone();
-            b.sort_unstable();
-            for &cap in &b {
-                if let Err(e) = engine.load(&format!("rfnn_mnist_fwd_b{cap}")) {
-                    eprintln!("warmup failed for b{cap}: {e}");
+impl MnistExecutor {
+    /// Build the runtime. PJRT setup failure falls back to native (the
+    /// bundle carries everything both backends need). Call this from the
+    /// thread that will execute — PJRT client handles are not `Send`.
+    pub fn new(bundle: ModelBundle, backend: Backend) -> MnistExecutor {
+        let mut runtime = match backend {
+            Backend::Pjrt(dir) => match Engine::cpu(&dir) {
+                Ok(engine) => Runtime::Pjrt(engine),
+                Err(e) => {
+                    eprintln!("PJRT setup failed ({e}); serving natively");
+                    Runtime::Native
                 }
+            },
+            Backend::Native => Runtime::Native,
+        };
+        // Warm-compile every exported variant up front so no request pays
+        // the JIT cost (§Perf L3: first-batch compile was ~1 s, inflating
+        // early-batch latency 1000×).
+        let exported = match &mut runtime {
+            Runtime::Pjrt(engine) => {
+                let mut b = engine.manifest().batch_sizes.clone();
+                b.sort_unstable();
+                for &cap in &b {
+                    if let Err(e) = engine.load(&format!("rfnn_mnist_fwd_b{cap}")) {
+                        eprintln!("warmup failed for b{cap}: {e}");
+                    }
+                }
+                b
             }
-            b
+            Runtime::Native => Vec::new(),
+        };
+        MnistExecutor { bundle, runtime, exported }
+    }
+
+    /// The served model.
+    pub fn bundle(&self) -> &ModelBundle {
+        &self.bundle
+    }
+
+    /// Padded batch capacity for `n` requests: the smallest AOT-exported
+    /// size ≥ `n` on PJRT (the largest, if `n` overflows every export);
+    /// exactly `n` natively — the GEMM backend wastes no padded slots.
+    pub fn padded_cap(&self, n: usize) -> usize {
+        match self.exported.iter().find(|&&c| c >= n) {
+            Some(&c) => c,
+            None => *self.exported.last().unwrap_or(&n),
         }
-        Runtime::Native => vec![batch.max_batch],
-    };
-    while let Some(reqs) = next_batch(&rx, &batch) {
-        let formed = Instant::now();
-        let n = reqs.len();
-        let cap = *exported.iter().find(|&&c| c >= n).unwrap_or(exported.last().unwrap());
-        let n = n.min(cap);
-        // Pad input to the exported batch size.
-        let mut x = vec![0.0f32; cap * 784];
-        for (r, req) in reqs.iter().take(n).enumerate() {
-            x[r * 784..r * 784 + req.image.len().min(784)]
-                .copy_from_slice(&req.image[..req.image.len().min(784)]);
-        }
-        let t0 = Instant::now();
-        let probs = match &mut runtime {
+    }
+
+    /// Execute one padded batch: `x` is `cap × 784` row-major, returns
+    /// `cap × 10` probabilities. PJRT execution failure falls back to the
+    /// native forward for the same batch.
+    pub fn run(&mut self, x: &[f32], cap: usize) -> Vec<f32> {
+        match &mut self.runtime {
             Runtime::Pjrt(engine) => {
                 let name = format!("rfnn_mnist_fwd_b{cap}");
                 let args: Vec<&[f32]> = vec![
-                    x.as_slice(),
-                    bundle.w1.as_slice(),
-                    bundle.b1.as_slice(),
-                    bundle.m_re.as_slice(),
-                    bundle.m_im.as_slice(),
-                    bundle.w2.as_slice(),
-                    bundle.b2.as_slice(),
+                    x,
+                    self.bundle.w1.as_slice(),
+                    self.bundle.b1.as_slice(),
+                    self.bundle.m_re.as_slice(),
+                    self.bundle.m_im.as_slice(),
+                    self.bundle.w2.as_slice(),
+                    self.bundle.b2.as_slice(),
                 ];
                 match engine.execute_f32(&name, &args) {
                     Ok(p) => p,
                     Err(e) => {
                         eprintln!("PJRT execution failed ({e}); falling back to native");
-                        bundle.forward_native(&x, cap)
+                        self.bundle.forward_native(x, cap)
                     }
                 }
             }
-            Runtime::Native => bundle.forward_native(&x, cap),
-        };
-        let exec_us = t0.elapsed().as_micros() as u64;
-        metrics.record_batch(n, cap, exec_us);
-        for (r, req) in reqs.into_iter().enumerate() {
-            if r >= n {
-                continue; // overflowed cap (cannot happen with max_batch ≤ cap)
-            }
-            let queued_us = formed.duration_since(req.enqueued).as_micros() as u64;
-            metrics.queue.record(queued_us);
-            metrics.latency.record(queued_us + exec_us);
-            let _ = req.reply.send(InferResponse {
-                id: req.id,
-                probs: probs[r * 10..(r + 1) * 10].to_vec(),
-                queued_us,
-                service_us: exec_us,
-            });
+            Runtime::Native => self.bundle.forward_native(x, cap),
         }
+    }
+}
+
+/// Legacy handle for submitting MNIST requests — a shim over
+/// [`ProcessorService::submit`]; reply routing lives in the service now.
+#[derive(Clone)]
+pub struct Client {
+    svc: Arc<ProcessorService>,
+}
+
+impl Client {
+    /// Synchronous round trip.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferResponse> {
+        let ticket = self.submit(image).map_err(|e| Error::msg(e.to_string()))?;
+        let id = ticket.id();
+        match ticket.wait()? {
+            JobResult::Infer { probs, queued_us, service_us } => {
+                Ok(InferResponse { id, probs, queued_us, service_us })
+            }
+            JobResult::Rejected { reason } => Err(Error::msg(reason)),
+            other => Err(Error::msg(format!("unexpected result: {other:?}"))),
+        }
+    }
+
+    /// Asynchronous submission. The returned [`Ticket`] owns the reply
+    /// route (this replaced the old raw `Sender<InferResponse>` plumbing);
+    /// a full queue sheds with [`SubmitError::Overloaded`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.svc.submit(Job::Infer { processor: MNIST_PROCESSOR.into(), image })
+    }
+}
+
+/// A running legacy server: a one-processor [`ProcessorService`] pool.
+pub struct Server {
+    pub client: Client,
+    pub metrics: Arc<Metrics>,
+    svc: Arc<ProcessorService>,
+}
+
+impl Server {
+    /// Register the MNIST worker and open the front door.
+    pub fn start(cfg: ServerConfig) -> Server {
+        let ServerConfig { batch, bundle, backend } = cfg;
+        let mut pool = ProcessorPool::new();
+        pool.register(
+            MNIST_PROCESSOR,
+            Workload::Mnist { bundle, backend },
+            PoolConfig { batch, queue_depth: LEGACY_QUEUE_DEPTH, ..PoolConfig::default() },
+        )
+        .expect("fresh pool cannot hold a duplicate name");
+        let metrics = pool.metrics().clone();
+        let svc = Arc::new(ProcessorService::new(pool));
+        Server { client: Client { svc: svc.clone() }, metrics, svc }
+    }
+
+    /// The unified service behind this shim (for mixed-workload callers).
+    pub fn service(&self) -> &Arc<ProcessorService> {
+        &self.svc
+    }
+
+    /// Stop accepting requests and join the worker (happens on drop; kept
+    /// for call-site compatibility). Outstanding cloned clients keep the
+    /// pool alive until they drop.
+    pub fn shutdown(self) {
+        drop(self);
     }
 }
 

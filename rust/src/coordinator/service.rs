@@ -1,0 +1,1216 @@
+//! The unified serving front door: typed jobs, a pooled processor
+//! registry, admission control, and a versioned wire protocol.
+//!
+//! PR 1 unified *execution* under [`LinearProcessor`]; this module unifies
+//! the *serving surface*. Every workload — MNIST inference, 2×2
+//! classification, matrix-free raw applies, and device reprogramming —
+//! enters through one API:
+//!
+//! ```text
+//!   ProcessorPool::register(name, Workload, PoolConfig)   // named, versioned processors
+//!   ProcessorService::submit(Job) -> Ticket               // bounded queue: Err(Overloaded), never blocks
+//!   Ticket::wait() -> JobResult                           // reply routing owned by the service
+//! ```
+//!
+//! Design points:
+//!
+//! * **Typed jobs, internal reply routing.** [`Job`] carries only data (no
+//!   `mpsc::Sender` fields, unlike the legacy [`super::api`] types); the
+//!   service mints a private reply channel per submission and hands the
+//!   caller a [`Ticket`]. Adding a workload is a `Job` variant plus a
+//!   worker arm — not a new service loop.
+//! * **Processor pool.** [`ProcessorPool`] maps names to versioned worker
+//!   threads, each owning one [`Workload`] (a served processor instance:
+//!   fidelity × dims). Multiple models/devices serve concurrently behind
+//!   one front door; [`ProcessorPool::register_external`] exposes the raw
+//!   [`JobHandle`] stream so tests and future network transports can pump
+//!   a queue with their own executor.
+//! * **Admission control.** Each worker sits behind a *bounded*
+//!   `sync_channel`; [`ProcessorService::submit`] uses `try_send`, so an
+//!   overloaded processor sheds with [`SubmitError::Overloaded`] instead
+//!   of blocking the caller or silently growing an unbounded queue.
+//! * **Versioned wire form.** [`Job`] and [`JobResult`] round-trip through
+//!   [`crate::util::json`] under [`WIRE_VERSION`]; decoding rejects
+//!   unknown versions, so the CLI, benches, and future transports speak
+//!   one schema (see `testing::wire_props`).
+//!
+//! Batching is preserved from the legacy loops: the MNIST worker coalesces
+//! infer jobs through [`next_batch`] and executes one
+//! `LinearProcessor::apply_batch` GEMM per coalesced batch; the classify
+//! worker groups per device state through [`StateScheduler`] to minimize
+//! re-biases.
+
+use super::batcher::{drain_ready, next_batch, BatchPolicy};
+use super::metrics::{JobKind, Metrics};
+use super::scheduler::{SchedulerPolicy, StateScheduler};
+use super::server::{Backend, MnistExecutor, ModelBundle};
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::microwave::phase_shifter::N_STATES;
+use crate::nn::rfnn2x2::{ideal_device, Rfnn2x2};
+use crate::processor::{Fidelity, LinearProcessor};
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Version tag of the serialized `Job`/`JobResult` schema. Bump on any
+/// incompatible change; decoders reject documents whose `v` differs.
+pub const WIRE_VERSION: u64 = 2;
+
+// ---------------------------------------------------------------------------
+// Jobs and results
+// ---------------------------------------------------------------------------
+
+/// A typed unit of work addressed to a named pooled processor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Job {
+    /// MNIST inference: a flattened 28×28 image, values in [0, 1].
+    Infer { processor: String, image: Vec<f32> },
+    /// 2×2 classification: evaluate `point` under trained classifier
+    /// `classifier` (each classifier pins one device θ state).
+    Classify { processor: String, classifier: usize, point: [f64; 2] },
+    /// Matrix-free batched apply: execute `Y = M·X` against the named
+    /// processor's transfer matrix, `x` of shape `in × B` (one input
+    /// vector per column).
+    RawApply { processor: String, x: CMat },
+    /// Write a new flat θ/φ state code (θ0, φ0, θ1, φ1, …) into a
+    /// programmable processor; bumps the processor's pool version.
+    Reprogram { processor: String, code: Vec<usize> },
+}
+
+impl Job {
+    /// The job kind (metrics/wire key).
+    pub fn kind(&self) -> JobKind {
+        match self {
+            Job::Infer { .. } => JobKind::Infer,
+            Job::Classify { .. } => JobKind::Classify,
+            Job::RawApply { .. } => JobKind::RawApply,
+            Job::Reprogram { .. } => JobKind::Reprogram,
+        }
+    }
+
+    /// The pooled processor this job is addressed to.
+    pub fn processor(&self) -> &str {
+        match self {
+            Job::Infer { processor, .. }
+            | Job::Classify { processor, .. }
+            | Job::RawApply { processor, .. }
+            | Job::Reprogram { processor, .. } => processor,
+        }
+    }
+
+    /// Wire form (includes the `v` version tag).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("kind", Json::Str(self.kind().name().to_string())),
+            ("processor", Json::Str(self.processor().to_string())),
+        ];
+        match self {
+            Job::Infer { image, .. } => {
+                fields.push((
+                    "image",
+                    Json::Arr(image.iter().map(|&p| Json::Num(p as f64)).collect()),
+                ));
+            }
+            Job::Classify { classifier, point, .. } => {
+                fields.push(("classifier", Json::Num(*classifier as f64)));
+                fields.push(("point", Json::nums(&point[..])));
+            }
+            Job::RawApply { x, .. } => {
+                fields.push(("x", cmat_to_json(x)));
+            }
+            Job::Reprogram { code, .. } => {
+                fields.push((
+                    "code",
+                    Json::Arr(code.iter().map(|&c| Json::Num(c as f64)).collect()),
+                ));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode the wire form; rejects missing fields and unknown versions.
+    pub fn from_json(v: &Json) -> Result<Job> {
+        check_wire_version(v)?;
+        let kind = get_str(v, "kind")?;
+        let processor = get_str(v, "processor")?.to_string();
+        match kind {
+            "infer" => {
+                let image = get_nums(v, "image")?.iter().map(|&p| p as f32).collect();
+                Ok(Job::Infer { processor, image })
+            }
+            "classify" => {
+                let classifier = get_index(v, "classifier")? as usize;
+                let p = get_nums(v, "point")?;
+                if p.len() != 2 {
+                    return Err(Error::msg("wire: classify point must have 2 coordinates"));
+                }
+                Ok(Job::Classify { processor, classifier, point: [p[0], p[1]] })
+            }
+            "raw_apply" => {
+                let x = cmat_from_json(
+                    v.get("x").ok_or_else(|| Error::msg("wire: missing field 'x'"))?,
+                )?;
+                Ok(Job::RawApply { processor, x })
+            }
+            "reprogram" => {
+                let code = get_nums(v, "code")?
+                    .iter()
+                    .map(|&c| to_index(c, "code").map(|u| u as usize))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(Job::Reprogram { processor, code })
+            }
+            other => Err(Error::msg(format!("wire: unknown job kind '{other}'"))),
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse + decode a wire document.
+    pub fn decode(text: &str) -> Result<Job> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        Job::from_json(&v)
+    }
+}
+
+/// The answer to one [`Job`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobResult {
+    /// Class probabilities (length 10) plus queueing/execution time.
+    Infer { probs: Vec<f32>, queued_us: u64, service_us: u64 },
+    /// ŷ ∈ [0, 1]; `reconfigured` marks the batch head that paid for a
+    /// device re-bias.
+    Classify { yhat: f64, reconfigured: bool },
+    /// `Y = M·X`, shape `out × B`.
+    RawApply { y: CMat },
+    /// The state write landed; `version` is the processor's new pool
+    /// version.
+    Reprogrammed { version: u64 },
+    /// The worker answered but refused the job (bad shape, out-of-range
+    /// state code, kind not servable by this workload, …).
+    Rejected { reason: String },
+}
+
+impl JobResult {
+    /// Predicted class for an `Infer` result (NaN-tolerant argmax).
+    pub fn predicted(&self) -> Option<usize> {
+        match self {
+            JobResult::Infer { probs, .. } => Some(super::api::nan_safe_argmax(probs)),
+            _ => None,
+        }
+    }
+
+    /// Wire form (includes the `v` version tag).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("v", Json::Num(WIRE_VERSION as f64))];
+        match self {
+            JobResult::Infer { probs, queued_us, service_us } => {
+                fields.push(("kind", Json::Str("infer".into())));
+                fields.push((
+                    "probs",
+                    Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()),
+                ));
+                fields.push(("queued_us", Json::Num(*queued_us as f64)));
+                fields.push(("service_us", Json::Num(*service_us as f64)));
+            }
+            JobResult::Classify { yhat, reconfigured } => {
+                fields.push(("kind", Json::Str("classify".into())));
+                fields.push(("yhat", Json::Num(*yhat)));
+                fields.push(("reconfigured", Json::Bool(*reconfigured)));
+            }
+            JobResult::RawApply { y } => {
+                fields.push(("kind", Json::Str("raw_apply".into())));
+                fields.push(("y", cmat_to_json(y)));
+            }
+            JobResult::Reprogrammed { version } => {
+                fields.push(("kind", Json::Str("reprogrammed".into())));
+                fields.push(("version", Json::Num(*version as f64)));
+            }
+            JobResult::Rejected { reason } => {
+                fields.push(("kind", Json::Str("rejected".into())));
+                fields.push(("reason", Json::Str(reason.clone())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode the wire form; rejects missing fields and unknown versions.
+    pub fn from_json(v: &Json) -> Result<JobResult> {
+        check_wire_version(v)?;
+        match get_str(v, "kind")? {
+            "infer" => Ok(JobResult::Infer {
+                probs: get_nums(v, "probs")?.iter().map(|&p| p as f32).collect(),
+                queued_us: get_index(v, "queued_us")?,
+                service_us: get_index(v, "service_us")?,
+            }),
+            "classify" => Ok(JobResult::Classify {
+                yhat: get_f64(v, "yhat")?,
+                reconfigured: matches!(v.get("reconfigured"), Some(Json::Bool(true))),
+            }),
+            "raw_apply" => Ok(JobResult::RawApply {
+                y: cmat_from_json(
+                    v.get("y").ok_or_else(|| Error::msg("wire: missing field 'y'"))?,
+                )?,
+            }),
+            "reprogrammed" => {
+                Ok(JobResult::Reprogrammed { version: get_index(v, "version")? })
+            }
+            "rejected" => {
+                Ok(JobResult::Rejected { reason: get_str(v, "reason")?.to_string() })
+            }
+            other => Err(Error::msg(format!("wire: unknown result kind '{other}'"))),
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse + decode a wire document.
+    pub fn decode(text: &str) -> Result<JobResult> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        JobResult::from_json(&v)
+    }
+}
+
+/// Sanity cap on wire-decoded matrix sizes (defence against hostile or
+/// corrupt documents allocating gigabytes).
+const WIRE_MAX_MATRIX_ELEMS: usize = 1 << 24;
+
+fn check_wire_version(v: &Json) -> Result<()> {
+    let ver = get_index(v, "v")?;
+    if ver != WIRE_VERSION {
+        return Err(Error::msg(format!(
+            "wire: unsupported version {ver} (this build speaks {WIRE_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+/// Numeric field. JSON has no literal for non-finite floats, so the
+/// encoder writes them as `null`; decoding maps `null` back to NaN to
+/// keep encode→decode total over every in-memory value.
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key) {
+        Some(Json::Num(x)) => Ok(*x),
+        Some(Json::Null) => Ok(f64::NAN),
+        _ => Err(Error::msg(format!("wire: missing numeric field '{key}'"))),
+    }
+}
+
+/// A count/index field: must be an exact non-negative integer — a plain
+/// `as` cast would silently truncate `2.9` to `2` (defeating the version
+/// gate) and saturate `-1` to `0` (rerouting to a real classifier).
+fn get_index(v: &Json, key: &str) -> Result<u64> {
+    to_index(get_f64(v, key)?, key)
+}
+
+fn to_index(x: f64, what: &str) -> Result<u64> {
+    // NaN fails the range test; 2^53 bounds exact f64 integers.
+    if !(0.0..=9.0e15).contains(&x) || x.fract() != 0.0 {
+        return Err(Error::msg(format!(
+            "wire: '{what}' must be a non-negative integer, got {x}"
+        )));
+    }
+    Ok(x as u64)
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::msg(format!("wire: missing string field '{key}'")))
+}
+
+fn get_nums(v: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::msg(format!("wire: missing array field '{key}'")))?;
+    arr.iter()
+        .map(|x| match x {
+            Json::Num(n) => Ok(*n),
+            // The encoder writes non-finite values as null (see get_f64).
+            Json::Null => Ok(f64::NAN),
+            _ => Err(Error::msg(format!("wire: non-numeric entry in '{key}'"))),
+        })
+        .collect()
+}
+
+fn cmat_to_json(m: &CMat) -> Json {
+    let re: Vec<f64> = m.data().iter().map(|z| z.re).collect();
+    let im: Vec<f64> = m.data().iter().map(|z| z.im).collect();
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows() as f64)),
+        ("cols", Json::Num(m.cols() as f64)),
+        ("re", Json::nums(&re)),
+        ("im", Json::nums(&im)),
+    ])
+}
+
+fn cmat_from_json(v: &Json) -> Result<CMat> {
+    let rows = get_index(v, "rows")? as usize;
+    let cols = get_index(v, "cols")? as usize;
+    let elems = rows
+        .checked_mul(cols)
+        .filter(|&e| e <= WIRE_MAX_MATRIX_ELEMS)
+        .ok_or_else(|| Error::msg("wire: matrix too large"))?;
+    let re = get_nums(v, "re")?;
+    let im = get_nums(v, "im")?;
+    if re.len() != elems || im.len() != elems {
+        return Err(Error::msg(format!(
+            "wire: matrix {rows}×{cols} needs {elems} entries, got re={} im={}",
+            re.len(),
+            im.len()
+        )));
+    }
+    Ok(CMat::from_fn(rows, cols, |i, j| C64::new(re[i * cols + j], im[i * cols + j])))
+}
+
+// ---------------------------------------------------------------------------
+// Admission control
+// ---------------------------------------------------------------------------
+
+/// Why a submission was refused *at the front door* (before any worker saw
+/// it). Worker-level refusals come back as [`JobResult::Rejected`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No pooled processor is registered under this name.
+    UnknownProcessor(String),
+    /// The processor exists but its workload does not serve this job kind.
+    KindNotServed { processor: String, kind: JobKind },
+    /// The processor's bounded admission queue is full — shed or retry
+    /// after draining in-flight tickets; `submit` never blocks.
+    Overloaded { processor: String, capacity: usize },
+    /// The worker has stopped (pool shut down or thread died).
+    Stopped(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownProcessor(p) => write!(f, "unknown processor '{p}'"),
+            SubmitError::KindNotServed { processor, kind } => {
+                write!(f, "processor '{processor}' does not serve {} jobs", kind.name())
+            }
+            SubmitError::Overloaded { processor, capacity } => {
+                write!(f, "processor '{processor}' overloaded (queue depth {capacity})")
+            }
+            SubmitError::Stopped(p) => write!(f, "processor '{p}' has stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A pending job: the service-owned reply route. `wait` blocks until the
+/// worker answers; dropping the ticket abandons the reply harmlessly.
+pub struct Ticket {
+    id: u64,
+    processor: String,
+    rx: Receiver<JobResult>,
+}
+
+impl Ticket {
+    /// Service-assigned job id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The pooled processor serving this job.
+    pub fn processor(&self) -> &str {
+        &self.processor
+    }
+
+    /// Block until the worker answers.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx.recv().map_err(|_| {
+            Error::msg(format!(
+                "job {}: worker for '{}' stopped before replying",
+                self.id, self.processor
+            ))
+        })
+    }
+
+    /// Bounded wait; the ticket survives a timeout and can be waited again.
+    pub fn wait_timeout(&self, d: Duration) -> Result<JobResult> {
+        self.rx.recv_timeout(d).map_err(|e| {
+            Error::msg(format!("job {}: no reply from '{}' ({e})", self.id, self.processor))
+        })
+    }
+}
+
+/// One admitted job as seen by a worker (built-in or external): the typed
+/// job plus the service-owned reply route. Consuming [`Self::respond`]
+/// records the job as served and routes the result to the ticket.
+pub struct JobHandle {
+    /// Service-assigned job id.
+    pub id: u64,
+    /// The admitted job.
+    pub job: Job,
+    /// Admission timestamp (for queueing-latency metrics).
+    pub enqueued: Instant,
+    reply: Sender<JobResult>,
+    metrics: Arc<Metrics>,
+    kind: JobKind,
+}
+
+impl JobHandle {
+    /// Answer the job. Dropped replies (abandoned tickets) are ignored.
+    pub fn respond(self, result: JobResult) {
+        self.metrics.record_served(self.kind);
+        let _ = self.reply.send(result);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workloads and the pool
+// ---------------------------------------------------------------------------
+
+/// What one pooled worker serves. Each variant is a processor instance in
+/// the pool's registry sense: a fidelity × dims pairing behind a name.
+pub enum Workload {
+    /// MNIST serving bundle (digital dense layers around the composed
+    /// analog transfer matrix). Serves `Infer` (batched through the
+    /// dynamic batcher — one GEMM per coalesced batch) and `RawApply`
+    /// (probes of the served matrix). The PJRT backend pads to
+    /// AOT-exported batch sizes exactly like the legacy server.
+    Mnist { bundle: ModelBundle, backend: Backend },
+    /// Trained 2×2 classifiers over the ideal device, state-grouped
+    /// through [`StateScheduler`] to minimize re-biases. Serves
+    /// `Classify`.
+    Classify2x2(Vec<Rfnn2x2>),
+    /// A bare linear processor. Serves `RawApply` and — when the backend
+    /// is state-programmed — `Reprogram`.
+    Processor(Box<dyn LinearProcessor>),
+}
+
+impl Workload {
+    /// Job kinds this workload serves (the submit-time gate).
+    pub fn kinds(&self) -> Vec<JobKind> {
+        match self {
+            Workload::Mnist { .. } => vec![JobKind::Infer, JobKind::RawApply],
+            Workload::Classify2x2(_) => vec![JobKind::Classify],
+            Workload::Processor(_) => vec![JobKind::RawApply, JobKind::Reprogram],
+        }
+    }
+
+    /// `(out, in)` dims of the served processor.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Workload::Mnist { bundle, .. } => LinearProcessor::dims(&bundle.mesh),
+            Workload::Classify2x2(_) => (2, 2),
+            Workload::Processor(p) => p.dims(),
+        }
+    }
+
+    /// Fidelity of the served processor. The MNIST bundle bakes its
+    /// composed matrix digitally, so it reports `Digital` regardless of
+    /// the mesh backend it was exported from.
+    pub fn fidelity(&self) -> Fidelity {
+        match self {
+            Workload::Mnist { .. } => Fidelity::Digital,
+            Workload::Classify2x2(_) => Fidelity::Ideal,
+            Workload::Processor(p) => p.fidelity(),
+        }
+    }
+}
+
+/// Per-worker pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Bounded admission-queue depth (≥ 1); `submit` sheds with
+    /// [`SubmitError::Overloaded`] beyond it.
+    pub queue_depth: usize,
+    /// Dynamic-batching policy for the worker's coalescing loop.
+    pub batch: BatchPolicy,
+    /// State-grouping policy (classify workloads).
+    pub sched: SchedulerPolicy,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            queue_depth: 1024,
+            batch: BatchPolicy::default(),
+            sched: SchedulerPolicy::default(),
+        }
+    }
+}
+
+/// Registry metadata for one pooled processor.
+#[derive(Clone, Debug)]
+pub struct ProcessorInfo {
+    pub name: String,
+    /// Starts at 1; bumped by every successful `Reprogram`.
+    pub version: u64,
+    pub fidelity: Fidelity,
+    pub dims: (usize, usize),
+    pub capacity: usize,
+    pub kinds: Vec<JobKind>,
+}
+
+struct WorkerShared {
+    version: AtomicU64,
+}
+
+struct WorkerHandle {
+    tx: Option<SyncSender<JobHandle>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<WorkerShared>,
+    fidelity: Fidelity,
+    dims: (usize, usize),
+    capacity: usize,
+    kinds: Vec<JobKind>,
+}
+
+/// Named, versioned processor registry: one worker thread + bounded
+/// admission queue per registered [`Workload`]. Registration happens at
+/// build time (`&mut self`); serving is lock-free `&self` thereafter.
+#[derive(Default)]
+pub struct ProcessorPool {
+    workers: BTreeMap<String, WorkerHandle>,
+    metrics: Arc<Metrics>,
+}
+
+impl ProcessorPool {
+    pub fn new() -> ProcessorPool {
+        ProcessorPool::default()
+    }
+
+    /// Shared metrics for every worker in this pool.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Register a workload under `name` and spawn its worker thread.
+    pub fn register(&mut self, name: &str, workload: Workload, cfg: PoolConfig) -> Result<()> {
+        let rx = self.admit(name, workload.dims(), workload.fidelity(), &workload.kinds(), cfg)?;
+        let entry = self.workers.get_mut(name).expect("just inserted");
+        let shared = entry.shared.clone();
+        let metrics = self.metrics.clone();
+        entry.join =
+            Some(std::thread::spawn(move || run_workload(rx, workload, shared, metrics, cfg)));
+        Ok(())
+    }
+
+    /// Register a queue with NO built-in worker: the caller drains
+    /// [`JobHandle`]s and answers them with its own executor (tests,
+    /// custom backends, network transports).
+    pub fn register_external(
+        &mut self,
+        name: &str,
+        dims: (usize, usize),
+        fidelity: Fidelity,
+        kinds: &[JobKind],
+        cfg: PoolConfig,
+    ) -> Result<Receiver<JobHandle>> {
+        self.admit(name, dims, fidelity, kinds, cfg)
+    }
+
+    fn admit(
+        &mut self,
+        name: &str,
+        dims: (usize, usize),
+        fidelity: Fidelity,
+        kinds: &[JobKind],
+        cfg: PoolConfig,
+    ) -> Result<Receiver<JobHandle>> {
+        let slot = match self.workers.entry(name.to_string()) {
+            std::collections::btree_map::Entry::Occupied(_) => {
+                return Err(Error::msg(format!("processor '{name}' already registered")));
+            }
+            std::collections::btree_map::Entry::Vacant(slot) => slot,
+        };
+        let capacity = cfg.queue_depth.max(1);
+        let (tx, rx) = sync_channel(capacity);
+        slot.insert(WorkerHandle {
+            tx: Some(tx),
+            join: None,
+            shared: Arc::new(WorkerShared { version: AtomicU64::new(1) }),
+            fidelity,
+            dims,
+            capacity,
+            kinds: kinds.to_vec(),
+        });
+        Ok(rx)
+    }
+
+    /// Registry metadata for one processor.
+    pub fn info(&self, name: &str) -> Option<ProcessorInfo> {
+        self.workers.get(name).map(|w| ProcessorInfo {
+            name: name.to_string(),
+            version: w.shared.version.load(Ordering::Relaxed),
+            fidelity: w.fidelity,
+            dims: w.dims,
+            capacity: w.capacity,
+            kinds: w.kinds.clone(),
+        })
+    }
+
+    /// Every registered processor, by name.
+    pub fn processors(&self) -> Vec<ProcessorInfo> {
+        self.workers.keys().filter_map(|n| self.info(n)).collect()
+    }
+}
+
+impl Drop for ProcessorPool {
+    fn drop(&mut self) {
+        for w in self.workers.values_mut() {
+            w.tx = None; // close the admission queue
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service front door
+// ---------------------------------------------------------------------------
+
+/// The single serving front door over a [`ProcessorPool`].
+pub struct ProcessorService {
+    pool: ProcessorPool,
+    next_id: AtomicU64,
+}
+
+impl ProcessorService {
+    pub fn new(pool: ProcessorPool) -> ProcessorService {
+        ProcessorService { pool, next_id: AtomicU64::new(1) }
+    }
+
+    /// The underlying registry (read-only after construction).
+    pub fn pool(&self) -> &ProcessorPool {
+        &self.pool
+    }
+
+    /// Shared serving metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        self.pool.metrics()
+    }
+
+    /// Submit a job. Never blocks: a full admission queue returns
+    /// [`SubmitError::Overloaded`] immediately.
+    pub fn submit(&self, job: Job) -> Result<Ticket, SubmitError> {
+        let kind = job.kind();
+        let name = job.processor().to_string();
+        let Some(w) = self.pool.workers.get(&name) else {
+            return Err(SubmitError::UnknownProcessor(name));
+        };
+        if !w.kinds.contains(&kind) {
+            return Err(SubmitError::KindNotServed { processor: name, kind });
+        }
+        // From here on every outcome is counted: submitted = (eventually)
+        // served + rejected, so the snapshot never shows phantom in-flight
+        // jobs when a worker is overloaded or dead.
+        let metrics = self.pool.metrics.clone();
+        metrics.record_submitted(kind);
+        let Some(tx) = w.tx.as_ref() else {
+            metrics.record_rejected(kind);
+            return Err(SubmitError::Stopped(name));
+        };
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let handle =
+            JobHandle { id, job, enqueued: Instant::now(), reply, metrics: metrics.clone(), kind };
+        match tx.try_send(handle) {
+            Ok(()) => Ok(Ticket { id, processor: name, rx }),
+            Err(TrySendError::Full(_)) => {
+                metrics.record_rejected(kind);
+                Err(SubmitError::Overloaded { processor: name, capacity: w.capacity })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                metrics.record_rejected(kind);
+                Err(SubmitError::Stopped(name))
+            }
+        }
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn submit_wait(&self, job: Job) -> Result<JobResult> {
+        self.submit(job).map_err(|e| Error::msg(e.to_string()))?.wait()
+    }
+
+    /// Stop accepting jobs and join every worker (also happens on drop).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in workers
+// ---------------------------------------------------------------------------
+
+fn run_workload(
+    rx: Receiver<JobHandle>,
+    workload: Workload,
+    shared: Arc<WorkerShared>,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    match workload {
+        Workload::Mnist { bundle, backend } => mnist_worker(rx, bundle, backend, metrics, cfg),
+        Workload::Classify2x2(models) => classify_worker(rx, models, metrics, cfg),
+        Workload::Processor(p) => processor_worker(rx, p, shared, metrics, cfg),
+    }
+}
+
+fn mnist_worker(
+    rx: Receiver<JobHandle>,
+    bundle: ModelBundle,
+    backend: Backend,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    // The runtime is created inside the worker thread (PJRT client handles
+    // are not Send); setup failure falls back to the native GEMM backend.
+    let mut exec = MnistExecutor::new(bundle, backend);
+    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+        let formed = Instant::now();
+        let (infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
+            handles.into_iter().partition(|h| matches!(h.job, Job::Infer { .. }));
+        if !infers.is_empty() {
+            let n = infers.len();
+            let cap = exec.padded_cap(n);
+            let served = n.min(cap);
+            let mut x = vec![0.0f32; cap * 784];
+            for (r, h) in infers.iter().take(served).enumerate() {
+                if let Job::Infer { image, .. } = &h.job {
+                    let len = image.len().min(784);
+                    x[r * 784..r * 784 + len].copy_from_slice(&image[..len]);
+                }
+            }
+            let t0 = Instant::now();
+            let probs = exec.run(&x, cap);
+            let exec_us = t0.elapsed().as_micros() as u64;
+            metrics.record_batch(served, cap, exec_us);
+            for (r, h) in infers.into_iter().enumerate() {
+                if r >= served {
+                    // Unreachable while max_batch ≤ the largest exported
+                    // size; answered (not dropped) defensively.
+                    h.respond(JobResult::Rejected {
+                        reason: "batch overflowed the backend's largest exported size".into(),
+                    });
+                    continue;
+                }
+                let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
+                metrics.queue.record(queued_us);
+                metrics.latency.record(queued_us + exec_us);
+                h.respond(JobResult::Infer {
+                    probs: probs[r * 10..(r + 1) * 10].to_vec(),
+                    queued_us,
+                    service_us: exec_us,
+                });
+            }
+        }
+        for h in others {
+            serve_raw(&exec.bundle().mesh, &metrics, h);
+        }
+    }
+}
+
+fn classify_worker(
+    rx: Receiver<JobHandle>,
+    models: Vec<Rfnn2x2>,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    let dev = ideal_device();
+    let mut sched: StateScheduler<JobHandle> =
+        StateScheduler::new(models.len().max(1), cfg.sched);
+    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+        for h in handles {
+            enqueue_classify(&mut sched, h, models.len());
+        }
+        while sched.queued() > 0 {
+            // Fold freshly-arrived jobs into the grouping decision.
+            for h in drain_ready(&rx, cfg.batch.max_batch) {
+                enqueue_classify(&mut sched, h, models.len());
+            }
+            let Some((state, batch, reconfigured)) = sched.next_batch(Instant::now()) else {
+                break;
+            };
+            let pts: Vec<[f64; 2]> = batch
+                .iter()
+                .map(|h| match &h.job {
+                    Job::Classify { point, .. } => *point,
+                    _ => [0.0, 0.0], // cannot happen: only classify jobs are queued
+                })
+                .collect();
+            let t0 = Instant::now();
+            let yhat = models[state].forward_batch(&dev, &pts);
+            let exec_us = t0.elapsed().as_micros() as u64;
+            metrics.record_batch(batch.len(), batch.len(), exec_us);
+            if reconfigured {
+                metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
+            }
+            for (k, h) in batch.into_iter().enumerate() {
+                let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
+                metrics.queue.record(queued_us);
+                metrics.latency.record(queued_us + exec_us);
+                h.respond(JobResult::Classify {
+                    yhat: yhat[k],
+                    // Only the batch head paid for the re-bias.
+                    reconfigured: reconfigured && k == 0,
+                });
+            }
+        }
+    }
+}
+
+fn enqueue_classify(sched: &mut StateScheduler<JobHandle>, h: JobHandle, n_models: usize) {
+    let classifier = match &h.job {
+        Job::Classify { classifier, .. } => Some(*classifier),
+        _ => None,
+    };
+    match classifier {
+        Some(c) if c < n_models => sched.push(c, h.enqueued, h),
+        Some(c) => h.respond(JobResult::Rejected {
+            reason: format!("classifier {c} out of range (this pool serves {n_models})"),
+        }),
+        None => h.respond(JobResult::Rejected {
+            reason: "this processor only serves classify jobs".into(),
+        }),
+    }
+}
+
+fn processor_worker(
+    rx: Receiver<JobHandle>,
+    mut p: Box<dyn LinearProcessor>,
+    shared: Arc<WorkerShared>,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+        for h in handles {
+            if let Job::Reprogram { code, .. } = &h.job {
+                let result = reprogram(p.as_mut(), &shared, &metrics, code);
+                h.respond(result);
+            } else {
+                serve_raw(p.as_ref(), &metrics, h);
+            }
+        }
+    }
+}
+
+/// Execute one `RawApply` against `p` (shared by the processor worker and
+/// the MNIST worker's served-matrix probes).
+fn serve_raw(p: &dyn LinearProcessor, metrics: &Metrics, h: JobHandle) {
+    let result = match &h.job {
+        Job::RawApply { x, .. } => {
+            let (_, inp) = p.dims();
+            if x.rows() != inp {
+                JobResult::Rejected {
+                    reason: format!(
+                        "raw_apply: input has {} rows, processor expects {inp}",
+                        x.rows()
+                    ),
+                }
+            } else {
+                let t0 = Instant::now();
+                let y = p.apply_batch(x);
+                let exec_us = t0.elapsed().as_micros() as u64;
+                // One dispatch of B vectors: occupancy = B (≥ 1 so the
+                // zero-column probe still counts as a dispatch).
+                let b = x.cols().max(1);
+                metrics.record_batch(b, b, exec_us);
+                let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
+                metrics.queue.record(queued_us);
+                metrics.latency.record(queued_us + exec_us);
+                JobResult::RawApply { y }
+            }
+        }
+        _ => JobResult::Rejected {
+            reason: "this processor does not serve this job kind".into(),
+        },
+    };
+    h.respond(result);
+}
+
+/// Apply a validated state code to a programmable processor.
+fn reprogram(
+    p: &mut dyn LinearProcessor,
+    shared: &WorkerShared,
+    metrics: &Metrics,
+    code: &[usize],
+) -> JobResult {
+    let Some(current) = p.state_code() else {
+        return JobResult::Rejected { reason: "processor has no programmable states".into() };
+    };
+    if code.len() != current.len() {
+        return JobResult::Rejected {
+            reason: format!(
+                "state code has {} entries, processor expects {}",
+                code.len(),
+                current.len()
+            ),
+        };
+    }
+    if let Some(&bad) = code.iter().find(|&&c| c >= N_STATES) {
+        return JobResult::Rejected {
+            reason: format!(
+                "state index {bad} out of range (Table I has {N_STATES} states per shifter)"
+            ),
+        };
+    }
+    if !p.set_state_code(code) {
+        return JobResult::Rejected { reason: "backend refused the state write".into() };
+    }
+    metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
+    let version = shared.version.fetch_add(1, Ordering::Relaxed) + 1;
+    JobResult::Reprogrammed { version }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::demo_classifiers as demo_models;
+    use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+    use crate::nn::rfnn_mnist::MnistRfnn;
+
+    fn quick_batch() -> PoolConfig {
+        PoolConfig {
+            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            ..PoolConfig::default()
+        }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_overloaded_not_blocking() {
+        let mut pool = ProcessorPool::new();
+        let rx = pool
+            .register_external(
+                "ext",
+                (2, 2),
+                Fidelity::Digital,
+                &[JobKind::RawApply],
+                PoolConfig { queue_depth: 2, ..PoolConfig::default() },
+            )
+            .unwrap();
+        let svc = ProcessorService::new(pool);
+        let job = || Job::RawApply { processor: "ext".into(), x: CMat::eye(2) };
+        let t1 = svc.submit(job()).expect("slot 1");
+        let _t2 = svc.submit(job()).expect("slot 2");
+        let t0 = Instant::now();
+        match svc.submit(job()) {
+            Err(SubmitError::Overloaded { processor, capacity }) => {
+                assert_eq!(processor, "ext");
+                assert_eq!(capacity, 2);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(250), "submit must not block");
+        // Draining one admitted job frees a slot.
+        let h = rx.recv().unwrap();
+        let echo = match &h.job {
+            Job::RawApply { x, .. } => x.clone(),
+            _ => panic!("expected raw_apply"),
+        };
+        h.respond(JobResult::RawApply { y: echo });
+        match t1.wait().unwrap() {
+            JobResult::RawApply { y } => assert_eq!(y, CMat::eye(2)),
+            other => panic!("unexpected {other:?}"),
+        }
+        let _t4 = svc.submit(job()).expect("slot freed after drain");
+        let m = svc.metrics();
+        assert_eq!(m.job(JobKind::RawApply).submitted.load(Ordering::Relaxed), 4);
+        assert_eq!(m.job(JobKind::RawApply).rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job(JobKind::RawApply).served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_processor_and_kind_gates() {
+        let mut pool = ProcessorPool::new();
+        pool.register("cls", Workload::Classify2x2(demo_models()), quick_batch()).unwrap();
+        let svc = ProcessorService::new(pool);
+        match svc.submit(Job::Infer { processor: "nope".into(), image: vec![0.0; 784] }) {
+            Err(SubmitError::UnknownProcessor(p)) => assert_eq!(p, "nope"),
+            other => panic!("expected UnknownProcessor, got {other:?}"),
+        }
+        match svc.submit(Job::Infer { processor: "cls".into(), image: vec![0.0; 784] }) {
+            Err(SubmitError::KindNotServed { processor, kind }) => {
+                assert_eq!(processor, "cls");
+                assert_eq!(kind, JobKind::Infer);
+            }
+            other => panic!("expected KindNotServed, got {other:?}"),
+        }
+        // Duplicate registration is refused.
+        // (Pool is consumed by the service; check on a fresh pool.)
+        let mut p2 = ProcessorPool::new();
+        p2.register("x", Workload::Classify2x2(demo_models()), quick_batch()).unwrap();
+        assert!(p2.register("x", Workload::Classify2x2(demo_models()), quick_batch()).is_err());
+    }
+
+    #[test]
+    fn classify_through_front_door_matches_direct_forward() {
+        let models = demo_models();
+        let dev = ideal_device();
+        let mut pool = ProcessorPool::new();
+        pool.register("cls2x2", Workload::Classify2x2(models.clone()), quick_batch()).unwrap();
+        let svc = ProcessorService::new(pool);
+        let mut tickets = Vec::new();
+        let mut want = Vec::new();
+        for k in 0..30 {
+            let classifier = k % 6;
+            let point = [k as f64 % 31.0, (3 * k) as f64 % 29.0];
+            want.push(models[classifier].forward(&dev, point));
+            tickets.push(
+                svc.submit(Job::Classify { processor: "cls2x2".into(), classifier, point })
+                    .expect("queue has room"),
+            );
+        }
+        for (k, t) in tickets.into_iter().enumerate() {
+            match t.wait().unwrap() {
+                JobResult::Classify { yhat, .. } => {
+                    assert!((yhat - want[k]).abs() < 1e-12, "request {k}")
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Out-of-range classifier is answered, not dropped.
+        match svc
+            .submit(Job::Classify { processor: "cls2x2".into(), classifier: 99, point: [0.0, 0.0] })
+            .unwrap()
+            .wait()
+            .unwrap()
+        {
+            JobResult::Rejected { reason } => assert!(reason.contains("out of range"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mnist_infer_through_front_door() {
+        let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+        let bundle = ModelBundle::from_trained(&net).unwrap();
+        let mut pool = ProcessorPool::new();
+        pool.register(
+            "mnist8",
+            Workload::Mnist { bundle, backend: Backend::Native },
+            quick_batch(),
+        )
+        .unwrap();
+        let svc = ProcessorService::new(pool);
+        let r = svc
+            .submit_wait(Job::Infer { processor: "mnist8".into(), image: vec![0.5; 784] })
+            .unwrap();
+        match &r {
+            JobResult::Infer { probs, .. } => {
+                assert_eq!(probs.len(), 10);
+                let sum: f32 = probs.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(r.predicted().unwrap() < 10);
+        assert_eq!(svc.metrics().job(JobKind::Infer).served.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn raw_apply_and_reprogram_version_the_processor() {
+        let mesh = DiscreteMesh::new(4, MeshBackend::Ideal);
+        let cells = mesh.cells();
+        let baseline = LinearProcessor::matrix(&mesh).clone();
+        let mut pool = ProcessorPool::new();
+        pool.register("mesh4", Workload::Processor(Box::new(mesh)), quick_batch()).unwrap();
+        let svc = ProcessorService::new(pool);
+        let probe = || Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) };
+        // Probe with the identity: Y = M.
+        match svc.submit_wait(probe()).unwrap() {
+            JobResult::RawApply { y } => assert!(baseline.sub(&y).max_abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Reprogram every cell to L3L3; version bumps to 2.
+        let code = vec![2usize; 2 * cells];
+        match svc
+            .submit_wait(Job::Reprogram { processor: "mesh4".into(), code: code.clone() })
+            .unwrap()
+        {
+            JobResult::Reprogrammed { version } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(svc.pool().info("mesh4").unwrap().version, 2);
+        // The served matrix now matches an identically-programmed mesh.
+        let mut reference = DiscreteMesh::new(4, MeshBackend::Ideal);
+        reference.set_encoded(&code);
+        match svc.submit_wait(probe()).unwrap() {
+            JobResult::RawApply { y } => {
+                assert!(LinearProcessor::matrix(&reference).sub(&y).max_abs() < 1e-12);
+                assert!(baseline.sub(&y).max_abs() > 1e-6, "reprogram must change the matrix");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Malformed codes are answered with Rejected, version unchanged.
+        for bad in [vec![2usize; 3], vec![99usize; 2 * cells]] {
+            match svc
+                .submit_wait(Job::Reprogram { processor: "mesh4".into(), code: bad })
+                .unwrap()
+            {
+                JobResult::Rejected { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(svc.pool().info("mesh4").unwrap().version, 2);
+        // Occupancy stayed clean: only the two raw applies dispatched
+        // compute batches; reprogram is control-plane.
+        let m = svc.metrics();
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.reconfigs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job(JobKind::Reprogram).submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.job(JobKind::Reprogram).served.load(Ordering::Relaxed), 3);
+        // Shape mismatch on raw apply is answered too.
+        match svc
+            .submit_wait(Job::RawApply { processor: "mesh4".into(), x: CMat::zeros(3, 2) })
+            .unwrap()
+        {
+            JobResult::Rejected { reason } => assert!(reason.contains("raw_apply"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stopped_worker_surfaces_as_errors_not_hangs() {
+        let mut pool = ProcessorPool::new();
+        let rx = pool
+            .register_external(
+                "ext",
+                (2, 2),
+                Fidelity::Digital,
+                &[JobKind::RawApply],
+                PoolConfig { queue_depth: 4, ..PoolConfig::default() },
+            )
+            .unwrap();
+        let svc = ProcessorService::new(pool);
+        let t = svc
+            .submit(Job::RawApply { processor: "ext".into(), x: CMat::eye(2) })
+            .expect("admitted");
+        drop(rx); // the "worker" dies with the job still queued
+        assert!(t.wait().is_err(), "ticket must error, not hang");
+        match svc.submit(Job::RawApply { processor: "ext".into(), x: CMat::eye(2) }) {
+            Err(SubmitError::Stopped(p)) => assert_eq!(p, "ext"),
+            other => panic!("expected Stopped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_error_messages_are_informative() {
+        let e = SubmitError::Overloaded { processor: "m".into(), capacity: 7 };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(SubmitError::UnknownProcessor("q".into()).to_string().contains("'q'"));
+        assert!(
+            SubmitError::KindNotServed { processor: "p".into(), kind: JobKind::Reprogram }
+                .to_string()
+                .contains("reprogram")
+        );
+    }
+}

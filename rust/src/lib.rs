@@ -29,8 +29,10 @@
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts produced by
 //!   `python/compile/aot.py` (gated behind the `pjrt` feature; the default
 //!   offline build substitutes a fail-closed stub and serves natively).
-//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
-//!   device-state scheduler, and metrics.
+//! * [`coordinator`] — the serving layer: the unified
+//!   [`coordinator::service::ProcessorService`] front door (typed jobs,
+//!   processor pool, backpressure, versioned wire protocol), dynamic
+//!   batcher, device-state scheduler, and metrics.
 //! * [`bench`] — the paper-experiment harness regenerating every table/figure,
 //!   plus the batched-GEMM perf trajectory (`BENCH_pr1.json`).
 //! * [`cli`] — hand-rolled argument parsing for the `rfnn` binary.
@@ -79,6 +81,38 @@
 //! benchmark, and optimize (`rust/src/testing/processor_props.rs` pins the
 //! contract across all four backends; `bench::perf` tracks batched vs
 //! per-vector throughput in `BENCH_pr1.json`).
+//!
+//! ## Serving model
+//!
+//! Every workload is served through ONE front door,
+//! [`coordinator::service::ProcessorService`]:
+//!
+//! ```text
+//!   ProcessorPool::register(name, Workload, PoolConfig)  named, versioned processors
+//!   ProcessorService::submit(Job) -> Ticket              bounded admission queue:
+//!                                                        Err(Overloaded), never blocks
+//!   Ticket::wait() -> JobResult                          reply routing owned by the service
+//! ```
+//!
+//! [`coordinator::service::Job`] is a typed enum — `Infer` (MNIST image),
+//! `Classify` (2×2 point under a named classifier), `RawApply`
+//! (matrix-free `in × B` batch against any processor), `Reprogram` (new
+//! θ/φ state codes; bumps the processor's pool version) — and doubles as
+//! the wire schema: `Job`/`JobResult` round-trip through [`util::json`]
+//! under [`coordinator::service::WIRE_VERSION`], with decoders rejecting
+//! unknown versions, so the CLI (`rfnn job`), the benches
+//! (`BENCH_pr2.json`), and future network transports speak one format.
+//!
+//! A [`coordinator::service::Workload`] maps each registered processor to
+//! its worker: the MNIST worker coalesces infer jobs (dynamic batcher →
+//! one `apply_batch` GEMM per batch, PJRT-padded when AOT artifacts
+//! serve); the classify worker groups jobs per device state to minimize
+//! re-biases; the bare-processor worker serves raw applies and validated
+//! state writes. Per-job-kind submitted/served/rejected counters live in
+//! [`coordinator::metrics::Metrics`]; `Reprogram` is control-plane and
+//! never pollutes batch-occupancy accounting. Multiple processors serve
+//! concurrently from one pool; adding a workload is a `Job` variant plus
+//! a worker arm, not a new service loop.
 
 pub mod bench;
 pub mod cli;

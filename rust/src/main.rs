@@ -1,155 +1,10 @@
-//! `rfnn` — the leader binary: experiment regeneration, training, and the
-//! serving demo, over the three-layer stack (rust coordinator → AOT HLO →
-//! Pallas-lowered mesh kernel).
+//! `rfnn` — the leader binary. All command logic lives in [`rfnn::cli`]
+//! (argument grammar + dispatch); commands are served through the unified
+//! [`rfnn::coordinator::service::ProcessorService`] front door where they
+//! touch the serving layer.
 
-use rfnn::bench;
-use rfnn::cli::Args;
-use rfnn::coordinator::batcher::BatchPolicy;
-use rfnn::coordinator::server::{Backend, ModelBundle, Server, ServerConfig};
-use rfnn::dataset::mnist::load_or_synthesize;
-use rfnn::mesh::propagate::MeshBackend;
-use rfnn::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
-use rfnn::nn::sgd::SgdConfig;
-use rfnn::runtime::Manifest;
-use std::time::Duration;
-
-const USAGE: &str = "\
-rfnn — reconfigurable linear RF analog processor / microwave neural network
-
-USAGE:
-    rfnn bench <experiment|all> [--quick]     regenerate a paper table/figure
-    rfnn train-mnist [--train N] [--test N] [--epochs N] [--lr F] [--digital]
-    rfnn serve [--requests N] [--batch N] [--native]
-    rfnn info                                 platform + artifact status
-
-EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf";
+use rfnn::cli::{run, Args};
 
 fn main() {
-    let args = Args::from_env();
-    let code = match args.command.as_deref() {
-        Some("bench") => cmd_bench(&args),
-        Some("train-mnist") => cmd_train(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("info") => cmd_info(),
-        _ => {
-            println!("{USAGE}");
-            0
-        }
-    };
-    std::process::exit(code);
-}
-
-fn cmd_bench(args: &Args) -> i32 {
-    let quick = args.is_set("quick");
-    let target = args.positional.first().map(String::as_str).unwrap_or("all");
-    let names: Vec<&str> = if target == "all" {
-        bench::EXPERIMENTS.to_vec()
-    } else {
-        vec![target]
-    };
-    for name in names {
-        println!("=== {name} ===");
-        match bench::run(name, quick) {
-            Ok(report) => println!("{report}"),
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
-            }
-        }
-    }
-    0
-}
-
-fn cmd_train(args: &Args) -> i32 {
-    let n_train = args.get_or("train", 2000usize);
-    let n_test = args.get_or("test", 1000usize);
-    let epochs = args.get_or("epochs", 30usize);
-    let lr = args.get_or("lr", 0.02f64);
-    let seed = args.get_or("seed", 2023u64);
-    let (tr, te) = load_or_synthesize(n_train, n_test, seed);
-    let cfg = MnistTrainConfig {
-        epochs,
-        sgd: SgdConfig { lr, batch_size: 10, momentum: 0.0 },
-        ..Default::default()
-    };
-    let mut net = if args.is_set("digital") {
-        println!("training digital twin ({n_train} samples, {epochs} epochs, lr {lr})");
-        MnistRfnn::digital(8, seed)
-    } else {
-        println!("training analog RFNN ({n_train} samples, {epochs} epochs, lr {lr})");
-        MnistRfnn::analog(8, MeshBackend::Measured { base_seed: seed ^ 0xAA }, seed)
-    };
-    net.train(&tr, &cfg);
-    for h in net.history.iter().step_by((epochs / 10).max(1)) {
-        println!("epoch {:>3}: train acc {:.3} err {:.3}", h.epoch + 1, h.train_acc, h.train_loss);
-    }
-    println!("test accuracy: {:.2}%", 100.0 * net.test_accuracy(&te));
-    0
-}
-
-fn cmd_serve(args: &Args) -> i32 {
-    let requests = args.get_or("requests", 1000usize);
-    let max_batch = args.get_or("batch", 256usize);
-    let net = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 7 }, 7);
-    let bundle = ModelBundle::from_trained(&net).expect("bundle");
-    let backend = if args.is_set("native") {
-        Backend::Native
-    } else {
-        Backend::Pjrt(Manifest::default_dir())
-    };
-    let srv = Server::start(ServerConfig {
-        batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
-        bundle,
-        backend,
-    });
-    let (ds, _) = load_or_synthesize(requests.min(512), 1, 99);
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for t in 0..4u64 {
-        let client = srv.client.clone();
-        let images: Vec<Vec<f32>> = ds
-            .images
-            .iter()
-            .map(|img| img.iter().map(|&v| v as f32).collect())
-            .collect();
-        let per_thread = requests / 4;
-        handles.push(std::thread::spawn(move || {
-            for k in 0..per_thread {
-                let img = images[(t as usize * per_thread + k) % images.len()].clone();
-                let _ = client.infer(img);
-            }
-        }));
-    }
-    for h in handles {
-        h.join().unwrap();
-    }
-    let dt = t0.elapsed();
-    println!(
-        "{} requests in {:.2?} → {:.0} req/s",
-        requests / 4 * 4,
-        dt,
-        (requests / 4 * 4) as f64 / dt.as_secs_f64()
-    );
-    println!("{}", srv.metrics.report());
-    srv.shutdown();
-    0
-}
-
-fn cmd_info() -> i32 {
-    println!("rfnn {} — paper doi:10.1109/TMTT.2023.3293054", env!("CARGO_PKG_VERSION"));
-    let dir = Manifest::default_dir();
-    match Manifest::load(&dir) {
-        Ok(m) => {
-            println!("artifacts: {:?} (N={}, C={}, batches {:?})", dir, m.n, m.cols, m.batch_sizes);
-            for name in m.artifacts.keys() {
-                println!("  {name}");
-            }
-        }
-        Err(e) => println!("artifacts: unavailable — {e}"),
-    }
-    match rfnn::runtime::Engine::cpu(&dir) {
-        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
-        Err(e) => println!("PJRT: unavailable — {e}"),
-    }
-    0
+    std::process::exit(run(&Args::from_env()));
 }

@@ -5,9 +5,15 @@
 //! with failure reproduction info, and shrinking for the common scalar/vec
 //! shapes used by the library's invariant tests. `processor_props` holds
 //! the cross-backend [`crate::processor::LinearProcessor`] execution
-//! contract (`apply_batch` ≡ column-by-column `matvec` ≡ naive reference).
+//! contract (`apply_batch` ≡ column-by-column `matvec` ≡ naive reference);
+//! `wire_props` holds the serving wire-protocol contract (every
+//! `Job`/`JobResult` variant round-trips under `WIRE_VERSION`, unknown
+//! versions are refused).
 
 pub mod prop;
 
 #[cfg(test)]
 mod processor_props;
+
+#[cfg(test)]
+mod wire_props;

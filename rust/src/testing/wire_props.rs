@@ -1,0 +1,197 @@
+//! Wire-protocol contract: every [`Job`]/[`JobResult`] variant round-trips
+//! through the versioned `util::json` form byte-for-value, and decoding
+//! rejects unknown versions and malformed documents — the schema the CLI,
+//! benches, and future network transports all rely on.
+
+use crate::coordinator::service::{Job, JobResult, WIRE_VERSION};
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::testing::prop::{forall, Gen};
+use crate::util::json::{parse, Json};
+
+fn arb_processor(g: &mut Gen) -> String {
+    (*g.choose(&["mnist8", "cls2x2", "mesh8", "θ-pool"])).to_string()
+}
+
+fn arb_cmat(g: &mut Gen) -> CMat {
+    let rows = g.usize_in(1, 5);
+    let cols = g.usize_in(0, 4);
+    let data: Vec<C64> =
+        (0..rows * cols).map(|_| C64::new(g.normal(), g.normal())).collect();
+    CMat::from_rows(rows, cols, &data)
+}
+
+fn arb_job(g: &mut Gen) -> Job {
+    let processor = arb_processor(g);
+    match g.usize_in(0, 3) {
+        0 => {
+            let n = g.usize_in(0, 30);
+            Job::Infer { processor, image: (0..n).map(|_| g.f64_in(0.0, 1.0) as f32).collect() }
+        }
+        1 => Job::Classify {
+            processor,
+            classifier: g.usize_in(0, 5),
+            point: [g.f64_in(-30.0, 30.0), g.f64_in(-30.0, 30.0)],
+        },
+        2 => Job::RawApply { processor, x: arb_cmat(g) },
+        _ => {
+            let n = g.usize_in(0, 16);
+            Job::Reprogram { processor, code: (0..n).map(|_| g.usize_in(0, 5)).collect() }
+        }
+    }
+}
+
+fn arb_result(g: &mut Gen) -> JobResult {
+    match g.usize_in(0, 4) {
+        0 => JobResult::Infer {
+            probs: (0..10).map(|_| g.f64_in(0.0, 1.0) as f32).collect(),
+            queued_us: g.usize_in(0, 1 << 40) as u64,
+            service_us: g.usize_in(0, 1 << 40) as u64,
+        },
+        1 => JobResult::Classify { yhat: g.f64_in(0.0, 1.0), reconfigured: g.bool() },
+        2 => JobResult::RawApply { y: arb_cmat(g) },
+        3 => JobResult::Reprogrammed { version: g.usize_in(1, 1 << 30) as u64 },
+        _ => JobResult::Rejected { reason: "a \"quoted\" reason\nwith θ unicode".into() },
+    }
+}
+
+#[test]
+fn job_round_trips_every_variant() {
+    forall("job wire round-trip", 200, |g| {
+        let job = arb_job(g);
+        let text = job.encode();
+        let back = Job::decode(&text).expect("decode what we encoded");
+        assert_eq!(back, job, "wire: {text}");
+    });
+}
+
+#[test]
+fn result_round_trips_every_variant() {
+    forall("result wire round-trip", 200, |g| {
+        let result = arb_result(g);
+        let text = result.encode();
+        let back = JobResult::decode(&text).expect("decode what we encoded");
+        assert_eq!(back, result, "wire: {text}");
+    });
+}
+
+/// Deterministic coverage of all four job + five result variants, in case
+/// the random distribution above ever shifts.
+#[test]
+fn every_variant_covered_explicitly() {
+    let jobs = vec![
+        Job::Infer { processor: "m".into(), image: vec![0.25, 0.5] },
+        Job::Classify { processor: "c".into(), classifier: 3, point: [1.5, -2.25] },
+        Job::RawApply {
+            processor: "p".into(),
+            x: CMat::from_fn(2, 3, |i, j| C64::new(i as f64, j as f64 - 0.5)),
+        },
+        Job::Reprogram { processor: "p".into(), code: vec![0, 5, 2, 3] },
+    ];
+    for job in jobs {
+        let back = Job::decode(&job.encode()).expect("round trip");
+        assert_eq!(back, job);
+        // The version tag is actually on the wire.
+        let v = parse(&job.encode()).unwrap();
+        assert_eq!(v.get("v").and_then(Json::as_f64), Some(WIRE_VERSION as f64));
+    }
+    let results = vec![
+        JobResult::Infer { probs: vec![0.1; 10], queued_us: 7, service_us: 9 },
+        JobResult::Classify { yhat: 0.75, reconfigured: true },
+        JobResult::RawApply { y: CMat::eye(2) },
+        JobResult::Reprogrammed { version: 42 },
+        JobResult::Rejected { reason: "nope".into() },
+    ];
+    for result in results {
+        assert_eq!(JobResult::decode(&result.encode()).expect("round trip"), result);
+    }
+}
+
+#[test]
+fn decode_rejects_unknown_wire_version() {
+    let job = Job::Infer { processor: "m".into(), image: vec![0.5] };
+    // Stamp a future version onto an otherwise-valid document.
+    let mut v = parse(&job.encode()).unwrap();
+    if let Json::Obj(map) = &mut v {
+        map.insert("v".into(), Json::Num((WIRE_VERSION + 1) as f64));
+    } else {
+        panic!("wire form must be an object");
+    }
+    let err = Job::decode(&v.to_string_compact()).expect_err("future version must be refused");
+    assert!(err.to_string().contains("unsupported version"), "{err}");
+    // Same gate on results.
+    let err = JobResult::decode(&format!(r#"{{"v":{},"kind":"rejected","reason":"x"}}"#, WIRE_VERSION + 7))
+        .expect_err("future version must be refused");
+    assert!(err.to_string().contains("unsupported version"), "{err}");
+    // And a missing version tag is not treated as current.
+    assert!(Job::decode(r#"{"kind":"infer","processor":"m","image":[]}"#).is_err());
+}
+
+#[test]
+fn decode_rejects_non_integer_index_fields() {
+    // A truncating cast would accept all of these: 2.5 → version 2
+    // (defeating the gate), -1 → classifier 0 (a real classifier).
+    assert!(Job::decode(r#"{"v":2.5,"kind":"infer","processor":"m","image":[]}"#).is_err());
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"classify","processor":"c","classifier":-1,"point":[1,2]}}"#
+    ))
+    .is_err());
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"classify","processor":"c","classifier":1.5,"point":[1,2]}}"#
+    ))
+    .is_err());
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"reprogram","processor":"p","code":[1,-3]}}"#
+    ))
+    .is_err());
+}
+
+#[test]
+fn non_finite_values_survive_the_wire_as_nan() {
+    // JSON has no NaN/Inf literal: the encoder writes null, the decoder
+    // maps null back to NaN, so encoding a degenerate result (exactly the
+    // case nan_safe_argmax exists for) stays decodable by its peer.
+    let r = JobResult::Infer { probs: vec![f32::NAN, 0.5], queued_us: 1, service_us: 2 };
+    match JobResult::decode(&r.encode()).expect("null entries decode as NaN") {
+        JobResult::Infer { probs, .. } => {
+            assert!(probs[0].is_nan());
+            assert_eq!(probs[1], 0.5);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let j = Job::Classify {
+        processor: "c".into(),
+        classifier: 0,
+        point: [f64::INFINITY, 1.0],
+    };
+    match Job::decode(&j.encode()).expect("non-finite point decodes") {
+        Job::Classify { point, .. } => {
+            assert!(point[0].is_nan(), "Inf has no JSON form; null → NaN");
+            assert_eq!(point[1], 1.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn decode_rejects_malformed_documents() {
+    assert!(Job::decode("not json at all").is_err());
+    assert!(Job::decode(&format!(r#"{{"v":{WIRE_VERSION}}}"#)).is_err()); // no kind
+    assert!(Job::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"warp","processor":"m"}}"#))
+        .is_err()); // unknown kind
+    // classify needs exactly two coordinates
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"classify","processor":"c","classifier":0,"point":[1,2,3]}}"#
+    ))
+    .is_err());
+    // matrix with inconsistent shape/data
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"raw_apply","processor":"p","x":{{"rows":2,"cols":2,"re":[1,2,3],"im":[0,0,0,0]}}}}"#
+    ))
+    .is_err());
+    // absurd matrix dims must be refused before allocating
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"raw_apply","processor":"p","x":{{"rows":1000000,"cols":1000000,"re":[],"im":[]}}}}"#
+    ))
+    .is_err());
+}

@@ -168,6 +168,142 @@ fn trained_network_serving_bundle_consistency() {
     }
 }
 
+/// PR-2 acceptance: ONE `ProcessorService::submit` front door serves MNIST
+/// infer, 2×2 classify, raw-apply and reprogram jobs against multiple
+/// pooled processors, concurrently, with reply routing owned by the
+/// service and `Reprogram` versioning the processor it rewrites.
+#[test]
+fn processor_service_front_door_serves_all_job_kinds_concurrently() {
+    use rfnn::coordinator::batcher::BatchPolicy;
+    use rfnn::coordinator::metrics::JobKind;
+    use rfnn::coordinator::server::{Backend, ModelBundle};
+    use rfnn::coordinator::service::{
+        Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload,
+    };
+    use rfnn::nn::rfnn2x2::ideal_device;
+    use rfnn::processor::LinearProcessor;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+    let bundle = ModelBundle::from_trained(&net).unwrap();
+    // The same bank `rfnn serve` registers — one source of truth.
+    let models = rfnn::cli::demo_classifiers();
+    let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+    let n_code = 2 * mesh.cells();
+    let baseline = LinearProcessor::matrix(&mesh).clone();
+
+    let cfg = PoolConfig {
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        ..PoolConfig::default()
+    };
+    let mut pool = ProcessorPool::new();
+    pool.register("mnist8", Workload::Mnist { bundle, backend: Backend::Native }, cfg).unwrap();
+    pool.register("cls2x2", Workload::Classify2x2(models.clone()), cfg).unwrap();
+    pool.register("mesh8", Workload::Processor(Box::new(mesh)), cfg).unwrap();
+    let svc = Arc::new(ProcessorService::new(pool));
+
+    // Concurrent mixed traffic: every thread exercises every processor.
+    let mut threads = Vec::new();
+    for t in 0..3usize {
+        let svc = svc.clone();
+        let models = models.clone();
+        let baseline = baseline.clone();
+        threads.push(std::thread::spawn(move || {
+            let dev = ideal_device();
+            for k in 0..10usize {
+                let image = vec![((t + k) % 7) as f32 / 7.0; 784];
+                match svc
+                    .submit(Job::Infer { processor: "mnist8".into(), image })
+                    .expect("infer admitted")
+                    .wait()
+                    .expect("infer answered")
+                {
+                    JobResult::Infer { probs, .. } => {
+                        assert_eq!(probs.len(), 10);
+                        let sum: f32 = probs.iter().sum();
+                        assert!((sum - 1.0).abs() < 1e-3, "probs sum {sum}");
+                    }
+                    other => panic!("unexpected infer result {other:?}"),
+                }
+                let classifier = (t + k) % 6;
+                let point = [k as f64, 30.0 - k as f64];
+                match svc
+                    .submit(Job::Classify { processor: "cls2x2".into(), classifier, point })
+                    .expect("classify admitted")
+                    .wait()
+                    .expect("classify answered")
+                {
+                    JobResult::Classify { yhat, .. } => {
+                        let want = models[classifier].forward(&dev, point);
+                        assert!((yhat - want).abs() < 1e-9, "thread {t} job {k}");
+                    }
+                    other => panic!("unexpected classify result {other:?}"),
+                }
+                let x = CMat::from_fn(8, 4, |i, j| {
+                    C64::new(0.1 * i as f64 - 0.3, 0.05 * j as f64)
+                });
+                match svc
+                    .submit(Job::RawApply { processor: "mesh8".into(), x: x.clone() })
+                    .expect("raw admitted")
+                    .wait()
+                    .expect("raw answered")
+                {
+                    JobResult::RawApply { y } => {
+                        // Workers may be mid-reprogram below only AFTER the
+                        // threads join; here the baseline matrix holds.
+                        let want = baseline.matmul(&x);
+                        assert!(want.sub(&y).max_abs() < 1e-10);
+                    }
+                    other => panic!("unexpected raw result {other:?}"),
+                }
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+
+    // Reprogram the pooled mesh: version bumps, served matrix changes to
+    // exactly what an identically-programmed reference mesh composes.
+    assert_eq!(svc.pool().info("mesh8").unwrap().version, 1);
+    let code = vec![3usize; n_code];
+    match svc
+        .submit(Job::Reprogram { processor: "mesh8".into(), code: code.clone() })
+        .expect("reprogram admitted")
+        .wait()
+        .expect("reprogram answered")
+    {
+        JobResult::Reprogrammed { version } => assert_eq!(version, 2),
+        other => panic!("unexpected reprogram result {other:?}"),
+    }
+    assert_eq!(svc.pool().info("mesh8").unwrap().version, 2);
+    let mut reference = DiscreteMesh::new(8, MeshBackend::Ideal);
+    reference.set_encoded(&code);
+    match svc
+        .submit(Job::RawApply { processor: "mesh8".into(), x: CMat::eye(8) })
+        .expect("probe admitted")
+        .wait()
+        .expect("probe answered")
+    {
+        JobResult::RawApply { y } => {
+            assert!(LinearProcessor::matrix(&reference).sub(&y).max_abs() < 1e-12);
+            assert!(baseline.sub(&y).max_abs() > 1e-6, "reprogram must change the matrix");
+        }
+        other => panic!("unexpected probe result {other:?}"),
+    }
+
+    // Per-kind accounting: 30 infers, 30 classifies, 31 raw applies,
+    // 1 reprogram — all submitted and served, none shed.
+    let m = svc.metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.job(JobKind::Infer).served.load(Ordering::Relaxed), 30);
+    assert_eq!(m.job(JobKind::Classify).served.load(Ordering::Relaxed), 30);
+    assert_eq!(m.job(JobKind::RawApply).served.load(Ordering::Relaxed), 31);
+    assert_eq!(m.job(JobKind::Reprogram).served.load(Ordering::Relaxed), 1);
+    assert_eq!(m.job(JobKind::Reprogram).rejected.load(Ordering::Relaxed), 0);
+}
+
 /// Property: any mesh program applied to the standard basis reconstructs
 /// exactly the columns of its matrix.
 #[test]
