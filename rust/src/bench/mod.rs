@@ -23,8 +23,24 @@ pub const EXPERIMENTS: &[&str] = &[
     "table2", "ablate", "perf",
 ];
 
+/// Experiment options beyond the name.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchOpts {
+    /// Shrink workloads (CI mode).
+    pub quick: bool,
+    /// Physical tile size for the perf tiled-vs-dense sweep (`rfnn bench
+    /// perf --tile T`); `None` uses the paper's 8×8 processor size.
+    pub tile: Option<usize>,
+}
+
 /// Run one experiment by name. `quick` shrinks workloads (CI mode).
 pub fn run(name: &str, quick: bool) -> Result<Report, String> {
+    run_opts(name, &BenchOpts { quick, tile: None })
+}
+
+/// [`run`] with explicit options.
+pub fn run_opts(name: &str, opts: &BenchOpts) -> Result<Report, String> {
+    let quick = opts.quick;
     match name {
         "table1" => Ok(figures::table1()),
         "fig3" => Ok(figures::fig3()),
@@ -38,7 +54,7 @@ pub fn run(name: &str, quick: bool) -> Result<Report, String> {
         "fig16" => Ok(mnist_exp::fig16(quick)),
         "table2" => Ok(table2::table2()),
         "ablate" => Ok(ablate::all(quick)),
-        "perf" => Ok(perf::all(quick)),
+        "perf" => Ok(perf::all(quick, opts.tile.unwrap_or(8))),
         other => Err(format!("unknown experiment '{other}' (have: {EXPERIMENTS:?})")),
     }
 }

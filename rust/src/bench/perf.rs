@@ -5,7 +5,9 @@
 //! artifacts are present. Results are recorded in EXPERIMENTS.md §Perf.
 
 use super::harness::{bench, BenchStats};
+use crate::compiler::{PlanSpec, VirtualProcessor};
 use crate::coordinator::batcher::BatchPolicy;
+use crate::processor::{Fidelity, LinearProcessor};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload, WIRE_VERSION,
@@ -24,13 +26,22 @@ use crate::util::json::Json;
 /// coordinator's BatchPolicy coalesces up to 256).
 pub const GEMM_BATCHES: [usize; 4] = [1, 8, 64, 256];
 
+/// Logical processor sizes for the tiled-vs-dense virtualization sweep.
+pub const TILED_NS: [usize; 4] = [8, 16, 32, 64];
+
+/// Batch sizes for the tiled-vs-dense virtualization sweep.
+pub const TILED_BATCHES: [usize; 2] = [1, 64];
+
 /// Run every perf bench; returns the report. Measures the batched
 /// `apply_batch` path against the per-vector `matvec` loop it replaced
-/// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`) and the
+/// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`), the
 /// end-to-end `submit` → `Ticket::wait` serving path through the unified
 /// front door (written to `BENCH_pr2.json`; override with
-/// `RFNN_BENCH2_OUT`) so the perf trajectory tracks each PR.
-pub fn all(quick: bool) -> String {
+/// `RFNN_BENCH2_OUT`), and the tiled `VirtualProcessor` execution against
+/// the dense GEMM it virtualizes (written to `BENCH_pr3.json`; override
+/// with `RFNN_BENCH3_OUT`) so the perf trajectory tracks each PR. `tile`
+/// is the physical tile size of the virtualization sweep.
+pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
     for stat in run_benches(samples) {
@@ -72,7 +83,91 @@ pub fn all(quick: bool) -> String {
         Ok(()) => out.push_str(&format!("wrote {path2}\n")),
         Err(e) => out.push_str(&format!("could not write {path2}: {e}\n")),
     }
+    out.push_str(&format!(
+        "§Perf — tiled VirtualProcessor vs dense GEMM ({tile}×{tile} tiles)\n"
+    ));
+    let tiled_rows = run_tiled_benches(samples, tile);
+    for (n, b, dense, tiled) in &tiled_rows {
+        out.push_str(&dense.line());
+        out.push('\n');
+        out.push_str(&tiled.line());
+        out.push('\n');
+        let ratio = tiled.median_ns() as f64 / dense.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  n {n:>3} batch {b:>3}: tiled costs {ratio:.2}× the dense GEMM\n"
+        ));
+    }
+    let json3 = tiled_report_json(&tiled_rows, samples, quick, tile);
+    let path3 =
+        std::env::var("RFNN_BENCH3_OUT").unwrap_or_else(|_| "BENCH_pr3.json".to_string());
+    match std::fs::write(&path3, json3.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path3}\n")),
+        Err(e) => out.push_str(&format!("could not write {path3}: {e}\n")),
+    }
     out
+}
+
+/// Time the tiled [`VirtualProcessor::apply_batch`] (digital tiles — pure
+/// virtualization overhead, no device model) against the dense blocked
+/// GEMM over the same `N×N` target, for each `N` in [`TILED_NS`] × batch
+/// in [`TILED_BATCHES`]. Returns `(n, batch, dense, tiled)` stats.
+pub fn run_tiled_benches(
+    samples: usize,
+    tile: usize,
+) -> Vec<(usize, usize, BenchStats, BenchStats)> {
+    let mut rng = Rng::new(0x71D3);
+    let mut out = Vec::new();
+    for &n in &TILED_NS {
+        let target = CMat::from_fn(n, n, |_, _| C64::new(rng.normal(), rng.normal()));
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(tile, Fidelity::Digital))
+            .expect("valid tile size");
+        for &b in &TILED_BATCHES {
+            let x = CMat::from_fn(n, b, |i, j| {
+                C64::new(0.05 * i as f64 - 0.2 + 0.01 * j as f64, 0.02 * i as f64)
+            });
+            let dense = bench(&format!("dense gemm n{n} b{b}"), samples, || {
+                std::hint::black_box(target.gemm(std::hint::black_box(&x)));
+            });
+            let tiled = bench(&format!("tiled t{tile} n{n} b{b}"), samples, || {
+                std::hint::black_box(vp.apply_batch(std::hint::black_box(&x)));
+            });
+            out.push((n, b, dense, tiled));
+        }
+    }
+    out
+}
+
+/// The PR-3 perf-trajectory record for [`run_tiled_benches`] results.
+pub fn tiled_report_json(
+    rows: &[(usize, usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+    tile: usize,
+) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(n, b, dense, tiled)| {
+            let dn = dense.median_ns() as f64 / *b as f64;
+            let tn = tiled.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("n", Json::Num(*n as f64)),
+                ("batch", Json::Num(*b as f64)),
+                ("dense_ns_per_vector", Json::Num(dn)),
+                ("tiled_ns_per_vector", Json::Num(tn)),
+                ("tiled_vectors_per_sec", Json::Num(1e9 / tn.max(1.0))),
+                ("tiled_over_dense", Json::Num(tn / dn.max(1.0))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pr", Json::Num(3.0)),
+        ("bench", Json::Str("virtual_tiled_vs_dense_gemm".into())),
+        ("tile", Json::Num(tile as f64)),
+        ("fidelity", Json::Str("digital".into())),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time the full serving path — `ProcessorService::submit` → batcher →
@@ -326,11 +421,28 @@ pub fn run_benches(samples: usize) -> Vec<BenchStats> {
 mod tests {
     #[test]
     fn perf_suite_runs_quick() {
-        let report = super::all(true);
+        let report = super::all(true, 8);
         assert!(report.contains("mesh8.apply"), "{report}");
         assert!(report.contains("native fwd"), "{report}");
         assert!(report.contains("apply_batch"), "{report}");
         assert!(report.contains("service submit"), "{report}");
+        assert!(report.contains("tiled t8"), "{report}");
+    }
+
+    #[test]
+    fn tiled_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_tiled_benches(2, 4);
+        assert_eq!(rows.len(), super::TILED_NS.len() * super::TILED_BATCHES.len());
+        let json = super::tiled_report_json(&rows, 2, true, 4);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(parsed.get("tile").and_then(|v| v.as_f64()), Some(4.0));
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), rows.len());
+        for r in results {
+            let ratio = r.get("tiled_over_dense").and_then(|v| v.as_f64()).expect("ratio");
+            assert!(ratio.is_finite() && ratio > 0.0, "tiled_over_dense {ratio}");
+        }
     }
 
     #[test]

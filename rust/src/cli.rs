@@ -12,6 +12,7 @@
 //! ([`crate::coordinator::service::WIRE_VERSION`]).
 
 use crate::bench;
+use crate::compiler::{Compiler, PlanSpec, VALID_TILES};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
@@ -19,10 +20,14 @@ use crate::coordinator::service::{
 };
 use crate::dataset::mnist::load_or_synthesize;
 use crate::device::State;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::math::rng::Rng;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
 use crate::nn::rfnn2x2::{PostParams, Rfnn2x2};
 use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
 use crate::nn::sgd::SgdConfig;
+use crate::processor::Fidelity;
 use crate::runtime::Manifest;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -89,15 +94,24 @@ const USAGE: &str = "\
 rfnn — reconfigurable linear RF analog processor / microwave neural network
 
 USAGE:
-    rfnn bench <experiment|all> [--quick]     regenerate a paper table/figure
+    rfnn bench <experiment|all> [--quick] [--tile T]   regenerate a paper table/figure
     rfnn train-mnist [--train N] [--test N] [--epochs N] [--lr F] [--digital]
     rfnn serve [--requests N] [--batch N] [--depth N] [--native]
-    rfnn job '<wire json>' [--native]         submit one wire-encoded job
-    rfnn info                                 platform + artifact status
+               [--tile T] [--fidelity F]
+    rfnn job '<wire json>' [--native] [--tile T]       submit one wire-encoded job
+    rfnn compile [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
+    rfnn info                                          platform + artifact status
 
 serve drives the pooled ProcessorService (mnist8 + cls2x2 + mesh8) with
 mixed infer/classify/raw-apply/reprogram traffic; --depth bounds each
-admission queue (overload sheds, it does not block).
+admission queue (overload sheds, it does not block). --tile T additionally
+registers 'virt8' — the MNIST hidden stage virtualized over a fleet of
+T×T tiles by the tiling compiler — and routes part of the infer traffic
+through it.
+
+compile lowers a seeded random M×N weight matrix onto T×T physical tiles
+and prints the plan (tile grid, per-tile states/scales/errors, reprogram
+cost, plan-cache behavior). Fidelities: digital ideal quantized measured.
 
 EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf";
 
@@ -108,6 +122,7 @@ pub fn run(args: &Args) -> i32 {
         Some("train-mnist") => cmd_train(args),
         Some("serve") => cmd_serve(args),
         Some("job") => cmd_job(args),
+        Some("compile") => cmd_compile(args),
         Some("info") => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -116,8 +131,29 @@ pub fn run(args: &Args) -> i32 {
     }
 }
 
+/// Parse a fidelity name (`--fidelity digital|ideal|quantized|measured`).
+fn parse_fidelity(name: &str) -> Option<Fidelity> {
+    match name {
+        "digital" | "d" => Some(Fidelity::Digital),
+        "ideal" | "i" => Some(Fidelity::Ideal),
+        "quantized" | "q" => Some(Fidelity::Quantized),
+        "measured" | "m" => Some(Fidelity::Measured),
+        _ => None,
+    }
+}
+
 fn cmd_bench(args: &Args) -> i32 {
-    let quick = args.is_set("quick");
+    let tile = match args.get("tile") {
+        None => None,
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) if VALID_TILES.contains(&t) => Some(t),
+            _ => {
+                eprintln!("--tile {v} is not a physical tile size (have {VALID_TILES:?})");
+                return 2;
+            }
+        },
+    };
+    let opts = bench::BenchOpts { quick: args.is_set("quick"), tile };
     let target = args.positional.first().map(String::as_str).unwrap_or("all");
     let names: Vec<&str> = if target == "all" {
         bench::EXPERIMENTS.to_vec()
@@ -126,7 +162,7 @@ fn cmd_bench(args: &Args) -> i32 {
     };
     for name in names {
         println!("=== {name} ===");
-        match bench::run(name, quick) {
+        match bench::run_opts(name, &opts) {
             Ok(report) => println!("{report}"),
             Err(e) => {
                 eprintln!("error: {e}");
@@ -180,11 +216,27 @@ pub fn demo_classifiers() -> Vec<Rfnn2x2> {
 
 /// Build the default three-processor pool: `mnist8` (MNIST bundle over
 /// the requested backend), `cls2x2` (classifier bank), `mesh8` (bare
-/// ideal mesh serving raw applies and reprograms).
-fn default_pool(backend: Backend, cfg: PoolConfig) -> ProcessorPool {
+/// ideal mesh serving raw applies and reprograms). With `virt:
+/// Some((tile, fidelity))` a fourth processor `virt8` serves the same
+/// MNIST model with its hidden stage virtualized over a `tile`-size
+/// fleet by the tiling compiler.
+fn default_pool(backend: Backend, cfg: PoolConfig, virt: Option<(usize, Fidelity)>) -> ProcessorPool {
     let net = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 7 }, 7);
     let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
     let mut pool = ProcessorPool::new();
+    if let Some((tile, fidelity)) = virt {
+        pool.register(
+            "virt8",
+            Workload::Virtual {
+                target: bundle.mesh.clone(),
+                tile,
+                fidelity,
+                mnist: Some(bundle.clone()),
+            },
+            cfg,
+        )
+        .expect("register virt8 (is --tile one of 2/4/8?)");
+    }
     pool.register("mnist8", Workload::Mnist { bundle, backend }, cfg).expect("register mnist8");
     pool.register("cls2x2", Workload::Classify2x2(demo_classifiers()), cfg)
         .expect("register cls2x2");
@@ -201,6 +253,26 @@ fn backend_from(args: &Args) -> Backend {
     }
 }
 
+/// `--tile T [--fidelity F]` → the virtual-processor registration spec;
+/// `Ok(None)` when --tile is absent or zero, `Err` (a usage message) for
+/// tile sizes no processor is fabricated at or unknown fidelity names.
+fn virt_from(args: &Args) -> Result<Option<(usize, Fidelity)>, String> {
+    let tile = args.get_or("tile", 0usize);
+    if tile == 0 {
+        return Ok(None);
+    }
+    if !VALID_TILES.contains(&tile) {
+        return Err(format!("--tile {tile} is not a physical tile size (have {VALID_TILES:?})"));
+    }
+    let fidelity = match args.get("fidelity") {
+        None => Fidelity::Quantized,
+        Some(name) => parse_fidelity(name).ok_or_else(|| {
+            format!("unknown fidelity '{name}' (have: digital ideal quantized measured)")
+        })?,
+    };
+    Ok(Some((tile, fidelity)))
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let requests = args.get_or("requests", 1000usize);
     let max_batch = args.get_or("batch", 256usize);
@@ -210,7 +282,14 @@ fn cmd_serve(args: &Args) -> i32 {
         batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
         ..PoolConfig::default()
     };
-    let svc = Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg)));
+    let virt = match virt_from(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let svc = Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg, virt)));
     let (ds, _) = load_or_synthesize(requests.min(512), 1, 99);
     let images: Arc<Vec<Vec<f32>>> = Arc::new(
         ds.images.iter().map(|img| img.iter().map(|&v| v as f32).collect()).collect(),
@@ -259,6 +338,24 @@ fn cmd_serve(args: &Args) -> i32 {
                     point: [k as f64 % 31.0, (3 * k) as f64 % 29.0],
                 };
                 if svc.submit_wait(job).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    // One tiled-inference client when --tile registered virt8: the same
+    // MNIST traffic served through the compiled tile fleet.
+    if virt.is_some() {
+        let svc = svc.clone();
+        let images = images.clone();
+        let n = (requests / 8).max(1);
+        handles.push(std::thread::spawn(move || {
+            if images.is_empty() {
+                return; // --requests 0: nothing to send
+            }
+            for k in 0..n {
+                let img = images[k % images.len()].clone();
+                if svc.submit_wait(Job::Infer { processor: "virt8".into(), image: img }).is_err() {
                     return;
                 }
             }
@@ -325,7 +422,14 @@ fn cmd_job(args: &Args) -> i32 {
             return 2;
         }
     };
-    let svc = ProcessorService::new(default_pool(backend_from(args), PoolConfig::default()));
+    let virt = match virt_from(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let svc = ProcessorService::new(default_pool(backend_from(args), PoolConfig::default(), virt));
     match svc.submit(job) {
         Ok(ticket) => match ticket.wait() {
             Ok(result) => {
@@ -342,6 +446,45 @@ fn cmd_job(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `rfnn compile`: lower a seeded random M×N weight matrix onto a fleet
+/// of T×T tiles and print the plan summary, then recompile to show the
+/// plan-cache hit.
+fn cmd_compile(args: &Args) -> i32 {
+    let rows = args.get_or("rows", 8usize);
+    let cols = args.get_or("cols", rows);
+    let tile = args.get_or("tile", 4usize);
+    let seed = args.get_or("seed", 2023u64);
+    let fid_name = args.get("fidelity").unwrap_or("quantized");
+    let Some(fidelity) = parse_fidelity(fid_name) else {
+        eprintln!("unknown fidelity '{fid_name}' (have: digital ideal quantized measured)");
+        return 2;
+    };
+    let mut rng = Rng::new(seed);
+    let target = CMat::from_fn(rows, cols, |_, _| C64::real(rng.normal()));
+    let spec = PlanSpec::new(tile, fidelity);
+    let compiler = Compiler::global();
+    let plan = match compiler.compile(&target, &spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("compile failed: {e} (valid tiles: {VALID_TILES:?})");
+            return 2;
+        }
+    };
+    println!("{}", plan.summary());
+    let rel = plan.fro_error / target.fro_norm().max(1e-300);
+    println!("relative error ‖assembled − target‖_F / ‖target‖_F = {rel:.3e}");
+    // Second compilation of the same weights: recipes come from the cache.
+    let again = compiler.compile(&target, &spec).expect("same spec recompiles");
+    println!(
+        "recompile: cache {} ({} hit(s), {} miss(es), {} plan(s) resident)",
+        if again.cache_hit { "HIT — synthesis skipped" } else { "MISS" },
+        compiler.cache().hits(),
+        compiler.cache().misses(),
+        compiler.cache().len(),
+    );
+    0
 }
 
 fn cmd_info() -> i32 {
@@ -404,6 +547,46 @@ mod tests {
     fn unknown_command_prints_usage_and_succeeds() {
         assert_eq!(run(&parse("")), 0);
         assert_eq!(run(&parse("definitely-not-a-command")), 0);
+    }
+
+    #[test]
+    fn compile_command_prints_plans_and_rejects_bad_specs() {
+        // Ragged target, quantized fleet.
+        assert_eq!(run(&parse("compile --rows 5 --cols 3 --tile 2 --fidelity quantized")), 0);
+        // Digital default-size plan on 4×4 tiles.
+        assert_eq!(run(&parse("compile --fidelity digital")), 0);
+        // Invalid tile size and fidelity exit with a usage error.
+        assert_eq!(run(&parse("compile --tile 3")), 2);
+        assert_eq!(run(&parse("compile --fidelity bogus")), 2);
+    }
+
+    #[test]
+    fn fidelity_names_parse() {
+        assert_eq!(parse_fidelity("digital"), Some(Fidelity::Digital));
+        assert_eq!(parse_fidelity("i"), Some(Fidelity::Ideal));
+        assert_eq!(parse_fidelity("quantized"), Some(Fidelity::Quantized));
+        assert_eq!(parse_fidelity("m"), Some(Fidelity::Measured));
+        assert_eq!(parse_fidelity("analog"), None);
+    }
+
+    #[test]
+    fn virt_flag_defaults_and_validation() {
+        assert_eq!(virt_from(&parse("serve")), Ok(None));
+        assert_eq!(virt_from(&parse("serve --tile 4")), Ok(Some((4, Fidelity::Quantized))));
+        assert_eq!(
+            virt_from(&parse("serve --tile 2 --fidelity digital")),
+            Ok(Some((2, Fidelity::Digital)))
+        );
+        // Bad tile sizes and fidelity typos are usage errors, not panics
+        // (serve/job print the message and exit 2).
+        assert!(virt_from(&parse("serve --tile 3")).is_err());
+        assert!(virt_from(&parse("serve --tile 4 --fidelity measurd")).is_err());
+    }
+
+    #[test]
+    fn bench_rejects_invalid_tile_before_running() {
+        assert_eq!(run(&parse("bench perf --tile 3")), 2);
+        assert_eq!(run(&parse("bench perf --tile nope")), 2);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! The plan cache: compiled tilings keyed by target-matrix content hash
+//! + (tile size, fidelity, fabrication seed), so recompiling the same
+//! weights skips the SVD/decomposition/quantization pipeline entirely.
+//!
+//! The cache holds [`TileRecipe`]s — pure data — not live processors:
+//! a hit re-instantiates tiles (state programming + mesh composition,
+//! microseconds) instead of re-synthesizing them (SVD + Reck nulling per
+//! tile). One process-wide instance lives behind [`Compiler::global`];
+//! workers and the CLI share it, so a `Reprogram` that round-trips back
+//! to previously-served weights pays nothing.
+
+use super::lower::{instantiate, synthesize_tile, PlanSpec, PlanTile, TilePlan, TileRecipe};
+use super::partition::TileGrid;
+use crate::math::cmat::CMat;
+use crate::processor::{Fidelity, ReprogramCost};
+use crate::util::error::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// FNV-1a over the target's shape and exact f64 bit patterns: content
+/// equality (including signed zeros and NaN payloads) keys the cache.
+pub fn content_hash(m: &CMat) -> u64 {
+    const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    let mut eat = |bits: u64| {
+        for byte in bits.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(m.rows() as u64);
+    eat(m.cols() as u64);
+    for z in m.data() {
+        eat(z.re.to_bits());
+        eat(z.im.to_bits());
+    }
+    h
+}
+
+/// Cache key: content hash + exact shape (hash-collision guard) + spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanKey {
+    hash: u64,
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    fidelity: Fidelity,
+    measured_seed: u64,
+}
+
+impl PlanKey {
+    pub fn of(target: &CMat, spec: &PlanSpec) -> PlanKey {
+        PlanKey {
+            hash: content_hash(target),
+            rows: target.rows(),
+            cols: target.cols(),
+            tile: spec.tile,
+            fidelity: spec.fidelity,
+            measured_seed: if spec.fidelity == Fidelity::Measured { spec.measured_seed } else { 0 },
+        }
+    }
+}
+
+/// Bounded recipe store with hit/miss accounting.
+pub struct PlanCache {
+    map: Mutex<BTreeMap<PlanKey, Arc<Vec<TileRecipe>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Entry cap: a compiled 64×64 plan at T=2 is ~1k recipes; 64 plans bound
+/// worst-case residency to a few hundred MB of f64s while covering every
+/// realistic working set (a handful of layers × fidelities).
+const CACHE_CAP: usize = 64;
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache { map: Mutex::new(BTreeMap::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    /// Recipes for `key`, if compiled before. Counts a hit/miss.
+    pub fn lookup(&self, key: &PlanKey) -> Option<Arc<Vec<TileRecipe>>> {
+        let found = self.map.lock().unwrap().get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert freshly compiled recipes, evicting (in key order) past the
+    /// cap.
+    pub fn insert(&self, key: PlanKey, recipes: Arc<Vec<TileRecipe>>) {
+        let mut map = self.map.lock().unwrap();
+        map.insert(key, recipes);
+        while map.len() > CACHE_CAP {
+            map.pop_first();
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+/// The tiling compiler: partition → (cached) lower → instantiate.
+pub struct Compiler {
+    cache: PlanCache,
+}
+
+impl Compiler {
+    /// A compiler with a private cache (tests, isolated pipelines).
+    pub fn new() -> Compiler {
+        Compiler { cache: PlanCache::new() }
+    }
+
+    /// The process-wide shared compiler: every worker and CLI command
+    /// compiling the same weights at the same spec shares one cache.
+    pub fn global() -> &'static Compiler {
+        static GLOBAL: OnceLock<Compiler> = OnceLock::new();
+        GLOBAL.get_or_init(Compiler::new)
+    }
+
+    /// This compiler's cache (accounting/introspection).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Compile `target` onto a fleet of `spec.tile`-size tiles.
+    pub fn compile(&self, target: &CMat, spec: &PlanSpec) -> Result<TilePlan> {
+        let grid = TileGrid::new(target.rows(), target.cols(), spec.tile)?;
+        let key = PlanKey::of(target, spec);
+        let (recipes, cache_hit) = match self.cache.lookup(&key) {
+            Some(r) => (r, true),
+            None => {
+                let fresh: Vec<TileRecipe> =
+                    grid.blocks(target).iter().map(|b| synthesize_tile(b, spec)).collect();
+                let arc = Arc::new(fresh);
+                self.cache.insert(key, arc.clone());
+                (arc, false)
+            }
+        };
+        let (gr, gc) = grid.grid();
+        let mut tiles = Vec::with_capacity(grid.tiles());
+        let mut cost = ReprogramCost::FREE;
+        for r in 0..gr {
+            for c in 0..gc {
+                let idx = grid.index(r, c);
+                let proc = instantiate(&recipes[idx], spec, idx);
+                let block = grid.block(target, r, c);
+                let error = proc.matrix().sub(&block).fro_norm();
+                let tc = proc.reprogram_cost();
+                cost.state_vars += tc.state_vars;
+                cost.recompose_flops += tc.recompose_flops;
+                tiles.push(PlanTile { proc, scale: recipes[idx].scale(), error });
+            }
+        }
+        // Assembly itself is a copy: charge M·N complex writes.
+        cost.recompose_flops += 2 * (target.rows() * target.cols()) as u64;
+        let mut plan = TilePlan {
+            grid,
+            fidelity: spec.fidelity,
+            tiles,
+            recipes,
+            cost,
+            fro_error: 0.0,
+            cache_hit,
+        };
+        plan.fro_error = plan.assemble().sub(target).fro_norm();
+        Ok(plan)
+    }
+}
+
+impl Default for Compiler {
+    fn default() -> Self {
+        Compiler::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::c64::C64;
+    use crate::math::rng::Rng;
+
+    fn rand_real(rows: usize, cols: usize, seed: u64) -> CMat {
+        let mut rng = Rng::new(seed);
+        CMat::from_fn(rows, cols, |_, _| C64::real(rng.normal()))
+    }
+
+    #[test]
+    fn content_hash_sees_every_entry_and_the_shape() {
+        let a = rand_real(3, 4, 1);
+        let mut b = a.clone();
+        assert_eq!(content_hash(&a), content_hash(&b));
+        b[(2, 3)] = C64::new(-b[(2, 3)].re, b[(2, 3)].im);
+        assert_ne!(content_hash(&a), content_hash(&b));
+        // Same data, different shape.
+        let flat: Vec<C64> = a.data().to_vec();
+        let c = CMat::from_rows(4, 3, &flat);
+        assert_ne!(content_hash(&a), content_hash(&c));
+    }
+
+    #[test]
+    fn recompile_hits_the_cache_and_matches() {
+        let compiler = Compiler::new();
+        let target = rand_real(6, 5, 2);
+        let spec = PlanSpec::new(2, Fidelity::Quantized);
+        let first = compiler.compile(&target, &spec).unwrap();
+        assert!(!first.cache_hit);
+        let second = compiler.compile(&target, &spec).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(compiler.cache().hits(), 1);
+        assert_eq!(compiler.cache().misses(), 1);
+        assert_eq!(compiler.cache().len(), 1);
+        // Hit and miss instantiate the identical realization.
+        assert!(first.assemble().sub(&second.assemble()).max_abs() < 1e-15);
+        assert!(Arc::ptr_eq(&first.recipes, &second.recipes));
+        // A different spec is a different plan.
+        let other = compiler.compile(&target, &PlanSpec::new(4, Fidelity::Quantized)).unwrap();
+        assert!(!other.cache_hit);
+        assert_eq!(compiler.cache().len(), 2);
+    }
+
+    #[test]
+    fn fidelity_and_seed_partition_the_key_space() {
+        let target = rand_real(4, 4, 3);
+        let d = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Digital));
+        let q = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Quantized));
+        assert_ne!(d, q);
+        // The fabrication seed only matters at Measured fidelity.
+        let q2 = PlanKey::of(
+            &target,
+            &PlanSpec { tile: 2, fidelity: Fidelity::Quantized, measured_seed: 999 },
+        );
+        assert_eq!(q, q2);
+        let m1 = PlanKey::of(
+            &target,
+            &PlanSpec { tile: 2, fidelity: Fidelity::Measured, measured_seed: 1 },
+        );
+        let m2 = PlanKey::of(
+            &target,
+            &PlanSpec { tile: 2, fidelity: Fidelity::Measured, measured_seed: 2 },
+        );
+        assert_ne!(m1, m2);
+    }
+
+    #[test]
+    fn cache_is_bounded() {
+        let cache = PlanCache::new();
+        let recipes = Arc::new(Vec::new());
+        for k in 0..(CACHE_CAP + 10) {
+            let key = PlanKey {
+                hash: k as u64,
+                rows: 2,
+                cols: 2,
+                tile: 2,
+                fidelity: Fidelity::Digital,
+                measured_seed: 0,
+            };
+            cache.insert(key, recipes.clone());
+        }
+        assert_eq!(cache.len(), CACHE_CAP);
+    }
+}

@@ -1,0 +1,404 @@
+//! Tile lowering: realizing each partitioned `T×T` block on a physical
+//! backend at the requested fidelity.
+//!
+//! The expensive step (SVD + Reck decomposition + Table-I quantization,
+//! eqs. 27–31) runs once per tile and is captured as a [`TileRecipe`] —
+//! pure, cloneable data the plan cache can hold. Instantiating a recipe
+//! into a live [`LinearProcessor`] is cheap (state programming and mesh
+//! composition only), which is what makes repeat compilations of the same
+//! weights effectively free.
+//!
+//! Fidelity map:
+//!
+//! * `Digital`   — the block itself (exact reference; no device model);
+//! * `Ideal`     — continuous-phase [`SvdSynthesis`] meshes (exact to
+//!   numerical precision);
+//! * `Quantized` — both meshes snapped to the 36 Table-I states on ideal
+//!   cells ([`QuantizedMesh`]) around an exact attenuator diagonal;
+//! * `Measured`  — the same discrete states programmed onto per-tile
+//!   virtual-VNA device populations (fabrication imperfections included).
+
+use super::partition::TileGrid;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::mesh::decompose::{synthesize_real, MeshProgram, SvdSynthesis};
+use crate::mesh::propagate::MeshBackend;
+use crate::mesh::quantize::{quantize_program, QuantizedMesh, QuantizedProgram};
+use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
+use std::sync::Arc;
+
+/// What to compile for: tile size, backend fidelity, and the fabrication
+/// seed used when `fidelity == Measured` (each tile gets its own derived
+/// device population).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanSpec {
+    pub tile: usize,
+    pub fidelity: Fidelity,
+    pub measured_seed: u64,
+}
+
+impl PlanSpec {
+    /// A spec with the default fabrication seed.
+    pub fn new(tile: usize, fidelity: Fidelity) -> PlanSpec {
+        PlanSpec { tile, fidelity, measured_seed: 0xF1EE7 }
+    }
+}
+
+/// The cacheable compilation result for one tile: everything needed to
+/// rebuild a live backend without redoing SVD/decomposition/quantization.
+#[derive(Clone, Debug)]
+pub enum TileRecipe {
+    /// Digital reference (also any all-zero padding tile: powered off).
+    Exact(CMat),
+    /// Continuous-phase synthesis (Ideal fidelity).
+    Continuous { u: MeshProgram, diag: Vec<f64>, vh: MeshProgram, scale: f64 },
+    /// Discrete Table-I states + saved input phase layers
+    /// (Quantized/Measured fidelity).
+    Discrete {
+        u: QuantizedProgram,
+        u_phases: Vec<f64>,
+        diag: Vec<f64>,
+        vh: QuantizedProgram,
+        vh_phases: Vec<f64>,
+        scale: f64,
+    },
+}
+
+impl TileRecipe {
+    /// σ_max of the tile's target block (1.0 for exact tiles — the scale
+    /// lives in the matrix itself).
+    pub fn scale(&self) -> f64 {
+        match self {
+            TileRecipe::Exact(_) => 1.0,
+            TileRecipe::Continuous { scale, .. } | TileRecipe::Discrete { scale, .. } => *scale,
+        }
+    }
+
+    /// Number of discrete programmable state variables this tile exposes.
+    pub fn state_vars(&self) -> usize {
+        match self {
+            TileRecipe::Exact(_) | TileRecipe::Continuous { .. } => 0,
+            TileRecipe::Discrete { u, vh, .. } => 2 * (u.states.len() + vh.states.len()),
+        }
+    }
+}
+
+/// Compile one `T×T` target block into a recipe (the expensive path).
+pub fn synthesize_tile(block: &CMat, spec: &PlanSpec) -> TileRecipe {
+    assert!(block.is_square(), "tiles are square (padded by the partitioner)");
+    match spec.fidelity {
+        // A fully-zero block is a powered-off tile at every fidelity: the
+        // SVD of 0 has no meaningful mesh realization, and the hardware
+        // analog is simply not driving the tile.
+        _ if block.max_abs() == 0.0 => TileRecipe::Exact(block.clone()),
+        Fidelity::Digital => TileRecipe::Exact(block.clone()),
+        Fidelity::Ideal => {
+            let syn = synthesize_real(block);
+            TileRecipe::Continuous {
+                u: syn.u_mesh,
+                diag: syn.diag,
+                vh: syn.vh_mesh,
+                scale: syn.scale,
+            }
+        }
+        Fidelity::Quantized | Fidelity::Measured => {
+            let syn = synthesize_real(block);
+            TileRecipe::Discrete {
+                u: quantize_program(&syn.u_mesh),
+                u_phases: syn.u_mesh.input_phases.clone(),
+                diag: syn.diag,
+                vh: quantize_program(&syn.vh_mesh),
+                vh_phases: syn.vh_mesh.input_phases.clone(),
+                scale: syn.scale,
+            }
+        }
+    }
+}
+
+/// Mesh backend for tile `index`'s `which`-th mesh (0 = U, 1 = V^H) under
+/// `spec`: ideal cells except at Measured fidelity, where every mesh is a
+/// distinct fabricated device population derived from the spec seed.
+fn tile_backend(spec: &PlanSpec, index: usize, which: usize) -> MeshBackend {
+    match spec.fidelity {
+        Fidelity::Measured => MeshBackend::Measured {
+            base_seed: spec
+                .measured_seed
+                .wrapping_add((2 * index + which) as u64 * 0x9E3779B9),
+        },
+        _ => MeshBackend::Ideal,
+    }
+}
+
+/// Instantiate a recipe into a live backend (the cheap path). Returns the
+/// processor; its `matrix()` is the fully realized tile transfer matrix
+/// (global scale folded in).
+pub fn instantiate(recipe: &TileRecipe, spec: &PlanSpec, index: usize) -> Box<dyn LinearProcessor> {
+    match recipe {
+        TileRecipe::Exact(m) => Box::new(m.clone()),
+        TileRecipe::Continuous { u, diag, vh, scale } => {
+            Box::new(SvdSynthesis::new(u.clone(), diag.clone(), vh.clone(), *scale))
+        }
+        TileRecipe::Discrete { u, u_phases, diag, vh, vh_phases, scale } => {
+            let um =
+                QuantizedMesh::from_parts(u.clone(), u_phases.clone(), tile_backend(spec, index, 0));
+            let vm = QuantizedMesh::from_parts(
+                vh.clone(),
+                vh_phases.clone(),
+                tile_backend(spec, index, 1),
+            );
+            Box::new(SynthesizedTile::new(um, diag.clone(), vm, *scale, spec.fidelity))
+        }
+    }
+}
+
+/// A discrete-state physical tile: `σ_max · U_q · diag · V^H_q` where both
+/// meshes are Table-I-programmed [`QuantizedMesh`]es and the diagonal is
+/// an exact (continuously tunable) attenuator bank. The single
+/// reprogrammable unit the [`super::exec::VirtualProcessor`] composes its
+/// flat state code from.
+pub struct SynthesizedTile {
+    u: QuantizedMesh,
+    diag: Vec<f64>,
+    vh: QuantizedMesh,
+    scale: f64,
+    fidelity: Fidelity,
+    cached: CMat,
+}
+
+impl SynthesizedTile {
+    pub fn new(
+        u: QuantizedMesh,
+        diag: Vec<f64>,
+        vh: QuantizedMesh,
+        scale: f64,
+        fidelity: Fidelity,
+    ) -> SynthesizedTile {
+        assert_eq!(LinearProcessor::dims(&u), LinearProcessor::dims(&vh));
+        assert_eq!(diag.len(), LinearProcessor::dims(&u).0);
+        let mut t = SynthesizedTile { u, diag, vh, scale, fidelity, cached: CMat::eye(1) };
+        t.recache();
+        t
+    }
+
+    fn recache(&mut self) {
+        let d = CMat::diag(&self.diag.iter().map(|&x| C64::real(x)).collect::<Vec<_>>());
+        self.cached = LinearProcessor::matrix(&self.u)
+            .gemm(&d)
+            .gemm(LinearProcessor::matrix(&self.vh))
+            .scale(C64::real(self.scale));
+    }
+
+    fn u_code_len(&self) -> usize {
+        self.u.state_code().map(|c| c.len()).unwrap_or(0)
+    }
+}
+
+impl LinearProcessor for SynthesizedTile {
+    fn dims(&self) -> (usize, usize) {
+        LinearProcessor::dims(&self.u)
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        self.fidelity
+    }
+
+    fn reprogram_cost(&self) -> ReprogramCost {
+        let u = self.u.reprogram_cost();
+        let v = self.vh.reprogram_cost();
+        let n = self.diag.len() as u64;
+        ReprogramCost {
+            state_vars: u.state_vars + v.state_vars,
+            // Both mesh recompositions plus the three-factor recache
+            // (two n×n complex GEMMs ≈ 8n³ real flops each).
+            recompose_flops: u.recompose_flops + v.recompose_flops + 16 * n * n * n,
+        }
+    }
+
+    fn matrix(&self) -> &CMat {
+        &self.cached
+    }
+
+    fn state_code(&self) -> Option<Vec<usize>> {
+        let mut code = self.u.state_code()?;
+        code.extend(self.vh.state_code()?);
+        Some(code)
+    }
+
+    fn set_state_code(&mut self, code: &[usize]) -> bool {
+        let split = self.u_code_len();
+        if code.len() != split + self.vh.state_code().map(|c| c.len()).unwrap_or(0) {
+            return false;
+        }
+        self.u.set_state_code(&code[..split]);
+        self.vh.set_state_code(&code[split..]);
+        self.recache();
+        true
+    }
+}
+
+/// One instantiated tile of a plan, with its compile-time accounting.
+pub struct PlanTile {
+    /// The live backend; `proc.matrix()` is the realized `T×T` transfer
+    /// matrix with the tile's global scale folded in.
+    pub proc: Box<dyn LinearProcessor>,
+    /// σ_max absorbed digitally (1.0 for exact tiles).
+    pub scale: f64,
+    /// Absolute realization error ‖realized − target_block‖_F.
+    pub error: f64,
+}
+
+/// A compiled plan: the tile fleet realizing one logical weight matrix.
+pub struct TilePlan {
+    pub grid: TileGrid,
+    pub fidelity: Fidelity,
+    /// Instantiated tiles in row-major grid order.
+    pub tiles: Vec<PlanTile>,
+    /// The cacheable form this plan was instantiated from.
+    pub recipes: Arc<Vec<TileRecipe>>,
+    /// Reprogramming-cost rollup over the whole fleet.
+    pub cost: ReprogramCost,
+    /// ‖assembled − target‖_F over the logical `M×N` — the documented
+    /// quantization band: for any batch `X`, the tiled output satisfies
+    /// ‖Y_tiled − Y_dense‖_F ≤ `fro_error` · ‖X‖_F.
+    pub fro_error: f64,
+    /// Whether the recipes came from the plan cache.
+    pub cache_hit: bool,
+}
+
+impl TilePlan {
+    /// The assembled `M×N` effective transfer matrix (tile matrices
+    /// placed on the grid, padding cropped).
+    pub fn assemble(&self) -> CMat {
+        let (m, n) = self.grid.dims();
+        let t = self.grid.tile();
+        let (gr, gc) = self.grid.grid();
+        let mut full = CMat::zeros(gr * t, gc * t);
+        for r in 0..gr {
+            for c in 0..gc {
+                full.set_block(r * t, c * t, self.tiles[self.grid.index(r, c)].proc.matrix());
+            }
+        }
+        full.block(0, 0, m, n)
+    }
+
+    /// Plan summary (the `rfnn compile` report): per-tile scale, state
+    /// count and realization error, plus fleet totals.
+    pub fn summary(&self) -> String {
+        use crate::util::table::{fmt_sig, Table};
+        let (m, n) = self.grid.dims();
+        let (gr, gc) = self.grid.grid();
+        let t = self.grid.tile();
+        let mut out = format!(
+            "{m}×{n} target → {gr}×{gc} grid of {t}×{t} {:?} tiles ({} tiles{})\n",
+            self.fidelity,
+            self.tiles.len(),
+            if self.cache_hit { ", plan cache HIT" } else { "" },
+        );
+        let mut table = Table::new(&["tile", "rows", "cols", "scale", "states", "‖err‖_F"]);
+        for r in 0..gr {
+            for c in 0..gc {
+                let tile = &self.tiles[self.grid.index(r, c)];
+                let (r0, h) = self.grid.row_span(r);
+                let (c0, w) = self.grid.col_span(c);
+                let states = tile.proc.state_code().map(|code| code.len()).unwrap_or(0);
+                table.row(&[
+                    format!("({r},{c})"),
+                    format!("{r0}..{}", r0 + h),
+                    format!("{c0}..{}", c0 + w),
+                    fmt_sig(tile.scale, 3),
+                    states.to_string(),
+                    fmt_sig(tile.error, 3),
+                ]);
+            }
+        }
+        out.push_str(&table.render());
+        out.push_str(&format!(
+            "fleet: {} state vars, ~{} recompose flops, ‖assembled − target‖_F = {}\n",
+            self.cost.state_vars,
+            self.cost.recompose_flops,
+            fmt_sig(self.fro_error, 4),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn rand_block(n: usize, seed: u64) -> CMat {
+        let mut rng = Rng::new(seed);
+        CMat::from_fn(n, n, |_, _| C64::real(rng.normal()))
+    }
+
+    #[test]
+    fn digital_recipe_is_exact() {
+        let b = rand_block(4, 1);
+        let spec = PlanSpec::new(4, Fidelity::Digital);
+        let recipe = synthesize_tile(&b, &spec);
+        let tile = instantiate(&recipe, &spec, 0);
+        assert_eq!(tile.matrix(), &b);
+        assert_eq!(recipe.state_vars(), 0);
+        assert_eq!(tile.reprogram_cost(), ReprogramCost::FREE);
+    }
+
+    #[test]
+    fn zero_block_lowers_to_powered_off_tile_at_any_fidelity() {
+        let z = CMat::zeros(2, 2);
+        for f in [Fidelity::Digital, Fidelity::Ideal, Fidelity::Quantized, Fidelity::Measured] {
+            let spec = PlanSpec::new(2, f);
+            let tile = instantiate(&synthesize_tile(&z, &spec), &spec, 3);
+            assert_eq!(tile.matrix(), &z, "{f:?}");
+            assert!(tile.state_code().is_none());
+        }
+    }
+
+    #[test]
+    fn ideal_recipe_reconstructs_the_block() {
+        let b = rand_block(4, 2);
+        let spec = PlanSpec::new(4, Fidelity::Ideal);
+        let tile = instantiate(&synthesize_tile(&b, &spec), &spec, 0);
+        assert!(tile.matrix().sub(&b).max_abs() < 1e-8);
+        assert!(tile.state_code().is_none());
+    }
+
+    #[test]
+    fn quantized_tile_is_programmable_and_bounded() {
+        let b = rand_block(4, 3);
+        let spec = PlanSpec::new(4, Fidelity::Quantized);
+        let recipe = synthesize_tile(&b, &spec);
+        let mut tile = instantiate(&recipe, &spec, 0);
+        assert_eq!(tile.fidelity(), Fidelity::Quantized);
+        // 4×4 Reck mesh has 6 cells → 12 state vars per mesh, two meshes.
+        let code = tile.state_code().expect("discrete tile has states");
+        assert_eq!(code.len(), 24);
+        assert_eq!(recipe.state_vars(), 24);
+        // Quantization error is finite and the realization is passive up
+        // to the digital σ_max scale.
+        let err = tile.matrix().sub(&b).fro_norm();
+        assert!(err.is_finite());
+        // Reprogramming changes the matrix and round-trips.
+        let before = tile.matrix().clone();
+        let alt: Vec<usize> = code.iter().map(|&v| (v + 1) % 6).collect();
+        assert!(tile.set_state_code(&alt));
+        assert!(tile.matrix().sub(&before).max_abs() > 1e-9);
+        assert!(tile.set_state_code(&code));
+        assert!(tile.matrix().sub(&before).max_abs() < 1e-12);
+        // Wrong code length is refused.
+        assert!(!tile.set_state_code(&code[..5]));
+    }
+
+    #[test]
+    fn measured_tiles_differ_per_index() {
+        let b = rand_block(2, 4);
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        let recipe = synthesize_tile(&b, &spec);
+        let t0 = instantiate(&recipe, &spec, 0);
+        let t1 = instantiate(&recipe, &spec, 1);
+        // Same states, different fabricated devices → different matrices.
+        assert_eq!(t0.state_code(), t1.state_code());
+        assert!(t0.matrix().sub(t1.matrix()).max_abs() > 1e-9);
+        assert_eq!(t0.fidelity(), Fidelity::Measured);
+    }
+}

@@ -1,0 +1,30 @@
+//! The tiling compiler: running arbitrary-size linear layers on fleets of
+//! fixed-size physical RF tiles.
+//!
+//! The paper's scaling story composes one 8×8 processor out of 28 fixed
+//! 2×2 devices; this module generalizes that move one level up — any
+//! logical `M×N` weight matrix lowers onto a grid of `T×T` physical
+//! processors (T ∈ {2, 4, 8}), each synthesized through the existing
+//! SVD → Reck → Table-I pipeline:
+//!
+//! ```text
+//!   partition  M×N target  → ⌈M/T⌉×⌈N/T⌉ zero-padded T×T blocks
+//!   lower      each block  → TileRecipe (SVD synthesis, quantized states,
+//!                            scale; pure cacheable data) → live backend
+//!   cache      recipes keyed by content hash + (T, fidelity, fab seed)
+//!   exec       VirtualProcessor: LinearProcessor over the tile fleet,
+//!              apply_batch = per-tile blocked GEMMs + row accumulation
+//! ```
+//!
+//! See the crate docs' *Virtualization model* section for the layout
+//! diagram, accumulation-order and tolerance-band contracts.
+
+pub mod cache;
+pub mod exec;
+pub mod lower;
+pub mod partition;
+
+pub use cache::{Compiler, PlanCache, PlanKey};
+pub use exec::VirtualProcessor;
+pub use lower::{PlanSpec, SynthesizedTile, TilePlan, TileRecipe};
+pub use partition::{TileGrid, VALID_TILES};

@@ -1,0 +1,176 @@
+//! Block partitioning: carving an arbitrary `M×N` weight matrix into a
+//! grid of fixed-size `T×T` tiles, zero-padded at the ragged edges.
+//!
+//! The physical fleet only ships square processors of a few fixed port
+//! counts ([`VALID_TILES`] — the 2×2 unit cell, the 4×4 board of 6 cells,
+//! the paper's 8×8 board of 28 cells). A logical layer of any shape maps
+//! onto `⌈M/T⌉ × ⌈N/T⌉` of them; rows/columns past the logical edge are
+//! zero rows of the target (realized as powered-off ports), so padding
+//! never changes the logical product.
+
+use crate::math::cmat::CMat;
+use crate::util::error::{Error, Result};
+
+/// Tile sizes a physical processor can be fabricated at.
+pub const VALID_TILES: [usize; 3] = [2, 4, 8];
+
+/// The tiling geometry of one `M×N` target over `T×T` physical tiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    grid_rows: usize,
+    grid_cols: usize,
+}
+
+impl TileGrid {
+    /// Geometry for an `rows × cols` target on `tile`-port processors.
+    /// Rejects empty targets and tile sizes outside [`VALID_TILES`].
+    pub fn new(rows: usize, cols: usize, tile: usize) -> Result<TileGrid> {
+        if rows == 0 || cols == 0 {
+            return Err(Error::msg(format!("cannot tile an empty {rows}×{cols} target")));
+        }
+        if !VALID_TILES.contains(&tile) {
+            return Err(Error::msg(format!(
+                "tile size {tile} is not a physical processor size (have {VALID_TILES:?})"
+            )));
+        }
+        Ok(TileGrid {
+            rows,
+            cols,
+            tile,
+            grid_rows: rows.div_ceil(tile),
+            grid_cols: cols.div_ceil(tile),
+        })
+    }
+
+    /// Logical target shape `(M, N)`.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Physical tile size `T`.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Tile-grid shape `(⌈M/T⌉, ⌈N/T⌉)`.
+    pub fn grid(&self) -> (usize, usize) {
+        (self.grid_rows, self.grid_cols)
+    }
+
+    /// Number of physical tiles in the fleet.
+    pub fn tiles(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Row-major flat index of grid cell `(r, c)`.
+    pub fn index(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.grid_rows && c < self.grid_cols);
+        r * self.grid_cols + c
+    }
+
+    /// `(start_row, live_rows)` of tile row `r`: `live_rows < T` only on
+    /// the ragged bottom edge.
+    pub fn row_span(&self, r: usize) -> (usize, usize) {
+        let start = r * self.tile;
+        (start, self.tile.min(self.rows - start))
+    }
+
+    /// `(start_col, live_cols)` of tile column `c`.
+    pub fn col_span(&self, c: usize) -> (usize, usize) {
+        let start = c * self.tile;
+        (start, self.tile.min(self.cols - start))
+    }
+
+    /// The `T×T` zero-padded block of `m` at grid cell `(r, c)`.
+    pub fn block(&self, m: &CMat, r: usize, c: usize) -> CMat {
+        assert_eq!((m.rows(), m.cols()), (self.rows, self.cols), "target shape mismatch");
+        let (r0, h) = self.row_span(r);
+        let (c0, w) = self.col_span(c);
+        let mut b = CMat::zeros(self.tile, self.tile);
+        b.set_block(0, 0, &m.block(r0, c0, h, w));
+        b
+    }
+
+    /// All `T×T` blocks in row-major grid order.
+    pub fn blocks(&self, m: &CMat) -> Vec<CMat> {
+        let mut out = Vec::with_capacity(self.tiles());
+        for r in 0..self.grid_rows {
+            for c in 0..self.grid_cols {
+                out.push(self.block(m, r, c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::c64::C64;
+
+    fn ramp(rows: usize, cols: usize) -> CMat {
+        CMat::from_fn(rows, cols, |i, j| C64::new(i as f64, j as f64))
+    }
+
+    #[test]
+    fn rejects_bad_tiles_and_empty_targets() {
+        assert!(TileGrid::new(8, 8, 3).is_err());
+        assert!(TileGrid::new(8, 8, 16).is_err());
+        assert!(TileGrid::new(0, 4, 2).is_err());
+        assert!(TileGrid::new(4, 0, 2).is_err());
+        assert!(TileGrid::new(1, 1, 8).is_ok());
+    }
+
+    #[test]
+    fn exact_and_ragged_grid_shapes() {
+        let g = TileGrid::new(8, 8, 4).unwrap();
+        assert_eq!(g.grid(), (2, 2));
+        let g = TileGrid::new(9, 7, 4).unwrap();
+        assert_eq!(g.grid(), (3, 2));
+        assert_eq!(g.row_span(2), (8, 1));
+        assert_eq!(g.col_span(1), (4, 3));
+        let g = TileGrid::new(1, 1, 2).unwrap();
+        assert_eq!(g.grid(), (1, 1));
+        assert_eq!(g.row_span(0), (0, 1));
+    }
+
+    #[test]
+    fn blocks_cover_the_target_and_pad_with_zeros() {
+        let m = ramp(5, 7);
+        let g = TileGrid::new(5, 7, 4).unwrap();
+        let blocks = g.blocks(&m);
+        assert_eq!(blocks.len(), 4);
+        for r in 0..2 {
+            for c in 0..2 {
+                let b = &blocks[g.index(r, c)];
+                assert_eq!((b.rows(), b.cols()), (4, 4));
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let (gi, gj) = (r * 4 + i, c * 4 + j);
+                        let want =
+                            if gi < 5 && gj < 7 { m[(gi, gj)] } else { C64::ZERO };
+                        assert_eq!(b[(i, j)], want, "tile ({r},{c}) entry ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_blocks_reassemble_exactly() {
+        let m = ramp(9, 3);
+        let g = TileGrid::new(9, 3, 8).unwrap();
+        let blocks = g.blocks(&m);
+        let (gr, gc) = g.grid();
+        let mut full = CMat::zeros(gr * 8, gc * 8);
+        for r in 0..gr {
+            for c in 0..gc {
+                full.set_block(r * 8, c * 8, &blocks[g.index(r, c)]);
+            }
+        }
+        assert_eq!(full.block(0, 0, 9, 3), m);
+    }
+}

@@ -94,7 +94,17 @@ impl ModelBundle {
     /// stage executes as ONE [`LinearProcessor::apply_batch`] GEMM over
     /// the whole batch.
     pub fn forward_native(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        self.forward_with(&self.mesh, x, batch)
+    }
+
+    /// [`Self::forward_native`] with the hidden analog stage swapped for
+    /// an arbitrary [`LinearProcessor`] — e.g. a tiling-compiled
+    /// [`crate::compiler::VirtualProcessor`] standing in for the composed
+    /// dense matrix. The processor must be `n×n`-shaped like the bundle's
+    /// exported matrix (which already carries the hidden gain).
+    pub fn forward_with(&self, proc: &dyn LinearProcessor, x: &[f32], batch: usize) -> Vec<f32> {
         let n = self.n;
+        assert_eq!(proc.dims(), (n, n), "hidden processor must be {n}×{n}");
         // Layer 1 (digital): dense1 + leaky-ReLU, one column per sample.
         let mut xb = CMat::zeros(n, batch);
         for r in 0..batch {
@@ -109,7 +119,7 @@ impl ModelBundle {
             }
         }
         // Layer 2 (analog): the whole batch through the processor trait.
-        let z = LinearProcessor::apply_batch(&self.mesh, &xb);
+        let z = proc.apply_batch(&xb);
         // Layer 3 (digital): |·| detection, dense2, softmax.
         let mut out = vec![0.0f32; batch * 10];
         for r in 0..batch {

@@ -44,6 +44,7 @@ use super::batcher::{drain_ready, next_batch, BatchPolicy};
 use super::metrics::{JobKind, Metrics};
 use super::scheduler::{SchedulerPolicy, StateScheduler};
 use super::server::{Backend, MnistExecutor, ModelBundle};
+use crate::compiler::{Compiler, PlanSpec, TileGrid, VirtualProcessor};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::microwave::phase_shifter::N_STATES;
@@ -492,6 +493,20 @@ pub enum Workload {
     /// A bare linear processor. Serves `RawApply` and — when the backend
     /// is state-programmed — `Reprogram`.
     Processor(Box<dyn LinearProcessor>),
+    /// An arbitrary-size `target` lowered onto a fleet of fixed `tile`-
+    /// size physical processors by the tiling compiler
+    /// ([`crate::compiler`]); the worker compiles on startup through the
+    /// shared plan cache and serves a [`VirtualProcessor`]. Serves
+    /// `RawApply` (tiled batched GEMMs) and `Reprogram` (flat per-tile
+    /// state code, programmable fidelities); with `mnist: Some(bundle)`
+    /// it also serves `Infer`, running the 4-layer MNIST forward with the
+    /// tiled fleet as the hidden analog stage — no PJRT involved.
+    Virtual {
+        target: CMat,
+        tile: usize,
+        fidelity: Fidelity,
+        mnist: Option<ModelBundle>,
+    },
 }
 
 impl Workload {
@@ -501,6 +516,13 @@ impl Workload {
             Workload::Mnist { .. } => vec![JobKind::Infer, JobKind::RawApply],
             Workload::Classify2x2(_) => vec![JobKind::Classify],
             Workload::Processor(_) => vec![JobKind::RawApply, JobKind::Reprogram],
+            Workload::Virtual { mnist, .. } => {
+                let mut kinds = vec![JobKind::RawApply, JobKind::Reprogram];
+                if mnist.is_some() {
+                    kinds.insert(0, JobKind::Infer);
+                }
+                kinds
+            }
         }
     }
 
@@ -510,6 +532,7 @@ impl Workload {
             Workload::Mnist { bundle, .. } => LinearProcessor::dims(&bundle.mesh),
             Workload::Classify2x2(_) => (2, 2),
             Workload::Processor(p) => p.dims(),
+            Workload::Virtual { target, .. } => (target.rows(), target.cols()),
         }
     }
 
@@ -521,7 +544,27 @@ impl Workload {
             Workload::Mnist { .. } => Fidelity::Digital,
             Workload::Classify2x2(_) => Fidelity::Ideal,
             Workload::Processor(p) => p.fidelity(),
+            Workload::Virtual { fidelity, .. } => *fidelity,
         }
+    }
+
+    /// Registration-time validation (errors surface at `register`, not
+    /// inside the worker thread).
+    fn validate(&self) -> Result<()> {
+        if let Workload::Virtual { target, tile, mnist, .. } = self {
+            TileGrid::new(target.rows(), target.cols(), *tile)?;
+            if let Some(bundle) = mnist {
+                if (target.rows(), target.cols()) != (bundle.n, bundle.n) {
+                    return Err(Error::msg(format!(
+                        "virtual MNIST hidden stage must be {0}×{0} (target is {1}×{2})",
+                        bundle.n,
+                        target.rows(),
+                        target.cols()
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -594,6 +637,7 @@ impl ProcessorPool {
 
     /// Register a workload under `name` and spawn its worker thread.
     pub fn register(&mut self, name: &str, workload: Workload, cfg: PoolConfig) -> Result<()> {
+        workload.validate()?;
         let rx = self.admit(name, workload.dims(), workload.fidelity(), &workload.kinds(), cfg)?;
         let entry = self.workers.get_mut(name).expect("just inserted");
         let shared = entry.shared.clone();
@@ -762,6 +806,77 @@ fn run_workload(
         Workload::Mnist { bundle, backend } => mnist_worker(rx, bundle, backend, metrics, cfg),
         Workload::Classify2x2(models) => classify_worker(rx, models, metrics, cfg),
         Workload::Processor(p) => processor_worker(rx, p, shared, metrics, cfg),
+        Workload::Virtual { target, tile, fidelity, mnist } => {
+            virtual_worker(rx, target, tile, fidelity, mnist, shared, metrics, cfg)
+        }
+    }
+}
+
+/// The tiled worker: compiles the target through the shared plan cache on
+/// startup (free when these weights were compiled before), then serves
+/// `Infer` (MNIST head/tail around the tiled hidden stage), `RawApply`
+/// and `Reprogram` against the [`VirtualProcessor`].
+fn virtual_worker(
+    rx: Receiver<JobHandle>,
+    target: CMat,
+    tile: usize,
+    fidelity: Fidelity,
+    mnist: Option<ModelBundle>,
+    shared: Arc<WorkerShared>,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    let spec = PlanSpec::new(tile, fidelity);
+    let mut vp = match Compiler::global().compile(&target, &spec) {
+        Ok(plan) => VirtualProcessor::new(plan),
+        Err(e) => {
+            // Unreachable after registration-time validation; drain
+            // defensively so tickets error out with a reason, not a hang.
+            let reason = format!("tiling compilation failed: {e}");
+            while let Ok(h) = rx.recv() {
+                h.respond(JobResult::Rejected { reason: reason.clone() });
+            }
+            return;
+        }
+    };
+    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+        let formed = Instant::now();
+        let (infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
+            handles.into_iter().partition(|h| matches!(h.job, Job::Infer { .. }));
+        if !infers.is_empty() {
+            // kinds() only admits Infer when the MNIST head is present.
+            let bundle = mnist.as_ref().expect("infer admitted without an MNIST head");
+            let n = infers.len();
+            let mut x = vec![0.0f32; n * 784];
+            for (r, h) in infers.iter().enumerate() {
+                if let Job::Infer { image, .. } = &h.job {
+                    let len = image.len().min(784);
+                    x[r * 784..r * 784 + len].copy_from_slice(&image[..len]);
+                }
+            }
+            let t0 = Instant::now();
+            let probs = bundle.forward_with(&vp, &x, n);
+            let exec_us = t0.elapsed().as_micros() as u64;
+            metrics.record_batch(n, n, exec_us);
+            for (r, h) in infers.into_iter().enumerate() {
+                let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
+                metrics.queue.record(queued_us);
+                metrics.latency.record(queued_us + exec_us);
+                h.respond(JobResult::Infer {
+                    probs: probs[r * 10..(r + 1) * 10].to_vec(),
+                    queued_us,
+                    service_us: exec_us,
+                });
+            }
+        }
+        for h in others {
+            if let Job::Reprogram { code, .. } = &h.job {
+                let result = reprogram(&mut vp, &shared, &metrics, code);
+                h.respond(result);
+            } else {
+                serve_raw(&vp, &metrics, h);
+            }
+        }
     }
 }
 
@@ -1175,6 +1290,163 @@ mod tests {
         {
             JobResult::Rejected { reason } => assert!(reason.contains("raw_apply"), "{reason}"),
             other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn virtual_workload_serves_tiled_rawapply_and_reprogram() {
+        use crate::math::rng::Rng;
+        // Ragged 6×5 target on 2×2 tiles: a 3×3 grid with padding on both
+        // edges, at Quantized fidelity (programmable states).
+        let mut rng = Rng::new(0x71A1);
+        let target = CMat::from_fn(6, 5, |_, _| C64::real(rng.normal()));
+        let mut pool = ProcessorPool::new();
+        pool.register(
+            "virt",
+            Workload::Virtual {
+                target: target.clone(),
+                tile: 2,
+                fidelity: Fidelity::Quantized,
+                mnist: None,
+            },
+            quick_batch(),
+        )
+        .unwrap();
+        let svc = ProcessorService::new(pool);
+        let info = svc.pool().info("virt").unwrap();
+        assert_eq!(info.dims, (6, 5));
+        assert_eq!(info.fidelity, Fidelity::Quantized);
+        assert_eq!(info.kinds, vec![JobKind::RawApply, JobKind::Reprogram]);
+        // Without an MNIST head, Infer is refused at the front door.
+        match svc.submit(Job::Infer { processor: "virt".into(), image: vec![0.0; 784] }) {
+            Err(SubmitError::KindNotServed { kind, .. }) => assert_eq!(kind, JobKind::Infer),
+            other => panic!("expected KindNotServed, got {other:?}"),
+        }
+        // The served matrix equals an identically compiled local plan
+        // (compilation is deterministic and shares the global cache).
+        let reference =
+            VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Quantized)).unwrap();
+        let probe = || Job::RawApply { processor: "virt".into(), x: CMat::eye(5) };
+        match svc.submit_wait(probe()).unwrap() {
+            JobResult::RawApply { y } => {
+                assert_eq!((y.rows(), y.cols()), (6, 5));
+                assert!(LinearProcessor::matrix(&reference).sub(&y).max_abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Reprogram through the flat fleet code bumps the version and
+        // changes the served matrix.
+        let code = reference.state_code().expect("quantized fleet has states");
+        let alt: Vec<usize> = code.iter().map(|&v| (v + 2) % 6).collect();
+        match svc
+            .submit_wait(Job::Reprogram { processor: "virt".into(), code: alt.clone() })
+            .unwrap()
+        {
+            JobResult::Reprogrammed { version } => assert_eq!(version, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        match svc.submit_wait(probe()).unwrap() {
+            JobResult::RawApply { y } => {
+                assert!(LinearProcessor::matrix(&reference).sub(&y).max_abs() > 1e-9);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Malformed code lengths are answered, not dropped.
+        match svc
+            .submit_wait(Job::Reprogram { processor: "virt".into(), code: vec![1, 2, 3] })
+            .unwrap()
+        {
+            JobResult::Rejected { reason } => assert!(reason.contains("entries"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Registration-time validation: bad tile sizes and mismatched
+        // MNIST heads never spawn a worker.
+        let mut p2 = ProcessorPool::new();
+        assert!(p2
+            .register(
+                "bad",
+                Workload::Virtual {
+                    target: CMat::eye(4),
+                    tile: 3,
+                    fidelity: Fidelity::Digital,
+                    mnist: None
+                },
+                quick_batch(),
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn mnist_forward_through_virtual_tiled_hidden_stage() {
+        // The acceptance path: the 4-layer MNIST net served through a
+        // pooled Workload::Virtual, its 8×8 hidden stage running on a
+        // fleet of 2×2 tiles — digital fidelity must reproduce the dense
+        // Workload::Mnist worker, quantized fidelity must stay a valid
+        // distribution, all without PJRT.
+        let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+        let bundle = ModelBundle::from_trained(&net).unwrap();
+        let mut pool = ProcessorPool::new();
+        pool.register(
+            "mnist8",
+            Workload::Mnist { bundle: bundle.clone(), backend: Backend::Native },
+            quick_batch(),
+        )
+        .unwrap();
+        pool.register(
+            "virt-digital",
+            Workload::Virtual {
+                target: bundle.mesh.clone(),
+                tile: 4,
+                fidelity: Fidelity::Digital,
+                mnist: Some(bundle.clone()),
+            },
+            quick_batch(),
+        )
+        .unwrap();
+        pool.register(
+            "virt-quantized",
+            Workload::Virtual {
+                target: bundle.mesh.clone(),
+                tile: 2,
+                fidelity: Fidelity::Quantized,
+                mnist: Some(bundle),
+            },
+            quick_batch(),
+        )
+        .unwrap();
+        let svc = ProcessorService::new(pool);
+        for k in 0..6 {
+            let image: Vec<f32> = (0..784).map(|i| ((i * (k + 3)) % 97) as f32 / 97.0).collect();
+            let dense = match svc
+                .submit_wait(Job::Infer { processor: "mnist8".into(), image: image.clone() })
+                .unwrap()
+            {
+                JobResult::Infer { probs, .. } => probs,
+                other => panic!("unexpected {other:?}"),
+            };
+            let tiled = match svc
+                .submit_wait(Job::Infer { processor: "virt-digital".into(), image: image.clone() })
+                .unwrap()
+            {
+                JobResult::Infer { probs, .. } => probs,
+                other => panic!("unexpected {other:?}"),
+            };
+            for (d, t) in dense.iter().zip(&tiled) {
+                assert!((d - t).abs() < 1e-4, "digital tiling must reproduce dense serving");
+            }
+            let r = svc
+                .submit_wait(Job::Infer { processor: "virt-quantized".into(), image })
+                .unwrap();
+            match &r {
+                JobResult::Infer { probs, .. } => {
+                    assert_eq!(probs.len(), 10);
+                    let sum: f32 = probs.iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-4);
+                    assert!(probs.iter().all(|p| p.is_finite() && *p >= 0.0));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            assert!(r.predicted().unwrap() < 10);
         }
     }
 

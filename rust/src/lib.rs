@@ -24,6 +24,11 @@
 //! * [`nn`] — neural-network substrate: tensors, layers (including the
 //!   shared [`nn::layers::AnalogLinear`] analog stage), losses, SGD,
 //!   DSPSA (Algorithm I), and the paper's 2×2 and 4-layer MNIST RFNN models.
+//! * [`compiler`] — the tiling compiler: partitions arbitrary `M×N`
+//!   weight matrices onto fleets of fixed-size physical tiles, lowers
+//!   each block through the SVD/Reck/Table-I pipeline, caches compiled
+//!   plans by content hash, and executes them as a single
+//!   [`compiler::VirtualProcessor`] (see *Virtualization model*).
 //! * [`dataset`] — the four Fig. 12 synthetic 2-D classification sets, an
 //!   MNIST IDX loader and a procedural MNIST-like fallback generator.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO artifacts produced by
@@ -113,9 +118,63 @@
 //! never pollutes batch-occupancy accounting. Multiple processors serve
 //! concurrently from one pool; adding a workload is a `Job` variant plus
 //! a worker arm, not a new service loop.
+//!
+//! ## Virtualization model
+//!
+//! Physical processors come in fixed sizes (T ∈ {2, 4, 8} ports — the
+//! paper's 8×8 board is itself 28 fixed 2×2 devices). The tiling
+//! compiler ([`compiler`]) lets a logical layer of ANY shape run on a
+//! fleet of them. An `M×N` weight matrix partitions into a
+//! `⌈M/T⌉ × ⌈N/T⌉` grid of `T×T` blocks, zero-padded at the ragged
+//! edges (padding = powered-off ports; it never changes the logical
+//! product):
+//!
+//! ```text
+//!          N=7, T=4                      executing  Y = M·X
+//!   ┌───────────┬─────────┐
+//!   │ tile(0,0) │tile(0,1)│pad    per tile-column c: gather X_c (a T×B
+//!   │   4×4     │  4×3    │       zero-padded slab), then every tile
+//!   ├───────────┼─────────┤       (r,c) runs ONE blocked GEMM (the PR-1
+//!  M=5 tile(1,0)│tile(1,1)│pad    kernel) and its T×B partial product
+//!   │   1×4     │  1×3    │       accumulates into output rows
+//!   └───pad─────┴──pad────┘       r·T‥r·T+T; padded rows crop at the end.
+//! ```
+//!
+//! Accumulation order is fixed (tile-columns outer, tile-rows inner), so
+//! tiled execution matches a dense GEMM to floating-point accumulation
+//! order (~1e-12 relative), while the *assembled* matrix
+//! ([`LinearProcessor::matrix`] on a [`compiler::VirtualProcessor`]) is
+//! bit-exact for digital tiles.
+//!
+//! Each block lowers per [`processor::Fidelity`]: `Digital` keeps the
+//! block (exact reference), `Ideal` synthesizes continuous-phase Reck
+//! meshes (eq. 31, exact to numerical precision), `Quantized`/`Measured`
+//! snap both SVD meshes to the 36 Table-I states around an exact
+//! attenuator diagonal, on ideal or virtual-VNA-fabricated cells. The
+//! compile-time report `TilePlan::fro_error = ‖assembled − target‖_F` is
+//! the documented tolerance band: for any batch `X`,
+//! `‖Y_tiled − Y_dense‖_F ≤ fro_error · ‖X‖_F`
+//! (`testing/tiling_props.rs` pins this contract across shapes up to
+//! 64×64, every tile size, and batches {1, 8, 64}).
+//!
+//! Compiled plans are cached ([`compiler::PlanCache`], shared
+//! process-wide via `Compiler::global()`) keyed by target content hash +
+//! (T, fidelity, fabrication seed). The cache stores *recipes* — pure
+//! data (states, phases, singular values) — so a hit skips the
+//! SVD/decomposition/quantization pipeline and only replays the cheap
+//! state programming; repeat compilations of the same weights are
+//! effectively free. Discrete-fidelity fleets expose one flat state code
+//! (tiles in row-major grid order, U-mesh then V^H-mesh codes within a
+//! tile), so DSPSA and `Job::Reprogram` drive a whole fleet exactly like
+//! one mesh. Serving-side, `Workload::Virtual` registers a virtual
+//! processor in the pool (`Infer` with an MNIST head, `RawApply`,
+//! `Reprogram`), and `nn::layers::AnalogLinear::compiled` drops a tiled
+//! fleet into the 4-layer MNIST network — which therefore runs
+//! end-to-end at Ideal/Quantized fidelity with no PJRT.
 
 pub mod bench;
 pub mod cli;
+pub mod compiler;
 pub mod coordinator;
 pub mod dataset;
 pub mod device;

@@ -13,7 +13,9 @@ use crate::device::ideal::t_matrix;
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::math::svd::svd;
+use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
 use std::f64::consts::PI;
+use std::sync::OnceLock;
 
 /// One programmed unit cell: channel pair + continuous phases.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +30,14 @@ pub struct CellSetting {
 }
 
 /// A fully programmed mesh: input phase layer + cells in signal-flow order.
+///
+/// Beyond the ad-hoc `apply`/`matrix` surface, a program is directly a
+/// [`LinearProcessor`] (the composed matrix is cached lazily on first
+/// trait access), so decomposition outputs can be served from a
+/// [`crate::coordinator::service::ProcessorPool`] or used as compiler
+/// tile backends without re-synthesis. Mutate `cells`/`input_phases`
+/// only *before* the first trait-level `matrix()` call — the cache is
+/// write-once.
 #[derive(Clone, Debug)]
 pub struct MeshProgram {
     pub n: usize,
@@ -36,9 +46,17 @@ pub struct MeshProgram {
     pub input_phases: Vec<f64>,
     /// Cells in signal-flow order (matches `MeshTopology::reck(n)`).
     pub cells: Vec<CellSetting>,
+    /// Lazily composed transfer matrix for the [`LinearProcessor`] view.
+    composed: OnceLock<CMat>,
 }
 
 impl MeshProgram {
+    /// Assemble a program from its parts.
+    pub fn new(n: usize, input_phases: Vec<f64>, cells: Vec<CellSetting>) -> MeshProgram {
+        assert_eq!(input_phases.len(), n, "one input phase per channel");
+        MeshProgram { n, input_phases, cells, composed: OnceLock::new() }
+    }
+
     /// Apply the programmed mesh to a vector (ideal cells).
     pub fn apply(&self, x: &[C64]) -> Vec<C64> {
         assert_eq!(x.len(), self.n);
@@ -75,6 +93,33 @@ impl MeshProgram {
     /// The topology this program assumes.
     pub fn topology(&self) -> MeshTopology {
         MeshTopology::reck(self.n)
+    }
+}
+
+impl LinearProcessor for MeshProgram {
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.n)
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        // Continuous phases on ideal analytic cells.
+        Fidelity::Ideal
+    }
+
+    fn reprogram_cost(&self) -> ReprogramCost {
+        // θ/φ per cell are the programmable variables (continuous here;
+        // quantization makes them the discrete Table-I states), and a
+        // rewrite recomposes two N-entry rows per cell like the discrete
+        // mesh (≈14 real flops per entry) plus the input phase layer.
+        let n = self.n as u64;
+        ReprogramCost {
+            state_vars: 2 * self.cells.len(),
+            recompose_flops: self.cells.len() as u64 * 2 * n * 14 + n * 6,
+        }
+    }
+
+    fn matrix(&self) -> &CMat {
+        self.composed.get_or_init(|| MeshProgram::matrix(self))
     }
 }
 
@@ -117,7 +162,7 @@ pub fn decompose_unitary(u: &CMat) -> MeshProgram {
     // input phase layer is D^H = conj(D).
     let input_phases: Vec<f64> = (0..n).map(|i| -v[(i, i)].arg()).collect();
     null_cells.reverse(); // signal-flow order
-    MeshProgram { n, input_phases, cells: null_cells }
+    MeshProgram::new(n, input_phases, null_cells)
 }
 
 /// SVD synthesis of an arbitrary real or complex matrix (eq. 31):
@@ -131,9 +176,19 @@ pub struct SvdSynthesis {
     pub vh_mesh: MeshProgram,
     /// Global scale factor σ_max.
     pub scale: f64,
+    /// Lazily composed `σ_max·U·diag·V^H` for the [`LinearProcessor`] view.
+    composed: OnceLock<CMat>,
 }
 
 impl SvdSynthesis {
+    /// Assemble a synthesis from its parts (the plan-cache rebuild path —
+    /// no SVD or decomposition is redone).
+    pub fn new(u_mesh: MeshProgram, diag: Vec<f64>, vh_mesh: MeshProgram, scale: f64) -> SvdSynthesis {
+        assert_eq!(u_mesh.n, vh_mesh.n, "U and V^H meshes must share the channel count");
+        assert_eq!(diag.len(), u_mesh.n, "one singular value per channel");
+        SvdSynthesis { u_mesh, diag, vh_mesh, scale, composed: OnceLock::new() }
+    }
+
     /// Apply `M·x` through the synthesized stack (ideal cells).
     pub fn apply(&self, x: &[C64]) -> Vec<C64> {
         let mut y = self.vh_mesh.apply(x);
@@ -158,17 +213,43 @@ impl SvdSynthesis {
     }
 }
 
+impl LinearProcessor for SvdSynthesis {
+    fn dims(&self) -> (usize, usize) {
+        (self.u_mesh.n, self.vh_mesh.n)
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        Fidelity::Ideal
+    }
+
+    fn reprogram_cost(&self) -> ReprogramCost {
+        // Both meshes plus the attenuator diagonal, then the three-factor
+        // recomposition (two n×n complex matmuls ≈ 8n³ real flops each).
+        let u = LinearProcessor::reprogram_cost(&self.u_mesh);
+        let v = LinearProcessor::reprogram_cost(&self.vh_mesh);
+        let n = self.diag.len() as u64;
+        ReprogramCost {
+            state_vars: u.state_vars + v.state_vars + self.diag.len(),
+            recompose_flops: u.recompose_flops + v.recompose_flops + 16 * n * n * n,
+        }
+    }
+
+    fn matrix(&self) -> &CMat {
+        self.composed.get_or_init(|| SvdSynthesis::matrix(self))
+    }
+}
+
 /// Synthesize an arbitrary matrix via SVD (eq. 31).
 pub fn synthesize_real(m: &CMat) -> SvdSynthesis {
     assert!(m.is_square(), "synthesis needs a square matrix (pad rectangular targets)");
     let f = svd(m);
     let scale = f.s.first().copied().unwrap_or(1.0).max(1e-300);
-    SvdSynthesis {
-        u_mesh: decompose_unitary(&f.u),
-        diag: f.s.iter().map(|&s| s / scale).collect(),
-        vh_mesh: decompose_unitary(&f.vh),
+    SvdSynthesis::new(
+        decompose_unitary(&f.u),
+        f.s.iter().map(|&s| s / scale).collect(),
+        decompose_unitary(&f.vh),
         scale,
-    }
+    )
 }
 
 #[cfg(test)]
@@ -265,6 +346,52 @@ mod tests {
                 assert!((*a - *b).abs() < 1e-8);
             }
         }
+    }
+
+    #[test]
+    fn mesh_program_is_a_linear_processor() {
+        use crate::processor::{Fidelity, LinearProcessor};
+        let mut rng = Rng::new(41);
+        let u = rand_unitary(&mut rng, 4);
+        let prog = decompose_unitary(&u);
+        let p: &dyn LinearProcessor = &prog;
+        assert_eq!(p.dims(), (4, 4));
+        assert_eq!(p.fidelity(), Fidelity::Ideal);
+        assert_eq!(p.reprogram_cost().state_vars, 2 * prog.cells.len());
+        // Trait-cached composition equals the inherent composition, and the
+        // batched trait execution equals the stage-wise apply.
+        assert!(LinearProcessor::matrix(&prog).sub(&prog.matrix()).max_abs() < 1e-15);
+        let x = CMat::from_fn(4, 3, |i, j| C64::new(0.3 * i as f64 - j as f64, 0.1 * j as f64));
+        let y = p.apply_batch(&x);
+        for j in 0..3 {
+            let want = prog.apply(&x.col(j));
+            for i in 0..4 {
+                assert!((y[(i, j)] - want[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_synthesis_is_a_linear_processor() {
+        use crate::processor::{Fidelity, LinearProcessor};
+        let mut rng = Rng::new(42);
+        let m = CMat::from_fn(5, 5, |_, _| C64::real(rng.normal()));
+        let syn = synthesize_real(&m);
+        let p: &dyn LinearProcessor = &syn;
+        assert_eq!(p.dims(), (5, 5));
+        assert_eq!(p.fidelity(), Fidelity::Ideal);
+        assert!(p.reprogram_cost().state_vars >= 2 * syn.u_mesh.cells.len());
+        assert!(LinearProcessor::matrix(&syn).sub(&m).max_abs() < 1e-8);
+        // Rebuild from parts (the plan-cache hit path) — same realization.
+        let rebuilt = SvdSynthesis::new(
+            syn.u_mesh.clone(),
+            syn.diag.clone(),
+            syn.vh_mesh.clone(),
+            syn.scale,
+        );
+        assert!(
+            LinearProcessor::matrix(&rebuilt).sub(LinearProcessor::matrix(&syn)).max_abs() < 1e-12
+        );
     }
 
     #[test]

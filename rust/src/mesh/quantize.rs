@@ -140,6 +140,23 @@ impl QuantizedMesh {
         q
     }
 
+    /// Rebuild a programmed mesh from saved parts — the compiler's
+    /// plan-cache hit path: no decomposition or quantization is redone,
+    /// only the (cheap) state programming and composition.
+    pub fn from_parts(
+        report: QuantizedProgram,
+        input_phases: Vec<f64>,
+        backend: MeshBackend,
+    ) -> QuantizedMesh {
+        let n = input_phases.len();
+        let mut mesh = DiscreteMesh::new(n, backend);
+        assert_eq!(report.states.len(), mesh.cells(), "one state per Reck cell");
+        mesh.set_states(&report.states);
+        let mut q = QuantizedMesh { mesh, input_phases, cached: CMat::eye(n), report };
+        q.recache();
+        q
+    }
+
     fn recache(&mut self) {
         let phases: Vec<C64> = self.input_phases.iter().map(|&p| C64::cis(p)).collect();
         self.cached = LinearProcessor::matrix(&self.mesh).gemm(&CMat::diag(&phases));
@@ -149,6 +166,11 @@ impl QuantizedMesh {
     /// includes the input phase layer).
     pub fn mesh(&self) -> &DiscreteMesh {
         &self.mesh
+    }
+
+    /// The program's input phase layer `D^H` (one phase per channel).
+    pub fn input_phases(&self) -> &[f64] {
+        &self.input_phases
     }
 }
 
@@ -263,6 +285,26 @@ mod tests {
         let err = LinearProcessor::matrix(&q).sub(&u).fro_norm() / u.fro_norm();
         assert!(err < 1.2, "relative error {err}");
         assert!(q.report.mean_error() > 0.0);
+    }
+
+    #[test]
+    fn from_parts_rebuilds_identically() {
+        use crate::math::rng::Rng;
+        use crate::math::svd::svd;
+        let mut rng = Rng::new(0x9C);
+        let a = CMat::from_fn(4, 4, |_, _| C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        let u = f.u.matmul(&f.vh);
+        let q = QuantizedMesh::program_unitary(&u, MeshBackend::Ideal);
+        let rebuilt = QuantizedMesh::from_parts(
+            q.report.clone(),
+            q.input_phases().to_vec(),
+            MeshBackend::Ideal,
+        );
+        assert!(
+            LinearProcessor::matrix(&rebuilt).sub(LinearProcessor::matrix(&q)).max_abs() < 1e-15
+        );
+        assert_eq!(rebuilt.state_code(), q.state_code());
     }
 
     #[test]

@@ -80,6 +80,22 @@ impl AnalogLinear {
         AnalogLinear { proc }
     }
 
+    /// Compile `target` onto a fleet of fixed `tile`-size physical RF
+    /// tiles ([`crate::compiler`]) and wrap the resulting
+    /// [`crate::compiler::VirtualProcessor`]: the layer's dims no longer
+    /// need to match any single physical processor. Compilation goes
+    /// through the shared plan cache, so rebuilding a layer with weights
+    /// seen before is cheap.
+    pub fn compiled(
+        target: &CMat,
+        tile: usize,
+        fidelity: crate::processor::Fidelity,
+    ) -> crate::util::error::Result<Self> {
+        use crate::compiler::{PlanSpec, VirtualProcessor};
+        let vp = VirtualProcessor::compile(target, &PlanSpec::new(tile, fidelity))?;
+        Ok(AnalogLinear::new(Box::new(vp)))
+    }
+
     /// The backend.
     pub fn processor(&self) -> &dyn LinearProcessor {
         self.proc.as_ref()
@@ -323,6 +339,35 @@ mod tests {
             }
         }
         assert!(layer.mesh().is_none()); // digital reference has no mesh
+    }
+
+    #[test]
+    fn compiled_layer_matches_dense_layer_at_digital_fidelity() {
+        use crate::processor::Fidelity;
+        let mut rng = Rng::new(11);
+        let m = CMat::from_fn(8, 8, |_, _| C64::real(rng.normal() * 0.4));
+        let dense = AnalogLinear::new(Box::new(m.clone()));
+        let tiled = AnalogLinear::compiled(&m, 4, Fidelity::Digital).unwrap();
+        assert_eq!(tiled.processor().dims(), (8, 8));
+        let a = Mat::from_fn(6, 8, |_, _| rng.normal());
+        let hd = dense.forward_abs(&a, 1.3);
+        let ht = tiled.forward_abs(&a, 1.3);
+        assert!(hd.zip(&ht, |x, y| (x - y).abs()).max_abs() < 1e-10);
+        // Backward flows through the assembled virtual matrix too.
+        let (zre, zim) = tiled.forward(&a, 1.3);
+        let dh = Mat::from_fn(6, 8, |_, _| rng.normal());
+        let da_t = tiled.backward(&zre, &zim, &dh, 1.3);
+        let (zre_d, zim_d) = dense.forward(&a, 1.3);
+        let da_d = dense.backward(&zre_d, &zim_d, &dh, 1.3);
+        assert!(da_d.zip(&da_t, |x, y| (x - y).abs()).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn compiled_layer_rejects_invalid_tile_sizes() {
+        use crate::processor::Fidelity;
+        let m = CMat::eye(4);
+        assert!(AnalogLinear::compiled(&m, 3, Fidelity::Digital).is_err());
+        assert!(AnalogLinear::compiled(&m, 8, Fidelity::Digital).is_ok());
     }
 
     #[test]

@@ -108,6 +108,26 @@ impl MnistRfnn {
         Self::analog_with(n_hidden, AnalogLinear::new(Box::new(mesh)), hidden_gain, seed)
     }
 
+    /// Build the analog network over a tiling-compiled hidden stage: a
+    /// He-scaled random real `n_hidden × n_hidden` target lowered onto a
+    /// fleet of `tile`-size physical processors ([`crate::compiler`]).
+    /// At `Fidelity::Quantized`/`Measured` the fleet exposes its discrete
+    /// states, so DSPSA trains the tiles exactly as it trains one mesh.
+    pub fn analog_virtual(
+        n_hidden: usize,
+        tile: usize,
+        fidelity: crate::processor::Fidelity,
+        seed: u64,
+    ) -> crate::util::error::Result<Self> {
+        use crate::math::c64::C64;
+        use crate::math::cmat::CMat;
+        let mut rng = Rng::new(seed ^ 0x71E5);
+        let sd = (2.0 / n_hidden as f64).sqrt();
+        let target = CMat::from_fn(n_hidden, n_hidden, |_, _| C64::real(rng.normal() * sd));
+        let layer = AnalogLinear::compiled(&target, tile, fidelity)?;
+        Ok(Self::analog_with(n_hidden, layer, 1.0, seed))
+    }
+
     /// Build the analog network over an arbitrary processor backend.
     pub fn analog_with(n_hidden: usize, layer: AnalogLinear, hidden_gain: f64, seed: u64) -> Self {
         let (out, inp) = layer.processor().dims();
@@ -354,6 +374,33 @@ mod tests {
         net.train(&tr, &tiny_cfg(25));
         let acc = net.test_accuracy(&tr);
         assert!(acc > 0.7, "digital-reference analog train acc {acc}");
+    }
+
+    #[test]
+    fn analog_virtual_digital_backend_trains() {
+        // The tiling-compiled hidden stage drops into the same training
+        // path: 8×8 logical layer on a 2×2-tile fleet, digital fidelity.
+        use crate::processor::Fidelity;
+        let tr = synthetic(200, 7);
+        let mut net = MnistRfnn::analog_virtual(8, 2, Fidelity::Digital, 23).unwrap();
+        net.train(&tr, &tiny_cfg(25));
+        let acc = net.test_accuracy(&tr);
+        assert!(acc > 0.65, "virtual-digital train acc {acc}");
+    }
+
+    #[test]
+    fn analog_virtual_quantized_forward_runs_and_exposes_states() {
+        use crate::processor::Fidelity;
+        let tr = synthetic(20, 8);
+        let net = MnistRfnn::analog_virtual(8, 4, Fidelity::Quantized, 24).unwrap();
+        // The fleet exposes its discrete states: 2 meshes × 6 cells × 2
+        // shifters per 4×4 tile, 4 tiles.
+        let code = net.analog_layer().unwrap().processor().state_code().unwrap();
+        assert_eq!(code.len(), 4 * 2 * 6 * 2);
+        let x = gather(&tr, &(0..20).collect::<Vec<_>>());
+        let logits = net.infer(&x);
+        assert_eq!((logits.rows(), logits.cols()), (20, 10));
+        assert!(logits.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

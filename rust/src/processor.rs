@@ -21,7 +21,11 @@ use crate::math::cmat::CMat;
 use crate::mesh::propagate::DiscreteMesh;
 
 /// How faithfully a backend models the physical processor.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Totally ordered/hashable so fidelity can key compiled-plan caches
+/// (`crate::compiler::cache`); the derived order is declaration order and
+/// carries no "better than" meaning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Fidelity {
     /// Exact digital arithmetic (reference backend; not a device model).
     Digital,

@@ -8,12 +8,18 @@
 //! contract (`apply_batch` ≡ column-by-column `matvec` ≡ naive reference);
 //! `wire_props` holds the serving wire-protocol contract (every
 //! `Job`/`JobResult` variant round-trips under `WIRE_VERSION`, unknown
-//! versions are refused).
+//! versions are refused); `tiling_props` holds the tiling compiler's
+//! execution contract (digital virtualization ≡ dense GEMM; quantized
+//! virtualization inside the compile-reported error band; ragged shapes
+//! and every physical tile size).
 
 pub mod prop;
 
 #[cfg(test)]
 mod processor_props;
+
+#[cfg(test)]
+mod tiling_props;
 
 #[cfg(test)]
 mod wire_props;

@@ -1,0 +1,175 @@
+//! Property tests for the tiling compiler's execution contract
+//! (`crate::compiler`), per the PR-3 spec:
+//!
+//! * **Digital tiles are exact.** For random `M×N` targets up to 64×64,
+//!   every tile size T ∈ {2, 4, 8} and batch sizes {1, 8, 64} — including
+//!   ragged (non-multiple-of-T) shapes — `VirtualProcessor::apply_batch`
+//!   matches the dense `CMat::gemm` up to floating-point accumulation
+//!   order (the tiled path sums partial products per tile-column, so
+//!   agreement is ~1e-12-relative, not bit-exact; the assembled matrix
+//!   itself IS bit-exact for digital tiles).
+//! * **Quantized tiles stay inside the documented tolerance band.** The
+//!   compile-time report `plan.fro_error = ‖assembled − target‖_F` bounds
+//!   every output: ‖Y_tiled − Y_dense‖_F ≤ fro_error · ‖X‖_F (since
+//!   ‖ΔM·X‖_F ≤ ‖ΔM‖_F·‖X‖₂ ≤ ‖ΔM‖_F·‖X‖_F), and execution against the
+//!   *assembled* matrix is exact to fp precision.
+
+use super::prop::{forall_seeded, Gen};
+use crate::compiler::{PlanSpec, VirtualProcessor};
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::processor::{Fidelity, LinearProcessor};
+
+const TILES: [usize; 3] = [2, 4, 8];
+const BATCHES: [usize; 3] = [1, 8, 64];
+
+fn gen_target(g: &mut Gen, rows: usize, cols: usize, complex: bool) -> CMat {
+    CMat::from_fn(rows, cols, |_, _| {
+        if complex {
+            C64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0))
+        } else {
+            C64::real(g.f64_in(-2.0, 2.0))
+        }
+    })
+}
+
+fn gen_batch(g: &mut Gen, rows: usize, batch: usize) -> CMat {
+    CMat::from_fn(rows, batch, |_, _| C64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0)))
+}
+
+/// The shared per-case contract: shape bookkeeping, execution-vs-assembled
+/// exactness, and the fro_error output band against the dense target.
+fn check_virtual(vp: &VirtualProcessor, target: &CMat, x: &CMat) {
+    let (m, _) = vp.dims();
+    let b = x.cols();
+    let y = vp.apply_batch(x);
+    assert_eq!((y.rows(), y.cols()), (m, b));
+    assert!(y.is_finite());
+    // Tiled execution ≡ one dense GEMM against the assembled matrix (fp
+    // accumulation order only).
+    let via_assembled = LinearProcessor::matrix(vp).gemm(x);
+    let scale = 1.0 + via_assembled.max_abs();
+    assert!(
+        y.sub(&via_assembled).max_abs() < 1e-10 * scale,
+        "tiled execution diverged from the assembled matrix"
+    );
+    // Documented band vs the dense logical target.
+    let want = target.gemm(x);
+    let err = y.sub(&want).fro_norm();
+    let band = vp.plan().fro_error * x.fro_norm() + 1e-9 * scale;
+    assert!(err <= band, "‖Y_tiled − Y_dense‖_F = {err} exceeds the band {band}");
+    // Batch-1 path is the same tiled kernel.
+    if b > 0 {
+        let col = vp.apply(&x.col(0));
+        for i in 0..m {
+            assert!((col[i] - y[(i, 0)]).abs() < 1e-12 * scale);
+        }
+    }
+}
+
+#[test]
+fn digital_virtual_matches_dense_gemm_exactly() {
+    forall_seeded("virtual digital ≡ dense gemm", 0x711E, 25, |g| {
+        let m = g.usize_in(1, 64);
+        let n = g.usize_in(1, 64);
+        let t = *g.choose(&TILES);
+        let b = *g.choose(&BATCHES);
+        let target = gen_target(g, m, n, true);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Digital))
+            .expect("digital compile");
+        // Digital tiles: the assembled matrix is a bit-exact copy and the
+        // compile-time error report is exactly zero.
+        assert_eq!(LinearProcessor::matrix(&vp), &target, "m={m} n={n} t={t}");
+        assert_eq!(vp.plan().fro_error, 0.0);
+        let x = gen_batch(g, n, b);
+        check_virtual(&vp, &target, &x);
+        // And directly against the dense kernel, at fp-order tolerance.
+        let y = vp.apply_batch(&x);
+        let want = target.gemm(&x);
+        let scale = 1.0 + want.max_abs();
+        assert!(y.sub(&want).max_abs() < 1e-10 * scale, "m={m} n={n} t={t} b={b}");
+    });
+}
+
+#[test]
+fn quantized_virtual_within_documented_band() {
+    // Fewer cases: each quantized tile pays an SVD + two Reck
+    // decompositions + two mesh compositions.
+    forall_seeded("virtual quantized ≤ band", 0x7120, 8, |g| {
+        let m = g.usize_in(2, 24);
+        let n = g.usize_in(2, 24);
+        let t = *g.choose(&TILES);
+        let b = *g.choose(&BATCHES);
+        let target = gen_target(g, m, n, false);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Quantized))
+            .expect("quantized compile");
+        assert_eq!(vp.fidelity(), Fidelity::Quantized);
+        assert!(vp.plan().fro_error.is_finite());
+        check_virtual(&vp, &target, &gen_batch(g, n, b));
+    });
+}
+
+#[test]
+fn quantized_virtual_full_64x64_on_8x8_tiles() {
+    // The headline shape: a 64×64 layer on an 8×8 fleet (64 boards of 28
+    // cells — the paper's processor as the unit of deployment).
+    forall_seeded("virtual quantized 64×64", 0x7121, 1, |g| {
+        let target = gen_target(g, 64, 64, false);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(8, Fidelity::Quantized))
+            .expect("quantized compile");
+        assert_eq!(vp.plan().grid.grid(), (8, 8));
+        // 64 tiles × 2 meshes × 28 cells × 2 shifters.
+        assert_eq!(vp.state_code().unwrap().len(), 64 * 2 * 28 * 2);
+        check_virtual(&vp, &target, &gen_batch(g, 64, 8));
+    });
+}
+
+#[test]
+fn ragged_shapes_cover_every_tile_size() {
+    // Deterministic ragged/degenerate shapes through every tile size and
+    // batch size — the edge-padding contract must hold exactly.
+    forall_seeded("virtual ragged digital", 0x7122, 6, |g| {
+        for &(m, n) in &[(1usize, 1usize), (3, 5), (9, 7), (1, 64), (64, 1), (17, 23)] {
+            let t = *g.choose(&TILES);
+            let b = *g.choose(&BATCHES);
+            let target = gen_target(g, m, n, true);
+            let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Digital))
+                .expect("digital compile");
+            assert_eq!(LinearProcessor::matrix(&vp), &target, "({m},{n}) t={t}");
+            check_virtual(&vp, &target, &gen_batch(g, n, b));
+        }
+    });
+}
+
+#[test]
+fn ideal_virtual_reconstructs_to_numerical_precision() {
+    forall_seeded("virtual ideal ≈ dense", 0x7123, 6, |g| {
+        let m = g.usize_in(2, 16);
+        let n = g.usize_in(2, 16);
+        let t = *g.choose(&TILES);
+        let target = gen_target(g, m, n, false);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Ideal))
+            .expect("ideal compile");
+        // Continuous-phase synthesis is exact to numerical precision.
+        assert!(
+            vp.plan().fro_error < 1e-6 * (1.0 + target.fro_norm()),
+            "ideal fro_error {}",
+            vp.plan().fro_error
+        );
+        check_virtual(&vp, &target, &gen_batch(g, n, *g.choose(&BATCHES)));
+    });
+}
+
+#[test]
+fn measured_virtual_executes_within_its_own_report() {
+    // Measured tiles carry fabrication imperfections; the band contract
+    // must still hold because it is defined against the *realized* fleet.
+    forall_seeded("virtual measured ≤ band", 0x7124, 3, |g| {
+        let n = g.usize_in(2, 6);
+        let target = gen_target(g, n, n, false);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Measured))
+            .expect("measured compile");
+        assert_eq!(vp.fidelity(), Fidelity::Measured);
+        check_virtual(&vp, &target, &gen_batch(g, n, 8));
+    });
+}

@@ -304,6 +304,97 @@ fn processor_service_front_door_serves_all_job_kinds_concurrently() {
     assert_eq!(m.job(JobKind::Reprogram).rejected.load(Ordering::Relaxed), 0);
 }
 
+/// Compiler → pool: the full 4-layer MNIST forward served end-to-end
+/// through a `Workload::Virtual` processor whose hidden 8×8 stage runs as
+/// a fleet of quantized 2×2 tiles — the PR-3 acceptance path (no PJRT).
+#[test]
+fn mnist_end_to_end_through_quantized_tile_fleet() {
+    use rfnn::compiler::{PlanSpec, VirtualProcessor};
+    use rfnn::coordinator::batcher::BatchPolicy;
+    use rfnn::coordinator::server::ModelBundle;
+    use rfnn::coordinator::service::{
+        Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload,
+    };
+    use rfnn::processor::{Fidelity, LinearProcessor};
+    use std::time::Duration;
+
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 5);
+    let bundle = ModelBundle::from_trained(&net).unwrap();
+    let target = bundle.mesh.clone();
+    let cfg = PoolConfig {
+        batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        ..PoolConfig::default()
+    };
+    let mut pool = ProcessorPool::new();
+    pool.register(
+        "virt8",
+        Workload::Virtual {
+            target: target.clone(),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+            mnist: Some(bundle.clone()),
+        },
+        cfg,
+    )
+    .unwrap();
+    let svc = ProcessorService::new(pool);
+
+    // The quantized fleet the worker serves, rebuilt locally: what the
+    // pooled forward must be running underneath.
+    let fleet =
+        VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Quantized)).unwrap();
+
+    // Infer: the digital head/tail around the tiled analog stage produces
+    // exactly forward_with(fleet) — checked against a local forward.
+    let ds = synthetic(8, 31);
+    for k in 0..ds.len() {
+        let image: Vec<f32> = ds.images[k].iter().map(|&v| v as f32).collect();
+        let probs = match svc
+            .submit(Job::Infer { processor: "virt8".into(), image: image.clone() })
+            .expect("admitted")
+            .wait()
+            .expect("answered")
+        {
+            JobResult::Infer { probs, .. } => probs,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(probs.len(), 10);
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "probs must stay a distribution, got Σ={sum}");
+        let want = bundle.forward_with(&fleet, &image, 1);
+        for (p, w) in probs.iter().zip(&want) {
+            assert!((p - w).abs() < 1e-5, "pooled serving must match the local tiled forward");
+        }
+    }
+
+    // RawApply probes the tiled hidden stage itself.
+    match svc
+        .submit(Job::RawApply { processor: "virt8".into(), x: CMat::eye(8) })
+        .expect("admitted")
+        .wait()
+        .expect("answered")
+    {
+        JobResult::RawApply { y } => {
+            assert!(LinearProcessor::matrix(&fleet).sub(&y).max_abs() < 1e-12);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Reprogram the whole fleet through one flat state code.
+    let code: Vec<usize> =
+        fleet.state_code().unwrap().iter().map(|&v| (v + 1) % 6).collect();
+    match svc
+        .submit(Job::Reprogram { processor: "virt8".into(), code })
+        .expect("admitted")
+        .wait()
+        .expect("answered")
+    {
+        JobResult::Reprogrammed { version } => assert_eq!(version, 2),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(svc.pool().info("virt8").unwrap().version, 2);
+}
+
 /// Property: any mesh program applied to the standard basis reconstructs
 /// exactly the columns of its matrix.
 #[test]
