@@ -71,8 +71,10 @@ fn ones_orientation(grid: &[Vec<f64>]) -> f64 {
 
 /// Table I: the six switched-line phase differences at 2 GHz.
 pub fn table1() -> String {
-    let ps = SwitchedLinePhaseShifter::design(Substrate::ro4360g2(), Z0, F0, SwitchModel::jsw6_33dr());
-    let mut t = Table::new(&["path", "paper (deg)", "designed (deg)", "IL at f0 (dB)", "length (mm)"]);
+    let ps =
+        SwitchedLinePhaseShifter::design(Substrate::ro4360g2(), Z0, F0, SwitchModel::jsw6_33dr());
+    let mut t =
+        Table::new(&["path", "paper (deg)", "designed (deg)", "IL at f0 (dB)", "length (mm)"]);
     for n in 0..N_STATES {
         t.row(&[
             format!("L{}", n + 1),
@@ -91,7 +93,15 @@ pub fn table1() -> String {
 /// P4 = 1.5 mW (in phase).
 pub fn fig3() -> String {
     let (p1, p4) = (0.5e-3, 1.5e-3);
-    let mut t = Table::new(&["θ (deg)", "|V21| (V)", "|V31| (V)", "|V24| (V)", "|V34| (V)", "P2 (mW)", "P3 (mW)"]);
+    let mut t = Table::new(&[
+        "θ (deg)",
+        "|V21| (V)",
+        "|V31| (V)",
+        "|V24| (V)",
+        "|V34| (V)",
+        "P2 (mW)",
+        "P3 (mW)",
+    ]);
     let mut max_p2: (f64, f64) = (0.0, 0.0);
     for k in 0..=24 {
         let theta = k as f64 * 2.0 * std::f64::consts::PI / 24.0;

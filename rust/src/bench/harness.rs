@@ -66,7 +66,8 @@ pub fn bench(name: &str, samples: usize, mut f: impl FnMut()) -> BenchStats {
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().max(Duration::from_nanos(50));
-    let inner = (Duration::from_millis(1).as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as usize;
+    let inner =
+        (Duration::from_millis(1).as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as usize;
     f();
     let mut samples_ns = Vec::with_capacity(samples);
     for _ in 0..samples {

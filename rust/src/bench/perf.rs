@@ -7,11 +7,13 @@
 use super::harness::{bench, BenchStats};
 use crate::compiler::{PlanSpec, VirtualProcessor};
 use crate::coordinator::batcher::BatchPolicy;
-use crate::processor::{Fidelity, LinearProcessor};
+use crate::coordinator::router::{JobSink, PendingReply, Router};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload, WIRE_VERSION,
 };
+use crate::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
+use crate::device::State;
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::math::rng::Rng;
@@ -19,8 +21,9 @@ use crate::math::svd::svd;
 use crate::mesh::decompose::decompose_unitary;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
 use crate::nn::rfnn_mnist::MnistRfnn;
-use crate::device::State;
+use crate::processor::{Fidelity, LinearProcessor};
 use crate::util::json::Json;
+use std::sync::Arc;
 
 /// Batch sizes for the batched-GEMM vs per-vector comparison (the
 /// coordinator's BatchPolicy coalesces up to 256).
@@ -32,15 +35,20 @@ pub const TILED_NS: [usize; 4] = [8, 16, 32, 64];
 /// Batch sizes for the tiled-vs-dense virtualization sweep.
 pub const TILED_BATCHES: [usize; 2] = [1, 64];
 
+/// In-flight batch sizes for the remote-vs-in-process submit→wait sweep.
+pub const REMOTE_BATCHES: [usize; 3] = [1, 8, 64];
+
 /// Run every perf bench; returns the report. Measures the batched
 /// `apply_batch` path against the per-vector `matvec` loop it replaced
 /// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`), the
 /// end-to-end `submit` → `Ticket::wait` serving path through the unified
 /// front door (written to `BENCH_pr2.json`; override with
-/// `RFNN_BENCH2_OUT`), and the tiled `VirtualProcessor` execution against
+/// `RFNN_BENCH2_OUT`), the tiled `VirtualProcessor` execution against
 /// the dense GEMM it virtualizes (written to `BENCH_pr3.json`; override
-/// with `RFNN_BENCH3_OUT`) so the perf trajectory tracks each PR. `tile`
-/// is the physical tile size of the virtualization sweep.
+/// with `RFNN_BENCH3_OUT`), and the remote (loopback framed TCP) vs
+/// in-process submit→wait latency sweep (written to `BENCH_pr4.json`;
+/// override with `RFNN_BENCH4_OUT`) so the perf trajectory tracks each
+/// PR. `tile` is the physical tile size of the virtualization sweep.
 pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -104,7 +112,127 @@ pub fn all(quick: bool, tile: usize) -> String {
         Ok(()) => out.push_str(&format!("wrote {path3}\n")),
         Err(e) => out.push_str(&format!("could not write {path3}: {e}\n")),
     }
+    out.push_str("§Perf — remote (loopback TCP) vs in-process submit→wait (MNIST infer)\n");
+    let remote_rows = run_remote_benches(samples);
+    for (b, local, remote) in &remote_rows {
+        out.push_str(&local.line());
+        out.push('\n');
+        out.push_str(&remote.line());
+        out.push('\n');
+        let overhead = remote.median_ns() as f64 / local.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  batch {b:>3}: remote submit→wait costs {overhead:.2}× the in-process path\n"
+        ));
+    }
+    let json4 = remote_report_json(&remote_rows, samples, quick);
+    let path4 =
+        std::env::var("RFNN_BENCH4_OUT").unwrap_or_else(|_| "BENCH_pr4.json".to_string());
+    match std::fs::write(&path4, json4.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path4}\n")),
+        Err(e) => out.push_str(&format!("could not write {path4}: {e}\n")),
+    }
     out
+}
+
+/// One submit→wait sample of `b` in-flight infer jobs against anything
+/// that implements [`JobSink`] — the in-process service and the TCP
+/// client run the EXACT same code, so the recorded delta is pure
+/// transport overhead (framing + JSON + socket + demux).
+fn sink_sweep<S: JobSink>(
+    sink: &S,
+    label: &str,
+    samples: usize,
+    img: &[f32],
+    b: usize,
+) -> BenchStats {
+    bench(label, samples, || {
+        let pending: Vec<_> = (0..b)
+            .map(|_| {
+                sink.dispatch(Job::Infer { processor: "mnist8".into(), image: img.to_vec() })
+                    .expect("queue depth exceeds max in-flight")
+            })
+            .collect();
+        for p in pending {
+            match p.wait_reply().expect("served") {
+                JobResult::Infer { .. } => {}
+                other => panic!("unexpected result {other:?}"),
+            }
+        }
+    })
+}
+
+/// Time the full remote path — `RemoteClient::submit` → framed TCP over
+/// loopback → router → worker → framed reply → `RemoteTicket::wait` —
+/// against the in-process `ProcessorService` path serving the identical
+/// workload, at each batch size in [`REMOTE_BATCHES`]. Returns
+/// `(batch, local, remote)` stats.
+pub fn run_remote_benches(samples: usize) -> Vec<(usize, BenchStats, BenchStats)> {
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+    let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
+    let pool = ProcessorPool::new();
+    pool.register(
+        "mnist8",
+        Workload::Mnist { bundle, backend: Backend::Native },
+        PoolConfig {
+            queue_depth: 4096,
+            batch: BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("register mnist8");
+    let svc = Arc::new(ProcessorService::new(pool));
+    let router = Arc::new(Router::new(svc.clone()));
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router, TcpConfig::default())
+        .expect("bind ephemeral loopback port");
+    let client =
+        RemoteClient::connect(&fe.local_addr().to_string()).expect("connect to loopback");
+    let img: Vec<f32> = (0..784).map(|i| (i % 61) as f32 / 61.0).collect();
+    let mut out = Vec::new();
+    for &b in &REMOTE_BATCHES {
+        let local =
+            sink_sweep(svc.as_ref(), &format!("local  submit→wait b{b}"), samples, &img, b);
+        let remote =
+            sink_sweep(&client, &format!("remote submit→wait b{b}"), samples, &img, b);
+        out.push((b, local, remote));
+    }
+    drop(client);
+    fe.shutdown();
+    out
+}
+
+/// The PR-4 perf-trajectory record for [`run_remote_benches`] results.
+pub fn remote_report_json(
+    rows: &[(usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(b, local, remote)| {
+            let ln = local.median_ns() as f64 / *b as f64;
+            let rn = remote.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("batch", Json::Num(*b as f64)),
+                ("local_ns_per_request", Json::Num(ln)),
+                ("remote_ns_per_request", Json::Num(rn)),
+                ("remote_requests_per_sec", Json::Num(1e9 / rn.max(1.0))),
+                ("remote_over_local", Json::Num(rn / ln.max(1.0))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pr", Json::Num(4.0)),
+        ("bench", Json::Str("remote_tcp_vs_local_submit_wait".into())),
+        ("wire_version", Json::Num(WIRE_VERSION as f64)),
+        ("transport", Json::Str("tcp_loopback_framed".into())),
+        ("n", Json::Num(8.0)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time the tiled [`VirtualProcessor::apply_batch`] (digital tiles — pure
@@ -178,7 +306,7 @@ pub fn tiled_report_json(
 pub fn run_service_benches(samples: usize) -> Vec<(usize, BenchStats)> {
     let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
     let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
-    let mut pool = ProcessorPool::new();
+    let pool = ProcessorPool::new();
     pool.register(
         "mnist8",
         Workload::Mnist { bundle, backend: Backend::Native },
@@ -277,7 +405,11 @@ pub fn run_batched_benches(samples: usize) -> Vec<(usize, BenchStats, BenchStats
 /// The PR-1 perf-trajectory record for [`run_batched_benches`] results.
 /// `samples`/`quick` are provenance — quick `cargo test` runs also write
 /// the file, and the record says which mode produced it.
-pub fn batched_report_json(rows: &[(usize, BenchStats, BenchStats)], samples: usize, quick: bool) -> Json {
+pub fn batched_report_json(
+    rows: &[(usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+) -> Json {
     let results: Vec<Json> = rows
         .iter()
         .map(|(b, batched, pervec)| {
@@ -410,7 +542,9 @@ pub fn run_benches(samples: usize) -> Vec<BenchStats> {
             let dense_refs: Vec<&[f32]> = dense_args.iter().map(|a| a.as_slice()).collect();
             let _ = engine.execute_f32("rfnn_mnist_fwd_b256", &dense_refs);
             results.push(bench("pjrt fwd b256 dense (serving)", samples, || {
-                std::hint::black_box(engine.execute_f32("rfnn_mnist_fwd_b256", &dense_refs).unwrap());
+                std::hint::black_box(
+                    engine.execute_f32("rfnn_mnist_fwd_b256", &dense_refs).unwrap(),
+                );
             }));
         }
     }
@@ -427,6 +561,29 @@ mod tests {
         assert!(report.contains("apply_batch"), "{report}");
         assert!(report.contains("service submit"), "{report}");
         assert!(report.contains("tiled t8"), "{report}");
+        assert!(report.contains("remote submit"), "{report}");
+    }
+
+    #[test]
+    fn remote_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_remote_benches(2);
+        assert_eq!(rows.len(), super::REMOTE_BATCHES.len());
+        let json = super::remote_report_json(&rows, 2, true);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(
+            parsed.get("wire_version").and_then(|v| v.as_f64()),
+            Some(super::WIRE_VERSION as f64)
+        );
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), super::REMOTE_BATCHES.len());
+        for r in results {
+            let ratio = r.get("remote_over_local").and_then(|v| v.as_f64()).expect("ratio");
+            assert!(ratio.is_finite() && ratio > 0.0, "remote_over_local {ratio}");
+            let rps =
+                r.get("remote_requests_per_sec").and_then(|v| v.as_f64()).expect("rps");
+            assert!(rps.is_finite() && rps > 0.0, "remote_requests_per_sec {rps}");
+        }
     }
 
     #[test]

@@ -68,9 +68,33 @@ pub fn table2() -> String {
     let mut t = Table::new(&[
         "platform", "length (cm)", "cell (λ)", "complexity", "fJ/FLOP", "cost", "delay",
     ]);
-    t.row(&["GPU (V100) [52]".into(), "30".into(), "—".into(), "O(N²)".into(), "3.1e4".into(), "medium".into(), "µs".into()]);
-    t.row(&["FPGA (Arria 10) [52]".into(), "24".into(), "—".into(), "O(N²)".into(), "6.2e4".into(), "medium".into(), "µs".into()]);
-    t.row(&["ONN [32]".into(), "0.76".into(), "64".into(), "O(N)".into(), "0.25 (passive)".into(), "high".into(), "ps".into()]);
+    t.row(&[
+        "GPU (V100) [52]".into(),
+        "30".into(),
+        "—".into(),
+        "O(N²)".into(),
+        "3.1e4".into(),
+        "medium".into(),
+        "µs".into(),
+    ]);
+    t.row(&[
+        "FPGA (Arria 10) [52]".into(),
+        "24".into(),
+        "—".into(),
+        "O(N²)".into(),
+        "6.2e4".into(),
+        "medium".into(),
+        "µs".into(),
+    ]);
+    t.row(&[
+        "ONN [32]".into(),
+        "0.76".into(),
+        "64".into(),
+        "O(N)".into(),
+        "0.25 (passive)".into(),
+        "high".into(),
+        "ps".into(),
+    ]);
     t.row(&[
         "RFNN (this work)".into(),
         format!("{:.0}", est.length_m * 100.0),

@@ -6,18 +6,21 @@
 //!
 //! `serve` and `job` speak the unified serving API: both register a
 //! default [`ProcessorPool`] (an MNIST bundle, a 2×2 classifier bank, and
-//! a bare 8×8 mesh) and drive it through
-//! [`ProcessorService::submit`]; `job` additionally decodes its input
-//! from — and prints its result in — the versioned wire form
-//! ([`crate::coordinator::service::WIRE_VERSION`]).
+//! a bare 8×8 mesh). `job` dispatches its wire document through the
+//! shared [`Router`] path (`submit_wire` → `wait`), `serve --listen`
+//! puts the same router behind the framed-TCP front end, and `client`
+//! drives a remote server with [`RemoteClient`] — all speaking the
+//! versioned wire form ([`crate::coordinator::service::WIRE_VERSION`]).
 
 use crate::bench;
 use crate::compiler::{Compiler, PlanSpec, VALID_TILES};
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::router::{Admin, Endpoint, Router, RouterError};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, SubmitError, Workload,
 };
+use crate::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
 use crate::dataset::mnist::load_or_synthesize;
 use crate::device::State;
 use crate::math::c64::C64;
@@ -97,8 +100,10 @@ USAGE:
     rfnn bench <experiment|all> [--quick] [--tile T]   regenerate a paper table/figure
     rfnn train-mnist [--train N] [--test N] [--epochs N] [--lr F] [--digital]
     rfnn serve [--requests N] [--batch N] [--depth N] [--native]
-               [--tile T] [--fidelity F]
+               [--tile T] [--fidelity F] [--listen ADDR]
     rfnn job '<wire json>' [--native] [--tile T]       submit one wire-encoded job
+    rfnn client [--connect ADDR] job '<wire json>'     submit to a remote server
+    rfnn client [--connect ADDR] admin <health|metrics|processors|shutdown>
     rfnn compile [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
     rfnn info                                          platform + artifact status
 
@@ -107,7 +112,14 @@ mixed infer/classify/raw-apply/reprogram traffic; --depth bounds each
 admission queue (overload sheds, it does not block). --tile T additionally
 registers 'virt8' — the MNIST hidden stage virtualized over a fleet of
 T×T tiles by the tiling compiler — and routes part of the infer traffic
-through it.
+through it. With --listen ADDR (e.g. 127.0.0.1:7878; port 0 picks an
+ephemeral port) serve instead starts the framed-TCP front end over the
+same pool and runs until `rfnn client admin shutdown`.
+
+client speaks the same versioned wire protocol over TCP: `client job`
+submits one job document (a v3 compile job can register a new virtual
+processor on the running server), `client admin` drives the control
+plane. Default --connect is 127.0.0.1:7878.
 
 compile lowers a seeded random M×N weight matrix onto T×T physical tiles
 and prints the plan (tile grid, per-tile states/scales/errors, reprogram
@@ -122,6 +134,7 @@ pub fn run(args: &Args) -> i32 {
         Some("train-mnist") => cmd_train(args),
         Some("serve") => cmd_serve(args),
         Some("job") => cmd_job(args),
+        Some("client") => cmd_client(args),
         Some("compile") => cmd_compile(args),
         Some("info") => cmd_info(),
         _ => {
@@ -131,15 +144,10 @@ pub fn run(args: &Args) -> i32 {
     }
 }
 
-/// Parse a fidelity name (`--fidelity digital|ideal|quantized|measured`).
+/// Parse a fidelity name (`--fidelity digital|ideal|quantized|measured`) —
+/// the shared wire/CLI spelling.
 fn parse_fidelity(name: &str) -> Option<Fidelity> {
-    match name {
-        "digital" | "d" => Some(Fidelity::Digital),
-        "ideal" | "i" => Some(Fidelity::Ideal),
-        "quantized" | "q" => Some(Fidelity::Quantized),
-        "measured" | "m" => Some(Fidelity::Measured),
-        _ => None,
-    }
+    Fidelity::from_name(name)
 }
 
 fn cmd_bench(args: &Args) -> i32 {
@@ -220,10 +228,14 @@ pub fn demo_classifiers() -> Vec<Rfnn2x2> {
 /// Some((tile, fidelity))` a fourth processor `virt8` serves the same
 /// MNIST model with its hidden stage virtualized over a `tile`-size
 /// fleet by the tiling compiler.
-fn default_pool(backend: Backend, cfg: PoolConfig, virt: Option<(usize, Fidelity)>) -> ProcessorPool {
+fn default_pool(
+    backend: Backend,
+    cfg: PoolConfig,
+    virt: Option<(usize, Fidelity)>,
+) -> ProcessorPool {
     let net = MnistRfnn::analog(8, MeshBackend::Measured { base_seed: 7 }, 7);
     let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
-    let mut pool = ProcessorPool::new();
+    let pool = ProcessorPool::new();
     if let Some((tile, fidelity)) = virt {
         pool.register(
             "virt8",
@@ -240,8 +252,8 @@ fn default_pool(backend: Backend, cfg: PoolConfig, virt: Option<(usize, Fidelity
     pool.register("mnist8", Workload::Mnist { bundle, backend }, cfg).expect("register mnist8");
     pool.register("cls2x2", Workload::Classify2x2(demo_classifiers()), cfg)
         .expect("register cls2x2");
-    pool.register("mesh8", Workload::Processor(Box::new(DiscreteMesh::new(8, MeshBackend::Ideal))), cfg)
-        .expect("register mesh8");
+    let mesh8 = Workload::Processor(Box::new(DiscreteMesh::new(8, MeshBackend::Ideal)));
+    pool.register("mesh8", mesh8, cfg).expect("register mesh8");
     pool
 }
 
@@ -290,6 +302,24 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     let svc = Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg, virt)));
+    if let Some(addr) = args.get("listen") {
+        // Network mode: the same pool behind the framed-TCP front end,
+        // running until an `Admin::Shutdown` arrives over the wire.
+        let router = Arc::new(Router::new(svc.clone()));
+        let fe = match TcpFrontEnd::bind(addr, router, TcpConfig::default()) {
+            Ok(fe) => fe,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        println!("listening on {}", fe.local_addr());
+        fe.wait_shutdown();
+        fe.shutdown();
+        println!("{}", svc.metrics().report());
+        println!("{}", svc.metrics().snapshot().to_string_pretty());
+        return 0;
+    }
     let (ds, _) = load_or_synthesize(requests.min(512), 1, 99);
     let images: Arc<Vec<Vec<f32>>> = Arc::new(
         ds.images.iter().map(|img| img.iter().map(|&v| v as f32).collect()).collect(),
@@ -415,13 +445,12 @@ fn cmd_job(args: &Args) -> i32 {
         eprintln!("usage: rfnn job '<wire json>' (see WIRE_VERSION in coordinator::service)");
         return 2;
     };
-    let job = match Job::decode(text) {
-        Ok(j) => j,
-        Err(e) => {
-            eprintln!("bad job: {e}");
-            return 2;
-        }
-    };
+    // Fail fast on malformed documents BEFORE building the pool (usage
+    // error, exit 2); the router re-decodes on the shared dispatch path.
+    if let Err(e) = Job::decode(text) {
+        eprintln!("bad job: {e}");
+        return 2;
+    }
     let virt = match virt_from(args) {
         Ok(v) => v,
         Err(e) => {
@@ -430,8 +459,11 @@ fn cmd_job(args: &Args) -> i32 {
         }
     };
     let svc = ProcessorService::new(default_pool(backend_from(args), PoolConfig::default(), virt));
-    match svc.submit(job) {
-        Ok(ticket) => match ticket.wait() {
+    let router = Router::new(Arc::new(svc));
+    // The same Endpoint path the TCP front end drives: decode + validate
+    // + submit under one roof, wait by ticket id.
+    match router.submit_wire(text.as_bytes()) {
+        Ok(id) => match router.wait(id) {
             Ok(result) => {
                 println!("{}", result.to_json().to_string_pretty());
                 i32::from(matches!(result, JobResult::Rejected { .. }))
@@ -441,10 +473,88 @@ fn cmd_job(args: &Args) -> i32 {
                 1
             }
         },
+        Err(e @ RouterError::Decode(_)) => {
+            eprintln!("bad job: {e}");
+            2
+        }
         Err(e) => {
             eprintln!("rejected: {e}");
             1
         }
+    }
+}
+
+/// `rfnn client`: drive a remote `rfnn serve --listen` host over the
+/// framed-TCP transport — jobs and the admin plane, one wire schema.
+fn cmd_client(args: &Args) -> i32 {
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7878");
+    let usage = || {
+        eprintln!(
+            "usage: rfnn client [--connect ADDR] job '<wire json>'\n\
+             \x20      rfnn client [--connect ADDR] admin <health|metrics|processors|shutdown>"
+        );
+        2
+    };
+    let Some(verb) = args.positional.first() else {
+        return usage();
+    };
+    match verb.as_str() {
+        "job" => {
+            let Some(text) = args.positional.get(1) else {
+                return usage();
+            };
+            let job = match Job::decode(text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("bad job: {e}");
+                    return 2;
+                }
+            };
+            let client = match RemoteClient::connect(addr) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match client.submit_wait(job) {
+                Ok(result) => {
+                    println!("{}", result.to_json().to_string_pretty());
+                    i32::from(matches!(result, JobResult::Rejected { .. }))
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        "admin" => {
+            let admin = match args.positional.get(1).map(String::as_str) {
+                Some("health") => Admin::Health,
+                Some("metrics") | Some("metrics_snapshot") => Admin::MetricsSnapshot,
+                Some("processors") | Some("list_processors") => Admin::ListProcessors,
+                Some("shutdown") => Admin::Shutdown,
+                _ => return usage(),
+            };
+            let client = match RemoteClient::connect(addr) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match client.admin(admin) {
+                Ok(reply) => {
+                    println!("{}", reply.to_json().to_string_pretty());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        _ => usage(),
     }
 }
 
@@ -587,6 +697,18 @@ mod tests {
     fn bench_rejects_invalid_tile_before_running() {
         assert_eq!(run(&parse("bench perf --tile 3")), 2);
         assert_eq!(run(&parse("bench perf --tile nope")), 2);
+    }
+
+    #[test]
+    fn client_command_usage_and_decode_errors() {
+        // Usage errors and malformed job documents exit 2 without ever
+        // opening a socket.
+        assert_eq!(run(&parse("client")), 2);
+        assert_eq!(run(&parse("client bogus")), 2);
+        assert_eq!(run(&parse("client job")), 2);
+        assert_eq!(run(&parse("client admin")), 2);
+        assert_eq!(run(&parse("client admin nope")), 2);
+        assert_eq!(run(&parse("client job {not-json}")), 2);
     }
 
     #[test]

@@ -77,7 +77,11 @@ const CACHE_CAP: usize = 64;
 
 impl PlanCache {
     pub fn new() -> PlanCache {
-        PlanCache { map: Mutex::new(BTreeMap::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+        PlanCache {
+            map: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
     /// Recipes for `key`, if compiled before. Counts a hit/miss.

@@ -25,6 +25,22 @@ pub struct VirtualProcessor {
     cached: CMat,
 }
 
+/// Minimum estimated per-tile work (complex MACs: `tiles · T² · B`) before
+/// `apply_batch` fans tiles out across threads; below it the spawn cost
+/// dominates and the sequential path wins.
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Minimum fleet size worth parallelizing.
+const PAR_MIN_TILES: usize = 4;
+
+/// `available_parallelism`, resolved once per process (it is a syscall —
+/// too expensive for the per-dispatch hot path).
+fn worker_count() -> usize {
+    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *WORKERS
+        .get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
 impl VirtualProcessor {
     /// Wrap a compiled plan.
     pub fn new(plan: TilePlan) -> VirtualProcessor {
@@ -44,6 +60,95 @@ impl VirtualProcessor {
 
     fn recache(&mut self) {
         self.cached = self.plan.assemble();
+    }
+
+    /// The zero-padded `T×B` input slab for tile-column `c`.
+    fn column_slab(&self, x: &CMat, c: usize) -> CMat {
+        let t = self.plan.grid.tile();
+        let b = x.cols();
+        let (c0, w) = self.plan.grid.col_span(c);
+        let mut xc = CMat::zeros(t, b);
+        for i in 0..w {
+            for j in 0..b {
+                xc[(i, j)] = x[(c0 + i, j)];
+            }
+        }
+        xc
+    }
+
+    /// Accumulate per-tile partial products into the cropped output, in
+    /// the FIXED order (tile-columns outer, tile-rows inner) both
+    /// execution paths share — so sequential and parallel results are
+    /// bit-identical, and both match the documented accumulation-order
+    /// contract.
+    fn accumulate(&self, products: &[CMat], b: usize) -> CMat {
+        let (m, _) = self.dims();
+        let t = self.plan.grid.tile();
+        let (gr, gc) = self.plan.grid.grid();
+        let mut ypad = CMat::zeros(gr * t, b);
+        for c in 0..gc {
+            for r in 0..gr {
+                let y = &products[self.plan.grid.index(r, c)];
+                for i in 0..t {
+                    for j in 0..b {
+                        ypad[(r * t + i, j)] += y[(i, j)];
+                    }
+                }
+            }
+        }
+        ypad.block(0, 0, m, b)
+    }
+
+    /// Sequential tiled execution (the fallback below the parallelism
+    /// threshold, and the reference the parallel path must match
+    /// bit-for-bit).
+    pub fn apply_batch_seq(&self, x: &CMat) -> CMat {
+        let (m, n) = self.dims();
+        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
+        let b = x.cols();
+        let (gr, gc) = self.plan.grid.grid();
+        let mut products: Vec<CMat> = Vec::with_capacity(gr * gc);
+        products.resize_with(gr * gc, || CMat::zeros(0, 0));
+        for c in 0..gc {
+            // Gather the padded T×B input slab for this tile-column once.
+            let xc = self.column_slab(x, c);
+            for r in 0..gr {
+                let idx = self.plan.grid.index(r, c);
+                products[idx] = self.plan.tiles[idx].proc.apply_batch(&xc);
+            }
+        }
+        self.accumulate(&products, b)
+    }
+
+    /// Parallel tiled execution: tiles are independent GEMMs, so they
+    /// fan out across a `std::thread::scope` pool of `workers` threads
+    /// (each input slab is gathered once per tile-column and shared).
+    /// Accumulation stays sequential in the fixed order, so the result is
+    /// bit-identical to [`Self::apply_batch_seq`].
+    pub fn apply_batch_par(&self, x: &CMat, workers: usize) -> CMat {
+        let (m, n) = self.dims();
+        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
+        let b = x.cols();
+        let (_, gc) = self.plan.grid.grid();
+        let slabs: Vec<CMat> = (0..gc).map(|c| self.column_slab(x, c)).collect();
+        let tiles = &self.plan.tiles;
+        let total = tiles.len();
+        let workers = workers.clamp(1, total);
+        let chunk = total.div_ceil(workers);
+        let mut products: Vec<CMat> = Vec::with_capacity(total);
+        products.resize_with(total, || CMat::zeros(0, 0));
+        std::thread::scope(|s| {
+            for (w, slot_chunk) in products.chunks_mut(chunk).enumerate() {
+                let slabs = &slabs;
+                s.spawn(move || {
+                    for (k, slot) in slot_chunk.iter_mut().enumerate() {
+                        let idx = w * chunk + k;
+                        *slot = tiles[idx].proc.apply_batch(&slabs[idx % gc]);
+                    }
+                });
+            }
+        });
+        self.accumulate(&products, b)
     }
 }
 
@@ -66,32 +171,23 @@ impl LinearProcessor for VirtualProcessor {
 
     /// Tiled execution: per tile-column input slab, per-tile blocked
     /// GEMMs, accumulation across tile-rows, crop of the padded rows.
+    /// Tiles in the fleet are independent GEMMs, so large dispatches fan
+    /// out across a scoped worker pool sized by `available_parallelism`
+    /// (small ones fall back to the sequential path; both orders are
+    /// bit-identical — see [`Self::apply_batch_par`]).
     fn apply_batch(&self, x: &CMat) -> CMat {
-        let (m, n) = self.dims();
-        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
-        let b = x.cols();
         let t = self.plan.grid.tile();
-        let (gr, gc) = self.plan.grid.grid();
-        let mut ypad = CMat::zeros(gr * t, b);
-        for c in 0..gc {
-            let (c0, w) = self.plan.grid.col_span(c);
-            // Gather the padded T×B input slab for this tile-column once.
-            let mut xc = CMat::zeros(t, b);
-            for i in 0..w {
-                for j in 0..b {
-                    xc[(i, j)] = x[(c0 + i, j)];
-                }
-            }
-            for r in 0..gr {
-                let y = self.plan.tiles[self.plan.grid.index(r, c)].proc.apply_batch(&xc);
-                for i in 0..t {
-                    for j in 0..b {
-                        ypad[(r * t + i, j)] += y[(i, j)];
-                    }
-                }
+        let tiles = self.plan.tiles.len();
+        let work = tiles * t * t * x.cols().max(1);
+        // Cheap threshold checks first; the (cached) worker count is only
+        // consulted once a dispatch is actually big enough to fan out.
+        if tiles >= PAR_MIN_TILES && work >= PAR_MIN_WORK {
+            let workers = worker_count();
+            if workers > 1 {
+                return self.apply_batch_par(x, workers);
             }
         }
-        ypad.block(0, 0, m, b)
+        self.apply_batch_seq(x)
     }
 
     /// Batch-1 case, routed through the same tiled path.

@@ -139,8 +139,11 @@ pub fn instantiate(recipe: &TileRecipe, spec: &PlanSpec, index: usize) -> Box<dy
             Box::new(SvdSynthesis::new(u.clone(), diag.clone(), vh.clone(), *scale))
         }
         TileRecipe::Discrete { u, u_phases, diag, vh, vh_phases, scale } => {
-            let um =
-                QuantizedMesh::from_parts(u.clone(), u_phases.clone(), tile_backend(spec, index, 0));
+            let um = QuantizedMesh::from_parts(
+                u.clone(),
+                u_phases.clone(),
+                tile_backend(spec, index, 0),
+            );
             let vm = QuantizedMesh::from_parts(
                 vh.clone(),
                 vh_phases.clone(),

@@ -23,12 +23,21 @@ pub enum JobKind {
     RawApply,
     /// Write new θ/φ state codes into a programmable processor.
     Reprogram,
+    /// Compile an arbitrary-size weight matrix onto a tile fleet and
+    /// register the resulting virtual processor into the live pool
+    /// (control-plane; WIRE_VERSION ≥ 3).
+    Compile,
 }
 
 impl JobKind {
     /// Every kind, in wire order.
-    pub const ALL: [JobKind; 4] =
-        [JobKind::Infer, JobKind::Classify, JobKind::RawApply, JobKind::Reprogram];
+    pub const ALL: [JobKind; 5] = [
+        JobKind::Infer,
+        JobKind::Classify,
+        JobKind::RawApply,
+        JobKind::Reprogram,
+        JobKind::Compile,
+    ];
 
     /// Stable wire/snapshot name.
     pub fn name(self) -> &'static str {
@@ -37,7 +46,14 @@ impl JobKind {
             JobKind::Classify => "classify",
             JobKind::RawApply => "raw_apply",
             JobKind::Reprogram => "reprogram",
+            JobKind::Compile => "compile",
         }
+    }
+
+    /// Parse a wire name back to a kind (the admin `ListProcessors` reply
+    /// decodes served-kind lists with this).
+    pub fn from_name(name: &str) -> Option<JobKind> {
+        JobKind::ALL.iter().copied().find(|k| k.name() == name)
     }
 }
 
@@ -127,6 +143,42 @@ impl LatencyHistogram {
     }
 }
 
+/// Counters for one network transport front end (the TCP listener today;
+/// any future framing shares the same five-counter shape). Folded into
+/// [`Metrics::snapshot`] so the admin `MetricsSnapshot` reply is complete.
+#[derive(Default)]
+pub struct TransportCounters {
+    /// Connections admitted by the accept loop.
+    pub connections_accepted: AtomicU64,
+    /// Connections shed at the accept loop (connection limit reached).
+    pub connections_refused: AtomicU64,
+    /// Well-framed payloads read from peers.
+    pub frames_in: AtomicU64,
+    /// Frames written to peers (results, errors, admin replies).
+    pub frames_out: AtomicU64,
+    /// Frames or documents refused by the decode path (bad framing,
+    /// malformed JSON, unsupported wire version, schema violations).
+    pub decode_rejects: AtomicU64,
+}
+
+impl TransportCounters {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "connections_accepted",
+                Json::Num(self.connections_accepted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "connections_refused",
+                Json::Num(self.connections_refused.load(Ordering::Relaxed) as f64),
+            ),
+            ("frames_in", Json::Num(self.frames_in.load(Ordering::Relaxed) as f64)),
+            ("frames_out", Json::Num(self.frames_out.load(Ordering::Relaxed) as f64)),
+            ("decode_rejects", Json::Num(self.decode_rejects.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
 /// Serving metrics for one worker.
 #[derive(Default)]
 pub struct Metrics {
@@ -146,7 +198,10 @@ pub struct Metrics {
     /// Device re-bias operations (2×2 scheduler and `Reprogram` jobs).
     pub reconfigs: AtomicU64,
     /// Per-job-kind admission counters, indexed by [`JobKind`] wire order.
-    pub jobs: [KindCounters; 4],
+    pub jobs: [KindCounters; 5],
+    /// Network-transport counters (shared by every front end over this
+    /// pool; zero when serving is purely in-process).
+    pub transport: TransportCounters,
 }
 
 impl Metrics {
@@ -264,6 +319,7 @@ impl Metrics {
             ("padded", Json::Num(self.padded.load(Ordering::Relaxed) as f64)),
             ("reconfigs", Json::Num(self.reconfigs.load(Ordering::Relaxed) as f64)),
             ("jobs", Json::Obj(jobs)),
+            ("transport", self.transport.snapshot()),
             ("latency", hist(&self.latency)),
             ("queue", hist(&self.queue)),
             ("exec", hist(&self.exec)),
@@ -339,6 +395,30 @@ mod tests {
     #[test]
     fn job_kind_names_are_wire_stable() {
         let names: Vec<&str> = JobKind::ALL.iter().map(|k| k.name()).collect();
-        assert_eq!(names, vec!["infer", "classify", "raw_apply", "reprogram"]);
+        assert_eq!(names, vec!["infer", "classify", "raw_apply", "reprogram", "compile"]);
+    }
+
+    #[test]
+    fn transport_counters_fold_into_snapshot() {
+        let m = Metrics::default();
+        m.transport.connections_accepted.fetch_add(3, Ordering::Relaxed);
+        m.transport.connections_refused.fetch_add(1, Ordering::Relaxed);
+        m.transport.frames_in.fetch_add(9, Ordering::Relaxed);
+        m.transport.frames_out.fetch_add(8, Ordering::Relaxed);
+        m.transport.decode_rejects.fetch_add(2, Ordering::Relaxed);
+        let snap = m.snapshot();
+        let back = crate::util::json::parse(&snap.to_string_pretty()).expect("valid JSON");
+        let t = back.get("transport").expect("transport section");
+        assert_eq!(t.get("connections_accepted").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(t.get("connections_refused").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(t.get("frames_in").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(t.get("frames_out").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(t.get("decode_rejects").and_then(Json::as_f64), Some(2.0));
+        // The compile kind is accounted like every other job kind.
+        m.record_submitted(JobKind::Compile);
+        m.record_served(JobKind::Compile);
+        let back = crate::util::json::parse(&m.snapshot().to_string_pretty()).unwrap();
+        let c = back.get("jobs").and_then(|j| j.get("compile")).expect("jobs.compile");
+        assert_eq!(c.get("served").and_then(Json::as_f64), Some(1.0));
     }
 }

@@ -1,32 +1,46 @@
 //! The serving layer (Layer-3): one typed front door over a pool of named
-//! processors — rust owns the event loop and the request path end to end.
+//! processors — rust owns the event loop and the request path end to end,
+//! in-process or across the network.
 //!
-//! Since PR 2 every workload enters through [`service`]:
+//! Every workload enters through [`service`] (PR 2), and every *wire*
+//! caller enters through [`router`] (PR 4):
 //!
 //! * [`service::ProcessorPool`] maps names to versioned worker threads,
 //!   each serving one [`service::Workload`] (MNIST bundle, 2×2 classifier
-//!   bank, or a bare [`crate::processor::LinearProcessor`]).
+//!   bank, a bare [`crate::processor::LinearProcessor`], or a
+//!   tiling-compiled virtual fleet). The registry is live:
+//!   `Job::Compile` registers new virtual processors mid-serving.
 //! * [`service::ProcessorService::submit`] admits a typed
-//!   [`service::Job`] (`Infer` / `Classify` / `RawApply` / `Reprogram`)
-//!   against a *bounded* queue — overload sheds with
+//!   [`service::Job`] (`Infer` / `Classify` / `RawApply` / `Reprogram` /
+//!   `Compile`) against a *bounded* queue — overload sheds with
 //!   [`service::SubmitError::Overloaded`] instead of blocking — and
 //!   returns a [`service::Ticket`] that owns the reply route.
+//! * [`router::Router`] is the transport-agnostic [`router::Endpoint`]:
+//!   `submit_wire(bytes) → ticket id`, `poll`/`wait`, and the admin plane
+//!   (`ListProcessors` / `MetricsSnapshot` / `Health` / `Shutdown`). The
+//!   CLI's `rfnn job`, the TCP front end, and the loopback tests share
+//!   this one decode/validation/metrics path.
+//! * [`transport`] carries frames over `std::net`:
+//!   [`transport::TcpFrontEnd`] (server) and [`transport::RemoteClient`]
+//!   (client, a [`router::JobSink`] like the in-process service).
 //! * Jobs and results round-trip through a versioned
-//!   [`crate::util::json`] wire form ([`service::WIRE_VERSION`]), shared
-//!   by the CLI, the benches, and future network transports.
+//!   [`crate::util::json`] wire form ([`service::WIRE_VERSION`], v3; v2
+//!   decodes through [`service::compat`]).
 //!
 //! The supporting machinery keeps its own modules: dynamic batching
 //! ([`batcher`]) coalesces MNIST infer jobs into single
 //! `apply_batch` GEMMs; the per-state scheduler ([`scheduler`]) groups 2×2
 //! classify jobs to minimize device re-biases; [`metrics`] tracks
-//! latency/occupancy histograms plus per-job-kind admission counters; and
-//! [`server`] holds the MNIST model bundle + executor along with the
-//! legacy single-workload `Server`/`Client` shim ([`api`] carries the
-//! legacy request types).
+//! latency/occupancy histograms plus per-job-kind admission counters and
+//! per-transport frame/connection counters; and [`server`] holds the
+//! MNIST model bundle + executor along with the legacy single-workload
+//! `Server`/`Client` shim ([`api`] carries the legacy request types).
 
 pub mod api;
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod service;
+pub mod transport;

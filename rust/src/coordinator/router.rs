@@ -1,0 +1,626 @@
+//! The transport-agnostic serving front door: one dispatch / validation /
+//! metrics code path shared by the in-process API, the CLI, and every
+//! network transport.
+//!
+//! Before this layer, `cli.rs` hand-rolled wire decode around
+//! [`ProcessorService::submit`] and a network front end would have had to
+//! do the same. Now all wire-facing callers speak to a [`Router`]:
+//!
+//! ```text
+//!   Endpoint::submit_wire(bytes) -> ticket id    decode + validate + submit
+//!   Endpoint::poll(id) / wait(id) -> JobResult   reply retrieval by id
+//!   Endpoint::admin_wire(bytes)  -> AdminReply   control plane (list /
+//!                                                metrics / health / shutdown)
+//! ```
+//!
+//! The [`Router`] owns the pending-ticket table and the shutdown flag; it
+//! counts every decode failure in the shared
+//! [`Metrics::transport`](crate::coordinator::metrics::TransportCounters)
+//! counters so the admin `MetricsSnapshot` reply sees wire-level rejects
+//! no matter which transport produced them.
+//!
+//! Typed callers that do not care about local vs remote program against
+//! [`JobSink`] instead: [`ProcessorService`] (in-process) and
+//! [`crate::coordinator::transport::RemoteClient`] (framed TCP) both
+//! implement it with the same `dispatch(Job) → wait` shape, so `nn` /
+//! `bench` code is generic over where the processor fleet actually lives.
+
+use crate::processor::Fidelity;
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::metrics::{JobKind, Metrics};
+use super::service::{
+    get_index, get_str, Job, JobResult, ProcessorInfo, ProcessorService, SubmitError, Ticket,
+    WIRE_VERSION,
+};
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Why a wire-level operation failed. Carries a stable `code()` so
+/// transports can put a machine-readable reason on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RouterError {
+    /// The document failed to parse or validate (malformed JSON, bad
+    /// version, schema violation). Counted as a transport decode reject.
+    Decode(String),
+    /// The front door refused the submission (unknown processor, kind not
+    /// served, overloaded, stopped).
+    Submit(SubmitError),
+    /// No pending job under this ticket id (never issued, or already
+    /// consumed by `wait`).
+    UnknownTicket(u64),
+    /// The worker died before answering.
+    Dead(String),
+}
+
+impl RouterError {
+    /// Stable wire error code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            RouterError::Decode(_) => "bad_request",
+            RouterError::Submit(SubmitError::UnknownProcessor(_)) => "unknown_processor",
+            RouterError::Submit(SubmitError::KindNotServed { .. }) => "kind_not_served",
+            RouterError::Submit(SubmitError::Overloaded { .. }) => "overloaded",
+            RouterError::Submit(SubmitError::Stopped(_)) => "stopped",
+            RouterError::UnknownTicket(_) => "unknown_ticket",
+            RouterError::Dead(_) => "worker_died",
+        }
+    }
+}
+
+impl fmt::Display for RouterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouterError::Decode(m) => write!(f, "bad request: {m}"),
+            RouterError::Submit(e) => write!(f, "{e}"),
+            RouterError::UnknownTicket(id) => write!(f, "unknown ticket {id}"),
+            RouterError::Dead(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
+
+// ---------------------------------------------------------------------------
+// The admin plane
+// ---------------------------------------------------------------------------
+
+/// Control-plane requests, servable over any transport that carries the
+/// job plane (same framing, same version gate — v3 only; the v2 protocol
+/// had no admin plane, so there is nothing to shim).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admin {
+    /// Registry metadata for every pooled processor.
+    ListProcessors,
+    /// The full machine-readable metrics snapshot (including per-transport
+    /// counters).
+    MetricsSnapshot,
+    /// Liveness + registry size + shutdown state.
+    Health,
+    /// Ask the serving process to stop accepting connections and exit its
+    /// accept loop. Replies [`AdminReply::ShuttingDown`] first.
+    Shutdown,
+}
+
+impl Admin {
+    /// Stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Admin::ListProcessors => "list_processors",
+            Admin::MetricsSnapshot => "metrics_snapshot",
+            Admin::Health => "health",
+            Admin::Shutdown => "shutdown",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn from_name(name: &str) -> Option<Admin> {
+        match name {
+            "list_processors" => Some(Admin::ListProcessors),
+            "metrics_snapshot" => Some(Admin::MetricsSnapshot),
+            "health" => Some(Admin::Health),
+            "shutdown" => Some(Admin::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Wire form: `{"v":3,"admin":"<name>"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(WIRE_VERSION as f64)),
+            ("admin", Json::Str(self.name().to_string())),
+        ])
+    }
+
+    /// Decode the wire form; the admin plane is strictly v3.
+    pub fn from_json(v: &Json) -> Result<Admin> {
+        let ver = get_index(v, "v")?;
+        if ver != WIRE_VERSION {
+            return Err(Error::msg(format!(
+                "wire: admin requests require version {WIRE_VERSION}, got {ver}"
+            )));
+        }
+        let name = get_str(v, "admin")?;
+        Admin::from_name(name)
+            .ok_or_else(|| Error::msg(format!("wire: unknown admin request '{name}'")))
+    }
+
+    /// Serialize compactly.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse + decode a wire document.
+    pub fn decode(text: &str) -> Result<Admin> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        Admin::from_json(&v)
+    }
+}
+
+/// Answers to [`Admin`] requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminReply {
+    /// Every registered processor's metadata.
+    Processors(Vec<ProcessorInfo>),
+    /// The metrics snapshot document.
+    Metrics(Json),
+    /// Liveness report.
+    Health { status: String, processors: u64, shutting_down: bool },
+    /// Shutdown acknowledged; the accept loop exits after this reply.
+    ShuttingDown,
+}
+
+fn info_to_json(p: &ProcessorInfo) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(p.name.clone())),
+        ("version", Json::Num(p.version as f64)),
+        ("fidelity", Json::Str(p.fidelity.name().to_string())),
+        ("out", Json::Num(p.dims.0 as f64)),
+        ("in", Json::Num(p.dims.1 as f64)),
+        ("capacity", Json::Num(p.capacity as f64)),
+        (
+            "kinds",
+            Json::Arr(p.kinds.iter().map(|k| Json::Str(k.name().to_string())).collect()),
+        ),
+    ])
+}
+
+fn info_from_json(v: &Json) -> Result<ProcessorInfo> {
+    let fid = get_str(v, "fidelity")?;
+    let kinds = v
+        .get("kinds")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::msg("wire: missing array field 'kinds'"))?
+        .iter()
+        .map(|k| {
+            k.as_str()
+                .and_then(JobKind::from_name)
+                .ok_or_else(|| Error::msg("wire: unknown job kind in 'kinds'"))
+        })
+        .collect::<Result<Vec<JobKind>>>()?;
+    Ok(ProcessorInfo {
+        name: get_str(v, "name")?.to_string(),
+        version: get_index(v, "version")?,
+        fidelity: Fidelity::from_name(fid)
+            .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?,
+        dims: (get_index(v, "out")? as usize, get_index(v, "in")? as usize),
+        capacity: get_index(v, "capacity")? as usize,
+        kinds,
+    })
+}
+
+impl AdminReply {
+    /// Wire form: `{"v":3,"reply":"<kind>", ...}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("v", Json::Num(WIRE_VERSION as f64))];
+        match self {
+            AdminReply::Processors(list) => {
+                fields.push(("reply", Json::Str("processors".into())));
+                fields.push(("processors", Json::Arr(list.iter().map(info_to_json).collect())));
+            }
+            AdminReply::Metrics(snapshot) => {
+                fields.push(("reply", Json::Str("metrics".into())));
+                fields.push(("metrics", snapshot.clone()));
+            }
+            AdminReply::Health { status, processors, shutting_down } => {
+                fields.push(("reply", Json::Str("health".into())));
+                fields.push(("status", Json::Str(status.clone())));
+                fields.push(("processors", Json::Num(*processors as f64)));
+                fields.push(("shutting_down", Json::Bool(*shutting_down)));
+            }
+            AdminReply::ShuttingDown => {
+                fields.push(("reply", Json::Str("shutting_down".into())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode the wire form (strictly v3, like [`Admin`]).
+    pub fn from_json(v: &Json) -> Result<AdminReply> {
+        let ver = get_index(v, "v")?;
+        if ver != WIRE_VERSION {
+            return Err(Error::msg(format!(
+                "wire: admin replies require version {WIRE_VERSION}, got {ver}"
+            )));
+        }
+        match get_str(v, "reply")? {
+            "processors" => {
+                let arr = v
+                    .get("processors")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::msg("wire: missing array field 'processors'"))?;
+                Ok(AdminReply::Processors(
+                    arr.iter().map(info_from_json).collect::<Result<Vec<_>>>()?,
+                ))
+            }
+            "metrics" => Ok(AdminReply::Metrics(
+                v.get("metrics")
+                    .cloned()
+                    .ok_or_else(|| Error::msg("wire: missing field 'metrics'"))?,
+            )),
+            "health" => Ok(AdminReply::Health {
+                status: get_str(v, "status")?.to_string(),
+                processors: get_index(v, "processors")?,
+                shutting_down: matches!(v.get("shutting_down"), Some(Json::Bool(true))),
+            }),
+            "shutting_down" => Ok(AdminReply::ShuttingDown),
+            other => Err(Error::msg(format!("wire: unknown admin reply '{other}'"))),
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse + decode a wire document.
+    pub fn decode(text: &str) -> Result<AdminReply> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        AdminReply::from_json(&v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Endpoint trait and the Router
+// ---------------------------------------------------------------------------
+
+/// The transport-agnostic serving surface. A transport (TCP today, any
+/// future framing) needs exactly four verbs; everything else — decode,
+/// validation, admission, metrics, reply routing — lives behind them.
+pub trait Endpoint: Send + Sync {
+    /// Decode a wire job document, validate it, and submit it; returns
+    /// the service ticket id the reply can be retrieved under.
+    fn submit_wire(&self, bytes: &[u8]) -> Result<u64, RouterError>;
+
+    /// Non-blocking reply check: `Ok(None)` while in flight.
+    fn poll(&self, id: u64) -> Result<Option<JobResult>, RouterError>;
+
+    /// Block until the job under `id` is answered; consumes the ticket.
+    fn wait(&self, id: u64) -> Result<JobResult, RouterError>;
+
+    /// Decode + execute a control-plane request.
+    fn admin_wire(&self, bytes: &[u8]) -> Result<AdminReply, RouterError>;
+}
+
+/// The one [`Endpoint`] implementation: wire dispatch over a
+/// [`ProcessorService`], with a pending-ticket table and the process
+/// shutdown flag. `rfnn job`, `rfnn serve --listen`, and the loopback
+/// tests all route through this type — there is no second decode path.
+pub struct Router {
+    svc: Arc<ProcessorService>,
+    tickets: Mutex<HashMap<u64, Ticket>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Router {
+    pub fn new(svc: Arc<ProcessorService>) -> Router {
+        Router { svc, tickets: Mutex::new(HashMap::new()), stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// The service behind this router.
+    pub fn service(&self) -> &Arc<ProcessorService> {
+        &self.svc
+    }
+
+    /// Shared serving metrics (transport counters included).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        self.svc.metrics()
+    }
+
+    /// The shutdown flag transports watch (set by [`Admin::Shutdown`]).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Whether [`Admin::Shutdown`] has been requested.
+    pub fn shutdown_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn reject_decode(&self, e: impl fmt::Display) -> RouterError {
+        self.metrics().transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
+        RouterError::Decode(e.to_string())
+    }
+
+    /// Typed submission through the router's ticket table (the path
+    /// `submit_wire` takes after decoding).
+    pub fn submit(&self, job: Job) -> Result<u64, RouterError> {
+        let ticket = self.svc.submit(job).map_err(RouterError::Submit)?;
+        let id = ticket.id();
+        self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner).insert(id, ticket);
+        Ok(id)
+    }
+
+    /// Submit an already-parsed wire document (transports that parse the
+    /// enclosing frame envelope hand the nested job document here).
+    pub fn submit_json(&self, doc: &Json) -> Result<u64, RouterError> {
+        let job = Job::from_json(doc).map_err(|e| self.reject_decode(e))?;
+        self.submit(job)
+    }
+
+    /// Execute a typed control-plane request.
+    pub fn admin(&self, admin: Admin) -> AdminReply {
+        match admin {
+            Admin::ListProcessors => AdminReply::Processors(self.svc.pool().processors()),
+            Admin::MetricsSnapshot => AdminReply::Metrics(self.svc.metrics().snapshot()),
+            Admin::Health => AdminReply::Health {
+                status: "ok".to_string(),
+                processors: self.svc.pool().count() as u64,
+                shutting_down: self.shutdown_requested(),
+            },
+            Admin::Shutdown => {
+                self.stop.store(true, Ordering::SeqCst);
+                AdminReply::ShuttingDown
+            }
+        }
+    }
+
+    /// Execute an already-parsed admin document.
+    pub fn admin_json(&self, doc: &Json) -> Result<AdminReply, RouterError> {
+        let admin = Admin::from_json(doc).map_err(|e| self.reject_decode(e))?;
+        Ok(self.admin(admin))
+    }
+}
+
+impl Endpoint for Router {
+    fn submit_wire(&self, bytes: &[u8]) -> Result<u64, RouterError> {
+        let text = std::str::from_utf8(bytes).map_err(|e| self.reject_decode(e))?;
+        let doc =
+            parse(text).ok_or_else(|| self.reject_decode("malformed JSON wire document"))?;
+        self.submit_json(&doc)
+    }
+
+    fn poll(&self, id: u64) -> Result<Option<JobResult>, RouterError> {
+        let mut tickets =
+            self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let Some(ticket) = tickets.get(&id) else {
+            return Err(RouterError::UnknownTicket(id));
+        };
+        match ticket.poll_result() {
+            None => Ok(None),
+            Some(Ok(result)) => {
+                tickets.remove(&id);
+                Ok(Some(result))
+            }
+            Some(Err(e)) => {
+                tickets.remove(&id);
+                Err(RouterError::Dead(e.to_string()))
+            }
+        }
+    }
+
+    fn wait(&self, id: u64) -> Result<JobResult, RouterError> {
+        let ticket = self
+            .tickets
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .remove(&id)
+            .ok_or(RouterError::UnknownTicket(id))?;
+        // Block outside the table lock: concurrent submits/waits proceed.
+        ticket.wait().map_err(|e| RouterError::Dead(e.to_string()))
+    }
+
+    fn admin_wire(&self, bytes: &[u8]) -> Result<AdminReply, RouterError> {
+        let text = std::str::from_utf8(bytes).map_err(|e| self.reject_decode(e))?;
+        let doc =
+            parse(text).ok_or_else(|| self.reject_decode("malformed JSON wire document"))?;
+        self.admin_json(&doc)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobSink: typed local-vs-remote genericity
+// ---------------------------------------------------------------------------
+
+/// A pending reply from some [`JobSink`] — a local [`Ticket`] or a remote
+/// in-flight frame.
+pub trait PendingReply {
+    /// Block until the job is answered.
+    fn wait_reply(self) -> Result<JobResult>;
+}
+
+/// Anything a typed [`Job`] can be submitted to — the in-process
+/// [`ProcessorService`] or a
+/// [`crate::coordinator::transport::RemoteClient`] across a socket.
+/// `nn` / `bench` code written against this trait runs unchanged whether
+/// the processor fleet is in this process or on another host.
+pub trait JobSink {
+    type Pending: PendingReply;
+
+    /// Submit a job; backpressure and transport failures surface as `Err`.
+    fn dispatch(&self, job: Job) -> Result<Self::Pending>;
+
+    /// Synchronous convenience: dispatch + wait.
+    fn roundtrip(&self, job: Job) -> Result<JobResult> {
+        self.dispatch(job)?.wait_reply()
+    }
+}
+
+impl PendingReply for Ticket {
+    fn wait_reply(self) -> Result<JobResult> {
+        self.wait()
+    }
+}
+
+impl JobSink for ProcessorService {
+    type Pending = Ticket;
+
+    fn dispatch(&self, job: Job) -> Result<Ticket> {
+        self.submit(job).map_err(|e| Error::msg(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::demo_classifiers;
+    use crate::coordinator::service::{PoolConfig, ProcessorPool, Workload};
+    use crate::math::cmat::CMat;
+
+    fn demo_router() -> Router {
+        let pool = ProcessorPool::new();
+        pool.register("cls2x2", Workload::Classify2x2(demo_classifiers()), PoolConfig::default())
+            .unwrap();
+        pool.register(
+            "mesh4",
+            Workload::Processor(Box::new(crate::mesh::propagate::DiscreteMesh::new(
+                4,
+                crate::mesh::propagate::MeshBackend::Ideal,
+            ))),
+            PoolConfig::default(),
+        )
+        .unwrap();
+        Router::new(Arc::new(ProcessorService::new(pool)))
+    }
+
+    #[test]
+    fn submit_wire_then_wait_round_trips_through_one_path() {
+        let router = demo_router();
+        let job = Job::Classify { processor: "cls2x2".into(), classifier: 1, point: [3.0, 4.0] };
+        let id = router.submit_wire(job.encode().as_bytes()).expect("valid wire job");
+        match router.wait(id).expect("answered") {
+            JobResult::Classify { yhat, .. } => assert!((0.0..=1.0).contains(&yhat)),
+            other => panic!("unexpected {other:?}"),
+        }
+        // A consumed ticket is gone.
+        assert_eq!(router.wait(id), Err(RouterError::UnknownTicket(id)));
+    }
+
+    #[test]
+    fn poll_surfaces_in_flight_then_resolves() {
+        let router = demo_router();
+        let id = router
+            .submit(Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) })
+            .expect("admitted");
+        // Poll until resolved (the worker answers within the batch wait).
+        let mut result = None;
+        for _ in 0..200 {
+            match router.poll(id).expect("ticket known until resolved") {
+                Some(r) => {
+                    result = Some(r);
+                    break;
+                }
+                None => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        match result.expect("resolved within 400ms") {
+            JobResult::RawApply { y } => assert_eq!((y.rows(), y.cols()), (4, 4)),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(router.poll(id), Err(RouterError::UnknownTicket(id)));
+    }
+
+    #[test]
+    fn decode_failures_are_counted_and_coded() {
+        let router = demo_router();
+        let before =
+            router.metrics().transport.decode_rejects.load(Ordering::Relaxed);
+        let err = router.submit_wire(b"{not json").expect_err("malformed");
+        assert_eq!(err.code(), "bad_request");
+        let err = router
+            .submit_wire(br#"{"v":9,"kind":"infer","processor":"x","image":[]}"#)
+            .expect_err("bad version");
+        assert_eq!(err.code(), "bad_request");
+        let err = router.admin_wire(b"\xff\xfe").expect_err("not utf8");
+        assert_eq!(err.code(), "bad_request");
+        let after = router.metrics().transport.decode_rejects.load(Ordering::Relaxed);
+        assert_eq!(after - before, 3);
+        // Front-door refusals keep their specific codes.
+        let err = router
+            .submit(Job::Infer { processor: "nope".into(), image: vec![] })
+            .expect_err("unknown processor");
+        assert_eq!(err.code(), "unknown_processor");
+        let err = router
+            .submit(Job::Infer { processor: "cls2x2".into(), image: vec![] })
+            .expect_err("kind not served");
+        assert_eq!(err.code(), "kind_not_served");
+    }
+
+    #[test]
+    fn admin_round_trips_and_shutdown_sets_the_flag() {
+        let router = demo_router();
+        // Every admin request round-trips its wire form.
+        for a in [Admin::ListProcessors, Admin::MetricsSnapshot, Admin::Health, Admin::Shutdown] {
+            assert_eq!(Admin::decode(&a.encode()).unwrap(), a);
+        }
+        match router.admin_wire(Admin::ListProcessors.encode().as_bytes()).unwrap() {
+            AdminReply::Processors(list) => {
+                assert_eq!(list.len(), 2);
+                assert!(list.iter().any(|p| p.name == "cls2x2"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match router.admin(Admin::Health) {
+            AdminReply::Health { status, processors, shutting_down } => {
+                assert_eq!(status, "ok");
+                assert_eq!(processors, 2);
+                assert!(!shutting_down);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match router.admin(Admin::MetricsSnapshot) {
+            AdminReply::Metrics(snap) => assert!(snap.get("transport").is_some()),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(!router.shutdown_requested());
+        assert_eq!(router.admin(Admin::Shutdown), AdminReply::ShuttingDown);
+        assert!(router.shutdown_requested());
+        // Replies round-trip their wire form too.
+        let reply = router.admin(Admin::ListProcessors);
+        assert_eq!(AdminReply::decode(&reply.encode()).unwrap(), reply);
+        let health = router.admin(Admin::Health);
+        assert_eq!(AdminReply::decode(&health.encode()).unwrap(), health);
+    }
+
+    #[test]
+    fn admin_plane_is_strictly_v3() {
+        assert!(Admin::decode(r#"{"v":2,"admin":"health"}"#).is_err());
+        assert!(Admin::decode(r#"{"v":3,"admin":"warp"}"#).is_err());
+        assert!(Admin::decode(r#"{"admin":"health"}"#).is_err());
+        assert!(AdminReply::decode(r#"{"v":2,"reply":"shutting_down"}"#).is_err());
+    }
+
+    #[test]
+    fn job_sink_is_generic_over_the_service() {
+        fn drive<S: JobSink>(sink: &S) -> JobResult {
+            sink.roundtrip(Job::Classify {
+                processor: "cls2x2".into(),
+                classifier: 0,
+                point: [1.0, 2.0],
+            })
+            .expect("served")
+        }
+        let router = demo_router();
+        match drive(router.service().as_ref()) {
+            JobResult::Classify { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -107,7 +107,10 @@ impl<T> StateScheduler<T> {
             self.reconfigs += 1;
         }
         let q = &mut self.queues[target];
-        let take = q.len().min(self.policy.max_batch).min(self.policy.max_run - self.run.min(self.policy.max_run - 1));
+        let take = q
+            .len()
+            .min(self.policy.max_batch)
+            .min(self.policy.max_run - self.run.min(self.policy.max_run - 1));
         let items: Vec<T> = q.drain(..take).map(|(_, item)| item).collect();
         self.run += items.len();
         Some((target, items, reconfigured))
@@ -216,7 +219,8 @@ mod tests {
 
     #[test]
     fn groups_by_state_to_minimize_switches() {
-        let mut s = sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
+        let mut s =
+            sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
         let t = Instant::now();
         // Interleaved arrivals across two states.
         for i in 0..20 {
@@ -358,7 +362,8 @@ mod tests {
 
     #[test]
     fn reconfig_counter_counts() {
-        let mut s = sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
+        let mut s =
+            sched(SchedulerPolicy { max_staleness: Duration::from_secs(10), ..Default::default() });
         let t = Instant::now();
         s.push(4, t, 1);
         let _ = s.next_batch(t);

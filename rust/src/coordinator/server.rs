@@ -127,7 +127,8 @@ impl ModelBundle {
             let mut logits = [0.0f64; 10];
             for (k, l) in logits.iter_mut().enumerate() {
                 let row = &self.w2[k * n..(k + 1) * n];
-                *l = self.b2[k] as f64 + row.iter().zip(&h2).map(|(&w, &h)| w as f64 * h).sum::<f64>();
+                *l = self.b2[k] as f64
+                    + row.iter().zip(&h2).map(|(&w, &h)| w as f64 * h).sum::<f64>();
             }
             let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
             let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
@@ -299,7 +300,7 @@ impl Server {
     /// Register the MNIST worker and open the front door.
     pub fn start(cfg: ServerConfig) -> Server {
         let ServerConfig { batch, bundle, backend } = cfg;
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register(
             MNIST_PROCESSOR,
             Workload::Mnist { bundle, backend },
@@ -429,7 +430,13 @@ mod tests {
         let xf: Vec<f32> = x.data().iter().map(|&v| v as f32).collect();
         let served = b.forward_native(&xf, 4);
         for i in 0..4 {
-            let want = direct.row(i).iter().enumerate().max_by(|p, q| p.1.partial_cmp(q.1).unwrap()).unwrap().0;
+            let want = direct
+                .row(i)
+                .iter()
+                .enumerate()
+                .max_by(|p, q| p.1.partial_cmp(q.1).unwrap())
+                .unwrap()
+                .0;
             let got = served[i * 10..(i + 1) * 10]
                 .iter()
                 .enumerate()

@@ -23,16 +23,20 @@
 //!   threads, each owning one [`Workload`] (a served processor instance:
 //!   fidelity × dims). Multiple models/devices serve concurrently behind
 //!   one front door; [`ProcessorPool::register_external`] exposes the raw
-//!   [`JobHandle`] stream so tests and future network transports can pump
-//!   a queue with their own executor.
+//!   [`JobHandle`] stream so tests and custom backends can pump a queue
+//!   with their own executor. The registry is *live*: [`Job::Compile`]
+//!   registers a freshly compiled [`VirtualProcessor`] mid-serving.
 //! * **Admission control.** Each worker sits behind a *bounded*
 //!   `sync_channel`; [`ProcessorService::submit`] uses `try_send`, so an
 //!   overloaded processor sheds with [`SubmitError::Overloaded`] instead
 //!   of blocking the caller or silently growing an unbounded queue.
 //! * **Versioned wire form.** [`Job`] and [`JobResult`] round-trip through
-//!   [`crate::util::json`] under [`WIRE_VERSION`]; decoding rejects
-//!   unknown versions, so the CLI, benches, and future transports speak
-//!   one schema (see `testing::wire_props`).
+//!   [`crate::util::json`] under [`WIRE_VERSION`] (v3); v2 documents
+//!   decode through the explicit [`compat`] shim and anything else is
+//!   refused, so the CLI, benches, and the network transports
+//!   ([`crate::coordinator::transport`]) speak one schema (see
+//!   `testing::wire_props`). The transport-agnostic dispatch layer over
+//!   this module lives in [`crate::coordinator::router`].
 //!
 //! Batching is preserved from the legacy loops: the MNIST worker coalesces
 //! infer jobs through [`next_batch`] and executes one
@@ -56,12 +60,15 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// Version tag of the serialized `Job`/`JobResult` schema. Bump on any
-/// incompatible change; decoders reject documents whose `v` differs.
-pub const WIRE_VERSION: u64 = 2;
+/// incompatible change; decoders reject documents whose `v` is neither
+/// the current version nor a version an explicit compat shim handles
+/// (today: v2, through [`compat`]). Encoders always write the current
+/// version.
+pub const WIRE_VERSION: u64 = 3;
 
 // ---------------------------------------------------------------------------
 // Jobs and results
@@ -82,6 +89,13 @@ pub enum Job {
     /// Write a new flat θ/φ state code (θ0, φ0, θ1, φ1, …) into a
     /// programmable processor; bumps the processor's pool version.
     Reprogram { processor: String, code: Vec<usize> },
+    /// Compile `target` onto a fleet of `tile`×`tile` physical processors
+    /// through the tiling compiler and register the resulting
+    /// [`VirtualProcessor`] into the live pool under `name` (serving
+    /// `RawApply` and, at programmable fidelities, `Reprogram`). Answered
+    /// with [`JobResult::Compiled`] carrying the plan summary. New in
+    /// wire version 3.
+    Compile { name: String, target: CMat, tile: usize, fidelity: Fidelity },
 }
 
 impl Job {
@@ -92,16 +106,19 @@ impl Job {
             Job::Classify { .. } => JobKind::Classify,
             Job::RawApply { .. } => JobKind::RawApply,
             Job::Reprogram { .. } => JobKind::Reprogram,
+            Job::Compile { .. } => JobKind::Compile,
         }
     }
 
-    /// The pooled processor this job is addressed to.
+    /// The pooled processor this job is addressed to (for `Compile`: the
+    /// name the new processor will register under).
     pub fn processor(&self) -> &str {
         match self {
             Job::Infer { processor, .. }
             | Job::Classify { processor, .. }
             | Job::RawApply { processor, .. }
             | Job::Reprogram { processor, .. } => processor,
+            Job::Compile { name, .. } => name,
         }
     }
 
@@ -110,65 +127,71 @@ impl Job {
         let mut fields = vec![
             ("v", Json::Num(WIRE_VERSION as f64)),
             ("kind", Json::Str(self.kind().name().to_string())),
-            ("processor", Json::Str(self.processor().to_string())),
         ];
         match self {
-            Job::Infer { image, .. } => {
+            Job::Infer { processor, image } => {
+                fields.push(("processor", Json::Str(processor.clone())));
                 fields.push((
                     "image",
                     Json::Arr(image.iter().map(|&p| Json::Num(p as f64)).collect()),
                 ));
             }
-            Job::Classify { classifier, point, .. } => {
+            Job::Classify { processor, classifier, point } => {
+                fields.push(("processor", Json::Str(processor.clone())));
                 fields.push(("classifier", Json::Num(*classifier as f64)));
                 fields.push(("point", Json::nums(&point[..])));
             }
-            Job::RawApply { x, .. } => {
+            Job::RawApply { processor, x } => {
+                fields.push(("processor", Json::Str(processor.clone())));
                 fields.push(("x", cmat_to_json(x)));
             }
-            Job::Reprogram { code, .. } => {
+            Job::Reprogram { processor, code } => {
+                fields.push(("processor", Json::Str(processor.clone())));
                 fields.push((
                     "code",
                     Json::Arr(code.iter().map(|&c| Json::Num(c as f64)).collect()),
                 ));
+            }
+            Job::Compile { name, target, tile, fidelity } => {
+                let re: Vec<f64> = target.data().iter().map(|z| z.re).collect();
+                let im: Vec<f64> = target.data().iter().map(|z| z.im).collect();
+                fields.push(("name", Json::Str(name.clone())));
+                fields.push(("rows", Json::Num(target.rows() as f64)));
+                fields.push(("cols", Json::Num(target.cols() as f64)));
+                fields.push(("re", Json::nums(&re)));
+                fields.push(("im", Json::nums(&im)));
+                fields.push(("tile", Json::Num(*tile as f64)));
+                fields.push(("fidelity", Json::Str(fidelity.name().to_string())));
             }
         }
         Json::obj(fields)
     }
 
     /// Decode the wire form; rejects missing fields and unknown versions.
+    /// Version-2 documents route through the explicit [`compat`] shim.
     pub fn from_json(v: &Json) -> Result<Job> {
-        check_wire_version(v)?;
-        let kind = get_str(v, "kind")?;
-        let processor = get_str(v, "processor")?.to_string();
-        match kind {
-            "infer" => {
-                let image = get_nums(v, "image")?.iter().map(|&p| p as f32).collect();
-                Ok(Job::Infer { processor, image })
-            }
-            "classify" => {
-                let classifier = get_index(v, "classifier")? as usize;
-                let p = get_nums(v, "point")?;
-                if p.len() != 2 {
-                    return Err(Error::msg("wire: classify point must have 2 coordinates"));
-                }
-                Ok(Job::Classify { processor, classifier, point: [p[0], p[1]] })
-            }
-            "raw_apply" => {
-                let x = cmat_from_json(
-                    v.get("x").ok_or_else(|| Error::msg("wire: missing field 'x'"))?,
-                )?;
-                Ok(Job::RawApply { processor, x })
-            }
-            "reprogram" => {
-                let code = get_nums(v, "code")?
-                    .iter()
-                    .map(|&c| to_index(c, "code").map(|u| u as usize))
-                    .collect::<Result<Vec<usize>>>()?;
-                Ok(Job::Reprogram { processor, code })
-            }
-            other => Err(Error::msg(format!("wire: unknown job kind '{other}'"))),
+        match wire_version(v)? {
+            WIRE_VERSION => Job::from_current(v),
+            compat::WIRE_VERSION_V2 => compat::job_from_v2(v),
+            ver => Err(unsupported_version(ver)),
         }
+    }
+
+    /// Decode a current-version document (the `v` tag already checked).
+    fn from_current(v: &Json) -> Result<Job> {
+        let kind = get_str(v, "kind")?;
+        if kind == "compile" {
+            let name = get_str(v, "name")?.to_string();
+            let rows = get_index(v, "rows")? as usize;
+            let cols = get_index(v, "cols")? as usize;
+            let target = cmat_from_parts(v, rows, cols)?;
+            let tile = get_index(v, "tile")? as usize;
+            let fid = get_str(v, "fidelity")?;
+            let fidelity = Fidelity::from_name(fid)
+                .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?;
+            return Ok(Job::Compile { name, target, tile, fidelity });
+        }
+        decode_legacy_job(kind, v)
     }
 
     /// Serialize compactly.
@@ -196,6 +219,23 @@ pub enum JobResult {
     /// The state write landed; `version` is the processor's new pool
     /// version.
     Reprogrammed { version: u64 },
+    /// A `Compile` job landed: the plan summary of the virtual processor
+    /// now registered (and serving) under `name`. New in wire version 3.
+    Compiled {
+        name: String,
+        /// Pool version of the freshly registered processor (always 1).
+        version: u64,
+        /// Tile-grid shape `(⌈M/T⌉, ⌈N/T⌉)`.
+        grid: (u64, u64),
+        tile: u64,
+        fidelity: Fidelity,
+        /// Programmable state variables across the whole fleet.
+        state_vars: u64,
+        /// Compile-time ‖assembled − target‖_F (the documented band).
+        fro_error: f64,
+        /// Whether the plan's recipes came from the shared plan cache.
+        cache_hit: bool,
+    },
     /// The worker answered but refused the job (bad shape, out-of-range
     /// state code, kind not servable by this workload, …).
     Rejected { reason: String },
@@ -236,6 +276,27 @@ impl JobResult {
                 fields.push(("kind", Json::Str("reprogrammed".into())));
                 fields.push(("version", Json::Num(*version as f64)));
             }
+            JobResult::Compiled {
+                name,
+                version,
+                grid,
+                tile,
+                fidelity,
+                state_vars,
+                fro_error,
+                cache_hit,
+            } => {
+                fields.push(("kind", Json::Str("compiled".into())));
+                fields.push(("name", Json::Str(name.clone())));
+                fields.push(("version", Json::Num(*version as f64)));
+                fields.push(("grid_rows", Json::Num(grid.0 as f64)));
+                fields.push(("grid_cols", Json::Num(grid.1 as f64)));
+                fields.push(("tile", Json::Num(*tile as f64)));
+                fields.push(("fidelity", Json::Str(fidelity.name().to_string())));
+                fields.push(("state_vars", Json::Num(*state_vars as f64)));
+                fields.push(("fro_error", Json::Num(*fro_error)));
+                fields.push(("cache_hit", Json::Bool(*cache_hit)));
+            }
             JobResult::Rejected { reason } => {
                 fields.push(("kind", Json::Str("rejected".into())));
                 fields.push(("reason", Json::Str(reason.clone())));
@@ -245,31 +306,33 @@ impl JobResult {
     }
 
     /// Decode the wire form; rejects missing fields and unknown versions.
+    /// Version-2 documents route through the explicit [`compat`] shim.
     pub fn from_json(v: &Json) -> Result<JobResult> {
-        check_wire_version(v)?;
-        match get_str(v, "kind")? {
-            "infer" => Ok(JobResult::Infer {
-                probs: get_nums(v, "probs")?.iter().map(|&p| p as f32).collect(),
-                queued_us: get_index(v, "queued_us")?,
-                service_us: get_index(v, "service_us")?,
-            }),
-            "classify" => Ok(JobResult::Classify {
-                yhat: get_f64(v, "yhat")?,
-                reconfigured: matches!(v.get("reconfigured"), Some(Json::Bool(true))),
-            }),
-            "raw_apply" => Ok(JobResult::RawApply {
-                y: cmat_from_json(
-                    v.get("y").ok_or_else(|| Error::msg("wire: missing field 'y'"))?,
-                )?,
-            }),
-            "reprogrammed" => {
-                Ok(JobResult::Reprogrammed { version: get_index(v, "version")? })
-            }
-            "rejected" => {
-                Ok(JobResult::Rejected { reason: get_str(v, "reason")?.to_string() })
-            }
-            other => Err(Error::msg(format!("wire: unknown result kind '{other}'"))),
+        match wire_version(v)? {
+            WIRE_VERSION => JobResult::from_current(v),
+            compat::WIRE_VERSION_V2 => compat::result_from_v2(v),
+            ver => Err(unsupported_version(ver)),
         }
+    }
+
+    /// Decode a current-version document (the `v` tag already checked).
+    fn from_current(v: &Json) -> Result<JobResult> {
+        let kind = get_str(v, "kind")?;
+        if kind == "compiled" {
+            let fid = get_str(v, "fidelity")?;
+            return Ok(JobResult::Compiled {
+                name: get_str(v, "name")?.to_string(),
+                version: get_index(v, "version")?,
+                grid: (get_index(v, "grid_rows")?, get_index(v, "grid_cols")?),
+                tile: get_index(v, "tile")?,
+                fidelity: Fidelity::from_name(fid)
+                    .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?,
+                state_vars: get_index(v, "state_vars")?,
+                fro_error: get_f64(v, "fro_error")?,
+                cache_hit: matches!(v.get("cache_hit"), Some(Json::Bool(true))),
+            });
+        }
+        decode_legacy_result(kind, v)
     }
 
     /// Serialize compactly.
@@ -288,20 +351,123 @@ impl JobResult {
 /// corrupt documents allocating gigabytes).
 const WIRE_MAX_MATRIX_ELEMS: usize = 1 << 24;
 
-fn check_wire_version(v: &Json) -> Result<()> {
-    let ver = get_index(v, "v")?;
-    if ver != WIRE_VERSION {
-        return Err(Error::msg(format!(
-            "wire: unsupported version {ver} (this build speaks {WIRE_VERSION})"
-        )));
+/// The document's `v` tag as an exact non-negative integer.
+fn wire_version(v: &Json) -> Result<u64> {
+    get_index(v, "v")
+}
+
+fn unsupported_version(ver: u64) -> Error {
+    Error::msg(format!(
+        "wire: unsupported version {ver} (this build speaks {WIRE_VERSION}, \
+         with a v{} compat shim)",
+        compat::WIRE_VERSION_V2
+    ))
+}
+
+/// Decode the four v2-era job kinds — the schema shared verbatim by wire
+/// versions 2 and 3 (the `v` tag must already be checked by the caller).
+fn decode_legacy_job(kind: &str, v: &Json) -> Result<Job> {
+    let processor = get_str(v, "processor")?.to_string();
+    match kind {
+        "infer" => {
+            let image = get_nums(v, "image")?.iter().map(|&p| p as f32).collect();
+            Ok(Job::Infer { processor, image })
+        }
+        "classify" => {
+            let classifier = get_index(v, "classifier")? as usize;
+            let p = get_nums(v, "point")?;
+            if p.len() != 2 {
+                return Err(Error::msg("wire: classify point must have 2 coordinates"));
+            }
+            Ok(Job::Classify { processor, classifier, point: [p[0], p[1]] })
+        }
+        "raw_apply" => {
+            let x = cmat_from_json(
+                v.get("x").ok_or_else(|| Error::msg("wire: missing field 'x'"))?,
+            )?;
+            Ok(Job::RawApply { processor, x })
+        }
+        "reprogram" => {
+            let code = get_nums(v, "code")?
+                .iter()
+                .map(|&c| to_index(c, "code").map(|u| u as usize))
+                .collect::<Result<Vec<usize>>>()?;
+            Ok(Job::Reprogram { processor, code })
+        }
+        other => Err(Error::msg(format!("wire: unknown job kind '{other}'"))),
     }
-    Ok(())
+}
+
+/// Decode the five v2-era result kinds — shared by wire versions 2 and 3.
+fn decode_legacy_result(kind: &str, v: &Json) -> Result<JobResult> {
+    match kind {
+        "infer" => Ok(JobResult::Infer {
+            probs: get_nums(v, "probs")?.iter().map(|&p| p as f32).collect(),
+            queued_us: get_index(v, "queued_us")?,
+            service_us: get_index(v, "service_us")?,
+        }),
+        "classify" => Ok(JobResult::Classify {
+            yhat: get_f64(v, "yhat")?,
+            reconfigured: matches!(v.get("reconfigured"), Some(Json::Bool(true))),
+        }),
+        "raw_apply" => Ok(JobResult::RawApply {
+            y: cmat_from_json(
+                v.get("y").ok_or_else(|| Error::msg("wire: missing field 'y'"))?,
+            )?,
+        }),
+        "reprogrammed" => Ok(JobResult::Reprogrammed { version: get_index(v, "version")? }),
+        "rejected" => Ok(JobResult::Rejected { reason: get_str(v, "reason")?.to_string() }),
+        other => Err(Error::msg(format!("wire: unknown result kind '{other}'"))),
+    }
+}
+
+/// The explicit v2 → v3 compatibility shim.
+///
+/// Upgrade rules (pinned by `testing::wire_props`):
+///
+/// * The four v2 job kinds (`infer` / `classify` / `raw_apply` /
+///   `reprogram`) and five v2 result kinds decode **identically** under
+///   v2 and v3 — the field schema did not change, only the version tag.
+/// * v3-only kinds (`compile` / `compiled`) are **refused** in a v2
+///   document: a v2 peer never produced them, so their appearance means
+///   a version-spoofed or corrupt document.
+/// * Encoders never emit v2; replies to a v2 client are v3 documents
+///   (clients gate on `v` themselves, exactly as this decoder does).
+/// * Any other version (1, 4, …) is refused outright.
+pub mod compat {
+    use super::*;
+
+    /// The previous schema version this build still decodes.
+    pub const WIRE_VERSION_V2: u64 = 2;
+
+    /// Decode a v2 job document (the `v` tag must equal 2; callers route
+    /// here from [`Job::from_json`]).
+    pub fn job_from_v2(v: &Json) -> Result<Job> {
+        let kind = get_str(v, "kind")?;
+        if kind == "compile" {
+            return Err(Error::msg(
+                "wire: 'compile' jobs require wire version 3 (document claims v2)",
+            ));
+        }
+        decode_legacy_job(kind, v)
+    }
+
+    /// Decode a v2 result document.
+    pub fn result_from_v2(v: &Json) -> Result<JobResult> {
+        let kind = get_str(v, "kind")?;
+        if kind == "compiled" {
+            return Err(Error::msg(
+                "wire: 'compiled' results require wire version 3 (document claims v2)",
+            ));
+        }
+        decode_legacy_result(kind, v)
+    }
 }
 
 /// Numeric field. JSON has no literal for non-finite floats, so the
 /// encoder writes them as `null`; decoding maps `null` back to NaN to
 /// keep encode→decode total over every in-memory value.
-fn get_f64(v: &Json, key: &str) -> Result<f64> {
+pub(crate) fn get_f64(v: &Json, key: &str) -> Result<f64> {
     match v.get(key) {
         Some(Json::Num(x)) => Ok(*x),
         Some(Json::Null) => Ok(f64::NAN),
@@ -312,7 +478,7 @@ fn get_f64(v: &Json, key: &str) -> Result<f64> {
 /// A count/index field: must be an exact non-negative integer — a plain
 /// `as` cast would silently truncate `2.9` to `2` (defeating the version
 /// gate) and saturate `-1` to `0` (rerouting to a real classifier).
-fn get_index(v: &Json, key: &str) -> Result<u64> {
+pub(crate) fn get_index(v: &Json, key: &str) -> Result<u64> {
     to_index(get_f64(v, key)?, key)
 }
 
@@ -326,7 +492,7 @@ fn to_index(x: f64, what: &str) -> Result<u64> {
     Ok(x as u64)
 }
 
-fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+pub(crate) fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
     v.get(key)
         .and_then(Json::as_str)
         .ok_or_else(|| Error::msg(format!("wire: missing string field '{key}'")))
@@ -361,6 +527,13 @@ fn cmat_to_json(m: &CMat) -> Json {
 fn cmat_from_json(v: &Json) -> Result<CMat> {
     let rows = get_index(v, "rows")? as usize;
     let cols = get_index(v, "cols")? as usize;
+    cmat_from_parts(v, rows, cols)
+}
+
+/// Assemble a matrix from `re`/`im` arrays on `v`, shape-checked against
+/// `rows × cols` and size-capped (used by both the nested `x`/`y` matrix
+/// objects and the flat `Job::Compile` weight fields).
+fn cmat_from_parts(v: &Json, rows: usize, cols: usize) -> Result<CMat> {
     let elems = rows
         .checked_mul(cols)
         .filter(|&e| e <= WIRE_MAX_MATRIX_ELEMS)
@@ -447,6 +620,20 @@ impl Ticket {
         self.rx.recv_timeout(d).map_err(|e| {
             Error::msg(format!("job {}: no reply from '{}' ({e})", self.id, self.processor))
         })
+    }
+
+    /// Non-blocking check: `None` while the job is still in flight,
+    /// `Some(Ok(result))` once answered, `Some(Err(_))` if the worker
+    /// died first. The [`super::router::Router`] `poll` surface.
+    pub fn poll_result(&self) -> Option<Result<JobResult>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(Ok(r)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(Err(Error::msg(format!(
+                "job {}: worker for '{}' stopped before replying",
+                self.id, self.processor
+            )))),
+        }
     }
 }
 
@@ -591,7 +778,7 @@ impl Default for PoolConfig {
 }
 
 /// Registry metadata for one pooled processor.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ProcessorInfo {
     pub name: String,
     /// Starts at 1; bumped by every successful `Reprogram`.
@@ -617,11 +804,13 @@ struct WorkerHandle {
 }
 
 /// Named, versioned processor registry: one worker thread + bounded
-/// admission queue per registered [`Workload`]. Registration happens at
-/// build time (`&mut self`); serving is lock-free `&self` thereafter.
+/// admission queue per registered [`Workload`]. Registration takes
+/// `&self` — the registry is a `RwLock`ed map, so processors can join a
+/// *live* pool (the `Job::Compile` path registers mid-serving); the
+/// submit path only ever takes the uncontended read lock.
 #[derive(Default)]
 pub struct ProcessorPool {
-    workers: BTreeMap<String, WorkerHandle>,
+    workers: RwLock<BTreeMap<String, WorkerHandle>>,
     metrics: Arc<Metrics>,
 }
 
@@ -635,41 +824,53 @@ impl ProcessorPool {
         &self.metrics
     }
 
+    fn read_workers(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, WorkerHandle>> {
+        self.workers.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn write_workers(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<String, WorkerHandle>> {
+        self.workers.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Register a workload under `name` and spawn its worker thread.
-    pub fn register(&mut self, name: &str, workload: Workload, cfg: PoolConfig) -> Result<()> {
+    /// Works on a live pool (`&self`): jobs addressed to `name` are
+    /// servable as soon as this returns.
+    pub fn register(&self, name: &str, workload: Workload, cfg: PoolConfig) -> Result<()> {
         workload.validate()?;
-        let rx = self.admit(name, workload.dims(), workload.fidelity(), &workload.kinds(), cfg)?;
-        let entry = self.workers.get_mut(name).expect("just inserted");
-        let shared = entry.shared.clone();
+        let (rx, shared) =
+            self.admit(name, workload.dims(), workload.fidelity(), &workload.kinds(), cfg)?;
         let metrics = self.metrics.clone();
-        entry.join =
-            Some(std::thread::spawn(move || run_workload(rx, workload, shared, metrics, cfg)));
+        let join = std::thread::spawn(move || run_workload(rx, workload, shared, metrics, cfg));
+        if let Some(w) = self.write_workers().get_mut(name) {
+            w.join = Some(join);
+        }
         Ok(())
     }
 
     /// Register a queue with NO built-in worker: the caller drains
     /// [`JobHandle`]s and answers them with its own executor (tests,
-    /// custom backends, network transports).
+    /// custom backends, external runtimes).
     pub fn register_external(
-        &mut self,
+        &self,
         name: &str,
         dims: (usize, usize),
         fidelity: Fidelity,
         kinds: &[JobKind],
         cfg: PoolConfig,
     ) -> Result<Receiver<JobHandle>> {
-        self.admit(name, dims, fidelity, kinds, cfg)
+        self.admit(name, dims, fidelity, kinds, cfg).map(|(rx, _)| rx)
     }
 
     fn admit(
-        &mut self,
+        &self,
         name: &str,
         dims: (usize, usize),
         fidelity: Fidelity,
         kinds: &[JobKind],
         cfg: PoolConfig,
-    ) -> Result<Receiver<JobHandle>> {
-        let slot = match self.workers.entry(name.to_string()) {
+    ) -> Result<(Receiver<JobHandle>, Arc<WorkerShared>)> {
+        let mut workers = self.write_workers();
+        let slot = match workers.entry(name.to_string()) {
             std::collections::btree_map::Entry::Occupied(_) => {
                 return Err(Error::msg(format!("processor '{name}' already registered")));
             }
@@ -677,21 +878,22 @@ impl ProcessorPool {
         };
         let capacity = cfg.queue_depth.max(1);
         let (tx, rx) = sync_channel(capacity);
+        let shared = Arc::new(WorkerShared { version: AtomicU64::new(1) });
         slot.insert(WorkerHandle {
             tx: Some(tx),
             join: None,
-            shared: Arc::new(WorkerShared { version: AtomicU64::new(1) }),
+            shared: shared.clone(),
             fidelity,
             dims,
             capacity,
             kinds: kinds.to_vec(),
         });
-        Ok(rx)
+        Ok((rx, shared))
     }
 
     /// Registry metadata for one processor.
     pub fn info(&self, name: &str) -> Option<ProcessorInfo> {
-        self.workers.get(name).map(|w| ProcessorInfo {
+        self.read_workers().get(name).map(|w| ProcessorInfo {
             name: name.to_string(),
             version: w.shared.version.load(Ordering::Relaxed),
             fidelity: w.fidelity,
@@ -701,15 +903,33 @@ impl ProcessorPool {
         })
     }
 
-    /// Every registered processor, by name.
+    /// Every registered processor, by name — one consistent snapshot
+    /// under a single read lock.
     pub fn processors(&self) -> Vec<ProcessorInfo> {
-        self.workers.keys().filter_map(|n| self.info(n)).collect()
+        self.read_workers()
+            .iter()
+            .map(|(name, w)| ProcessorInfo {
+                name: name.clone(),
+                version: w.shared.version.load(Ordering::Relaxed),
+                fidelity: w.fidelity,
+                dims: w.dims,
+                capacity: w.capacity,
+                kinds: w.kinds.clone(),
+            })
+            .collect()
+    }
+
+    /// Number of registered processors (one read lock, no metadata
+    /// cloning — the health-probe accessor).
+    pub fn count(&self) -> usize {
+        self.read_workers().len()
     }
 }
 
 impl Drop for ProcessorPool {
     fn drop(&mut self) {
-        for w in self.workers.values_mut() {
+        let workers = self.workers.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for w in workers.values_mut() {
             w.tx = None; // close the admission queue
             if let Some(j) = w.join.take() {
                 let _ = j.join();
@@ -722,18 +942,30 @@ impl Drop for ProcessorPool {
 // The service front door
 // ---------------------------------------------------------------------------
 
+/// Concurrent `Compile` jobs admitted before the control-plane lane
+/// sheds with [`SubmitError::Overloaded`]. Compiles run SVD / Reck /
+/// quantization per tile on caller-chosen matrices — the bound keeps a
+/// remote peer from spawning unbounded synthesis work (the control-plane
+/// mirror of the data plane's bounded admission queues).
+const MAX_INFLIGHT_COMPILES: usize = 2;
+
 /// The single serving front door over a [`ProcessorPool`].
 pub struct ProcessorService {
-    pool: ProcessorPool,
+    pool: Arc<ProcessorPool>,
     next_id: AtomicU64,
+    compiles_inflight: Arc<std::sync::atomic::AtomicUsize>,
 }
 
 impl ProcessorService {
     pub fn new(pool: ProcessorPool) -> ProcessorService {
-        ProcessorService { pool, next_id: AtomicU64::new(1) }
+        ProcessorService {
+            pool: Arc::new(pool),
+            next_id: AtomicU64::new(1),
+            compiles_inflight: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+        }
     }
 
-    /// The underlying registry (read-only after construction).
+    /// The underlying registry (live: `Job::Compile` grows it mid-serving).
     pub fn pool(&self) -> &ProcessorPool {
         &self.pool
     }
@@ -744,11 +976,18 @@ impl ProcessorService {
     }
 
     /// Submit a job. Never blocks: a full admission queue returns
-    /// [`SubmitError::Overloaded`] immediately.
+    /// [`SubmitError::Overloaded`] immediately. `Compile` jobs are
+    /// control-plane: they bypass the worker registry, run the tiling
+    /// compiler on a dedicated thread, and register the resulting
+    /// virtual processor into the live pool before answering.
     pub fn submit(&self, job: Job) -> Result<Ticket, SubmitError> {
+        if matches!(job, Job::Compile { .. }) {
+            return self.submit_compile(job);
+        }
         let kind = job.kind();
         let name = job.processor().to_string();
-        let Some(w) = self.pool.workers.get(&name) else {
+        let workers = self.pool.read_workers();
+        let Some(w) = workers.get(&name) else {
             return Err(SubmitError::UnknownProcessor(name));
         };
         if !w.kinds.contains(&kind) {
@@ -780,6 +1019,52 @@ impl ProcessorService {
         }
     }
 
+    /// The `Compile` control-plane lane: compile `target` onto a tile
+    /// fleet (through the shared plan cache) and register the virtual
+    /// processor under the requested name. Compilation errors come back
+    /// as [`JobResult::Rejected`] on the ticket; admission itself is
+    /// bounded like the data plane — more than [`MAX_INFLIGHT_COMPILES`]
+    /// concurrent compiles shed with [`SubmitError::Overloaded`], so a
+    /// wire peer can never spawn unbounded synthesis work. The counters
+    /// keep the `submitted = served + rejected` invariant.
+    fn submit_compile(&self, job: Job) -> Result<Ticket, SubmitError> {
+        let kind = JobKind::Compile;
+        let metrics = self.pool.metrics.clone();
+        metrics.record_submitted(kind);
+        let Job::Compile { name, target, tile, fidelity } = job else {
+            unreachable!("submit_compile is only called with Job::Compile");
+        };
+        let inflight = self.compiles_inflight.clone();
+        if inflight.fetch_add(1, Ordering::SeqCst) >= MAX_INFLIGHT_COMPILES {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            metrics.record_rejected(kind);
+            return Err(SubmitError::Overloaded {
+                processor: name,
+                capacity: MAX_INFLIGHT_COMPILES,
+            });
+        }
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let processor = name.clone();
+        let pool = self.pool.clone();
+        std::thread::spawn(move || {
+            // A synthesis panic must not leak the inflight slot (which
+            // would permanently shrink the compile plane) nor break the
+            // submitted = served + rejected invariant: catch it and
+            // answer as a rejection.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                compile_and_register(&pool, &name, target, tile, fidelity)
+            }))
+            .unwrap_or_else(|_| JobResult::Rejected {
+                reason: "compile: synthesis panicked (see server log)".to_string(),
+            });
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            metrics.record_served(kind);
+            let _ = reply.send(result);
+        });
+        Ok(Ticket { id, processor, rx })
+    }
+
     /// Synchronous convenience: submit + wait.
     pub fn submit_wait(&self, job: Job) -> Result<JobResult> {
         self.submit(job).map_err(|e| Error::msg(e.to_string()))?.wait()
@@ -788,6 +1073,61 @@ impl ProcessorService {
     /// Stop accepting jobs and join every worker (also happens on drop).
     pub fn shutdown(self) {
         drop(self);
+    }
+}
+
+/// Execute one `Compile` job: validate the spec, compile through the
+/// shared plan cache, register the virtual processor into the live pool
+/// (the worker re-instantiates the cached recipes — no second synthesis),
+/// and summarize the plan for the caller.
+fn compile_and_register(
+    pool: &ProcessorPool,
+    name: &str,
+    target: CMat,
+    tile: usize,
+    fidelity: Fidelity,
+) -> JobResult {
+    if name.is_empty() {
+        return JobResult::Rejected { reason: "compile: processor name must be non-empty".into() };
+    }
+    if let Err(e) = TileGrid::new(target.rows(), target.cols(), tile) {
+        return JobResult::Rejected { reason: format!("compile: {e}") };
+    }
+    // The wire decoder maps JSON null to NaN (encode→decode totality);
+    // synthesis (SVD ordering) cannot digest non-finite weights, so
+    // refuse them up front rather than panicking mid-pipeline.
+    if !target.is_finite() {
+        return JobResult::Rejected {
+            reason: "compile: weight matrix contains non-finite entries".into(),
+        };
+    }
+    // Cheap duplicate check BEFORE paying for synthesis (the register
+    // call below stays the authoritative, race-safe gate).
+    if pool.info(name).is_some() {
+        return JobResult::Rejected {
+            reason: format!("compile: processor '{name}' already registered"),
+        };
+    }
+    let spec = PlanSpec::new(tile, fidelity);
+    let plan = match Compiler::global().compile(&target, &spec) {
+        Ok(p) => p,
+        Err(e) => return JobResult::Rejected { reason: format!("compile: {e}") },
+    };
+    let (gr, gc) = plan.grid.grid();
+    let summary = JobResult::Compiled {
+        name: name.to_string(),
+        version: 1,
+        grid: (gr as u64, gc as u64),
+        tile: tile as u64,
+        fidelity,
+        state_vars: plan.cost.state_vars as u64,
+        fro_error: plan.fro_error,
+        cache_hit: plan.cache_hit,
+    };
+    let workload = Workload::Virtual { target, tile, fidelity, mnist: None };
+    match pool.register(name, workload, PoolConfig::default()) {
+        Ok(()) => summary,
+        Err(e) => JobResult::Rejected { reason: format!("compile: {e}") },
     }
 }
 
@@ -1102,7 +1442,7 @@ mod tests {
 
     #[test]
     fn bounded_queue_sheds_with_overloaded_not_blocking() {
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         let rx = pool
             .register_external(
                 "ext",
@@ -1145,7 +1485,7 @@ mod tests {
 
     #[test]
     fn unknown_processor_and_kind_gates() {
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register("cls", Workload::Classify2x2(demo_models()), quick_batch()).unwrap();
         let svc = ProcessorService::new(pool);
         match svc.submit(Job::Infer { processor: "nope".into(), image: vec![0.0; 784] }) {
@@ -1161,7 +1501,7 @@ mod tests {
         }
         // Duplicate registration is refused.
         // (Pool is consumed by the service; check on a fresh pool.)
-        let mut p2 = ProcessorPool::new();
+        let p2 = ProcessorPool::new();
         p2.register("x", Workload::Classify2x2(demo_models()), quick_batch()).unwrap();
         assert!(p2.register("x", Workload::Classify2x2(demo_models()), quick_batch()).is_err());
     }
@@ -1170,7 +1510,7 @@ mod tests {
     fn classify_through_front_door_matches_direct_forward() {
         let models = demo_models();
         let dev = ideal_device();
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register("cls2x2", Workload::Classify2x2(models.clone()), quick_batch()).unwrap();
         let svc = ProcessorService::new(pool);
         let mut tickets = Vec::new();
@@ -1208,7 +1548,7 @@ mod tests {
     fn mnist_infer_through_front_door() {
         let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
         let bundle = ModelBundle::from_trained(&net).unwrap();
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register(
             "mnist8",
             Workload::Mnist { bundle, backend: Backend::Native },
@@ -1236,7 +1576,7 @@ mod tests {
         let mesh = DiscreteMesh::new(4, MeshBackend::Ideal);
         let cells = mesh.cells();
         let baseline = LinearProcessor::matrix(&mesh).clone();
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register("mesh4", Workload::Processor(Box::new(mesh)), quick_batch()).unwrap();
         let svc = ProcessorService::new(pool);
         let probe = || Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) };
@@ -1300,7 +1640,7 @@ mod tests {
         // edges, at Quantized fidelity (programmable states).
         let mut rng = Rng::new(0x71A1);
         let target = CMat::from_fn(6, 5, |_, _| C64::real(rng.normal()));
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register(
             "virt",
             Workload::Virtual {
@@ -1361,7 +1701,7 @@ mod tests {
         }
         // Registration-time validation: bad tile sizes and mismatched
         // MNIST heads never spawn a worker.
-        let mut p2 = ProcessorPool::new();
+        let p2 = ProcessorPool::new();
         assert!(p2
             .register(
                 "bad",
@@ -1385,7 +1725,7 @@ mod tests {
         // distribution, all without PJRT.
         let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
         let bundle = ModelBundle::from_trained(&net).unwrap();
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         pool.register(
             "mnist8",
             Workload::Mnist { bundle: bundle.clone(), backend: Backend::Native },
@@ -1452,7 +1792,7 @@ mod tests {
 
     #[test]
     fn stopped_worker_surfaces_as_errors_not_hangs() {
-        let mut pool = ProcessorPool::new();
+        let pool = ProcessorPool::new();
         let rx = pool
             .register_external(
                 "ext",
@@ -1484,5 +1824,85 @@ mod tests {
                 .to_string()
                 .contains("reprogram")
         );
+    }
+
+    #[test]
+    fn compile_job_registers_a_live_processor_that_serves_traffic() {
+        use crate::math::rng::Rng;
+        let pool = ProcessorPool::new();
+        pool.register("cls", Workload::Classify2x2(demo_models()), quick_batch()).unwrap();
+        let svc = ProcessorService::new(pool);
+        assert_eq!(svc.pool().processors().len(), 1);
+        // Compile a ragged 6×5 target onto 2×2 quantized tiles, at runtime.
+        let mut rng = Rng::new(0xC0DE);
+        let target = CMat::from_fn(6, 5, |_, _| C64::real(rng.normal()));
+        let job = Job::Compile {
+            name: "virt65".into(),
+            target: target.clone(),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+        };
+        let result = svc.submit_wait(job).unwrap();
+        match &result {
+            JobResult::Compiled { name, version, grid, tile, fidelity, state_vars, .. } => {
+                assert_eq!(name, "virt65");
+                assert_eq!(*version, 1);
+                assert_eq!(*grid, (3, 3));
+                assert_eq!(*tile, 2);
+                assert_eq!(*fidelity, Fidelity::Quantized);
+                assert!(*state_vars > 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The new processor is registered and serves RawApply immediately,
+        // matching an identically compiled local reference.
+        let info = svc.pool().info("virt65").expect("registered into the live pool");
+        assert_eq!(info.dims, (6, 5));
+        assert_eq!(info.kinds, vec![JobKind::RawApply, JobKind::Reprogram]);
+        let reference =
+            VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Quantized)).unwrap();
+        match svc
+            .submit_wait(Job::RawApply { processor: "virt65".into(), x: CMat::eye(5) })
+            .unwrap()
+        {
+            JobResult::RawApply { y } => {
+                assert!(LinearProcessor::matrix(&reference).sub(&y).max_abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Duplicate names and invalid tiles are answered, never dropped.
+        let dup = Job::Compile {
+            name: "virt65".into(),
+            target: target.clone(),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+        };
+        match svc.submit_wait(dup).unwrap() {
+            JobResult::Rejected { reason } => assert!(reason.contains("already"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let bad =
+            Job::Compile { name: "virt3".into(), target, tile: 3, fidelity: Fidelity::Digital };
+        match svc.submit_wait(bad).unwrap() {
+            JobResult::Rejected { reason } => assert!(reason.contains("tile"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Non-finite weights (the wire maps null → NaN) are refused
+        // before synthesis, which cannot digest them.
+        let nan = Job::Compile {
+            name: "virt-nan".into(),
+            target: CMat::from_fn(2, 2, |_, _| C64::real(f64::NAN)),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+        };
+        match svc.submit_wait(nan).unwrap() {
+            JobResult::Rejected { reason } => assert!(reason.contains("non-finite"), "{reason}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Accounting: every compile submitted was served (never shed).
+        let m = svc.metrics();
+        assert_eq!(m.job(JobKind::Compile).submitted.load(Ordering::Relaxed), 4);
+        assert_eq!(m.job(JobKind::Compile).served.load(Ordering::Relaxed), 4);
+        assert_eq!(m.job(JobKind::Compile).rejected.load(Ordering::Relaxed), 0);
     }
 }

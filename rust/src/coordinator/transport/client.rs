@@ -1,0 +1,247 @@
+//! `RemoteClient`: the typed client for a [`TcpFrontEnd`](super::tcp) —
+//! the remote mirror of the in-process submit/wait API.
+//!
+//! `submit(Job) -> RemoteTicket` / `RemoteTicket::wait()` deliberately
+//! mirror `ProcessorService::submit -> Ticket::wait`, and the client
+//! implements [`JobSink`](crate::coordinator::router::JobSink), so code
+//! written against the sink trait (the benches' latency sweep, any `nn`
+//! driver) runs unchanged against a local pool or a remote host.
+//!
+//! One background reader thread demultiplexes response frames to pending
+//! requests by id, so any number of threads can share one client and
+//! replies may arrive out of order. A transport failure fails *every*
+//! pending request with the same reason and marks the client dead —
+//! nothing ever hangs on a vanished server.
+
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use super::super::router::{Admin, AdminReply, JobSink, PendingReply};
+use super::super::service::{Job, JobResult};
+use super::{read_frame, write_frame, Request, Response, CONNECTION_ID, MAX_FRAME};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct ClientInner {
+    writer: Mutex<TcpStream>,
+    pending_jobs: Mutex<HashMap<u64, Sender<Result<JobResult>>>>,
+    pending_admin: Mutex<HashMap<u64, Sender<Result<AdminReply>>>>,
+    next_id: AtomicU64,
+    /// `Some(reason)` once the connection failed; fails fast thereafter.
+    dead: Mutex<Option<String>>,
+}
+
+impl ClientInner {
+    fn fail_all(&self, reason: &str) {
+        lock(&self.dead).get_or_insert_with(|| reason.to_string());
+        for (_, tx) in lock(&self.pending_jobs).drain() {
+            let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+        }
+        for (_, tx) in lock(&self.pending_admin).drain() {
+            let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+        }
+    }
+
+    /// Close the insert/fail_all race: a submitter that passed the
+    /// aliveness check may insert its pending entry AFTER the dying
+    /// reader drained the maps (the reader never runs again, and a write
+    /// into a half-closed socket can still succeed locally). Sweeping the
+    /// just-inserted id after the write guarantees exactly one answer:
+    /// either the drain caught it, or this does.
+    fn sweep_if_dead(&self, id: u64) {
+        let reason = lock(&self.dead).clone();
+        if let Some(reason) = reason {
+            if let Some(tx) = lock(&self.pending_jobs).remove(&id) {
+                let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+            }
+            if let Some(tx) = lock(&self.pending_admin).remove(&id) {
+                let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+            }
+        }
+    }
+}
+
+/// A connected client for one serving host.
+pub struct RemoteClient {
+    inner: Arc<ClientInner>,
+}
+
+/// A pending remote job — the wire twin of a local
+/// [`Ticket`](crate::coordinator::service::Ticket).
+pub struct RemoteTicket {
+    id: u64,
+    rx: Receiver<Result<JobResult>>,
+}
+
+impl RemoteClient {
+    /// Connect to a serving host (`host:port`).
+    pub fn connect(addr: &str) -> Result<RemoteClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let reader = stream
+            .try_clone()
+            .map_err(|e| Error::msg(format!("clone stream: {e}")))?;
+        let inner = Arc::new(ClientInner {
+            writer: Mutex::new(stream),
+            pending_jobs: Mutex::new(HashMap::new()),
+            pending_admin: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            dead: Mutex::new(None),
+        });
+        let reader_inner = inner.clone();
+        std::thread::spawn(move || reader_loop(reader, reader_inner));
+        Ok(RemoteClient { inner })
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        match lock(&self.inner.dead).as_ref() {
+            Some(reason) => Err(Error::msg(format!("remote: {reason}"))),
+            None => Ok(()),
+        }
+    }
+
+    fn write(&self, req: &Request) -> Result<()> {
+        let mut w = lock(&self.inner.writer);
+        write_frame(&mut *w, req.encode().as_bytes())
+            .map_err(|e| Error::msg(format!("remote: write failed: {e}")))
+    }
+
+    /// Submit a job; server-side refusals (overload shed, unknown
+    /// processor, worker rejections) surface when the ticket is waited.
+    pub fn submit(&self, job: Job) -> Result<RemoteTicket> {
+        self.check_alive()?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        lock(&self.inner.pending_jobs).insert(id, tx);
+        if let Err(e) = self.write(&Request::Job { id, job }) {
+            lock(&self.inner.pending_jobs).remove(&id);
+            return Err(e);
+        }
+        self.inner.sweep_if_dead(id);
+        Ok(RemoteTicket { id, rx })
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn submit_wait(&self, job: Job) -> Result<JobResult> {
+        self.submit(job)?.wait()
+    }
+
+    /// Execute a control-plane request and wait for its reply.
+    pub fn admin(&self, admin: Admin) -> Result<AdminReply> {
+        self.check_alive()?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        lock(&self.inner.pending_admin).insert(id, tx);
+        if let Err(e) = self.write(&Request::Admin { id, admin }) {
+            lock(&self.inner.pending_admin).remove(&id);
+            return Err(e);
+        }
+        self.inner.sweep_if_dead(id);
+        rx.recv().map_err(|_| Error::msg("remote: connection closed before admin reply"))?
+    }
+
+    /// Ask the server to shut down its front end (acknowledged before the
+    /// accept loop exits).
+    pub fn shutdown_server(&self) -> Result<()> {
+        match self.admin(Admin::Shutdown)? {
+            AdminReply::ShuttingDown => Ok(()),
+            other => Err(Error::msg(format!("unexpected shutdown reply: {other:?}"))),
+        }
+    }
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        // Unblock the reader thread; it fails any still-pending tickets.
+        let _ = lock(&self.inner.writer).shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl RemoteTicket {
+    /// Client-side correlation id of this request.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the server answers (or the connection dies).
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("remote: connection closed before reply"))?
+    }
+
+    /// Bounded wait; the ticket survives a timeout and can be waited
+    /// again.
+    pub fn wait_timeout(&self, d: Duration) -> Result<JobResult> {
+        self.rx.recv_timeout(d).map_err(|e| Error::msg(format!("remote: no reply ({e})")))?
+    }
+}
+
+impl PendingReply for RemoteTicket {
+    fn wait_reply(self) -> Result<JobResult> {
+        self.wait()
+    }
+}
+
+impl JobSink for RemoteClient {
+    type Pending = RemoteTicket;
+
+    fn dispatch(&self, job: Job) -> Result<RemoteTicket> {
+        self.submit(job)
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
+    let reason = loop {
+        match read_frame(&mut stream, MAX_FRAME) {
+            Ok(Some(payload)) => {
+                let Ok(text) = std::str::from_utf8(&payload) else {
+                    break "server sent a non-UTF-8 frame".to_string();
+                };
+                match Response::decode(text) {
+                    Ok(resp) => dispatch_response(&inner, resp),
+                    Err(e) => break format!("undecodable response: {e}"),
+                }
+            }
+            Ok(None) => break "server closed the connection".to_string(),
+            Err(e) => break format!("transport error: {e}"),
+        }
+    };
+    inner.fail_all(&reason);
+}
+
+fn dispatch_response(inner: &ClientInner, resp: Response) {
+    match resp {
+        Response::Result { id, result } => {
+            if let Some(tx) = lock(&inner.pending_jobs).remove(&id) {
+                let _ = tx.send(Ok(result));
+            }
+        }
+        Response::AdminReply { id, reply } => {
+            if let Some(tx) = lock(&inner.pending_admin).remove(&id) {
+                let _ = tx.send(Ok(reply));
+            }
+        }
+        Response::Error { id: CONNECTION_ID, code, message } => {
+            // Connection-scope refusal (connection limit, broken framing):
+            // terminal for every request on this socket.
+            inner.fail_all(&format!("{code}: {message}"));
+        }
+        Response::Error { id, code, message } => {
+            let err = || Err(Error::msg(format!("remote: {code}: {message}")));
+            if let Some(tx) = lock(&inner.pending_jobs).remove(&id) {
+                let _ = tx.send(err());
+            } else if let Some(tx) = lock(&inner.pending_admin).remove(&id) {
+                let _ = tx.send(err());
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Length-prefixed framing: `[u32 big-endian payload length][payload]`.
+//!
+//! The payload is one UTF-8 JSON wire document (a request or response
+//! envelope — see [`super`]). Framing errors are *refusals*, never
+//! panics: an oversized length prefix is rejected before any allocation,
+//! a truncated frame surfaces as `UnexpectedEof`, and garbage bytes fail
+//! JSON parsing one layer up. `testing::wire_props` fuzzes this contract
+//! with random byte blobs.
+
+use std::io::{self, Read, Write};
+
+/// Frame-length sanity cap (64 MiB). This is the transport's OWN bound,
+/// deliberately tighter than the JSON layer's 2²⁴-element matrix cap: a
+/// matrix near that element cap serializes to hundreds of MB of JSON and
+/// does not fit one frame — such payloads are refused here (requests at
+/// read time, replies by the writer's `reply_too_large` substitution)
+/// even though the in-process API would accept them. Remote callers
+/// needing bigger batches split them; the cap is what protects both
+/// peers from unbounded allocations.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds the {MAX_FRAME}-byte cap", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame. Returns `Ok(None)` on clean EOF (peer closed between
+/// frames); a mid-frame EOF is an `UnexpectedEof` error, and a length
+/// prefix beyond `max` is refused with `InvalidData` before allocating.
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // Distinguish clean EOF (no bytes at all) from a truncated prefix.
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..])? {
+            0 if filled == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "truncated frame length prefix",
+                ));
+            }
+            n => filled += n,
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {max}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "truncated frame payload")
+        } else {
+            e
+        }
+    })?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, "θ=2π".as_bytes()).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), "θ=2π".as_bytes());
+        // Clean EOF between frames.
+        assert!(read_frame(&mut r, MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frames_refused_before_allocating() {
+        // Length prefix claims 2^31 bytes: must be InvalidData, not OOM.
+        let buf = (1u32 << 31).to_be_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(buf), MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frames_error_not_hang_not_panic() {
+        // Truncated length prefix.
+        let err = read_frame(&mut Cursor::new(vec![0u8, 0]), MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        // Truncated payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"full payload").unwrap();
+        buf.truncate(buf.len() - 4);
+        let err = read_frame(&mut Cursor::new(buf), MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn random_byte_blobs_never_panic() {
+        use crate::testing::prop::forall_seeded;
+        forall_seeded("frame reader on garbage", 0xF4A3, 100, |g| {
+            let n = g.usize_in(0, 64);
+            let blob: Vec<u8> = (0..n).map(|_| (g.usize_in(0, 255)) as u8).collect();
+            // Any outcome is fine except a panic or an oversized alloc.
+            match read_frame(&mut Cursor::new(blob), 1 << 16) {
+                Ok(Some(p)) => assert!(p.len() <= 1 << 16),
+                Ok(None) | Err(_) => {}
+            }
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Network transports over the [`Router`](super::router::Router): a
+//! std-only (no new deps) length-prefixed framed TCP front end and its
+//! matching client.
+//!
+//! Layering:
+//!
+//! ```text
+//!   [frame]  u32-BE length prefix + UTF-8 JSON payload   (framing)
+//!   [mod]    Request / Response envelopes                 (correlation)
+//!   [tcp]    TcpFrontEnd: accept loop, per-connection
+//!            reader/writer threads, connection limits     (server)
+//!   [client] RemoteClient / RemoteTicket: JobSink over
+//!            a socket, reply demux by request id          (client)
+//! ```
+//!
+//! Every payload is one envelope. Requests carry a client-chosen `id`
+//! (echoed verbatim in the response, so replies may arrive out of order)
+//! and a nested *complete* wire document — `{"v":3,"id":7,"job":{…}}` or
+//! `{"v":3,"id":8,"admin":{…}}` — whose own `v` tag is validated by the
+//! shared router decode path, exactly as for `rfnn job`. Responses are
+//! `{"v":3,"id":7,"result":{…}}`, `{"v":3,"id":8,"admin_reply":{…}}`, or
+//! `{"v":3,"id":7,"error":{"code":"overloaded","message":"…"}}`.
+//! Connection-level refusals — connection limit, unreadable framing, or
+//! an undecodable *envelope* (non-UTF-8, malformed JSON, wrong envelope
+//! version, unusable id) — use `id: 0`, which no client request ever
+//! uses, and are terminal: the server closes the connection after the
+//! id-0 error frame, matching the client's treatment of id-0 errors.
+//! Failures inside a well-enveloped request (bad nested job, unknown
+//! processor, overload, oversized reply) are answered under the
+//! request's own id and the connection keeps serving.
+
+pub mod client;
+pub mod frame;
+pub mod tcp;
+
+pub use client::{RemoteClient, RemoteTicket};
+pub use frame::{read_frame, write_frame, MAX_FRAME};
+pub use tcp::{TcpConfig, TcpFrontEnd};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+use super::router::{Admin, AdminReply};
+use super::service::{get_index, get_str, Job, JobResult, WIRE_VERSION};
+
+/// Request ids are client-chosen and echoed back; `0` is reserved for
+/// connection-level error responses, so clients start at 1.
+pub const CONNECTION_ID: u64 = 0;
+
+/// One framed request: a job submission or an admin call.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Submit the nested job; answered by `Response::Result` or
+    /// `Response::Error` under the same id.
+    Job { id: u64, job: Job },
+    /// Execute the nested admin call; answered by `Response::AdminReply`.
+    Admin { id: u64, admin: Admin },
+}
+
+impl Request {
+    /// The correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Job { id, .. } | Request::Admin { id, .. } => *id,
+        }
+    }
+
+    /// Wire form (the nested document carries its own `v` tag).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Job { id, job } => Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("id", Json::Num(*id as f64)),
+                ("job", job.to_json()),
+            ]),
+            Request::Admin { id, admin } => Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("id", Json::Num(*id as f64)),
+                ("admin", admin.to_json()),
+            ]),
+        }
+    }
+
+    /// Decode an envelope. The *envelope* is strictly v3; the nested
+    /// document is decoded by the shared `Job`/`Admin` paths (which also
+    /// accept v2 jobs through the compat shim).
+    pub fn from_json(v: &Json) -> Result<Request> {
+        check_envelope_version(v)?;
+        let id = get_index(v, "id")?;
+        if id == CONNECTION_ID {
+            return Err(Error::msg("wire: request id 0 is reserved"));
+        }
+        if let Some(job) = v.get("job") {
+            return Ok(Request::Job { id, job: Job::from_json(job)? });
+        }
+        if let Some(admin) = v.get("admin") {
+            return Ok(Request::Admin { id, admin: Admin::from_json(admin)? });
+        }
+        Err(Error::msg("wire: request envelope needs a 'job' or 'admin' field"))
+    }
+
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(text: &str) -> Result<Request> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        Request::from_json(&v)
+    }
+}
+
+/// One framed response, correlated to its request by `id`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The job's answer.
+    Result { id: u64, result: JobResult },
+    /// The admin call's answer.
+    AdminReply { id: u64, reply: AdminReply },
+    /// The request (or, under `id` [`CONNECTION_ID`], the connection)
+    /// was refused; `code` is a stable machine-readable reason
+    /// ([`super::router::RouterError::code`]).
+    Error { id: u64, code: String, message: String },
+}
+
+impl Response {
+    /// The correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Result { id, .. }
+            | Response::AdminReply { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+
+    /// Wire form.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Result { id, result } => Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("id", Json::Num(*id as f64)),
+                ("result", result.to_json()),
+            ]),
+            Response::AdminReply { id, reply } => Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("id", Json::Num(*id as f64)),
+                ("admin_reply", reply.to_json()),
+            ]),
+            Response::Error { id, code, message } => Json::obj(vec![
+                ("v", Json::Num(WIRE_VERSION as f64)),
+                ("id", Json::Num(*id as f64)),
+                (
+                    "error",
+                    Json::obj(vec![
+                        ("code", Json::Str(code.clone())),
+                        ("message", Json::Str(message.clone())),
+                    ]),
+                ),
+            ]),
+        }
+    }
+
+    /// Decode an envelope (strictly v3, like [`Request::from_json`]).
+    pub fn from_json(v: &Json) -> Result<Response> {
+        check_envelope_version(v)?;
+        let id = get_index(v, "id")?;
+        if let Some(result) = v.get("result") {
+            return Ok(Response::Result { id, result: JobResult::from_json(result)? });
+        }
+        if let Some(reply) = v.get("admin_reply") {
+            return Ok(Response::AdminReply { id, reply: AdminReply::from_json(reply)? });
+        }
+        if let Some(err) = v.get("error") {
+            return Ok(Response::Error {
+                id,
+                code: get_str(err, "code")?.to_string(),
+                message: get_str(err, "message")?.to_string(),
+            });
+        }
+        Err(Error::msg(
+            "wire: response envelope needs a 'result', 'admin_reply' or 'error' field",
+        ))
+    }
+
+    pub fn encode(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn decode(text: &str) -> Result<Response> {
+        let v = parse(text).ok_or_else(|| Error::msg("wire: malformed JSON"))?;
+        Response::from_json(&v)
+    }
+}
+
+fn check_envelope_version(v: &Json) -> Result<()> {
+    let ver = get_index(v, "v")?;
+    if ver != WIRE_VERSION {
+        return Err(Error::msg(format!(
+            "wire: transport envelopes require version {WIRE_VERSION}, got {ver}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelopes_round_trip() {
+        let reqs = vec![
+            Request::Job {
+                id: 7,
+                job: Job::Infer { processor: "mnist8".into(), image: vec![0.5, 0.25] },
+            },
+            Request::Admin { id: 8, admin: Admin::Health },
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+        let resps = vec![
+            Response::Result {
+                id: 7,
+                result: JobResult::Infer { probs: vec![0.1; 10], queued_us: 1, service_us: 2 },
+            },
+            Response::AdminReply { id: 8, reply: AdminReply::ShuttingDown },
+            Response::Error { id: 9, code: "overloaded".into(), message: "queue full".into() },
+        ];
+        for r in resps {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn envelope_rejects_reserved_id_bad_version_and_missing_body() {
+        let ok = Request::Job {
+            id: 1,
+            job: Job::Infer { processor: "m".into(), image: vec![] },
+        };
+        let mut doc = crate::util::json::parse(&ok.encode()).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("id".into(), Json::Num(0.0));
+        }
+        assert!(Request::from_json(&doc).is_err(), "id 0 is reserved");
+        assert!(Request::decode(r#"{"v":2,"id":1,"admin":{"v":3,"admin":"health"}}"#).is_err());
+        assert!(Request::decode(r#"{"v":3,"id":1}"#).is_err());
+        assert!(Response::decode(r#"{"v":3,"id":1}"#).is_err());
+    }
+
+    #[test]
+    fn v2_jobs_ride_inside_v3_envelopes() {
+        // A v2 peer upgraded only its envelope layer: the nested job may
+        // still be v2 and must decode through the compat shim.
+        let text = r#"{"v":3,"id":4,"job":{"v":2,"kind":"reprogram","processor":"mesh8","code":[1,2]}}"#;
+        match Request::decode(text).unwrap() {
+            Request::Job { id, job } => {
+                assert_eq!(id, 4);
+                assert_eq!(
+                    job,
+                    Job::Reprogram { processor: "mesh8".into(), code: vec![1, 2] }
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! `TcpFrontEnd`: a std-only framed TCP server over the
+//! [`Router`](crate::coordinator::router::Router).
+//!
+//! Threading model (no async runtime — `std::net` + threads, matching the
+//! crate's zero-dependency rule):
+//!
+//! * one **accept loop** thread (non-blocking listener polled against the
+//!   shutdown flag) enforcing the connection limit — beyond it a
+//!   connection is *shed*, not queued: it gets one
+//!   `{"error":{"code":"overloaded"}}` frame (the transport-level mirror
+//!   of `SubmitError::Overloaded`) and is closed;
+//! * one **reader** thread per connection, decoding frames and submitting
+//!   through the shared router path (`submit_json` — the same decode /
+//!   validation / metrics code the CLI uses);
+//! * one **writer** thread per connection, draining a channel of
+//!   responses (replies may be produced out of order by the waiters);
+//! * one short-lived **waiter** thread per in-flight job, blocking on
+//!   `Router::wait` and handing the response to the writer.
+//!
+//! Reads run under a short socket timeout so every blocked thread
+//! re-checks the shutdown flag; partial frames are preserved across
+//! timeouts (a slow peer never corrupts framing).
+
+use crate::util::error::{Error, Result};
+use crate::util::json::parse;
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::super::router::{Endpoint, Router};
+use super::{write_frame, Response, CONNECTION_ID};
+
+/// Front-end tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpConfig {
+    /// Concurrent-connection limit; further connections shed with an
+    /// `overloaded` error frame.
+    pub max_connections: usize,
+    /// Per-frame payload cap (refused before allocating).
+    pub max_frame: usize,
+    /// Socket read timeout — the shutdown-flag polling granularity.
+    pub read_timeout: Duration,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            max_connections: 64,
+            max_frame: super::MAX_FRAME,
+            read_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A listening framed-TCP front end. Binding spawns the accept loop;
+/// [`Admin::Shutdown`](crate::coordinator::router::Admin) (or
+/// [`TcpFrontEnd::shutdown`]) stops it.
+pub struct TcpFrontEnd {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpFrontEnd {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks an ephemeral
+    /// port — read it back with [`Self::local_addr`]) and start
+    /// accepting.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: TcpConfig) -> Result<TcpFrontEnd> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::msg(format!("bind {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::msg(format!("set_nonblocking: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::msg(format!("local_addr: {e}")))?;
+        let stop = router.stop_flag();
+        let accept_stop = stop.clone();
+        let accept =
+            std::thread::spawn(move || accept_loop(listener, router, cfg, accept_stop));
+        Ok(TcpFrontEnd { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (with the real port when binding port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until shutdown is requested (by [`Self::shutdown`] or an
+    /// `Admin::Shutdown` over the wire).
+    pub fn wait_shutdown(&self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Stop accepting and join the accept loop (connection threads drain
+    /// on their own as peers disconnect or notice the flag).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for TcpFrontEnd {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, router: Arc<Router>, cfg: TcpConfig, stop: Arc<AtomicBool>) {
+    let live = Arc::new(AtomicUsize::new(0));
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let t = &router.metrics().transport;
+                if live.load(Ordering::SeqCst) >= cfg.max_connections {
+                    t.connections_refused.fetch_add(1, Ordering::Relaxed);
+                    refuse(stream);
+                    continue;
+                }
+                t.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                live.fetch_add(1, Ordering::SeqCst);
+                let router = router.clone();
+                let stop = stop.clone();
+                let live = live.clone();
+                std::thread::spawn(move || {
+                    handle_conn(stream, router, cfg, stop);
+                    live.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Shed a connection beyond the limit: one error frame, then close.
+fn refuse(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let resp = Response::Error {
+        id: CONNECTION_ID,
+        code: "overloaded".to_string(),
+        message: "connection limit reached".to_string(),
+    };
+    let _ = write_frame(&mut stream, resp.encode().as_bytes());
+}
+
+fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop: Arc<AtomicBool>) {
+    let metrics = router.metrics().clone();
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
+        return;
+    }
+    let Ok(writer_stream) = stream.try_clone() else { return };
+    let (out_tx, out_rx) = channel::<Response>();
+    let writer_metrics = metrics.clone();
+    let writer = std::thread::spawn(move || {
+        let mut w = io::BufWriter::new(writer_stream);
+        for resp in out_rx {
+            // A reply that cannot fit one frame (huge RawApply result)
+            // must not wedge the writer: substitute a small error frame
+            // under the SAME id so the waiting client resolves, and keep
+            // serving the connection. Only real socket errors break.
+            let mut payload = resp.encode();
+            if payload.len() > cfg.max_frame {
+                payload = Response::Error {
+                    id: resp.id(),
+                    code: "reply_too_large".to_string(),
+                    message: format!(
+                        "reply of {} bytes exceeds the {}-byte frame cap",
+                        payload.len(),
+                        cfg.max_frame
+                    ),
+                }
+                .encode();
+            }
+            if write_frame(&mut w, payload.as_bytes()).is_err() {
+                break;
+            }
+            writer_metrics.transport.frames_out.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    loop {
+        match read_frame_interruptible(&mut stream, cfg.max_frame, &stop) {
+            Ok(ConnRead::Frame(payload)) => {
+                metrics.transport.frames_in.fetch_add(1, Ordering::Relaxed);
+                if !handle_frame(&payload, &router, &out_tx) {
+                    break;
+                }
+            }
+            Ok(ConnRead::Eof) | Ok(ConnRead::Stopped) => break,
+            Err(e) => {
+                // Broken framing is unrecoverable on a byte stream: answer
+                // once at connection scope, then close.
+                metrics.transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = out_tx.send(Response::Error {
+                    id: CONNECTION_ID,
+                    code: "bad_frame".to_string(),
+                    message: e.to_string(),
+                });
+                break;
+            }
+        }
+    }
+    drop(out_tx);
+    // Waiter threads for in-flight jobs hold writer-channel clones; the
+    // writer exits once the last of them answers (or the peer vanishes).
+    let _ = writer.join();
+}
+
+/// Decode one envelope and dispatch it through the shared router path.
+/// Every outcome is answered; nothing is silently dropped. Returns
+/// whether the connection should stay open: an *undecodable envelope*
+/// (non-UTF-8, malformed JSON, wrong envelope version, unusable id) is a
+/// connection-scope failure — answered under id 0 and then closed, which
+/// is exactly how clients treat id-0 errors (terminal). Failures in a
+/// well-enveloped request (bad nested job, unknown processor, overload)
+/// are answered under the request's own id and the connection lives on.
+fn handle_frame(payload: &[u8], router: &Arc<Router>, out: &Sender<Response>) -> bool {
+    let reject = |message: String| {
+        router.metrics().transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
+        let _ = out.send(Response::Error {
+            id: CONNECTION_ID,
+            code: "bad_request".to_string(),
+            message,
+        });
+        false
+    };
+    let Ok(text) = std::str::from_utf8(payload) else {
+        return reject("frame payload is not UTF-8".to_string());
+    };
+    let Some(doc) = parse(text) else {
+        return reject("malformed JSON envelope".to_string());
+    };
+    if let Err(e) = super::check_envelope_version(&doc) {
+        return reject(e.to_string());
+    }
+    let id = match super::super::service::get_index(&doc, "id") {
+        Ok(0) => return reject("request id 0 is reserved".to_string()),
+        Ok(id) => id,
+        Err(e) => return reject(e.to_string()),
+    };
+    if let Some(job_doc) = doc.get("job") {
+        // Job decode + validation + admission + metrics: one shared path
+        // (`Router::submit_json`), identical to the CLI's `rfnn job`.
+        match router.submit_json(job_doc) {
+            Ok(ticket) => {
+                let router = router.clone();
+                let out = out.clone();
+                std::thread::spawn(move || {
+                    let resp = match router.wait(ticket) {
+                        Ok(result) => Response::Result { id, result },
+                        Err(e) => Response::Error {
+                            id,
+                            code: e.code().to_string(),
+                            message: e.to_string(),
+                        },
+                    };
+                    let _ = out.send(resp);
+                });
+            }
+            Err(e) => {
+                let _ = out.send(Response::Error {
+                    id,
+                    code: e.code().to_string(),
+                    message: e.to_string(),
+                });
+            }
+        }
+    } else if let Some(admin_doc) = doc.get("admin") {
+        let resp = match router.admin_json(admin_doc) {
+            Ok(reply) => Response::AdminReply { id, reply },
+            Err(e) => {
+                Response::Error { id, code: e.code().to_string(), message: e.to_string() }
+            }
+        };
+        let _ = out.send(resp);
+    } else {
+        let _ = out.send(Response::Error {
+            id,
+            code: "bad_request".to_string(),
+            message: "request envelope needs a 'job' or 'admin' field".to_string(),
+        });
+    }
+    true
+}
+
+enum ConnRead {
+    Frame(Vec<u8>),
+    Eof,
+    Stopped,
+}
+
+enum Fill {
+    Done,
+    Eof,
+    Stopped,
+}
+
+/// [`super::read_frame`] over a socket with a read timeout: timeouts
+/// re-check the shutdown flag and *resume the partial read* — a frame
+/// split across timeout boundaries is reassembled, never corrupted.
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    max: usize,
+    stop: &AtomicBool,
+) -> io::Result<ConnRead> {
+    let mut len_buf = [0u8; 4];
+    match fill(stream, &mut len_buf, stop, true)? {
+        Fill::Eof => return Ok(ConnRead::Eof),
+        Fill::Stopped => return Ok(ConnRead::Stopped),
+        Fill::Done => {}
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {max}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    match fill(stream, &mut payload, stop, false)? {
+        Fill::Eof => Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "truncated frame payload",
+        )),
+        Fill::Stopped => Ok(ConnRead::Stopped),
+        Fill::Done => Ok(ConnRead::Frame(payload)),
+    }
+}
+
+/// Fill `buf` completely, treating timeouts as flag-check points. A clean
+/// EOF is only legal before the first byte (`eof_ok`).
+fn fill(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> io::Result<Fill> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(Fill::Stopped);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && eof_ok {
+                    Ok(Fill::Eof)
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed mid-frame",
+                    ))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Fill::Done)
+}

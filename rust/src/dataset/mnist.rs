@@ -17,7 +17,11 @@ use std::path::Path;
 
 /// Load MNIST if `RFNN_MNIST_DIR` is set and valid; otherwise synthesize
 /// `(n_train, n_test)` procedural digit images with the given seed.
-pub fn load_or_synthesize(n_train: usize, n_test: usize, seed: u64) -> (ImageDataset, ImageDataset) {
+pub fn load_or_synthesize(
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (ImageDataset, ImageDataset) {
     if let Ok(dir) = std::env::var("RFNN_MNIST_DIR") {
         if let Ok(pair) = load_idx_dir(Path::new(&dir)) {
             let (mut tr, mut te) = pair;
@@ -81,7 +85,13 @@ pub fn parse_idx_pair(images: &[u8], labels: &[u8]) -> Result<ImageDataset, Stri
     if images.len() < 16 + n * px || labels.len() < 8 + n {
         return Err("truncated IDX data".into());
     }
-    let mut ds = ImageDataset { images: Vec::with_capacity(n), labels: Vec::with_capacity(n), rows, cols, classes: 10 };
+    let mut ds = ImageDataset {
+        images: Vec::with_capacity(n),
+        labels: Vec::with_capacity(n),
+        rows,
+        cols,
+        classes: 10,
+    };
     for i in 0..n {
         let start = 16 + i * px;
         ds.images.push(images[start..start + px].iter().map(|&b| b as f64 / 255.0).collect());
@@ -111,7 +121,10 @@ fn templates(digit: usize) -> Vec<Vec<(f64, f64)>> {
             p.extend([(0.22, 0.9), (0.8, 0.9)]);
             p
         }],
-        3 => vec![arc(0.45, 0.28, 0.3, 0.2, 1.25 * PI, 2.6 * PI, 12), arc(0.45, 0.7, 0.32, 0.23, 1.45 * PI, 2.8 * PI, 12)],
+        3 => vec![
+            arc(0.45, 0.28, 0.3, 0.2, 1.25 * PI, 2.6 * PI, 12),
+            arc(0.45, 0.7, 0.32, 0.23, 1.45 * PI, 2.8 * PI, 12),
+        ],
         4 => vec![vec![(0.62, 0.08), (0.18, 0.6), (0.85, 0.6)], vec![(0.62, 0.08), (0.62, 0.92)]],
         5 => vec![{
             let mut p = vec![(0.78, 0.1), (0.28, 0.1), (0.25, 0.45)];
@@ -124,7 +137,10 @@ fn templates(digit: usize) -> Vec<Vec<(f64, f64)>> {
             p
         }],
         7 => vec![vec![(0.2, 0.1), (0.8, 0.1), (0.42, 0.92)]],
-        8 => vec![arc(0.5, 0.3, 0.24, 0.2, 0.0, 2.0 * PI, 16), arc(0.5, 0.7, 0.29, 0.22, 0.0, 2.0 * PI, 16)],
+        8 => vec![
+            arc(0.5, 0.3, 0.24, 0.2, 0.0, 2.0 * PI, 16),
+            arc(0.5, 0.7, 0.29, 0.22, 0.0, 2.0 * PI, 16),
+        ],
         9 => vec![arc(0.5, 0.32, 0.26, 0.22, 0.0, 2.0 * PI, 16), vec![(0.76, 0.32), (0.68, 0.92)]],
         _ => unreachable!("digit 0-9"),
     }
@@ -186,7 +202,13 @@ pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f64> {
 /// Generate `n` synthetic digit images with balanced classes.
 pub fn synthetic(n: usize, seed: u64) -> ImageDataset {
     let mut rng = Rng::new(seed);
-    let mut ds = ImageDataset { images: Vec::with_capacity(n), labels: Vec::with_capacity(n), rows: 28, cols: 28, classes: 10 };
+    let mut ds = ImageDataset {
+        images: Vec::with_capacity(n),
+        labels: Vec::with_capacity(n),
+        rows: 28,
+        cols: 28,
+        classes: 10,
+    };
     for i in 0..n {
         let digit = i % 10;
         ds.images.push(render_digit(digit, &mut rng));

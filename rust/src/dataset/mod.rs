@@ -29,7 +29,11 @@ impl Dataset2D {
     }
 
     /// Split into (train, test) by a deterministic shuffled partition.
-    pub fn split(&self, train_frac: f64, rng: &mut crate::math::rng::Rng) -> (Dataset2D, Dataset2D) {
+    pub fn split(
+        &self,
+        train_frac: f64,
+        rng: &mut crate::math::rng::Rng,
+    ) -> (Dataset2D, Dataset2D) {
         let mut idx: Vec<usize> = (0..self.len()).collect();
         rng.shuffle(&mut idx);
         let n_train = ((self.len() as f64) * train_frac).round() as usize;

@@ -24,7 +24,8 @@ pub enum Scenario {
 
 impl Scenario {
     /// All four, in the paper's (a)–(d) order.
-    pub const ALL: [Scenario; 4] = [Scenario::Corner, Scenario::DiagUp, Scenario::DiagDown, Scenario::Ring];
+    pub const ALL: [Scenario; 4] =
+        [Scenario::Corner, Scenario::DiagUp, Scenario::DiagDown, Scenario::Ring];
 
     /// Paper-style name.
     pub fn name(&self) -> &'static str {

@@ -120,13 +120,15 @@ impl UnitCellCircuit {
             let g = 1.0 + self.imp.hybrid_gain_err;
             h_s = SMatrix::new(h_s.mat().scale(crate::math::c64::C64::real(g)));
         }
-        let theta_s = self.ps_sparams(&self.theta_ps, self.imp.theta_len_err[st.theta], f, st.theta);
+        let theta_s =
+            self.ps_sparams(&self.theta_ps, self.imp.theta_len_err[st.theta], f, st.theta);
         let phi_s = self.ps_sparams(&self.phi_ps, self.imp.phi_len_err[st.phi], f, st.phi);
         // Reference arm: plain line + balancing pad (+ imbalance knob). The
         // pad also carries the θ-shifter's static switch-path phase so the
         // differential phase between the arms is exactly Table I at f0 —
         // the prototype's reference trace is length-trimmed the same way.
-        let ref_gain = self.ref_pad * if self.imp.ref_arm_gain == 0.0 { 1.0 } else { self.imp.ref_arm_gain };
+        let ref_gain =
+            self.ref_pad * if self.imp.ref_arm_gain == 0.0 { 1.0 } else { self.imp.ref_arm_gain };
         let switch_static = 2.0 * self.theta_ps.switch.path_phase * (f / F0);
         let arm = {
             let line = self.ref_arm.sparams(f, Z0);
@@ -182,7 +184,9 @@ mod tests {
     #[test]
     fn passive_and_reciprocal_all_states() {
         let c = cell();
-        for st in [State { theta: 0, phi: 0 }, State { theta: 3, phi: 5 }, State { theta: 5, phi: 2 }] {
+        let probes =
+            [State { theta: 0, phi: 0 }, State { theta: 3, phi: 5 }, State { theta: 5, phi: 2 }];
+        for st in probes {
             let s = c.sparams(F0, st);
             assert!(s.is_passive(1e-6), "{}", st.label());
             assert!(s.is_reciprocal(1e-9), "{}", st.label());

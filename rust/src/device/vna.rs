@@ -57,7 +57,10 @@ impl MeasuredUnitCell {
     /// Fabricate with an explicit spread (σ = 0 → noiseless nominal device).
     pub fn fabricate_with(seed: u64, spread: FabSpread) -> Self {
         let mut rng = Rng::new(seed ^ 0xFAB0_DE71);
-        let mut imp = Imperfections { ref_arm_gain: 1.0 + spread.arm_err * rng.normal(), ..Default::default() };
+        let mut imp = Imperfections {
+            ref_arm_gain: 1.0 + spread.arm_err * rng.normal(),
+            ..Default::default()
+        };
         for i in 0..6 {
             imp.theta_len_err[i] = spread.len_err * rng.normal();
             imp.phi_len_err[i] = spread.len_err * rng.normal();

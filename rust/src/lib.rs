@@ -36,8 +36,10 @@
 //!   offline build substitutes a fail-closed stub and serves natively).
 //! * [`coordinator`] — the serving layer: the unified
 //!   [`coordinator::service::ProcessorService`] front door (typed jobs,
-//!   processor pool, backpressure, versioned wire protocol), dynamic
-//!   batcher, device-state scheduler, and metrics.
+//!   live processor pool, backpressure, versioned wire protocol), the
+//!   transport-agnostic [`coordinator::router::Router`], the std-only
+//!   framed-TCP transport ([`coordinator::transport`]), dynamic batcher,
+//!   device-state scheduler, and metrics.
 //! * [`bench`] — the paper-experiment harness regenerating every table/figure,
 //!   plus the batched-GEMM perf trajectory (`BENCH_pr1.json`).
 //! * [`cli`] — hand-rolled argument parsing for the `rfnn` binary.
@@ -89,35 +91,73 @@
 //!
 //! ## Serving model
 //!
-//! Every workload is served through ONE front door,
-//! [`coordinator::service::ProcessorService`]:
+//! Every workload is served through ONE front door, and every *wire*
+//! caller — local CLI or remote host — through ONE dispatch layer:
 //!
 //! ```text
-//!   ProcessorPool::register(name, Workload, PoolConfig)  named, versioned processors
-//!   ProcessorService::submit(Job) -> Ticket              bounded admission queue:
-//!                                                        Err(Overloaded), never blocks
-//!   Ticket::wait() -> JobResult                          reply routing owned by the service
+//!   typed, in-process                       wire, transport-agnostic
+//!   ─────────────────                       ────────────────────────
+//!   ProcessorPool::register(name, ...)      Router::submit_wire(bytes) -> id
+//!   ProcessorService::submit(Job)->Ticket   Router::poll / wait (by ticket id)
+//!   Ticket::wait() -> JobResult             Router::admin (control plane)
+//!            ▲                                        ▲
+//!            │                                        │ frames
+//!       JobSink (generic local/remote)       TcpFrontEnd ⇄ RemoteClient
 //! ```
 //!
 //! [`coordinator::service::Job`] is a typed enum — `Infer` (MNIST image),
 //! `Classify` (2×2 point under a named classifier), `RawApply`
 //! (matrix-free `in × B` batch against any processor), `Reprogram` (new
-//! θ/φ state codes; bumps the processor's pool version) — and doubles as
-//! the wire schema: `Job`/`JobResult` round-trip through [`util::json`]
-//! under [`coordinator::service::WIRE_VERSION`], with decoders rejecting
-//! unknown versions, so the CLI (`rfnn job`), the benches
-//! (`BENCH_pr2.json`), and future network transports speak one format.
+//! θ/φ state codes; bumps the processor's pool version), and `Compile`
+//! (lower an arbitrary weight matrix onto a tile fleet and register the
+//! resulting virtual processor into the LIVE pool, answered with the plan
+//! summary as `JobResult::Compiled`) — and doubles as the wire schema:
+//! `Job`/`JobResult` round-trip through [`util::json`] under
+//! [`coordinator::service::WIRE_VERSION`] (v3). Version negotiation is
+//! one-sided and explicit: decoders accept v3, route v2 documents through
+//! the [`coordinator::service::compat`] shim (the four legacy job kinds
+//! decode identically; v3-only kinds inside a v2 document are refused),
+//! and reject every other version; encoders always emit v3.
+//!
+//! The [`coordinator::router::Router`] (the one
+//! [`coordinator::router::Endpoint`] implementation) owns wire decode,
+//! validation, the pending-ticket table, decode-reject accounting, and
+//! the admin plane (`ListProcessors` / `MetricsSnapshot` / `Health` /
+//! `Shutdown`) — `rfnn job`, `rfnn serve --listen`, and the loopback
+//! tests share this single code path. [`coordinator::transport`] carries
+//! it over the network with zero new dependencies: frames are
+//! `[u32 big-endian length][UTF-8 JSON envelope]` (oversized or
+//! truncated frames are refused, never panicking), envelopes correlate
+//! out-of-order replies by client-chosen id, and
+//! [`coordinator::transport::TcpFrontEnd`] serves concurrent connections
+//! with per-connection reader/writer threads, shedding past the
+//! connection limit with the same `Overloaded` semantics as the
+//! admission queues. [`coordinator::transport::RemoteClient`] mirrors
+//! the local API (`submit(Job) -> RemoteTicket` / `wait()`); both it and
+//! `ProcessorService` implement [`coordinator::router::JobSink`], so
+//! driver code is generic over where the fleet lives.
+//!
+//! Compile-over-the-wire lifecycle: a `Job::Compile { name, rows, cols,
+//! weights, tile, fidelity }` document (any transport) runs the tiling
+//! compiler through the shared plan cache on a control-plane thread,
+//! registers the [`compiler::VirtualProcessor`] under `name` in the live
+//! registry (the pool map is `RwLock`ed; the submit path takes only the
+//! read lock), and answers `Compiled { grid, state_vars, fro_error,
+//! cache_hit, .. }` — after which `RawApply`/`Reprogram` traffic to
+//! `name` serves immediately, including from other connections.
 //!
 //! A [`coordinator::service::Workload`] maps each registered processor to
 //! its worker: the MNIST worker coalesces infer jobs (dynamic batcher →
 //! one `apply_batch` GEMM per batch, PJRT-padded when AOT artifacts
 //! serve); the classify worker groups jobs per device state to minimize
 //! re-biases; the bare-processor worker serves raw applies and validated
-//! state writes. Per-job-kind submitted/served/rejected counters live in
-//! [`coordinator::metrics::Metrics`]; `Reprogram` is control-plane and
-//! never pollutes batch-occupancy accounting. Multiple processors serve
-//! concurrently from one pool; adding a workload is a `Job` variant plus
-//! a worker arm, not a new service loop.
+//! state writes. Per-job-kind submitted/served/rejected counters AND
+//! per-transport counters (connections accepted/refused, frames in/out,
+//! decode rejects) live in [`coordinator::metrics::Metrics`], so the
+//! admin `MetricsSnapshot` reply is complete; `Reprogram`/`Compile` are
+//! control-plane and never pollute batch-occupancy accounting. Multiple
+//! processors serve concurrently from one pool; adding a workload is a
+//! `Job` variant plus a worker arm, not a new service loop.
 //!
 //! ## Virtualization model
 //!

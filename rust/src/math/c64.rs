@@ -89,7 +89,10 @@ impl C64 {
     /// Principal square root.
     pub fn sqrt(self) -> Self {
         let r = self.abs();
-        let z = C64::new((0.5 * (r + self.re)).max(0.0).sqrt(), (0.5 * (r - self.re)).max(0.0).sqrt());
+        let z = C64::new(
+            (0.5 * (r + self.re)).max(0.0).sqrt(),
+            (0.5 * (r - self.re)).max(0.0).sqrt(),
+        );
         if self.im < 0.0 {
             C64::new(z.re, -z.im)
         } else {

@@ -120,12 +120,17 @@ impl CMat {
 
     /// Elementwise conjugate.
     pub fn conj(&self) -> CMat {
-        CMat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|z| z.conj()).collect() }
+        let data = self.data.iter().map(|z| z.conj()).collect();
+        CMat { rows: self.rows, cols: self.cols, data }
     }
 
     /// Matrix product `self * other`.
     pub fn matmul(&self, other: &CMat) -> CMat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch: {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
         let mut out = CMat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
             for k in 0..self.cols {
@@ -395,7 +400,11 @@ mod tests {
 
     #[test]
     fn embed_2x2_structure() {
-        let t = CMat::from_rows(2, 2, &[C64::new(0.0, 1.0), C64::real(2.0), C64::real(3.0), C64::new(4.0, -1.0)]);
+        let t = CMat::from_rows(
+            2,
+            2,
+            &[C64::new(0.0, 1.0), C64::real(2.0), C64::real(3.0), C64::new(4.0, -1.0)],
+        );
         let m = CMat::embed_2x2(4, 1, 2, &t);
         assert_eq!(m[(0, 0)], C64::ONE);
         assert_eq!(m[(3, 3)], C64::ONE);

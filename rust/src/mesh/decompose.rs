@@ -183,7 +183,12 @@ pub struct SvdSynthesis {
 impl SvdSynthesis {
     /// Assemble a synthesis from its parts (the plan-cache rebuild path —
     /// no SVD or decomposition is redone).
-    pub fn new(u_mesh: MeshProgram, diag: Vec<f64>, vh_mesh: MeshProgram, scale: f64) -> SvdSynthesis {
+    pub fn new(
+        u_mesh: MeshProgram,
+        diag: Vec<f64>,
+        vh_mesh: MeshProgram,
+        scale: f64,
+    ) -> SvdSynthesis {
         assert_eq!(u_mesh.n, vh_mesh.n, "U and V^H meshes must share the channel count");
         assert_eq!(diag.len(), u_mesh.n, "one singular value per channel");
         SvdSynthesis { u_mesh, diag, vh_mesh, scale, composed: OnceLock::new() }
@@ -399,7 +404,8 @@ mod tests {
         let mut rng = Rng::new(36);
         let u = rand_unitary(&mut rng, 4);
         // Perturb slightly off-unitary.
-        let pert = CMat::from_fn(4, 4, |i, j| u[(i, j)] + C64::new(rng.normal(), rng.normal()) * 1e-4);
+        let pert =
+            CMat::from_fn(4, 4, |i, j| u[(i, j)] + C64::new(rng.normal(), rng.normal()) * 1e-4);
         let prog = decompose_unitary(&pert);
         let err = prog.matrix().sub(&pert).max_abs();
         assert!(err < 1e-2, "err {err}");

@@ -51,7 +51,9 @@ impl DiscreteMesh {
         let devices: Vec<MeasuredUnitCell> = match &backend {
             MeshBackend::Ideal => Vec::new(),
             MeshBackend::Measured { base_seed } => {
-                (0..cells).map(|i| MeasuredUnitCell::fabricate(base_seed.wrapping_add(i as u64))).collect()
+                (0..cells)
+                    .map(|i| MeasuredUnitCell::fabricate(base_seed.wrapping_add(i as u64)))
+                    .collect()
             }
         };
         // Precompute all 36 blocks per cell.

@@ -135,7 +135,12 @@ impl QuantizedMesh {
         let report = quantize_program(&prog);
         let mut mesh = DiscreteMesh::new(u.rows(), backend);
         mesh.set_states(&report.states);
-        let mut q = QuantizedMesh { mesh, input_phases: prog.input_phases, cached: CMat::eye(u.rows()), report };
+        let mut q = QuantizedMesh {
+            mesh,
+            input_phases: prog.input_phases,
+            cached: CMat::eye(u.rows()),
+            report,
+        };
         q.recache();
         q
     }

@@ -145,7 +145,12 @@ mod tests {
         for i in 0..4 {
             for j in 0..4 {
                 let d = (s.s(i, j) - ideal.s(i, j)).abs();
-                assert!(d < 2e-3, "S[{i}][{j}] differs by {d}: {:?} vs {:?}", s.s(i, j), ideal.s(i, j));
+                assert!(
+                    d < 2e-3,
+                    "S[{i}][{j}] differs by {d}: {:?} vs {:?}",
+                    s.s(i, j),
+                    ideal.s(i, j)
+                );
             }
         }
     }

@@ -54,7 +54,8 @@ pub fn eps_eff(u: f64, eps_r: f64) -> f64 {
 /// Hammerstad–Jensen characteristic impedance (Ω) for `u = w/h`.
 pub fn z0_microstrip(u: f64, eps_r: f64) -> f64 {
     let f = 6.0 + (2.0 * std::f64::consts::PI - 6.0) * (-((30.666 / u).powf(0.7528))).exp();
-    let z01 = ETA0 / (2.0 * std::f64::consts::PI) * ((f / u) + (1.0 + (2.0 / u).powi(2)).sqrt()).ln();
+    let z01 =
+        ETA0 / (2.0 * std::f64::consts::PI) * ((f / u) + (1.0 + (2.0 / u).powi(2)).sqrt()).ln();
     z01 / eps_eff(u, eps_r).sqrt()
 }
 
@@ -64,7 +65,10 @@ pub fn synthesize_u(z0: f64, eps_r: f64) -> f64 {
     let (mut lo, mut hi) = (0.05, 40.0);
     let zlo = z0_microstrip(hi, eps_r);
     let zhi = z0_microstrip(lo, eps_r);
-    assert!(z0 > zlo && z0 < zhi, "target Z0={z0} outside synthesizable range [{zlo:.1}, {zhi:.1}]");
+    assert!(
+        z0 > zlo && z0 < zhi,
+        "target Z0={z0} outside synthesizable range [{zlo:.1}, {zhi:.1}]"
+    );
     for _ in 0..200 {
         let mid = 0.5 * (lo + hi);
         if z0_microstrip(mid, eps_r) > z0 {

@@ -265,7 +265,11 @@ mod tests {
 
     #[test]
     fn passivity_rejects_gain() {
-        let s = SMatrix::new(CMat::from_rows(2, 2, &[C64::ZERO, C64::real(1.2), C64::real(1.2), C64::ZERO]));
+        let s = SMatrix::new(CMat::from_rows(
+            2,
+            2,
+            &[C64::ZERO, C64::real(1.2), C64::real(1.2), C64::ZERO],
+        ));
         assert!(!s.is_passive(1e-6));
     }
 

@@ -103,7 +103,10 @@ impl Dspsa {
 
     /// The current best integer point (rounded iterate).
     pub fn current(&self) -> Vec<usize> {
-        self.x.iter().map(|&v| v.round().clamp(self.cfg.lo as f64, self.cfg.hi as f64) as usize).collect()
+        self.x
+            .iter()
+            .map(|&v| v.round().clamp(self.cfg.lo as f64, self.cfg.hi as f64) as usize)
+            .collect()
     }
 
     /// Convenience: one full DSPSA step against a loss oracle.
@@ -166,7 +169,8 @@ mod tests {
             d.update(&p, lp, lm);
         }
         let cur = d.current();
-        let err: f64 = cur.iter().zip(&target).map(|(&a, &t)| ((a as f64) - (t as f64)).abs()).sum();
+        let err: f64 =
+            cur.iter().zip(&target).map(|(&a, &t)| ((a as f64) - (t as f64)).abs()).sum();
         assert!(err <= 1.0, "current {cur:?} vs target {target:?}");
     }
 

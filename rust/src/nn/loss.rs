@@ -91,7 +91,8 @@ mod tests {
                 lp[(i, j)] += eps;
                 let mut lm = logits.clone();
                 lm[(i, j)] -= eps;
-                let num = (softmax_xent(&lp, &labels).0 - softmax_xent(&lm, &labels).0) / (2.0 * eps);
+                let num =
+                    (softmax_xent(&lp, &labels).0 - softmax_xent(&lm, &labels).0) / (2.0 * eps);
                 assert!((g[(i, j)] - num).abs() < 1e-6, "({i},{j}): {} vs {num}", g[(i, j)]);
             }
         }

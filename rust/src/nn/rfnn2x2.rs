@@ -233,7 +233,8 @@ pub fn train_post<D: AnalogDevice2x2>(
     let _ = last_loss;
     // Score the trained state on the full training set (final-minibatch
     // loss is too noisy for model selection at these learning rates).
-    let z: Vec<f64> = hidden.iter().map(|h| params[0] * h.0 + params[1] * h.1 + params[2]).collect();
+    let z: Vec<f64> =
+        hidden.iter().map(|h| params[0] * h.0 + params[1] * h.1 + params[2]).collect();
     let (full_loss, _) = bce_with_logit(&z, &ds.labels);
     (
         Rfnn2x2 {

@@ -131,7 +131,11 @@ impl MnistRfnn {
     /// Build the analog network over an arbitrary processor backend.
     pub fn analog_with(n_hidden: usize, layer: AnalogLinear, hidden_gain: f64, seed: u64) -> Self {
         let (out, inp) = layer.processor().dims();
-        assert_eq!((out, inp), (n_hidden, n_hidden), "hidden processor must be {n_hidden}×{n_hidden}");
+        assert_eq!(
+            (out, inp),
+            (n_hidden, n_hidden),
+            "hidden processor must be {n_hidden}×{n_hidden}"
+        );
         let mut rng = Rng::new(seed);
         MnistRfnn {
             dense1: Dense::new(784, n_hidden, &mut rng),

@@ -84,7 +84,11 @@ impl Mat {
 
     /// Matrix product.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
             for k in 0..self.cols {

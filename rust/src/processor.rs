@@ -39,6 +39,31 @@ pub enum Fidelity {
     Measured,
 }
 
+impl Fidelity {
+    /// Stable wire/CLI name (lowercase; round-trips through
+    /// [`Self::from_name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::Digital => "digital",
+            Fidelity::Ideal => "ideal",
+            Fidelity::Quantized => "quantized",
+            Fidelity::Measured => "measured",
+        }
+    }
+
+    /// Parse a fidelity name (full word or first letter), as used by the
+    /// CLI `--fidelity` flag and the `Job::Compile` wire form.
+    pub fn from_name(name: &str) -> Option<Fidelity> {
+        match name {
+            "digital" | "d" => Some(Fidelity::Digital),
+            "ideal" | "i" => Some(Fidelity::Ideal),
+            "quantized" | "q" => Some(Fidelity::Quantized),
+            "measured" | "m" => Some(Fidelity::Measured),
+            _ => None,
+        }
+    }
+}
+
 /// Cost metadata for reprogramming a processor to new weights/states.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ReprogramCost {
@@ -61,7 +86,12 @@ impl ReprogramCost {
 /// `apply_batch`/`apply` default to the blocked GEMM over the composed
 /// matrix, which is the right answer for every backend that caches its
 /// composition (all current ones do).
-pub trait LinearProcessor: Send {
+///
+/// `Send + Sync` is part of the contract: workers move processors across
+/// threads and the tiled executor fans `&self` applies across a scoped
+/// worker pool. Every backend is plain data (matrices, state vectors,
+/// `OnceLock` caches), so the bounds are free.
+pub trait LinearProcessor: Send + Sync {
     /// `(out_dim, in_dim)` of the transfer matrix.
     fn dims(&self) -> (usize, usize);
 
@@ -171,5 +201,14 @@ mod tests {
         let m = CMat::eye(3);
         let x = CMat::zeros(4, 2);
         let _ = LinearProcessor::apply_batch(&m, &x);
+    }
+
+    #[test]
+    fn fidelity_names_round_trip() {
+        for f in [Fidelity::Digital, Fidelity::Ideal, Fidelity::Quantized, Fidelity::Measured] {
+            assert_eq!(Fidelity::from_name(f.name()), Some(f));
+            assert_eq!(Fidelity::from_name(&f.name()[..1]), Some(f));
+        }
+        assert_eq!(Fidelity::from_name("analog"), None);
     }
 }

@@ -110,13 +110,18 @@ impl Manifest {
 
     /// Default artifacts dir: `$RFNN_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var("RFNN_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+        std::env::var("RFNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
     /// Spec lookup.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
         self.artifacts.get(name).ok_or_else(|| {
-            format!("artifact '{name}' not in manifest (have: {:?})", self.artifacts.keys().collect::<Vec<_>>())
+            format!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
         })
     }
 

@@ -141,7 +141,8 @@ mod tests {
     }
 
     thread_local! {
-        static CASE_DRAWS: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+        static CASE_DRAWS: std::cell::RefCell<Vec<f64>> =
+            const { std::cell::RefCell::new(Vec::new()) };
     }
 
     #[test]

@@ -160,6 +160,55 @@ fn ideal_virtual_reconstructs_to_numerical_precision() {
     });
 }
 
+/// PR-4 satellite: tiles in a column are independent GEMMs, so
+/// `apply_batch` may fan them across a scoped worker pool — and because
+/// the accumulation order is fixed and sequential, the parallel path must
+/// be BIT-IDENTICAL to the sequential one (and therefore inside every
+/// band the sequential path satisfies).
+#[test]
+fn parallel_tiled_execution_is_bit_identical_to_sequential() {
+    forall_seeded("virtual parallel ≡ sequential", 0x7125, 10, |g| {
+        let m = g.usize_in(4, 48);
+        let n = g.usize_in(4, 48);
+        let t = *g.choose(&TILES);
+        let b = *g.choose(&BATCHES);
+        let target = gen_target(g, m, n, true);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Digital))
+            .expect("digital compile");
+        let x = gen_batch(g, n, b);
+        let seq = vp.apply_batch_seq(&x);
+        for workers in [1, 2, 3, 7] {
+            let par = vp.apply_batch_par(&x, workers);
+            assert_eq!(par, seq, "m={m} n={n} t={t} b={b} workers={workers}");
+        }
+        // The public entry point (heuristic dispatch) takes one of the two
+        // identical paths.
+        assert_eq!(vp.apply_batch(&x), seq);
+        // And the shared contract still holds end to end.
+        check_virtual(&vp, &target, &x);
+    });
+}
+
+/// The parallel case on a discrete fleet: 32×32 quantized on 4×4 tiles
+/// (64 tiles, work 64·16·64 = 65536 ≥ the threshold) drives the public
+/// `apply_batch` down the scoped-pool path on multi-core hosts —
+/// equivalence must hold there too, not just on digital tiles. (The
+/// 64×64-on-8×8 headline shape is pinned separately at sequential cost
+/// in `quantized_virtual_full_64x64_on_8x8_tiles`.)
+#[test]
+fn parallel_path_on_quantized_fleet_matches_sequential() {
+    forall_seeded("virtual parallel quantized", 0x7126, 1, |g| {
+        let target = gen_target(g, 32, 32, false);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(4, Fidelity::Quantized))
+            .expect("quantized compile");
+        let x = gen_batch(g, 32, 64);
+        let seq = vp.apply_batch_seq(&x);
+        assert_eq!(vp.apply_batch_par(&x, 4), seq);
+        assert_eq!(vp.apply_batch(&x), seq);
+        check_virtual(&vp, &target, &x);
+    });
+}
+
 #[test]
 fn measured_virtual_executes_within_its_own_report() {
     // Measured tiles carry fabrication imperfections; the band contract

@@ -1,11 +1,16 @@
 //! Wire-protocol contract: every [`Job`]/[`JobResult`] variant round-trips
-//! through the versioned `util::json` form byte-for-value, and decoding
-//! rejects unknown versions and malformed documents — the schema the CLI,
-//! benches, and future network transports all rely on.
+//! through the versioned `util::json` form byte-for-value; v2 documents
+//! decode through the explicit compat shim under pinned upgrade rules;
+//! unknown versions, malformed documents, and broken framing are refused
+//! without panicking — the schema the CLI, benches, and the TCP transport
+//! all rely on.
 
-use crate::coordinator::service::{Job, JobResult, WIRE_VERSION};
+use crate::coordinator::router::{Admin, AdminReply};
+use crate::coordinator::service::{compat, Job, JobResult, WIRE_VERSION};
+use crate::coordinator::transport::{read_frame, Request, Response};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::processor::Fidelity;
 use crate::testing::prop::{forall, Gen};
 use crate::util::json::{parse, Json};
 
@@ -21,9 +26,13 @@ fn arb_cmat(g: &mut Gen) -> CMat {
     CMat::from_rows(rows, cols, &data)
 }
 
+fn arb_fidelity(g: &mut Gen) -> Fidelity {
+    *g.choose(&[Fidelity::Digital, Fidelity::Ideal, Fidelity::Quantized, Fidelity::Measured])
+}
+
 fn arb_job(g: &mut Gen) -> Job {
     let processor = arb_processor(g);
-    match g.usize_in(0, 3) {
+    match g.usize_in(0, 4) {
         0 => {
             let n = g.usize_in(0, 30);
             Job::Infer { processor, image: (0..n).map(|_| g.f64_in(0.0, 1.0) as f32).collect() }
@@ -34,15 +43,21 @@ fn arb_job(g: &mut Gen) -> Job {
             point: [g.f64_in(-30.0, 30.0), g.f64_in(-30.0, 30.0)],
         },
         2 => Job::RawApply { processor, x: arb_cmat(g) },
-        _ => {
+        3 => {
             let n = g.usize_in(0, 16);
             Job::Reprogram { processor, code: (0..n).map(|_| g.usize_in(0, 5)).collect() }
         }
+        _ => Job::Compile {
+            name: processor,
+            target: arb_cmat(g),
+            tile: *g.choose(&[2usize, 4, 8]),
+            fidelity: arb_fidelity(g),
+        },
     }
 }
 
 fn arb_result(g: &mut Gen) -> JobResult {
-    match g.usize_in(0, 4) {
+    match g.usize_in(0, 5) {
         0 => JobResult::Infer {
             probs: (0..10).map(|_| g.f64_in(0.0, 1.0) as f32).collect(),
             queued_us: g.usize_in(0, 1 << 40) as u64,
@@ -51,6 +66,16 @@ fn arb_result(g: &mut Gen) -> JobResult {
         1 => JobResult::Classify { yhat: g.f64_in(0.0, 1.0), reconfigured: g.bool() },
         2 => JobResult::RawApply { y: arb_cmat(g) },
         3 => JobResult::Reprogrammed { version: g.usize_in(1, 1 << 30) as u64 },
+        4 => JobResult::Compiled {
+            name: arb_processor(g),
+            version: 1,
+            grid: (g.usize_in(1, 8) as u64, g.usize_in(1, 8) as u64),
+            tile: *g.choose(&[2u64, 4, 8]),
+            fidelity: arb_fidelity(g),
+            state_vars: g.usize_in(0, 10_000) as u64,
+            fro_error: g.f64_in(0.0, 10.0),
+            cache_hit: g.bool(),
+        },
         _ => JobResult::Rejected { reason: "a \"quoted\" reason\nwith θ unicode".into() },
     }
 }
@@ -75,7 +100,7 @@ fn result_round_trips_every_variant() {
     });
 }
 
-/// Deterministic coverage of all four job + five result variants, in case
+/// Deterministic coverage of all five job + six result variants, in case
 /// the random distribution above ever shifts.
 #[test]
 fn every_variant_covered_explicitly() {
@@ -87,6 +112,12 @@ fn every_variant_covered_explicitly() {
             x: CMat::from_fn(2, 3, |i, j| C64::new(i as f64, j as f64 - 0.5)),
         },
         Job::Reprogram { processor: "p".into(), code: vec![0, 5, 2, 3] },
+        Job::Compile {
+            name: "virt".into(),
+            target: CMat::from_fn(3, 2, |i, j| C64::new(i as f64 - 1.0, j as f64)),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+        },
     ];
     for job in jobs {
         let back = Job::decode(&job.encode()).expect("round trip");
@@ -100,10 +131,84 @@ fn every_variant_covered_explicitly() {
         JobResult::Classify { yhat: 0.75, reconfigured: true },
         JobResult::RawApply { y: CMat::eye(2) },
         JobResult::Reprogrammed { version: 42 },
+        JobResult::Compiled {
+            name: "virt".into(),
+            version: 1,
+            grid: (2, 1),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+            state_vars: 16,
+            fro_error: 0.125,
+            cache_hit: true,
+        },
         JobResult::Rejected { reason: "nope".into() },
     ];
     for result in results {
         assert_eq!(JobResult::decode(&result.encode()).expect("round trip"), result);
+    }
+}
+
+/// The pinned v2 → v3 upgrade rules (see `service::compat`).
+#[test]
+fn v2_documents_decode_through_the_compat_shim() {
+    // Rule 1: the four legacy job kinds decode identically under v2 — a
+    // v3 encoding with the version tag rewritten to 2 yields the same job.
+    let legacy_jobs = vec![
+        Job::Infer { processor: "m".into(), image: vec![0.5, 0.25] },
+        Job::Classify { processor: "c".into(), classifier: 2, point: [1.0, -2.0] },
+        Job::RawApply { processor: "p".into(), x: CMat::eye(2) },
+        Job::Reprogram { processor: "p".into(), code: vec![1, 4] },
+    ];
+    for job in legacy_jobs {
+        let mut doc = parse(&job.encode()).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V2 as f64));
+        }
+        let as_v2 = doc.to_string_compact();
+        assert_eq!(Job::decode(&as_v2).expect("v2 decodes via the shim"), job, "{as_v2}");
+        // The shim entry point agrees with the dispatching decoder.
+        assert_eq!(compat::job_from_v2(&doc).unwrap(), job);
+    }
+    // Same for the five legacy result kinds.
+    let legacy_results = vec![
+        JobResult::Infer { probs: vec![0.2; 10], queued_us: 3, service_us: 4 },
+        JobResult::Classify { yhat: 0.5, reconfigured: false },
+        JobResult::RawApply { y: CMat::eye(3) },
+        JobResult::Reprogrammed { version: 9 },
+        JobResult::Rejected { reason: "why".into() },
+    ];
+    for result in legacy_results {
+        let mut doc = parse(&result.encode()).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V2 as f64));
+        }
+        assert_eq!(JobResult::decode(&doc.to_string_compact()).unwrap(), result);
+    }
+    // Rule 2: v3-only kinds are refused inside a v2 document.
+    let compile = Job::Compile {
+        name: "virt".into(),
+        target: CMat::eye(2),
+        tile: 2,
+        fidelity: Fidelity::Digital,
+    };
+    let mut doc = parse(&compile.encode()).unwrap();
+    if let Json::Obj(map) = &mut doc {
+        map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V2 as f64));
+    }
+    let err = Job::decode(&doc.to_string_compact()).expect_err("compile needs v3");
+    assert!(err.to_string().contains("version 3"), "{err}");
+    assert!(compat::result_from_v2(
+        &parse(r#"{"v":2,"kind":"compiled","name":"x","version":1}"#).unwrap()
+    )
+    .is_err());
+    // Rule 3: encoders never emit v2.
+    let job = Job::Reprogram { processor: "p".into(), code: vec![0] };
+    let v = parse(&job.encode()).unwrap();
+    assert_eq!(v.get("v").and_then(Json::as_f64), Some(WIRE_VERSION as f64));
+    // Rule 4: versions other than 2 and 3 are refused outright.
+    for bad in [0u64, 1, 4, 99] {
+        let text = format!(r#"{{"v":{bad},"kind":"infer","processor":"m","image":[]}}"#);
+        assert!(Job::decode(&text).is_err(), "v{bad} must be refused");
     }
 }
 
@@ -120,8 +225,11 @@ fn decode_rejects_unknown_wire_version() {
     let err = Job::decode(&v.to_string_compact()).expect_err("future version must be refused");
     assert!(err.to_string().contains("unsupported version"), "{err}");
     // Same gate on results.
-    let err = JobResult::decode(&format!(r#"{{"v":{},"kind":"rejected","reason":"x"}}"#, WIRE_VERSION + 7))
-        .expect_err("future version must be refused");
+    let err = JobResult::decode(&format!(
+        r#"{{"v":{},"kind":"rejected","reason":"x"}}"#,
+        WIRE_VERSION + 7
+    ))
+    .expect_err("future version must be refused");
     assert!(err.to_string().contains("unsupported version"), "{err}");
     // And a missing version tag is not treated as current.
     assert!(Job::decode(r#"{"kind":"infer","processor":"m","image":[]}"#).is_err());
@@ -173,6 +281,34 @@ fn non_finite_values_survive_the_wire_as_nan() {
     }
 }
 
+/// Hostile-input sweep: random byte blobs and mutated documents through
+/// every decoder (jobs, results, admin, transport envelopes, framing)
+/// must refuse, never panic — the server runs these paths on whatever a
+/// socket delivers.
+#[test]
+fn decoders_never_panic_on_garbage() {
+    forall("decoders on garbage", 300, |g| {
+        let n = g.usize_in(0, 80);
+        let blob: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+        let text = String::from_utf8_lossy(&blob).to_string();
+        let _ = Job::decode(&text);
+        let _ = JobResult::decode(&text);
+        let _ = Admin::decode(&text);
+        let _ = AdminReply::decode(&text);
+        let _ = Request::decode(&text);
+        let _ = Response::decode(&text);
+        let _ = read_frame(&mut std::io::Cursor::new(blob), 1 << 16);
+        // Mutate one byte of a valid document: still must not panic.
+        let valid = Job::Classify { processor: "c".into(), classifier: 1, point: [1.0, 2.0] }
+            .encode()
+            .into_bytes();
+        let mut mutated = valid.clone();
+        let at = g.usize_in(0, mutated.len() - 1);
+        mutated[at] = g.usize_in(0, 255) as u8;
+        let _ = Job::decode(&String::from_utf8_lossy(&mutated));
+    });
+}
+
 #[test]
 fn decode_rejects_malformed_documents() {
     assert!(Job::decode("not json at all").is_err());
@@ -192,6 +328,21 @@ fn decode_rejects_malformed_documents() {
     // absurd matrix dims must be refused before allocating
     assert!(Job::decode(&format!(
         r#"{{"v":{WIRE_VERSION},"kind":"raw_apply","processor":"p","x":{{"rows":1000000,"cols":1000000,"re":[],"im":[]}}}}"#
+    ))
+    .is_err());
+    // compile: weight arrays must match rows×cols exactly
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"compile","name":"v","rows":2,"cols":2,"re":[1,2,3],"im":[0,0,0,0],"tile":2,"fidelity":"quantized"}}"#
+    ))
+    .is_err());
+    // compile: unknown fidelity names are refused at decode
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"compile","name":"v","rows":1,"cols":1,"re":[1],"im":[0],"tile":2,"fidelity":"analog"}}"#
+    ))
+    .is_err());
+    // compile: oversized weight matrices are refused before allocating
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"compile","name":"v","rows":100000,"cols":100000,"re":[],"im":[],"tile":8,"fidelity":"digital"}}"#
     ))
     .is_err());
 }

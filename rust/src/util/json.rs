@@ -266,7 +266,9 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Option<Json> {
         let start = self.i;
-        while self.i < self.b.len() && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
             self.i += 1;
         }
         std::str::from_utf8(&self.b[start..self.i]).ok()?.parse().ok().map(Json::Num)
