@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Perf regression gate for the BENCH_pr*.json trajectory.
+
+Compares the current run's bench records against the previous successful
+run's `bench-json` artifact (downloaded by the workflow into --baseline),
+falling back to the committed BENCH_baseline.json manifest when no prior
+artifact exists (first run on a fresh branch/fork). Entries are matched
+per bench file by their identifying fields (kernel/mode/n/batch/tile) and
+every latency field (`*ns_per*` / `*_ns`) is compared; any entry more than
+THRESHOLD slower than baseline fails the gate.
+
+Baselines below --min-ns are skipped: sub-microsecond micro-bench medians
+on shared CI runners are noise-dominated and would make a hard gate flap.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+KEY_FIELDS = ("kernel", "mode", "n", "batch", "tile")
+
+
+def entry_key(entry):
+    return tuple((k, entry[k]) for k in KEY_FIELDS if k in entry)
+
+
+def is_latency(name):
+    return "ns_per" in name or name.endswith("_ns")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True, help="dir with this run's BENCH_pr*.json")
+    ap.add_argument("--baseline", default=None, help="dir with the prior run's artifact")
+    ap.add_argument("--manifest", default=None, help="committed fallback manifest")
+    ap.add_argument("--threshold", type=float, default=0.20)
+    ap.add_argument("--min-ns", type=float, default=1000.0)
+    args = ap.parse_args()
+
+    manifest = {}
+    if args.manifest and os.path.exists(args.manifest):
+        manifest = load(args.manifest).get("benches", {})
+
+    current = sorted(glob.glob(os.path.join(args.current, "BENCH_pr*.json")))
+    if not current:
+        print(f"perf-gate: no BENCH_pr*.json found in {args.current}")
+        return 1
+
+    regressions = []
+    compared = 0
+    skipped = []
+    for path in current:
+        name = os.path.basename(path)
+        cur = load(path)
+        base = None
+        if args.baseline:
+            bp = os.path.join(args.baseline, name)
+            if os.path.exists(bp):
+                base = load(bp)
+        if base is None:
+            base = manifest.get(name)
+        if base is None:
+            skipped.append(name)
+            continue
+        base_by_key = {entry_key(e): e for e in base.get("results", [])}
+        for entry in cur.get("results", []):
+            b = base_by_key.get(entry_key(entry))
+            if b is None:
+                skipped.append(f"{name}:{entry_key(entry)}")
+                continue
+            for field, value in entry.items():
+                if not is_latency(field) or not isinstance(value, (int, float)):
+                    continue
+                bv = b.get(field)
+                if not isinstance(bv, (int, float)) or bv < args.min_ns:
+                    continue
+                compared += 1
+                ratio = value / bv
+                line = f"{name} {entry_key(entry)} {field}: {bv:.0f} -> {value:.0f} ns ({ratio:.2f}x)"
+                if ratio > 1.0 + args.threshold:
+                    regressions.append(line)
+                    print(f"REGRESSION  {line}")
+                else:
+                    print(f"ok          {line}")
+    for s in skipped:
+        print(f"no-baseline {s}")
+    print(
+        f"perf-gate: {compared} comparisons, {len(regressions)} regressions "
+        f"(threshold +{args.threshold:.0%}), {len(skipped)} skipped"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

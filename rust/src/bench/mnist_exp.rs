@@ -1,7 +1,8 @@
 //! Figs. 15–16: the MNIST experiment — analog (measured 8×8 mesh + DSPSA)
 //! vs digital twin, training curves and confusion matrix.
 
-use crate::dataset::mnist::load_or_synthesize;
+use crate::dataset::mnist::{load_sourced, MnistSource};
+use crate::dataset::ImageDataset;
 use crate::mesh::propagate::MeshBackend;
 use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
 use crate::nn::sgd::SgdConfig;
@@ -28,9 +29,22 @@ impl MnistWorkload {
     }
 }
 
-/// Train both networks and return (analog, digital, test accuracies).
-pub fn train_pair(w: &MnistWorkload, seed: u64) -> (MnistRfnn, MnistRfnn, f64, f64) {
-    let (tr, te) = load_or_synthesize(w.n_train, w.n_test, seed);
+/// Everything one [`train_pair`] run produced. The test set rides along
+/// so downstream reports (Fig. 16's confusion matrix) are guaranteed to
+/// be computed on the SAME data the provenance line describes — a second
+/// independent load could silently fall back to synthetic digits.
+pub struct TrainedPair {
+    pub analog: MnistRfnn,
+    pub digital: MnistRfnn,
+    pub a_acc: f64,
+    pub d_acc: f64,
+    pub test: ImageDataset,
+    pub source: MnistSource,
+}
+
+/// Train both networks on one shared dataset load.
+pub fn train_pair(w: &MnistWorkload, seed: u64) -> TrainedPair {
+    let (tr, te, source) = load_sourced(w.n_train, w.n_test, seed);
     let cfg = MnistTrainConfig {
         epochs: w.epochs,
         sgd: SgdConfig { lr: w.lr, batch_size: 10, momentum: 0.0 },
@@ -42,13 +56,13 @@ pub fn train_pair(w: &MnistWorkload, seed: u64) -> (MnistRfnn, MnistRfnn, f64, f
     digital.train(&tr, &cfg);
     let a_acc = analog.test_accuracy(&te);
     let d_acc = digital.test_accuracy(&te);
-    (analog, digital, a_acc, d_acc)
+    TrainedPair { analog, digital, a_acc, d_acc, test: te, source }
 }
 
 /// Fig. 15: training accuracy/error curves, analog vs digital.
 pub fn fig15(quick: bool) -> String {
     let w = MnistWorkload::bench(quick);
-    let (analog, digital, a_acc, d_acc) = train_pair(&w, 2023);
+    let TrainedPair { analog, digital, a_acc, d_acc, source, .. } = train_pair(&w, 2023);
     let mut t = Table::new(&["epoch", "analog acc", "analog err", "digital acc", "digital err"]);
     let step = (analog.history.len() / 10).max(1);
     for (a, d) in analog.history.iter().zip(&digital.history).step_by(step) {
@@ -64,13 +78,15 @@ pub fn fig15(quick: bool) -> String {
     let d_tr = digital.history.last().map(|h| h.train_acc).unwrap_or(0.0);
     format!(
         "Fig. 15 — MNIST training curves, analog (measured mesh + DSPSA) vs digital twin\n\
-         (workload: {} train / {} test, {} epochs — paper: 50k/10k, 100 iters)\n{}\
+         (workload: {} train / {} test, {} epochs — paper: 50k/10k, 100 iters)\n\
+         data source: {}\n{}\
          final: analog train {:.1}% / test {:.1}%   digital train {:.1}% / test {:.1}%\n\
          paper:  analog train 91.7% / test 91.6%   digital train 94.1% / test 93.1%\n\
          expected shape: analog a few points below digital (discrete-phase penalty)\n",
         w.n_train,
         w.n_test,
         w.epochs,
+        source.name(),
         t.render(),
         a_tr * 100.0,
         a_acc * 100.0,
@@ -82,8 +98,7 @@ pub fn fig15(quick: bool) -> String {
 /// Fig. 16: confusion matrix of the trained analog RFNN on the test set.
 pub fn fig16(quick: bool) -> String {
     let w = MnistWorkload::bench(quick);
-    let (analog, _, a_acc, _) = train_pair(&w, 2023);
-    let (_, te) = load_or_synthesize(w.n_train, w.n_test, 2023);
+    let TrainedPair { analog, a_acc, test: te, source, .. } = train_pair(&w, 2023);
     let cm = analog.confusion(&te);
     let mut header = vec!["true\\pred".to_string()];
     header.extend((0..10).map(|d| d.to_string()));
@@ -99,8 +114,10 @@ pub fn fig16(quick: bool) -> String {
     let diag: usize = (0..10).map(|i| cm[i][i]).sum();
     let total: usize = cm.iter().flatten().sum();
     format!(
-        "Fig. 16 — analog RFNN confusion matrix (% per true class)\n{}\
+        "Fig. 16 — analog RFNN confusion matrix (% per true class)\n\
+         data source: {}\n{}\
          diagonal fraction = {:.1}% (test accuracy {:.1}%)\n",
+        source.name(),
         t.render(),
         100.0 * diag as f64 / total as f64,
         a_acc * 100.0

@@ -13,7 +13,9 @@
 //! versioned wire form ([`crate::coordinator::service::WIRE_VERSION`]).
 
 use crate::bench;
-use crate::compiler::{Compiler, PlanSpec, VALID_TILES};
+use crate::compiler::{
+    Calibration, Compiler, PerturbMode, PlanSpec, VirtualProcessor, VALID_TILES,
+};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::router::{Admin, Endpoint, Router, RouterError};
 use crate::coordinator::server::{Backend, ModelBundle};
@@ -105,6 +107,9 @@ USAGE:
     rfnn client [--connect ADDR] job '<wire json>'     submit to a remote server
     rfnn client [--connect ADDR] admin <health|metrics|processors|shutdown>
     rfnn compile [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
+                 [--fab-seed S] [--calibration measured|ideal]
+                 [--train EVALS] [--dspsa-mode monolithic|block|block-random]
+                 [--dspsa-seed S]
     rfnn info                                          platform + artifact status
 
 serve drives the pooled ProcessorService (mnist8 + cls2x2 + mesh8) with
@@ -124,6 +129,15 @@ plane. Default --connect is 127.0.0.1:7878.
 compile lowers a seeded random M×N weight matrix onto T×T physical tiles
 and prints the plan (tile grid, per-tile states/scales/errors, reprogram
 cost, plan-cache behavior). Fidelities: digital ideal quantized measured.
+At measured fidelity the lowering is calibration-aware by default: each
+cell's discrete state is chosen against the tile's *measured* device
+blocks (virtual-VNA tables cached by fab seed), and the report compares
+the resulting fro_error against nearest-ideal snapping
+(--calibration ideal forces the uncalibrated rule). --train EVALS then
+runs in-situ DSPSA over the fleet's states against the same target
+within that evaluation budget; --dspsa-mode picks monolithic flat-code
+perturbation or block-coordinate (one tile per step, round-robin or
+random).
 
 EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf";
 
@@ -560,7 +574,9 @@ fn cmd_client(args: &Args) -> i32 {
 
 /// `rfnn compile`: lower a seeded random M×N weight matrix onto a fleet
 /// of T×T tiles and print the plan summary, then recompile to show the
-/// plan-cache hit.
+/// plan-cache hit. At measured fidelity the report compares
+/// calibration-aware lowering against nearest-ideal snapping, and
+/// `--train EVALS` runs in-situ fleet DSPSA against the same target.
 fn cmd_compile(args: &Args) -> i32 {
     let rows = args.get_or("rows", 8usize);
     let cols = args.get_or("cols", rows);
@@ -571,9 +587,29 @@ fn cmd_compile(args: &Args) -> i32 {
         eprintln!("unknown fidelity '{fid_name}' (have: digital ideal quantized measured)");
         return 2;
     };
+    let cal_name = args.get("calibration").unwrap_or("measured");
+    let Some(calibration) = Calibration::from_name(cal_name) else {
+        eprintln!("unknown calibration rule '{cal_name}' (have: measured ideal)");
+        return 2;
+    };
+    let train_evals = args.get_or("train", 0usize);
+    let mode_name = args.get("dspsa-mode").unwrap_or("block");
+    let Some(mode) = PerturbMode::from_name(mode_name) else {
+        eprintln!("unknown DSPSA mode '{mode_name}' (have: monolithic block block-random)");
+        return 2;
+    };
     let mut rng = Rng::new(seed);
     let target = CMat::from_fn(rows, cols, |_, _| C64::real(rng.normal()));
-    let spec = PlanSpec::new(tile, fidelity);
+    let mut spec = PlanSpec::new(tile, fidelity).with_calibration(calibration);
+    if let Some(v) = args.get("fab-seed") {
+        match v.parse::<u64>() {
+            Ok(fab) => spec = spec.with_seed(fab),
+            Err(_) => {
+                eprintln!("--fab-seed '{v}' is not an unsigned 64-bit integer");
+                return 2;
+            }
+        }
+    }
     let compiler = Compiler::global();
     let plan = match compiler.compile(&target, &spec) {
         Ok(p) => p,
@@ -585,15 +621,69 @@ fn cmd_compile(args: &Args) -> i32 {
     println!("{}", plan.summary());
     let rel = plan.fro_error / target.fro_norm().max(1e-300);
     println!("relative error ‖assembled − target‖_F / ‖target‖_F = {rel:.3e}");
+    if fidelity == Fidelity::Measured {
+        // Lower under the other selection rule and report the gap the
+        // calibration tables buy (or cost, with --calibration ideal).
+        let twin_rule = match calibration {
+            Calibration::NearestMeasured => Calibration::NearestIdeal,
+            Calibration::NearestIdeal => Calibration::NearestMeasured,
+        };
+        let twin = compiler
+            .compile(&target, &spec.with_calibration(twin_rule))
+            .expect("same target recompiles under the twin rule");
+        let (cal_err, snap_err) = match calibration {
+            Calibration::NearestMeasured => (plan.fro_error, twin.fro_error),
+            Calibration::NearestIdeal => (twin.fro_error, plan.fro_error),
+        };
+        println!(
+            "calibration: nearest-measured fro_error {cal_err:.4e} vs nearest-ideal \
+             {snap_err:.4e} ({:.1}% tighter)",
+            100.0 * (snap_err - cal_err) / snap_err.max(1e-300)
+        );
+    }
     // Second compilation of the same weights: recipes come from the cache.
     let again = compiler.compile(&target, &spec).expect("same spec recompiles");
     println!(
-        "recompile: cache {} ({} hit(s), {} miss(es), {} plan(s) resident)",
+        "recompile: cache {} ({} hit(s), {} miss(es), {} plan(s) resident, {} calibration \
+         table(s))",
         if again.cache_hit { "HIT — synthesis skipped" } else { "MISS" },
         compiler.cache().hits(),
         compiler.cache().misses(),
         compiler.cache().len(),
+        compiler.calibrations().len(),
     );
+    if train_evals > 0 {
+        let mut vp = VirtualProcessor::new(plan);
+        match vp.train_states(
+            &target,
+            mode,
+            train_evals,
+            crate::nn::dspsa::DspsaConfig::default(),
+            args.get_or("dspsa-seed", 0xD5_05Au64),
+        ) {
+            Some(r) => {
+                println!(
+                    "in-situ DSPSA ({}): {} evals, loss {:.4e} → {:.4e} ({:.1}% better)",
+                    r.mode.name(),
+                    r.evals,
+                    r.initial_loss,
+                    r.final_loss,
+                    r.improvement_pct()
+                );
+                // A few evenly spaced best-so-far waypoints.
+                let n = r.trace.len();
+                let pts = n.min(5);
+                for k in 1..=pts {
+                    let at = n * k / pts - 1;
+                    println!("  step {:>4}: best {:.4e}", at + 1, r.trace[at]);
+                }
+            }
+            None => println!(
+                "--train: no programmable states at {fidelity:?} fidelity (use quantized or \
+                 measured)"
+            ),
+        }
+    }
     0
 }
 
@@ -668,6 +758,39 @@ mod tests {
         // Invalid tile size and fidelity exit with a usage error.
         assert_eq!(run(&parse("compile --tile 3")), 2);
         assert_eq!(run(&parse("compile --fidelity bogus")), 2);
+    }
+
+    #[test]
+    fn compile_command_calibration_and_training_flags() {
+        // Measured fidelity prints the calibrated-vs-ideal comparison in
+        // both directions of --calibration.
+        assert_eq!(run(&parse("compile --rows 4 --cols 4 --tile 2 --fidelity measured")), 0);
+        assert_eq!(
+            run(&parse(
+                "compile --rows 4 --cols 4 --tile 2 --fidelity measured --calibration ideal \
+                 --fab-seed 7"
+            )),
+            0
+        );
+        // In-situ DSPSA on a quantized fleet, block and monolithic.
+        assert_eq!(
+            run(&parse("compile --rows 4 --cols 4 --tile 2 --fidelity quantized --train 20")),
+            0
+        );
+        assert_eq!(
+            run(&parse(
+                "compile --rows 4 --cols 4 --tile 2 --fidelity quantized --train 10 \
+                 --dspsa-mode monolithic"
+            )),
+            0
+        );
+        // --train on a stateless fleet reports, not panics.
+        assert_eq!(run(&parse("compile --tile 2 --fidelity digital --train 10")), 0);
+        // Bad calibration, DSPSA-mode and fab-seed spellings are usage
+        // errors, not silent defaults.
+        assert_eq!(run(&parse("compile --calibration bogus")), 2);
+        assert_eq!(run(&parse("compile --train 4 --dspsa-mode bogus")), 2);
+        assert_eq!(run(&parse("compile --fab-seed 0xBEEF")), 2);
     }
 
     #[test]

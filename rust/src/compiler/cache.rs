@@ -9,7 +9,11 @@
 //! workers and the CLI share it, so a `Reprogram` that round-trips back
 //! to previously-served weights pays nothing.
 
-use super::lower::{instantiate, synthesize_tile, PlanSpec, PlanTile, TilePlan, TileRecipe};
+use super::calibrate::CalibrationTable;
+use super::lower::{
+    instantiate, mesh_base_seed, synthesize_tile, Calibration, PlanSpec, PlanTile, TilePlan,
+    TileRecipe,
+};
 use super::partition::TileGrid;
 use crate::math::cmat::CMat;
 use crate::processor::{Fidelity, ReprogramCost};
@@ -48,17 +52,22 @@ pub struct PlanKey {
     tile: usize,
     fidelity: Fidelity,
     measured_seed: u64,
+    calibration: Calibration,
 }
 
 impl PlanKey {
     pub fn of(target: &CMat, spec: &PlanSpec) -> PlanKey {
+        // Seed and calibration rule only shape Measured plans; normalize
+        // them away elsewhere so equivalent specs share one cache entry.
+        let measured = spec.fidelity == Fidelity::Measured;
         PlanKey {
             hash: content_hash(target),
             rows: target.rows(),
             cols: target.cols(),
             tile: spec.tile,
             fidelity: spec.fidelity,
-            measured_seed: if spec.fidelity == Fidelity::Measured { spec.measured_seed } else { 0 },
+            measured_seed: if measured { spec.measured_seed } else { 0 },
+            calibration: if measured { spec.calibration } else { Calibration::NearestIdeal },
         }
     }
 }
@@ -123,15 +132,103 @@ impl Default for PlanCache {
     }
 }
 
+/// Cap on resident calibration tables. A table is `cells × 36` measured
+/// 2×2 blocks (≈16 KB for the 8×8 mesh's 28 cells); 512 of them cover a
+/// 64×64-on-8×8 fleet (128 populations) four times over in ~8 MB.
+const CAL_CACHE_CAP: usize = 512;
+
+/// Virtual-VNA characterizations keyed by (fabrication seed, channels) —
+/// measuring a population (36 circuit evaluations per cell) is the
+/// expensive part of calibration-aware lowering, and every recompile at
+/// the same fab seed reuses the same populations.
+pub struct CalibrationCache {
+    state: Mutex<CalState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Table store + FIFO insertion order (evicting `pop_first()` on the
+/// BTreeMap would always throw out the smallest *seed* — which a fleet
+/// with low-seed populations re-inserts on every compile, a permanent
+/// measurement thrash once the cap is reached).
+struct CalState {
+    map: BTreeMap<(u64, usize), Arc<CalibrationTable>>,
+    order: std::collections::VecDeque<(u64, usize)>,
+}
+
+impl CalibrationCache {
+    pub fn new() -> CalibrationCache {
+        CalibrationCache {
+            state: Mutex::new(CalState {
+                map: BTreeMap::new(),
+                order: std::collections::VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The table for an `n`-channel mesh fabricated from `base_seed`,
+    /// measuring it on first use. Measurement runs outside the lock (it
+    /// is deterministic, so a racing duplicate is merely redundant work).
+    pub fn table(&self, base_seed: u64, n: usize) -> Arc<CalibrationTable> {
+        let key = (base_seed, n);
+        if let Some(t) = self.state.lock().unwrap().map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(CalibrationTable::measure(base_seed, n));
+        let mut guard = self.state.lock().unwrap();
+        let CalState { map, order } = &mut *guard;
+        let entry = match map.entry(key) {
+            std::collections::btree_map::Entry::Occupied(e) => e.get().clone(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                order.push_back(key);
+                v.insert(fresh.clone());
+                fresh
+            }
+        };
+        while map.len() > CAL_CACHE_CAP {
+            match order.pop_front() {
+                Some(old) => {
+                    map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        entry
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+}
+
+impl Default for CalibrationCache {
+    fn default() -> Self {
+        CalibrationCache::new()
+    }
+}
+
 /// The tiling compiler: partition → (cached) lower → instantiate.
 pub struct Compiler {
     cache: PlanCache,
+    calibrations: CalibrationCache,
 }
 
 impl Compiler {
     /// A compiler with a private cache (tests, isolated pipelines).
     pub fn new() -> Compiler {
-        Compiler { cache: PlanCache::new() }
+        Compiler { cache: PlanCache::new(), calibrations: CalibrationCache::new() }
     }
 
     /// The process-wide shared compiler: every worker and CLI command
@@ -146,15 +243,40 @@ impl Compiler {
         &self.cache
     }
 
+    /// This compiler's calibration-table cache.
+    pub fn calibrations(&self) -> &CalibrationCache {
+        &self.calibrations
+    }
+
     /// Compile `target` onto a fleet of `spec.tile`-size tiles.
     pub fn compile(&self, target: &CMat, spec: &PlanSpec) -> Result<TilePlan> {
         let grid = TileGrid::new(target.rows(), target.cols(), spec.tile)?;
         let key = PlanKey::of(target, spec);
+        let calibrate = spec.fidelity == Fidelity::Measured
+            && spec.calibration == Calibration::NearestMeasured;
         let (recipes, cache_hit) = match self.cache.lookup(&key) {
             Some(r) => (r, true),
             None => {
-                let fresh: Vec<TileRecipe> =
-                    grid.blocks(target).iter().map(|b| synthesize_tile(b, spec)).collect();
+                let fresh: Vec<TileRecipe> = grid
+                    .blocks(target)
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, b)| {
+                        // Zero blocks lower to powered-off tiles — don't
+                        // measure populations that will never be driven.
+                        let tables = (calibrate && b.max_abs() != 0.0).then(|| {
+                            (
+                                self.calibrations.table(mesh_base_seed(spec, idx, 0), spec.tile),
+                                self.calibrations.table(mesh_base_seed(spec, idx, 1), spec.tile),
+                            )
+                        });
+                        synthesize_tile(
+                            b,
+                            spec,
+                            tables.as_ref().map(|(u, v)| (u.as_ref(), v.as_ref())),
+                        )
+                    })
+                    .collect();
                 let arc = Arc::new(fresh);
                 self.cache.insert(key, arc.clone());
                 (arc, false)
@@ -172,7 +294,12 @@ impl Compiler {
                 let tc = proc.reprogram_cost();
                 cost.state_vars += tc.state_vars;
                 cost.recompose_flops += tc.recompose_flops;
-                tiles.push(PlanTile { proc, scale: recipes[idx].scale(), error });
+                tiles.push(PlanTile {
+                    proc,
+                    scale: recipes[idx].scale(),
+                    error,
+                    calibrated: recipes[idx].calibrated(),
+                });
             }
         }
         // Assembly itself is a copy: charge M·N complex writes.
@@ -249,20 +376,52 @@ mod tests {
         let q = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Quantized));
         assert_ne!(d, q);
         // The fabrication seed only matters at Measured fidelity.
-        let q2 = PlanKey::of(
-            &target,
-            &PlanSpec { tile: 2, fidelity: Fidelity::Quantized, measured_seed: 999 },
-        );
+        let q2 = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Quantized).with_seed(999));
         assert_eq!(q, q2);
-        let m1 = PlanKey::of(
-            &target,
-            &PlanSpec { tile: 2, fidelity: Fidelity::Measured, measured_seed: 1 },
-        );
-        let m2 = PlanKey::of(
-            &target,
-            &PlanSpec { tile: 2, fidelity: Fidelity::Measured, measured_seed: 2 },
-        );
+        let m1 = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Measured).with_seed(1));
+        let m2 = PlanKey::of(&target, &PlanSpec::new(2, Fidelity::Measured).with_seed(2));
         assert_ne!(m1, m2);
+    }
+
+    #[test]
+    fn calibration_mode_partitions_the_key_space_only_at_measured() {
+        let target = rand_real(4, 4, 5);
+        let m = PlanSpec::new(2, Fidelity::Measured);
+        let cal = PlanKey::of(&target, &m);
+        let snap = PlanKey::of(&target, &m.with_calibration(Calibration::NearestIdeal));
+        assert_ne!(cal, snap);
+        // Elsewhere the rule is normalized away.
+        let q = PlanSpec::new(2, Fidelity::Quantized);
+        assert_eq!(
+            PlanKey::of(&target, &q),
+            PlanKey::of(&target, &q.with_calibration(Calibration::NearestIdeal)),
+        );
+    }
+
+    #[test]
+    fn calibration_tables_are_cached_per_seed() {
+        let cache = CalibrationCache::new();
+        let a = cache.table(42, 4);
+        let b = cache.table(42, 4);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        let c = cache.table(43, 4);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        // A compile at Measured+NearestMeasured populates the compiler's
+        // cache; recompiling at a fresh spec with the same seed hits it.
+        let compiler = Compiler::new();
+        let target = rand_real(4, 4, 6);
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        compiler.compile(&target, &spec).unwrap();
+        // 2×2 grid of 2×2 tiles → 4 tiles × 2 meshes = 8 populations.
+        assert_eq!(compiler.calibrations().len(), 8);
+        let misses = compiler.calibrations().misses();
+        // Different weights, same seed → same populations, zero new
+        // measurements.
+        let other = rand_real(4, 4, 7);
+        compiler.compile(&other, &spec).unwrap();
+        assert_eq!(compiler.calibrations().misses(), misses);
     }
 
     #[test]
@@ -277,6 +436,7 @@ mod tests {
                 tile: 2,
                 fidelity: Fidelity::Digital,
                 measured_seed: 0,
+                calibration: Calibration::NearestIdeal,
             };
             cache.insert(key, recipes.clone());
         }

@@ -1,0 +1,169 @@
+//! Per-device calibration tables for hardware-aware lowering.
+//!
+//! At [`Fidelity::Measured`](crate::processor::Fidelity) each tile mesh is
+//! a distinct population of fabricated 2×2 devices whose realized transfer
+//! blocks deviate from the ideal Table-I states. A [`CalibrationTable`] is
+//! the virtual-VNA characterization of one such population — the full
+//! 36-state measured block per cell — captured once per fabrication seed
+//! and cached by the compiler ([`super::cache::CalibrationCache`]). The
+//! lowering pass uses it two ways:
+//!
+//! 1. **nearest-measured state selection** ([`CalibrationTable::quantize`]):
+//!    pick each cell's discrete state by minimizing the Frobenius distance
+//!    of the *measured* block to the continuous Reck target, instead of
+//!    snapping to ideal Table-I phases;
+//! 2. **realization prediction** ([`CalibrationTable::compose`]): compose
+//!    the exact matrix a [`DiscreteMesh`](crate::mesh::propagate) built on
+//!    the same seed will realize for a candidate state vector, so the
+//!    lowering pass can compare candidates on the true hardware-in-the-loop
+//!    metric before instantiating anything.
+//!
+//! The composition replicates `DiscreteMesh::recompose` operation-for-
+//! operation (same topology order, same row-update arithmetic), so the
+//! prediction matches the instantiated tile bit-for-bit — which is what
+//! lets the compiler *guarantee* that calibrated lowering never realizes a
+//! worse tile than nearest-ideal lowering (it keeps whichever candidate
+//! predicts better).
+
+use crate::device::vna::MeasuredUnitCell;
+use crate::device::State;
+use crate::math::cmat::CMat;
+use crate::mesh::decompose::MeshProgram;
+use crate::mesh::quantize::{quantize_program_with, QuantizedProgram};
+use crate::mesh::topology::MeshTopology;
+use crate::microwave::phase_shifter::N_STATES;
+
+/// The measured 36-state block table of one mesh's device population.
+#[derive(Clone, Debug)]
+pub struct CalibrationTable {
+    base_seed: u64,
+    channels: usize,
+    /// `blocks[cell][theta * N_STATES + phi]` — same layout as
+    /// `DiscreteMesh`'s per-cell lookup.
+    blocks: Vec<Vec<CMat>>,
+}
+
+impl CalibrationTable {
+    /// Characterize the device population an `n`-channel measured mesh
+    /// with this `base_seed` will be built from (cell `i` is the device
+    /// fabricated from `base_seed + i`, exactly as `DiscreteMesh::new`
+    /// derives it).
+    pub fn measure(base_seed: u64, n: usize) -> CalibrationTable {
+        let cells = MeshTopology::reck(n).cells();
+        let blocks = (0..cells)
+            .map(|i| {
+                let dev = MeasuredUnitCell::fabricate(base_seed.wrapping_add(i as u64));
+                State::all().map(|st| dev.t_block(st)).collect()
+            })
+            .collect();
+        CalibrationTable { base_seed, channels: n, blocks }
+    }
+
+    /// The fabrication seed this table characterizes.
+    pub fn base_seed(&self) -> u64 {
+        self.base_seed
+    }
+
+    /// Mesh channel count.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Number of characterized cells.
+    pub fn cells(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Measured transfer block of cell `cell` in state `st`.
+    pub fn block(&self, cell: usize, st: State) -> &CMat {
+        &self.blocks[cell][st.theta * N_STATES + st.phi]
+    }
+
+    /// Nearest-measured quantization of a continuous mesh program: each
+    /// cell picks the state whose measured block is Frobenius-closest to
+    /// its continuous target.
+    pub fn quantize(&self, prog: &MeshProgram) -> QuantizedProgram {
+        assert_eq!(prog.cells.len(), self.cells(), "one calibration entry per Reck cell");
+        quantize_program_with(prog, |i, st| self.block(i, st).clone())
+    }
+
+    /// The matrix a measured mesh on this population realizes for
+    /// `states` — a bit-exact replica of `DiscreteMesh::recompose` (same
+    /// Reck pair order, same row-update arithmetic), WITHOUT fabricating
+    /// any devices.
+    pub fn compose(&self, states: &[State]) -> CMat {
+        let topo = MeshTopology::reck(self.channels);
+        assert_eq!(states.len(), topo.cells());
+        let n = self.channels;
+        let mut m = CMat::eye(n);
+        for (i, (p, q)) in topo.pairs().enumerate() {
+            let t = self.block(i, states[i]);
+            for j in 0..n {
+                let mp = m[(p, j)];
+                let mq = m[(q, j)];
+                m[(p, j)] = t[(0, 0)] * mp + t[(0, 1)] * mq;
+                m[(q, j)] = t[(1, 0)] * mp + t[(1, 1)] * mq;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
+    use crate::processor::LinearProcessor;
+
+    #[test]
+    fn table_matches_the_mesh_it_characterizes() {
+        let seed = 0xCAFE;
+        let table = CalibrationTable::measure(seed, 4);
+        let mesh = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: seed });
+        assert_eq!(table.cells(), mesh.cells());
+        // Per-cell blocks are the same measurements (fabrication and the
+        // virtual VNA are deterministic in the seed).
+        for i in 0..table.cells() {
+            for st in State::all() {
+                let want = mesh.device(i).unwrap().t_block(st);
+                assert_eq!(table.block(i, st).sub(&want).max_abs(), 0.0, "cell {i} {st:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn compose_is_bit_identical_to_discrete_mesh_recompose() {
+        let seed = 0xC0;
+        let table = CalibrationTable::measure(seed, 4);
+        let mut mesh = DiscreteMesh::new(4, MeshBackend::Measured { base_seed: seed });
+        let states: Vec<State> =
+            (0..mesh.cells()).map(|i| State { theta: (i * 5) % 6, phi: (i * 2 + 1) % 6 }).collect();
+        mesh.set_states(&states);
+        let predicted = table.compose(&states);
+        // Same ops in the same order → exactly equal, not approximately.
+        assert_eq!(predicted.sub(LinearProcessor::matrix(&mesh)).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn calibrated_quantization_tracks_the_population() {
+        use crate::math::c64::C64;
+        use crate::math::rng::Rng;
+        use crate::math::svd::svd;
+        let mut rng = Rng::new(0xC1);
+        let a = CMat::from_fn(4, 4, |_, _| C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        let u = f.u.matmul(&f.vh);
+        let prog = crate::mesh::decompose::decompose_unitary(&u);
+        let table = CalibrationTable::measure(7, 4);
+        let q = table.quantize(&prog);
+        assert_eq!(q.states.len(), prog.cells.len());
+        // Calibrated per-cell error against the measured blocks is never
+        // above programming the ideal-snapped states onto those blocks.
+        let snap = crate::mesh::quantize::quantize_program(&prog);
+        for (i, c) in prog.cells.iter().enumerate() {
+            let t_cont = crate::device::ideal::t_matrix(c.theta, c.phi);
+            let snapped_err = table.block(i, snap.states[i]).sub(&t_cont).fro_norm();
+            assert!(q.cell_errors[i] <= snapped_err + 1e-12, "cell {i}");
+        }
+    }
+}

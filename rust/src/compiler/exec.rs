@@ -14,6 +14,7 @@ use super::cache::Compiler;
 use super::lower::{PlanSpec, TilePlan};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::nn::dspsa::{BlockDspsa, BlockSchedule, DspsaConfig};
 use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
 use crate::util::error::Result;
 
@@ -23,6 +24,10 @@ pub struct VirtualProcessor {
     plan: TilePlan,
     /// Assembled `M×N` effective matrix (tile realizations, cropped).
     cached: CMat,
+    /// Total programmable flat-code length, fixed at construction
+    /// (reprogramming never changes a tile's code shape) — so the
+    /// per-evaluation length check in `set_state_code` costs nothing.
+    code_len: usize,
 }
 
 /// Minimum estimated per-tile work (complex MACs: `tiles · T² · B`) before
@@ -45,7 +50,12 @@ impl VirtualProcessor {
     /// Wrap a compiled plan.
     pub fn new(plan: TilePlan) -> VirtualProcessor {
         let cached = plan.assemble();
-        VirtualProcessor { plan, cached }
+        let code_len = plan
+            .tiles
+            .iter()
+            .filter_map(|t| t.proc.state_code().map(|c| c.len()))
+            .sum();
+        VirtualProcessor { plan, cached, code_len }
     }
 
     /// One-shot compile through the process-wide plan cache.
@@ -150,6 +160,164 @@ impl VirtualProcessor {
         });
         self.accumulate(&products, b)
     }
+
+    /// Per-tile segment lengths of the flat state code, in the same
+    /// row-major grid order as [`LinearProcessor::state_code`]
+    /// (non-programmable tiles contribute nothing). These are the
+    /// coordinate blocks block-coordinate DSPSA perturbs one at a time.
+    pub fn state_blocks(&self) -> Vec<usize> {
+        self.plan
+            .tiles
+            .iter()
+            .filter_map(|t| t.proc.state_code().map(|c| c.len()))
+            .collect()
+    }
+
+    /// Program `code` and report the realization loss ‖M − target‖_F —
+    /// the in-situ training oracle (on hardware: reprogram, measure).
+    fn realized_loss(&mut self, code: &[usize], target: &CMat) -> f64 {
+        assert!(self.set_state_code(code), "training code must match the fleet's state shape");
+        self.matrix().sub(target).fro_norm()
+    }
+
+    /// In-situ DSPSA over the fleet's discrete states, minimizing the
+    /// realization error ‖realized − target‖_F within a fixed budget of
+    /// loss evaluations: 2 per step, with one evaluation RESERVED (when
+    /// the budget is ≥ 3) for a final check of the optimizer's rounded
+    /// iterate — the canonical DSPSA output, which the perturbation
+    /// evaluations never visit. `Monolithic` perturbs the whole flat code at once (the
+    /// PR-3 baseline); the `Block*` modes perturb one tile's segment per
+    /// step, so each evaluation recomposes a single tile.
+    ///
+    /// Every evaluated code is tracked and the best one is programmed
+    /// before returning, so the fleet never ends up worse than it
+    /// started; `plan.fro_error` is refreshed to the realized error
+    /// against `target` (callers pass the plan's own compile target).
+    /// Returns `None` when the fleet has no programmable states
+    /// (Digital/Ideal fidelities).
+    pub fn train_states(
+        &mut self,
+        target: &CMat,
+        mode: PerturbMode,
+        budget_evals: usize,
+        cfg: DspsaConfig,
+        seed: u64,
+    ) -> Option<FleetTrainReport> {
+        let init = self.state_code()?;
+        let (m, n) = self.dims();
+        assert_eq!(
+            (target.rows(), target.cols()),
+            (m, n),
+            "train_states: target must match the fleet's logical shape"
+        );
+        let initial_loss = self.matrix().sub(target).fro_norm();
+        // Monolithic perturbation IS block-coordinate DSPSA with a single
+        // block spanning the whole code: identical RNG draw order, lattice
+        // projection and gain schedule as a plain `Dspsa` (pinned
+        // bit-exactly in `nn::dspsa` tests), so one optimizer type drives
+        // every mode.
+        let (blocks, schedule) = match mode {
+            PerturbMode::Monolithic => (vec![init.len()], BlockSchedule::RoundRobin),
+            PerturbMode::BlockRoundRobin => (self.state_blocks(), BlockSchedule::RoundRobin),
+            PerturbMode::BlockRandom => (self.state_blocks(), BlockSchedule::Random),
+        };
+        let mut opt = BlockDspsa::new(cfg, &init, &blocks, schedule, seed);
+        let mut best_code = init;
+        let mut best_loss = initial_loss;
+        let mut trace = Vec::new();
+        let mut evals = 0usize;
+        // Keep one evaluation back for the rounded-iterate check below —
+        // otherwise even budgets (every in-repo caller) would consume the
+        // whole budget on perturbation pairs and never measure the point
+        // the optimizer actually converged to.
+        let reserve = usize::from(budget_evals >= 3);
+        while evals + 2 <= budget_evals - reserve {
+            let p = opt.propose();
+            let lp = self.realized_loss(&p.plus, target);
+            let lm = self.realized_loss(&p.minus, target);
+            evals += 2;
+            if lp < best_loss {
+                best_loss = lp;
+                best_code.copy_from_slice(&p.plus);
+            }
+            if lm < best_loss {
+                best_loss = lm;
+                best_code.copy_from_slice(&p.minus);
+            }
+            opt.update(&p, lp, lm);
+            trace.push(best_loss);
+        }
+        if evals < budget_evals {
+            let cur = opt.current();
+            let lc = self.realized_loss(&cur, target);
+            evals += 1;
+            if lc < best_loss {
+                best_loss = lc;
+                best_code = cur;
+            }
+        }
+        assert!(self.set_state_code(&best_code));
+        self.plan.fro_error = best_loss;
+        Some(FleetTrainReport { mode, evals, initial_loss, final_loss: best_loss, trace })
+    }
+}
+
+/// Perturbation structure for in-situ fleet DSPSA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PerturbMode {
+    /// One flat code over the whole fleet (~7k states at 64×64-on-8×8):
+    /// every tile reprograms on every evaluation.
+    Monolithic,
+    /// One tile's segment per step, cycling through the grid.
+    BlockRoundRobin,
+    /// One uniformly random tile's segment per step.
+    BlockRandom,
+}
+
+impl PerturbMode {
+    /// Stable CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PerturbMode::Monolithic => "monolithic",
+            PerturbMode::BlockRoundRobin => "block",
+            PerturbMode::BlockRandom => "block-random",
+        }
+    }
+
+    /// Parse a CLI spelling (`--dspsa-mode monolithic|block|block-random`).
+    pub fn from_name(name: &str) -> Option<PerturbMode> {
+        match name {
+            "monolithic" | "mono" | "flat" => Some(PerturbMode::Monolithic),
+            "block" | "block-round-robin" | "round-robin" => Some(PerturbMode::BlockRoundRobin),
+            "block-random" | "random" => Some(PerturbMode::BlockRandom),
+            _ => None,
+        }
+    }
+}
+
+/// What [`VirtualProcessor::train_states`] did and achieved.
+#[derive(Clone, Debug)]
+pub struct FleetTrainReport {
+    pub mode: PerturbMode,
+    /// Loss evaluations actually spent (≤ the budget).
+    pub evals: usize,
+    /// Realization error before training.
+    pub initial_loss: f64,
+    /// Best realization error found (the fleet is left programmed to it).
+    pub final_loss: f64,
+    /// Best-so-far loss after each DSPSA step.
+    pub trace: Vec<f64>,
+}
+
+impl FleetTrainReport {
+    /// Relative improvement over the initial loss, in percent.
+    pub fn improvement_pct(&self) -> f64 {
+        if self.initial_loss == 0.0 {
+            0.0
+        } else {
+            100.0 * (self.initial_loss - self.final_loss) / self.initial_loss
+        }
+    }
 }
 
 impl LinearProcessor for VirtualProcessor {
@@ -213,21 +381,32 @@ impl LinearProcessor for VirtualProcessor {
 
     /// Split a flat code across the programmable tiles (same order as
     /// [`Self::state_code`]) and reassemble the effective matrix.
+    ///
+    /// Tiles whose segment is unchanged are skipped entirely — no mesh
+    /// recomposition, no tile recache — so block-coordinate DSPSA (which
+    /// touches one tile per write) pays for ONE tile's recompose per
+    /// evaluation instead of the whole fleet's.
     fn set_state_code(&mut self, code: &[usize]) -> bool {
-        let Some(current) = self.state_code() else { return false };
-        if code.len() != current.len() {
+        if self.code_len == 0 || code.len() != self.code_len {
             return false;
         }
         let mut off = 0;
+        let mut changed = false;
         for tile in &mut self.plan.tiles {
             if let Some(c) = tile.proc.state_code() {
-                if !tile.proc.set_state_code(&code[off..off + c.len()]) {
-                    return false;
+                let seg = &code[off..off + c.len()];
+                if seg != c.as_slice() {
+                    if !tile.proc.set_state_code(seg) {
+                        return false;
+                    }
+                    changed = true;
                 }
                 off += c.len();
             }
         }
-        self.recache();
+        if changed {
+            self.recache();
+        }
         true
     }
 }
@@ -283,5 +462,76 @@ mod tests {
         // Wrong length is refused without corrupting state.
         assert!(!vp.set_state_code(&code[..3]));
         assert_eq!(vp.state_code().unwrap(), code);
+    }
+
+    #[test]
+    fn diff_aware_reprogram_equals_fresh_programming() {
+        let target = rand_real(6, 6, 21);
+        let spec = PlanSpec::new(2, Fidelity::Quantized);
+        let mut a = VirtualProcessor::compile(&target, &spec).unwrap();
+        let code = a.state_code().unwrap();
+        // Rewriting the identical code is a no-op (bit-identical matrix).
+        let before = LinearProcessor::matrix(&a).clone();
+        assert!(a.set_state_code(&code));
+        assert_eq!(LinearProcessor::matrix(&a), &before);
+        // Changing one tile's segment only: result must equal programming
+        // the same full code onto a freshly compiled fleet.
+        let blocks = a.state_blocks();
+        assert_eq!(blocks.iter().sum::<usize>(), code.len());
+        let mut alt = code.clone();
+        for v in alt[..blocks[0]].iter_mut() {
+            *v = (*v + 2) % 6;
+        }
+        assert!(a.set_state_code(&alt));
+        let mut fresh = VirtualProcessor::compile(&target, &spec).unwrap();
+        assert!(fresh.set_state_code(&alt));
+        assert_eq!(LinearProcessor::matrix(&a), LinearProcessor::matrix(&fresh));
+        assert_eq!(a.state_code().unwrap(), alt);
+    }
+
+    #[test]
+    fn train_states_never_leaves_the_fleet_worse() {
+        use crate::nn::dspsa::DspsaConfig;
+        let target = rand_real(4, 4, 31);
+        for mode in
+            [PerturbMode::Monolithic, PerturbMode::BlockRoundRobin, PerturbMode::BlockRandom]
+        {
+            let mut vp =
+                VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Quantized))
+                    .unwrap();
+            let r = vp
+                .train_states(&target, mode, 60, DspsaConfig::default(), 0x7E57)
+                .expect("quantized fleet has states");
+            assert!(r.evals <= 60, "{mode:?}");
+            assert!(r.final_loss <= r.initial_loss + 1e-12, "{mode:?}");
+            // The fleet is left programmed at the reported best.
+            let realized = LinearProcessor::matrix(&vp).sub(&target).fro_norm();
+            assert!((realized - r.final_loss).abs() < 1e-12, "{mode:?}");
+            assert_eq!(vp.plan().fro_error, r.final_loss);
+            assert!(r.improvement_pct() >= -1e-9);
+            assert_eq!(r.trace.len(), r.evals / 2);
+        }
+    }
+
+    #[test]
+    fn train_states_requires_programmable_states() {
+        use crate::nn::dspsa::DspsaConfig;
+        let target = rand_real(4, 4, 32);
+        let mut vp =
+            VirtualProcessor::compile(&target, &PlanSpec::new(2, Fidelity::Digital)).unwrap();
+        assert!(vp
+            .train_states(&target, PerturbMode::Monolithic, 10, DspsaConfig::default(), 1)
+            .is_none());
+        assert!(vp.state_blocks().is_empty());
+    }
+
+    #[test]
+    fn perturb_mode_names_round_trip() {
+        for m in
+            [PerturbMode::Monolithic, PerturbMode::BlockRoundRobin, PerturbMode::BlockRandom]
+        {
+            assert_eq!(PerturbMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(PerturbMode::from_name("nope"), None);
     }
 }

@@ -18,6 +18,7 @@
 //! * `Measured`  — the same discrete states programmed onto per-tile
 //!   virtual-VNA device populations (fabrication imperfections included).
 
+use super::calibrate::CalibrationTable;
 use super::partition::TileGrid;
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
@@ -27,20 +28,72 @@ use crate::mesh::quantize::{quantize_program, QuantizedMesh, QuantizedProgram};
 use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
 use std::sync::Arc;
 
-/// What to compile for: tile size, backend fidelity, and the fabrication
-/// seed used when `fidelity == Measured` (each tile gets its own derived
-/// device population).
+/// Discrete-state selection rule for `Measured` lowering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Calibration {
+    /// Snap each cell to the nearest ideal Table-I phases (fidelity-blind:
+    /// the pre-calibration behavior, kept for comparison/ablation).
+    NearestIdeal,
+    /// Choose each cell's state against the tile's *measured* device
+    /// blocks ([`CalibrationTable`]), and keep the nearest-ideal program
+    /// instead whenever it predicts a better whole-tile realization — so
+    /// the calibrated plan is never worse than the uncalibrated one.
+    NearestMeasured,
+}
+
+impl Calibration {
+    /// Stable CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Calibration::NearestIdeal => "ideal",
+            Calibration::NearestMeasured => "measured",
+        }
+    }
+
+    /// Parse a CLI spelling (`--calibration ideal|measured`).
+    pub fn from_name(name: &str) -> Option<Calibration> {
+        match name {
+            "ideal" | "nearest-ideal" | "off" => Some(Calibration::NearestIdeal),
+            "measured" | "nearest-measured" | "on" => Some(Calibration::NearestMeasured),
+            _ => None,
+        }
+    }
+}
+
+/// What to compile for: tile size, backend fidelity, the fabrication seed
+/// used when `fidelity == Measured` (each tile gets its own derived device
+/// population), and the state-selection rule against those populations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanSpec {
     pub tile: usize,
     pub fidelity: Fidelity,
     pub measured_seed: u64,
+    /// Only meaningful at `Measured` fidelity (ignored elsewhere).
+    pub calibration: Calibration,
 }
 
 impl PlanSpec {
-    /// A spec with the default fabrication seed.
+    /// A spec with the default fabrication seed; `Measured` lowering is
+    /// calibration-aware by default.
     pub fn new(tile: usize, fidelity: Fidelity) -> PlanSpec {
-        PlanSpec { tile, fidelity, measured_seed: 0xF1EE7 }
+        PlanSpec {
+            tile,
+            fidelity,
+            measured_seed: 0xF1EE7,
+            calibration: Calibration::NearestMeasured,
+        }
+    }
+
+    /// Same spec over a different fabrication seed.
+    pub fn with_seed(mut self, seed: u64) -> PlanSpec {
+        self.measured_seed = seed;
+        self
+    }
+
+    /// Same spec under a different state-selection rule.
+    pub fn with_calibration(mut self, calibration: Calibration) -> PlanSpec {
+        self.calibration = calibration;
+        self
     }
 }
 
@@ -61,6 +114,9 @@ pub enum TileRecipe {
         vh: QuantizedProgram,
         vh_phases: Vec<f64>,
         scale: f64,
+        /// Whether the states were selected against the tile's measured
+        /// device blocks (nearest-measured won the candidate comparison).
+        calibrated: bool,
     },
 }
 
@@ -81,10 +137,28 @@ impl TileRecipe {
             TileRecipe::Discrete { u, vh, .. } => 2 * (u.states.len() + vh.states.len()),
         }
     }
+
+    /// Whether this recipe's states came from nearest-measured selection.
+    pub fn calibrated(&self) -> bool {
+        matches!(self, TileRecipe::Discrete { calibrated: true, .. })
+    }
 }
 
 /// Compile one `T×T` target block into a recipe (the expensive path).
-pub fn synthesize_tile(block: &CMat, spec: &PlanSpec) -> TileRecipe {
+///
+/// `cal` carries the calibration tables of the destination tile's two
+/// device populations `(U-mesh, V^H-mesh)` and is only consulted at
+/// `Measured` fidelity: when present, cell states are selected by
+/// **nearest-measured** distance and the recipe keeps whichever candidate
+/// program (calibrated vs ideal-snapped) predicts the smaller realized
+/// tile error — the prediction is bit-exact w.r.t. instantiation (see
+/// [`CalibrationTable::compose`]), so the calibrated recipe can never
+/// realize a worse tile than the uncalibrated one.
+pub fn synthesize_tile(
+    block: &CMat,
+    spec: &PlanSpec,
+    cal: Option<(&CalibrationTable, &CalibrationTable)>,
+) -> TileRecipe {
     assert!(block.is_square(), "tiles are square (padded by the partitioner)");
     match spec.fidelity {
         // A fully-zero block is a powered-off tile at every fidelity: the
@@ -103,28 +177,80 @@ pub fn synthesize_tile(block: &CMat, spec: &PlanSpec) -> TileRecipe {
         }
         Fidelity::Quantized | Fidelity::Measured => {
             let syn = synthesize_real(block);
+            let snap_u = quantize_program(&syn.u_mesh);
+            let snap_vh = quantize_program(&syn.vh_mesh);
+            let (u, vh, calibrated) = match cal {
+                Some((ut, vt)) if spec.fidelity == Fidelity::Measured => {
+                    let cal_u = ut.quantize(&syn.u_mesh);
+                    let cal_vh = vt.quantize(&syn.vh_mesh);
+                    let err = |pu: &QuantizedProgram, pv: &QuantizedProgram| {
+                        predicted_tile_matrix(ut, pu, &syn.u_mesh.input_phases, &syn.diag, vt,
+                            pv, &syn.vh_mesh.input_phases, syn.scale)
+                        .sub(block)
+                        .fro_norm()
+                    };
+                    if err(&cal_u, &cal_vh) <= err(&snap_u, &snap_vh) {
+                        (cal_u, cal_vh, true)
+                    } else {
+                        (snap_u, snap_vh, false)
+                    }
+                }
+                _ => (snap_u, snap_vh, false),
+            };
             TileRecipe::Discrete {
-                u: quantize_program(&syn.u_mesh),
+                u,
                 u_phases: syn.u_mesh.input_phases.clone(),
                 diag: syn.diag,
-                vh: quantize_program(&syn.vh_mesh),
+                vh,
                 vh_phases: syn.vh_mesh.input_phases.clone(),
                 scale: syn.scale,
+                calibrated,
             }
         }
     }
 }
 
-/// Mesh backend for tile `index`'s `which`-th mesh (0 = U, 1 = V^H) under
-/// `spec`: ideal cells except at Measured fidelity, where every mesh is a
-/// distinct fabricated device population derived from the spec seed.
+/// The tile matrix a `Discrete` recipe will realize on the measured
+/// populations characterized by `(ut, vt)` — the same arithmetic, in the
+/// same order, as `QuantizedMesh::recache` + `SynthesizedTile::recache`
+/// run at instantiation, so the result is bit-identical to
+/// `instantiate(...).matrix()` for a matching tile index/seed.
+#[allow(clippy::too_many_arguments)]
+pub fn predicted_tile_matrix(
+    ut: &CalibrationTable,
+    u: &QuantizedProgram,
+    u_phases: &[f64],
+    diag: &[f64],
+    vt: &CalibrationTable,
+    vh: &QuantizedProgram,
+    vh_phases: &[f64],
+    scale: f64,
+) -> CMat {
+    let phase_diag = |phases: &[f64]| {
+        CMat::diag(&phases.iter().map(|&p| C64::cis(p)).collect::<Vec<_>>())
+    };
+    let um = ut.compose(&u.states).gemm(&phase_diag(u_phases));
+    let vm = vt.compose(&vh.states).gemm(&phase_diag(vh_phases));
+    let d = CMat::diag(&diag.iter().map(|&x| C64::real(x)).collect::<Vec<_>>());
+    um.gemm(&d).gemm(&vm).scale(C64::real(scale))
+}
+
+/// Fabrication base seed of tile `index`'s `which`-th mesh (0 = U,
+/// 1 = V^H): every mesh in a Measured fleet is a distinct device
+/// population derived from the spec seed. The calibration cache and the
+/// instantiated `DiscreteMesh` MUST agree on this derivation.
+pub fn mesh_base_seed(spec: &PlanSpec, index: usize, which: usize) -> u64 {
+    spec.measured_seed.wrapping_add((2 * index + which) as u64 * 0x9E3779B9)
+}
+
+/// Mesh backend for tile `index`'s `which`-th mesh under `spec`: ideal
+/// cells except at Measured fidelity, where [`mesh_base_seed`] selects the
+/// fabricated device population.
 fn tile_backend(spec: &PlanSpec, index: usize, which: usize) -> MeshBackend {
     match spec.fidelity {
-        Fidelity::Measured => MeshBackend::Measured {
-            base_seed: spec
-                .measured_seed
-                .wrapping_add((2 * index + which) as u64 * 0x9E3779B9),
-        },
+        Fidelity::Measured => {
+            MeshBackend::Measured { base_seed: mesh_base_seed(spec, index, which) }
+        }
         _ => MeshBackend::Ideal,
     }
 }
@@ -138,7 +264,7 @@ pub fn instantiate(recipe: &TileRecipe, spec: &PlanSpec, index: usize) -> Box<dy
         TileRecipe::Continuous { u, diag, vh, scale } => {
             Box::new(SvdSynthesis::new(u.clone(), diag.clone(), vh.clone(), *scale))
         }
-        TileRecipe::Discrete { u, u_phases, diag, vh, vh_phases, scale } => {
+        TileRecipe::Discrete { u, u_phases, diag, vh, vh_phases, scale, .. } => {
             let um = QuantizedMesh::from_parts(
                 u.clone(),
                 u_phases.clone(),
@@ -248,6 +374,8 @@ pub struct PlanTile {
     pub scale: f64,
     /// Absolute realization error ‖realized − target_block‖_F.
     pub error: f64,
+    /// Whether nearest-measured selection chose this tile's states.
+    pub calibrated: bool,
 }
 
 /// A compiled plan: the tile fleet realizing one logical weight matrix.
@@ -321,6 +449,13 @@ impl TilePlan {
             self.cost.recompose_flops,
             fmt_sig(self.fro_error, 4),
         ));
+        if self.fidelity == Fidelity::Measured {
+            let cal = self.tiles.iter().filter(|t| t.calibrated).count();
+            out.push_str(&format!(
+                "calibration: {cal}/{} tiles on nearest-measured states\n",
+                self.tiles.len()
+            ));
+        }
         out
     }
 }
@@ -339,7 +474,7 @@ mod tests {
     fn digital_recipe_is_exact() {
         let b = rand_block(4, 1);
         let spec = PlanSpec::new(4, Fidelity::Digital);
-        let recipe = synthesize_tile(&b, &spec);
+        let recipe = synthesize_tile(&b, &spec, None);
         let tile = instantiate(&recipe, &spec, 0);
         assert_eq!(tile.matrix(), &b);
         assert_eq!(recipe.state_vars(), 0);
@@ -351,7 +486,7 @@ mod tests {
         let z = CMat::zeros(2, 2);
         for f in [Fidelity::Digital, Fidelity::Ideal, Fidelity::Quantized, Fidelity::Measured] {
             let spec = PlanSpec::new(2, f);
-            let tile = instantiate(&synthesize_tile(&z, &spec), &spec, 3);
+            let tile = instantiate(&synthesize_tile(&z, &spec, None), &spec, 3);
             assert_eq!(tile.matrix(), &z, "{f:?}");
             assert!(tile.state_code().is_none());
         }
@@ -361,7 +496,7 @@ mod tests {
     fn ideal_recipe_reconstructs_the_block() {
         let b = rand_block(4, 2);
         let spec = PlanSpec::new(4, Fidelity::Ideal);
-        let tile = instantiate(&synthesize_tile(&b, &spec), &spec, 0);
+        let tile = instantiate(&synthesize_tile(&b, &spec, None), &spec, 0);
         assert!(tile.matrix().sub(&b).max_abs() < 1e-8);
         assert!(tile.state_code().is_none());
     }
@@ -370,7 +505,8 @@ mod tests {
     fn quantized_tile_is_programmable_and_bounded() {
         let b = rand_block(4, 3);
         let spec = PlanSpec::new(4, Fidelity::Quantized);
-        let recipe = synthesize_tile(&b, &spec);
+        let recipe = synthesize_tile(&b, &spec, None);
+        assert!(!recipe.calibrated());
         let mut tile = instantiate(&recipe, &spec, 0);
         assert_eq!(tile.fidelity(), Fidelity::Quantized);
         // 4×4 Reck mesh has 6 cells → 12 state vars per mesh, two meshes.
@@ -396,12 +532,70 @@ mod tests {
     fn measured_tiles_differ_per_index() {
         let b = rand_block(2, 4);
         let spec = PlanSpec::new(2, Fidelity::Measured);
-        let recipe = synthesize_tile(&b, &spec);
+        let recipe = synthesize_tile(&b, &spec, None);
         let t0 = instantiate(&recipe, &spec, 0);
         let t1 = instantiate(&recipe, &spec, 1);
         // Same states, different fabricated devices → different matrices.
         assert_eq!(t0.state_code(), t1.state_code());
         assert!(t0.matrix().sub(t1.matrix()).max_abs() > 1e-9);
         assert_eq!(t0.fidelity(), Fidelity::Measured);
+    }
+
+    fn tile_tables(spec: &PlanSpec, index: usize) -> (CalibrationTable, CalibrationTable) {
+        (
+            CalibrationTable::measure(mesh_base_seed(spec, index, 0), spec.tile),
+            CalibrationTable::measure(mesh_base_seed(spec, index, 1), spec.tile),
+        )
+    }
+
+    #[test]
+    fn calibrated_prediction_matches_instantiation_bit_for_bit() {
+        let b = rand_block(4, 9);
+        let spec = PlanSpec::new(4, Fidelity::Measured);
+        let index = 2;
+        let (ut, vt) = tile_tables(&spec, index);
+        let recipe = synthesize_tile(&b, &spec, Some((&ut, &vt)));
+        let tile = instantiate(&recipe, &spec, index);
+        let TileRecipe::Discrete { u, u_phases, diag, vh, vh_phases, scale, .. } = &recipe
+        else {
+            panic!("measured lowering produces a discrete recipe");
+        };
+        let predicted =
+            predicted_tile_matrix(&ut, u, u_phases, diag, &vt, vh, vh_phases, *scale);
+        // The lowering-time prediction replicates instantiation exactly —
+        // this equality is what makes the never-worse guarantee sound.
+        assert_eq!(predicted.sub(tile.matrix()).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn calibrated_recipe_never_realizes_worse_than_nearest_ideal() {
+        for seed in [11u64, 12, 13] {
+            let b = rand_block(4, seed);
+            let spec = PlanSpec::new(4, Fidelity::Measured).with_seed(seed ^ 0xFAB);
+            for index in 0..3 {
+                let (ut, vt) = tile_tables(&spec, index);
+                let cal = synthesize_tile(&b, &spec, Some((&ut, &vt)));
+                let snap = synthesize_tile(&b, &spec, None);
+                let e_cal = instantiate(&cal, &spec, index).matrix().sub(&b).fro_norm();
+                let e_snap = instantiate(&snap, &spec, index).matrix().sub(&b).fro_norm();
+                assert!(
+                    e_cal <= e_snap + 1e-12,
+                    "seed {seed} tile {index}: calibrated {e_cal} > nearest-ideal {e_snap}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_names_round_trip() {
+        for c in [Calibration::NearestIdeal, Calibration::NearestMeasured] {
+            assert_eq!(Calibration::from_name(c.name()), Some(c));
+        }
+        assert_eq!(Calibration::from_name("bogus"), None);
+        // Default spec is calibration-aware.
+        assert_eq!(
+            PlanSpec::new(2, Fidelity::Measured).calibration,
+            Calibration::NearestMeasured
+        );
     }
 }

@@ -9,22 +9,28 @@
 //!
 //! ```text
 //!   partition  M×N target  → ⌈M/T⌉×⌈N/T⌉ zero-padded T×T blocks
+//!   calibrate  (Measured)  virtual-VNA table per tile device population,
+//!                          cached by fab seed → nearest-measured states
 //!   lower      each block  → TileRecipe (SVD synthesis, quantized states,
 //!                            scale; pure cacheable data) → live backend
-//!   cache      recipes keyed by content hash + (T, fidelity, fab seed)
+//!   cache      recipes keyed by content hash + (T, fidelity, fab seed,
+//!              calibration rule)
 //!   exec       VirtualProcessor: LinearProcessor over the tile fleet,
-//!              apply_batch = per-tile blocked GEMMs + row accumulation
+//!              apply_batch = per-tile blocked GEMMs + row accumulation;
+//!              in-situ fleet DSPSA (monolithic or block-coordinate)
 //! ```
 //!
 //! See the crate docs' *Virtualization model* section for the layout
 //! diagram, accumulation-order and tolerance-band contracts.
 
 pub mod cache;
+pub mod calibrate;
 pub mod exec;
 pub mod lower;
 pub mod partition;
 
-pub use cache::{Compiler, PlanCache, PlanKey};
-pub use exec::VirtualProcessor;
-pub use lower::{PlanSpec, SynthesizedTile, TilePlan, TileRecipe};
+pub use cache::{CalibrationCache, Compiler, PlanCache, PlanKey};
+pub use calibrate::CalibrationTable;
+pub use exec::{FleetTrainReport, PerturbMode, VirtualProcessor};
+pub use lower::{Calibration, PlanSpec, SynthesizedTile, TilePlan, TileRecipe};
 pub use partition::{TileGrid, VALID_TILES};

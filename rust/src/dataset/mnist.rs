@@ -12,8 +12,29 @@
 
 use super::ImageDataset;
 use crate::math::rng::Rng;
-use std::io::Read;
 use std::path::Path;
+
+/// Where [`load_sourced`] actually got its images from. The Fig. 15/16
+/// harness prints this so the real-data CI job can assert the IDX files
+/// were genuinely exercised — the synthetic fallback is silent by design
+/// offline, which would otherwise let a loader regression pass unnoticed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MnistSource {
+    /// The four classic IDX files from `RFNN_MNIST_DIR`.
+    RealIdx,
+    /// The procedural stroke-template generator.
+    Synthetic,
+}
+
+impl MnistSource {
+    /// Stable report spelling (grepped by CI).
+    pub fn name(self) -> &'static str {
+        match self {
+            MnistSource::RealIdx => "real-idx",
+            MnistSource::Synthetic => "synthetic",
+        }
+    }
+}
 
 /// Load MNIST if `RFNN_MNIST_DIR` is set and valid; otherwise synthesize
 /// `(n_train, n_test)` procedural digit images with the given seed.
@@ -22,16 +43,26 @@ pub fn load_or_synthesize(
     n_test: usize,
     seed: u64,
 ) -> (ImageDataset, ImageDataset) {
+    let (tr, te, _) = load_sourced(n_train, n_test, seed);
+    (tr, te)
+}
+
+/// [`load_or_synthesize`] plus the provenance of what was loaded.
+pub fn load_sourced(
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (ImageDataset, ImageDataset, MnistSource) {
     if let Ok(dir) = std::env::var("RFNN_MNIST_DIR") {
         if let Ok(pair) = load_idx_dir(Path::new(&dir)) {
             let (mut tr, mut te) = pair;
             tr = tr.take(n_train);
             te = te.take(n_test);
-            return (tr, te);
+            return (tr, te, MnistSource::RealIdx);
         }
         eprintln!("warning: RFNN_MNIST_DIR set but unreadable; using synthetic digits");
     }
-    (synthetic(n_train, seed), synthetic(n_test, seed ^ 0x7E57_DA7A))
+    (synthetic(n_train, seed), synthetic(n_test, seed ^ 0x7E57_DA7A), MnistSource::Synthetic)
 }
 
 // ---------------------------------------------------------------- IDX ----
@@ -54,11 +85,7 @@ fn read_maybe_gz(dir: &Path, stem: &str) -> Result<Vec<u8>, String> {
     let gz = dir.join(format!("{stem}.gz"));
     if gz.exists() {
         let raw = std::fs::read(&gz).map_err(|e| e.to_string())?;
-        let mut out = Vec::new();
-        flate2::read::GzDecoder::new(&raw[..])
-            .read_to_end(&mut out)
-            .map_err(|e| e.to_string())?;
-        return Ok(out);
+        return crate::util::gzip::gunzip(&raw);
     }
     Err(format!("{stem}[.gz] not found in {dir:?}"))
 }
@@ -287,6 +314,45 @@ mod tests {
         assert_eq!(ds.labels, vec![7, 3]);
         assert!((ds.images[0][1] - 128.0 / 255.0).abs() < 1e-12);
         assert_eq!((ds.rows, ds.cols), (2, 2));
+    }
+
+    #[test]
+    fn gzipped_idx_files_load_through_the_in_repo_inflater() {
+        // Stored-block gzip container around a tiny IDX pair, written to a
+        // temp dir and loaded through the `.gz` path of `load_idx_dir`.
+        fn gz(payload: &[u8]) -> Vec<u8> {
+            let mut v = vec![0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 0xff];
+            v.push(0x01); // final, stored
+            v.extend_from_slice(&(payload.len() as u16).to_le_bytes());
+            v.extend_from_slice(&(!(payload.len() as u16)).to_le_bytes());
+            v.extend_from_slice(payload);
+            v.extend_from_slice(&crate::util::gzip::crc32(payload).to_le_bytes());
+            v.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            v
+        }
+        let mut img = Vec::new();
+        img.extend(0x0000_0803u32.to_be_bytes());
+        img.extend(2u32.to_be_bytes());
+        img.extend(2u32.to_be_bytes());
+        img.extend(2u32.to_be_bytes());
+        img.extend([0, 128, 255, 64, 10, 20, 30, 40]);
+        let mut lab = Vec::new();
+        lab.extend(0x0000_0801u32.to_be_bytes());
+        lab.extend(2u32.to_be_bytes());
+        lab.extend([7u8, 3u8]);
+        let dir = std::env::temp_dir().join(format!("rfnn-mnist-gz-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for stem in ["train-images-idx3-ubyte", "t10k-images-idx3-ubyte"] {
+            std::fs::write(dir.join(format!("{stem}.gz")), gz(&img)).unwrap();
+        }
+        for stem in ["train-labels-idx1-ubyte", "t10k-labels-idx1-ubyte"] {
+            std::fs::write(dir.join(format!("{stem}.gz")), gz(&lab)).unwrap();
+        }
+        let (tr, te) = load_idx_dir(&dir).unwrap();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(te.labels, vec![7, 3]);
+        assert!((tr.images[0][1] - 128.0 / 255.0).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

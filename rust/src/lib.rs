@@ -199,18 +199,58 @@
 //!
 //! Compiled plans are cached ([`compiler::PlanCache`], shared
 //! process-wide via `Compiler::global()`) keyed by target content hash +
-//! (T, fidelity, fabrication seed). The cache stores *recipes* — pure
-//! data (states, phases, singular values) — so a hit skips the
-//! SVD/decomposition/quantization pipeline and only replays the cheap
-//! state programming; repeat compilations of the same weights are
-//! effectively free. Discrete-fidelity fleets expose one flat state code
-//! (tiles in row-major grid order, U-mesh then V^H-mesh codes within a
-//! tile), so DSPSA and `Job::Reprogram` drive a whole fleet exactly like
-//! one mesh. Serving-side, `Workload::Virtual` registers a virtual
-//! processor in the pool (`Infer` with an MNIST head, `RawApply`,
-//! `Reprogram`), and `nn::layers::AnalogLinear::compiled` drops a tiled
-//! fleet into the 4-layer MNIST network — which therefore runs
-//! end-to-end at Ideal/Quantized fidelity with no PJRT.
+//! (T, fidelity, fabrication seed, calibration rule). The cache stores
+//! *recipes* — pure data (states, phases, singular values) — so a hit
+//! skips the SVD/decomposition/quantization pipeline and only replays
+//! the cheap state programming; repeat compilations of the same weights
+//! are effectively free. Discrete-fidelity fleets expose one flat state
+//! code (tiles in row-major grid order, U-mesh then V^H-mesh codes
+//! within a tile), so DSPSA and `Job::Reprogram` drive a whole fleet
+//! exactly like one mesh. Serving-side, `Workload::Virtual` registers a
+//! virtual processor in the pool (`Infer` with an MNIST head,
+//! `RawApply`, `Reprogram`), and `nn::layers::AnalogLinear::compiled`
+//! drops a tiled fleet into the 4-layer MNIST network — which therefore
+//! runs end-to-end at Ideal/Quantized fidelity with no PJRT.
+//!
+//! ### Calibration (Measured fleets)
+//!
+//! Fabricated devices deviate from the ideal Table-I states, so at
+//! `Measured` fidelity snapping each cell to the nearest *ideal* phase
+//! pair optimizes the wrong metric. Calibration-aware lowering
+//! (the default; [`compiler::Calibration::NearestMeasured`]) instead
+//! characterizes each tile mesh's device population once — a
+//! [`compiler::CalibrationTable`] holding all 36 virtual-VNA-measured
+//! blocks per cell, cached by (fabrication seed, channels) in
+//! [`compiler::CalibrationCache`] — and selects each cell's state by
+//! **nearest-measured** Frobenius distance to its continuous Reck
+//! target. Because the table can compose a candidate program into
+//! exactly the matrix the instantiated mesh will realize (bit-for-bit),
+//! the lowering pass compares the calibrated program against the
+//! ideal-snapped one on the true realized-tile error and keeps the
+//! better — so the calibrated plan's per-tile errors, and on
+//! tile-divisible shapes its fleet `fro_error` band, are *never worse*
+//! than nearest-ideal, and strictly tighter in practice
+//! (`testing/tiling_props.rs` pins both; `rfnn compile --fidelity
+//! measured` prints the comparison, `--calibration ideal` forces the old
+//! rule). The error-band contract is unchanged in form:
+//! `‖Y_tiled − Y_dense‖_F ≤ fro_error · ‖X‖_F` with a tighter
+//! `fro_error`.
+//!
+//! Training-side, [`compiler::VirtualProcessor::train_states`] runs
+//! in-situ DSPSA on the fleet's flat code against the realized matrix
+//! (reprogram + measure per evaluation). A 64×64-on-8×8 fleet is ~7k
+//! discrete states; perturbing them **monolithically**
+//! ([`compiler::PerturbMode::Monolithic`]) couples every tile's
+//! perturbation noise into one two-point gradient estimate and
+//! reprograms the whole fleet each evaluation. **Block-coordinate**
+//! DSPSA ([`nn::dspsa::BlockDspsa`];
+//! `PerturbMode::BlockRoundRobin`/`BlockRandom`) perturbs one tile's
+//! segment per step — the objective is separable across tiles, each
+//! evaluation recomposes exactly one tile (`set_state_code` skips
+//! unchanged segments), and at equal evaluation budget it matches or
+//! beats the monolithic final loss (pinned in `tiling_props`; ablation
+//! A7 reports the 64×64 headline comparison, `rfnn compile --train N
+//! --dspsa-mode block|monolithic` exposes it on the CLI).
 
 pub mod bench;
 pub mod cli;

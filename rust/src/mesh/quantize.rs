@@ -91,6 +91,43 @@ impl QuantizedProgram {
     }
 }
 
+/// Quantize a whole mesh program against an explicit per-cell block
+/// table — the calibration-aware ("nearest-measured") selection rule.
+///
+/// Instead of snapping θ and φ to the nearest Table-I phases
+/// independently (which assumes every cell realizes the *ideal* `t(θ, φ)`
+/// of its programmed state), choose for each cell the state whose
+/// **realized** transfer block — as reported by `block(cell, state)`,
+/// e.g. a virtual-VNA measurement of that specific fabricated device —
+/// is nearest in Frobenius norm to the continuous cell target. With
+/// ideal blocks this is a joint (θ, φ) refinement of
+/// [`quantize_program`]; with measured blocks it absorbs each device's
+/// fabrication error into the state choice. `cell_errors` reports
+/// ‖block(cell, chosen) − t(θ, φ)‖_F, so per-cell it is never larger
+/// than programming the same table with per-phase nearest selection.
+pub fn quantize_program_with(
+    prog: &MeshProgram,
+    block: impl Fn(usize, State) -> CMat,
+) -> QuantizedProgram {
+    let mut states = Vec::with_capacity(prog.cells.len());
+    let mut cell_errors = Vec::with_capacity(prog.cells.len());
+    for (i, c) in prog.cells.iter().enumerate() {
+        let t_cont = t_matrix(c.theta, c.phi);
+        let mut best = State { theta: 0, phi: 0 };
+        let mut best_err = f64::INFINITY;
+        for st in State::all() {
+            let err = block(i, st).sub(&t_cont).fro_norm();
+            if err < best_err {
+                best_err = err;
+                best = st;
+            }
+        }
+        states.push(best);
+        cell_errors.push(best_err);
+    }
+    QuantizedProgram { states, cell_errors }
+}
+
 /// Quantize a whole mesh program onto Table-I states.
 pub fn quantize_program(prog: &MeshProgram) -> QuantizedProgram {
     let mut states = Vec::with_capacity(prog.cells.len());
@@ -261,6 +298,27 @@ mod tests {
         // nonzero in general for random targets.
         assert!(q.max_error() <= 2.0 * (2.0f64).sqrt() + 1e-9);
         assert!(q.mean_error() > 0.0);
+    }
+
+    #[test]
+    fn joint_block_selection_never_increases_cell_error() {
+        // With IDEAL blocks, `quantize_program_with` minimizes exactly the
+        // metric `quantize_program` *reports* (‖t_disc − t_cont‖_F), so its
+        // per-cell errors are a lower bound by construction.
+        use crate::math::cmat::CMat;
+        use crate::math::rng::Rng;
+        use crate::math::svd::svd;
+        let mut rng = Rng::new(0xCA1);
+        let a = CMat::from_fn(5, 5, |_, _| crate::math::c64::C64::new(rng.normal(), rng.normal()));
+        let f = svd(&a);
+        let u = f.u.matmul(&f.vh);
+        let prog = super::super::decompose::decompose_unitary(&u);
+        let snap = quantize_program(&prog);
+        let joint = quantize_program_with(&prog, |_, st| state_t_matrix(st));
+        assert_eq!(joint.states.len(), snap.states.len());
+        for (j, s) in joint.cell_errors.iter().zip(&snap.cell_errors) {
+            assert!(*j <= *s + 1e-12, "joint {j} > snap {s}");
+        }
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //!   *assembled* matrix is exact to fp precision.
 
 use super::prop::{forall_seeded, Gen};
-use crate::compiler::{PlanSpec, VirtualProcessor};
+use crate::compiler::{Calibration, Compiler, PerturbMode, PlanSpec, VirtualProcessor};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::nn::dspsa::DspsaConfig;
 use crate::processor::{Fidelity, LinearProcessor};
 
 const TILES: [usize; 3] = [2, 4, 8];
@@ -206,6 +207,115 @@ fn parallel_path_on_quantized_fleet_matches_sequential() {
         assert_eq!(vp.apply_batch_par(&x, 4), seq);
         assert_eq!(vp.apply_batch(&x), seq);
         check_virtual(&vp, &target, &x);
+    });
+}
+
+/// PR-5 tentpole: calibration-aware (nearest-measured) lowering keeps
+/// whichever candidate program predicts the smaller realized tile error,
+/// and the prediction is bit-exact w.r.t. instantiation — so per tile it
+/// can NEVER be worse than nearest-ideal snapping, across fabrication
+/// seeds and every physical tile size. On tile-divisible shapes the plan
+/// error is the root-sum-square of disjoint per-tile errors, so the
+/// fleet-level `fro_error` report tightens too.
+#[test]
+fn calibrated_lowering_never_worse_than_nearest_ideal() {
+    forall_seeded("calibrated ≤ nearest-ideal", 0x7127, 3, |g| {
+        let fab = g.usize_in(0, 1 << 30) as u64;
+        for &t in &TILES {
+            let k = if t == 8 { 1 } else { g.usize_in(1, 2) };
+            let n = t * k;
+            let target = gen_target(g, n, n, false);
+            let compiler = Compiler::new();
+            let cal_spec = PlanSpec::new(t, Fidelity::Measured).with_seed(fab);
+            let snap_spec = cal_spec.with_calibration(Calibration::NearestIdeal);
+            let cal = compiler.compile(&target, &cal_spec).expect("measured compile");
+            let snap = compiler.compile(&target, &snap_spec).expect("measured compile");
+            for (i, (c, s)) in cal.tiles.iter().zip(&snap.tiles).enumerate() {
+                assert!(
+                    c.error <= s.error + 1e-12,
+                    "tile {i}: calibrated {} > nearest-ideal {} (t={t} fab={fab})",
+                    c.error,
+                    s.error
+                );
+            }
+            assert!(
+                cal.fro_error <= snap.fro_error + 1e-9,
+                "t={t} n={n} fab={fab}: {} > {}",
+                cal.fro_error,
+                snap.fro_error
+            );
+            // The calibrated fleet still executes inside its (tighter)
+            // documented band.
+            let x = gen_batch(g, n, 4);
+            check_virtual(&VirtualProcessor::new(cal), &target, &x);
+        }
+    });
+}
+
+/// The acceptance pin: on the DEFAULT fabrication seed, calibration-aware
+/// lowering reports *strictly* lower `fro_error` than nearest-ideal (the
+/// `rfnn compile --fidelity measured` comparison is this computation).
+#[test]
+fn calibration_strictly_tightens_on_the_default_fab_seed() {
+    forall_seeded("calibration strictly tightens", 0x7128, 1, |g| {
+        let target = gen_target(g, 12, 12, false);
+        let compiler = Compiler::new();
+        let cal_spec = PlanSpec::new(4, Fidelity::Measured);
+        let snap_spec = cal_spec.with_calibration(Calibration::NearestIdeal);
+        let cal = compiler.compile(&target, &cal_spec).unwrap();
+        let snap = compiler.compile(&target, &snap_spec).unwrap();
+        assert!(
+            cal.fro_error < snap.fro_error,
+            "calibration did not tighten: {} vs {}",
+            cal.fro_error,
+            snap.fro_error
+        );
+        // At least one tile actually switched to nearest-measured states.
+        assert!(cal.tiles.iter().any(|t| t.calibrated));
+        assert!(snap.tiles.iter().all(|t| !t.calibrated));
+    });
+}
+
+/// PR-5 tentpole, training half: within the SAME evaluation budget and
+/// from the same lowering, block-coordinate DSPSA matches or beats the
+/// monolithic flat-code loss on a fixed-seed 8×8 target. Both optimizers
+/// track their best evaluated code, so neither can end above the shared
+/// starting loss; the comparison takes the best of three fixed optimizer
+/// seeds per mode (SPSA trajectories are stochastic — a single seed pair
+/// can favor either mode by luck) with a 5%-of-initial noise margin.
+#[test]
+fn block_coordinate_dspsa_matches_or_beats_monolithic_within_budget() {
+    forall_seeded("block ≤ monolithic", 0x7129, 1, |g| {
+        let target = gen_target(g, 8, 8, false);
+        let spec = PlanSpec::new(4, Fidelity::Quantized);
+        let budget = 300;
+        let cfg = DspsaConfig::default();
+        let seeds = [0xB10Cu64, 0xB10C ^ 0x5EED, 0xB10C ^ 0xFACE];
+        let best_of = |mode: PerturbMode| -> (f64, f64, usize) {
+            let mut best = f64::INFINITY;
+            let mut initial = 0.0;
+            let mut evals = 0;
+            for &seed in &seeds {
+                let mut vp = VirtualProcessor::compile(&target, &spec).unwrap();
+                let r = vp
+                    .train_states(&target, mode, budget, cfg, seed)
+                    .expect("quantized fleet has states");
+                // Best-tracking: no run ends above the shared start.
+                assert!(r.final_loss <= r.initial_loss + 1e-12, "{mode:?} seed {seed}");
+                best = best.min(r.final_loss);
+                initial = r.initial_loss;
+                evals = r.evals;
+            }
+            (best, initial, evals)
+        };
+        let (mono, mono_init, mono_evals) = best_of(PerturbMode::Monolithic);
+        let (blk, blk_init, blk_evals) = best_of(PerturbMode::BlockRoundRobin);
+        assert_eq!(mono_evals, blk_evals, "same perturbation budget");
+        assert_eq!(mono_init, blk_init, "same lowering, same starting loss");
+        assert!(
+            blk <= mono + 0.05 * mono_init + 1e-12,
+            "block {blk} > monolithic {mono} (init {mono_init})"
+        );
     });
 }
 

@@ -1,0 +1,445 @@
+//! Minimal gzip/DEFLATE decoder (RFC 1952 / RFC 1951).
+//!
+//! The offline vendor set carries no `flate2`, but the MNIST IDX archives
+//! ship gzipped (`train-images-idx3-ubyte.gz`, …), so the dataset loader
+//! needs an in-repo inflater. This is a straightforward bit-serial
+//! implementation in the style of zlib's reference `puff.c`: canonical
+//! Huffman decoding by length-count tables, all three DEFLATE block types
+//! (stored / fixed / dynamic), and full gzip container validation
+//! (header flags, CRC-32, modulo-2³² length). Throughput is a few tens of
+//! MB/s — decompressing the 10 MB MNIST training images takes well under
+//! a second, which is plenty for a loader that runs once per process.
+
+/// Decompress a gzip member. Errors are descriptive strings (the dataset
+/// loader surfaces them as "unreadable" warnings and falls back to the
+/// procedural generator).
+pub fn gunzip(data: &[u8]) -> Result<Vec<u8>, String> {
+    if data.len() < 18 {
+        return Err("gzip: truncated stream".into());
+    }
+    if data[0] != 0x1f || data[1] != 0x8b {
+        return Err("gzip: bad magic".into());
+    }
+    if data[2] != 8 {
+        return Err(format!("gzip: unsupported compression method {}", data[2]));
+    }
+    let flg = data[3];
+    if flg & 0xE0 != 0 {
+        return Err("gzip: reserved header flags set".into());
+    }
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA: little-endian XLEN, then XLEN bytes.
+        if data.len() < pos + 2 {
+            return Err("gzip: truncated FEXTRA".into());
+        }
+        let xlen = data[pos] as usize | (data[pos + 1] as usize) << 8;
+        pos += 2 + xlen;
+    }
+    if flg & 0x08 != 0 {
+        pos = skip_cstr(data, pos, "FNAME")?;
+    }
+    if flg & 0x10 != 0 {
+        pos = skip_cstr(data, pos, "FCOMMENT")?;
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if data.len() < pos + 8 {
+        return Err("gzip: header overruns stream".into());
+    }
+    let out = inflate(&data[pos..data.len() - 8])?;
+    let tail = &data[data.len() - 8..];
+    let want_crc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let want_len = u32::from_le_bytes([tail[4], tail[5], tail[6], tail[7]]);
+    if out.len() as u32 != want_len {
+        return Err(format!("gzip: length mismatch ({} vs {want_len})", out.len() as u32));
+    }
+    if crc32(&out) != want_crc {
+        return Err("gzip: CRC-32 mismatch".into());
+    }
+    Ok(out)
+}
+
+fn skip_cstr(data: &[u8], mut pos: usize, what: &str) -> Result<usize, String> {
+    while pos < data.len() && data[pos] != 0 {
+        pos += 1;
+    }
+    if pos >= data.len() {
+        return Err(format!("gzip: unterminated {what}"));
+    }
+    Ok(pos + 1)
+}
+
+/// CRC-32 (IEEE 802.3, reflected), bit-serial — simple over fast.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c ^= b as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { (c >> 1) ^ 0xEDB8_8320 } else { c >> 1 };
+        }
+    }
+    !c
+}
+
+// ------------------------------------------------------------- inflate ----
+
+/// Raw DEFLATE (RFC 1951) decompression.
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut br = BitReader { data, pos: 0, bit: 0 };
+    let mut out = Vec::new();
+    loop {
+        let last = br.bits(1)?;
+        match br.bits(2)? {
+            0 => stored_block(&mut br, &mut out)?,
+            1 => {
+                let (lit, dist) = fixed_tables();
+                compressed_block(&mut br, &mut out, &lit, &dist)?;
+            }
+            2 => {
+                let (lit, dist) = dynamic_tables(&mut br)?;
+                compressed_block(&mut br, &mut out, &lit, &dist)?;
+            }
+            _ => return Err("inflate: reserved block type".into()),
+        }
+        if last == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    /// Bits already consumed from `data[pos]`.
+    bit: u32,
+}
+
+impl BitReader<'_> {
+    fn bits(&mut self, n: u32) -> Result<u32, String> {
+        debug_assert!(n <= 16);
+        let mut v = 0u32;
+        for k in 0..n {
+            if self.pos >= self.data.len() {
+                return Err("inflate: out of input".into());
+            }
+            v |= (((self.data[self.pos] >> self.bit) & 1) as u32) << k;
+            self.bit += 1;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.pos += 1;
+            }
+        }
+        Ok(v)
+    }
+
+    fn align(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.pos += 1;
+        }
+    }
+}
+
+fn stored_block(br: &mut BitReader, out: &mut Vec<u8>) -> Result<(), String> {
+    br.align();
+    if br.data.len() < br.pos + 4 {
+        return Err("inflate: truncated stored header".into());
+    }
+    let len = br.data[br.pos] as usize | (br.data[br.pos + 1] as usize) << 8;
+    let nlen = br.data[br.pos + 2] as usize | (br.data[br.pos + 3] as usize) << 8;
+    if len != !nlen & 0xFFFF {
+        return Err("inflate: stored LEN/NLEN mismatch".into());
+    }
+    br.pos += 4;
+    if br.data.len() < br.pos + len {
+        return Err("inflate: truncated stored block".into());
+    }
+    out.extend_from_slice(&br.data[br.pos..br.pos + len]);
+    br.pos += len;
+    Ok(())
+}
+
+/// A canonical Huffman decoder: symbol counts per code length + symbols
+/// sorted by (length, symbol) — the RFC 1951 §3.2.2 construction.
+struct Huffman {
+    counts: [u16; 16],
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn new(lengths: &[u8]) -> Result<Huffman, String> {
+        let mut counts = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err("inflate: code length > 15".into());
+            }
+            counts[l as usize] += 1;
+        }
+        // Over-subscription check (incomplete codes are tolerated, as in
+        // puff: they only error if such a code is actually used).
+        let mut left = 1i32;
+        for len in 1..=15 {
+            left = (left << 1) - counts[len] as i32;
+            if left < 0 {
+                return Err("inflate: over-subscribed code".into());
+            }
+        }
+        let mut offsets = [0u16; 16];
+        for len in 1..15 {
+            offsets[len + 1] = offsets[len] + counts[len];
+        }
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l != 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbols[offsets[l as usize] as usize] = sym as u16;
+                offsets[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    fn decode(&self, br: &mut BitReader) -> Result<u16, String> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..=15 {
+            code |= br.bits(1)? as i32;
+            let count = self.counts[len] as i32;
+            if code - first < count {
+                return Ok(self.symbols[(index + code - first) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err("inflate: invalid Huffman code".into())
+    }
+}
+
+/// Length codes 257..=285: (base, extra bits).
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+
+/// Distance codes 0..=29: (base, extra bits).
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+fn fixed_tables() -> (Huffman, Huffman) {
+    let mut lit = [0u8; 288];
+    for (i, l) in lit.iter_mut().enumerate() {
+        *l = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    let dist = [5u8; 30];
+    // Both tables are statically valid — unwrap is unreachable.
+    (Huffman::new(&lit).unwrap(), Huffman::new(&dist).unwrap())
+}
+
+/// Order in which code-length-code lengths are transmitted (RFC 1951).
+const CLC_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+fn dynamic_tables(br: &mut BitReader) -> Result<(Huffman, Huffman), String> {
+    let hlit = br.bits(5)? as usize + 257;
+    let hdist = br.bits(5)? as usize + 1;
+    let hclen = br.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err("inflate: bad HLIT/HDIST".into());
+    }
+    let mut clc = [0u8; 19];
+    for &slot in CLC_ORDER.iter().take(hclen) {
+        clc[slot] = br.bits(3)? as u8;
+    }
+    let clc_huff = Huffman::new(&clc)?;
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0usize;
+    while i < lengths.len() {
+        let sym = clc_huff.decode(br)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err("inflate: repeat with no previous length".into());
+                }
+                let prev = lengths[i - 1];
+                let reps = 3 + br.bits(2)? as usize;
+                for _ in 0..reps {
+                    if i >= lengths.len() {
+                        return Err("inflate: length repeat overrun".into());
+                    }
+                    lengths[i] = prev;
+                    i += 1;
+                }
+            }
+            17 | 18 => {
+                let reps = if sym == 17 {
+                    3 + br.bits(3)? as usize
+                } else {
+                    11 + br.bits(7)? as usize
+                };
+                for _ in 0..reps {
+                    if i >= lengths.len() {
+                        return Err("inflate: zero-run overrun".into());
+                    }
+                    lengths[i] = 0;
+                    i += 1;
+                }
+            }
+            _ => return Err("inflate: bad code-length symbol".into()),
+        }
+    }
+    if lengths[256] == 0 {
+        return Err("inflate: missing end-of-block code".into());
+    }
+    Ok((Huffman::new(&lengths[..hlit])?, Huffman::new(&lengths[hlit..])?))
+}
+
+fn compressed_block(
+    br: &mut BitReader,
+    out: &mut Vec<u8>,
+    lit: &Huffman,
+    dist: &Huffman,
+) -> Result<(), String> {
+    loop {
+        let sym = lit.decode(br)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let k = (sym - 257) as usize;
+                let len = LEN_BASE[k] as usize + br.bits(LEN_EXTRA[k] as u32)? as usize;
+                let dsym = dist.decode(br)? as usize;
+                if dsym >= 30 {
+                    return Err("inflate: bad distance symbol".into());
+                }
+                let d = DIST_BASE[dsym] as usize + br.bits(DIST_EXTRA[dsym] as u32)? as usize;
+                if d > out.len() {
+                    return Err("inflate: distance beyond output".into());
+                }
+                // Byte-by-byte so overlapping (run-length) copies work.
+                let start = out.len() - d;
+                for j in 0..len {
+                    let b = out[start + j];
+                    out.push(b);
+                }
+            }
+            _ => return Err("inflate: bad literal/length symbol".into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unhex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // The classic CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    // The vectors below were produced by CPython's `gzip.compress(data,
+    // level, mtime=0)` — an independent reference implementation — and
+    // cover all three DEFLATE block types.
+
+    #[test]
+    fn stored_block_round_trip() {
+        // level 0 → type-0 (stored) blocks.
+        let v = unhex(
+            "1f8b08000000000000ff012e00d1ff73746f7265642d626c6f636b207061796c6f61643a2030\
+             3132333435363738392061626364656620414243444546890aefc42e000000",
+        );
+        let want = b"stored-block payload: 0123456789 abcdef ABCDEF";
+        assert_eq!(gunzip(&v).unwrap(), want);
+    }
+
+    #[test]
+    fn fixed_huffman_round_trip() {
+        // level 9 on a short repetitive string → type-1 (fixed) block with
+        // length/distance back-references.
+        let v = unhex("1f8b08000000000002ffcb48cdc9c957c8209604006a762cb92f000000");
+        let want: Vec<u8> = b"hello hello hello hello hello hello hello hello".to_vec();
+        assert_eq!(gunzip(&v).unwrap(), want);
+    }
+
+    #[test]
+    fn dynamic_huffman_round_trip() {
+        // level 9 on a structured 8.5 KB payload → type-2 (dynamic) blocks
+        // with long-range matches. Payload is regenerated here; the
+        // compressed form is pinned from the reference encoder.
+        let mut want: Vec<u8> = Vec::new();
+        for _ in 0..2 {
+            for i in 0..4096usize {
+                want.push(((i * 7 + (i >> 3)) % 251) as u8);
+            }
+        }
+        want.extend_from_slice(b"tail");
+        for _ in 0..8 {
+            want.extend_from_slice(b"hello hello hello hello hello hello hello hello");
+        }
+        let v = unhex(include_str!("gzip_dyn_vector.hex").trim());
+        assert_eq!(crc32(&want), 0x8DD1_97FA, "payload regeneration must match the encoder run");
+        assert_eq!(gunzip(&v).unwrap(), want);
+    }
+
+    #[test]
+    fn corrupt_streams_are_refused_not_panicked() {
+        let good = unhex("1f8b08000000000002ffcb48cdc9c957c8209604006a762cb92f000000");
+        // Bad magic.
+        assert!(gunzip(&[0u8; 32]).is_err());
+        // Truncations at every prefix length must error, never panic.
+        for cut in 0..good.len() {
+            assert!(gunzip(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Flipped payload bit → CRC mismatch.
+        let mut bad = good.clone();
+        bad[12] ^= 0x10;
+        assert!(gunzip(&bad).is_err());
+        // Flipped length trailer.
+        let mut bad = good;
+        let n = bad.len();
+        bad[n - 1] ^= 1;
+        assert!(gunzip(&bad).is_err());
+    }
+
+    #[test]
+    fn gzip_with_fname_header_is_accepted() {
+        // Hand-built container: FLG=FNAME, name "x\0", stored block "ab".
+        let payload = b"ab";
+        let mut v = vec![0x1f, 0x8b, 8, 0x08, 0, 0, 0, 0, 0, 0xff];
+        v.extend_from_slice(b"x\0");
+        v.extend_from_slice(&[0x01, 0x02, 0x00, 0xfd, 0xff]); // last, stored, LEN=2, NLEN
+        v.extend_from_slice(payload);
+        v.extend_from_slice(&crc32(payload).to_le_bytes());
+        v.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        assert_eq!(gunzip(&v).unwrap(), payload);
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared utilities: error type, JSON emission, table formatting.
+//! Small shared utilities: error type, JSON emission, table formatting,
+//! gzip decompression.
 
 pub mod error;
+pub mod gzip;
 pub mod json;
 pub mod table;
