@@ -1,13 +1,21 @@
 #!/usr/bin/env python3
 """Perf regression gate for the BENCH_pr*.json trajectory.
 
-Compares the current run's bench records against the previous successful
-run's `bench-json` artifact (downloaded by the workflow into --baseline),
-falling back to the committed BENCH_baseline.json manifest when no prior
-artifact exists (first run on a fresh branch/fork). Entries are matched
-per bench file by their identifying fields (kernel/mode/n/batch/tile) and
-every latency field (`*ns_per*` / `*_ns`) is compared; any entry more than
-THRESHOLD slower than baseline fails the gate.
+Compares the current run's bench records against the `bench-json`
+artifacts of the last N successful runs (each downloaded by the workflow
+into its own dir, passed as repeated --baseline flags). For every
+(bench file, entry key, latency field) the baseline is the MEDIAN across
+those runs, so one anomalously fast or slow prior run on a shared CI
+machine cannot set the bar by itself. When no prior artifact exists
+(first run on a fresh branch/fork) the committed BENCH_baseline.json
+manifest is the fallback.
+
+Entries are matched per bench file by their identifying fields
+(kernel/mode/n/batch/tile) and every latency field (`*ns_per*` / `*_ns`)
+is compared. The allowed slowdown is per-bench: the manifest's
+"thresholds" map gives each BENCH_pr*.json its own bar (noisier
+end-to-end benches get more headroom than tight kernel loops), with its
+"default" entry — or --threshold — covering files the map doesn't name.
 
 Baselines below --min-ns are skipped: sub-microsecond micro-bench medians
 on shared CI runners are noise-dominated and would make a hard gate flap.
@@ -17,6 +25,7 @@ import argparse
 import glob
 import json
 import os
+import statistics
 import sys
 
 KEY_FIELDS = ("kernel", "mode", "n", "batch", "tile")
@@ -35,23 +44,80 @@ def load(path):
         return json.load(f)
 
 
+def median_baseline(baseline_dirs, name):
+    """Per-(entry key, field) median across every baseline run that has
+    this bench file. Returns {key: {field: ns}} or None if no run has it."""
+    runs = []
+    for d in baseline_dirs:
+        bp = os.path.join(d, name)
+        if os.path.exists(bp):
+            try:
+                runs.append(load(bp))
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"perf-gate: ignoring unreadable baseline {bp}: {e}")
+    if not runs:
+        return None
+    merged = {}
+    for run in runs:
+        for entry in run.get("results", []):
+            slot = merged.setdefault(entry_key(entry), {})
+            for field, value in entry.items():
+                if is_latency(field) and isinstance(value, (int, float)):
+                    slot.setdefault(field, []).append(value)
+    return {
+        key: {field: statistics.median(vals) for field, vals in fields.items()}
+        for key, fields in merged.items()
+    }
+
+
+def manifest_baseline(manifest_benches, name):
+    """Adapt a manifest bench record to the {key: {field: ns}} shape."""
+    rec = manifest_benches.get(name)
+    if rec is None:
+        return None
+    out = {}
+    for entry in rec.get("results", []):
+        out[entry_key(entry)] = {
+            field: value
+            for field, value in entry.items()
+            if is_latency(field) and isinstance(value, (int, float))
+        }
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", required=True, help="dir with this run's BENCH_pr*.json")
-    ap.add_argument("--baseline", default=None, help="dir with the prior run's artifact")
+    ap.add_argument(
+        "--baseline",
+        action="append",
+        default=[],
+        help="dir with one prior run's artifact (repeat for median-of-N)",
+    )
     ap.add_argument("--manifest", default=None, help="committed fallback manifest")
-    ap.add_argument("--threshold", type=float, default=0.20)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="fallback slowdown bar when the manifest thresholds map has no entry",
+    )
     ap.add_argument("--min-ns", type=float, default=1000.0)
     args = ap.parse_args()
 
-    manifest = {}
+    manifest_benches, thresholds = {}, {}
     if args.manifest and os.path.exists(args.manifest):
-        manifest = load(args.manifest).get("benches", {})
+        m = load(args.manifest)
+        manifest_benches = m.get("benches", {})
+        thresholds = m.get("thresholds", {})
+    default_threshold = thresholds.get("default", args.threshold)
 
     current = sorted(glob.glob(os.path.join(args.current, "BENCH_pr*.json")))
     if not current:
         print(f"perf-gate: no BENCH_pr*.json found in {args.current}")
         return 1
+
+    baseline_dirs = [d for d in args.baseline if os.path.isdir(d)]
+    print(f"perf-gate: {len(baseline_dirs)} baseline run(s): {baseline_dirs}")
 
     regressions = []
     compared = 0
@@ -59,17 +125,13 @@ def main():
     for path in current:
         name = os.path.basename(path)
         cur = load(path)
-        base = None
-        if args.baseline:
-            bp = os.path.join(args.baseline, name)
-            if os.path.exists(bp):
-                base = load(bp)
-        if base is None:
-            base = manifest.get(name)
-        if base is None:
+        threshold = thresholds.get(name, default_threshold)
+        base_by_key = median_baseline(baseline_dirs, name)
+        if base_by_key is None:
+            base_by_key = manifest_baseline(manifest_benches, name)
+        if base_by_key is None:
             skipped.append(name)
             continue
-        base_by_key = {entry_key(e): e for e in base.get("results", [])}
         for entry in cur.get("results", []):
             b = base_by_key.get(entry_key(entry))
             if b is None:
@@ -83,8 +145,11 @@ def main():
                     continue
                 compared += 1
                 ratio = value / bv
-                line = f"{name} {entry_key(entry)} {field}: {bv:.0f} -> {value:.0f} ns ({ratio:.2f}x)"
-                if ratio > 1.0 + args.threshold:
+                line = (
+                    f"{name} {entry_key(entry)} {field}: "
+                    f"{bv:.0f} -> {value:.0f} ns ({ratio:.2f}x, bar +{threshold:.0%})"
+                )
+                if ratio > 1.0 + threshold:
                     regressions.append(line)
                     print(f"REGRESSION  {line}")
                 else:
@@ -92,8 +157,8 @@ def main():
     for s in skipped:
         print(f"no-baseline {s}")
     print(
-        f"perf-gate: {compared} comparisons, {len(regressions)} regressions "
-        f"(threshold +{args.threshold:.0%}), {len(skipped)} skipped"
+        f"perf-gate: {compared} comparisons, {len(regressions)} regressions, "
+        f"{len(skipped)} skipped"
     )
     return 1 if regressions else 0
 

@@ -16,6 +16,7 @@ use crate::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
 use crate::device::State;
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::math::gemm::{self, Micro};
 use crate::math::rng::Rng;
 use crate::math::svd::svd;
 use crate::mesh::decompose::decompose_unitary;
@@ -42,6 +43,14 @@ pub const REMOTE_BATCHES: [usize; 3] = [1, 8, 64];
 /// Logical size of the in-situ fleet-DSPSA sweep (on 8×8 measured tiles).
 pub const INSITU_N: usize = 16;
 
+/// Square sizes for the kernel-dispatch GEMM grid. The n ≥ 8 rows carry
+/// the PR-6 acceptance bar (≥2× median over the forced-scalar 4×4
+/// reference on an AVX2 runner); 4 is the small-tile sanity row.
+pub const KERNEL_NS: [usize; 4] = [4, 8, 16, 64];
+
+/// Batch sizes for the kernel-dispatch GEMM grid.
+pub const KERNEL_BATCHES: [usize; 3] = [1, 8, 64];
+
 /// Run every perf bench; returns the report. Measures the batched
 /// `apply_batch` path against the per-vector `matvec` loop it replaced
 /// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`), the
@@ -51,8 +60,10 @@ pub const INSITU_N: usize = 16;
 /// the dense GEMM it virtualizes (written to `BENCH_pr3.json`; override
 /// with `RFNN_BENCH3_OUT`), and the remote (loopback framed TCP) vs
 /// in-process submit→wait latency sweep (written to `BENCH_pr4.json`;
-/// override with `RFNN_BENCH4_OUT`) so the perf trajectory tracks each
-/// PR. `tile` is the physical tile size of the virtualization sweep.
+/// override with `RFNN_BENCH4_OUT`), and the dispatched-vs-forced-scalar
+/// kernel grid over `(n, batch)` (written to `BENCH_pr6.json`; override
+/// with `RFNN_BENCH6_OUT`) so the perf trajectory tracks each PR. `tile`
+/// is the physical tile size of the virtualization sweep.
 pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -161,7 +172,127 @@ pub fn all(quick: bool, tile: usize) -> String {
         Ok(()) => out.push_str(&format!("wrote {path5}\n")),
         Err(e) => out.push_str(&format!("could not write {path5}: {e}\n")),
     }
+    out.push_str("§Perf — dispatched GEMM kernel vs forced-scalar 4×4 reference\n");
+    out.push_str(&format!("  {}\n", gemm::kernel_report()));
+    let kernel_rows = run_kernel_benches(samples);
+    for (n, b, active, scalar) in &kernel_rows {
+        out.push_str(&active.line());
+        out.push('\n');
+        out.push_str(&scalar.line());
+        out.push('\n');
+        let speedup = scalar.median_ns() as f64 / active.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  n {n:>3} batch {b:>3}: {} ({}) is {speedup:.2}× the scalar 4×4 reference\n",
+            gemm::active().name(),
+            gemm::micro_for(*n, *n, *b).label()
+        ));
+    }
+    let json6 = kernel_report_json(&kernel_rows, samples, quick);
+    let path6 =
+        std::env::var("RFNN_BENCH6_OUT").unwrap_or_else(|_| "BENCH_pr6.json".to_string());
+    match std::fs::write(&path6, json6.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path6}\n")),
+        Err(e) => out.push_str(&format!("could not write {path6}: {e}\n")),
+    }
     out
+}
+
+/// Time the dispatched (autotuned) kernel against the forced scalar 4×4
+/// reference over the `(n, batch)` grid. Both sides run through the raw
+/// slice entry (`gemm_into_micro`), so the comparison isolates kernel
+/// cost — no output reshaping or allocation on either side. Returns
+/// `(n, batch, active, scalar)` stats.
+pub fn run_kernel_benches(samples: usize) -> Vec<(usize, usize, BenchStats, BenchStats)> {
+    let mut rng = Rng::new(0x6E66);
+    let mut rows = Vec::new();
+    for &n in &KERNEL_NS {
+        let a: Vec<C64> = (0..n * n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        for &b in &KERNEL_BATCHES {
+            let x: Vec<C64> = (0..n * b).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let mut out = vec![C64::ZERO; n * b];
+            let micro = gemm::micro_for(n, n, b);
+            let active = bench(&format!("gemm {n}x{n}x{b} {}", micro.label()), samples, || {
+                gemm::gemm_into_micro(
+                    micro,
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&x),
+                    &mut out,
+                    n,
+                    n,
+                    b,
+                );
+                std::hint::black_box(&mut out);
+            });
+            let scalar = bench(&format!("gemm {n}x{n}x{b} scalar4x4 ref"), samples, || {
+                gemm::gemm_into_micro(
+                    Micro::Scalar { mr: 4, nr: 4 },
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&x),
+                    &mut out,
+                    n,
+                    n,
+                    b,
+                );
+                std::hint::black_box(&mut out);
+            });
+            rows.push((n, b, active, scalar));
+        }
+    }
+    rows
+}
+
+/// The PR-6 perf-trajectory record for [`run_kernel_benches`]: one entry
+/// per `(n, batch)` cell with the dispatched kernel, its autotuned
+/// `mr/nr` block shape, and both latencies. `kernel` is a gate key field,
+/// so runs on differently-capable machines never compare against each
+/// other. `speedup_median_n8` is the acceptance number: median speedup
+/// over the n ≥ 8 cells.
+pub fn kernel_report_json(
+    rows: &[(usize, usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(n, b, active, scalar)| {
+            let micro = gemm::micro_for(*n, *n, *b);
+            let (mr, nr) = micro.dims();
+            let act = active.median_ns() as f64;
+            let sca = scalar.median_ns() as f64;
+            Json::obj(vec![
+                ("kernel", Json::Str(gemm::active().name().into())),
+                ("micro", Json::Str(micro.label())),
+                ("mr", Json::Num(mr as f64)),
+                ("nr", Json::Num(nr as f64)),
+                ("n", Json::Num(*n as f64)),
+                ("batch", Json::Num(*b as f64)),
+                ("active_ns_per_call", Json::Num(act)),
+                ("scalar_ns_per_call", Json::Num(sca)),
+                ("speedup_vs_scalar", Json::Num(sca / act.max(1.0))),
+            ])
+        })
+        .collect();
+    let mut speedups: Vec<f64> = rows
+        .iter()
+        .filter(|(n, ..)| *n >= 8)
+        .map(|(_, _, active, scalar)| {
+            scalar.median_ns() as f64 / active.median_ns().max(1) as f64
+        })
+        .collect();
+    speedups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_n8 = speedups.get(speedups.len() / 2).copied().unwrap_or(0.0);
+    Json::obj(vec![
+        ("pr", Json::Num(6.0)),
+        ("bench", Json::Str("gemm_kernel_grid".into())),
+        ("kernel", Json::Str(gemm::active().name().into())),
+        ("policy", Json::Str(gemm::policy().name().into())),
+        ("avx2_available", Json::Bool(gemm::avx2_available())),
+        ("par_threshold_macs", Json::Num(gemm::par_threshold_macs() as f64)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+        ("speedup_median_n8", Json::Num(median_n8)),
+    ])
 }
 
 /// Steps per timed `train_states` call in the in-situ sweep: enough for
@@ -687,6 +818,31 @@ mod tests {
         assert!(report.contains("tiled t8"), "{report}");
         assert!(report.contains("remote submit"), "{report}");
         assert!(report.contains("insitu dspsa"), "{report}");
+        assert!(report.contains("gemm kernel"), "{report}");
+    }
+
+    #[test]
+    fn kernel_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_kernel_benches(2);
+        assert_eq!(rows.len(), super::KERNEL_NS.len() * super::KERNEL_BATCHES.len());
+        let json = super::kernel_report_json(&rows, 2, true);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(parsed.get("pr").and_then(|v| v.as_f64()), Some(6.0));
+        let kernel = parsed.get("kernel").and_then(|v| v.as_str()).expect("kernel");
+        assert!(kernel == "scalar" || kernel == "avx2", "kernel {kernel}");
+        let thr = parsed.get("par_threshold_macs").and_then(|v| v.as_f64()).expect("thr");
+        assert!((4096.0..=1048576.0).contains(&thr), "par_threshold_macs {thr}");
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), rows.len());
+        for r in results {
+            let s = r.get("speedup_vs_scalar").and_then(|v| v.as_f64()).expect("speedup");
+            assert!(s.is_finite() && s > 0.0, "speedup_vs_scalar {s}");
+            let mr = r.get("mr").and_then(|v| v.as_f64()).expect("mr");
+            assert!(mr >= 1.0, "mr {mr}");
+        }
+        let med = parsed.get("speedup_median_n8").and_then(|v| v.as_f64()).expect("median");
+        assert!(med.is_finite() && med > 0.0, "speedup_median_n8 {med}");
     }
 
     #[test]

@@ -112,6 +112,12 @@ USAGE:
                  [--dspsa-seed S]
     rfnn info                                          platform + artifact status
 
+Every command also takes --kernel auto|scalar|avx2 (default auto), the
+CLI spelling of the RFNN_KERNEL env knob: it pins the complex-GEMM
+microkernel the runtime dispatcher may select (scalar forces the
+portable reference path; avx2 falls back to scalar when the CPU lacks
+AVX2+FMA). `rfnn info` reports which kernel is active.
+
 serve drives the pooled ProcessorService (mnist8 + cls2x2 + mesh8) with
 mixed infer/classify/raw-apply/reprogram traffic; --depth bounds each
 admission queue (overload sheds, it does not block). --tile T additionally
@@ -143,6 +149,18 @@ EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf
 
 /// Dispatch a parsed command line; returns the process exit code.
 pub fn run(args: &Args) -> i32 {
+    // `--kernel` mirrors the `RFNN_KERNEL` env knob (CLI wins): it must
+    // be applied before ANY gemm runs, because the dispatcher latches the
+    // policy in a process-wide `OnceLock` on first use.
+    if let Some(k) = args.get("kernel") {
+        match k {
+            "auto" | "scalar" | "avx2" => std::env::set_var("RFNN_KERNEL", k),
+            _ => {
+                eprintln!("unknown kernel '{k}' (have: auto scalar avx2)");
+                return 2;
+            }
+        }
+    }
     match args.command.as_deref() {
         Some("bench") => cmd_bench(args),
         Some("train-mnist") => cmd_train(args),
@@ -689,6 +707,7 @@ fn cmd_compile(args: &Args) -> i32 {
 
 fn cmd_info() -> i32 {
     println!("rfnn {} — paper doi:10.1109/TMTT.2023.3293054", env!("CARGO_PKG_VERSION"));
+    println!("{}", crate::math::gemm::kernel_report());
     let dir = Manifest::default_dir();
     match Manifest::load(&dir) {
         Ok(m) => {
@@ -814,6 +833,15 @@ mod tests {
         // (serve/job print the message and exit 2).
         assert!(virt_from(&parse("serve --tile 3")).is_err());
         assert!(virt_from(&parse("serve --tile 4 --fidelity measurd")).is_err());
+    }
+
+    #[test]
+    fn invalid_kernel_is_a_usage_error_before_dispatch() {
+        // The invalid spelling must exit 2 WITHOUT touching the process
+        // environment (tests run in parallel; set_var is only reached on
+        // the validated path, which this test deliberately avoids).
+        assert_eq!(run(&parse("info --kernel neon")), 2);
+        assert_eq!(run(&parse("bench perf --kernel fast")), 2);
     }
 
     #[test]

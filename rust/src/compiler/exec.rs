@@ -3,12 +3,20 @@
 //!
 //! `apply_batch` is the tiled blocked GEMM: one pass per tile-column
 //! (gather the `T×B` input slab once, zero-padded on the ragged edge),
-//! each tile in that column executes its own `LinearProcessor::apply_batch`
-//! — the PR-1 register-blocked kernel — and partial products accumulate
-//! down the tile-rows. The accumulation order (column-major over the tile
-//! grid) is fixed and documented because it determines the floating-point
+//! each tile in that column executes its own
+//! `LinearProcessor::apply_batch_into` — the dispatched/autotuned kernel
+//! of `crate::math::gemm` — and partial products accumulate down the
+//! tile-rows. The accumulation order (column-major over the tile grid)
+//! is fixed and documented because it determines the floating-point
 //! rounding profile relative to the dense reference: results match a
 //! dense GEMM to ~1e-12, not bit-exactly.
+//!
+//! Every per-dispatch intermediate (input slabs, per-tile partial
+//! products) lives in a pool-checked-out [`ExecArena`], so steady-state
+//! serving allocates nothing per request beyond the returned output; the
+//! parallel path writes into the same preallocated product slots the
+//! sequential path uses, in the same fixed order, so parallel ≡
+//! sequential stays bit-identical under the arena.
 
 use super::cache::Compiler;
 use super::lower::{PlanSpec, TilePlan};
@@ -30,13 +38,41 @@ pub struct VirtualProcessor {
     code_len: usize,
 }
 
-/// Minimum estimated per-tile work (complex MACs: `tiles · T² · B`) before
-/// `apply_batch` fans tiles out across threads; below it the spawn cost
-/// dominates and the sequential path wins.
-const PAR_MIN_WORK: usize = 1 << 14;
-
-/// Minimum fleet size worth parallelizing.
+/// Minimum fleet size worth parallelizing. The *work* cutoff (estimated
+/// complex MACs: `tiles · T² · B`) is not a constant: it derives from the
+/// measured per-MAC cost of the autotuned GEMM kernel
+/// ([`crate::math::gemm::par_threshold_macs`]) — an AVX2 process needs
+/// more MACs than a scalar one to amortize the same thread-spawn cost.
 const PAR_MIN_TILES: usize = 4;
+
+/// Reusable per-dispatch buffers for the tiled executor: one `T×B` input
+/// slab per tile-column and one partial-product matrix per tile. Checked
+/// out of [`ARENA_POOL`] at the top of each dispatch and returned after,
+/// so steady-state serving performs no per-request heap allocation for
+/// the tiled intermediates (buffers reshape in place via [`CMat::reset`]).
+#[derive(Default)]
+struct ExecArena {
+    slabs: Vec<CMat>,
+    products: Vec<CMat>,
+}
+
+/// Retired-arena pool, capped so a burst of concurrent dispatches cannot
+/// pin unbounded memory: checkouts beyond the cap fall back to fresh
+/// (empty) arenas, which the pool then absorbs back up to the cap.
+static ARENA_POOL: std::sync::Mutex<Vec<ExecArena>> = std::sync::Mutex::new(Vec::new());
+const ARENA_POOL_CAP: usize = 8;
+
+fn arena_checkout() -> ExecArena {
+    ARENA_POOL.lock().ok().and_then(|mut pool| pool.pop()).unwrap_or_default()
+}
+
+fn arena_checkin(arena: ExecArena) {
+    if let Ok(mut pool) = ARENA_POOL.lock() {
+        if pool.len() < ARENA_POOL_CAP {
+            pool.push(arena);
+        }
+    }
+}
 
 /// `available_parallelism`, resolved once per process (it is a syscall —
 /// too expensive for the per-dispatch hot path).
@@ -72,93 +108,93 @@ impl VirtualProcessor {
         self.cached = self.plan.assemble();
     }
 
-    /// The zero-padded `T×B` input slab for tile-column `c`.
-    fn column_slab(&self, x: &CMat, c: usize) -> CMat {
-        let t = self.plan.grid.tile();
+    /// Tiled execution into `out` (reshaped in place): gather the
+    /// zero-padded `T×B` input slab per tile-column, run every tile's
+    /// `apply_batch_into` — sequentially, or fanned across `workers`
+    /// scoped threads writing into the same preallocated product slots —
+    /// then accumulate partial products down the tile-rows in the FIXED
+    /// order (tile-columns outer, tile-rows inner) both paths share, so
+    /// parallel and sequential results are bit-identical. Padded rows are
+    /// cropped during accumulation (they never touch `out`). All
+    /// intermediates live in a pool-checked-out [`ExecArena`].
+    fn exec_into(&self, x: &CMat, out: &mut CMat, workers: usize) {
+        let (m, n) = self.dims();
+        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
         let b = x.cols();
-        let (c0, w) = self.plan.grid.col_span(c);
-        let mut xc = CMat::zeros(t, b);
-        for i in 0..w {
-            for j in 0..b {
-                xc[(i, j)] = x[(c0 + i, j)];
-            }
-        }
-        xc
-    }
-
-    /// Accumulate per-tile partial products into the cropped output, in
-    /// the FIXED order (tile-columns outer, tile-rows inner) both
-    /// execution paths share — so sequential and parallel results are
-    /// bit-identical, and both match the documented accumulation-order
-    /// contract.
-    fn accumulate(&self, products: &[CMat], b: usize) -> CMat {
-        let (m, _) = self.dims();
         let t = self.plan.grid.tile();
         let (gr, gc) = self.plan.grid.grid();
-        let mut ypad = CMat::zeros(gr * t, b);
+        let total = gr * gc;
+        let mut arena = arena_checkout();
+        let ExecArena { slabs, products } = &mut arena;
+        slabs.resize_with(gc, || CMat::zeros(0, 0));
+        products.resize_with(total, || CMat::zeros(0, 0));
+        for (c, slab) in slabs.iter_mut().enumerate() {
+            // `reset` zero-fills, so the ragged-edge padding rows are 0.
+            slab.reset(t, b);
+            let (c0, w) = self.plan.grid.col_span(c);
+            for i in 0..w {
+                for j in 0..b {
+                    slab[(i, j)] = x[(c0 + i, j)];
+                }
+            }
+        }
+        let tiles = &self.plan.tiles;
+        if workers <= 1 || total < 2 {
+            for c in 0..gc {
+                for r in 0..gr {
+                    let idx = self.plan.grid.index(r, c);
+                    tiles[idx].proc.apply_batch_into(&slabs[c], &mut products[idx]);
+                }
+            }
+        } else {
+            let workers = workers.min(total);
+            let chunk = total.div_ceil(workers);
+            let slabs = &*slabs;
+            std::thread::scope(|s| {
+                for (w, slot_chunk) in products.chunks_mut(chunk).enumerate() {
+                    s.spawn(move || {
+                        for (i, slot) in slot_chunk.iter_mut().enumerate() {
+                            let idx = w * chunk + i;
+                            tiles[idx].proc.apply_batch_into(&slabs[idx % gc], slot);
+                        }
+                    });
+                }
+            });
+        }
+        out.reset(m, b);
         for c in 0..gc {
             for r in 0..gr {
                 let y = &products[self.plan.grid.index(r, c)];
-                for i in 0..t {
+                let (r0, h) = self.plan.grid.row_span(r);
+                for i in 0..h {
                     for j in 0..b {
-                        ypad[(r * t + i, j)] += y[(i, j)];
+                        out[(r0 + i, j)] += y[(i, j)];
                     }
                 }
             }
         }
-        ypad.block(0, 0, m, b)
+        arena_checkin(arena);
     }
 
     /// Sequential tiled execution (the fallback below the parallelism
     /// threshold, and the reference the parallel path must match
     /// bit-for-bit).
     pub fn apply_batch_seq(&self, x: &CMat) -> CMat {
-        let (m, n) = self.dims();
-        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
-        let b = x.cols();
-        let (gr, gc) = self.plan.grid.grid();
-        let mut products: Vec<CMat> = Vec::with_capacity(gr * gc);
-        products.resize_with(gr * gc, || CMat::zeros(0, 0));
-        for c in 0..gc {
-            // Gather the padded T×B input slab for this tile-column once.
-            let xc = self.column_slab(x, c);
-            for r in 0..gr {
-                let idx = self.plan.grid.index(r, c);
-                products[idx] = self.plan.tiles[idx].proc.apply_batch(&xc);
-            }
-        }
-        self.accumulate(&products, b)
+        let mut out = CMat::zeros(0, 0);
+        self.exec_into(x, &mut out, 1);
+        out
     }
 
-    /// Parallel tiled execution: tiles are independent GEMMs, so they
-    /// fan out across a `std::thread::scope` pool of `workers` threads
-    /// (each input slab is gathered once per tile-column and shared).
-    /// Accumulation stays sequential in the fixed order, so the result is
-    /// bit-identical to [`Self::apply_batch_seq`].
+    /// Parallel tiled execution: tiles are independent GEMMs, so they fan
+    /// out across a `std::thread::scope` pool of `workers` threads (each
+    /// input slab is gathered once per tile-column and shared; each
+    /// worker writes its tiles' preallocated arena slots). Accumulation
+    /// stays sequential in the fixed order, so the result is bit-identical
+    /// to [`Self::apply_batch_seq`].
     pub fn apply_batch_par(&self, x: &CMat, workers: usize) -> CMat {
-        let (m, n) = self.dims();
-        assert_eq!(x.rows(), n, "apply_batch: {m}x{n} virtual processor, {} input rows", x.rows());
-        let b = x.cols();
-        let (_, gc) = self.plan.grid.grid();
-        let slabs: Vec<CMat> = (0..gc).map(|c| self.column_slab(x, c)).collect();
-        let tiles = &self.plan.tiles;
-        let total = tiles.len();
-        let workers = workers.clamp(1, total);
-        let chunk = total.div_ceil(workers);
-        let mut products: Vec<CMat> = Vec::with_capacity(total);
-        products.resize_with(total, || CMat::zeros(0, 0));
-        std::thread::scope(|s| {
-            for (w, slot_chunk) in products.chunks_mut(chunk).enumerate() {
-                let slabs = &slabs;
-                s.spawn(move || {
-                    for (k, slot) in slot_chunk.iter_mut().enumerate() {
-                        let idx = w * chunk + k;
-                        *slot = tiles[idx].proc.apply_batch(&slabs[idx % gc]);
-                    }
-                });
-            }
-        });
-        self.accumulate(&products, b)
+        let mut out = CMat::zeros(0, 0);
+        self.exec_into(x, &mut out, workers.max(1));
+        out
     }
 
     /// Per-tile segment lengths of the flat state code, in the same
@@ -344,18 +380,28 @@ impl LinearProcessor for VirtualProcessor {
     /// (small ones fall back to the sequential path; both orders are
     /// bit-identical — see [`Self::apply_batch_par`]).
     fn apply_batch(&self, x: &CMat) -> CMat {
+        let mut out = CMat::zeros(0, 0);
+        self.apply_batch_into(x, &mut out);
+        out
+    }
+
+    /// The real tiled entry: the sequential/parallel decision is made
+    /// BEFORE any slab or product buffer is touched (a below-threshold
+    /// dispatch pays nothing for the parallel machinery), with the work
+    /// cutoff derived from the autotuned kernel's measured per-MAC cost
+    /// instead of a hardcoded constant. The (cached) worker count is only
+    /// consulted once a dispatch is actually big enough to fan out.
+    fn apply_batch_into(&self, x: &CMat, out: &mut CMat) {
         let t = self.plan.grid.tile();
         let tiles = self.plan.tiles.len();
         let work = tiles * t * t * x.cols().max(1);
-        // Cheap threshold checks first; the (cached) worker count is only
-        // consulted once a dispatch is actually big enough to fan out.
-        if tiles >= PAR_MIN_TILES && work >= PAR_MIN_WORK {
-            let workers = worker_count();
-            if workers > 1 {
-                return self.apply_batch_par(x, workers);
-            }
-        }
-        self.apply_batch_seq(x)
+        let workers =
+            if tiles >= PAR_MIN_TILES && work >= crate::math::gemm::par_threshold_macs() {
+                worker_count()
+            } else {
+                1
+            };
+        self.exec_into(x, out, workers);
     }
 
     /// Batch-1 case, routed through the same tiled path.
@@ -523,6 +569,27 @@ mod tests {
             .train_states(&target, PerturbMode::Monolithic, 10, DspsaConfig::default(), 1)
             .is_none());
         assert!(vp.state_blocks().is_empty());
+    }
+
+    #[test]
+    fn arena_reuse_across_batch_shapes_is_exact() {
+        let target = rand_real(9, 7, 41);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(4, Fidelity::Digital)).unwrap();
+        // Shrinking, growing, and repeated shapes: stale arena contents
+        // (slabs, products, output) must never leak into a result, and a
+        // warm-arena dispatch must be bit-identical to the cold one.
+        for &b in &[64usize, 1, 8, 3, 8] {
+            let x = rand_real(7, b, 100 + b as u64);
+            let y = vp.apply_batch(&x);
+            assert_eq!((y.rows(), y.cols()), (9, b));
+            let want = target.gemm(&x);
+            assert!(y.sub(&want).max_abs() < 1e-12, "batch {b}");
+            assert_eq!(vp.apply_batch(&x), y, "warm arena, batch {b}");
+            // The explicit into-variant reuses a caller buffer too.
+            let mut out = CMat::zeros(3, 3);
+            LinearProcessor::apply_batch_into(&vp, &x, &mut out);
+            assert_eq!(out, y, "apply_batch_into, batch {b}");
+        }
     }
 
     #[test]

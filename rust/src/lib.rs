@@ -7,8 +7,10 @@
 //! The library is organized bottom-up:
 //!
 //! * [`math`] — complex arithmetic, small dense complex linear algebra
-//!   including the blocked batched GEMM ([`CMat::gemm`]), RNG, numerical
-//!   utilities (no external deps; the build is fully offline).
+//!   including the runtime-dispatched, autotuned complex GEMM engine
+//!   ([`math::gemm`], driven via [`CMat::gemm`]/[`CMat::gemm_into`]),
+//!   RNG, numerical utilities (no external deps; the build is fully
+//!   offline).
 //! * [`processor`] — the [`LinearProcessor`] trait: the single execution
 //!   abstraction every linear backend implements (see *Execution model*).
 //! * [`microwave`] — RF network substrate: S-parameter algebra, ABCD two-port
@@ -84,10 +86,53 @@
 //!
 //! The batch layout is column-per-vector (`X` is `in × B`, `Y = M·X`), and
 //! [`CMat::matvec`] is literally the `B = 1` special case of the same
-//! register-blocked kernel, so there is exactly one multiply path to test,
-//! benchmark, and optimize (`rust/src/testing/processor_props.rs` pins the
-//! contract across all four backends; `bench::perf` tracks batched vs
-//! per-vector throughput in `BENCH_pr1.json`).
+//! kernel, so there is exactly one multiply path to test, benchmark, and
+//! optimize (`rust/src/testing/processor_props.rs` pins the contract
+//! across all four backends; `bench::perf` tracks batched vs per-vector
+//! throughput in `BENCH_pr1.json`).
+//!
+//! That one multiply path runs through a three-stage engine
+//! ([`math::gemm`]):
+//!
+//! ```text
+//!   dispatch ──────► autotune ──────────► arena
+//!   which ISA?       which block shape?   whose memory?
+//!   scalar / AVX2    MR×NR per size tier  reused slabs, zero alloc
+//! ```
+//!
+//! 1. **Dispatch.** At first use the runtime probes the CPU
+//!    (`is_x86_feature_detected!`) and latches either the AVX2+FMA
+//!    split real/imag panel kernel or the portable scalar path into a
+//!    process-wide `OnceLock`. The `RFNN_KERNEL` env knob (CLI spelling
+//!    `--kernel auto|scalar|avx2`) pins the choice; `rfnn info` reports
+//!    it. **Equivalence contract:** every kernel agrees with the scalar
+//!    reference within 4 ulp per component — the current kernels
+//!    accumulate in the same order with unfused arithmetic and are in
+//!    fact bit-identical; 4 ulp is documented headroom for a future
+//!    fused kernel (`processor_props` pins this across MR/NR-edge
+//!    shapes).
+//! 2. **Autotune.** The register-block shape `MR×NR` is not hardcoded:
+//!    per `(m, k, n)` size tier the dispatcher times a small candidate
+//!    set (4×4, 8×4, 2×2, and the degenerate matvec/row-sweep
+//!    blockings) at first use and caches the winner per process.
+//!    Because every candidate is bit-identical, the timing-dependent
+//!    choice can never perturb results. The measured ns/MAC also
+//!    derives the parallel-split threshold for the tiled executor
+//!    (replacing a hardcoded work constant).
+//! 3. **Arena.** Steady-state serving performs no per-request heap
+//!    allocation: `LinearProcessor::apply_batch_into` writes into
+//!    caller-owned buffers, and the tiled executor
+//!    ([`compiler::VirtualProcessor`]) checks out a pooled `ExecArena`
+//!    of reusable column slabs and per-tile product buffers, with the
+//!    parallel path writing into preallocated output slots in the same
+//!    fixed order as sequential execution — bit-identical by
+//!    construction (`tiling_props` pins par ≡ seq under buffer reuse).
+//!
+//! `bench::perf` records the dispatched-vs-forced-scalar kernel grid in
+//! `BENCH_pr6.json`; CI runs the whole suite both ways (the build-test
+//! job asserts the intrinsics path actually engaged, the forced-scalar
+//! job pins the fallback) and gates latency against the median of the
+//! last three successful runs.
 //!
 //! ## Serving model
 //!

@@ -3,17 +3,15 @@
 //! Sized for the paper's workloads: S-parameter blocks (2–8 ports), mesh
 //! unitaries (N ≤ 32), and small NN layers. Not a general BLAS, but the
 //! one hot kernel — the batched complex GEMM behind
-//! [`crate::processor::LinearProcessor::apply_batch`] — is register-blocked
-//! ([`CMat::gemm`]); [`CMat::matvec`] is its batch-1 special case.
+//! [`crate::processor::LinearProcessor::apply_batch`] — dispatches through
+//! the runtime-selected, autotuned engine in [`crate::math::gemm`]
+//! ([`CMat::gemm`] / the allocation-free [`CMat::gemm_into`]);
+//! [`CMat::matvec`] is the batch-1 special case.
 
 use super::c64::C64;
+use super::gemm;
 use std::fmt;
 use std::ops::{Index, IndexMut};
-
-/// Rows per GEMM micro-tile (register block height).
-const GEMM_MR: usize = 4;
-/// Columns per GEMM micro-tile (output panel width).
-const GEMM_NR: usize = 4;
 
 /// A dense, row-major complex matrix.
 #[derive(Clone, PartialEq)]
@@ -148,69 +146,48 @@ impl CMat {
         out
     }
 
+    /// Reshape in place to `rows × cols`, zero-filled — the arena-reuse
+    /// primitive behind [`Self::gemm_into`] and the tiled executor's
+    /// buffer pool: no allocation when the existing capacity suffices.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, C64::ZERO);
+    }
+
     /// Blocked, cache-friendly complex GEMM `self · other` — the batched
-    /// execution kernel. Sweeps `other` in [`GEMM_NR`]-column panels and
-    /// `self` in [`GEMM_MR`]-row blocks, accumulating each `MR×NR`
-    /// micro-tile in registers across the full inner dimension, so every
-    /// loaded panel row of `other` is reused `MR` times and the output is
-    /// written exactly once.
+    /// execution kernel, dispatched through [`crate::math::gemm`]: the
+    /// runtime-selected kernel (scalar or AVX2, `RFNN_KERNEL` knob) with
+    /// an autotuned register-block shape per `(m, k, n)` size tier. All
+    /// kernel/blocking choices are bit-identical (see the engine's
+    /// determinism contract), so dispatch never perturbs results.
     pub fn gemm(&self, other: &CMat) -> CMat {
+        let mut out = CMat::zeros(0, 0);
+        self.gemm_into(other, &mut out);
+        out
+    }
+
+    /// [`Self::gemm`] into a caller-owned output, reshaped in place — the
+    /// allocation-free entry the serving arena reuses (`out` contents are
+    /// fully overwritten; its prior shape is irrelevant).
+    pub fn gemm_into(&self, other: &CMat, out: &mut CMat) {
         assert_eq!(
             self.cols, other.rows,
             "gemm shape mismatch: {}x{} * {}x{}",
             self.rows, self.cols, other.rows, other.cols
         );
-        let (m, kk, n) = (self.rows, other.rows, other.cols);
-        let mut out = CMat::zeros(m, n);
-        let a = &self.data;
-        let b = &other.data;
-        let c = &mut out.data;
-        let mut jc = 0;
-        while jc < n {
-            let nr = GEMM_NR.min(n - jc);
-            let mut ic = 0;
-            while ic < m {
-                let mr = GEMM_MR.min(m - ic);
-                let mut acc = [[C64::ZERO; GEMM_NR]; GEMM_MR];
-                if mr == GEMM_MR && nr == GEMM_NR {
-                    // Full tile: fixed-bound loops the compiler can unroll.
-                    for p in 0..kk {
-                        let brow = &b[p * n + jc..p * n + jc + GEMM_NR];
-                        for i in 0..GEMM_MR {
-                            let av = a[(ic + i) * kk + p];
-                            for j in 0..GEMM_NR {
-                                acc[i][j] += av * brow[j];
-                            }
-                        }
-                    }
-                } else {
-                    // Edge tile (m or n not a multiple of the block size).
-                    for p in 0..kk {
-                        let brow = &b[p * n + jc..p * n + jc + nr];
-                        for (i, accrow) in acc.iter_mut().enumerate().take(mr) {
-                            let av = a[(ic + i) * kk + p];
-                            for (j, &bv) in brow.iter().enumerate() {
-                                accrow[j] += av * bv;
-                            }
-                        }
-                    }
-                }
-                for (i, accrow) in acc.iter().enumerate().take(mr) {
-                    let crow = &mut c[(ic + i) * n + jc..(ic + i) * n + jc + nr];
-                    crow.copy_from_slice(&accrow[..nr]);
-                }
-                ic += mr;
-            }
-            jc += nr;
-        }
-        out
+        out.reset(self.rows, other.cols);
+        gemm::gemm_into(&self.data, &other.data, &mut out.data, self.rows, self.cols, other.cols);
     }
 
-    /// Matrix–vector product — the batch-1 special case of [`Self::gemm`].
+    /// Matrix–vector product — the batch-1 special case of [`Self::gemm`]
+    /// (runs the same dispatched kernel directly on the borrowed slice).
     pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
-        let xm = CMat { rows: x.len(), cols: 1, data: x.to_vec() };
-        self.gemm(&xm).data
+        let mut y = vec![C64::ZERO; self.rows];
+        gemm::gemm_into(&self.data, x, &mut y, self.rows, self.cols, 1);
+        y
     }
 
     /// Sum of two matrices.
@@ -468,5 +445,30 @@ mod tests {
         for i in 0..6 {
             assert!((y[i] - ym[(i, 0)]).abs() < 1e-13);
         }
+    }
+
+    #[test]
+    fn gemm_into_reuses_output_across_shapes() {
+        let mut rng = crate::math::rng::Rng::new(0x6E79);
+        let mut out = CMat::zeros(0, 0);
+        // Shrinking, growing, and equal-size reuses must all be exact:
+        // stale contents/shape of `out` can never leak into a result.
+        for &(m, k, n) in &[(8usize, 8usize, 64usize), (3, 5, 2), (3, 5, 2), (9, 7, 65)] {
+            let a = CMat::from_fn(m, k, |_, _| C64::new(rng.normal(), rng.normal()));
+            let b = CMat::from_fn(k, n, |_, _| C64::new(rng.normal(), rng.normal()));
+            a.gemm_into(&b, &mut out);
+            assert_eq!((out.rows(), out.cols()), (m, n));
+            assert_eq!(out, a.gemm(&b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn reset_reshapes_and_zero_fills() {
+        let mut m = CMat::from_real(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        m.reset(3, 2);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert!(m.data().iter().all(|&z| z == C64::ZERO));
+        m.reset(1, 1);
+        assert_eq!(m.data().len(), 1);
     }
 }

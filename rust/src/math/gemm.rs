@@ -1,0 +1,646 @@
+//! Runtime-dispatched, autotuned complex GEMM engine.
+//!
+//! Every dense hot path in the system — SVD lowering, calibration
+//! prediction, mesh recache, tile-fleet serving — funnels through this one
+//! kernel, so it carries three mechanisms:
+//!
+//! 1. **Runtime dispatch**: an AVX2 split real/imag panel kernel on
+//!    x86-64 machines that have it (`is_x86_feature_detected!("avx2")` +
+//!    `"fma"`), with the scalar register-blocked kernel as the
+//!    always-correct fallback. The choice is resolved once per process
+//!    ([`active`], an `OnceLock`) and can be pinned with
+//!    `RFNN_KERNEL=scalar|avx2|auto` (env, or the CLI `--kernel` knob,
+//!    which sets the env var before the first GEMM). A forced `avx2` on a
+//!    machine without AVX2 falls back to `scalar`.
+//! 2. **Block-size autotuning**: instead of a hardcoded `MR×NR = 4×4`
+//!    micro-tile, each `(m, k, n)` *size tier* selects its microkernel
+//!    from a small measured table — timed at first use per process with a
+//!    representative probe GEMM, then cached ([`micro_for`]). Tile GEMMs
+//!    (`T ∈ {2,4,8}` × batch) and lowering GEMMs (64×64+) genuinely want
+//!    different shapes.
+//! 3. **A measured parallelism threshold**: tuning also yields the best
+//!    observed ns-per-MAC, from which [`par_threshold_macs`] derives the
+//!    work cutoff the tiled executor uses before fanning out across
+//!    threads (replacing the old `PAR_MIN_WORK` constant).
+//!
+//! **Determinism contract**: every microkernel — any scalar `MR×NR`
+//! blocking and the AVX2 path — accumulates each output element over the
+//! inner dimension in the same `p = 0..k` order with the same unfused
+//! multiply/add rounding sequence per lane (the AVX2 kernel deliberately
+//! uses `mul`/`add`/`sub`, *not* fused-multiply-add, even though it gates
+//! on FMA support). Results are therefore **bit-identical** across
+//! kernels and block shapes, which is what lets timing-based autotuning
+//! coexist with the tiled executor's "parallel ≡ sequential,
+//! bit-identical" pin. The documented public contract is the slightly
+//! weaker "within 4 ulp", leaving headroom for a future fused kernel.
+
+use super::c64::C64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// A resolved GEMM kernel implementation family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable register-blocked scalar kernel (always available).
+    Scalar,
+    /// AVX2 split real/imag panel kernel (x86-64 with avx2+fma).
+    Avx2,
+}
+
+impl Kernel {
+    /// Stable name (used by `rfnn info` and the BENCH records; CI greps
+    /// for it to assert which path dispatch selected).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The user-facing kernel selection policy (`RFNN_KERNEL`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPolicy {
+    /// Pick the fastest supported kernel (the default).
+    Auto,
+    /// Force the scalar kernel even when AVX2 is available.
+    Scalar,
+    /// Force the AVX2 kernel (falls back to scalar when unsupported).
+    Avx2,
+}
+
+impl KernelPolicy {
+    /// Stable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPolicy::Auto => "auto",
+            KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The kernel policy, read once per process from `RFNN_KERNEL`
+/// (unknown spellings fall back to `auto`; the CLI validates first).
+pub fn policy() -> KernelPolicy {
+    static POLICY: OnceLock<KernelPolicy> = OnceLock::new();
+    *POLICY.get_or_init(|| match std::env::var("RFNN_KERNEL").as_deref() {
+        Ok("scalar") => KernelPolicy::Scalar,
+        Ok("avx2") => KernelPolicy::Avx2,
+        _ => KernelPolicy::Auto,
+    })
+}
+
+/// `true` when the AVX2 kernel can run on this machine (x86-64 with the
+/// avx2 and fma features; fma is required by the dispatch contract even
+/// though the kernel keeps its arithmetic unfused for bit-equality).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The kernel dispatch actually selected for this process: policy
+/// resolved against hardware feature detection, once, via `OnceLock`.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match policy() {
+        KernelPolicy::Scalar => Kernel::Scalar,
+        KernelPolicy::Avx2 | KernelPolicy::Auto => {
+            if avx2_available() {
+                Kernel::Avx2
+            } else {
+                Kernel::Scalar
+            }
+        }
+    })
+}
+
+/// One concrete microkernel an autotuned tier can select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Micro {
+    /// Scalar register-blocked kernel with an `mr×nr` accumulator tile.
+    Scalar { mr: usize, nr: usize },
+    /// AVX2 split real/imag panel kernel (4 rows × 4 complex columns).
+    Avx2,
+}
+
+impl Micro {
+    /// `(MR, NR)` register-block shape of this microkernel.
+    pub fn dims(self) -> (usize, usize) {
+        match self {
+            Micro::Scalar { mr, nr } => (mr, nr),
+            Micro::Avx2 => (4, 4),
+        }
+    }
+
+    /// Compact label for reports: `scalar4x4`, `avx2`, …
+    pub fn label(self) -> String {
+        match self {
+            Micro::Scalar { mr, nr } => format!("scalar{mr}x{nr}"),
+            Micro::Avx2 => "avx2".to_string(),
+        }
+    }
+}
+
+/// Scalar micro-tile shapes the autotuner measures: the PR-1 4×4
+/// default, a taller 8×4 for row-heavy lowering GEMMs, a small 2×2 for
+/// tiny tiles, and the two degenerate blockings that suit `n = 1`
+/// matvecs and `m = 1` row sweeps.
+const SCALAR_MICROS: [Micro; 5] = [
+    Micro::Scalar { mr: 4, nr: 4 },
+    Micro::Scalar { mr: 8, nr: 4 },
+    Micro::Scalar { mr: 2, nr: 2 },
+    Micro::Scalar { mr: 4, nr: 1 },
+    Micro::Scalar { mr: 1, nr: 4 },
+];
+
+/// The scalar microkernel candidate set (exposed for the equivalence
+/// property test, which must straddle every MR/NR edge).
+pub fn scalar_candidates() -> &'static [Micro] {
+    &SCALAR_MICROS
+}
+
+/// Upper size-class edges for the autotune tiers; a dimension `d` falls
+/// in the class of the first edge `> d` (last class is open-ended).
+/// Classes: `<4`, `4..16`, `16..64`, `≥64` — chosen so the fleet tile
+/// sizes (2/4/8), lowering sizes (8–64) and batch sizes (1/8/64/256)
+/// land in distinct tiers.
+fn size_class(d: usize) -> usize {
+    if d < 4 {
+        0
+    } else if d < 16 {
+        1
+    } else if d < 64 {
+        2
+    } else {
+        3
+    }
+}
+
+/// Representative probe length for each size class.
+const CLASS_REP: [usize; 4] = [2, 8, 32, 96];
+
+/// Flat tier index of a `(m, k, n)` problem: 4 classes per dimension.
+fn tier_index(m: usize, k: usize, n: usize) -> usize {
+    size_class(m) * 16 + size_class(k) * 4 + size_class(n)
+}
+
+/// Per-tier tuned microkernel choices, measured at first use.
+static TIERS: [OnceLock<Micro>; 64] = [const { OnceLock::new() }; 64];
+
+/// Best observed per-MAC cost across all tuning probes, as f64 bits
+/// (positive-float bit patterns order like the floats, so `fetch_min`
+/// keeps the true minimum). Initialized to +inf ("never measured").
+static BEST_NS_PER_MAC: AtomicU64 = AtomicU64::new(0x7FF0_0000_0000_0000);
+
+/// Compute budget (ns of single-thread kernel time) below which fanning a
+/// dispatch across a scoped thread pool costs more than it saves; spawn +
+/// join of a handful of workers lands in the tens of microseconds.
+const PAR_SPAWN_BUDGET_NS: f64 = 150_000.0;
+
+/// Work threshold (complex MACs) above which a caller should parallelize,
+/// derived from the measured per-MAC cost of the tuned kernel — an AVX2
+/// process needs more MACs than a scalar one to amortize the same spawn
+/// cost. Falls back to the historical `1 << 14` constant before any tier
+/// has been tuned, and clamps to `[2^12, 2^20]` against probe noise.
+pub fn par_threshold_macs() -> usize {
+    let ns = f64::from_bits(BEST_NS_PER_MAC.load(Ordering::Relaxed));
+    if !ns.is_finite() || ns <= 0.0 {
+        return 1 << 14;
+    }
+    ((PAR_SPAWN_BUDGET_NS / ns) as usize).clamp(1 << 12, 1 << 20)
+}
+
+/// Number of tiers tuned so far in this process (for `rfnn info`).
+pub fn tuned_tiers() -> usize {
+    TIERS.iter().filter(|t| t.get().is_some()).count()
+}
+
+/// One-line dispatch report for `rfnn info` and the bench header; CI
+/// greps `gemm kernel: avx2` / `gemm kernel: scalar` to assert dispatch.
+pub fn kernel_report() -> String {
+    format!(
+        "gemm kernel: {} (policy {}, avx2+fma {}; {} tiers tuned, par threshold {} MACs)",
+        active().name(),
+        policy().name(),
+        if avx2_available() { "detected" } else { "absent" },
+        tuned_tiers(),
+        par_threshold_macs()
+    )
+}
+
+/// The tuned microkernel for a `(m, k, n)` problem shape: tier lookup,
+/// tuning the tier on first use (a few probe GEMMs, ~hundreds of µs,
+/// once per process per tier). Because all microkernels are bit-identical
+/// (module contract), the timing nondeterminism of tuning can never
+/// change a numerical result.
+pub fn micro_for(m: usize, k: usize, n: usize) -> Micro {
+    let t = tier_index(m, k, n);
+    *TIERS[t].get_or_init(|| tune_tier(t))
+}
+
+/// Candidate microkernels under the active dispatch: forced-scalar stays
+/// scalar-only, forced-AVX2 always runs the intrinsics path (so the CI
+/// assertion is meaningful), and `auto` lets the probe decide.
+fn candidates() -> Vec<Micro> {
+    match active() {
+        Kernel::Scalar => SCALAR_MICROS.to_vec(),
+        Kernel::Avx2 => {
+            if policy() == KernelPolicy::Avx2 {
+                vec![Micro::Avx2]
+            } else {
+                let mut v = vec![Micro::Avx2];
+                v.extend(SCALAR_MICROS);
+                v
+            }
+        }
+    }
+}
+
+/// Measure the candidates on this tier's representative shape and keep
+/// the fastest; publish its per-MAC cost for [`par_threshold_macs`].
+fn tune_tier(tier: usize) -> Micro {
+    let (m, k, n) = (CLASS_REP[tier / 16], CLASS_REP[(tier / 4) % 4], CLASS_REP[tier % 4]);
+    let cands = candidates();
+    // Deterministic probe data (xorshift; values are irrelevant to the
+    // choice, they just have to be nonzero and finite).
+    let mut s = 0x9E37_79B9_7F4A_7C15u64 ^ ((tier as u64) << 32);
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    };
+    let a: Vec<C64> = (0..m * k).map(|_| C64::new(next(), next())).collect();
+    let b: Vec<C64> = (0..k * n).map(|_| C64::new(next(), next())).collect();
+    let mut c = vec![C64::ZERO; m * n];
+    let macs = m * k * n;
+    // ~2^18 MACs per timed pass, best of 3 passes per candidate.
+    let reps = ((1usize << 18) / macs.max(1)).clamp(2, 512);
+    let mut best = cands[0];
+    let mut best_ns = f64::INFINITY;
+    for &cand in &cands {
+        gemm_into_micro(cand, &a, &b, &mut c, m, k, n); // warm up
+        let mut pass_ns = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                gemm_into_micro(cand, &a, &b, &mut c, m, k, n);
+                std::hint::black_box(&mut c);
+            }
+            pass_ns = pass_ns.min(t0.elapsed().as_nanos() as f64 / reps as f64);
+        }
+        if pass_ns < best_ns {
+            best_ns = pass_ns;
+            best = cand;
+        }
+    }
+    let per_mac = best_ns / macs.max(1) as f64;
+    if per_mac.is_finite() && per_mac > 0.0 {
+        BEST_NS_PER_MAC.fetch_min(per_mac.to_bits(), Ordering::Relaxed);
+    }
+    best
+}
+
+/// `C = A·B` over raw row-major slices: `a` is `m×k`, `b` is `k×n`, `c`
+/// is `m×n` and is fully overwritten (no zeroing required). Dispatches to
+/// the autotuned microkernel for this shape tier.
+pub fn gemm_into(a: &[C64], b: &[C64], c: &mut [C64], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm_into: lhs len");
+    assert_eq!(b.len(), k * n, "gemm_into: rhs len");
+    assert_eq!(c.len(), m * n, "gemm_into: out len");
+    if m == 0 || n == 0 {
+        return;
+    }
+    gemm_into_micro(micro_for(m, k, n), a, b, c, m, k, n);
+}
+
+/// [`gemm_into`] through one specific microkernel — the test/bench entry
+/// that bypasses both the `OnceLock` dispatch and the autotune table.
+/// `Micro::Avx2` silently degrades to `scalar 4×4` when the machine (or
+/// architecture) lacks AVX2, keeping the API total.
+pub fn gemm_into_micro(
+    micro: Micro,
+    a: &[C64],
+    b: &[C64],
+    c: &mut [C64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    match micro {
+        Micro::Scalar { mr, nr } => scalar_gemm(mr, nr, a, b, c, m, k, n),
+        Micro::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_available() {
+                    avx2::gemm(a, b, c, m, k, n);
+                    return;
+                }
+            }
+            scalar_block::<4, 4>(a, b, c, m, k, n)
+        }
+    }
+}
+
+/// Monomorphize the scalar kernel for the tuned block shapes (unlisted
+/// shapes fall back to the 4×4 default).
+fn scalar_gemm(
+    mr: usize,
+    nr: usize,
+    a: &[C64],
+    b: &[C64],
+    c: &mut [C64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match (mr, nr) {
+        (8, 4) => scalar_block::<8, 4>(a, b, c, m, k, n),
+        (2, 2) => scalar_block::<2, 2>(a, b, c, m, k, n),
+        (4, 1) => scalar_block::<4, 1>(a, b, c, m, k, n),
+        (1, 4) => scalar_block::<1, 4>(a, b, c, m, k, n),
+        _ => scalar_block::<4, 4>(a, b, c, m, k, n),
+    }
+}
+
+/// The scalar register-blocked kernel (the PR-1 `CMat::gemm`, generalized
+/// over the block shape): sweep `b` in `NR`-column panels and `a` in
+/// `MR`-row blocks, accumulate each `MR×NR` micro-tile in registers
+/// across the full inner dimension (`p = 0..k`, the order every kernel in
+/// this module shares), write each output entry exactly once.
+fn scalar_block<const MR: usize, const NR: usize>(
+    a: &[C64],
+    b: &[C64],
+    c: &mut [C64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut jc = 0;
+    while jc < n {
+        let nr = NR.min(n - jc);
+        let mut ic = 0;
+        while ic < m {
+            let mr = MR.min(m - ic);
+            let mut acc = [[C64::ZERO; NR]; MR];
+            if mr == MR && nr == NR {
+                // Full tile: fixed-bound loops the compiler can unroll.
+                for p in 0..k {
+                    let brow = &b[p * n + jc..p * n + jc + NR];
+                    for i in 0..MR {
+                        let av = a[(ic + i) * k + p];
+                        for j in 0..NR {
+                            acc[i][j] += av * brow[j];
+                        }
+                    }
+                }
+            } else {
+                // Edge tile (m or n not a multiple of the block size).
+                for p in 0..k {
+                    let brow = &b[p * n + jc..p * n + jc + nr];
+                    for (i, accrow) in acc.iter_mut().enumerate().take(mr) {
+                        let av = a[(ic + i) * k + p];
+                        for (j, &bv) in brow.iter().enumerate() {
+                            accrow[j] += av * bv;
+                        }
+                    }
+                }
+            }
+            for (i, accrow) in acc.iter().enumerate().take(mr) {
+                let crow = &mut c[(ic + i) * n + jc..(ic + i) * n + jc + nr];
+                crow.copy_from_slice(&accrow[..nr]);
+            }
+            ic += mr;
+        }
+        jc += nr;
+    }
+}
+
+/// AVX2 split real/imag panel kernel.
+///
+/// `b` is packed per 4-column panel into separate real and imaginary
+/// `f64` lanes (zero-padded on the ragged right edge), so each inner step
+/// is two aligned-stride vector loads plus two broadcasts of the `a`
+/// entry. Per lane the arithmetic is exactly the scalar sequence
+/// `acc.re += a.re·b.re − a.im·b.im; acc.im += a.re·b.im + a.im·b.re`
+/// with unfused `mul`/`sub`/`add` — bit-identical to the scalar kernel
+/// (see the module determinism contract).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::math::c64::C64;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Reusable per-thread panel-packing buffers `(re, im)` — packing
+        /// allocates nothing in steady state.
+        static PANEL: RefCell<(Vec<f64>, Vec<f64>)> =
+            const { RefCell::new((Vec::new(), Vec::new())) };
+    }
+
+    pub fn gemm(a: &[C64], b: &[C64], c: &mut [C64], m: usize, k: usize, n: usize) {
+        debug_assert!(super::avx2_available());
+        PANEL.with(|buf| {
+            let mut buf = buf.borrow_mut();
+            let (bre, bim) = &mut *buf;
+            if bre.len() < 4 * k {
+                bre.resize(4 * k, 0.0);
+                bim.resize(4 * k, 0.0);
+            }
+            let mut jc = 0;
+            while jc < n {
+                let nr = 4.min(n - jc);
+                for p in 0..k {
+                    for j in 0..4 {
+                        let v = if j < nr { b[p * n + jc + j] } else { C64::ZERO };
+                        bre[4 * p + j] = v.re;
+                        bim[4 * p + j] = v.im;
+                    }
+                }
+                // SAFETY: gated on `avx2_available()` by every caller
+                // (asserted above); slices are sized by the debug asserts
+                // in `gemm_into_micro` plus the packing above.
+                unsafe { panel(a, bre, bim, c, m, k, n, jc, nr) };
+                jc += nr;
+            }
+        });
+    }
+
+    /// One packed 4-column panel: 4-row micro-tiles down `m`, 1-row
+    /// micro-tiles on the ragged bottom edge.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn panel(
+        a: &[C64],
+        bre: &[f64],
+        bim: &[f64],
+        c: &mut [C64],
+        m: usize,
+        k: usize,
+        n: usize,
+        jc: usize,
+        nr: usize,
+    ) {
+        use std::arch::x86_64::*;
+        let mut re4 = [0.0f64; 4];
+        let mut im4 = [0.0f64; 4];
+        let mut ic = 0;
+        while ic < m {
+            if m - ic >= 4 {
+                let mut acc_re = [_mm256_setzero_pd(); 4];
+                let mut acc_im = [_mm256_setzero_pd(); 4];
+                for p in 0..k {
+                    let vbre = _mm256_loadu_pd(bre.as_ptr().add(4 * p));
+                    let vbim = _mm256_loadu_pd(bim.as_ptr().add(4 * p));
+                    for i in 0..4 {
+                        let av = *a.get_unchecked((ic + i) * k + p);
+                        let ar = _mm256_set1_pd(av.re);
+                        let ai = _mm256_set1_pd(av.im);
+                        acc_re[i] = _mm256_add_pd(
+                            acc_re[i],
+                            _mm256_sub_pd(_mm256_mul_pd(ar, vbre), _mm256_mul_pd(ai, vbim)),
+                        );
+                        acc_im[i] = _mm256_add_pd(
+                            acc_im[i],
+                            _mm256_add_pd(_mm256_mul_pd(ar, vbim), _mm256_mul_pd(ai, vbre)),
+                        );
+                    }
+                }
+                for i in 0..4 {
+                    _mm256_storeu_pd(re4.as_mut_ptr(), acc_re[i]);
+                    _mm256_storeu_pd(im4.as_mut_ptr(), acc_im[i]);
+                    let base = (ic + i) * n + jc;
+                    for j in 0..nr {
+                        *c.get_unchecked_mut(base + j) = C64::new(re4[j], im4[j]);
+                    }
+                }
+                ic += 4;
+            } else {
+                let mut acc_re = _mm256_setzero_pd();
+                let mut acc_im = _mm256_setzero_pd();
+                for p in 0..k {
+                    let vbre = _mm256_loadu_pd(bre.as_ptr().add(4 * p));
+                    let vbim = _mm256_loadu_pd(bim.as_ptr().add(4 * p));
+                    let av = *a.get_unchecked(ic * k + p);
+                    let ar = _mm256_set1_pd(av.re);
+                    let ai = _mm256_set1_pd(av.im);
+                    acc_re = _mm256_add_pd(
+                        acc_re,
+                        _mm256_sub_pd(_mm256_mul_pd(ar, vbre), _mm256_mul_pd(ai, vbim)),
+                    );
+                    acc_im = _mm256_add_pd(
+                        acc_im,
+                        _mm256_add_pd(_mm256_mul_pd(ar, vbim), _mm256_mul_pd(ai, vbre)),
+                    );
+                }
+                _mm256_storeu_pd(re4.as_mut_ptr(), acc_re);
+                _mm256_storeu_pd(im4.as_mut_ptr(), acc_im);
+                let base = ic * n + jc;
+                for j in 0..nr {
+                    *c.get_unchecked_mut(base + j) = C64::new(re4[j], im4[j]);
+                }
+                ic += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn rand_cvec(len: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    /// Every microkernel the tuner can pick (including AVX2 when this
+    /// machine has it) must be BIT-identical to the scalar 4×4 reference —
+    /// the implementation pin behind the module's determinism contract.
+    /// (The public contract is ≤ 4 ulp; relax this to the ulp comparator
+    /// if a fused kernel ever lands.)
+    #[test]
+    fn all_microkernels_are_bit_identical() {
+        let mut micros = SCALAR_MICROS.to_vec();
+        if avx2_available() {
+            micros.push(Micro::Avx2);
+        }
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 9, 2),
+            (2, 2, 1),
+            (3, 5, 7),
+            (4, 4, 4),
+            (5, 4, 3),
+            (7, 0, 3),
+            (8, 8, 64),
+            (9, 7, 65),
+            (16, 16, 33),
+        ] {
+            let a = rand_cvec(m * k, 0xA5EED ^ (m * 31 + n) as u64);
+            let b = rand_cvec(k * n, 0xB5EED ^ (k * 17 + n) as u64);
+            let mut want = vec![C64::ZERO; m * n];
+            gemm_into_micro(Micro::Scalar { mr: 4, nr: 4 }, &a, &b, &mut want, m, k, n);
+            for &micro in &micros {
+                let mut got = vec![C64::new(f64::NAN, f64::NAN); m * n];
+                gemm_into_micro(micro, &a, &b, &mut got, m, k, n);
+                assert_eq!(got, want, "{} at {m}x{k}x{n}", micro.label());
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_gemm_matches_reference() {
+        for &(m, k, n) in &[(3usize, 5usize, 7usize), (8, 8, 8), (65, 33, 2), (1, 4, 1)] {
+            let a = rand_cvec(m * k, 0xD15 ^ m as u64);
+            let b = rand_cvec(k * n, 0xD16 ^ n as u64);
+            let mut got = vec![C64::ZERO; m * n];
+            gemm_into(&a, &b, &mut got, m, k, n);
+            let mut want = vec![C64::ZERO; m * n];
+            gemm_into_micro(Micro::Scalar { mr: 4, nr: 4 }, &a, &b, &mut want, m, k, n);
+            assert_eq!(got, want, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tier_choice_is_cached_and_stable() {
+        let first = micro_for(8, 8, 64);
+        for _ in 0..3 {
+            assert_eq!(micro_for(8, 8, 64), first);
+        }
+        assert!(tuned_tiers() >= 1);
+    }
+
+    #[test]
+    fn par_threshold_is_clamped() {
+        // Before/after tuning, the derived threshold stays in its bounds.
+        let t0 = par_threshold_macs();
+        assert!((1 << 12..=1 << 20).contains(&t0));
+        let _ = micro_for(32, 32, 64); // force at least one measurement
+        let t1 = par_threshold_macs();
+        assert!((1 << 12..=1 << 20).contains(&t1));
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+        assert_eq!(KernelPolicy::Auto.name(), "auto");
+        assert_eq!(Micro::Scalar { mr: 8, nr: 4 }.label(), "scalar8x4");
+        assert_eq!(Micro::Avx2.label(), "avx2");
+        assert_eq!(Micro::Avx2.dims(), (4, 4));
+        let report = kernel_report();
+        assert!(report.starts_with("gemm kernel: "), "{report}");
+        assert!(report.contains(active().name()), "{report}");
+    }
+}

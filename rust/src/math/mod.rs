@@ -4,6 +4,7 @@
 
 pub mod c64;
 pub mod cmat;
+pub mod gemm;
 pub mod rng;
 pub mod svd;
 

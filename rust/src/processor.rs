@@ -112,6 +112,17 @@ pub trait LinearProcessor: Send + Sync {
         self.matrix().gemm(x)
     }
 
+    /// [`Self::apply_batch`] into a caller-owned output buffer (reshaped
+    /// in place, fully overwritten) — the allocation-free entry the tiled
+    /// executor's arena drives: in steady state `out` is a reused slot
+    /// and the dispatch performs no heap allocation. Must produce results
+    /// bit-identical to [`Self::apply_batch`].
+    fn apply_batch_into(&self, x: &CMat, out: &mut CMat) {
+        let (o, inp) = self.dims();
+        assert_eq!(x.rows(), inp, "apply_batch: {o}x{inp} processor, {} input rows", x.rows());
+        self.matrix().gemm_into(x, out);
+    }
+
     /// Execute one vector — the batch-1 special case of [`Self::apply_batch`].
     fn apply(&self, x: &[C64]) -> Vec<C64> {
         self.matrix().matvec(x)
@@ -192,6 +203,18 @@ mod tests {
             for i in 0..4 {
                 assert!((y[(i, j)] - want[i]).abs() < 1e-13);
             }
+        }
+    }
+
+    #[test]
+    fn apply_batch_into_is_bit_identical_and_reusable() {
+        let mut rng = Rng::new(3);
+        let m = CMat::from_fn(5, 3, |_, _| C64::new(rng.normal(), rng.normal()));
+        let mut out = CMat::zeros(0, 0);
+        for &b in &[7usize, 1, 7] {
+            let x = CMat::from_fn(3, b, |_, _| C64::new(rng.normal(), rng.normal()));
+            LinearProcessor::apply_batch_into(&m, &x, &mut out);
+            assert_eq!(out, LinearProcessor::apply_batch(&m, &x), "batch {b}");
         }
     }
 

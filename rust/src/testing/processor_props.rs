@@ -10,6 +10,7 @@
 use super::prop::{forall_seeded, Gen};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::math::gemm::{self, Micro};
 use crate::math::svd::svd;
 use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
 use crate::mesh::quantize::QuantizedMesh;
@@ -101,6 +102,81 @@ fn measured_mesh_apply_batch_matches_matvec() {
         let states: Vec<usize> = (0..2 * mesh.cells()).map(|_| g.usize_in(0, 5)).collect();
         mesh.set_encoded(&states);
         check_processor(&mesh, g, 1e-11);
+    });
+}
+
+/// ulp distance between two finite f64s: 0 for bit-identical values
+/// (including `0.0 == -0.0`), the bit-pattern distance within a sign, and
+/// "far" for sign-crossing pairs.
+fn ulp_diff(a: f64, b: f64) -> u64 {
+    assert!(a.is_finite() && b.is_finite(), "non-finite kernel output: {a} vs {b}");
+    if a == b {
+        return 0;
+    }
+    if a.is_sign_negative() != b.is_sign_negative() {
+        return u64::MAX;
+    }
+    a.abs().to_bits().abs_diff(b.abs().to_bits())
+}
+
+/// Run one `(m, k, n)` shape through every microkernel the dispatcher can
+/// select (all scalar MR/NR blockings, plus AVX2 when this machine has
+/// it) and assert agreement with the scalar 4×4 reference within 4 ulp —
+/// the kernel-equivalence contract of `crate::math::gemm`. (The current
+/// kernels are in fact bit-identical; 4 ulp is the documented headroom
+/// for a future fused kernel.)
+fn check_kernels_agree(g: &mut Gen, m: usize, k: usize, n: usize) {
+    let a: Vec<C64> =
+        (0..m * k).map(|_| C64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0))).collect();
+    let b: Vec<C64> =
+        (0..k * n).map(|_| C64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0))).collect();
+    let mut reference = vec![C64::ZERO; m * n];
+    gemm::gemm_into_micro(Micro::Scalar { mr: 4, nr: 4 }, &a, &b, &mut reference, m, k, n);
+    let mut micros: Vec<Micro> = gemm::scalar_candidates().to_vec();
+    if gemm::avx2_available() {
+        micros.push(Micro::Avx2);
+    }
+    for micro in micros {
+        // Start from poisoned memory so "kernel skipped an entry" fails.
+        let mut got = vec![C64::new(f64::NAN, f64::NAN); m * n];
+        gemm::gemm_into_micro(micro, &a, &b, &mut got, m, k, n);
+        for (i, (y, want)) in got.iter().zip(&reference).enumerate() {
+            let (dr, di) = (ulp_diff(y.re, want.re), ulp_diff(y.im, want.im));
+            assert!(
+                dr <= 4 && di <= 4,
+                "{} vs scalar4x4 at {m}x{k}x{n} entry {i}: {y:?} vs {want:?} ({dr}/{di} ulp)",
+                micro.label()
+            );
+        }
+    }
+}
+
+/// PR-6 satellite: SIMD-vs-scalar kernel equivalence across shapes that
+/// straddle every MR/NR block edge — m=1 row sweeps, n=1 matvecs, ragged
+/// tiles around 4 and 8, and the serving batch sizes 1/8/64.
+#[test]
+fn simd_and_scalar_kernels_agree_within_4_ulp() {
+    forall_seeded("kernel equivalence (pinned shapes)", 0x51AD, 1, |g| {
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 9, 64),
+            (2, 2, 1),
+            (3, 5, 7),
+            (4, 4, 8),
+            (5, 4, 3),
+            (7, 3, 5),
+            (8, 8, 64),
+            (9, 7, 65),
+            (16, 16, 1),
+        ] {
+            check_kernels_agree(g, m, k, n);
+        }
+    });
+    forall_seeded("kernel equivalence (random shapes)", 0x51AE, 25, |g| {
+        let m = g.usize_in(1, 18);
+        let k = g.usize_in(1, 18);
+        let n = *g.choose(&[1usize, 2, 3, 4, 5, 8, 9, 64]);
+        check_kernels_agree(g, m, k, n);
     });
 }
 

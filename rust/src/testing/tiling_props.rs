@@ -210,6 +210,34 @@ fn parallel_path_on_quantized_fleet_matches_sequential() {
     });
 }
 
+/// PR-6 satellite: par ≡ seq must survive the execution arena. Interleave
+/// parallel and sequential dispatches of different batch shapes on the
+/// same fleet, so every dispatch reuses arena buffers shaped (and dirtied)
+/// by a DIFFERENT previous dispatch — results must stay bit-identical to
+/// the cold-path reference throughout.
+#[test]
+fn arena_reuse_keeps_parallel_bit_identical_to_sequential() {
+    forall_seeded("arena par ≡ seq", 0x7127, 4, |g| {
+        let m = g.usize_in(9, 33);
+        let n = g.usize_in(9, 33);
+        let t = *g.choose(&TILES);
+        let target = gen_target(g, m, n, true);
+        let vp = VirtualProcessor::compile(&target, &PlanSpec::new(t, Fidelity::Digital))
+            .expect("digital compile");
+        let shapes: Vec<usize> = (0..6).map(|_| *g.choose(&BATCHES)).collect();
+        let refs: Vec<(CMat, CMat)> = shapes
+            .iter()
+            .map(|&b| gen_batch(g, n, b))
+            .map(|x| (vp.apply_batch_seq(&x), x))
+            .collect();
+        for (i, (seq, x)) in refs.iter().enumerate() {
+            let par = vp.apply_batch_par(x, 1 + i % 4);
+            assert_eq!(&par, seq, "m={m} n={n} t={t} dispatch {i}");
+            assert_eq!(&vp.apply_batch_seq(x), seq, "warm seq, dispatch {i}");
+        }
+    });
+}
+
 /// PR-5 tentpole: calibration-aware (nearest-measured) lowering keeps
 /// whichever candidate program predicts the smaller realized tile error,
 /// and the prediction is bit-exact w.r.t. instantiation — so per tile it
