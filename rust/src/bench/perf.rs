@@ -5,13 +5,14 @@
 //! artifacts are present. Results are recorded in EXPERIMENTS.md §Perf.
 
 use super::harness::{bench, BenchStats};
-use crate::compiler::{Calibration, PerturbMode, PlanSpec, VirtualProcessor};
+use crate::compiler::{plan_shards, Calibration, PerturbMode, PlanSpec, VirtualProcessor};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::router::{JobSink, PendingReply, Router};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload, WIRE_VERSION,
 };
+use crate::coordinator::sharded::{ShardConfig, ShardedProcessor};
 use crate::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
 use crate::device::State;
 use crate::math::c64::C64;
@@ -51,6 +52,14 @@ pub const KERNEL_NS: [usize; 4] = [4, 8, 16, 64];
 /// Batch sizes for the kernel-dispatch GEMM grid.
 pub const KERNEL_BATCHES: [usize; 3] = [1, 8, 64];
 
+/// Shard count for the sharded-vs-single serving comparison: one
+/// single-replica loopback node per shard, so the recorded overhead is
+/// pure scatter/gather cost (framing + N sockets + row placement).
+pub const CLUSTER_SHARDS: usize = 3;
+
+/// Batch sizes for the sharded-vs-single serving comparison.
+pub const CLUSTER_BATCHES: [usize; 2] = [1, 16];
+
 /// Run every perf bench; returns the report. Measures the batched
 /// `apply_batch` path against the per-vector `matvec` loop it replaced
 /// (written to `BENCH_pr1.json`; override with `RFNN_BENCH_OUT`), the
@@ -62,8 +71,11 @@ pub const KERNEL_BATCHES: [usize; 3] = [1, 8, 64];
 /// in-process submit→wait latency sweep (written to `BENCH_pr4.json`;
 /// override with `RFNN_BENCH4_OUT`), and the dispatched-vs-forced-scalar
 /// kernel grid over `(n, batch)` (written to `BENCH_pr6.json`; override
-/// with `RFNN_BENCH6_OUT`) so the perf trajectory tracks each PR. `tile`
-/// is the physical tile size of the virtualization sweep.
+/// with `RFNN_BENCH6_OUT`), and the sharded scatter/gather coordinator
+/// vs the single-process apply it must match bit-for-bit (written to
+/// `BENCH_pr7.json`; override with `RFNN_BENCH7_OUT`) so the perf
+/// trajectory tracks each PR. `tile` is the physical tile size of the
+/// virtualization sweep.
 pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -194,7 +206,124 @@ pub fn all(quick: bool, tile: usize) -> String {
         Ok(()) => out.push_str(&format!("wrote {path6}\n")),
         Err(e) => out.push_str(&format!("could not write {path6}: {e}\n")),
     }
+    out.push_str(&format!(
+        "§Perf — sharded scatter/gather vs single-process apply ({CLUSTER_SHARDS} loopback \
+         shards)\n"
+    ));
+    let (cluster_rows, identical) = run_cluster_benches(samples);
+    for (b, single, sharded) in &cluster_rows {
+        out.push_str(&single.line());
+        out.push('\n');
+        out.push_str(&sharded.line());
+        out.push('\n');
+        let overhead = sharded.median_ns() as f64 / single.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  batch {b:>3}: sharded scatter/gather costs {overhead:.2}× the single process\n"
+        ));
+    }
+    out.push_str(&format!(
+        "  sharded outputs bit-identical to the single process: {identical}\n"
+    ));
+    let json7 = cluster_report_json(&cluster_rows, samples, quick, identical);
+    let path7 =
+        std::env::var("RFNN_BENCH7_OUT").unwrap_or_else(|_| "BENCH_pr7.json".to_string());
+    match std::fs::write(&path7, json7.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path7}\n")),
+        Err(e) => out.push_str(&format!("could not write {path7}: {e}\n")),
+    }
     out
+}
+
+/// Time [`ShardedProcessor::try_apply_batch`] — scatter over
+/// [`CLUSTER_SHARDS`] single-replica loopback nodes, gather by row
+/// placement — against the single-process [`VirtualProcessor`] serving
+/// the identical compiled target, at each batch size in
+/// [`CLUSTER_BATCHES`]. Returns `(batch, single, sharded)` stats plus
+/// whether every sharded output matched the single-process one
+/// bit-for-bit (the PR-7 acceptance property: the integration suite pins
+/// it, and the bench re-checks it on every run it records).
+pub fn run_cluster_benches(samples: usize) -> (Vec<(usize, BenchStats, BenchStats)>, bool) {
+    let mut rng = Rng::new(0xC1A5);
+    let n = 12usize;
+    let target = CMat::from_fn(n, n, |_, _| C64::real(rng.normal()));
+    let spec = PlanSpec::new(4, Fidelity::Quantized);
+    let full = VirtualProcessor::compile(&target, &spec).expect("quantized compile");
+    let shards = plan_shards(&target, &spec, CLUSTER_SHARDS).expect("plan 3 tile-row shards");
+    let mut fronts = Vec::new();
+    let mut replicas = Vec::new();
+    for _ in 0..shards.len() {
+        let svc = Arc::new(ProcessorService::new(ProcessorPool::new()));
+        let fe =
+            TcpFrontEnd::bind("127.0.0.1:0", Arc::new(Router::new(svc)), TcpConfig::default())
+                .expect("bind ephemeral loopback port");
+        replicas.push(vec![fe.local_addr().to_string()]);
+        fronts.push(fe);
+    }
+    let sp = ShardedProcessor::deploy("bench", &shards, &replicas, ShardConfig::default())
+        .expect("deploy shards over loopback");
+    let mut identical = true;
+    let mut out = Vec::new();
+    for &b in &CLUSTER_BATCHES {
+        let x = CMat::from_fn(n, b, |i, j| {
+            C64::new(0.05 * i as f64 - 0.2 + 0.01 * j as f64, 0.02 * i as f64)
+        });
+        identical &= sp.try_apply_batch(&x).expect("healthy cluster") == full.apply_batch(&x);
+        let single = bench(&format!("single  apply n{n} b{b}"), samples, || {
+            std::hint::black_box(full.apply_batch(std::hint::black_box(&x)));
+        });
+        let sharded =
+            bench(&format!("sharded apply n{n} b{b} s{CLUSTER_SHARDS}"), samples, || {
+                std::hint::black_box(
+                    sp.try_apply_batch(std::hint::black_box(&x)).expect("healthy cluster"),
+                );
+            });
+        out.push((b, single, sharded));
+    }
+    drop(sp);
+    for fe in fronts {
+        fe.shutdown();
+    }
+    (out, identical)
+}
+
+/// The PR-7 perf-trajectory record for [`run_cluster_benches`] results.
+/// `bit_identical` rides along with the timings so a perf run that ever
+/// saw the scatter/gather path diverge from the single process is
+/// visibly tainted in the artifact trail.
+pub fn cluster_report_json(
+    rows: &[(usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+    bit_identical: bool,
+) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(b, single, sharded)| {
+            let sn = single.median_ns() as f64 / *b as f64;
+            let shn = sharded.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("batch", Json::Num(*b as f64)),
+                ("single_ns_per_vector", Json::Num(sn)),
+                ("sharded_ns_per_vector", Json::Num(shn)),
+                ("sharded_vectors_per_sec", Json::Num(1e9 / shn.max(1.0))),
+                ("sharded_over_single", Json::Num(shn / sn.max(1.0))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pr", Json::Num(7.0)),
+        ("bench", Json::Str("sharded_scatter_gather_vs_single".into())),
+        ("wire_version", Json::Num(WIRE_VERSION as f64)),
+        ("shards", Json::Num(CLUSTER_SHARDS as f64)),
+        ("replicas_per_shard", Json::Num(1.0)),
+        ("n", Json::Num(12.0)),
+        ("tile", Json::Num(4.0)),
+        ("fidelity", Json::Str("quantized".into())),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time the dispatched (autotuned) kernel against the forced scalar 4×4
@@ -819,6 +948,36 @@ mod tests {
         assert!(report.contains("remote submit"), "{report}");
         assert!(report.contains("insitu dspsa"), "{report}");
         assert!(report.contains("gemm kernel"), "{report}");
+        assert!(report.contains("sharded apply"), "{report}");
+        assert!(report.contains("bit-identical to the single process: true"), "{report}");
+    }
+
+    #[test]
+    fn cluster_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let (rows, identical) = super::run_cluster_benches(2);
+        assert_eq!(rows.len(), super::CLUSTER_BATCHES.len());
+        // The acceptance property itself: row-placement gather over live
+        // loopback shards reproduced the single-process bits.
+        assert!(identical, "sharded outputs diverged from the single process");
+        let json = super::cluster_report_json(&rows, 2, true, identical);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(parsed.get("pr").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(parsed.get("shards").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(
+            parsed.get("wire_version").and_then(|v| v.as_f64()),
+            Some(super::WIRE_VERSION as f64)
+        );
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), super::CLUSTER_BATCHES.len());
+        for r in results {
+            let ratio =
+                r.get("sharded_over_single").and_then(|v| v.as_f64()).expect("ratio");
+            assert!(ratio.is_finite() && ratio > 0.0, "sharded_over_single {ratio}");
+            let vps =
+                r.get("sharded_vectors_per_sec").and_then(|v| v.as_f64()).expect("vps");
+            assert!(vps.is_finite() && vps > 0.0, "sharded_vectors_per_sec {vps}");
+        }
     }
 
     #[test]

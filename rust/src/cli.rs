@@ -14,7 +14,7 @@
 
 use crate::bench;
 use crate::compiler::{
-    Calibration, Compiler, PerturbMode, PlanSpec, VirtualProcessor, VALID_TILES,
+    plan_shards, Calibration, Compiler, PerturbMode, PlanSpec, VirtualProcessor, VALID_TILES,
 };
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::router::{Admin, Endpoint, Router, RouterError};
@@ -22,6 +22,7 @@ use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, SubmitError, Workload,
 };
+use crate::coordinator::sharded::{ShardConfig, ShardedProcessor};
 use crate::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
 use crate::dataset::mnist::load_or_synthesize;
 use crate::device::State;
@@ -32,7 +33,7 @@ use crate::mesh::propagate::{DiscreteMesh, MeshBackend};
 use crate::nn::rfnn2x2::{PostParams, Rfnn2x2};
 use crate::nn::rfnn_mnist::{MnistRfnn, MnistTrainConfig};
 use crate::nn::sgd::SgdConfig;
-use crate::processor::Fidelity;
+use crate::processor::{Fidelity, LinearProcessor};
 use crate::runtime::Manifest;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -102,10 +103,15 @@ USAGE:
     rfnn bench <experiment|all> [--quick] [--tile T]   regenerate a paper table/figure
     rfnn train-mnist [--train N] [--test N] [--epochs N] [--lr F] [--digital]
     rfnn serve [--requests N] [--batch N] [--depth N] [--native]
-               [--tile T] [--fidelity F] [--listen ADDR]
+               [--tile T] [--fidelity F] [--listen ADDR] [--minimal]
     rfnn job '<wire json>' [--native] [--tile T]       submit one wire-encoded job
     rfnn client [--connect ADDR] job '<wire json>'     submit to a remote server
-    rfnn client [--connect ADDR] admin <health|metrics|processors|shutdown>
+    rfnn client [--connect ADDR] admin <health|metrics|processors|cluster|shutdown>
+    rfnn cluster plan   [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
+                        [--fab-seed S] [--calibration measured|ideal] [--shards N]
+    rfnn cluster deploy --nodes A,B,C [--replicas R] [--name NAME] [plan flags]
+    rfnn cluster serve  --nodes A,B,C [--replicas R] [--requests N] [--batch B]
+                        [plan flags]
     rfnn compile [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
                  [--fab-seed S] [--calibration measured|ideal]
                  [--train EVALS] [--dspsa-mode monolithic|block|block-random]
@@ -130,7 +136,23 @@ same pool and runs until `rfnn client admin shutdown`.
 client speaks the same versioned wire protocol over TCP: `client job`
 submits one job document (a v3 compile job can register a new virtual
 processor on the running server), `client admin` drives the control
-plane. Default --connect is 127.0.0.1:7878.
+plane (`admin cluster` prints the per-shard health map of an installed
+sharded coordinator). Default --connect is 127.0.0.1:7878.
+
+serve --minimal (requires --listen) starts a BARE node: an empty pool
+behind the TCP front end, populated over the wire by compile /
+shard_compile jobs — the shape `cluster deploy` expects of its nodes.
+With RFNN_AUTH_TOKEN set, serve requires every connection's first frame
+to present that token, and client/cluster send it automatically.
+
+cluster shards one seeded random M×N weight matrix across serving
+nodes: `plan` prints the tile-row split, `deploy` registers each
+shard's slice (replicated --replicas times, round-robin over --nodes)
+and probes the composed matrix, and `serve` then drives random batches
+through the scatter/gather coordinator, checking every output
+bit-for-bit against a local single-process compile of the same seeded
+target. All processes derive the target from (--rows --cols --seed),
+so plan/deploy/serve agree without shipping weights out of band.
 
 compile lowers a seeded random M×N weight matrix onto T×T physical tiles
 and prints the plan (tile grid, per-tile states/scales/errors, reprogram
@@ -167,6 +189,7 @@ pub fn run(args: &Args) -> i32 {
         Some("serve") => cmd_serve(args),
         Some("job") => cmd_job(args),
         Some("client") => cmd_client(args),
+        Some("cluster") => cmd_cluster(args),
         Some("compile") => cmd_compile(args),
         Some("info") => cmd_info(),
         _ => {
@@ -333,12 +356,23 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    let svc = Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg, virt)));
+    if args.is_set("minimal") && args.get("listen").is_none() {
+        eprintln!("--minimal requires --listen (a bare node has no local traffic to serve)");
+        return 2;
+    }
+    let svc = if args.is_set("minimal") {
+        // A bare cluster node: an empty pool, populated over the wire by
+        // compile / shard_compile jobs (`rfnn cluster deploy`).
+        Arc::new(ProcessorService::new(ProcessorPool::new()))
+    } else {
+        Arc::new(ProcessorService::new(default_pool(backend_from(args), cfg, virt)))
+    };
     if let Some(addr) = args.get("listen") {
         // Network mode: the same pool behind the framed-TCP front end,
         // running until an `Admin::Shutdown` arrives over the wire.
+        // `from_env` picks up RFNN_AUTH_TOKEN when set.
         let router = Arc::new(Router::new(svc.clone()));
-        let fe = match TcpFrontEnd::bind(addr, router, TcpConfig::default()) {
+        let fe = match TcpFrontEnd::bind(addr, router, TcpConfig::from_env()) {
             Ok(fe) => fe,
             Err(e) => {
                 eprintln!("{e}");
@@ -523,7 +557,8 @@ fn cmd_client(args: &Args) -> i32 {
     let usage = || {
         eprintln!(
             "usage: rfnn client [--connect ADDR] job '<wire json>'\n\
-             \x20      rfnn client [--connect ADDR] admin <health|metrics|processors|shutdown>"
+             \x20      rfnn client [--connect ADDR] admin \
+             <health|metrics|processors|cluster|shutdown>"
         );
         2
     };
@@ -565,6 +600,7 @@ fn cmd_client(args: &Args) -> i32 {
                 Some("health") => Admin::Health,
                 Some("metrics") | Some("metrics_snapshot") => Admin::MetricsSnapshot,
                 Some("processors") | Some("list_processors") => Admin::ListProcessors,
+                Some("cluster") | Some("cluster_health") => Admin::ClusterHealth,
                 Some("shutdown") => Admin::Shutdown,
                 _ => return usage(),
             };
@@ -588,6 +624,167 @@ fn cmd_client(args: &Args) -> i32 {
         }
         _ => usage(),
     }
+}
+
+/// The cluster commands' shared target derivation: every process (plan,
+/// deploy, serve, and any node recompiling locally to cross-check)
+/// reconstructs the SAME seeded random weight matrix from
+/// `(--rows, --cols, --seed)`, so no weights travel out of band.
+fn cluster_spec_from(args: &Args) -> Result<(CMat, PlanSpec, usize, u64), String> {
+    let rows = args.get_or("rows", 8usize);
+    let cols = args.get_or("cols", rows);
+    let tile = args.get_or("tile", 2usize);
+    if !VALID_TILES.contains(&tile) {
+        return Err(format!("--tile {tile} is not a physical tile size (have {VALID_TILES:?})"));
+    }
+    let fid_name = args.get("fidelity").unwrap_or("measured");
+    let fidelity = parse_fidelity(fid_name).ok_or_else(|| {
+        format!("unknown fidelity '{fid_name}' (have: digital ideal quantized measured)")
+    })?;
+    let cal_name = args.get("calibration").unwrap_or("measured");
+    let calibration = Calibration::from_name(cal_name)
+        .ok_or_else(|| format!("unknown calibration rule '{cal_name}' (have: measured ideal)"))?;
+    let seed = args.get_or("seed", 2023u64);
+    let mut spec = PlanSpec::new(tile, fidelity).with_calibration(calibration);
+    if let Some(v) = args.get("fab-seed") {
+        let fab = v
+            .parse::<u64>()
+            .map_err(|_| format!("--fab-seed '{v}' is not an unsigned 64-bit integer"))?;
+        spec = spec.with_seed(fab);
+    }
+    let mut rng = Rng::new(seed);
+    let target = CMat::from_fn(rows, cols, |_, _| C64::real(rng.normal()));
+    let n = args.get_or("shards", 2usize);
+    Ok((target, spec, n, seed))
+}
+
+/// `rfnn cluster plan|deploy|serve`: shard a seeded random target across
+/// remote nodes (see the USAGE text for the full story).
+fn cmd_cluster(args: &Args) -> i32 {
+    let usage = || {
+        eprintln!(
+            "usage: rfnn cluster plan   [--rows M --cols N --tile T --fidelity F --seed S \
+             --shards N]\n\
+             \x20      rfnn cluster deploy --nodes A,B,C [--replicas R --name NAME …plan \
+             flags]\n\
+             \x20      rfnn cluster serve  --nodes A,B,C [--replicas R --requests N --batch B \
+             …plan flags]"
+        );
+        2
+    };
+    let Some(verb) = args.positional.first().map(String::as_str) else {
+        return usage();
+    };
+    if !matches!(verb, "plan" | "deploy" | "serve") {
+        return usage();
+    }
+    let (target, spec, n, seed) = match cluster_spec_from(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let shards = match plan_shards(&target, &spec, n) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("plan failed: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "{} shard(s) over a {}×{} target on {}×{} tiles ({:?}, target seed {seed})",
+        shards.len(),
+        target.rows(),
+        target.cols(),
+        spec.tile,
+        spec.tile,
+        spec.fidelity,
+    );
+    for (i, s) in shards.iter().enumerate() {
+        println!(
+            "  s{i}: tile-rows {}..{} → output rows {}..{} ({}×{} slice)",
+            s.row_start,
+            s.row_start + s.grid_rows,
+            s.out_row_start(),
+            s.out_row_start() + s.out_rows(),
+            s.out_rows(),
+            s.cols,
+        );
+    }
+    if verb == "plan" {
+        return 0;
+    }
+    let Some(node_list) = args.get("nodes") else {
+        eprintln!("cluster {verb} needs --nodes A,B,C (addresses of `rfnn serve --listen` hosts)");
+        return 2;
+    };
+    let nodes: Vec<String> =
+        node_list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    if nodes.is_empty() {
+        eprintln!("--nodes lists no addresses");
+        return 2;
+    }
+    let replicas = args.get_or("replicas", 1usize).max(1);
+    let name = args.get("name").unwrap_or("net");
+    // Round-robin placement: shard s, replica r → nodes[(s·R + r) % len].
+    // With R ≥ 2 and ≥ 2 nodes, a shard's replicas land on distinct nodes
+    // whenever enough nodes exist.
+    let addrs: Vec<Vec<String>> = (0..shards.len())
+        .map(|s| (0..replicas).map(|r| nodes[(s * replicas + r) % nodes.len()].clone()).collect())
+        .collect();
+    let sp = match ShardedProcessor::deploy(name, &shards, &addrs, ShardConfig::default()) {
+        Ok(sp) => sp,
+        Err(e) => {
+            eprintln!("deploy failed: {e}");
+            return 1;
+        }
+    };
+    for (i, list) in addrs.iter().enumerate() {
+        println!("  {name}.s{i} ← {}", list.join(", "));
+    }
+    println!(
+        "deployed '{name}': {} shard(s) × {replicas} replica(s), cluster {}",
+        shards.len(),
+        sp.cluster_metrics().worst_health().name()
+    );
+    if verb == "deploy" {
+        return 0;
+    }
+    // serve: drive random batches through the scatter/gather coordinator
+    // and hold every answer to the single-process compile, bit-for-bit.
+    let full = match VirtualProcessor::compile(&target, &spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("local reference compile failed: {e}");
+            return 1;
+        }
+    };
+    let requests = args.get_or("requests", 16usize);
+    let batch = args.get_or("batch", 8usize).max(1);
+    let mut rng = Rng::new(seed ^ 0xC1A57E12);
+    let t0 = std::time::Instant::now();
+    for k in 0..requests {
+        let x = CMat::from_fn(target.cols(), batch, |_, _| C64::new(rng.normal(), rng.normal()));
+        let y = match sp.try_apply_batch(&x) {
+            Ok(y) => y,
+            Err(e) => {
+                eprintln!("batch {k}: {e}");
+                return 1;
+            }
+        };
+        if y != LinearProcessor::apply_batch(&full, &x) {
+            eprintln!("batch {k}: sharded output differs from the single-process compile");
+            return 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{requests} batch(es) × {batch} column(s) in {dt:.2?} — sharded ≡ single-process, \
+         bit-identical"
+    );
+    println!("{}", sp.cluster_metrics().snapshot().to_string_pretty());
+    0
 }
 
 /// `rfnn compile`: lower a seeded random M×N weight matrix onto a fleet
@@ -860,6 +1057,32 @@ mod tests {
         assert_eq!(run(&parse("client admin")), 2);
         assert_eq!(run(&parse("client admin nope")), 2);
         assert_eq!(run(&parse("client job {not-json}")), 2);
+    }
+
+    #[test]
+    fn cluster_command_usage_and_plan() {
+        assert_eq!(run(&parse("cluster")), 2);
+        assert_eq!(run(&parse("cluster bogus")), 2);
+        // A pure planning pass opens no sockets.
+        assert_eq!(
+            run(&parse("cluster plan --rows 6 --cols 4 --tile 2 --shards 3 --fidelity quantized")),
+            0
+        );
+        // Too many shards for the grid, and bad spellings, are usage
+        // errors caught before any connection is dialed.
+        assert_eq!(run(&parse("cluster plan --rows 4 --tile 2 --shards 9")), 2);
+        assert_eq!(run(&parse("cluster plan --tile 3")), 2);
+        assert_eq!(run(&parse("cluster plan --fidelity bogus")), 2);
+        assert_eq!(run(&parse("cluster plan --calibration bogus")), 2);
+        assert_eq!(run(&parse("cluster plan --fab-seed 0xBEEF")), 2);
+        // deploy/serve without usable --nodes never dial anything.
+        assert_eq!(run(&parse("cluster deploy")), 2);
+        assert_eq!(run(&parse("cluster serve --nodes ,")), 2);
+    }
+
+    #[test]
+    fn serve_minimal_requires_listen() {
+        assert_eq!(run(&parse("serve --minimal")), 2);
     }
 
     #[test]

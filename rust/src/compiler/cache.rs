@@ -43,7 +43,8 @@ pub fn content_hash(m: &CMat) -> u64 {
     h
 }
 
-/// Cache key: content hash + exact shape (hash-collision guard) + spec.
+/// Cache key: content hash + exact shape (hash-collision guard) + spec +
+/// the tile-row offset of sharded compiles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct PlanKey {
     hash: u64,
@@ -53,12 +54,20 @@ pub struct PlanKey {
     fidelity: Fidelity,
     measured_seed: u64,
     calibration: Calibration,
+    grid_row_offset: usize,
 }
 
 impl PlanKey {
     pub fn of(target: &CMat, spec: &PlanSpec) -> PlanKey {
-        // Seed and calibration rule only shape Measured plans; normalize
-        // them away elsewhere so equivalent specs share one cache entry.
+        PlanKey::of_offset(target, spec, 0)
+    }
+
+    /// Key for a shard compile at `grid_row_offset` tile-rows into the
+    /// global grid (see [`Compiler::compile_offset`]).
+    pub fn of_offset(target: &CMat, spec: &PlanSpec, grid_row_offset: usize) -> PlanKey {
+        // Seed, calibration rule, and tile index (hence row offset) only
+        // shape Measured recipes; normalize them away elsewhere so
+        // equivalent specs share one cache entry.
         let measured = spec.fidelity == Fidelity::Measured;
         PlanKey {
             hash: content_hash(target),
@@ -68,6 +77,7 @@ impl PlanKey {
             fidelity: spec.fidelity,
             measured_seed: if measured { spec.measured_seed } else { 0 },
             calibration: if measured { spec.calibration } else { Calibration::NearestIdeal },
+            grid_row_offset: if measured { grid_row_offset } else { 0 },
         }
     }
 }
@@ -250,34 +260,38 @@ impl Compiler {
 
     /// Compile `target` onto a fleet of `spec.tile`-size tiles.
     pub fn compile(&self, target: &CMat, spec: &PlanSpec) -> Result<TilePlan> {
+        self.compile_offset(target, spec, 0)
+    }
+
+    /// Compile `target` as a tile-row *slice* of a larger plan whose slice
+    /// starts `grid_row_offset` tile-rows into the global grid.
+    ///
+    /// At `Measured` fidelity every tile's device population derives from
+    /// its **global** flat index (see [`mesh_base_seed`]); a shard
+    /// compiling rows `[grid_row_offset, ..)` of a wide target must number
+    /// its tiles `grid_row_offset·grid_cols + local` so its realized tile
+    /// matrices — and therefore its output rows — are bit-identical to the
+    /// same rows of the single-process plan. Offset 0 is exactly
+    /// [`Self::compile`]; the cache keys offsets separately at Measured
+    /// fidelity (recipes are offset-independent everywhere else).
+    pub fn compile_offset(
+        &self,
+        target: &CMat,
+        spec: &PlanSpec,
+        grid_row_offset: usize,
+    ) -> Result<TilePlan> {
         let grid = TileGrid::new(target.rows(), target.cols(), spec.tile)?;
-        let key = PlanKey::of(target, spec);
         let calibrate = spec.fidelity == Fidelity::Measured
             && spec.calibration == Calibration::NearestMeasured;
+        // Columns are never split, so a tile's global flat index is its
+        // local row-major index shifted by whole tile-rows.
+        let index_base = grid_row_offset * grid.grid().1;
+        let key = PlanKey::of_offset(target, spec, grid_row_offset);
         let (recipes, cache_hit) = match self.cache.lookup(&key) {
             Some(r) => (r, true),
             None => {
-                let fresh: Vec<TileRecipe> = grid
-                    .blocks(target)
-                    .iter()
-                    .enumerate()
-                    .map(|(idx, b)| {
-                        // Zero blocks lower to powered-off tiles — don't
-                        // measure populations that will never be driven.
-                        let tables = (calibrate && b.max_abs() != 0.0).then(|| {
-                            (
-                                self.calibrations.table(mesh_base_seed(spec, idx, 0), spec.tile),
-                                self.calibrations.table(mesh_base_seed(spec, idx, 1), spec.tile),
-                            )
-                        });
-                        synthesize_tile(
-                            b,
-                            spec,
-                            tables.as_ref().map(|(u, v)| (u.as_ref(), v.as_ref())),
-                        )
-                    })
-                    .collect();
-                let arc = Arc::new(fresh);
+                let arc =
+                    Arc::new(self.synthesize_grid(target, &grid, spec, index_base, calibrate));
                 self.cache.insert(key, arc.clone());
                 (arc, false)
             }
@@ -288,7 +302,7 @@ impl Compiler {
         for r in 0..gr {
             for c in 0..gc {
                 let idx = grid.index(r, c);
-                let proc = instantiate(&recipes[idx], spec, idx);
+                let proc = instantiate(&recipes[idx], spec, index_base + idx);
                 let block = grid.block(target, r, c);
                 let error = proc.matrix().sub(&block).fro_norm();
                 let tc = proc.reprogram_cost();
@@ -315,6 +329,34 @@ impl Compiler {
         };
         plan.fro_error = plan.assemble().sub(target).fro_norm();
         Ok(plan)
+    }
+
+    /// Lower every block of `grid` to a recipe; tile `local` in row-major
+    /// order is fabricated/calibrated as global tile `index_base + local`.
+    fn synthesize_grid(
+        &self,
+        target: &CMat,
+        grid: &TileGrid,
+        spec: &PlanSpec,
+        index_base: usize,
+        calibrate: bool,
+    ) -> Vec<TileRecipe> {
+        grid.blocks(target)
+            .iter()
+            .enumerate()
+            .map(|(idx, b)| {
+                // Zero blocks lower to powered-off tiles — don't
+                // measure populations that will never be driven.
+                let gidx = index_base + idx;
+                let tables = (calibrate && b.max_abs() != 0.0).then(|| {
+                    (
+                        self.calibrations.table(mesh_base_seed(spec, gidx, 0), spec.tile),
+                        self.calibrations.table(mesh_base_seed(spec, gidx, 1), spec.tile),
+                    )
+                });
+                synthesize_tile(b, spec, tables.as_ref().map(|(u, v)| (u.as_ref(), v.as_ref())))
+            })
+            .collect()
     }
 }
 

@@ -28,9 +28,11 @@ pub mod calibrate;
 pub mod exec;
 pub mod lower;
 pub mod partition;
+pub mod shard;
 
 pub use cache::{CalibrationCache, Compiler, PlanCache, PlanKey};
 pub use calibrate::CalibrationTable;
 pub use exec::{FleetTrainReport, PerturbMode, VirtualProcessor};
 pub use lower::{Calibration, PlanSpec, SynthesizedTile, TilePlan, TileRecipe};
 pub use partition::{TileGrid, VALID_TILES};
+pub use shard::{plan_shards, ShardSpec};

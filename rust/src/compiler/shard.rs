@@ -1,0 +1,301 @@
+//! The shard planner: splitting one logical weight matrix across many
+//! serving nodes by *tile-rows*.
+//!
+//! A [`super::lower::TilePlan`] computes `Y = M·X` by accumulating each
+//! output row's partial products across the tile-*columns* of that row
+//! only — tile-rows never mix. Cutting the grid between tile-rows
+//! therefore cuts the computation into shards that own **disjoint output
+//! row ranges**: each shard compiles its row slice of the target
+//! (keeping every column), applies the full input batch, and produces
+//! exactly the output rows `[row_start·T, row_start·T + slice_rows)` of
+//! the single-process plan. The coordinator's gather is pure placement —
+//! no summation, no reordering, no floating-point at all — which is what
+//! makes sharded serving bit-identical to one process (pinned by tests
+//! here and in `coordinator/sharded.rs`).
+//!
+//! Balance: shard boundaries are chosen so each shard carries an
+//! approximately equal share of real MAC weight (live rows × cols; padded
+//! rows on the ragged bottom edge are free), via a greedy sweep toward
+//! each shard's even-split cumulative goal.
+//!
+//! Fidelity: at `Measured` fidelity a tile's fabricated device population
+//! derives from its *global* flat index, so a [`ShardSpec`] carries the
+//! global geometry (`row_start`, full `rows`/`cols`, seed, calibration
+//! rule) and compiles through [`Compiler::compile_offset`] — never
+//! through a plain offset-0 compile of the slice, which would renumber
+//! the tiles and silently change the realized matrices.
+
+use super::cache::Compiler;
+use super::lower::{Calibration, PlanSpec, TilePlan};
+use super::partition::TileGrid;
+use crate::math::cmat::CMat;
+use crate::processor::Fidelity;
+use crate::util::error::{Error, Result};
+
+/// A self-contained compile payload for one shard: everything a remote
+/// node needs to realize its tile-row slice bit-identically to the same
+/// rows of the single-process plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpec {
+    /// Global logical rows of the full target (all shards agree).
+    pub rows: usize,
+    /// Global logical cols; shards keep every column.
+    pub cols: usize,
+    /// Physical tile size `T`.
+    pub tile: usize,
+    pub fidelity: Fidelity,
+    /// Global fabrication seed (Measured fidelity).
+    pub measured_seed: u64,
+    /// Global state-selection rule (Measured fidelity).
+    pub calibration: Calibration,
+    /// First tile-row of the global grid this shard owns.
+    pub row_start: usize,
+    /// Number of tile-rows this shard owns (≥ 1).
+    pub grid_rows: usize,
+    /// The owned row slice of the global target
+    /// (`slice_rows × cols`, no padding).
+    pub target: CMat,
+}
+
+impl ShardSpec {
+    /// First logical output row this shard produces.
+    pub fn out_row_start(&self) -> usize {
+        self.row_start * self.tile
+    }
+
+    /// Number of logical output rows this shard produces.
+    pub fn out_rows(&self) -> usize {
+        self.target.rows()
+    }
+
+    /// The plan spec this shard compiles under (same on every shard).
+    pub fn plan_spec(&self) -> PlanSpec {
+        PlanSpec::new(self.tile, self.fidelity)
+            .with_seed(self.measured_seed)
+            .with_calibration(self.calibration)
+    }
+
+    /// Structural consistency: the slice shape must match the global
+    /// geometry exactly — a shard that lies about its offset would
+    /// compute the wrong output rows.
+    pub fn validate(&self) -> Result<()> {
+        let grid = TileGrid::new(self.rows, self.cols, self.tile)?;
+        let (gr, _) = grid.grid();
+        if self.grid_rows == 0 {
+            return Err(Error::msg("shard: a shard must own at least one tile-row"));
+        }
+        if self.row_start >= gr || self.grid_rows > gr - self.row_start {
+            return Err(Error::msg(format!(
+                "shard: tile-rows {}..{} exceed the {gr}-row global grid",
+                self.row_start,
+                self.row_start + self.grid_rows
+            )));
+        }
+        let want_rows =
+            self.rows.min((self.row_start + self.grid_rows) * self.tile) - self.out_row_start();
+        if self.target.rows() != want_rows || self.target.cols() != self.cols {
+            return Err(Error::msg(format!(
+                "shard: slice is {}×{}, geometry requires {want_rows}×{}",
+                self.target.rows(),
+                self.target.cols(),
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Compile this shard's slice on `compiler` with global tile indices —
+    /// the realized tiles are bit-identical to tiles
+    /// `row_start·grid_cols ..` of the full plan.
+    pub fn compile_on(&self, compiler: &Compiler) -> Result<TilePlan> {
+        self.validate()?;
+        compiler.compile_offset(&self.target, &self.plan_spec(), self.row_start)
+    }
+
+    /// [`Self::compile_on`] the process-wide shared compiler.
+    pub fn compile(&self) -> Result<TilePlan> {
+        self.compile_on(Compiler::global())
+    }
+}
+
+/// Split `target` into `n` contiguous tile-row shards under `spec`,
+/// balanced by real MAC weight (live rows × cols per tile-row).
+///
+/// Every tile-row lands in exactly one shard and shards are returned in
+/// row order, so concatenating their `target` slices (or their outputs)
+/// reproduces the full matrix. Fails if `n` is zero or exceeds the number
+/// of tile-rows.
+pub fn plan_shards(target: &CMat, spec: &PlanSpec, n: usize) -> Result<Vec<ShardSpec>> {
+    let grid = TileGrid::new(target.rows(), target.cols(), spec.tile)?;
+    let (gr, _) = grid.grid();
+    if n == 0 {
+        return Err(Error::msg("shard: cannot plan zero shards"));
+    }
+    if n > gr {
+        return Err(Error::msg(format!(
+            "shard: {n} shards over a {gr}-tile-row grid ({}×{} at T={}) — at most {gr}",
+            target.rows(),
+            target.cols(),
+            spec.tile
+        )));
+    }
+    // Real MAC weight of tile-row r: live (unpadded) rows × logical cols.
+    let weights: Vec<u64> =
+        (0..gr).map(|r| (grid.row_span(r).1 * target.cols()) as u64).collect();
+    let total: u64 = weights.iter().sum();
+    let mut shards = Vec::with_capacity(n);
+    let mut row = 0usize;
+    let mut acc = 0u64;
+    for s in 0..n {
+        // Must take ≥ 1 tile-row and leave ≥ 1 for each later shard.
+        let max_take = (gr - row) - (n - s - 1);
+        let goal = total * (s as u64 + 1) / n as u64;
+        let mut take = 1;
+        let mut cum = acc + weights[row];
+        while take < max_take {
+            let with_next = cum + weights[row + take];
+            // Extend only while it moves cumulative weight closer to this
+            // shard's even-split goal.
+            if with_next.abs_diff(goal) <= cum.abs_diff(goal) {
+                cum = with_next;
+                take += 1;
+            } else {
+                break;
+            }
+        }
+        acc = cum;
+        let out_start = row * spec.tile;
+        let out_rows = target.rows().min((row + take) * spec.tile) - out_start;
+        shards.push(ShardSpec {
+            rows: target.rows(),
+            cols: target.cols(),
+            tile: spec.tile,
+            fidelity: spec.fidelity,
+            measured_seed: spec.measured_seed,
+            calibration: spec.calibration,
+            row_start: row,
+            grid_rows: take,
+            target: target.block(out_start, 0, out_rows, target.cols()),
+        });
+        row += take;
+    }
+    debug_assert_eq!(row, gr, "every tile-row is owned by exactly one shard");
+    Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::exec::VirtualProcessor;
+    use crate::math::c64::C64;
+    use crate::math::rng::Rng;
+    use crate::processor::LinearProcessor;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> CMat {
+        let mut rng = Rng::new(seed);
+        CMat::from_fn(rows, cols, |_, _| C64::real(rng.normal()))
+    }
+
+    #[test]
+    fn plans_cover_every_row_exactly_once() {
+        let target = rand_mat(13, 7, 1);
+        let spec = PlanSpec::new(2, Fidelity::Digital);
+        for n in 1..=7 {
+            let shards = plan_shards(&target, &spec, n).unwrap();
+            assert_eq!(shards.len(), n);
+            let mut next_tile_row = 0;
+            let mut next_out_row = 0;
+            for s in &shards {
+                s.validate().unwrap();
+                assert_eq!(s.row_start, next_tile_row, "contiguous tile-rows");
+                assert_eq!(s.out_row_start(), next_out_row, "disjoint output rows");
+                assert!(s.grid_rows >= 1);
+                next_tile_row += s.grid_rows;
+                next_out_row += s.out_rows();
+                // The slice really is those rows of the target.
+                assert_eq!(
+                    s.target,
+                    target.block(s.out_row_start(), 0, s.out_rows(), target.cols())
+                );
+            }
+            assert_eq!(next_tile_row, 7, "13 rows at T=2 → 7 tile-rows");
+            assert_eq!(next_out_row, 13);
+        }
+    }
+
+    #[test]
+    fn rejects_zero_and_oversubscribed_shard_counts() {
+        let target = rand_mat(8, 4, 2);
+        let spec = PlanSpec::new(4, Fidelity::Digital);
+        assert!(plan_shards(&target, &spec, 0).is_err());
+        assert!(plan_shards(&target, &spec, 3).is_err(), "only 2 tile-rows exist");
+        assert_eq!(plan_shards(&target, &spec, 2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn balance_tracks_mac_weight() {
+        // 16 rows at T=2 → 8 equal-weight tile-rows; 4 shards take 2 each.
+        let target = rand_mat(16, 6, 3);
+        let spec = PlanSpec::new(2, Fidelity::Digital);
+        let shards = plan_shards(&target, &spec, 4).unwrap();
+        assert!(shards.iter().all(|s| s.grid_rows == 2), "uniform grid splits evenly");
+    }
+
+    #[test]
+    fn tampered_specs_fail_validation() {
+        let target = rand_mat(10, 5, 4);
+        let spec = PlanSpec::new(4, Fidelity::Quantized);
+        let mut s = plan_shards(&target, &spec, 2).unwrap().remove(1);
+        s.validate().unwrap();
+        let good = s.clone();
+        s.row_start += 1; // now points past the grid
+        assert!(s.validate().is_err());
+        let mut s = good.clone();
+        s.target = CMat::zeros(1, 5); // wrong slice height
+        assert!(s.validate().is_err());
+        let mut s = good;
+        s.grid_rows = 0;
+        assert!(s.validate().is_err());
+    }
+
+    /// The load-bearing property: shard compiles stack to the full plan
+    /// bit-for-bit — including at Measured fidelity, where per-tile device
+    /// populations depend on the global tile index.
+    #[test]
+    fn sharded_compile_is_bit_identical_to_full_compile() {
+        for fidelity in [Fidelity::Digital, Fidelity::Quantized, Fidelity::Measured] {
+            let target = rand_mat(11, 6, 5);
+            let spec = PlanSpec::new(4, fidelity);
+            let compiler = Compiler::new();
+            let full = compiler.compile(&target, &spec).unwrap().assemble();
+            let shards = plan_shards(&target, &spec, 2).unwrap();
+            let mut stacked = CMat::zeros(target.rows(), target.cols());
+            for s in &shards {
+                let part = s.compile_on(&compiler).unwrap().assemble();
+                assert_eq!((part.rows(), part.cols()), (s.out_rows(), s.cols));
+                stacked.set_block(s.out_row_start(), 0, &part);
+            }
+            assert_eq!(stacked, full, "{fidelity:?}: placement must be exact");
+        }
+    }
+
+    /// Scatter/gather equivalence at the execution level: applying the
+    /// full batch on every shard and placing the partial outputs equals
+    /// the single-process apply exactly.
+    #[test]
+    fn shard_outputs_place_into_the_full_apply() {
+        let target = rand_mat(10, 8, 6);
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        let compiler = Compiler::new();
+        let x = rand_mat(8, 3, 7);
+        let full = VirtualProcessor::new(compiler.compile(&target, &spec).unwrap());
+        let want = full.apply_batch(&x);
+        let shards = plan_shards(&target, &spec, 3).unwrap();
+        let mut got = CMat::zeros(target.rows(), 3);
+        for s in &shards {
+            let vp = VirtualProcessor::new(s.compile_on(&compiler).unwrap());
+            got.set_block(s.out_row_start(), 0, &vp.apply_batch(&x));
+        }
+        assert_eq!(got, want, "gather is placement, not summation");
+    }
+}

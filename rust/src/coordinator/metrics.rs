@@ -11,6 +11,7 @@
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// The job kinds accepted by the unified serving front door.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,16 +28,21 @@ pub enum JobKind {
     /// register the resulting virtual processor into the live pool
     /// (control-plane; WIRE_VERSION ≥ 3).
     Compile,
+    /// Compile one tile-row shard of a larger plan (a
+    /// [`crate::compiler::ShardSpec`]) and register it — the cluster
+    /// deploy path (control-plane; WIRE_VERSION ≥ 3, cluster-only).
+    ShardCompile,
 }
 
 impl JobKind {
     /// Every kind, in wire order.
-    pub const ALL: [JobKind; 5] = [
+    pub const ALL: [JobKind; 6] = [
         JobKind::Infer,
         JobKind::Classify,
         JobKind::RawApply,
         JobKind::Reprogram,
         JobKind::Compile,
+        JobKind::ShardCompile,
     ];
 
     /// Stable wire/snapshot name.
@@ -47,6 +53,7 @@ impl JobKind {
             JobKind::RawApply => "raw_apply",
             JobKind::Reprogram => "reprogram",
             JobKind::Compile => "compile",
+            JobKind::ShardCompile => "shard_compile",
         }
     }
 
@@ -159,6 +166,9 @@ pub struct TransportCounters {
     /// Frames or documents refused by the decode path (bad framing,
     /// malformed JSON, unsupported wire version, schema violations).
     pub decode_rejects: AtomicU64,
+    /// Connections refused by the auth gate (token configured but the
+    /// first frame was not a matching `Auth` envelope).
+    pub auth_rejects: AtomicU64,
 }
 
 impl TransportCounters {
@@ -175,8 +185,179 @@ impl TransportCounters {
             ("frames_in", Json::Num(self.frames_in.load(Ordering::Relaxed) as f64)),
             ("frames_out", Json::Num(self.frames_out.load(Ordering::Relaxed) as f64)),
             ("decode_rejects", Json::Num(self.decode_rejects.load(Ordering::Relaxed) as f64)),
+            ("auth_rejects", Json::Num(self.auth_rejects.load(Ordering::Relaxed) as f64)),
         ])
     }
+}
+
+/// Liveness of one shard replica endpoint as seen by the coordinator's
+/// failover layer ([`crate::coordinator::sharded::ShardedProcessor`]).
+pub struct ReplicaStatus {
+    /// Endpoint address (`host:port`).
+    pub addr: String,
+    up: AtomicU64,
+}
+
+impl ReplicaStatus {
+    pub fn new(addr: impl Into<String>) -> ReplicaStatus {
+        ReplicaStatus { addr: addr.into(), up: AtomicU64::new(1) }
+    }
+
+    /// Mark the replica live (health probe passed / request served) or
+    /// tripped (consecutive failures exceeded the trip threshold).
+    pub fn set_up(&self, up: bool) {
+        self.up.store(up as u64, Ordering::Relaxed);
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Relaxed) == 1
+    }
+}
+
+/// Aggregate health of one shard row-range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Every replica is believed live.
+    Healthy,
+    /// At least one replica is tripped but at least one is live — traffic
+    /// routes around the dead replicas (`ShardDegraded` in the admin
+    /// plane).
+    Degraded,
+    /// No live replica: applies covering this row-range fail until a
+    /// re-probe revives one (`ShardLost`).
+    Lost,
+}
+
+impl ShardHealth {
+    /// Stable wire/snapshot name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Degraded => "degraded",
+            ShardHealth::Lost => "lost",
+        }
+    }
+}
+
+/// Per-shard serving counters: scatter/gather latency, retry/failover
+/// totals, and the replica health map.
+pub struct ShardCounters {
+    /// First logical output row this shard owns.
+    pub out_row_start: usize,
+    /// Number of logical output rows this shard owns.
+    pub out_rows: usize,
+    /// Per-apply submit latency to this shard's chosen replica.
+    pub scatter: LatencyHistogram,
+    /// Per-apply wait latency for this shard's partial output.
+    pub gather: LatencyHistogram,
+    /// Scatter/gather attempts retried after a replica failure.
+    pub retries: AtomicU64,
+    /// Times traffic moved to a different replica after a trip.
+    pub failovers: AtomicU64,
+    /// Health map, one entry per replica endpoint.
+    pub replicas: Vec<ReplicaStatus>,
+}
+
+impl ShardCounters {
+    pub fn new(out_row_start: usize, out_rows: usize, addrs: &[String]) -> ShardCounters {
+        ShardCounters {
+            out_row_start,
+            out_rows,
+            scatter: LatencyHistogram::default(),
+            gather: LatencyHistogram::default(),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            replicas: addrs.iter().map(ReplicaStatus::new).collect(),
+        }
+    }
+
+    /// Healthy / Degraded / Lost from the replica map.
+    pub fn health(&self) -> ShardHealth {
+        let up = self.replicas.iter().filter(|r| r.is_up()).count();
+        if up == 0 {
+            ShardHealth::Lost
+        } else if up == self.replicas.len() {
+            ShardHealth::Healthy
+        } else {
+            ShardHealth::Degraded
+        }
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("out_row_start", Json::Num(self.out_row_start as f64)),
+            ("out_rows", Json::Num(self.out_rows as f64)),
+            ("health", Json::Str(self.health().name().to_string())),
+            ("retries", Json::Num(self.retries.load(Ordering::Relaxed) as f64)),
+            ("failovers", Json::Num(self.failovers.load(Ordering::Relaxed) as f64)),
+            ("scatter", hist_json(&self.scatter)),
+            ("gather", hist_json(&self.gather)),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("addr", Json::Str(r.addr.clone())),
+                                ("up", Json::Bool(r.is_up())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Cluster-wide serving metrics: one [`ShardCounters`] per shard
+/// row-range, installed into a pool's [`Metrics`] by the sharded
+/// coordinator so `Admin::MetricsSnapshot`/`Admin::ClusterHealth` expose
+/// cluster health over the wire.
+#[derive(Default)]
+pub struct ClusterMetrics {
+    pub shards: Vec<ShardCounters>,
+}
+
+impl ClusterMetrics {
+    /// Build from the deployed layout: `(out_row_start, out_rows, replica
+    /// addresses)` per shard, in row order.
+    pub fn new(layout: &[(usize, usize, Vec<String>)]) -> ClusterMetrics {
+        ClusterMetrics {
+            shards: layout
+                .iter()
+                .map(|(start, rows, addrs)| ShardCounters::new(*start, *rows, addrs))
+                .collect(),
+        }
+    }
+
+    /// Worst health across shards (`Healthy` when there are no shards).
+    pub fn worst_health(&self) -> ShardHealth {
+        self.shards
+            .iter()
+            .map(|s| s.health())
+            .max_by_key(|h| *h as usize)
+            .unwrap_or(ShardHealth::Healthy)
+    }
+
+    /// Machine-readable snapshot (folded into [`Metrics::snapshot`]).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("health", Json::Str(self.worst_health().name().to_string())),
+            ("shards", Json::Arr(self.shards.iter().map(ShardCounters::snapshot).collect())),
+        ])
+    }
+}
+
+/// Histogram snapshot shared by the per-pool and per-shard views.
+fn hist_json(h: &LatencyHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean_us", Json::Num(h.mean_us())),
+        ("p50_us", Json::Num(h.percentile_us(0.5) as f64)),
+        ("p99_us", Json::Num(h.percentile_us(0.99) as f64)),
+        ("max_us", Json::Num(h.max_us() as f64)),
+    ])
 }
 
 /// Serving metrics for one worker.
@@ -198,10 +379,14 @@ pub struct Metrics {
     /// Device re-bias operations (2×2 scheduler and `Reprogram` jobs).
     pub reconfigs: AtomicU64,
     /// Per-job-kind admission counters, indexed by [`JobKind`] wire order.
-    pub jobs: [KindCounters; 5],
+    pub jobs: [KindCounters; 6],
     /// Network-transport counters (shared by every front end over this
     /// pool; zero when serving is purely in-process).
     pub transport: TransportCounters,
+    /// Cluster serving metrics, installed when this pool fronts a
+    /// [`crate::coordinator::sharded::ShardedProcessor`] (absent for
+    /// single-process pools).
+    cluster: Mutex<Option<Arc<ClusterMetrics>>>,
 }
 
 impl Metrics {
@@ -232,6 +417,29 @@ impl Metrics {
     /// A job was shed at admission (bounded queue full).
     pub fn record_rejected(&self, kind: JobKind) {
         self.job(kind).rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Install (or replace) the cluster metrics this pool reports.
+    pub fn install_cluster(&self, cluster: Arc<ClusterMetrics>) {
+        *self.cluster.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(cluster);
+    }
+
+    /// The installed cluster metrics, if this pool fronts a cluster.
+    pub fn cluster(&self) -> Option<Arc<ClusterMetrics>> {
+        self.cluster.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+    }
+
+    /// Cluster snapshot for the admin plane: the installed
+    /// [`ClusterMetrics::snapshot`], or an empty-shard-list document for
+    /// single-process pools (so the reply shape is stable).
+    pub fn cluster_snapshot(&self) -> Json {
+        match self.cluster() {
+            Some(c) => c.snapshot(),
+            None => Json::obj(vec![
+                ("health", Json::Str(ShardHealth::Healthy.name().to_string())),
+                ("shards", Json::Arr(Vec::new())),
+            ]),
+        }
     }
 
     /// Mean requests per batch.
@@ -289,15 +497,6 @@ impl Metrics {
 
     /// Machine-readable snapshot (the wire-facing metrics view).
     pub fn snapshot(&self) -> Json {
-        fn hist(h: &LatencyHistogram) -> Json {
-            Json::obj(vec![
-                ("count", Json::Num(h.count() as f64)),
-                ("mean_us", Json::Num(h.mean_us())),
-                ("p50_us", Json::Num(h.percentile_us(0.5) as f64)),
-                ("p99_us", Json::Num(h.percentile_us(0.99) as f64)),
-                ("max_us", Json::Num(h.max_us() as f64)),
-            ])
-        }
         let jobs: std::collections::BTreeMap<String, Json> = JobKind::ALL
             .iter()
             .map(|&k| {
@@ -320,9 +519,10 @@ impl Metrics {
             ("reconfigs", Json::Num(self.reconfigs.load(Ordering::Relaxed) as f64)),
             ("jobs", Json::Obj(jobs)),
             ("transport", self.transport.snapshot()),
-            ("latency", hist(&self.latency)),
-            ("queue", hist(&self.queue)),
-            ("exec", hist(&self.exec)),
+            ("cluster", self.cluster_snapshot()),
+            ("latency", hist_json(&self.latency)),
+            ("queue", hist_json(&self.queue)),
+            ("exec", hist_json(&self.exec)),
         ])
     }
 }
@@ -395,7 +595,64 @@ mod tests {
     #[test]
     fn job_kind_names_are_wire_stable() {
         let names: Vec<&str> = JobKind::ALL.iter().map(|k| k.name()).collect();
-        assert_eq!(names, vec!["infer", "classify", "raw_apply", "reprogram", "compile"]);
+        assert_eq!(
+            names,
+            vec!["infer", "classify", "raw_apply", "reprogram", "compile", "shard_compile"]
+        );
+    }
+
+    #[test]
+    fn shard_health_follows_the_replica_map() {
+        let addrs = vec!["a:1".to_string(), "b:2".to_string()];
+        let s = ShardCounters::new(4, 8, &addrs);
+        assert_eq!(s.health(), ShardHealth::Healthy);
+        s.replicas[0].set_up(false);
+        assert_eq!(s.health(), ShardHealth::Degraded);
+        s.replicas[1].set_up(false);
+        assert_eq!(s.health(), ShardHealth::Lost);
+        s.replicas[0].set_up(true);
+        assert_eq!(s.health(), ShardHealth::Degraded, "re-probe revival degrades, not loses");
+        // A shard with no replicas at all can never serve.
+        assert_eq!(ShardCounters::new(0, 4, &[]).health(), ShardHealth::Lost);
+    }
+
+    #[test]
+    fn cluster_metrics_install_and_fold_into_snapshot() {
+        let m = Metrics::default();
+        // Single-process pools report an empty, healthy cluster section.
+        let back = crate::util::json::parse(&m.snapshot().to_string_pretty()).unwrap();
+        let c = back.get("cluster").expect("cluster section always present");
+        assert_eq!(c.get("health").and_then(Json::as_str), Some("healthy"));
+        assert_eq!(c.get("shards").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
+        // Install a two-shard cluster, trip one replica.
+        let cm = Arc::new(ClusterMetrics::new(&[
+            (0, 6, vec!["a:1".into(), "b:2".into()]),
+            (6, 6, vec!["c:3".into()]),
+        ]));
+        cm.shards[0].replicas[1].set_up(false);
+        cm.shards[0].retries.fetch_add(2, Ordering::Relaxed);
+        cm.shards[0].failovers.fetch_add(1, Ordering::Relaxed);
+        cm.shards[0].scatter.record(120);
+        cm.shards[0].gather.record(340);
+        m.install_cluster(cm.clone());
+        assert_eq!(cm.worst_health(), ShardHealth::Degraded);
+        let back = crate::util::json::parse(&m.snapshot().to_string_pretty()).unwrap();
+        let c = back.get("cluster").expect("cluster section");
+        assert_eq!(c.get("health").and_then(Json::as_str), Some("degraded"));
+        let shards = c.get("shards").and_then(Json::as_arr).expect("shard list");
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("health").and_then(Json::as_str), Some("degraded"));
+        assert_eq!(shards[0].get("retries").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(shards[0].get("failovers").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            shards[0].get("scatter").and_then(|h| h.get("count")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(shards[1].get("out_row_start").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(shards[1].get("health").and_then(Json::as_str), Some("healthy"));
+        let reps = shards[0].get("replicas").and_then(Json::as_arr).expect("replica map");
+        assert_eq!(reps[0].get("addr").and_then(Json::as_str), Some("a:1"));
+        assert_eq!(reps[1].get("up"), Some(&Json::Bool(false)));
     }
 
     #[test]
@@ -406,6 +663,7 @@ mod tests {
         m.transport.frames_in.fetch_add(9, Ordering::Relaxed);
         m.transport.frames_out.fetch_add(8, Ordering::Relaxed);
         m.transport.decode_rejects.fetch_add(2, Ordering::Relaxed);
+        m.transport.auth_rejects.fetch_add(4, Ordering::Relaxed);
         let snap = m.snapshot();
         let back = crate::util::json::parse(&snap.to_string_pretty()).expect("valid JSON");
         let t = back.get("transport").expect("transport section");
@@ -414,6 +672,7 @@ mod tests {
         assert_eq!(t.get("frames_in").and_then(Json::as_f64), Some(9.0));
         assert_eq!(t.get("frames_out").and_then(Json::as_f64), Some(8.0));
         assert_eq!(t.get("decode_rejects").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(t.get("auth_rejects").and_then(Json::as_f64), Some(4.0));
         // The compile kind is accounted like every other job kind.
         m.record_submitted(JobKind::Compile);
         m.record_served(JobKind::Compile);

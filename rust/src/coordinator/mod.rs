@@ -27,6 +27,13 @@
 //!   [`crate::util::json`] wire form ([`service::WIRE_VERSION`], v3; v2
 //!   decodes through [`service::compat`]).
 //!
+//! Cluster-scale serving (PR 7) layers on top of the wire path:
+//! [`sharded::ShardedProcessor`] scatters batches across remote nodes
+//! (each serving one row-shard compiled via `Job::ShardCompile`), gathers
+//! by row placement — bit-identical to a single-process compile — and
+//! fails over across replicas; [`metrics::ClusterMetrics`] tracks
+//! per-shard health for the admin plane's `cluster_health` verb.
+//!
 //! The supporting machinery keeps its own modules: dynamic batching
 //! ([`batcher`]) coalesces MNIST infer jobs into single
 //! `apply_batch` GEMMs; the per-state scheduler ([`scheduler`]) groups 2×2
@@ -43,4 +50,5 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod service;
+pub mod sharded;
 pub mod transport;

@@ -104,6 +104,10 @@ pub enum Admin {
     MetricsSnapshot,
     /// Liveness + registry size + shutdown state.
     Health,
+    /// Per-shard cluster health (replica up/down map, retry/failover
+    /// counters) when this process coordinates a sharded fleet; an empty
+    /// healthy report otherwise.
+    ClusterHealth,
     /// Ask the serving process to stop accepting connections and exit its
     /// accept loop. Replies [`AdminReply::ShuttingDown`] first.
     Shutdown,
@@ -116,6 +120,7 @@ impl Admin {
             Admin::ListProcessors => "list_processors",
             Admin::MetricsSnapshot => "metrics_snapshot",
             Admin::Health => "health",
+            Admin::ClusterHealth => "cluster_health",
             Admin::Shutdown => "shutdown",
         }
     }
@@ -126,6 +131,7 @@ impl Admin {
             "list_processors" => Some(Admin::ListProcessors),
             "metrics_snapshot" => Some(Admin::MetricsSnapshot),
             "health" => Some(Admin::Health),
+            "cluster_health" => Some(Admin::ClusterHealth),
             "shutdown" => Some(Admin::Shutdown),
             _ => None,
         }
@@ -173,6 +179,9 @@ pub enum AdminReply {
     Metrics(Json),
     /// Liveness report.
     Health { status: String, processors: u64, shutting_down: bool },
+    /// The cluster-health document (see
+    /// [`ClusterMetrics::snapshot`](crate::coordinator::metrics::ClusterMetrics)).
+    Cluster(Json),
     /// Shutdown acknowledged; the accept loop exits after this reply.
     ShuttingDown,
 }
@@ -235,6 +244,10 @@ impl AdminReply {
                 fields.push(("processors", Json::Num(*processors as f64)));
                 fields.push(("shutting_down", Json::Bool(*shutting_down)));
             }
+            AdminReply::Cluster(snapshot) => {
+                fields.push(("reply", Json::Str("cluster".into())));
+                fields.push(("cluster", snapshot.clone()));
+            }
             AdminReply::ShuttingDown => {
                 fields.push(("reply", Json::Str("shutting_down".into())));
             }
@@ -270,6 +283,11 @@ impl AdminReply {
                 processors: get_index(v, "processors")?,
                 shutting_down: matches!(v.get("shutting_down"), Some(Json::Bool(true))),
             }),
+            "cluster" => Ok(AdminReply::Cluster(
+                v.get("cluster")
+                    .cloned()
+                    .ok_or_else(|| Error::msg("wire: missing field 'cluster'"))?,
+            )),
             "shutting_down" => Ok(AdminReply::ShuttingDown),
             other => Err(Error::msg(format!("wire: unknown admin reply '{other}'"))),
         }
@@ -375,6 +393,9 @@ impl Router {
                 processors: self.svc.pool().count() as u64,
                 shutting_down: self.shutdown_requested(),
             },
+            Admin::ClusterHealth => {
+                AdminReply::Cluster(self.svc.metrics().cluster_snapshot())
+            }
             Admin::Shutdown => {
                 self.stop.store(true, Ordering::SeqCst);
                 AdminReply::ShuttingDown
@@ -567,7 +588,13 @@ mod tests {
     fn admin_round_trips_and_shutdown_sets_the_flag() {
         let router = demo_router();
         // Every admin request round-trips its wire form.
-        for a in [Admin::ListProcessors, Admin::MetricsSnapshot, Admin::Health, Admin::Shutdown] {
+        for a in [
+            Admin::ListProcessors,
+            Admin::MetricsSnapshot,
+            Admin::Health,
+            Admin::ClusterHealth,
+            Admin::Shutdown,
+        ] {
             assert_eq!(Admin::decode(&a.encode()).unwrap(), a);
         }
         match router.admin_wire(Admin::ListProcessors.encode().as_bytes()).unwrap() {
@@ -587,6 +614,16 @@ mod tests {
         }
         match router.admin(Admin::MetricsSnapshot) {
             AdminReply::Metrics(snap) => assert!(snap.get("transport").is_some()),
+            other => panic!("unexpected {other:?}"),
+        }
+        // No sharded coordinator installed: cluster health is the empty
+        // healthy report, and the reply round-trips its wire form.
+        match router.admin(Admin::ClusterHealth) {
+            AdminReply::Cluster(snap) => {
+                assert_eq!(snap.get("health").and_then(Json::as_str), Some("healthy"));
+                let reply = AdminReply::Cluster(snap);
+                assert_eq!(AdminReply::decode(&reply.encode()).unwrap(), reply);
+            }
             other => panic!("unexpected {other:?}"),
         }
         assert!(!router.shutdown_requested());

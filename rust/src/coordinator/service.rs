@@ -48,7 +48,7 @@ use super::batcher::{drain_ready, next_batch, BatchPolicy};
 use super::metrics::{JobKind, Metrics};
 use super::scheduler::{SchedulerPolicy, StateScheduler};
 use super::server::{Backend, MnistExecutor, ModelBundle};
-use crate::compiler::{Compiler, PlanSpec, TileGrid, VirtualProcessor};
+use crate::compiler::{Calibration, Compiler, PlanSpec, ShardSpec, TileGrid, VirtualProcessor};
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::microwave::phase_shifter::N_STATES;
@@ -96,6 +96,15 @@ pub enum Job {
     /// with [`JobResult::Compiled`] carrying the plan summary. New in
     /// wire version 3.
     Compile { name: String, target: CMat, tile: usize, fidelity: Fidelity },
+    /// Compile one tile-row shard of a larger plan — the cluster deploy
+    /// path. `spec` carries the *global* geometry (full dims, fabrication
+    /// seed, calibration rule, tile-row offset) plus this node's row
+    /// slice, so the registered shard processor realizes rows
+    /// bit-identical to the same rows of the single-process plan (see
+    /// [`crate::compiler::shard`]). Answered with
+    /// [`JobResult::ShardCompiled`]. New in wire version 3
+    /// (cluster-only: refused in v2 documents).
+    ShardCompile { name: String, spec: ShardSpec },
 }
 
 impl Job {
@@ -107,18 +116,19 @@ impl Job {
             Job::RawApply { .. } => JobKind::RawApply,
             Job::Reprogram { .. } => JobKind::Reprogram,
             Job::Compile { .. } => JobKind::Compile,
+            Job::ShardCompile { .. } => JobKind::ShardCompile,
         }
     }
 
-    /// The pooled processor this job is addressed to (for `Compile`: the
-    /// name the new processor will register under).
+    /// The pooled processor this job is addressed to (for `Compile` and
+    /// `ShardCompile`: the name the new processor will register under).
     pub fn processor(&self) -> &str {
         match self {
             Job::Infer { processor, .. }
             | Job::Classify { processor, .. }
             | Job::RawApply { processor, .. }
             | Job::Reprogram { processor, .. } => processor,
-            Job::Compile { name, .. } => name,
+            Job::Compile { name, .. } | Job::ShardCompile { name, .. } => name,
         }
     }
 
@@ -163,6 +173,24 @@ impl Job {
                 fields.push(("tile", Json::Num(*tile as f64)));
                 fields.push(("fidelity", Json::Str(fidelity.name().to_string())));
             }
+            Job::ShardCompile { name, spec } => {
+                // `rows`/`cols` are the GLOBAL dims; `re`/`im` carry only
+                // this shard's row slice (its height is derived from the
+                // geometry at decode — never trusted as a separate field).
+                let re: Vec<f64> = spec.target.data().iter().map(|z| z.re).collect();
+                let im: Vec<f64> = spec.target.data().iter().map(|z| z.im).collect();
+                fields.push(("name", Json::Str(name.clone())));
+                fields.push(("rows", Json::Num(spec.rows as f64)));
+                fields.push(("cols", Json::Num(spec.cols as f64)));
+                fields.push(("tile", Json::Num(spec.tile as f64)));
+                fields.push(("fidelity", Json::Str(spec.fidelity.name().to_string())));
+                fields.push(("seed", Json::Num(spec.measured_seed as f64)));
+                fields.push(("calibration", Json::Str(spec.calibration.name().to_string())));
+                fields.push(("row_start", Json::Num(spec.row_start as f64)));
+                fields.push(("grid_rows", Json::Num(spec.grid_rows as f64)));
+                fields.push(("re", Json::nums(&re)));
+                fields.push(("im", Json::nums(&im)));
+            }
         }
         Json::obj(fields)
     }
@@ -190,6 +218,51 @@ impl Job {
             let fidelity = Fidelity::from_name(fid)
                 .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?;
             return Ok(Job::Compile { name, target, tile, fidelity });
+        }
+        if kind == "shard_compile" {
+            let name = get_str(v, "name")?.to_string();
+            let rows = get_index(v, "rows")? as usize;
+            let cols = get_index(v, "cols")? as usize;
+            let tile = get_index(v, "tile")? as usize;
+            let fid = get_str(v, "fidelity")?;
+            let fidelity = Fidelity::from_name(fid)
+                .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?;
+            let cal = get_str(v, "calibration")?;
+            let calibration = Calibration::from_name(cal)
+                .ok_or_else(|| Error::msg(format!("wire: unknown calibration '{cal}'")))?;
+            let measured_seed = get_index(v, "seed")?;
+            let row_start = get_index(v, "row_start")? as usize;
+            let grid_rows = get_index(v, "grid_rows")? as usize;
+            // The slice height is derived from the global geometry, so a
+            // document cannot claim one shape and ship another; full
+            // consistency (valid tile size, in-grid row range) is enforced
+            // by `ShardSpec::validate` at execution time.
+            let start = row_start
+                .checked_mul(tile)
+                .ok_or_else(|| Error::msg("wire: shard geometry overflows"))?;
+            let end = row_start
+                .checked_add(grid_rows)
+                .and_then(|e| e.checked_mul(tile))
+                .ok_or_else(|| Error::msg("wire: shard geometry overflows"))?;
+            let slice_rows = rows.min(end).saturating_sub(start);
+            if slice_rows == 0 {
+                return Err(Error::msg("wire: shard owns no output rows"));
+            }
+            let target = cmat_from_parts(v, slice_rows, cols)?;
+            return Ok(Job::ShardCompile {
+                name,
+                spec: ShardSpec {
+                    rows,
+                    cols,
+                    tile,
+                    fidelity,
+                    measured_seed,
+                    calibration,
+                    row_start,
+                    grid_rows,
+                    target,
+                },
+            });
         }
         decode_legacy_job(kind, v)
     }
@@ -232,6 +305,30 @@ pub enum JobResult {
         /// Programmable state variables across the whole fleet.
         state_vars: u64,
         /// Compile-time ‖assembled − target‖_F (the documented band).
+        fro_error: f64,
+        /// Whether the plan's recipes came from the shared plan cache.
+        cache_hit: bool,
+    },
+    /// A `ShardCompile` job landed: the plan summary of the shard worker
+    /// now registered under `name`. Mirrors [`JobResult::Compiled`] but
+    /// reports the shard's *output-row placement* so the coordinator can
+    /// check its gather map against what the node actually serves. New in
+    /// wire version 3.
+    ShardCompiled {
+        name: String,
+        /// Pool version of the freshly registered processor (always 1).
+        version: u64,
+        /// First global output row this shard produces (`row_start · T`).
+        out_row_start: u64,
+        /// Number of global output rows this shard produces.
+        out_rows: u64,
+        /// Local tile-grid shape `(grid_rows, ⌈N/T⌉)` of the shard plan.
+        grid: (u64, u64),
+        tile: u64,
+        fidelity: Fidelity,
+        /// Programmable state variables across the shard's tile fleet.
+        state_vars: u64,
+        /// Compile-time ‖assembled − slice‖_F for this shard's rows.
         fro_error: f64,
         /// Whether the plan's recipes came from the shared plan cache.
         cache_hit: bool,
@@ -297,6 +394,31 @@ impl JobResult {
                 fields.push(("fro_error", Json::Num(*fro_error)));
                 fields.push(("cache_hit", Json::Bool(*cache_hit)));
             }
+            JobResult::ShardCompiled {
+                name,
+                version,
+                out_row_start,
+                out_rows,
+                grid,
+                tile,
+                fidelity,
+                state_vars,
+                fro_error,
+                cache_hit,
+            } => {
+                fields.push(("kind", Json::Str("shard_compiled".into())));
+                fields.push(("name", Json::Str(name.clone())));
+                fields.push(("version", Json::Num(*version as f64)));
+                fields.push(("out_row_start", Json::Num(*out_row_start as f64)));
+                fields.push(("out_rows", Json::Num(*out_rows as f64)));
+                fields.push(("grid_rows", Json::Num(grid.0 as f64)));
+                fields.push(("grid_cols", Json::Num(grid.1 as f64)));
+                fields.push(("tile", Json::Num(*tile as f64)));
+                fields.push(("fidelity", Json::Str(fidelity.name().to_string())));
+                fields.push(("state_vars", Json::Num(*state_vars as f64)));
+                fields.push(("fro_error", Json::Num(*fro_error)));
+                fields.push(("cache_hit", Json::Bool(*cache_hit)));
+            }
             JobResult::Rejected { reason } => {
                 fields.push(("kind", Json::Str("rejected".into())));
                 fields.push(("reason", Json::Str(reason.clone())));
@@ -323,6 +445,22 @@ impl JobResult {
             return Ok(JobResult::Compiled {
                 name: get_str(v, "name")?.to_string(),
                 version: get_index(v, "version")?,
+                grid: (get_index(v, "grid_rows")?, get_index(v, "grid_cols")?),
+                tile: get_index(v, "tile")?,
+                fidelity: Fidelity::from_name(fid)
+                    .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?,
+                state_vars: get_index(v, "state_vars")?,
+                fro_error: get_f64(v, "fro_error")?,
+                cache_hit: matches!(v.get("cache_hit"), Some(Json::Bool(true))),
+            });
+        }
+        if kind == "shard_compiled" {
+            let fid = get_str(v, "fidelity")?;
+            return Ok(JobResult::ShardCompiled {
+                name: get_str(v, "name")?.to_string(),
+                version: get_index(v, "version")?,
+                out_row_start: get_index(v, "out_row_start")?,
+                out_rows: get_index(v, "out_rows")?,
                 grid: (get_index(v, "grid_rows")?, get_index(v, "grid_cols")?),
                 tile: get_index(v, "tile")?,
                 fidelity: Fidelity::from_name(fid)
@@ -428,9 +566,10 @@ fn decode_legacy_result(kind: &str, v: &Json) -> Result<JobResult> {
 /// * The four v2 job kinds (`infer` / `classify` / `raw_apply` /
 ///   `reprogram`) and five v2 result kinds decode **identically** under
 ///   v2 and v3 — the field schema did not change, only the version tag.
-/// * v3-only kinds (`compile` / `compiled`) are **refused** in a v2
-///   document: a v2 peer never produced them, so their appearance means
-///   a version-spoofed or corrupt document.
+/// * v3-only kinds (`compile` / `compiled` / `shard_compile` /
+///   `shard_compiled`) are **refused** in a v2 document: a v2 peer never
+///   produced them, so their appearance means a version-spoofed or
+///   corrupt document.
 /// * Encoders never emit v2; replies to a v2 client are v3 documents
 ///   (clients gate on `v` themselves, exactly as this decoder does).
 /// * Any other version (1, 4, …) is refused outright.
@@ -444,10 +583,10 @@ pub mod compat {
     /// here from [`Job::from_json`]).
     pub fn job_from_v2(v: &Json) -> Result<Job> {
         let kind = get_str(v, "kind")?;
-        if kind == "compile" {
-            return Err(Error::msg(
-                "wire: 'compile' jobs require wire version 3 (document claims v2)",
-            ));
+        if kind == "compile" || kind == "shard_compile" {
+            return Err(Error::msg(format!(
+                "wire: '{kind}' jobs require wire version 3 (document claims v2)",
+            )));
         }
         decode_legacy_job(kind, v)
     }
@@ -455,10 +594,10 @@ pub mod compat {
     /// Decode a v2 result document.
     pub fn result_from_v2(v: &Json) -> Result<JobResult> {
         let kind = get_str(v, "kind")?;
-        if kind == "compiled" {
-            return Err(Error::msg(
-                "wire: 'compiled' results require wire version 3 (document claims v2)",
-            ));
+        if kind == "compiled" || kind == "shard_compiled" {
+            return Err(Error::msg(format!(
+                "wire: '{kind}' results require wire version 3 (document claims v2)",
+            )));
         }
         decode_legacy_result(kind, v)
     }
@@ -694,6 +833,14 @@ pub enum Workload {
         fidelity: Fidelity,
         mnist: Option<ModelBundle>,
     },
+    /// One horizontal slice of a cluster-sharded target: the worker
+    /// compiles the shard's row slice with its **global** tile indices
+    /// (see [`ShardSpec`]) and serves `RawApply` over the slice. The
+    /// coordinator's `ShardedProcessor` scatters batches to these workers
+    /// and gathers by row placement, so the served rows must be
+    /// bit-identical to the same rows of an unsharded compile — pinned by
+    /// `shard_workload_rows_match_the_full_compile` below.
+    Shard(ShardSpec),
 }
 
 impl Workload {
@@ -710,6 +857,7 @@ impl Workload {
                 }
                 kinds
             }
+            Workload::Shard(_) => vec![JobKind::RawApply, JobKind::Reprogram],
         }
     }
 
@@ -720,6 +868,7 @@ impl Workload {
             Workload::Classify2x2(_) => (2, 2),
             Workload::Processor(p) => p.dims(),
             Workload::Virtual { target, .. } => (target.rows(), target.cols()),
+            Workload::Shard(spec) => (spec.out_rows(), spec.cols),
         }
     }
 
@@ -732,24 +881,29 @@ impl Workload {
             Workload::Classify2x2(_) => Fidelity::Ideal,
             Workload::Processor(p) => p.fidelity(),
             Workload::Virtual { fidelity, .. } => *fidelity,
+            Workload::Shard(spec) => spec.fidelity,
         }
     }
 
     /// Registration-time validation (errors surface at `register`, not
     /// inside the worker thread).
     fn validate(&self) -> Result<()> {
-        if let Workload::Virtual { target, tile, mnist, .. } = self {
-            TileGrid::new(target.rows(), target.cols(), *tile)?;
-            if let Some(bundle) = mnist {
-                if (target.rows(), target.cols()) != (bundle.n, bundle.n) {
-                    return Err(Error::msg(format!(
-                        "virtual MNIST hidden stage must be {0}×{0} (target is {1}×{2})",
-                        bundle.n,
-                        target.rows(),
-                        target.cols()
-                    )));
+        match self {
+            Workload::Virtual { target, tile, mnist, .. } => {
+                TileGrid::new(target.rows(), target.cols(), *tile)?;
+                if let Some(bundle) = mnist {
+                    if (target.rows(), target.cols()) != (bundle.n, bundle.n) {
+                        return Err(Error::msg(format!(
+                            "virtual MNIST hidden stage must be {0}×{0} (target is {1}×{2})",
+                            bundle.n,
+                            target.rows(),
+                            target.cols()
+                        )));
+                    }
                 }
             }
+            Workload::Shard(spec) => spec.validate()?,
+            _ => {}
         }
         Ok(())
     }
@@ -976,12 +1130,13 @@ impl ProcessorService {
     }
 
     /// Submit a job. Never blocks: a full admission queue returns
-    /// [`SubmitError::Overloaded`] immediately. `Compile` jobs are
-    /// control-plane: they bypass the worker registry, run the tiling
-    /// compiler on a dedicated thread, and register the resulting
-    /// virtual processor into the live pool before answering.
+    /// [`SubmitError::Overloaded`] immediately. `Compile` and
+    /// `ShardCompile` jobs are control-plane: they bypass the worker
+    /// registry, run the tiling compiler on a dedicated thread, and
+    /// register the resulting processor into the live pool before
+    /// answering.
     pub fn submit(&self, job: Job) -> Result<Ticket, SubmitError> {
-        if matches!(job, Job::Compile { .. }) {
+        if matches!(job, Job::Compile { .. } | Job::ShardCompile { .. }) {
             return self.submit_compile(job);
         }
         let kind = job.kind();
@@ -1019,41 +1174,45 @@ impl ProcessorService {
         }
     }
 
-    /// The `Compile` control-plane lane: compile `target` onto a tile
-    /// fleet (through the shared plan cache) and register the virtual
-    /// processor under the requested name. Compilation errors come back
-    /// as [`JobResult::Rejected`] on the ticket; admission itself is
-    /// bounded like the data plane — more than [`MAX_INFLIGHT_COMPILES`]
-    /// concurrent compiles shed with [`SubmitError::Overloaded`], so a
-    /// wire peer can never spawn unbounded synthesis work. The counters
-    /// keep the `submitted = served + rejected` invariant.
+    /// The `Compile` / `ShardCompile` control-plane lane: compile the
+    /// target (or shard slice) onto a tile fleet through the shared plan
+    /// cache and register the processor under the requested name.
+    /// Compilation errors come back as [`JobResult::Rejected`] on the
+    /// ticket; admission itself is bounded like the data plane — more
+    /// than [`MAX_INFLIGHT_COMPILES`] concurrent compiles shed with
+    /// [`SubmitError::Overloaded`], so a wire peer can never spawn
+    /// unbounded synthesis work. The counters keep the
+    /// `submitted = served + rejected` invariant.
     fn submit_compile(&self, job: Job) -> Result<Ticket, SubmitError> {
-        let kind = JobKind::Compile;
+        let kind = job.kind();
         let metrics = self.pool.metrics.clone();
         metrics.record_submitted(kind);
-        let Job::Compile { name, target, tile, fidelity } = job else {
-            unreachable!("submit_compile is only called with Job::Compile");
-        };
         let inflight = self.compiles_inflight.clone();
         if inflight.fetch_add(1, Ordering::SeqCst) >= MAX_INFLIGHT_COMPILES {
             inflight.fetch_sub(1, Ordering::SeqCst);
             metrics.record_rejected(kind);
             return Err(SubmitError::Overloaded {
-                processor: name,
+                processor: job.processor().to_string(),
                 capacity: MAX_INFLIGHT_COMPILES,
             });
         }
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let processor = name.clone();
+        let processor = job.processor().to_string();
         let pool = self.pool.clone();
         std::thread::spawn(move || {
             // A synthesis panic must not leak the inflight slot (which
             // would permanently shrink the compile plane) nor break the
             // submitted = served + rejected invariant: catch it and
             // answer as a rejection.
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                compile_and_register(&pool, &name, target, tile, fidelity)
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match job {
+                Job::Compile { name, target, tile, fidelity } => {
+                    compile_and_register(&pool, &name, target, tile, fidelity)
+                }
+                Job::ShardCompile { name, spec } => {
+                    shard_compile_and_register(&pool, &name, spec)
+                }
+                _ => unreachable!("submit_compile is only called with compile-kind jobs"),
             }))
             .unwrap_or_else(|_| JobResult::Rejected {
                 reason: "compile: synthesis panicked (see server log)".to_string(),
@@ -1131,6 +1290,53 @@ fn compile_and_register(
     }
 }
 
+/// Execute one `ShardCompile` job: validate the shard geometry, compile
+/// the row slice with its global tile indices through the shared plan
+/// cache, register the shard worker into the live pool (its startup
+/// recompile is a cache hit), and report the placement summary.
+fn shard_compile_and_register(pool: &ProcessorPool, name: &str, spec: ShardSpec) -> JobResult {
+    if name.is_empty() {
+        return JobResult::Rejected {
+            reason: "shard_compile: processor name must be non-empty".into(),
+        };
+    }
+    // Same NaN/null totality note as `compile_and_register`.
+    if !spec.target.is_finite() {
+        return JobResult::Rejected {
+            reason: "shard_compile: weight matrix contains non-finite entries".into(),
+        };
+    }
+    if let Err(e) = spec.validate() {
+        return JobResult::Rejected { reason: format!("shard_compile: {e}") };
+    }
+    if pool.info(name).is_some() {
+        return JobResult::Rejected {
+            reason: format!("shard_compile: processor '{name}' already registered"),
+        };
+    }
+    let plan = match spec.compile() {
+        Ok(p) => p,
+        Err(e) => return JobResult::Rejected { reason: format!("shard_compile: {e}") },
+    };
+    let (gr, gc) = plan.grid.grid();
+    let summary = JobResult::ShardCompiled {
+        name: name.to_string(),
+        version: 1,
+        out_row_start: spec.out_row_start() as u64,
+        out_rows: spec.out_rows() as u64,
+        grid: (gr as u64, gc as u64),
+        tile: spec.tile as u64,
+        fidelity: spec.fidelity,
+        state_vars: plan.cost.state_vars as u64,
+        fro_error: plan.fro_error,
+        cache_hit: plan.cache_hit,
+    };
+    match pool.register(name, Workload::Shard(spec), PoolConfig::default()) {
+        Ok(()) => summary,
+        Err(e) => JobResult::Rejected { reason: format!("shard_compile: {e}") },
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Built-in workers
 // ---------------------------------------------------------------------------
@@ -1148,6 +1354,42 @@ fn run_workload(
         Workload::Processor(p) => processor_worker(rx, p, shared, metrics, cfg),
         Workload::Virtual { target, tile, fidelity, mnist } => {
             virtual_worker(rx, target, tile, fidelity, mnist, shared, metrics, cfg)
+        }
+        Workload::Shard(spec) => shard_worker(rx, spec, shared, metrics, cfg),
+    }
+}
+
+/// The shard worker: recompiles the shard's row slice at its global tile
+/// offset (a plan-cache hit after `shard_compile_and_register` paid for
+/// synthesis) and serves `RawApply`/`Reprogram` against the resulting
+/// [`VirtualProcessor`], exactly like the tiled worker but over a slice.
+fn shard_worker(
+    rx: Receiver<JobHandle>,
+    spec: ShardSpec,
+    shared: Arc<WorkerShared>,
+    metrics: Arc<Metrics>,
+    cfg: PoolConfig,
+) {
+    let mut vp = match spec.compile() {
+        Ok(plan) => VirtualProcessor::new(plan),
+        Err(e) => {
+            // Unreachable after registration-time validation; drain
+            // defensively so tickets error out with a reason, not a hang.
+            let reason = format!("shard compilation failed: {e}");
+            while let Ok(h) = rx.recv() {
+                h.respond(JobResult::Rejected { reason: reason.clone() });
+            }
+            return;
+        }
+    };
+    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+        for h in handles {
+            if let Job::Reprogram { code, .. } = &h.job {
+                let result = reprogram(&mut vp, &shared, &metrics, code);
+                h.respond(result);
+            } else {
+                serve_raw(&vp, &metrics, h);
+            }
         }
     }
 }
@@ -1373,16 +1615,23 @@ fn serve_raw(p: &dyn LinearProcessor, metrics: &Metrics, h: JobHandle) {
                 }
             } else {
                 let t0 = Instant::now();
-                let y = p.apply_batch(x);
-                let exec_us = t0.elapsed().as_micros() as u64;
-                // One dispatch of B vectors: occupancy = B (≥ 1 so the
-                // zero-column probe still counts as a dispatch).
-                let b = x.cols().max(1);
-                metrics.record_batch(b, b, exec_us);
-                let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
-                metrics.queue.record(queued_us);
-                metrics.latency.record(queued_us + exec_us);
-                JobResult::RawApply { y }
+                // The fallible entry so a backend whose execution can fail
+                // at runtime (a sharded processor with unreachable nodes)
+                // rejects the job instead of killing the worker thread.
+                match p.try_apply_batch(x) {
+                    Ok(y) => {
+                        let exec_us = t0.elapsed().as_micros() as u64;
+                        // One dispatch of B vectors: occupancy = B (≥ 1 so
+                        // the zero-column probe still counts as a dispatch).
+                        let b = x.cols().max(1);
+                        metrics.record_batch(b, b, exec_us);
+                        let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
+                        metrics.queue.record(queued_us);
+                        metrics.latency.record(queued_us + exec_us);
+                        JobResult::RawApply { y }
+                    }
+                    Err(e) => JobResult::Rejected { reason: format!("raw_apply: {e}") },
+                }
             }
         }
         _ => JobResult::Rejected {
@@ -1904,5 +2153,62 @@ mod tests {
         assert_eq!(m.job(JobKind::Compile).submitted.load(Ordering::Relaxed), 4);
         assert_eq!(m.job(JobKind::Compile).served.load(Ordering::Relaxed), 4);
         assert_eq!(m.job(JobKind::Compile).rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shard_workload_rows_match_the_full_compile() {
+        use crate::compiler::plan_shards;
+        use crate::math::rng::Rng;
+        // Measured fidelity is the hard case: recipes depend on global
+        // tile indices, so any index-offset bug in the shard path shows
+        // up as a row mismatch here.
+        let mut rng = Rng::new(0x5A4D);
+        let target = CMat::from_fn(10, 8, |_, _| C64::new(rng.normal(), rng.normal()));
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        let shards = plan_shards(&target, &spec, 3).unwrap();
+        let pool = ProcessorPool::new();
+        let svc = ProcessorService::new(pool);
+        for (i, s) in shards.iter().enumerate() {
+            let r = svc
+                .submit_wait(Job::ShardCompile { name: format!("net.s{i}"), spec: s.clone() })
+                .unwrap();
+            match r {
+                JobResult::ShardCompiled { out_row_start, out_rows, tile, fidelity, .. } => {
+                    assert_eq!(out_row_start as usize, s.out_row_start(), "shard {i}");
+                    assert_eq!(out_rows as usize, s.out_rows(), "shard {i}");
+                    assert_eq!(tile, 2);
+                    assert_eq!(fidelity, Fidelity::Measured);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            let info = svc.pool().info(&format!("net.s{i}")).unwrap();
+            assert_eq!(info.dims, (s.out_rows(), 8));
+        }
+        // Gather by placement: the stacked shard responses are the full
+        // matrix, bit-identically.
+        let full = VirtualProcessor::compile(&target, &spec).unwrap();
+        let want = LinearProcessor::matrix(&full);
+        for (i, s) in shards.iter().enumerate() {
+            let y = match svc
+                .submit_wait(Job::RawApply { processor: format!("net.s{i}"), x: CMat::eye(8) })
+                .unwrap()
+            {
+                JobResult::RawApply { y } => y,
+                other => panic!("unexpected {other:?}"),
+            };
+            let slice = want.block(s.out_row_start(), 0, s.out_rows(), 8);
+            assert_eq!(y, slice, "shard {i} rows must be bit-identical to the full compile");
+        }
+        // A tampered spec (slice shape disagreeing with the geometry) is
+        // answered with Rejected, never registered.
+        let mut bad = shards[0].clone();
+        bad.grid_rows += 1;
+        match svc.submit_wait(Job::ShardCompile { name: "net.bad".into(), spec: bad }).unwrap() {
+            JobResult::Rejected { reason } => {
+                assert!(reason.contains("shard_compile"), "{reason}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(svc.pool().info("net.bad").is_none());
     }
 }

@@ -1,0 +1,625 @@
+//! `ShardedProcessor`: one logical [`LinearProcessor`] scattered across a
+//! cluster of serving nodes, with replicated failover.
+//!
+//! The cluster model (see the crate docs' *Cluster model* section):
+//!
+//! ```text
+//!   plan      plan_shards(target) → N contiguous tile-row ShardSpecs
+//!   deploy    Job::ShardCompile to every replica of every shard — each
+//!             node compiles ITS row slice at its GLOBAL tile offset and
+//!             registers a shard worker under "<name>.s<i>"
+//!   scatter   apply_batch(X): one Job::RawApply per shard, submitted to
+//!             the shard's preferred live replica (non-blocking tickets,
+//!             so shards compute concurrently)
+//!   gather    partial outputs are PLACED into disjoint row ranges
+//!             [out_row_start, out_row_start + out_rows) — never summed
+//!   failover  a transport failure or timeout trips the replica and the
+//!             job is resubmitted on the next live one; only when every
+//!             replica of a shard is exhausted does the apply fail
+//! ```
+//!
+//! **Why gather is placement, not summation — and therefore bit-exact.**
+//! The tiling executor accumulates an output row only across tile
+//! *columns*; distinct tile rows own disjoint output rows. Sharding by
+//! contiguous tile-rows therefore never splits a reduction across nodes:
+//! each shard computes its own rows with exactly the arithmetic (same
+//! tile recipes — global indices — same accumulation order, same blocked
+//! GEMM) the single-process [`VirtualProcessor`] would have used, and the
+//! coordinator merely copies rows into place. No floating-point operation
+//! happens at the gather, so `ShardedProcessor::apply_batch` equals the
+//! unsharded `VirtualProcessor::apply_batch` **bit-identically** — pinned
+//! by `sharded_apply_is_bit_identical_over_loopback` below and by the
+//! multi-process `cluster_*` integration tests.
+//!
+//! Failure semantics: a replica that fails transport (or times out) is
+//! retried on the shard's other replicas; a worker that *answers* with
+//! `Rejected` is healthy and its refusal is surfaced, not retried. A
+//! shard with no live replica fails the whole apply with an error —
+//! partial outputs are never returned, so a row is either correct or the
+//! caller sees `Err`, never a silent zero.
+
+use crate::compiler::ShardSpec;
+use crate::math::c64::C64;
+use crate::math::cmat::CMat;
+use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
+use crate::util::error::{Error, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::metrics::ClusterMetrics;
+use super::service::{Job, JobResult};
+use super::transport::{RemoteClient, RemoteTicket};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Failover tuning for one sharded coordinator.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Per-shard reply deadline; exceeding it counts as a replica failure
+    /// (the job is resubmitted on the next replica).
+    pub timeout: Duration,
+    /// Consecutive failures before a replica is tripped (taken out of the
+    /// preferred rotation).
+    pub trip_after: u32,
+    /// Cooldown before a tripped replica is re-probed with live traffic.
+    pub reprobe_every: Duration,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            timeout: Duration::from_secs(10),
+            trip_after: 1,
+            reprobe_every: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One replica endpoint of one shard. The cached [`RemoteClient`] is
+/// replaced on every transport failure — a failed client is permanently
+/// dead by design (it fails all pending tickets once), so failover always
+/// reconnects fresh.
+struct Replica {
+    addr: String,
+    client: Mutex<Option<Arc<RemoteClient>>>,
+    consecutive_failures: AtomicU32,
+    /// `Some(when)` once tripped; gates the re-probe cooldown.
+    tripped_at: Mutex<Option<Instant>>,
+}
+
+impl Replica {
+    fn new(addr: &str) -> Replica {
+        Replica {
+            addr: addr.to_string(),
+            client: Mutex::new(None),
+            consecutive_failures: AtomicU32::new(0),
+            tripped_at: Mutex::new(None),
+        }
+    }
+
+    /// The cached client, connecting (with the ambient auth token — see
+    /// [`super::transport::AUTH_TOKEN_ENV`]) when there is none.
+    fn client(&self) -> Result<Arc<RemoteClient>> {
+        let mut slot = lock(&self.client);
+        if let Some(c) = slot.as_ref() {
+            return Ok(c.clone());
+        }
+        let c = Arc::new(RemoteClient::connect(&self.addr)?);
+        *slot = Some(c.clone());
+        Ok(c)
+    }
+
+    /// Drop the cached client (it is dead or suspect).
+    fn disconnect(&self) {
+        *lock(&self.client) = None;
+    }
+}
+
+/// One shard: a row range served by ≥ 1 replicas.
+struct Shard {
+    /// Remote processor name (`"<name>.s<i>"` on every replica).
+    processor: String,
+    out_row_start: usize,
+    out_rows: usize,
+    replicas: Vec<Replica>,
+}
+
+/// A [`LinearProcessor`] whose rows live on remote shard workers.
+///
+/// Cheap to share behind `Box<dyn LinearProcessor>` in a pool: state is
+/// addresses, cached connections, and the composed matrix probed at
+/// deploy time.
+pub struct ShardedProcessor {
+    shards: Vec<Shard>,
+    dims: (usize, usize),
+    fidelity: Fidelity,
+    cfg: ShardConfig,
+    metrics: Arc<ClusterMetrics>,
+    /// Identity-probe of the composed transfer matrix, captured at
+    /// construction so [`LinearProcessor::matrix`] can hand out a
+    /// reference. The scatter/gather path never reads it.
+    matrix: CMat,
+}
+
+impl ShardedProcessor {
+    /// Deploy `specs` across the cluster and connect the coordinator.
+    ///
+    /// `replica_addrs[i]` lists the `host:port` endpoints replicating
+    /// shard `i` (every shard needs ≥ 1). Each endpoint receives a
+    /// [`Job::ShardCompile`] registering `"<name>.s<i>"`; an endpoint
+    /// that already serves that shard (a re-deploy) is accepted, so
+    /// deploys are idempotent. Construction finishes with an identity
+    /// probe through the full scatter/gather path, which both caches the
+    /// composed matrix and proves every shard serves.
+    pub fn deploy(
+        name: &str,
+        specs: &[ShardSpec],
+        replica_addrs: &[Vec<String>],
+        cfg: ShardConfig,
+    ) -> Result<ShardedProcessor> {
+        if specs.is_empty() {
+            return Err(Error::msg("sharded: no shards to deploy"));
+        }
+        if specs.len() != replica_addrs.len() {
+            return Err(Error::msg(format!(
+                "sharded: {} shards but {} replica lists",
+                specs.len(),
+                replica_addrs.len()
+            )));
+        }
+        let (rows, cols) = (specs[0].rows, specs[0].cols);
+        let mut next_row = 0usize;
+        for (i, s) in specs.iter().enumerate() {
+            s.validate()?;
+            if (s.rows, s.cols) != (rows, cols) {
+                return Err(Error::msg(format!(
+                    "sharded: shard {i} disagrees on the global shape"
+                )));
+            }
+            if s.out_row_start() != next_row {
+                return Err(Error::msg(format!(
+                    "sharded: shard {i} starts at row {} (expected {next_row}); shards \
+                     must tile the rows contiguously",
+                    s.out_row_start()
+                )));
+            }
+            next_row += s.out_rows();
+            if replica_addrs[i].is_empty() {
+                return Err(Error::msg(format!("sharded: shard {i} has no replicas")));
+            }
+        }
+        if next_row != rows {
+            return Err(Error::msg(format!(
+                "sharded: shards cover {next_row} of {rows} output rows"
+            )));
+        }
+        let mut shards = Vec::with_capacity(specs.len());
+        for (i, (spec, addrs)) in specs.iter().zip(replica_addrs).enumerate() {
+            let processor = format!("{name}.s{i}");
+            for addr in addrs {
+                deploy_one(addr, &processor, spec)?;
+            }
+            shards.push(Shard {
+                processor,
+                out_row_start: spec.out_row_start(),
+                out_rows: spec.out_rows(),
+                replicas: addrs.iter().map(|a| Replica::new(a)).collect(),
+            });
+        }
+        let layout: Vec<(usize, usize, Vec<String>)> = specs
+            .iter()
+            .zip(replica_addrs)
+            .map(|(s, addrs)| (s.out_row_start(), s.out_rows(), addrs.clone()))
+            .collect();
+        let mut sp = ShardedProcessor {
+            shards,
+            dims: (rows, cols),
+            fidelity: specs[0].fidelity,
+            cfg,
+            metrics: Arc::new(ClusterMetrics::new(&layout)),
+            matrix: CMat::zeros(0, 0),
+        };
+        sp.matrix = sp.try_apply_batch(&CMat::eye(cols))?;
+        Ok(sp)
+    }
+
+    /// The per-shard health/latency counters, shareable with a pool's
+    /// [`Metrics`](super::metrics::Metrics) via
+    /// [`install_cluster`](super::metrics::Metrics::install_cluster) so
+    /// the admin plane's `cluster_health` reflects this coordinator.
+    pub fn cluster_metrics(&self) -> Arc<ClusterMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Replica indices to try for `shard`, preferred first: live replicas
+    /// in declaration order, then tripped ones whose re-probe cooldown
+    /// has elapsed. An empty answer means the shard is lost (until some
+    /// cooldown elapses).
+    fn candidates(&self, si: usize) -> Vec<usize> {
+        let shard = &self.shards[si];
+        let status = &self.metrics.shards[si].replicas;
+        let mut order: Vec<usize> = (0..shard.replicas.len())
+            .filter(|&r| status[r].is_up())
+            .collect();
+        for (r, rep) in shard.replicas.iter().enumerate() {
+            if status[r].is_up() {
+                continue;
+            }
+            let due = lock(&rep.tripped_at)
+                .map(|t| t.elapsed() >= self.cfg.reprobe_every)
+                .unwrap_or(true);
+            if due {
+                order.push(r);
+            }
+        }
+        order
+    }
+
+    /// Count one failure against replica `r` of shard `si`: the cached
+    /// client is dropped (a failed [`RemoteClient`] never recovers) and
+    /// the replica trips once the consecutive-failure threshold is hit.
+    fn record_failure(&self, si: usize, r: usize) {
+        let rep = &self.shards[si].replicas[r];
+        rep.disconnect();
+        let fails = rep.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if fails >= self.cfg.trip_after {
+            self.metrics.shards[si].replicas[r].set_up(false);
+            *lock(&rep.tripped_at) = Some(Instant::now());
+        }
+    }
+
+    /// A served answer from replica `r` of shard `si` (including a
+    /// `Rejected` — the node is alive): reset the failure trip.
+    fn record_success(&self, si: usize, r: usize) {
+        let rep = &self.shards[si].replicas[r];
+        rep.consecutive_failures.store(0, Ordering::Relaxed);
+        *lock(&rep.tripped_at) = None;
+        self.metrics.shards[si].replicas[r].set_up(true);
+    }
+
+    /// Submit shard `si`'s slice of work to its first willing replica.
+    fn scatter_one(&self, si: usize, x: &CMat) -> Result<(usize, RemoteTicket)> {
+        let shard = &self.shards[si];
+        let mut last = String::from("no replica configured");
+        for r in self.candidates(si) {
+            let job =
+                Job::RawApply { processor: shard.processor.clone(), x: x.clone() };
+            let attempt = shard.replicas[r].client().and_then(|c| c.submit(job));
+            match attempt {
+                Ok(ticket) => return Ok((r, ticket)),
+                Err(e) => {
+                    last = e.to_string();
+                    self.record_failure(si, r);
+                    self.metrics.shards[si].retries.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.shards[si].failovers.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Err(self.lost(si, &last))
+    }
+
+    /// One full submit+wait against replica `r` of shard `si` — the
+    /// failover path after a scattered ticket dies.
+    fn try_replica(&self, si: usize, r: usize, x: &CMat, cols: usize) -> Result<CMat> {
+        let shard = &self.shards[si];
+        let job = Job::RawApply { processor: shard.processor.clone(), x: x.clone() };
+        let attempt = shard.replicas[r]
+            .client()
+            .and_then(|c| c.submit(job))
+            .and_then(|t| t.wait_timeout(self.cfg.timeout));
+        match attempt {
+            Ok(result) => {
+                self.record_success(si, r);
+                self.accept(si, result, cols)
+            }
+            Err(e) => {
+                self.record_failure(si, r);
+                Err(e)
+            }
+        }
+    }
+
+    /// Validate a shard's answer. `Rejected` is surfaced (the worker is
+    /// healthy; retrying elsewhere would just repeat the refusal), and a
+    /// wrong-shaped answer is an error, never silently placed.
+    fn accept(&self, si: usize, result: JobResult, cols: usize) -> Result<CMat> {
+        let shard = &self.shards[si];
+        match result {
+            JobResult::RawApply { y } => {
+                if (y.rows(), y.cols()) != (shard.out_rows, cols) {
+                    return Err(Error::msg(format!(
+                        "sharded: shard {si} ('{}') answered {}x{}, expected {}x{cols}",
+                        shard.processor,
+                        y.rows(),
+                        y.cols(),
+                        shard.out_rows
+                    )));
+                }
+                Ok(y)
+            }
+            JobResult::Rejected { reason } => Err(Error::msg(format!(
+                "sharded: shard {si} ('{}') rejected the batch: {reason}",
+                shard.processor
+            ))),
+            other => Err(Error::msg(format!(
+                "sharded: shard {si} ('{}') answered with unexpected {other:?}",
+                shard.processor
+            ))),
+        }
+    }
+
+    fn lost(&self, si: usize, last: &str) -> Error {
+        let shard = &self.shards[si];
+        Error::msg(format!(
+            "sharded: shard {si} ('{}', rows {}..{}) lost — every replica failed \
+             (last error: {last})",
+            shard.processor,
+            shard.out_row_start,
+            shard.out_row_start + shard.out_rows
+        ))
+    }
+}
+
+/// Send one `ShardCompile` to `addr`, accepting "already registered" so
+/// re-deploys are idempotent.
+fn deploy_one(addr: &str, processor: &str, spec: &ShardSpec) -> Result<()> {
+    let client = RemoteClient::connect(addr)?;
+    let job = Job::ShardCompile { name: processor.to_string(), spec: spec.clone() };
+    match client.submit_wait(job)? {
+        JobResult::ShardCompiled { out_row_start, out_rows, .. } => {
+            // The node's own placement must agree with the plan (defence
+            // against deploying mismatched specs under one name).
+            if (out_row_start as usize, out_rows as usize)
+                != (spec.out_row_start(), spec.out_rows())
+            {
+                return Err(Error::msg(format!(
+                    "sharded: {addr} registered '{processor}' at rows {out_row_start}+\
+                     {out_rows}, expected {}+{}",
+                    spec.out_row_start(),
+                    spec.out_rows()
+                )));
+            }
+            Ok(())
+        }
+        JobResult::Rejected { reason } if reason.contains("already registered") => Ok(()),
+        JobResult::Rejected { reason } => {
+            Err(Error::msg(format!("sharded: {addr} refused '{processor}': {reason}")))
+        }
+        other => Err(Error::msg(format!(
+            "sharded: {addr} answered '{processor}' deploy with unexpected {other:?}"
+        ))),
+    }
+}
+
+impl LinearProcessor for ShardedProcessor {
+    fn dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
+    fn fidelity(&self) -> Fidelity {
+        self.fidelity
+    }
+
+    fn reprogram_cost(&self) -> ReprogramCost {
+        // Reprogramming is a cluster-deploy concern (each shard worker
+        // accepts `Reprogram` individually); the coordinator itself has
+        // no local state variables.
+        ReprogramCost::FREE
+    }
+
+    fn matrix(&self) -> &CMat {
+        &self.matrix
+    }
+
+    /// Scatter/gather with failover. Infallible by trait contract —
+    /// panics when a shard is lost; serving layers use
+    /// [`Self::try_apply_batch`], which rejects instead.
+    fn apply_batch(&self, x: &CMat) -> CMat {
+        self.try_apply_batch(x).expect("sharded apply failed")
+    }
+
+    fn try_apply_batch(&self, x: &CMat) -> Result<CMat> {
+        let (out, inp) = self.dims;
+        if x.rows() != inp {
+            return Err(Error::msg(format!(
+                "sharded: {out}x{inp} processor given {} input rows",
+                x.rows()
+            )));
+        }
+        let cols = x.cols();
+        // Scatter: every shard gets a non-blocking ticket, so the cluster
+        // computes concurrently. A shard whose every replica refuses the
+        // SUBMIT is already lost — surfaced here, never dropped.
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for si in 0..self.shards.len() {
+            let t0 = Instant::now();
+            let sub = self.scatter_one(si, x)?;
+            self.metrics.shards[si].scatter.record(t0.elapsed().as_micros() as u64);
+            pending.push(sub);
+        }
+        // Gather in shard order: each partial output is PLACED into its
+        // disjoint row range (no arithmetic — see the module docs). A
+        // reply failure fails over to the shard's remaining replicas.
+        let mut y = CMat::zeros(out, cols);
+        for (si, (first, ticket)) in pending.into_iter().enumerate() {
+            let t0 = Instant::now();
+            let part = match ticket.wait_timeout(self.cfg.timeout) {
+                Ok(result) => {
+                    self.record_success(si, first);
+                    self.accept(si, result, cols)?
+                }
+                Err(first_err) => {
+                    self.record_failure(si, first);
+                    self.metrics.shards[si].retries.fetch_add(1, Ordering::Relaxed);
+                    let mut found = None;
+                    let mut last = first_err.to_string();
+                    for r in self.candidates(si) {
+                        self.metrics.shards[si].failovers.fetch_add(1, Ordering::Relaxed);
+                        match self.try_replica(si, r, x, cols) {
+                            Ok(part) => {
+                                found = Some(part);
+                                break;
+                            }
+                            // A healthy worker's refusal or malformed
+                            // answer is final — only transport-level
+                            // failures keep the failover going.
+                            Err(e) if e.to_string().starts_with("sharded:") => return Err(e),
+                            Err(e) => {
+                                last = e.to_string();
+                                self.metrics.shards[si]
+                                    .retries
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    found.ok_or_else(|| self.lost(si, &last))?
+                }
+            };
+            self.metrics.shards[si].gather.record(t0.elapsed().as_micros() as u64);
+            let start = self.shards[si].out_row_start;
+            for r in 0..part.rows() {
+                for c in 0..cols {
+                    y[(start + r, c)] = part[(r, c)];
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    fn apply_batch_into(&self, x: &CMat, out: &mut CMat) {
+        // The default would GEMM the deploy-time matrix snapshot; route
+        // through the live cluster instead.
+        *out = self.apply_batch(x);
+    }
+
+    fn apply(&self, x: &[C64]) -> Vec<C64> {
+        let mut xm = CMat::zeros(x.len(), 1);
+        for (i, &v) in x.iter().enumerate() {
+            xm[(i, 0)] = v;
+        }
+        let y = self.apply_batch(&xm);
+        (0..y.rows()).map(|r| y[(r, 0)]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{plan_shards, PlanSpec, VirtualProcessor};
+    use crate::coordinator::router::Router;
+    use crate::coordinator::service::{ProcessorPool, ProcessorService};
+    use crate::coordinator::transport::{TcpConfig, TcpFrontEnd};
+    use crate::math::rng::Rng;
+
+    /// An empty loopback serving node; returns its address and the front
+    /// end (dropping the front end stops the node: the shared stop flag
+    /// makes every connection thread close within one read timeout).
+    fn loopback_node() -> (String, TcpFrontEnd) {
+        let svc = Arc::new(ProcessorService::new(ProcessorPool::new()));
+        let router = Arc::new(Router::new(svc));
+        let fe = TcpFrontEnd::bind("127.0.0.1:0", router, TcpConfig::default())
+            .expect("bind loopback");
+        (fe.local_addr().to_string(), fe)
+    }
+
+    fn quick_cfg() -> ShardConfig {
+        ShardConfig {
+            timeout: Duration::from_secs(5),
+            trip_after: 1,
+            reprobe_every: Duration::from_millis(100),
+        }
+    }
+
+    #[test]
+    fn sharded_apply_is_bit_identical_over_loopback() {
+        let mut rng = Rng::new(0xC1);
+        let target = CMat::from_fn(12, 9, |_, _| C64::new(rng.normal(), rng.normal()));
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        let shards = plan_shards(&target, &spec, 3).unwrap();
+        let nodes: Vec<_> = (0..3).map(|_| loopback_node()).collect();
+        let addrs: Vec<Vec<String>> =
+            (0..3).map(|i| vec![nodes[i].0.clone()]).collect();
+        let sp = ShardedProcessor::deploy("net", &shards, &addrs, quick_cfg())
+            .expect("deploy over loopback");
+        assert_eq!(LinearProcessor::dims(&sp), (12, 9));
+        assert_eq!(LinearProcessor::fidelity(&sp), Fidelity::Measured);
+
+        let full = VirtualProcessor::compile(&target, &spec).unwrap();
+        let x = CMat::from_fn(9, 5, |_, _| C64::new(rng.normal(), rng.normal()));
+        let got = sp.try_apply_batch(&x).unwrap();
+        let want = LinearProcessor::apply_batch(&full, &x);
+        assert_eq!(got, want, "sharded apply must equal the single-process apply bit-for-bit");
+        // The deploy-time matrix probe equals the composed matrix too.
+        assert_eq!(
+            LinearProcessor::matrix(&sp),
+            LinearProcessor::matrix(&full),
+            "identity probe"
+        );
+        assert_eq!(sp.cluster_metrics().worst_health().name(), "healthy");
+        // Deploys are idempotent: the same specs land on the same nodes.
+        let _again = ShardedProcessor::deploy("net", &shards, &addrs, quick_cfg())
+            .expect("re-deploy is idempotent");
+    }
+
+    #[test]
+    fn failover_survives_a_killed_replica_with_identical_outputs() {
+        let mut rng = Rng::new(0xC2);
+        let target = CMat::from_fn(8, 6, |_, _| C64::new(rng.normal(), rng.normal()));
+        let spec = PlanSpec::new(2, Fidelity::Quantized);
+        let shards = plan_shards(&target, &spec, 2).unwrap();
+        // Replica 0 of each shard lives on a node we will kill; replica 1
+        // on a survivor.
+        let doomed = loopback_node();
+        let survivor = loopback_node();
+        let addrs: Vec<Vec<String>> = (0..2)
+            .map(|_| vec![doomed.0.clone(), survivor.0.clone()])
+            .collect();
+        let sp = ShardedProcessor::deploy("ha", &shards, &addrs, quick_cfg()).unwrap();
+        let x = CMat::from_fn(6, 4, |_, _| C64::new(rng.normal(), rng.normal()));
+        let before = sp.try_apply_batch(&x).unwrap();
+        // Kill the preferred node mid-service.
+        drop(doomed.1);
+        let after = sp.try_apply_batch(&x).expect("failover must recover");
+        assert_eq!(before, after, "failover must not change a single bit");
+        let m = sp.cluster_metrics();
+        let failovers: u64 = m
+            .shards
+            .iter()
+            .map(|s| s.failovers.load(Ordering::Relaxed))
+            .sum();
+        assert!(failovers > 0, "traffic must have moved to the survivor");
+        assert_eq!(m.worst_health().name(), "degraded");
+        // With EVERY replica dead the apply fails loudly — rows are never
+        // silently dropped or zeroed.
+        drop(survivor.1);
+        std::thread::sleep(Duration::from_millis(150)); // let the re-probe cooldown lapse
+        let err = sp.try_apply_batch(&x).unwrap_err().to_string();
+        assert!(err.contains("lost"), "{err}");
+    }
+
+    #[test]
+    fn deploy_rejects_inconsistent_layouts() {
+        let mut rng = Rng::new(0xC3);
+        let target = CMat::from_fn(8, 6, |_, _| C64::real(rng.normal()));
+        let spec = PlanSpec::new(2, Fidelity::Digital);
+        let shards = plan_shards(&target, &spec, 2).unwrap();
+        let cfg = ShardConfig::default();
+        // Shard/replica list length mismatch.
+        let e = ShardedProcessor::deploy("x", &shards, &[vec!["127.0.0.1:1".into()]], cfg.clone())
+            .unwrap_err();
+        assert!(e.to_string().contains("replica lists"), "{e}");
+        // A gap in the row coverage (dropping shard 0) is refused before
+        // any connection is attempted.
+        let tail = &shards[1..];
+        let e = ShardedProcessor::deploy("x", tail, &[vec!["127.0.0.1:1".into()]], cfg.clone())
+            .unwrap_err();
+        assert!(e.to_string().contains("starts at row"), "{e}");
+        // An empty replica list is refused.
+        let e = ShardedProcessor::deploy("x", &shards, &[vec!["127.0.0.1:1".into()], vec![]], cfg)
+            .unwrap_err();
+        assert!(e.to_string().contains("no replicas"), "{e}");
+    }
+}

@@ -81,11 +81,27 @@ pub struct RemoteTicket {
 }
 
 impl RemoteClient {
-    /// Connect to a serving host (`host:port`).
+    /// Connect to a serving host (`host:port`). When the
+    /// [`AUTH_TOKEN_ENV`](super::AUTH_TOKEN_ENV) variable is set, its
+    /// token is presented as the first frame automatically (open servers
+    /// ignore it; see [`Self::connect_with`] for an explicit token).
     pub fn connect(addr: &str) -> Result<RemoteClient> {
-        let stream =
+        let env_token = std::env::var(super::AUTH_TOKEN_ENV).ok();
+        Self::connect_with(addr, env_token.as_deref())
+    }
+
+    /// Connect with an explicit shared-secret token (`None` sends no auth
+    /// frame). A wrong token is not detected here — the server answers
+    /// the first *request* with a terminal id-0 `unauthorized` error,
+    /// which fails every pending ticket with that reason.
+    pub fn connect_with(addr: &str, token: Option<&str>) -> Result<RemoteClient> {
+        let mut stream =
             TcpStream::connect(addr).map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
         let _ = stream.set_nodelay(true);
+        if let Some(token) = token {
+            write_frame(&mut stream, super::auth_frame(token).as_bytes())
+                .map_err(|e| Error::msg(format!("remote: auth write failed: {e}")))?;
+        }
         let reader = stream
             .try_clone()
             .map_err(|e| Error::msg(format!("clone stream: {e}")))?;

@@ -47,6 +47,38 @@ use super::service::{get_index, get_str, Job, JobResult, WIRE_VERSION};
 /// connection-level error responses, so clients start at 1.
 pub const CONNECTION_ID: u64 = 0;
 
+/// Environment variable holding the optional shared-secret transport
+/// token. When a server is configured with a token, the FIRST frame on
+/// every connection must be the auth envelope `{"v":3,"auth":"<token>"}`
+/// (no `id` — it is connection-scope, not a request); a missing or wrong
+/// token is answered with one id-0 `unauthorized` error frame, counted in
+/// `TransportCounters::auth_rejects`, and the connection is closed.
+/// [`RemoteClient::connect`] and the CLI send it automatically when the
+/// variable is set; servers without a token ignore stray auth frames, so
+/// a token-bearing client can talk to an open server.
+pub const AUTH_TOKEN_ENV: &str = "RFNN_AUTH_TOKEN";
+
+/// Encode the first-frame auth envelope (see [`AUTH_TOKEN_ENV`]).
+pub fn auth_frame(token: &str) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(WIRE_VERSION as f64)),
+        ("auth", Json::Str(token.to_string())),
+    ])
+    .to_string_compact()
+}
+
+/// The token carried by an auth envelope, if `doc` is one (a v3 envelope
+/// with a string `auth` field and no `id`).
+pub fn auth_token_of(doc: &Json) -> Option<&str> {
+    if check_envelope_version(doc).is_err() || doc.get("id").is_some() {
+        return None;
+    }
+    match doc.get("auth") {
+        Some(Json::Str(t)) => Some(t),
+        _ => None,
+    }
+}
+
 /// One framed request: a job submission or an admin call.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -244,6 +276,22 @@ mod tests {
         assert!(Request::decode(r#"{"v":2,"id":1,"admin":{"v":3,"admin":"health"}}"#).is_err());
         assert!(Request::decode(r#"{"v":3,"id":1}"#).is_err());
         assert!(Response::decode(r#"{"v":3,"id":1}"#).is_err());
+    }
+
+    #[test]
+    fn auth_envelopes_are_recognized_and_requests_are_not() {
+        let frame = auth_frame("hunter2");
+        let doc = crate::util::json::parse(&frame).unwrap();
+        assert_eq!(auth_token_of(&doc), Some("hunter2"));
+        // Request envelopes (which carry an id) and wrong-version or
+        // tokenless documents are never mistaken for auth frames.
+        let req = Request::Admin { id: 3, admin: Admin::Health };
+        let req_doc = crate::util::json::parse(&req.encode()).unwrap();
+        assert_eq!(auth_token_of(&req_doc), None);
+        for text in [r#"{"v":2,"auth":"hunter2"}"#, r#"{"v":3}"#, r#"{"v":3,"auth":7}"#] {
+            let doc = crate::util::json::parse(text).unwrap();
+            assert_eq!(auth_token_of(&doc), None, "{text}");
+        }
     }
 
     #[test]

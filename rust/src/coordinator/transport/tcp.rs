@@ -34,7 +34,7 @@ use super::super::router::{Endpoint, Router};
 use super::{write_frame, Response, CONNECTION_ID};
 
 /// Front-end tuning.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct TcpConfig {
     /// Concurrent-connection limit; further connections shed with an
     /// `overloaded` error frame.
@@ -43,6 +43,11 @@ pub struct TcpConfig {
     pub max_frame: usize,
     /// Socket read timeout — the shutdown-flag polling granularity.
     pub read_timeout: Duration,
+    /// Optional shared-secret token (see
+    /// [`AUTH_TOKEN_ENV`](super::AUTH_TOKEN_ENV)). `Some` requires every
+    /// connection's first frame to be a matching auth envelope; `None`
+    /// accepts (and ignores) stray auth frames.
+    pub auth_token: Option<String>,
 }
 
 impl Default for TcpConfig {
@@ -51,7 +56,16 @@ impl Default for TcpConfig {
             max_connections: 64,
             max_frame: super::MAX_FRAME,
             read_timeout: Duration::from_millis(50),
+            auth_token: None,
         }
+    }
+}
+
+impl TcpConfig {
+    /// The default config with the auth token taken from
+    /// [`AUTH_TOKEN_ENV`](super::AUTH_TOKEN_ENV) (the CLI serve path).
+    pub fn from_env() -> TcpConfig {
+        TcpConfig { auth_token: std::env::var(super::AUTH_TOKEN_ENV).ok(), ..TcpConfig::default() }
     }
 }
 
@@ -129,6 +143,7 @@ fn accept_loop(listener: TcpListener, router: Arc<Router>, cfg: TcpConfig, stop:
                 let router = router.clone();
                 let stop = stop.clone();
                 let live = live.clone();
+                let cfg = cfg.clone();
                 std::thread::spawn(move || {
                     handle_conn(stream, router, cfg, stop);
                     live.fetch_sub(1, Ordering::SeqCst);
@@ -159,6 +174,30 @@ fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop:
     let _ = stream.set_nodelay(true);
     if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
         return;
+    }
+    // First-frame authentication, when configured. The gate runs before
+    // the writer thread exists, so a refused connection writes its single
+    // id-0 `unauthorized` frame directly and never serves a request.
+    if let Some(token) = cfg.auth_token.as_deref() {
+        match read_frame_interruptible(&mut stream, cfg.max_frame, &stop) {
+            Ok(ConnRead::Frame(payload)) => {
+                metrics.transport.frames_in.fetch_add(1, Ordering::Relaxed);
+                let presented = std::str::from_utf8(&payload).ok().and_then(|t| parse(t));
+                if presented.as_ref().and_then(super::auth_token_of) != Some(token) {
+                    metrics.transport.auth_rejects.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response::Error {
+                        id: CONNECTION_ID,
+                        code: "unauthorized".to_string(),
+                        message: "this server requires first-frame token authentication"
+                            .to_string(),
+                    };
+                    let _ = write_frame(&mut stream, resp.encode().as_bytes());
+                    return;
+                }
+            }
+            // EOF / shutdown / broken framing before any frame: just close.
+            _ => return,
+        }
     }
     let Ok(writer_stream) = stream.try_clone() else { return };
     let (out_tx, out_rx) = channel::<Response>();
@@ -243,6 +282,12 @@ fn handle_frame(payload: &[u8], router: &Arc<Router>, out: &Sender<Response>) ->
     };
     if let Err(e) = super::check_envelope_version(&doc) {
         return reject(e.to_string());
+    }
+    // A stray auth envelope against an open (tokenless) server is
+    // accepted and ignored, so a token-bearing client interoperates with
+    // a server that has no token configured.
+    if super::auth_token_of(&doc).is_some() {
+        return true;
     }
     let id = match super::super::service::get_index(&doc, "id") {
         Ok(0) => return reject("request id 0 is reserved".to_string()),

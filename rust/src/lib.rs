@@ -40,8 +40,9 @@
 //!   [`coordinator::service::ProcessorService`] front door (typed jobs,
 //!   live processor pool, backpressure, versioned wire protocol), the
 //!   transport-agnostic [`coordinator::router::Router`], the std-only
-//!   framed-TCP transport ([`coordinator::transport`]), dynamic batcher,
-//!   device-state scheduler, and metrics.
+//!   framed-TCP transport ([`coordinator::transport`]), the scatter/gather
+//!   cluster coordinator ([`coordinator::sharded`], see *Cluster model*),
+//!   dynamic batcher, device-state scheduler, and metrics.
 //! * [`bench`] — the paper-experiment harness regenerating every table/figure,
 //!   plus the batched-GEMM perf trajectory (`BENCH_pr1.json`).
 //! * [`cli`] — hand-rolled argument parsing for the `rfnn` binary.
@@ -296,6 +297,52 @@
 //! beats the monolithic final loss (pinned in `tiling_props`; ablation
 //! A7 reports the 64×64 headline comparison, `rfnn compile --train N
 //! --dspsa-mode block|monolithic` exposes it on the CLI).
+//!
+//! ## Cluster model
+//!
+//! One coordinator can serve a logical layer from MANY serving processes
+//! ([`coordinator::sharded`]). The unit of distribution is the tile-row:
+//! [`compiler::plan_shards`] splits the `⌈M/T⌉ × ⌈N/T⌉` tile grid into
+//! N contiguous tile-row bands balanced by MAC weight, each described by
+//! a self-contained [`compiler::ShardSpec`] — global geometry, plan
+//! seed, calibration rule, and the shard's own row slice of the target —
+//! that any bare node (`rfnn serve --minimal`) compiles locally when a
+//! `Job::ShardCompile` document arrives. Nodes need no out-of-band
+//! state, and the spec's global tile-row offset keys the fabrication
+//! model, so at Measured fidelity a shard's tiles realize EXACTLY the
+//! devices the single-process compile would have used for those rows.
+//!
+//! Because output rows accumulate only across tile-*columns* and a shard
+//! owns whole tile-*rows*, shard outputs are disjoint row bands of `Y`:
+//! the gather in [`coordinator::sharded::ShardedProcessor`] is pure row
+//! PLACEMENT, never floating-point summation, so sharded serving is
+//! bit-identical to the single process (the integration suite pins it,
+//! and the `BENCH_pr7.json` perf record re-checks it on every run).
+//! `ShardedProcessor` implements [`LinearProcessor`], so a cluster drops
+//! in anywhere a local backend does: scatter is one `Job::RawApply` per
+//! shard over [`coordinator::transport::RemoteClient`] connections,
+//! gather places each reply's rows at the shard's output offset.
+//!
+//! Availability is per shard: each shard lists R ≥ 1 replica addresses.
+//! A replica that fails (transport error or deadline) is retried on the
+//! next replica, trips out of the preferred rotation after a configured
+//! number of consecutive failures, and is re-probed after a cooldown;
+//! a semantic rejection from a healthy replica is an error, never a
+//! failover (every replica would refuse the same document). Failed
+//! scatters are thus retried on replicas or surfaced as errors — rows
+//! are never silently dropped. Per-shard scatter/gather latency,
+//! retry/failover counters, and the replica health map live in
+//! [`coordinator::metrics::ClusterMetrics`], folded into the admin
+//! plane's `MetricsSnapshot` and the `cluster_health` admin verb
+//! (worst-shard rollup: healthy / degraded / lost).
+//!
+//! Transport trust is a shared secret: when `RFNN_AUTH_TOKEN` is set,
+//! the server requires the connection's first frame to be an auth
+//! envelope carrying the token (anything else is refused and counted in
+//! the transport metrics), and `RemoteClient` sends it automatically
+//! from the same variable. `rfnn cluster plan|deploy|serve` drives the
+//! whole lifecycle from the CLI against a seeded target; the README's
+//! 3-node quick-start walks through it.
 
 pub mod bench;
 pub mod cli;

@@ -19,6 +19,7 @@
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::mesh::propagate::DiscreteMesh;
+use crate::util::error::Result;
 
 /// How faithfully a backend models the physical processor.
 ///
@@ -110,6 +111,16 @@ pub trait LinearProcessor: Send + Sync {
         let (out, inp) = self.dims();
         assert_eq!(x.rows(), inp, "apply_batch: {out}x{inp} processor, {} input rows", x.rows());
         self.matrix().gemm(x)
+    }
+
+    /// Fallible [`Self::apply_batch`] for backends whose execution can
+    /// fail at runtime — a sharded processor whose remote nodes are
+    /// unreachable, for example. The serving layer drives this entry so a
+    /// backend failure becomes a rejected job instead of a dead worker;
+    /// local backends use the default, which cannot fail (shape mismatches
+    /// are caller bugs and still panic).
+    fn try_apply_batch(&self, x: &CMat) -> Result<CMat> {
+        Ok(self.apply_batch(x))
     }
 
     /// [`Self::apply_batch`] into a caller-owned output buffer (reshaped

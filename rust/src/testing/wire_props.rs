@@ -5,6 +5,7 @@
 //! without panicking — the schema the CLI, benches, and the TCP transport
 //! all rely on.
 
+use crate::compiler::{Calibration, ShardSpec};
 use crate::coordinator::router::{Admin, AdminReply};
 use crate::coordinator::service::{compat, Job, JobResult, WIRE_VERSION};
 use crate::coordinator::transport::{read_frame, Request, Response};
@@ -30,9 +31,37 @@ fn arb_fidelity(g: &mut Gen) -> Fidelity {
     *g.choose(&[Fidelity::Digital, Fidelity::Ideal, Fidelity::Quantized, Fidelity::Measured])
 }
 
+/// A geometrically consistent random [`ShardSpec`] — the decoder derives
+/// the slice height from the global geometry, so the slice must match it
+/// exactly. The fabrication seed stays below 2^53: it rides the wire as a
+/// JSON number, whose integer range ends there.
+fn arb_shard_spec(g: &mut Gen) -> ShardSpec {
+    let tile = *g.choose(&[2usize, 3, 4]);
+    let rows = g.usize_in(1, 12);
+    let cols = g.usize_in(1, 6);
+    let gr = (rows + tile - 1) / tile;
+    let row_start = g.usize_in(0, gr - 1);
+    let grid_rows = g.usize_in(1, gr - row_start);
+    let out_start = row_start * tile;
+    let slice_rows = rows.min((row_start + grid_rows) * tile) - out_start;
+    let data: Vec<C64> =
+        (0..slice_rows * cols).map(|_| C64::new(g.normal(), g.normal())).collect();
+    ShardSpec {
+        rows,
+        cols,
+        tile,
+        fidelity: arb_fidelity(g),
+        measured_seed: g.usize_in(0, 1 << 50) as u64,
+        calibration: *g.choose(&[Calibration::NearestIdeal, Calibration::NearestMeasured]),
+        row_start,
+        grid_rows,
+        target: CMat::from_rows(slice_rows, cols, &data),
+    }
+}
+
 fn arb_job(g: &mut Gen) -> Job {
     let processor = arb_processor(g);
-    match g.usize_in(0, 4) {
+    match g.usize_in(0, 5) {
         0 => {
             let n = g.usize_in(0, 30);
             Job::Infer { processor, image: (0..n).map(|_| g.f64_in(0.0, 1.0) as f32).collect() }
@@ -47,17 +76,18 @@ fn arb_job(g: &mut Gen) -> Job {
             let n = g.usize_in(0, 16);
             Job::Reprogram { processor, code: (0..n).map(|_| g.usize_in(0, 5)).collect() }
         }
-        _ => Job::Compile {
+        4 => Job::Compile {
             name: processor,
             target: arb_cmat(g),
             tile: *g.choose(&[2usize, 4, 8]),
             fidelity: arb_fidelity(g),
         },
+        _ => Job::ShardCompile { name: processor, spec: arb_shard_spec(g) },
     }
 }
 
 fn arb_result(g: &mut Gen) -> JobResult {
-    match g.usize_in(0, 5) {
+    match g.usize_in(0, 6) {
         0 => JobResult::Infer {
             probs: (0..10).map(|_| g.f64_in(0.0, 1.0) as f32).collect(),
             queued_us: g.usize_in(0, 1 << 40) as u64,
@@ -69,6 +99,18 @@ fn arb_result(g: &mut Gen) -> JobResult {
         4 => JobResult::Compiled {
             name: arb_processor(g),
             version: 1,
+            grid: (g.usize_in(1, 8) as u64, g.usize_in(1, 8) as u64),
+            tile: *g.choose(&[2u64, 4, 8]),
+            fidelity: arb_fidelity(g),
+            state_vars: g.usize_in(0, 10_000) as u64,
+            fro_error: g.f64_in(0.0, 10.0),
+            cache_hit: g.bool(),
+        },
+        5 => JobResult::ShardCompiled {
+            name: arb_processor(g),
+            version: 1,
+            out_row_start: g.usize_in(0, 1 << 20) as u64,
+            out_rows: g.usize_in(1, 1 << 20) as u64,
             grid: (g.usize_in(1, 8) as u64, g.usize_in(1, 8) as u64),
             tile: *g.choose(&[2u64, 4, 8]),
             fidelity: arb_fidelity(g),
@@ -100,7 +142,23 @@ fn result_round_trips_every_variant() {
     });
 }
 
-/// Deterministic coverage of all five job + six result variants, in case
+/// A small fixed shard payload (shard 1 of a 5×4 target under 2×2 tiles:
+/// tile-row 1 of 3, owning output rows 2..4).
+fn fixed_shard_spec() -> ShardSpec {
+    ShardSpec {
+        rows: 5,
+        cols: 4,
+        tile: 2,
+        fidelity: Fidelity::Measured,
+        measured_seed: 7,
+        calibration: Calibration::NearestMeasured,
+        row_start: 1,
+        grid_rows: 1,
+        target: CMat::from_fn(2, 4, |i, j| C64::new(i as f64 + 0.5, j as f64 - 1.0)),
+    }
+}
+
+/// Deterministic coverage of all six job + seven result variants, in case
 /// the random distribution above ever shifts.
 #[test]
 fn every_variant_covered_explicitly() {
@@ -118,6 +176,7 @@ fn every_variant_covered_explicitly() {
             tile: 2,
             fidelity: Fidelity::Quantized,
         },
+        Job::ShardCompile { name: "net.s1".into(), spec: fixed_shard_spec() },
     ];
     for job in jobs {
         let back = Job::decode(&job.encode()).expect("round trip");
@@ -140,6 +199,18 @@ fn every_variant_covered_explicitly() {
             state_vars: 16,
             fro_error: 0.125,
             cache_hit: true,
+        },
+        JobResult::ShardCompiled {
+            name: "net.s1".into(),
+            version: 1,
+            out_row_start: 2,
+            out_rows: 2,
+            grid: (1, 2),
+            tile: 2,
+            fidelity: Fidelity::Measured,
+            state_vars: 12,
+            fro_error: 0.0625,
+            cache_hit: false,
         },
         JobResult::Rejected { reason: "nope".into() },
     ];
@@ -197,10 +268,22 @@ fn v2_documents_decode_through_the_compat_shim() {
     }
     let err = Job::decode(&doc.to_string_compact()).expect_err("compile needs v3");
     assert!(err.to_string().contains("version 3"), "{err}");
+    let shard = Job::ShardCompile { name: "net.s1".into(), spec: fixed_shard_spec() };
+    let mut doc = parse(&shard.encode()).unwrap();
+    if let Json::Obj(map) = &mut doc {
+        map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V2 as f64));
+    }
+    let err = Job::decode(&doc.to_string_compact()).expect_err("shard_compile needs v3");
+    assert!(err.to_string().contains("version 3"), "{err}");
     assert!(compat::result_from_v2(
         &parse(r#"{"v":2,"kind":"compiled","name":"x","version":1}"#).unwrap()
     )
     .is_err());
+    let err = compat::result_from_v2(
+        &parse(r#"{"v":2,"kind":"shard_compiled","name":"x","version":1}"#).unwrap(),
+    )
+    .expect_err("shard_compiled needs v3");
+    assert!(err.to_string().contains("version 3"), "{err}");
     // Rule 3: encoders never emit v2.
     let job = Job::Reprogram { processor: "p".into(), code: vec![0] };
     let v = parse(&job.encode()).unwrap();
@@ -343,6 +426,28 @@ fn decode_rejects_malformed_documents() {
     // compile: oversized weight matrices are refused before allocating
     assert!(Job::decode(&format!(
         r#"{{"v":{WIRE_VERSION},"kind":"compile","name":"v","rows":100000,"cols":100000,"re":[],"im":[],"tile":8,"fidelity":"digital"}}"#
+    ))
+    .is_err());
+    // shard_compile: the slice height is DERIVED from the geometry — a
+    // payload sized for the wrong slice is refused at decode.
+    let mut good = parse(&Job::ShardCompile { name: "s".into(), spec: fixed_shard_spec() }.encode())
+        .unwrap();
+    assert!(Job::decode(&good.to_string_compact()).is_ok());
+    if let Json::Obj(map) = &mut good {
+        // Widen the claimed window: the derived slice height no longer
+        // matches the 2×4 payload that rode along.
+        map.insert("row_start".into(), Json::Num(0.0));
+        map.insert("grid_rows".into(), Json::Num(9.0));
+    }
+    assert!(Job::decode(&good.to_string_compact()).is_err(), "mis-sized shard slice");
+    // shard_compile: a window past the end of the matrix owns no rows
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"shard_compile","name":"s","rows":4,"cols":2,"tile":2,"fidelity":"digital","seed":0,"calibration":"ideal","row_start":7,"grid_rows":1,"re":[],"im":[]}}"#
+    ))
+    .is_err());
+    // shard_compile: unknown calibration rules are refused at decode
+    assert!(Job::decode(&format!(
+        r#"{{"v":{WIRE_VERSION},"kind":"shard_compile","name":"s","rows":2,"cols":2,"tile":2,"fidelity":"digital","seed":0,"calibration":"warp","row_start":0,"grid_rows":1,"re":[1,2,3,4],"im":[0,0,0,0]}}"#
     ))
     .is_err());
 }

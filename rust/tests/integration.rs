@@ -669,6 +669,148 @@ fn loopback_tcp_serves_every_job_kind_and_admin_plane() {
     assert!(m.job(JobKind::Compile).served.load(Ordering::Relaxed) >= 1);
 }
 
+/// PR-7 acceptance: cluster-scale sharded serving across REAL OS
+/// processes. Three `rfnn serve --listen 127.0.0.1:0 --minimal` children
+/// are deployed with a 3-shard × 2-replica layout; the scatter/gather
+/// coordinator must answer bit-identically to a single-process compile,
+/// keep answering the SAME bits after one node is killed mid-traffic
+/// (failing over to each shard's surviving replica), and fail loudly —
+/// never silently dropping rows — only when every replica is gone.
+#[test]
+fn cluster_sharded_serving_survives_replica_loss_across_processes() {
+    use rfnn::compiler::{plan_shards, PlanSpec, VirtualProcessor};
+    use rfnn::coordinator::sharded::{ShardConfig, ShardedProcessor};
+    use rfnn::processor::{Fidelity, LinearProcessor};
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+    use std::sync::atomic::Ordering;
+
+    /// Spawn one bare serving node and parse its ephemeral address from
+    /// the `listening on ADDR` banner (Rust's stdout is line-buffered
+    /// even when piped, so the banner arrives as soon as the listener
+    /// is up).
+    fn spawn_node() -> (Child, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_rfnn"))
+            .args(["serve", "--listen", "127.0.0.1:0", "--minimal"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn rfnn serve --minimal");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let banner = lines.next().expect("banner line").expect("readable banner");
+        let addr = banner
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected banner {banner:?}"))
+            .trim()
+            .to_string();
+        // Keep draining so the child never blocks on a full pipe.
+        std::thread::spawn(move || for _ in lines {});
+        (child, addr)
+    }
+
+    let mut nodes: Vec<(Child, String)> = (0..3).map(|_| spawn_node()).collect();
+
+    // One logical 12×9 Measured-fidelity processor in 3 shards; each
+    // shard replicated on its own node plus the next one around the ring,
+    // so killing any single node leaves every shard one live replica.
+    let mut rng = Rng::new(0x7C1);
+    let target = CMat::from_fn(12, 9, |_, _| C64::new(rng.normal(), rng.normal()));
+    let spec = PlanSpec::new(2, Fidelity::Measured);
+    let shards = plan_shards(&target, &spec, 3).expect("3-way tile-row split");
+    let addrs: Vec<Vec<String>> =
+        (0..3).map(|s| vec![nodes[s].1.clone(), nodes[(s + 1) % 3].1.clone()]).collect();
+    let sp = ShardedProcessor::deploy("net", &shards, &addrs, ShardConfig::default())
+        .expect("deploy over three child processes");
+
+    // Sharded ≡ single-process, bit-for-bit (the acceptance pin).
+    let full = VirtualProcessor::compile(&target, &spec).expect("local reference compile");
+    let x = CMat::from_fn(9, 5, |_, _| C64::new(rng.normal(), rng.normal()));
+    let before = sp.try_apply_batch(&x).expect("cluster apply");
+    assert_eq!(before, LinearProcessor::apply_batch(&full, &x), "sharded must be bit-identical");
+
+    // Kill one node mid-traffic. Shards 0 (preferred) and 2 (backup)
+    // lose a replica; every answer must keep the exact same bits.
+    nodes[0].0.kill().expect("kill node 0");
+    nodes[0].0.wait().expect("reap node 0");
+    let after = sp.try_apply_batch(&x).expect("failover must recover");
+    assert_eq!(after, before, "zero wrong answers across a replica loss");
+    let m = sp.cluster_metrics();
+    let failovers: u64 =
+        m.shards.iter().map(|s| s.failovers.load(Ordering::Relaxed)).sum();
+    assert!(failovers > 0, "traffic must have rerouted to surviving replicas");
+    assert_eq!(m.worst_health().name(), "degraded");
+    // Recovery traffic: fresh batches still match the reference exactly.
+    for k in 0..3 {
+        let x = CMat::from_fn(9, 4, |i, j| {
+            C64::new(0.1 * (i + k) as f64 - 0.3, 0.05 * j as f64)
+        });
+        let y = sp.try_apply_batch(&x).expect("degraded cluster still serves");
+        assert_eq!(y, LinearProcessor::apply_batch(&full, &x), "batch {k}");
+    }
+
+    // With EVERY node gone the apply fails loudly: rows are never
+    // silently zeroed or dropped.
+    for (child, _) in nodes.iter_mut().skip(1) {
+        child.kill().expect("kill node");
+        child.wait().expect("reap node");
+    }
+    std::thread::sleep(std::time::Duration::from_millis(1100)); // let re-probe cooldowns lapse
+    let err = sp.try_apply_batch(&x).expect_err("no replicas left").to_string();
+    assert!(err.contains("lost"), "{err}");
+}
+
+/// Shared-secret transport auth (PR-7 satellite): a token-configured
+/// server refuses wrong or missing first-frame tokens (counted in the
+/// transport metrics), serves token-bearing clients normally, and an
+/// OPEN server ignores a stray auth frame — so token-bearing clients
+/// interoperate with tokenless nodes. Tokens are passed explicitly
+/// (never via `set_var`: tests run in parallel).
+#[test]
+fn cluster_transport_auth_gates_connections() {
+    use rfnn::coordinator::router::{Admin, AdminReply, Router};
+    use rfnn::coordinator::service::{ProcessorPool, ProcessorService};
+    use rfnn::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    let svc = Arc::new(ProcessorService::new(ProcessorPool::new()));
+    let router = Arc::new(Router::new(svc));
+    let cfg = TcpConfig { auth_token: Some("sesame".into()), ..TcpConfig::default() };
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router.clone(), cfg).expect("bind with token");
+    let addr = fe.local_addr().to_string();
+
+    // The right token serves.
+    let ok = RemoteClient::connect_with(&addr, Some("sesame")).expect("connect");
+    match ok.admin(Admin::Health).expect("authed admin") {
+        AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // A wrong token and a missing token are both refused: the first
+    // request fails with the connection-scope `unauthorized` error.
+    let wrong = RemoteClient::connect_with(&addr, Some("open-up")).expect("tcp connects");
+    let err = wrong.admin(Admin::Health).expect_err("wrong token refused").to_string();
+    assert!(err.contains("unauthorized"), "{err}");
+    let missing = RemoteClient::connect_with(&addr, None).expect("tcp connects");
+    let err = missing.admin(Admin::Health).expect_err("missing token refused").to_string();
+    assert!(err.contains("unauthorized"), "{err}");
+    let rejects = router.metrics().transport.auth_rejects.load(Ordering::Relaxed);
+    assert!(rejects >= 2, "both refusals are counted, got {rejects}");
+
+    // An open server ignores a stray auth frame: token-bearing clients
+    // interoperate with tokenless nodes.
+    let svc = Arc::new(ProcessorService::new(ProcessorPool::new()));
+    let open_router = Arc::new(Router::new(svc));
+    let open = TcpFrontEnd::bind("127.0.0.1:0", open_router, TcpConfig::default())
+        .expect("bind open");
+    let chatty = RemoteClient::connect_with(&open.local_addr().to_string(), Some("sesame"))
+        .expect("connect");
+    match chatty.admin(Admin::Health).expect("open server serves") {
+        AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
 /// Property: any mesh program applied to the standard basis reconstructs
 /// exactly the columns of its matrix.
 #[test]
