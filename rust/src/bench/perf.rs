@@ -52,6 +52,9 @@ pub const KERNEL_NS: [usize; 4] = [4, 8, 16, 64];
 /// Batch sizes for the kernel-dispatch GEMM grid.
 pub const KERNEL_BATCHES: [usize; 3] = [1, 8, 64];
 
+/// Batch sizes for the tracing-overhead sweep.
+pub const TRACE_BATCHES: [usize; 2] = [1, 64];
+
 /// Shard count for the sharded-vs-single serving comparison: one
 /// single-replica loopback node per shard, so the recorded overhead is
 /// pure scatter/gather cost (framing + N sockets + row placement).
@@ -73,9 +76,11 @@ pub const CLUSTER_BATCHES: [usize; 2] = [1, 16];
 /// kernel grid over `(n, batch)` (written to `BENCH_pr6.json`; override
 /// with `RFNN_BENCH6_OUT`), and the sharded scatter/gather coordinator
 /// vs the single-process apply it must match bit-for-bit (written to
-/// `BENCH_pr7.json`; override with `RFNN_BENCH7_OUT`) so the perf
-/// trajectory tracks each PR. `tile` is the physical tile size of the
-/// virtualization sweep.
+/// `BENCH_pr7.json`; override with `RFNN_BENCH7_OUT`), and the tracing
+/// overhead sweep — submit→wait under off/slow/all span-recording
+/// policies (written to `BENCH_pr8.json`; override with
+/// `RFNN_BENCH8_OUT`) — so the perf trajectory tracks each PR. `tile` is
+/// the physical tile size of the virtualization sweep.
 pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -231,7 +236,136 @@ pub fn all(quick: bool, tile: usize) -> String {
         Ok(()) => out.push_str(&format!("wrote {path7}\n")),
         Err(e) => out.push_str(&format!("could not write {path7}: {e}\n")),
     }
+    out.push_str("§Perf — tracing overhead: submit→wait under off/slow/all policies\n");
+    let trace_rows = run_trace_benches(samples);
+    for (b, off, slow, all_on) in &trace_rows {
+        out.push_str(&off.line());
+        out.push('\n');
+        out.push_str(&slow.line());
+        out.push('\n');
+        out.push_str(&all_on.line());
+        out.push('\n');
+        let s = slow.median_ns() as f64 / off.median_ns().max(1) as f64;
+        let a = all_on.median_ns() as f64 / off.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  batch {b:>3}: slow tracing costs {s:.2}× off, all costs {a:.2}× off\n"
+        ));
+    }
+    let json8 = trace_report_json(&trace_rows, samples, quick);
+    let path8 =
+        std::env::var("RFNN_BENCH8_OUT").unwrap_or_else(|_| "BENCH_pr8.json".to_string());
+    match std::fs::write(&path8, json8.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path8}\n")),
+        Err(e) => out.push_str(&format!("could not write {path8}: {e}\n")),
+    }
     out
+}
+
+/// Time the end-to-end submit→wait serving path under each tracing
+/// regime — no context (the `RFNN_TRACE=off` fast path), `slow` (the
+/// default: context created, spans recorded, trace dropped at finish
+/// unless the request beat the slow threshold), and `all` (every trace
+/// retained in the global ring) — at each batch size in
+/// [`TRACE_BATCHES`]. Policies are latched per-context through
+/// [`TraceCtx::start_with`](crate::obs::trace::TraceCtx::start_with),
+/// never through the global env knob, so concurrent tests keep theirs.
+/// Returns `(batch, off, slow, all)` stats.
+pub fn run_trace_benches(
+    samples: usize,
+) -> Vec<(usize, BenchStats, BenchStats, BenchStats)> {
+    use crate::obs::trace::{Policy, TraceCtx, DEFAULT_SLOW_US};
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+    let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
+    let pool = ProcessorPool::new();
+    pool.register(
+        "mnist8",
+        Workload::Mnist { bundle, backend: Backend::Native },
+        PoolConfig {
+            queue_depth: 4096,
+            batch: BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("register mnist8");
+    let svc = ProcessorService::new(pool);
+    let img: Vec<f32> = (0..784).map(|i| (i % 61) as f32 / 61.0).collect();
+    let sweep = |label: &str, b: usize, policy: Option<Policy>| {
+        bench(label, samples, || {
+            let pending: Vec<_> = (0..b)
+                .map(|_| {
+                    let ctx = policy.and_then(|p| TraceCtx::start_with(p, "bench.request"));
+                    let t = svc
+                        .submit_traced(
+                            Job::Infer { processor: "mnist8".into(), image: img.clone() },
+                            ctx.clone(),
+                        )
+                        .expect("queue depth exceeds max in-flight");
+                    (t, ctx)
+                })
+                .collect();
+            for (t, ctx) in pending {
+                match t.wait().expect("worker alive") {
+                    JobResult::Infer { .. } => {}
+                    other => panic!("unexpected result {other:?}"),
+                }
+                if let Some(ctx) = ctx {
+                    let _ = ctx.finish(false);
+                }
+            }
+        })
+    };
+    let mut out = Vec::new();
+    for &b in &TRACE_BATCHES {
+        let off = sweep(&format!("trace off  submit→wait b{b}"), b, None);
+        let slow = sweep(
+            &format!("trace slow submit→wait b{b}"),
+            b,
+            Some(Policy::Slow(DEFAULT_SLOW_US)),
+        );
+        let all_on = sweep(&format!("trace all  submit→wait b{b}"), b, Some(Policy::All));
+        out.push((b, off, slow, all_on));
+    }
+    out
+}
+
+/// The PR-8 perf-trajectory record for [`run_trace_benches`] results:
+/// per-request cost under each policy plus the overhead ratios against
+/// the untraced path — the artifact that proves `off` and `slow` tracing
+/// stay in the noise on the serving hot path.
+pub fn trace_report_json(
+    rows: &[(usize, BenchStats, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|(b, off, slow, all_on)| {
+            let on = off.median_ns() as f64 / *b as f64;
+            let sn = slow.median_ns() as f64 / *b as f64;
+            let an = all_on.median_ns() as f64 / *b as f64;
+            Json::obj(vec![
+                ("batch", Json::Num(*b as f64)),
+                ("off_ns_per_request", Json::Num(on)),
+                ("slow_ns_per_request", Json::Num(sn)),
+                ("all_ns_per_request", Json::Num(an)),
+                ("off_requests_per_sec", Json::Num(1e9 / on.max(1.0))),
+                ("slow_over_off", Json::Num(sn / on.max(1.0))),
+                ("all_over_off", Json::Num(an / on.max(1.0))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pr", Json::Num(8.0)),
+        ("bench", Json::Str("tracing_overhead_submit_wait".into())),
+        ("wire_version", Json::Num(WIRE_VERSION as f64)),
+        ("n", Json::Num(8.0)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time [`ShardedProcessor::try_apply_batch`] — scatter over
@@ -950,6 +1084,34 @@ mod tests {
         assert!(report.contains("gemm kernel"), "{report}");
         assert!(report.contains("sharded apply"), "{report}");
         assert!(report.contains("bit-identical to the single process: true"), "{report}");
+        assert!(report.contains("tracing overhead"), "{report}");
+        assert!(report.contains("trace all"), "{report}");
+    }
+
+    #[test]
+    fn trace_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let rows = super::run_trace_benches(2);
+        assert_eq!(rows.len(), super::TRACE_BATCHES.len());
+        let json = super::trace_report_json(&rows, 2, true);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(parsed.get("pr").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(
+            parsed.get("wire_version").and_then(|v| v.as_f64()),
+            Some(super::WIRE_VERSION as f64)
+        );
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        assert_eq!(results.len(), super::TRACE_BATCHES.len());
+        for r in results {
+            for key in ["off_ns_per_request", "slow_ns_per_request", "all_ns_per_request"] {
+                let ns = r.get(key).and_then(|v| v.as_f64()).expect(key);
+                assert!(ns.is_finite() && ns > 0.0, "{key} {ns}");
+            }
+            for key in ["slow_over_off", "all_over_off"] {
+                let ratio = r.get(key).and_then(|v| v.as_f64()).expect(key);
+                assert!(ratio.is_finite() && ratio > 0.0, "{key} {ratio}");
+            }
+        }
     }
 
     #[test]

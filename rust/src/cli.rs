@@ -17,7 +17,9 @@ use crate::compiler::{
     plan_shards, Calibration, Compiler, PerturbMode, PlanSpec, VirtualProcessor, VALID_TILES,
 };
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::router::{Admin, Endpoint, Router, RouterError};
+use crate::coordinator::router::{
+    Admin, AdminReply, Endpoint, Router, RouterError, TRACE_DUMP_DEFAULT,
+};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, SubmitError, Workload,
@@ -106,7 +108,8 @@ USAGE:
                [--tile T] [--fidelity F] [--listen ADDR] [--minimal]
     rfnn job '<wire json>' [--native] [--tile T]       submit one wire-encoded job
     rfnn client [--connect ADDR] job '<wire json>'     submit to a remote server
-    rfnn client [--connect ADDR] admin <health|metrics|processors|cluster|shutdown>
+    rfnn client [--connect ADDR] admin <health|metrics|processors|cluster|trace|shutdown>
+                [--format prom] [--n N]
     rfnn cluster plan   [--rows M] [--cols N] [--tile T] [--fidelity F] [--seed S]
                         [--fab-seed S] [--calibration measured|ideal] [--shards N]
     rfnn cluster deploy --nodes A,B,C [--replicas R] [--name NAME] [plan flags]
@@ -144,6 +147,13 @@ behind the TCP front end, populated over the wire by compile /
 shard_compile jobs — the shape `cluster deploy` expects of its nodes.
 With RFNN_AUTH_TOKEN set, serve requires every connection's first frame
 to present that token, and client/cluster send it automatically.
+
+Observability: RFNN_TRACE=off|slow|ratio:N|all (default slow, threshold
+RFNN_TRACE_SLOW_US µs) selects which completed request traces the server
+retains; `client admin trace --n N` dumps the last N as span trees, and
+traces stitch across cluster nodes. `client admin metrics --format prom`
+prints the metrics snapshot in Prometheus text exposition. RFNN_LOG=
+off|error|warn|info|debug sets the JSON-lines log level on stderr.
 
 cluster shards one seeded random M×N weight matrix across serving
 nodes: `plan` prints the tile-row split, `deploy` registers each
@@ -380,6 +390,7 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         };
         println!("listening on {}", fe.local_addr());
+        crate::obs::log::info("serve", "listening", &[("addr", fe.local_addr().to_string())]);
         fe.wait_shutdown();
         fe.shutdown();
         println!("{}", svc.metrics().report());
@@ -558,7 +569,9 @@ fn cmd_client(args: &Args) -> i32 {
         eprintln!(
             "usage: rfnn client [--connect ADDR] job '<wire json>'\n\
              \x20      rfnn client [--connect ADDR] admin \
-             <health|metrics|processors|cluster|shutdown>"
+             <health|metrics|processors|cluster|trace|shutdown>\n\
+             \x20      rfnn client admin metrics --format prom   # Prometheus text exposition\n\
+             \x20      rfnn client admin trace [--n N]           # last N completed traces"
         );
         2
     };
@@ -598,9 +611,23 @@ fn cmd_client(args: &Args) -> i32 {
         "admin" => {
             let admin = match args.positional.get(1).map(String::as_str) {
                 Some("health") => Admin::Health,
-                Some("metrics") | Some("metrics_snapshot") => Admin::MetricsSnapshot,
+                // `--format prom` selects the Prometheus text exposition
+                // of the same snapshot (scrape-ready; raw text, not JSON).
+                Some("metrics") | Some("metrics_snapshot") => {
+                    match args.get("format") {
+                        Some("prom") | Some("prometheus") => Admin::MetricsText,
+                        Some(other) => {
+                            eprintln!("unknown metrics format '{other}' (have: prom)");
+                            return 2;
+                        }
+                        None => Admin::MetricsSnapshot,
+                    }
+                }
                 Some("processors") | Some("list_processors") => Admin::ListProcessors,
                 Some("cluster") | Some("cluster_health") => Admin::ClusterHealth,
+                Some("trace") | Some("trace_dump") => {
+                    Admin::TraceDump { n: args.get_or("n", TRACE_DUMP_DEFAULT) }
+                }
                 Some("shutdown") => Admin::Shutdown,
                 _ => return usage(),
             };
@@ -612,6 +639,11 @@ fn cmd_client(args: &Args) -> i32 {
                 }
             };
             match client.admin(admin) {
+                // The Prometheus exposition is already line-oriented text.
+                Ok(AdminReply::MetricsText(text)) => {
+                    print!("{text}");
+                    0
+                }
                 Ok(reply) => {
                     println!("{}", reply.to_json().to_string_pretty());
                     0

@@ -25,6 +25,7 @@ use crate::math::cmat::CMat;
 use crate::nn::dspsa::{BlockDspsa, BlockSchedule, DspsaConfig};
 use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
 use crate::util::error::Result;
+use std::time::Instant;
 
 /// An `M×N` linear processor virtualized over `⌈M/T⌉ × ⌈N/T⌉` physical
 /// `T×T` tiles.
@@ -139,17 +140,35 @@ impl VirtualProcessor {
             }
         }
         let tiles = &self.plan.tiles;
+        // Tracing is timing-only: spans are recorded around the fixed
+        // dispatch order and never reorder any arithmetic, so the
+        // par ≡ seq bit-identity contract is untouched.
+        let tls = crate::obs::trace::current();
         if workers <= 1 || total < 2 {
             for c in 0..gc {
+                let col_start = tls.as_ref().map(|_| Instant::now());
                 for r in 0..gr {
                     let idx = self.plan.grid.index(r, c);
                     tiles[idx].proc.apply_batch_into(&slabs[c], &mut products[idx]);
+                }
+                if let (Some((ctx, parent)), Some(t0)) = (&tls, col_start) {
+                    ctx.span_at(
+                        "exec.col",
+                        *parent,
+                        t0,
+                        Instant::now(),
+                        vec![
+                            ("col".to_string(), c.to_string()),
+                            ("tiles".to_string(), gr.to_string()),
+                        ],
+                    );
                 }
             }
         } else {
             let workers = workers.min(total);
             let chunk = total.div_ceil(workers);
             let slabs = &*slabs;
+            let par_start = tls.as_ref().map(|_| Instant::now());
             std::thread::scope(|s| {
                 for (w, slot_chunk) in products.chunks_mut(chunk).enumerate() {
                     s.spawn(move || {
@@ -160,6 +179,18 @@ impl VirtualProcessor {
                     });
                 }
             });
+            if let (Some((ctx, parent)), Some(t0)) = (&tls, par_start) {
+                ctx.span_at(
+                    "exec.par",
+                    *parent,
+                    t0,
+                    Instant::now(),
+                    vec![
+                        ("tiles".to_string(), total.to_string()),
+                        ("workers".to_string(), workers.to_string()),
+                    ],
+                );
+            }
         }
         out.reset(m, b);
         for c in 0..gc {

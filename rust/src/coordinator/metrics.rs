@@ -132,18 +132,28 @@ impl LatencyHistogram {
     }
 
     /// Approximate percentile (µs): upper edge of the bucket containing
-    /// the q-quantile (bucket resolution = 2×).
+    /// the q-quantile (bucket resolution = 2×), clamped to the observed
+    /// maximum so a lone sample reports itself rather than up to 2× high.
     pub fn percentile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = ((total as f64) * q).ceil() as u64;
+        // At least one sample must be consumed: q = 0 would otherwise
+        // resolve target = 0 and "find" the quantile in the (possibly
+        // empty) [0, 2) bucket before looking at any count.
+        let target = (((total as f64) * q).ceil() as u64).max(1);
         let mut seen = 0;
+        let top = self.buckets.len() - 1;
         for (b, bucket) in self.buckets.iter().enumerate() {
             seen += bucket.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (b + 1);
+                // The top bucket is unbounded above; its nominal 2^40
+                // edge is fiction, so report the observed maximum.
+                if b == top {
+                    return self.max_us().max(1);
+                }
+                return (1u64 << (b + 1)).min(self.max_us().max(1));
             }
         }
         self.max_us()
@@ -552,6 +562,52 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert!(h.percentile_us(0.5) >= 1);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile_us(q), 0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn single_sample_percentile_is_the_sample_not_the_bucket_edge() {
+        let h = LatencyHistogram::default();
+        // 1000 µs lands in [512, 1024); the raw bucket edge would say 1024.
+        h.record(1000);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile_us(q), 1000, "q={q}");
+        }
+        assert!((h.mean_us() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_quantile_does_not_invent_a_low_bucket() {
+        let h = LatencyHistogram::default();
+        h.record(1000);
+        h.record(4000);
+        // q = 0 used to resolve target = 0 and report the empty [0, 2)
+        // bucket's edge (2 µs) without consuming a single sample. It
+        // must land in the smallest sample's bucket instead: 1000 µs
+        // lives in [512, 1024), so the reported upper edge is 1024.
+        assert_eq!(h.percentile_us(0.0), 1024);
+    }
+
+    #[test]
+    fn overflow_bucket_reports_the_observed_max() {
+        let h = LatencyHistogram::default();
+        h.record(1u64 << 45);
+        h.record(1u64 << 50);
+        // Both land in the unbounded top bucket; its nominal 2^40 edge
+        // must not leak out as a "percentile" below every sample.
+        assert_eq!(h.percentile_us(0.5), 1u64 << 50);
+        assert_eq!(h.percentile_us(0.99), 1u64 << 50);
+        assert_eq!(h.max_us(), 1u64 << 50);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! implement it with the same `dispatch(Job) → wait` shape, so `nn` /
 //! `bench` code is generic over where the processor fleet actually lives.
 
+use crate::obs::trace::TraceCtx;
 use crate::processor::Fidelity;
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
@@ -108,10 +109,21 @@ pub enum Admin {
     /// counters) when this process coordinates a sharded fleet; an empty
     /// healthy report otherwise.
     ClusterHealth,
+    /// The newest `n` retained traces from the flight recorder
+    /// ([`crate::obs::trace::Tracer::dump`]); which requests are retained
+    /// is governed by the serving process's `RFNN_TRACE` policy.
+    TraceDump { n: u64 },
+    /// The metrics snapshot rendered as Prometheus text exposition
+    /// ([`crate::obs::prometheus`]) for scrapers that do not speak the
+    /// JSON snapshot.
+    MetricsText,
     /// Ask the serving process to stop accepting connections and exit its
     /// accept loop. Replies [`AdminReply::ShuttingDown`] first.
     Shutdown,
 }
+
+/// Default trace count for a bare `{"admin":"trace_dump"}` request.
+pub const TRACE_DUMP_DEFAULT: u64 = 16;
 
 impl Admin {
     /// Stable wire name.
@@ -121,6 +133,8 @@ impl Admin {
             Admin::MetricsSnapshot => "metrics_snapshot",
             Admin::Health => "health",
             Admin::ClusterHealth => "cluster_health",
+            Admin::TraceDump { .. } => "trace_dump",
+            Admin::MetricsText => "metrics_text",
             Admin::Shutdown => "shutdown",
         }
     }
@@ -132,20 +146,28 @@ impl Admin {
             "metrics_snapshot" => Some(Admin::MetricsSnapshot),
             "health" => Some(Admin::Health),
             "cluster_health" => Some(Admin::ClusterHealth),
+            "trace_dump" => Some(Admin::TraceDump { n: TRACE_DUMP_DEFAULT }),
+            "metrics_text" => Some(Admin::MetricsText),
             "shutdown" => Some(Admin::Shutdown),
             _ => None,
         }
     }
 
-    /// Wire form: `{"v":3,"admin":"<name>"}`.
+    /// Wire form: `{"v":3,"admin":"<name>"}` (`trace_dump` carries its
+    /// count as `"n"`).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("v", Json::Num(WIRE_VERSION as f64)),
             ("admin", Json::Str(self.name().to_string())),
-        ])
+        ];
+        if let Admin::TraceDump { n } = self {
+            fields.push(("n", Json::Num(*n as f64)));
+        }
+        Json::obj(fields)
     }
 
-    /// Decode the wire form; the admin plane is strictly v3.
+    /// Decode the wire form; the admin plane is strictly v3. A missing or
+    /// malformed `trace_dump.n` falls back to [`TRACE_DUMP_DEFAULT`].
     pub fn from_json(v: &Json) -> Result<Admin> {
         let ver = get_index(v, "v")?;
         if ver != WIRE_VERSION {
@@ -154,8 +176,16 @@ impl Admin {
             )));
         }
         let name = get_str(v, "admin")?;
-        Admin::from_name(name)
-            .ok_or_else(|| Error::msg(format!("wire: unknown admin request '{name}'")))
+        let mut admin = Admin::from_name(name)
+            .ok_or_else(|| Error::msg(format!("wire: unknown admin request '{name}'")))?;
+        if let Admin::TraceDump { n } = &mut admin {
+            if let Some(k) = v.get("n").and_then(Json::as_f64) {
+                if k.is_finite() && k >= 0.0 && k.fract() == 0.0 {
+                    *n = k as u64;
+                }
+            }
+        }
+        Ok(admin)
     }
 
     /// Serialize compactly.
@@ -182,6 +212,11 @@ pub enum AdminReply {
     /// The cluster-health document (see
     /// [`ClusterMetrics::snapshot`](crate::coordinator::metrics::ClusterMetrics)).
     Cluster(Json),
+    /// The flight-recorder dump document
+    /// (`{"dropped":N,"traces":[{"trace":id,"spans":[..]},..]}`).
+    Traces(Json),
+    /// The Prometheus text exposition of the metrics snapshot.
+    MetricsText(String),
     /// Shutdown acknowledged; the accept loop exits after this reply.
     ShuttingDown,
 }
@@ -248,6 +283,14 @@ impl AdminReply {
                 fields.push(("reply", Json::Str("cluster".into())));
                 fields.push(("cluster", snapshot.clone()));
             }
+            AdminReply::Traces(dump) => {
+                fields.push(("reply", Json::Str("traces".into())));
+                fields.push(("traces", dump.clone()));
+            }
+            AdminReply::MetricsText(text) => {
+                fields.push(("reply", Json::Str("metrics_text".into())));
+                fields.push(("text", Json::Str(text.clone())));
+            }
             AdminReply::ShuttingDown => {
                 fields.push(("reply", Json::Str("shutting_down".into())));
             }
@@ -288,6 +331,12 @@ impl AdminReply {
                     .cloned()
                     .ok_or_else(|| Error::msg("wire: missing field 'cluster'"))?,
             )),
+            "traces" => Ok(AdminReply::Traces(
+                v.get("traces")
+                    .cloned()
+                    .ok_or_else(|| Error::msg("wire: missing field 'traces'"))?,
+            )),
+            "metrics_text" => Ok(AdminReply::MetricsText(get_str(v, "text")?.to_string())),
             "shutting_down" => Ok(AdminReply::ShuttingDown),
             other => Err(Error::msg(format!("wire: unknown admin reply '{other}'"))),
         }
@@ -370,7 +419,17 @@ impl Router {
     /// Typed submission through the router's ticket table (the path
     /// `submit_wire` takes after decoding).
     pub fn submit(&self, job: Job) -> Result<u64, RouterError> {
-        let ticket = self.svc.submit(job).map_err(RouterError::Submit)?;
+        self.submit_traced(job, None)
+    }
+
+    /// Typed submission carrying a tracing context: the service records
+    /// queue-wait / execution spans against it while the job is in flight.
+    pub fn submit_traced(
+        &self,
+        job: Job,
+        trace: Option<TraceCtx>,
+    ) -> Result<u64, RouterError> {
+        let ticket = self.svc.submit_traced(job, trace).map_err(RouterError::Submit)?;
         let id = ticket.id();
         self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner).insert(id, ticket);
         Ok(id)
@@ -379,8 +438,18 @@ impl Router {
     /// Submit an already-parsed wire document (transports that parse the
     /// enclosing frame envelope hand the nested job document here).
     pub fn submit_json(&self, doc: &Json) -> Result<u64, RouterError> {
+        self.submit_json_traced(doc, None)
+    }
+
+    /// Wire-document submission carrying a tracing context (the TCP front
+    /// end's path: the envelope's `trace` field became `trace` here).
+    pub fn submit_json_traced(
+        &self,
+        doc: &Json,
+        trace: Option<TraceCtx>,
+    ) -> Result<u64, RouterError> {
         let job = Job::from_json(doc).map_err(|e| self.reject_decode(e))?;
-        self.submit(job)
+        self.submit_traced(job, trace)
     }
 
     /// Execute a typed control-plane request.
@@ -396,6 +465,12 @@ impl Router {
             Admin::ClusterHealth => {
                 AdminReply::Cluster(self.svc.metrics().cluster_snapshot())
             }
+            Admin::TraceDump { n } => {
+                AdminReply::Traces(crate::obs::trace::tracer().dump(n as usize))
+            }
+            Admin::MetricsText => AdminReply::MetricsText(crate::obs::prometheus(
+                &self.svc.metrics().snapshot(),
+            )),
             Admin::Shutdown => {
                 self.stop.store(true, Ordering::SeqCst);
                 AdminReply::ShuttingDown
@@ -593,10 +668,22 @@ mod tests {
             Admin::MetricsSnapshot,
             Admin::Health,
             Admin::ClusterHealth,
+            Admin::TraceDump { n: 5 },
+            Admin::MetricsText,
             Admin::Shutdown,
         ] {
             assert_eq!(Admin::decode(&a.encode()).unwrap(), a);
         }
+        // A bare trace_dump (no `n`) gets the default count; a malformed
+        // `n` is ignored, not rejected.
+        assert_eq!(
+            Admin::decode(r#"{"v":3,"admin":"trace_dump"}"#).unwrap(),
+            Admin::TraceDump { n: TRACE_DUMP_DEFAULT }
+        );
+        assert_eq!(
+            Admin::decode(r#"{"v":3,"admin":"trace_dump","n":"lots"}"#).unwrap(),
+            Admin::TraceDump { n: TRACE_DUMP_DEFAULT }
+        );
         match router.admin_wire(Admin::ListProcessors.encode().as_bytes()).unwrap() {
             AdminReply::Processors(list) => {
                 assert_eq!(list.len(), 2);
@@ -622,6 +709,27 @@ mod tests {
             AdminReply::Cluster(snap) => {
                 assert_eq!(snap.get("health").and_then(Json::as_str), Some("healthy"));
                 let reply = AdminReply::Cluster(snap);
+                assert_eq!(AdminReply::decode(&reply.encode()).unwrap(), reply);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The flight-recorder dump has the pinned shape even when empty,
+        // and round-trips its wire form.
+        match router.admin(Admin::TraceDump { n: 4 }) {
+            AdminReply::Traces(dump) => {
+                assert!(dump.get("dropped").and_then(Json::as_f64).is_some());
+                assert!(dump.get("traces").and_then(Json::as_arr).is_some());
+                let reply = AdminReply::Traces(dump);
+                assert_eq!(AdminReply::decode(&reply.encode()).unwrap(), reply);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Prometheus text exposition carries at least the header line.
+        match router.admin(Admin::MetricsText) {
+            AdminReply::MetricsText(text) => {
+                assert!(text.starts_with("# rfnn"));
+                assert!(text.contains("rfnn_"));
+                let reply = AdminReply::MetricsText(text);
                 assert_eq!(AdminReply::decode(&reply.encode()).unwrap(), reply);
             }
             other => panic!("unexpected {other:?}"),

@@ -24,6 +24,7 @@ use super::service::{
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::nn::rfnn_mnist::MnistRfnn;
+use crate::obs::log;
 use crate::processor::LinearProcessor;
 use crate::runtime::Engine;
 use crate::util::error::{Error, Result};
@@ -191,7 +192,11 @@ impl MnistExecutor {
             Backend::Pjrt(dir) => match Engine::cpu(&dir) {
                 Ok(engine) => Runtime::Pjrt(engine),
                 Err(e) => {
-                    eprintln!("PJRT setup failed ({e}); serving natively");
+                    log::warn(
+                        "server",
+                        "PJRT setup failed; serving natively",
+                        &[("error", e.to_string())],
+                    );
                     Runtime::Native
                 }
             },
@@ -206,7 +211,11 @@ impl MnistExecutor {
                 b.sort_unstable();
                 for &cap in &b {
                     if let Err(e) = engine.load(&format!("rfnn_mnist_fwd_b{cap}")) {
-                        eprintln!("warmup failed for b{cap}: {e}");
+                        log::warn(
+                            "server",
+                            "PJRT warmup failed",
+                            &[("batch_cap", cap.to_string()), ("error", e.to_string())],
+                        );
                     }
                 }
                 b
@@ -250,7 +259,11 @@ impl MnistExecutor {
                 match engine.execute_f32(&name, &args) {
                     Ok(p) => p,
                     Err(e) => {
-                        eprintln!("PJRT execution failed ({e}); falling back to native");
+                        log::error(
+                            "server",
+                            "PJRT execution failed; falling back to native",
+                            &[("error", e.to_string())],
+                        );
                         self.bundle.forward_native(x, cap)
                     }
                 }

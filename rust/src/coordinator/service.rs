@@ -53,6 +53,7 @@ use crate::math::c64::C64;
 use crate::math::cmat::CMat;
 use crate::microwave::phase_shifter::N_STATES;
 use crate::nn::rfnn2x2::{ideal_device, Rfnn2x2};
+use crate::obs::trace::TraceCtx;
 use crate::processor::{Fidelity, LinearProcessor};
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
@@ -786,6 +787,9 @@ pub struct JobHandle {
     pub job: Job,
     /// Admission timestamp (for queueing-latency metrics).
     pub enqueued: Instant,
+    /// The request's tracing context, when it is traced: workers record
+    /// queue-wait / coalesce / execution spans against it.
+    pub trace: Option<TraceCtx>,
     reply: Sender<JobResult>,
     metrics: Arc<Metrics>,
     kind: JobKind,
@@ -1136,8 +1140,19 @@ impl ProcessorService {
     /// register the resulting processor into the live pool before
     /// answering.
     pub fn submit(&self, job: Job) -> Result<Ticket, SubmitError> {
+        self.submit_traced(job, None)
+    }
+
+    /// [`Self::submit`] carrying a tracing context. The context rides on
+    /// the [`JobHandle`] into the worker, which records its spans; the
+    /// caller still owns the context's lifetime (`finish` after wait).
+    pub fn submit_traced(
+        &self,
+        job: Job,
+        trace: Option<TraceCtx>,
+    ) -> Result<Ticket, SubmitError> {
         if matches!(job, Job::Compile { .. } | Job::ShardCompile { .. }) {
-            return self.submit_compile(job);
+            return self.submit_compile(job, trace);
         }
         let kind = job.kind();
         let name = job.processor().to_string();
@@ -1159,8 +1174,15 @@ impl ProcessorService {
         };
         let (reply, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let handle =
-            JobHandle { id, job, enqueued: Instant::now(), reply, metrics: metrics.clone(), kind };
+        let handle = JobHandle {
+            id,
+            job,
+            enqueued: Instant::now(),
+            trace,
+            reply,
+            metrics: metrics.clone(),
+            kind,
+        };
         match tx.try_send(handle) {
             Ok(()) => Ok(Ticket { id, processor: name, rx }),
             Err(TrySendError::Full(_)) => {
@@ -1183,7 +1205,7 @@ impl ProcessorService {
     /// [`SubmitError::Overloaded`], so a wire peer can never spawn
     /// unbounded synthesis work. The counters keep the
     /// `submitted = served + rejected` invariant.
-    fn submit_compile(&self, job: Job) -> Result<Ticket, SubmitError> {
+    fn submit_compile(&self, job: Job, trace: Option<TraceCtx>) -> Result<Ticket, SubmitError> {
         let kind = job.kind();
         let metrics = self.pool.metrics.clone();
         metrics.record_submitted(kind);
@@ -1205,18 +1227,25 @@ impl ProcessorService {
             // would permanently shrink the compile plane) nor break the
             // submitted = served + rejected invariant: catch it and
             // answer as a rejection.
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match job {
-                Job::Compile { name, target, tile, fidelity } => {
-                    compile_and_register(&pool, &name, target, tile, fidelity)
-                }
-                Job::ShardCompile { name, spec } => {
-                    shard_compile_and_register(&pool, &name, spec)
-                }
-                _ => unreachable!("submit_compile is only called with compile-kind jobs"),
-            }))
-            .unwrap_or_else(|_| JobResult::Rejected {
-                reason: "compile: synthesis panicked (see server log)".to_string(),
-            });
+            let result = {
+                let _span = trace.as_ref().map(|c| {
+                    let mut s = c.span("compile", c.root());
+                    s.note("kind", kind.name());
+                    s
+                });
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match job {
+                    Job::Compile { name, target, tile, fidelity } => {
+                        compile_and_register(&pool, &name, target, tile, fidelity)
+                    }
+                    Job::ShardCompile { name, spec } => {
+                        shard_compile_and_register(&pool, &name, spec)
+                    }
+                    _ => unreachable!("submit_compile is only called with compile-kind jobs"),
+                }))
+                .unwrap_or_else(|_| JobResult::Rejected {
+                    reason: "compile: synthesis panicked (see server log)".to_string(),
+                })
+            };
             inflight.fetch_sub(1, Ordering::SeqCst);
             metrics.record_served(kind);
             let _ = reply.send(result);
@@ -1438,9 +1467,11 @@ fn virtual_worker(
             }
             let t0 = Instant::now();
             let probs = bundle.forward_with(&vp, &x, n);
-            let exec_us = t0.elapsed().as_micros() as u64;
+            let t1 = Instant::now();
+            let exec_us = t1.duration_since(t0).as_micros() as u64;
             metrics.record_batch(n, n, exec_us);
             for (r, h) in infers.into_iter().enumerate() {
+                record_batch_spans(&h, formed, t0, t1, n);
                 let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1489,7 +1520,8 @@ fn mnist_worker(
             }
             let t0 = Instant::now();
             let probs = exec.run(&x, cap);
-            let exec_us = t0.elapsed().as_micros() as u64;
+            let t1 = Instant::now();
+            let exec_us = t1.duration_since(t0).as_micros() as u64;
             metrics.record_batch(served, cap, exec_us);
             for (r, h) in infers.into_iter().enumerate() {
                 if r >= served {
@@ -1500,6 +1532,7 @@ fn mnist_worker(
                     });
                     continue;
                 }
+                record_batch_spans(&h, formed, t0, t1, served);
                 let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1546,12 +1579,14 @@ fn classify_worker(
                 .collect();
             let t0 = Instant::now();
             let yhat = models[state].forward_batch(&dev, &pts);
-            let exec_us = t0.elapsed().as_micros() as u64;
+            let t1 = Instant::now();
+            let exec_us = t1.duration_since(t0).as_micros() as u64;
             metrics.record_batch(batch.len(), batch.len(), exec_us);
             if reconfigured {
                 metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
             }
             for (k, h) in batch.into_iter().enumerate() {
+                record_batch_spans(&h, t0, t0, t1, pts.len());
                 let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1600,6 +1635,30 @@ fn processor_worker(
     }
 }
 
+/// Record the standard span triplet for one traced batched job: queue
+/// wait (admission → batch formation), coalesce (formation → launch),
+/// and the shared execution window, all parented to the request root.
+fn record_batch_spans(h: &JobHandle, formed: Instant, t0: Instant, end: Instant, batch: usize) {
+    if let Some(ctx) = &h.trace {
+        let root = ctx.root();
+        ctx.span_at("queue.wait", root, h.enqueued, formed, vec![]);
+        ctx.span_at(
+            "batch.coalesce",
+            root,
+            formed,
+            t0,
+            vec![("batch".to_string(), batch.to_string())],
+        );
+        ctx.span_at(
+            "exec",
+            root,
+            t0,
+            end,
+            vec![("batch".to_string(), batch.to_string())],
+        );
+    }
+}
+
 /// Execute one `RawApply` against `p` (shared by the processor worker and
 /// the MNIST worker's served-matrix probes).
 fn serve_raw(p: &dyn LinearProcessor, metrics: &Metrics, h: JobHandle) {
@@ -1618,7 +1677,20 @@ fn serve_raw(p: &dyn LinearProcessor, metrics: &Metrics, h: JobHandle) {
                 // The fallible entry so a backend whose execution can fail
                 // at runtime (a sharded processor with unreachable nodes)
                 // rejects the job instead of killing the worker thread.
-                match p.try_apply_batch(x) {
+                // Traced jobs run with the context installed thread-local,
+                // so deep layers (the tiled executor's per-column loop, the
+                // sharded scatter/gather) attach their own child spans.
+                let applied = match &h.trace {
+                    Some(ctx) => {
+                        ctx.span_at("queue.wait", ctx.root(), h.enqueued, t0, vec![]);
+                        let mut span = ctx.span("exec", ctx.root());
+                        span.note("batch", x.cols());
+                        let parent = span.id();
+                        crate::obs::trace::with_current(ctx, parent, || p.try_apply_batch(x))
+                    }
+                    None => p.try_apply_batch(x),
+                };
+                match applied {
                     Ok(y) => {
                         let exec_us = t0.elapsed().as_micros() as u64;
                         // One dispatch of B vectors: occupancy = B (≥ 1 so
@@ -1791,6 +1863,45 @@ mod tests {
             JobResult::Rejected { reason } => assert!(reason.contains("out of range"), "{reason}"),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn traced_jobs_record_queue_and_exec_spans() {
+        use crate::obs::trace::Policy;
+        let pool = ProcessorPool::new();
+        pool.register(
+            "mesh4",
+            Workload::Processor(Box::new(DiscreteMesh::new(4, MeshBackend::Ideal))),
+            quick_batch(),
+        )
+        .unwrap();
+        let svc = ProcessorService::new(pool);
+        let ctx = TraceCtx::start_with(Policy::All, "server.request").expect("traced");
+        let ticket = svc
+            .submit_traced(
+                Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) },
+                Some(ctx.clone()),
+            )
+            .expect("admitted");
+        match ticket.wait().unwrap() {
+            JobResult::RawApply { y } => assert_eq!((y.rows(), y.cols()), (4, 4)),
+            other => panic!("unexpected {other:?}"),
+        }
+        let payload = ctx.finish(true).expect("exported");
+        let spans = payload.get("spans").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+        assert!(names.contains(&"server.request"), "{names:?}");
+        assert!(names.contains(&"queue.wait"), "{names:?}");
+        assert!(names.contains(&"exec"), "{names:?}");
+        // The worker's spans hang under the request root.
+        let root = ctx.root() as f64;
+        let exec = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some("exec"))
+            .unwrap();
+        assert_eq!(exec.get("parent").unwrap().as_f64(), Some(root));
+        assert_eq!(exec.get("notes").unwrap().get("batch").unwrap().as_str(), Some("4"));
     }
 
     #[test]

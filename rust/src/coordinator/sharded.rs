@@ -41,6 +41,8 @@
 use crate::compiler::ShardSpec;
 use crate::math::c64::C64;
 use crate::math::cmat::CMat;
+use crate::obs::log;
+use crate::obs::trace::{self, TraceCtx};
 use crate::processor::{Fidelity, LinearProcessor, ReprogramCost};
 use crate::util::error::{Error, Result};
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -252,6 +254,17 @@ impl ShardedProcessor {
                 .map(|t| t.elapsed() >= self.cfg.reprobe_every)
                 .unwrap_or(true);
             if due {
+                if log::enabled(log::Level::Debug) {
+                    log::debug(
+                        "sharded",
+                        "re-probing tripped replica",
+                        &[
+                            ("shard", si.to_string()),
+                            ("replica", r.to_string()),
+                            ("addr", rep.addr.clone()),
+                        ],
+                    );
+                }
                 order.push(r);
             }
         }
@@ -261,40 +274,91 @@ impl ShardedProcessor {
     /// Count one failure against replica `r` of shard `si`: the cached
     /// client is dropped (a failed [`RemoteClient`] never recovers) and
     /// the replica trips once the consecutive-failure threshold is hit.
-    fn record_failure(&self, si: usize, r: usize) {
+    /// Returns whether this failure freshly tripped the replica (an
+    /// up → down transition, logged once — not on every repeat failure).
+    fn record_failure(&self, si: usize, r: usize) -> bool {
         let rep = &self.shards[si].replicas[r];
         rep.disconnect();
         let fails = rep.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
         if fails >= self.cfg.trip_after {
+            let was_up = self.metrics.shards[si].replicas[r].is_up();
             self.metrics.shards[si].replicas[r].set_up(false);
             *lock(&rep.tripped_at) = Some(Instant::now());
+            if was_up {
+                log::warn(
+                    "sharded",
+                    "replica tripped",
+                    &[
+                        ("shard", si.to_string()),
+                        ("replica", r.to_string()),
+                        ("addr", rep.addr.clone()),
+                        ("consecutive_failures", fails.to_string()),
+                    ],
+                );
+            }
+            return was_up;
         }
+        false
     }
 
     /// A served answer from replica `r` of shard `si` (including a
-    /// `Rejected` — the node is alive): reset the failure trip.
+    /// `Rejected` — the node is alive): reset the failure trip. A
+    /// down → up transition (a successful re-probe) is logged once.
     fn record_success(&self, si: usize, r: usize) {
         let rep = &self.shards[si].replicas[r];
         rep.consecutive_failures.store(0, Ordering::Relaxed);
         *lock(&rep.tripped_at) = None;
+        let was_down = !self.metrics.shards[si].replicas[r].is_up();
         self.metrics.shards[si].replicas[r].set_up(true);
+        if was_down {
+            log::info(
+                "sharded",
+                "replica recovered",
+                &[
+                    ("shard", si.to_string()),
+                    ("replica", r.to_string()),
+                    ("addr", rep.addr.clone()),
+                ],
+            );
+        }
     }
 
     /// Submit shard `si`'s slice of work to its first willing replica.
-    fn scatter_one(&self, si: usize, x: &CMat) -> Result<(usize, RemoteTicket)> {
+    /// When the apply is traced, `trace` carries the context plus this
+    /// shard's scatter span: the wire request forwards it (so the node's
+    /// spans stitch under the scatter span) and every failed submit
+    /// surfaces as an annotated `failover` event.
+    fn scatter_one(
+        &self,
+        si: usize,
+        x: &CMat,
+        trace: Option<(&TraceCtx, u64)>,
+    ) -> Result<(usize, RemoteTicket)> {
         let shard = &self.shards[si];
         let mut last = String::from("no replica configured");
         for r in self.candidates(si) {
             let job =
                 Job::RawApply { processor: shard.processor.clone(), x: x.clone() };
-            let attempt = shard.replicas[r].client().and_then(|c| c.submit(job));
+            let wire = trace.map(|(ctx, span)| ctx.wire(span));
+            let attempt =
+                shard.replicas[r].client().and_then(|c| c.submit_traced(job, wire));
             match attempt {
                 Ok(ticket) => return Ok((r, ticket)),
                 Err(e) => {
                     last = e.to_string();
-                    self.record_failure(si, r);
+                    let tripped = self.record_failure(si, r);
                     self.metrics.shards[si].retries.fetch_add(1, Ordering::Relaxed);
                     self.metrics.shards[si].failovers.fetch_add(1, Ordering::Relaxed);
+                    if let Some((ctx, span)) = trace {
+                        let mut notes = vec![
+                            ("addr".to_string(), shard.replicas[r].addr.clone()),
+                            ("error".to_string(), last.clone()),
+                        ];
+                        if tripped {
+                            notes.push(("tripped".to_string(), "true".to_string()));
+                        }
+                        ctx.event("failover", span, notes);
+                    }
                 }
             }
         }
@@ -302,16 +366,28 @@ impl ShardedProcessor {
     }
 
     /// One full submit+wait against replica `r` of shard `si` — the
-    /// failover path after a scattered ticket dies.
-    fn try_replica(&self, si: usize, r: usize, x: &CMat, cols: usize) -> Result<CMat> {
+    /// failover path after a scattered ticket dies. Traced applies
+    /// forward the context and adopt the node's returned spans.
+    fn try_replica(
+        &self,
+        si: usize,
+        r: usize,
+        x: &CMat,
+        cols: usize,
+        trace: Option<(&TraceCtx, u64)>,
+    ) -> Result<CMat> {
         let shard = &self.shards[si];
         let job = Job::RawApply { processor: shard.processor.clone(), x: x.clone() };
+        let wire = trace.map(|(ctx, span)| ctx.wire(span));
         let attempt = shard.replicas[r]
             .client()
-            .and_then(|c| c.submit(job))
-            .and_then(|t| t.wait_timeout(self.cfg.timeout));
+            .and_then(|c| c.submit_traced(job, wire))
+            .and_then(|t| t.wait_timeout_traced(self.cfg.timeout));
         match attempt {
-            Ok(result) => {
+            Ok((result, spans)) => {
+                if let (Some((ctx, _)), Some(payload)) = (trace, &spans) {
+                    ctx.adopt(payload, &shard.replicas[r].addr);
+                }
                 self.record_success(si, r);
                 self.accept(si, result, cols)
             }
@@ -430,13 +506,26 @@ impl LinearProcessor for ShardedProcessor {
             )));
         }
         let cols = x.cols();
+        // The request's trace context, when serve_raw installed one for
+        // this thread: every shard gets scatter/gather spans, the wire
+        // requests forward the context, and the nodes' returned spans are
+        // adopted — one sharded apply, one stitched cross-process trace.
+        let tls = trace::current();
         // Scatter: every shard gets a non-blocking ticket, so the cluster
         // computes concurrently. A shard whose every replica refuses the
         // SUBMIT is already lost — surfaced here, never dropped.
         let mut pending = Vec::with_capacity(self.shards.len());
         for si in 0..self.shards.len() {
             let t0 = Instant::now();
-            let sub = self.scatter_one(si, x)?;
+            let sub = match &tls {
+                Some((ctx, parent)) => {
+                    let mut span = ctx.span(&format!("scatter.s{si}"), *parent);
+                    span.note("processor", &self.shards[si].processor);
+                    let sid = span.id();
+                    self.scatter_one(si, x, Some((ctx, sid)))?
+                }
+                None => self.scatter_one(si, x, None)?,
+            };
             self.metrics.shards[si].scatter.record(t0.elapsed().as_micros() as u64);
             pending.push(sub);
         }
@@ -446,19 +535,52 @@ impl LinearProcessor for ShardedProcessor {
         let mut y = CMat::zeros(out, cols);
         for (si, (first, ticket)) in pending.into_iter().enumerate() {
             let t0 = Instant::now();
-            let part = match ticket.wait_timeout(self.cfg.timeout) {
-                Ok(result) => {
+            let gspan = tls
+                .as_ref()
+                .map(|(ctx, parent)| ctx.span(&format!("gather.s{si}"), *parent));
+            let tref: Option<(&TraceCtx, u64)> = match (&tls, &gspan) {
+                (Some((ctx, _)), Some(g)) => Some((ctx, g.id())),
+                _ => None,
+            };
+            let part = match ticket.wait_timeout_traced(self.cfg.timeout) {
+                Ok((result, spans)) => {
+                    if let (Some((ctx, _)), Some(payload)) = (tref, &spans) {
+                        ctx.adopt(payload, &self.shards[si].replicas[first].addr);
+                    }
                     self.record_success(si, first);
                     self.accept(si, result, cols)?
                 }
                 Err(first_err) => {
-                    self.record_failure(si, first);
+                    let tripped = self.record_failure(si, first);
                     self.metrics.shards[si].retries.fetch_add(1, Ordering::Relaxed);
+                    if let Some((ctx, g)) = tref {
+                        let mut notes = vec![
+                            (
+                                "addr".to_string(),
+                                self.shards[si].replicas[first].addr.clone(),
+                            ),
+                            ("error".to_string(), first_err.to_string()),
+                        ];
+                        if tripped {
+                            notes.push(("tripped".to_string(), "true".to_string()));
+                        }
+                        ctx.event("retry", g, notes);
+                    }
                     let mut found = None;
                     let mut last = first_err.to_string();
                     for r in self.candidates(si) {
                         self.metrics.shards[si].failovers.fetch_add(1, Ordering::Relaxed);
-                        match self.try_replica(si, r, x, cols) {
+                        if let Some((ctx, g)) = tref {
+                            ctx.event(
+                                "failover",
+                                g,
+                                vec![(
+                                    "addr".to_string(),
+                                    self.shards[si].replicas[r].addr.clone(),
+                                )],
+                            );
+                        }
+                        match self.try_replica(si, r, x, cols, tref) {
                             Ok(part) => {
                                 found = Some(part);
                                 break;
@@ -478,6 +600,7 @@ impl LinearProcessor for ShardedProcessor {
                     found.ok_or_else(|| self.lost(si, &last))?
                 }
             };
+            drop(gspan);
             self.metrics.shards[si].gather.record(t0.elapsed().as_micros() as u64);
             let start = self.shards[si].out_row_start;
             for r in 0..part.rows() {
@@ -562,6 +685,63 @@ mod tests {
         // Deploys are idempotent: the same specs land on the same nodes.
         let _again = ShardedProcessor::deploy("net", &shards, &addrs, quick_cfg())
             .expect("re-deploy is idempotent");
+    }
+
+    #[test]
+    fn traced_sharded_apply_stitches_node_spans_over_loopback() {
+        use crate::obs::trace::{with_current, Policy};
+        use crate::util::json::Json;
+        let mut rng = Rng::new(0xC4);
+        let target = CMat::from_fn(8, 6, |_, _| C64::new(rng.normal(), rng.normal()));
+        let spec = PlanSpec::new(2, Fidelity::Measured);
+        let shards = plan_shards(&target, &spec, 2).unwrap();
+        let nodes: Vec<_> = (0..2).map(|_| loopback_node()).collect();
+        let addrs: Vec<Vec<String>> = (0..2).map(|i| vec![nodes[i].0.clone()]).collect();
+        let sp = ShardedProcessor::deploy("tr", &shards, &addrs, quick_cfg()).unwrap();
+        let x = CMat::from_fn(6, 3, |_, _| C64::new(rng.normal(), rng.normal()));
+
+        let ctx = TraceCtx::start_with(Policy::All, "client.request").expect("traced");
+        let y = with_current(&ctx, ctx.root(), || sp.try_apply_batch(&x)).unwrap();
+        assert_eq!((y.rows(), y.cols()), (8, 3));
+        let payload = ctx.finish(true).expect("exported");
+        let spans = payload.get("spans").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+        for want in ["scatter.s0", "scatter.s1", "gather.s0", "gather.s1"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        // Each node's spans came back over the wire and were adopted
+        // under the matching scatter span, tagged with the node address
+        // and rewritten to the shared trace id.
+        let scatter0 = spans
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some("scatter.s0"))
+            .unwrap();
+        let sid = scatter0.get("id").unwrap().as_f64().unwrap();
+        let remote_roots: Vec<&Json> = spans
+            .iter()
+            .filter(|s| {
+                s.get("node").is_some()
+                    && s.get("name").and_then(Json::as_str) == Some("server.request")
+            })
+            .collect();
+        assert_eq!(remote_roots.len(), 2, "one remote root per shard");
+        assert!(remote_roots.iter().any(|s| s.get("parent").unwrap().as_f64() == Some(sid)));
+        for s in &remote_roots {
+            assert_eq!(s.get("trace").unwrap().as_f64(), Some(ctx.trace_id() as f64));
+            let node = s.get("node").unwrap().as_str().unwrap();
+            assert!(node == nodes[0].0 || node == nodes[1].0, "unknown node tag {node}");
+        }
+        // Node-side decode and execution spans crossed the wire too.
+        for want in ["frame.decode", "queue.wait", "exec"] {
+            assert!(
+                spans.iter().any(|s| {
+                    s.get("node").is_some()
+                        && s.get("name").and_then(Json::as_str) == Some(want)
+                }),
+                "missing remote {want}"
+            );
+        }
     }
 
     #[test]

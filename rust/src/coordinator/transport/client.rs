@@ -13,7 +13,9 @@
 //! pending request with the same reason and marks the client dead —
 //! nothing ever hangs on a vanished server.
 
+use crate::obs::trace::WireTrace;
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,9 +31,14 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// A job's answer plus the optional span payload the server attached to
+/// the response envelope (`trace.spans`, when the request carried a
+/// trace context).
+type JobReply = (Result<JobResult>, Option<Json>);
+
 struct ClientInner {
     writer: Mutex<TcpStream>,
-    pending_jobs: Mutex<HashMap<u64, Sender<Result<JobResult>>>>,
+    pending_jobs: Mutex<HashMap<u64, Sender<JobReply>>>,
     pending_admin: Mutex<HashMap<u64, Sender<Result<AdminReply>>>>,
     next_id: AtomicU64,
     /// `Some(reason)` once the connection failed; fails fast thereafter.
@@ -42,7 +49,7 @@ impl ClientInner {
     fn fail_all(&self, reason: &str) {
         lock(&self.dead).get_or_insert_with(|| reason.to_string());
         for (_, tx) in lock(&self.pending_jobs).drain() {
-            let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+            let _ = tx.send((Err(Error::msg(format!("remote: {reason}"))), None));
         }
         for (_, tx) in lock(&self.pending_admin).drain() {
             let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
@@ -59,7 +66,7 @@ impl ClientInner {
         let reason = lock(&self.dead).clone();
         if let Some(reason) = reason {
             if let Some(tx) = lock(&self.pending_jobs).remove(&id) {
-                let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
+                let _ = tx.send((Err(Error::msg(format!("remote: {reason}"))), None));
             }
             if let Some(tx) = lock(&self.pending_admin).remove(&id) {
                 let _ = tx.send(Err(Error::msg(format!("remote: {reason}"))));
@@ -77,7 +84,7 @@ pub struct RemoteClient {
 /// [`Ticket`](crate::coordinator::service::Ticket).
 pub struct RemoteTicket {
     id: u64,
-    rx: Receiver<Result<JobResult>>,
+    rx: Receiver<JobReply>,
 }
 
 impl RemoteClient {
@@ -133,11 +140,18 @@ impl RemoteClient {
     /// Submit a job; server-side refusals (overload shed, unknown
     /// processor, worker rejections) surface when the ticket is waited.
     pub fn submit(&self, job: Job) -> Result<RemoteTicket> {
+        self.submit_traced(job, None)
+    }
+
+    /// Submit carrying a distributed-tracing context: the server hangs
+    /// its spans under `trace.parent` and returns them on the response
+    /// envelope ([`RemoteTicket::wait_timeout_traced`] surfaces them).
+    pub fn submit_traced(&self, job: Job, trace: Option<WireTrace>) -> Result<RemoteTicket> {
         self.check_alive()?;
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         lock(&self.inner.pending_jobs).insert(id, tx);
-        if let Err(e) = self.write(&Request::Job { id, job }) {
+        if let Err(e) = self.write(&Request::Job { id, job, trace }) {
             lock(&self.inner.pending_jobs).remove(&id);
             return Err(e);
         }
@@ -189,15 +203,24 @@ impl RemoteTicket {
 
     /// Block until the server answers (or the connection dies).
     pub fn wait(self) -> Result<JobResult> {
-        self.rx
-            .recv()
-            .map_err(|_| Error::msg("remote: connection closed before reply"))?
+        let (result, _) =
+            self.rx.recv().map_err(|_| Error::msg("remote: connection closed before reply"))?;
+        result
     }
 
     /// Bounded wait; the ticket survives a timeout and can be waited
     /// again.
     pub fn wait_timeout(&self, d: Duration) -> Result<JobResult> {
-        self.rx.recv_timeout(d).map_err(|e| Error::msg(format!("remote: no reply ({e})")))?
+        Ok(self.wait_timeout_traced(d)?.0)
+    }
+
+    /// Bounded wait surfacing the server's span payload (the response
+    /// envelope's `trace` field) alongside the result — `None` when the
+    /// request carried no trace context or the server predates tracing.
+    pub fn wait_timeout_traced(&self, d: Duration) -> Result<(JobResult, Option<Json>)> {
+        let (result, spans) =
+            self.rx.recv_timeout(d).map_err(|e| Error::msg(format!("remote: no reply ({e})")))?;
+        Ok((result?, spans))
     }
 }
 
@@ -222,8 +245,14 @@ fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
                 let Ok(text) = std::str::from_utf8(&payload) else {
                     break "server sent a non-UTF-8 frame".to_string();
                 };
-                match Response::decode(text) {
-                    Ok(resp) => dispatch_response(&inner, resp),
+                let Some(doc) = crate::util::json::parse(text) else {
+                    break "undecodable response: malformed JSON".to_string();
+                };
+                // The envelope-level `trace` field rides outside the
+                // typed Response; lift it before the typed decode.
+                let spans = doc.get("trace").cloned();
+                match Response::from_json(&doc) {
+                    Ok(resp) => dispatch_response(&inner, resp, spans),
                     Err(e) => break format!("undecodable response: {e}"),
                 }
             }
@@ -234,11 +263,11 @@ fn reader_loop(mut stream: TcpStream, inner: Arc<ClientInner>) {
     inner.fail_all(&reason);
 }
 
-fn dispatch_response(inner: &ClientInner, resp: Response) {
+fn dispatch_response(inner: &ClientInner, resp: Response, spans: Option<Json>) {
     match resp {
         Response::Result { id, result } => {
             if let Some(tx) = lock(&inner.pending_jobs).remove(&id) {
-                let _ = tx.send(Ok(result));
+                let _ = tx.send((Ok(result), spans));
             }
         }
         Response::AdminReply { id, reply } => {
@@ -254,7 +283,7 @@ fn dispatch_response(inner: &ClientInner, resp: Response) {
         Response::Error { id, code, message } => {
             let err = || Err(Error::msg(format!("remote: {code}: {message}")));
             if let Some(tx) = lock(&inner.pending_jobs).remove(&id) {
-                let _ = tx.send(err());
+                let _ = tx.send((err(), None));
             } else if let Some(tx) = lock(&inner.pending_admin).remove(&id) {
                 let _ = tx.send(err());
             }

@@ -37,6 +37,7 @@ pub use client::{RemoteClient, RemoteTicket};
 pub use frame::{read_frame, write_frame, MAX_FRAME};
 pub use tcp::{TcpConfig, TcpFrontEnd};
 
+use crate::obs::trace::WireTrace;
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
 
@@ -83,8 +84,13 @@ pub fn auth_token_of(doc: &Json) -> Option<&str> {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Submit the nested job; answered by `Response::Result` or
-    /// `Response::Error` under the same id.
-    Job { id: u64, job: Job },
+    /// `Response::Error` under the same id. `trace` is the optional
+    /// distributed-tracing context (the caller's trace id + parent
+    /// span): servers that honor it return their spans in the response
+    /// envelope's `trace` field; decoders that don't know it — or find
+    /// it malformed — ignore it rather than reject the request (the
+    /// pinned forward-compat rule; `testing/wire_props.rs`).
+    Job { id: u64, job: Job, trace: Option<WireTrace> },
     /// Execute the nested admin call; answered by `Response::AdminReply`.
     Admin { id: u64, admin: Admin },
 }
@@ -100,11 +106,17 @@ impl Request {
     /// Wire form (the nested document carries its own `v` tag).
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Job { id, job } => Json::obj(vec![
-                ("v", Json::Num(WIRE_VERSION as f64)),
-                ("id", Json::Num(*id as f64)),
-                ("job", job.to_json()),
-            ]),
+            Request::Job { id, job, trace } => {
+                let mut pairs = vec![
+                    ("v", Json::Num(WIRE_VERSION as f64)),
+                    ("id", Json::Num(*id as f64)),
+                    ("job", job.to_json()),
+                ];
+                if let Some(t) = trace {
+                    pairs.push(("trace", t.to_json()));
+                }
+                Json::obj(pairs)
+            }
             Request::Admin { id, admin } => Json::obj(vec![
                 ("v", Json::Num(WIRE_VERSION as f64)),
                 ("id", Json::Num(*id as f64)),
@@ -123,7 +135,10 @@ impl Request {
             return Err(Error::msg("wire: request id 0 is reserved"));
         }
         if let Some(job) = v.get("job") {
-            return Ok(Request::Job { id, job: Job::from_json(job)? });
+            // Tolerant by design: a missing, unknown-shaped, or
+            // malformed `trace` field decodes as None, never an error.
+            let trace = v.get("trace").and_then(WireTrace::from_json);
+            return Ok(Request::Job { id, job: Job::from_json(job)?, trace });
         }
         if let Some(admin) = v.get("admin") {
             return Ok(Request::Admin { id, admin: Admin::from_json(admin)? });
@@ -243,6 +258,12 @@ mod tests {
             Request::Job {
                 id: 7,
                 job: Job::Infer { processor: "mnist8".into(), image: vec![0.5, 0.25] },
+                trace: None,
+            },
+            Request::Job {
+                id: 9,
+                job: Job::RawApply { processor: "mesh4".into(), x: crate::CMat::eye(4) },
+                trace: Some(WireTrace { trace: 81_235, parent: 81_236 }),
             },
             Request::Admin { id: 8, admin: Admin::Health },
         ];
@@ -267,6 +288,7 @@ mod tests {
         let ok = Request::Job {
             id: 1,
             job: Job::Infer { processor: "m".into(), image: vec![] },
+            trace: None,
         };
         let mut doc = crate::util::json::parse(&ok.encode()).unwrap();
         if let Json::Obj(map) = &mut doc {
@@ -295,13 +317,32 @@ mod tests {
     }
 
     #[test]
+    fn malformed_trace_fields_are_ignored_not_rejected() {
+        let base = r#"{"v":3,"id":6,"job":{"v":3,"kind":"reprogram","processor":"m","code":[1]}"#;
+        for trace in [
+            r#""not an object""#,
+            "17",
+            "null",
+            r#"{"trace":"x","parent":1}"#,
+            r#"{"parent":2}"#,
+        ] {
+            let text = format!("{base},\"trace\":{trace}}}");
+            match Request::decode(&text).unwrap_or_else(|e| panic!("{text}: {e}")) {
+                Request::Job { trace, .. } => assert_eq!(trace, None, "{text}"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn v2_jobs_ride_inside_v3_envelopes() {
         // A v2 peer upgraded only its envelope layer: the nested job may
         // still be v2 and must decode through the compat shim.
         let text = r#"{"v":3,"id":4,"job":{"v":2,"kind":"reprogram","processor":"mesh8","code":[1,2]}}"#;
         match Request::decode(text).unwrap() {
-            Request::Job { id, job } => {
+            Request::Job { id, job, trace } => {
                 assert_eq!(id, 4);
+                assert_eq!(trace, None);
                 assert_eq!(
                     job,
                     Job::Reprogram { processor: "mesh8".into(), code: vec![1, 2] }

@@ -21,14 +21,16 @@
 //! re-checks the shutdown flag; partial frames are preserved across
 //! timeouts (a slow peer never corrupts framing).
 
+use crate::obs::log;
+use crate::obs::trace::{TraceCtx, WireTrace};
 use crate::util::error::{Error, Result};
-use crate::util::json::parse;
+use crate::util::json::{parse, Json};
 use std::io::{self, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::super::router::{Endpoint, Router};
 use super::{write_frame, Response, CONNECTION_ID};
@@ -135,6 +137,11 @@ fn accept_loop(listener: TcpListener, router: Arc<Router>, cfg: TcpConfig, stop:
                 let t = &router.metrics().transport;
                 if live.load(Ordering::SeqCst) >= cfg.max_connections {
                     t.connections_refused.fetch_add(1, Ordering::Relaxed);
+                    log::warn(
+                        "tcp",
+                        "connection refused at limit",
+                        &[("max_connections", cfg.max_connections.to_string())],
+                    );
                     refuse(stream);
                     continue;
                 }
@@ -185,6 +192,7 @@ fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop:
                 let presented = std::str::from_utf8(&payload).ok().and_then(|t| parse(t));
                 if presented.as_ref().and_then(super::auth_token_of) != Some(token) {
                     metrics.transport.auth_rejects.fetch_add(1, Ordering::Relaxed);
+                    log::warn("tcp", "connection rejected: bad or missing auth token", &[]);
                     let resp = Response::Error {
                         id: CONNECTION_ID,
                         code: "unauthorized".to_string(),
@@ -200,16 +208,23 @@ fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop:
         }
     }
     let Ok(writer_stream) = stream.try_clone() else { return };
-    let (out_tx, out_rx) = channel::<Response>();
+    // Each outgoing response may carry a span payload to merge into the
+    // envelope's `trace` field (requests that arrived with a trace
+    // context get their server-side spans back).
+    let (out_tx, out_rx) = channel::<(Response, Option<Json>)>();
     let writer_metrics = metrics.clone();
     let writer = std::thread::spawn(move || {
         let mut w = io::BufWriter::new(writer_stream);
-        for resp in out_rx {
+        for (resp, spans) in out_rx {
             // A reply that cannot fit one frame (huge RawApply result)
             // must not wedge the writer: substitute a small error frame
             // under the SAME id so the waiting client resolves, and keep
             // serving the connection. Only real socket errors break.
-            let mut payload = resp.encode();
+            let mut doc = resp.to_json();
+            if let (Json::Obj(map), Some(t)) = (&mut doc, spans) {
+                map.insert("trace".to_string(), t);
+            }
+            let mut payload = doc.to_string_compact();
             if payload.len() > cfg.max_frame {
                 payload = Response::Error {
                     id: resp.id(),
@@ -241,11 +256,18 @@ fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop:
                 // Broken framing is unrecoverable on a byte stream: answer
                 // once at connection scope, then close.
                 metrics.transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
-                let _ = out_tx.send(Response::Error {
-                    id: CONNECTION_ID,
-                    code: "bad_frame".to_string(),
-                    message: e.to_string(),
-                });
+                log::warn("tcp", "closing connection: broken framing", &[(
+                    "error",
+                    e.to_string(),
+                )]);
+                let _ = out_tx.send((
+                    Response::Error {
+                        id: CONNECTION_ID,
+                        code: "bad_frame".to_string(),
+                        message: e.to_string(),
+                    },
+                    None,
+                ));
                 break;
             }
         }
@@ -264,14 +286,18 @@ fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop:
 /// is exactly how clients treat id-0 errors (terminal). Failures in a
 /// well-enveloped request (bad nested job, unknown processor, overload)
 /// are answered under the request's own id and the connection lives on.
-fn handle_frame(payload: &[u8], router: &Arc<Router>, out: &Sender<Response>) -> bool {
+fn handle_frame(
+    payload: &[u8],
+    router: &Arc<Router>,
+    out: &Sender<(Response, Option<Json>)>,
+) -> bool {
+    let t0 = Instant::now();
     let reject = |message: String| {
         router.metrics().transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
-        let _ = out.send(Response::Error {
-            id: CONNECTION_ID,
-            code: "bad_request".to_string(),
-            message,
-        });
+        let _ = out.send((
+            Response::Error { id: CONNECTION_ID, code: "bad_request".to_string(), message },
+            None,
+        ));
         false
     };
     let Ok(text) = std::str::from_utf8(payload) else {
@@ -295,30 +321,62 @@ fn handle_frame(payload: &[u8], router: &Arc<Router>, out: &Sender<Response>) ->
         Err(e) => return reject(e.to_string()),
     };
     if let Some(job_doc) = doc.get("job") {
+        // Trace context: continue the caller's (envelope `trace` field —
+        // export our spans back on the response) or start a fresh one
+        // per the local sampling policy.
+        let wire = doc.get("trace").and_then(WireTrace::from_json);
+        let export = wire.is_some();
+        let ctx = match wire {
+            Some(w) => Some(TraceCtx::continue_remote(w, "server.request")),
+            None => TraceCtx::start("server.request"),
+        };
+        if let Some(ctx) = &ctx {
+            ctx.note("id", id);
+            if let Some(kind) = job_doc.get("kind").and_then(Json::as_str) {
+                ctx.note("kind", kind);
+            }
+            ctx.span_at(
+                "frame.decode",
+                ctx.root(),
+                t0,
+                Instant::now(),
+                vec![("bytes".to_string(), payload.len().to_string())],
+            );
+        }
         // Job decode + validation + admission + metrics: one shared path
-        // (`Router::submit_json`), identical to the CLI's `rfnn job`.
-        match router.submit_json(job_doc) {
+        // (`Router::submit_json_traced`), identical to the CLI's
+        // `rfnn job`.
+        match router.submit_json_traced(job_doc, ctx.clone()) {
             Ok(ticket) => {
                 let router = router.clone();
                 let out = out.clone();
                 std::thread::spawn(move || {
                     let resp = match router.wait(ticket) {
                         Ok(result) => Response::Result { id, result },
-                        Err(e) => Response::Error {
-                            id,
-                            code: e.code().to_string(),
-                            message: e.to_string(),
-                        },
+                        Err(e) => {
+                            if let Some(ctx) = &ctx {
+                                ctx.note("error", e.code());
+                            }
+                            Response::Error {
+                                id,
+                                code: e.code().to_string(),
+                                message: e.to_string(),
+                            }
+                        }
                     };
-                    let _ = out.send(resp);
+                    let spans = ctx.and_then(|c| c.finish(export));
+                    let _ = out.send((resp, spans));
                 });
             }
             Err(e) => {
-                let _ = out.send(Response::Error {
-                    id,
-                    code: e.code().to_string(),
-                    message: e.to_string(),
-                });
+                if let Some(ctx) = &ctx {
+                    ctx.note("error", e.code());
+                }
+                let spans = ctx.and_then(|c| c.finish(export));
+                let _ = out.send((
+                    Response::Error { id, code: e.code().to_string(), message: e.to_string() },
+                    spans,
+                ));
             }
         }
     } else if let Some(admin_doc) = doc.get("admin") {
@@ -328,13 +386,16 @@ fn handle_frame(payload: &[u8], router: &Arc<Router>, out: &Sender<Response>) ->
                 Response::Error { id, code: e.code().to_string(), message: e.to_string() }
             }
         };
-        let _ = out.send(resp);
+        let _ = out.send((resp, None));
     } else {
-        let _ = out.send(Response::Error {
-            id,
-            code: "bad_request".to_string(),
-            message: "request envelope needs a 'job' or 'admin' field".to_string(),
-        });
+        let _ = out.send((
+            Response::Error {
+                id,
+                code: "bad_request".to_string(),
+                message: "request envelope needs a 'job' or 'admin' field".to_string(),
+            },
+            None,
+        ));
     }
     true
 }

@@ -26,6 +26,9 @@
 //! * [`nn`] — neural-network substrate: tensors, layers (including the
 //!   shared [`nn::layers::AnalogLinear`] analog stage), losses, SGD,
 //!   DSPSA (Algorithm I), and the paper's 2×2 and 4-layer MNIST RFNN models.
+//! * [`obs`] — the serving stack's flight recorder: request tracing
+//!   with cross-process stitching, structured JSON-lines logging, and
+//!   Prometheus-text metrics exposition (see *Observability model*).
 //! * [`compiler`] — the tiling compiler: partitions arbitrary `M×N`
 //!   weight matrices onto fleets of fixed-size physical tiles, lowers
 //!   each block through the SVD/Reck/Table-I pipeline, caches compiled
@@ -343,6 +346,51 @@
 //! from the same variable. `rfnn cluster plan|deploy|serve` drives the
 //! whole lifecycle from the CLI against a seeded target; the README's
 //! 3-node quick-start walks through it.
+//!
+//! ## Observability model
+//!
+//! Aggregate counters say *that* serving is slow; the flight recorder
+//! ([`obs`]) says *where*. Every request through the TCP front end gets
+//! a [`obs::trace::TraceCtx`] whose spans cover each stage the request
+//! crosses, with parent links forming one tree:
+//!
+//! ```text
+//!   server.request                      root (one per request)
+//!   ├─ frame.decode                     wire parse + envelope decode
+//!   ├─ queue.wait                       admission → batch formation
+//!   ├─ batch.coalesce                   jobs riding the same GEMM
+//!   ├─ exec                             the backend apply / compile
+//!   │   └─ exec.col / exec.par          per-tile-column GEMM (tiled)
+//!   └─ scatter.s<i> ──► (node spans)    sharded only: per-shard RPC
+//!      gather.s<i>    ◄── retry/failover/trip events annotated
+//! ```
+//!
+//! Sharded serving stitches across processes: the coordinator forwards
+//! its context on every scatter `Job::RawApply` (optional envelope
+//! `trace` field — decoders that don't know it ignore it, pinned in
+//! `testing/wire_props.rs`), each node answers with its own spans in
+//! the response envelope, and the coordinator adopts them tagged with
+//! the node address, so ONE trace shows decode → queue → scatter →
+//! remote exec → gather end to end.
+//!
+//! Sampling is `RFNN_TRACE=off|slow|ratio:N|all` (default `slow`:
+//! requests over `RFNN_TRACE_SLOW_US`, 10 ms default, are always
+//! retained). Completed traces land in a bounded lock-striped ring
+//! dumped by the `trace` admin verb (`rfnn client admin trace`). The
+//! overhead contract, enforced by the `BENCH_pr8.json` sweep: `off`
+//! costs one atomic load per request (< 2% on the submit→wait path),
+//! `slow`/`all` cost a handful of `Instant` reads and vector pushes —
+//! tracing observes timing only and never reorders arithmetic, so the
+//! bit-identity contracts (par ≡ seq, sharded ≡ single) are untouched.
+//!
+//! Alongside traces: [`obs::log`] emits structured JSON-lines events
+//! (`{"ts_us", "level", "target", "msg", "fields"}`) to stderr under
+//! `RFNN_LOG=off|error|warn|info|debug` (default `info`) — replica
+//! trips/recoveries, PJRT fallbacks, transport shutdowns — and the
+//! admin plane's `metrics_text` verb renders the full
+//! `MetricsSnapshot` as Prometheus text ([`obs::prometheus`];
+//! `rfnn client admin metrics --format prom`) for scrape-based
+//! collection.
 
 pub mod bench;
 pub mod cli;
@@ -354,6 +402,7 @@ pub mod mesh;
 pub mod math;
 pub mod microwave;
 pub mod nn;
+pub mod obs;
 pub mod processor;
 pub mod runtime;
 pub mod testing;

@@ -1,0 +1,184 @@
+//! Structured JSON-lines leveled logging (`RFNN_LOG`).
+//!
+//! One event per stderr line, machine-parseable and stable:
+//!
+//! ```text
+//! {"fields":{"addr":"10.0.0.7:9001","shard":"1"},"level":"warn",
+//!  "msg":"replica tripped","target":"sharded","ts_us":183204}
+//! ```
+//!
+//! * `ts_us` — µs since the process's observability epoch (monotonic;
+//!   orders exactly against span offsets from the same process);
+//! * `level` — `error | warn | info | debug`;
+//! * `target` — the emitting subsystem (`tcp`, `service`, `sharded`,
+//!   `server`);
+//! * `msg` — a fixed human string; variability belongs in `fields`;
+//! * `fields` — key=value context (omitted when empty).
+//!
+//! `RFNN_LOG=off|error|warn|info|debug` picks the threshold (default
+//! `info`); [`set_level`] overrides it at runtime. Emission below the
+//! threshold costs one relaxed atomic load.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log-threshold env knob.
+pub const LOG_ENV: &str = "RFNN_LOG";
+
+/// Severity, ordered: `Error < Warn < Info < Debug` (a threshold
+/// admits everything at or above its severity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim() {
+            "off" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+// u8::MAX = env not read yet.
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        u8::MAX => {
+            let l = std::env::var(LOG_ENV)
+                .ok()
+                .and_then(|s| Level::parse(&s))
+                .unwrap_or(Level::Info);
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        v => match v {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            _ => Level::Debug,
+        },
+    }
+}
+
+/// Override the threshold at runtime (tests, embedders).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would an event at `l` be emitted?
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+/// Render one event as its JSON line (the emission format, exposed so
+/// tests can pin the schema without capturing stderr).
+pub fn render(l: Level, target: &str, msg: &str, fields: &[(&str, String)]) -> String {
+    let mut pairs = vec![
+        ("ts_us", Json::Num(super::epoch_us() as f64)),
+        ("level", Json::Str(l.name().to_string())),
+        ("target", Json::Str(target.to_string())),
+        ("msg", Json::Str(msg.to_string())),
+    ];
+    if !fields.is_empty() {
+        let m = fields.iter().map(|(k, v)| (k.to_string(), Json::Str(v.clone()))).collect();
+        pairs.push(("fields", Json::Obj(m)));
+    }
+    Json::obj(pairs).to_string_compact()
+}
+
+fn emit(l: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if enabled(l) {
+        eprintln!("{}", render(l, target, msg, fields));
+    }
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    emit(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse(" debug "), Some(Level::Debug));
+        assert_eq!(Level::parse("loud"), None);
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Info);
+        for l in [Level::Off, Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+    }
+
+    #[test]
+    fn rendered_lines_are_valid_json_with_the_pinned_schema() {
+        let line = render(
+            Level::Warn,
+            "sharded",
+            "replica tripped",
+            &[("shard", "1".to_string()), ("addr", "10.0.0.7:9001".to_string())],
+        );
+        assert!(!line.contains('\n'));
+        let doc = crate::util::json::parse(&line).expect("valid JSON");
+        assert_eq!(doc.get("level").unwrap().as_str(), Some("warn"));
+        assert_eq!(doc.get("target").unwrap().as_str(), Some("sharded"));
+        assert_eq!(doc.get("msg").unwrap().as_str(), Some("replica tripped"));
+        assert!(doc.get("ts_us").unwrap().as_f64().is_some());
+        let fields = doc.get("fields").unwrap();
+        assert_eq!(fields.get("shard").unwrap().as_str(), Some("1"));
+        assert_eq!(fields.get("addr").unwrap().as_str(), Some("10.0.0.7:9001"));
+
+        let bare = render(Level::Info, "tcp", "shutdown", &[]);
+        let doc = crate::util::json::parse(&bare).expect("valid JSON");
+        assert!(doc.get("fields").is_none());
+    }
+
+    #[test]
+    fn threshold_gates_emission() {
+        // Exercise `enabled` through an explicit override, then restore
+        // the default so concurrent tests keep their expected level.
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Off));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,271 @@
+//! Observability: the serving stack's flight recorder.
+//!
+//! Three surfaces, all zero-dependency and cheap enough to leave on:
+//!
+//! * [`trace`] — request-scoped spans with parent links, key=value
+//!   annotations, cross-process stitching over the v3 envelope `trace`
+//!   field, and a bounded lock-striped ring of completed traces
+//!   (`RFNN_TRACE=off|slow|ratio:N|all`, dumped by the `trace` admin
+//!   verb).
+//! * [`log`] — structured JSON-lines leveled logging to stderr
+//!   (`RFNN_LOG=off|error|warn|info|debug`), replacing ad-hoc
+//!   `eprintln!` in the serving layers so replica flaps and backend
+//!   fallbacks are machine-reconstructable.
+//! * [`prometheus`] — a Prometheus-text rendering of the admin plane's
+//!   full `MetricsSnapshot` (the `metrics_text` admin verb,
+//!   `rfnn client admin metrics --format prom`).
+//!
+//! Every timestamp in both spans and log lines is an offset from one
+//! process-wide monotonic [`epoch`], so stages within a process order
+//! exactly; spans adopted from remote nodes keep their own node-local
+//! timebase and are tagged with the node address instead.
+
+pub mod log;
+pub mod trace;
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process-wide monotonic epoch every span and log timestamp
+/// offsets from (latched at first observability use).
+pub(crate) fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`].
+pub(crate) fn epoch_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Render a `MetricsSnapshot` document as Prometheus text-format
+/// samples. Counters get a `_total` suffix, histograms surface as
+/// `*_us{quantile="0.5"|"0.99"}` plus `_count`/`_mean_us`/`_max_us`,
+/// per-kind job counters and per-shard cluster state carry labels. The
+/// walk is schema-tolerant: unknown snapshot keys render generically,
+/// non-numeric leaves are skipped, never an error.
+pub fn prometheus(snapshot: &Json) -> String {
+    let mut out = String::new();
+    let Json::Obj(top) = snapshot else { return out };
+    out.push_str("# rfnn MetricsSnapshot, Prometheus text exposition\n");
+    for (key, v) in top {
+        match (key.as_str(), v) {
+            ("jobs", Json::Obj(kinds)) => {
+                for (kind, counters) in kinds {
+                    if let Json::Obj(events) = counters {
+                        for (event, n) in events {
+                            if let Some(x) = n.as_f64() {
+                                let name = format!("rfnn_jobs_{event}_total");
+                                sample(&mut out, &name, &[("kind", kind)], x);
+                            }
+                        }
+                    }
+                }
+            }
+            ("transport", Json::Obj(m)) => {
+                for (k, n) in m {
+                    if let Some(x) = n.as_f64() {
+                        sample(&mut out, &format!("rfnn_transport_{k}_total"), &[], x);
+                    }
+                }
+            }
+            ("cluster", Json::Obj(c)) => cluster_samples(&mut out, c),
+            (_, Json::Obj(h)) if h.contains_key("count") => {
+                hist_samples(&mut out, &format!("rfnn_{key}"), &[], h);
+            }
+            (_, Json::Num(x)) => {
+                let name = match key.as_str() {
+                    "requests" | "batches" | "padded" | "reconfigs" => format!("rfnn_{key}_total"),
+                    _ => format!("rfnn_{key}"),
+                };
+                sample(&mut out, &name, &[], *x);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn cluster_samples(out: &mut String, c: &std::collections::BTreeMap<String, Json>) {
+    if let Some(state) = c.get("health").and_then(Json::as_str) {
+        sample(out, "rfnn_cluster_health", &[("state", state)], 1.0);
+    }
+    let Some(shards) = c.get("shards").and_then(Json::as_arr) else { return };
+    for (i, shard) in shards.iter().enumerate() {
+        let idx = i.to_string();
+        let Json::Obj(m) = shard else { continue };
+        for (k, v) in m {
+            match (k.as_str(), v) {
+                ("health", Json::Str(s)) => {
+                    sample(out, "rfnn_shard_health", &[("shard", &idx), ("state", s)], 1.0);
+                }
+                ("replicas", Json::Arr(reps)) => {
+                    for r in reps {
+                        let Some(addr) = r.get("addr").and_then(Json::as_str) else { continue };
+                        let up = match r.get("up") {
+                            Some(Json::Bool(b)) => u64::from(*b) as f64,
+                            Some(Json::Num(x)) => *x,
+                            _ => continue,
+                        };
+                        let labels = [("shard", idx.as_str()), ("addr", addr)];
+                        sample(out, "rfnn_shard_replica_up", &labels, up);
+                    }
+                }
+                (_, Json::Obj(h)) if h.contains_key("count") => {
+                    hist_samples(out, &format!("rfnn_shard_{k}"), &[("shard", &idx)], h);
+                }
+                (_, Json::Num(x)) => {
+                    sample(out, &format!("rfnn_shard_{k}"), &[("shard", &idx)], *x);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+fn hist_samples(
+    out: &mut String,
+    family: &str,
+    labels: &[(&str, &str)],
+    h: &std::collections::BTreeMap<String, Json>,
+) {
+    for (stat, v) in h {
+        let Some(x) = v.as_f64() else { continue };
+        let quantile = match stat.as_str() {
+            "p50_us" => Some("0.5"),
+            "p99_us" => Some("0.99"),
+            _ => None,
+        };
+        match quantile {
+            Some(q) => {
+                let mut l = labels.to_vec();
+                l.push(("quantile", q));
+                sample(out, &format!("{family}_us"), &l, x);
+            }
+            None => sample(out, &format!("{family}_{stat}"), labels, x),
+        }
+    }
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            for c in val.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        let _ = writeln!(out, " {}", v as i64);
+    } else {
+        let _ = writeln!(out, " {v}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_snapshot() -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(3.0)),
+            ("mean_batch", Json::Num(1.5)),
+            (
+                "jobs",
+                Json::obj(vec![(
+                    "infer",
+                    Json::obj(vec![
+                        ("submitted", Json::Num(2.0)),
+                        ("served", Json::Num(2.0)),
+                        ("rejected", Json::Num(0.0)),
+                    ]),
+                )]),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("count", Json::Num(3.0)),
+                    ("mean_us", Json::Num(20.0)),
+                    ("p50_us", Json::Num(16.0)),
+                    ("p99_us", Json::Num(64.0)),
+                    ("max_us", Json::Num(50.0)),
+                ]),
+            ),
+            ("transport", Json::obj(vec![("frames_in", Json::Num(7.0))])),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("health", Json::Str("degraded".into())),
+                    (
+                        "shards",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("health", Json::Str("degraded".into())),
+                            ("retries", Json::Num(4.0)),
+                            (
+                                "replicas",
+                                Json::Arr(vec![Json::obj(vec![
+                                    ("addr", Json::Str("127.0.0.1:9001".into())),
+                                    ("up", Json::Bool(false)),
+                                ])]),
+                            ),
+                        ])]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn prometheus_renders_counters_labels_and_quantiles() {
+        let text = prometheus(&demo_snapshot());
+        assert!(text.contains("rfnn_requests_total 3\n"), "{text}");
+        assert!(text.contains("rfnn_mean_batch 1.5\n"), "{text}");
+        assert!(text.contains("rfnn_jobs_submitted_total{kind=\"infer\"} 2\n"), "{text}");
+        assert!(text.contains("rfnn_latency_us{quantile=\"0.5\"} 16\n"), "{text}");
+        assert!(text.contains("rfnn_latency_us{quantile=\"0.99\"} 64\n"), "{text}");
+        assert!(text.contains("rfnn_latency_count 3\n"), "{text}");
+        assert!(text.contains("rfnn_transport_frames_in_total 7\n"), "{text}");
+        assert!(text.contains("rfnn_cluster_health{state=\"degraded\"} 1\n"), "{text}");
+        assert!(text.contains("rfnn_shard_retries{shard=\"0\"} 4\n"), "{text}");
+        assert!(
+            text.contains("rfnn_shard_replica_up{shard=\"0\",addr=\"127.0.0.1:9001\"} 0\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn prometheus_tolerates_non_object_and_unknown_shapes() {
+        assert_eq!(prometheus(&Json::Num(1.0)), "");
+        let odd = Json::obj(vec![
+            ("weird", Json::Arr(vec![Json::Num(1.0)])),
+            ("note", Json::Str("ignored".into())),
+            ("ok", Json::Num(1.0)),
+        ]);
+        let text = prometheus(&odd);
+        assert!(text.contains("rfnn_ok 1\n"), "{text}");
+        assert!(!text.contains("weird"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut s = String::new();
+        sample(&mut s, "m", &[("k", "a\"b\\c")], 1.0);
+        assert_eq!(s, "m{k=\"a\\\"b\\\\c\"} 1\n");
+    }
+}

@@ -1,0 +1,790 @@
+//! Flight-recorder tracing: monotonic-clock spans with parent links and
+//! key=value annotations, stitched across processes over the wire.
+//!
+//! A request gets one [`TraceCtx`] — created at the transport edge (or
+//! by any local driver) — and every stage it passes through records a
+//! span against it: `frame.decode`, `queue.wait`, `batch.coalesce`,
+//! `exec`, `exec.col`, `scatter.s<i>` / `gather.s<i>`, `compile`.
+//! Spans carry the id of their parent span, so a dump reconstructs the
+//! full request tree. Failovers, retries, and replica trips surface as
+//! zero-duration annotated [`TraceCtx::event`]s inside the affected
+//! gather span.
+//!
+//! **Cross-process stitching.** The v3 request envelope may carry an
+//! optional `trace` field ([`WireTrace`]: `{trace, parent}`). A server
+//! that sees one continues the caller's trace — same trace id, its root
+//! span parented to the caller's span — and returns its completed spans
+//! in the response envelope (`trace.spans`), which the caller
+//! [`TraceCtx::adopt`]s, tagged with the node address. One sharded
+//! request therefore yields ONE trace whose spans cover the
+//! coordinator's decode/queue/scatter/gather and every shard node's
+//! decode/queue/exec, across processes. Decoders tolerate a missing or
+//! malformed `trace` field by ignoring it — never by rejecting the
+//! request (pinned in `testing/wire_props.rs`).
+//!
+//! **Sampling** (`RFNN_TRACE`): `off` creates no contexts at all (the
+//! submit path pays one atomic load), `slow` records everything but
+//! retains only requests whose root span exceeds a threshold
+//! (`RFNN_TRACE_SLOW_US`, default 10 ms) — the default, so production
+//! outliers are always explicable — `ratio:N` retains every Nth
+//! finished trace, `all` retains everything. Retained traces land in a
+//! bounded lock-striped ring ([`Tracer`]) dumped by the `trace` admin
+//! verb; the ring never allocates past its cap (oldest traces drop,
+//! counted).
+//!
+//! Span ids are process-unique counters offset by a (wall-time, pid)
+//! base and masked below 2^53, so they survive JSON `f64` transport
+//! exactly and collide across nodes only for equal (time, pid).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Sampling-policy env knob: `off | slow | ratio:N | all`.
+pub const TRACE_ENV: &str = "RFNN_TRACE";
+/// Slow-trace retention threshold in µs (policy `slow`).
+pub const TRACE_SLOW_ENV: &str = "RFNN_TRACE_SLOW_US";
+/// Default `slow` threshold: requests over 10 ms are always retained.
+pub const DEFAULT_SLOW_US: u64 = 10_000;
+
+const STRIPES: usize = 8;
+const TRACES_PER_STRIPE: usize = 32;
+
+/// Trace retention policy (see [`TRACE_ENV`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// No contexts are created; tracing is a single atomic load.
+    Off,
+    /// Record everything, retain only traces whose root span ran at
+    /// least this many µs.
+    Slow(u64),
+    /// Retain every Nth finished trace.
+    Ratio(u64),
+    /// Retain every finished trace.
+    All,
+}
+
+impl Policy {
+    /// Parse the [`TRACE_ENV`] spelling; `None` on anything unknown.
+    pub fn parse(s: &str) -> Option<Policy> {
+        let s = s.trim();
+        if let Some(n) = s.strip_prefix("ratio:") {
+            let n: u64 = n.parse().ok()?;
+            return Some(if n <= 1 { Policy::All } else { Policy::Ratio(n) });
+        }
+        match s {
+            "off" => Some(Policy::Off),
+            "slow" => Some(Policy::Slow(slow_threshold_us())),
+            "all" => Some(Policy::All),
+            _ => None,
+        }
+    }
+
+    fn from_env() -> Policy {
+        match std::env::var(TRACE_ENV) {
+            Ok(s) => Policy::parse(&s).unwrap_or(Policy::Slow(slow_threshold_us())),
+            Err(_) => Policy::Slow(slow_threshold_us()),
+        }
+    }
+}
+
+fn slow_threshold_us() -> u64 {
+    std::env::var(TRACE_SLOW_ENV).ok().and_then(|s| s.parse().ok()).unwrap_or(DEFAULT_SLOW_US)
+}
+
+// Policy, packed into one atomic: 0 = env not read yet, tag in the low
+// 3 bits, parameter above.
+fn encode(p: Policy) -> u64 {
+    match p {
+        Policy::Off => 1,
+        Policy::All => 2,
+        Policy::Slow(us) => 3 | (us.min((1 << 60) - 1) << 3),
+        Policy::Ratio(n) => 4 | (n.min((1 << 60) - 1) << 3),
+    }
+}
+
+fn decode(v: u64) -> Policy {
+    match v & 0b111 {
+        1 => Policy::Off,
+        2 => Policy::All,
+        3 => Policy::Slow(v >> 3),
+        _ => Policy::Ratio(v >> 3),
+    }
+}
+
+static POLICY: AtomicU64 = AtomicU64::new(0);
+
+/// The active sampling policy (env-derived, overridable).
+pub fn policy() -> Policy {
+    match POLICY.load(Ordering::Relaxed) {
+        0 => {
+            let p = Policy::from_env();
+            POLICY.store(encode(p), Ordering::Relaxed);
+            p
+        }
+        v => decode(v),
+    }
+}
+
+/// Override the sampling policy at runtime (benches, embedders, tests).
+pub fn set_policy(p: Policy) {
+    POLICY.store(encode(p), Ordering::Relaxed);
+}
+
+fn id_base() -> u64 {
+    static BASE: OnceLock<u64> = OnceLock::new();
+    *BASE.get_or_init(|| {
+        let secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        ((secs & 0x1F_FFFF) << 32) | ((std::process::id() as u64 & 0xFFFF) << 16)
+    })
+}
+
+/// A fresh trace/span id: exact in `f64` (< 2^53), unique within the
+/// process, best-effort unique across nodes.
+pub fn fresh_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    id_base().wrapping_add(NEXT.fetch_add(1, Ordering::Relaxed)) & ((1 << 53) - 1)
+}
+
+/// Trace context carried on a v3 request envelope: the caller's trace
+/// id plus the caller-side span the server's work hangs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireTrace {
+    pub trace: u64,
+    pub parent: u64,
+}
+
+impl WireTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("parent", Json::Num(self.parent as f64)),
+            ("trace", Json::Num(self.trace as f64)),
+        ])
+    }
+
+    /// Tolerant decode: anything malformed is `None`, never an error —
+    /// the pinned forward-compat rule for the envelope `trace` field.
+    pub fn from_json(v: &Json) -> Option<WireTrace> {
+        let field = |k: &str| -> Option<u64> {
+            let x = v.get(k)?.as_f64()?;
+            (x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < 9.0e15).then_some(x as u64)
+        };
+        Some(WireTrace { trace: field("trace")?, parent: field("parent")? })
+    }
+}
+
+/// One completed span. `start_us` offsets from the *recording*
+/// process's [`super::epoch`]-like trace epoch; spans adopted from a
+/// remote response keep their node-local timebase and carry the node
+/// address in `node`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub trace: u64,
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub notes: Vec<(String, String)>,
+    pub node: Option<String>,
+}
+
+impl SpanRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("trace", Json::Num(self.trace as f64)),
+            ("id", Json::Num(self.id as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ];
+        if let Some(p) = self.parent {
+            pairs.push(("parent", Json::Num(p as f64)));
+        }
+        if !self.notes.is_empty() {
+            let m = self.notes.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            pairs.push(("notes", Json::Obj(m)));
+        }
+        if let Some(n) = &self.node {
+            pairs.push(("node", Json::Str(n.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Tolerant decode (adoption path): `None` on anything malformed.
+    pub fn from_json(v: &Json) -> Option<SpanRecord> {
+        let num = |k: &str| -> Option<u64> {
+            let x = v.get(k)?.as_f64()?;
+            (x.is_finite() && x >= 0.0 && x < 9.0e15).then_some(x as u64)
+        };
+        let mut notes = Vec::new();
+        if let Some(Json::Obj(m)) = v.get("notes") {
+            for (k, val) in m {
+                if let Some(s) = val.as_str() {
+                    notes.push((k.clone(), s.to_string()));
+                }
+            }
+        }
+        Some(SpanRecord {
+            trace: num("trace")?,
+            id: num("id")?,
+            parent: num("parent"),
+            name: v.get("name")?.as_str()?.to_string(),
+            start_us: num("start_us")?,
+            dur_us: num("dur_us")?,
+            notes,
+            node: v.get("node").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// Render a span list as the wire payload carried on response
+/// envelopes: `{"spans": [...]}`.
+pub fn spans_json(spans: &[SpanRecord]) -> Json {
+    Json::obj(vec![("spans", Json::Arr(spans.iter().map(SpanRecord::to_json).collect()))])
+}
+
+struct CtxInner {
+    trace: u64,
+    root: u64,
+    root_name: &'static str,
+    /// Remote caller's span (wire `trace.parent`): the root hangs
+    /// under it when this context continues a cross-process trace.
+    remote_parent: Option<u64>,
+    /// Retention policy latched at creation, so concurrent policy
+    /// changes never split one request's record/retain decision.
+    policy: Policy,
+    epoch: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+    root_notes: Mutex<Vec<(String, String)>>,
+}
+
+/// One request's trace: cheaply cloneable, recorded into from any
+/// thread the request passes through.
+#[derive(Clone)]
+pub struct TraceCtx {
+    inner: Arc<CtxInner>,
+}
+
+impl TraceCtx {
+    /// Start a trace for a locally originated request under the global
+    /// policy. `None` when tracing is `off` — the zero-cost fast path.
+    pub fn start(root_name: &'static str) -> Option<TraceCtx> {
+        Self::start_with(policy(), root_name)
+    }
+
+    /// Start under an explicit policy (benches sweep policies without
+    /// touching the process-global knob).
+    pub fn start_with(p: Policy, root_name: &'static str) -> Option<TraceCtx> {
+        if p == Policy::Off {
+            return None;
+        }
+        Some(Self::build(fresh_id(), root_name, None, p))
+    }
+
+    /// Continue a remote caller's trace (the envelope `trace` field):
+    /// same trace id, root span parented to the caller's span. Always
+    /// records — the remote sampler already decided this request
+    /// matters — but local ring retention still follows local policy.
+    pub fn continue_remote(w: WireTrace, root_name: &'static str) -> TraceCtx {
+        Self::build(w.trace, root_name, Some(w.parent), policy())
+    }
+
+    fn build(
+        trace: u64,
+        root_name: &'static str,
+        remote_parent: Option<u64>,
+        policy: Policy,
+    ) -> TraceCtx {
+        TraceCtx {
+            inner: Arc::new(CtxInner {
+                trace,
+                root: fresh_id(),
+                root_name,
+                remote_parent,
+                policy,
+                epoch: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+                root_notes: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.inner.trace
+    }
+
+    /// The root span id — the parent for this request's top-level
+    /// stages, and the `parent` forwarded on outbound wire requests.
+    pub fn root(&self) -> u64 {
+        self.inner.root
+    }
+
+    /// The wire form of this context for an outbound child request
+    /// hanging under `parent`.
+    pub fn wire(&self, parent: u64) -> WireTrace {
+        WireTrace { trace: self.inner.trace, parent }
+    }
+
+    /// Annotate the root span.
+    pub fn note(&self, key: &str, value: impl ToString) {
+        lock(&self.inner.root_notes).push((key.to_string(), value.to_string()));
+    }
+
+    fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.inner.epoch).as_micros() as u64
+    }
+
+    /// Open a timed child span under `parent`; dropping the guard
+    /// records it.
+    pub fn span(&self, name: &str, parent: u64) -> SpanGuard {
+        SpanGuard {
+            ctx: self.clone(),
+            id: fresh_id(),
+            parent,
+            name: name.to_string(),
+            start: Instant::now(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Record a completed span from explicit instants — for stages
+    /// whose start predates the call site (queue wait measured from the
+    /// job's `enqueued` stamp). Returns the new span's id.
+    pub fn span_at(
+        &self,
+        name: &str,
+        parent: u64,
+        start: Instant,
+        end: Instant,
+        notes: Vec<(String, String)>,
+    ) -> u64 {
+        let id = fresh_id();
+        lock(&self.inner.spans).push(SpanRecord {
+            trace: self.inner.trace,
+            id,
+            parent: Some(parent),
+            name: name.to_string(),
+            start_us: self.us_since_epoch(start),
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+            notes,
+            node: None,
+        });
+        id
+    }
+
+    /// Record an instantaneous annotated event (retry, failover, trip).
+    pub fn event(&self, name: &str, parent: u64, notes: Vec<(String, String)>) {
+        let now = Instant::now();
+        self.span_at(name, parent, now, now, notes);
+    }
+
+    /// Adopt a remote node's spans (a response `trace` payload, as
+    /// produced by [`spans_json`]) into this trace, tagging each with
+    /// the node address. Malformed entries are skipped.
+    pub fn adopt(&self, payload: &Json, node: &str) {
+        let Some(arr) = payload.get("spans").and_then(Json::as_arr) else { return };
+        let mut own = lock(&self.inner.spans);
+        for v in arr {
+            if let Some(mut s) = SpanRecord::from_json(v) {
+                s.trace = self.inner.trace;
+                s.node = Some(node.to_string());
+                own.push(s);
+            }
+        }
+    }
+
+    /// Close the root span, hand the completed trace to the global ring
+    /// per the latched policy, and — when `export` is set (the request
+    /// carried a remote trace context) — return the span list as the
+    /// response-envelope payload.
+    pub fn finish(&self, export: bool) -> Option<Json> {
+        let dur_us = self.us_since_epoch(Instant::now());
+        let mut spans = std::mem::take(&mut *lock(&self.inner.spans));
+        spans.insert(
+            0,
+            SpanRecord {
+                trace: self.inner.trace,
+                id: self.inner.root,
+                parent: self.inner.remote_parent,
+                name: self.inner.root_name.to_string(),
+                start_us: 0,
+                dur_us,
+                notes: std::mem::take(&mut *lock(&self.inner.root_notes)),
+                node: None,
+            },
+        );
+        let retain = tracer().should_retain(self.inner.policy, dur_us);
+        match (retain, export) {
+            (true, true) => {
+                let payload = spans_json(&spans);
+                tracer().retain(spans);
+                Some(payload)
+            }
+            (true, false) => {
+                tracer().retain(spans);
+                None
+            }
+            (false, true) => Some(spans_json(&spans)),
+            (false, false) => None,
+        }
+    }
+}
+
+/// An open span; records into its context when dropped.
+pub struct SpanGuard {
+    ctx: TraceCtx,
+    id: u64,
+    parent: u64,
+    name: String,
+    start: Instant,
+    notes: Vec<(String, String)>,
+}
+
+impl SpanGuard {
+    /// This span's id — the parent for nested child spans.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a key=value annotation.
+    pub fn note(&mut self, key: &str, value: impl ToString) {
+        self.notes.push((key.to_string(), value.to_string()));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let start_us = self.ctx.us_since_epoch(self.start);
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        lock(&self.ctx.inner.spans).push(SpanRecord {
+            trace: self.ctx.inner.trace,
+            id: self.id,
+            parent: Some(self.parent),
+            name: std::mem::take(&mut self.name),
+            start_us,
+            dur_us,
+            notes: std::mem::take(&mut self.notes),
+            node: None,
+        });
+    }
+}
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<(TraceCtx, u64)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Run `f` with `(ctx, parent)` installed as this thread's current
+/// span, so deep layers (the tiled executor) can attach spans without
+/// plumbing a context through every signature. Restores the previous
+/// current on exit, panics included.
+pub fn with_current<R>(ctx: &TraceCtx, parent: u64, f: impl FnOnce() -> R) -> R {
+    struct Reset(Option<(TraceCtx, u64)>);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            let _ = CURRENT.try_with(|c| *c.borrow_mut() = prev);
+        }
+    }
+    let prev = CURRENT.with(|c| c.borrow_mut().replace((ctx.clone(), parent)));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// The current thread's `(ctx, parent span)`, if the running request
+/// is traced.
+pub fn current() -> Option<(TraceCtx, u64)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// The bounded lock-striped ring of completed traces.
+pub struct Tracer {
+    stripes: Vec<Mutex<VecDeque<(u64, Vec<SpanRecord>)>>>,
+    seq: AtomicU64,
+    ratio_clock: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// The process-global trace ring.
+pub fn tracer() -> &'static Tracer {
+    static T: OnceLock<Tracer> = OnceLock::new();
+    T.get_or_init(Tracer::new)
+}
+
+impl Tracer {
+    fn new() -> Tracer {
+        Tracer {
+            stripes: (0..STRIPES).map(|_| Mutex::new(VecDeque::new())).collect(),
+            seq: AtomicU64::new(0),
+            ratio_clock: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn should_retain(&self, p: Policy, root_dur_us: u64) -> bool {
+        match p {
+            Policy::Off => false,
+            Policy::All => true,
+            Policy::Slow(t) => root_dur_us >= t,
+            Policy::Ratio(n) => self.ratio_clock.fetch_add(1, Ordering::Relaxed) % n.max(1) == 0,
+        }
+    }
+
+    fn retain(&self, spans: Vec<SpanRecord>) {
+        let Some(first) = spans.first() else { return };
+        let stripe = (first.trace as usize) % STRIPES;
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut ring = lock(&self.stripes[stripe]);
+        if ring.len() >= TRACES_PER_STRIPE {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back((seq, spans));
+    }
+
+    /// Completed traces currently buffered.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| lock(s).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every buffered trace (tests, `serve` restarts).
+    pub fn clear(&self) {
+        for s in &self.stripes {
+            lock(s).clear();
+        }
+    }
+
+    /// The most recent `n` completed traces, newest first:
+    /// `{"dropped": d, "traces": [{"trace": id, "spans": [...]}]}`.
+    pub fn dump(&self, n: usize) -> Json {
+        let mut all: Vec<(u64, Json)> = Vec::new();
+        for s in &self.stripes {
+            for (seq, spans) in lock(s).iter() {
+                let trace = spans.first().map_or(0, |s| s.trace);
+                let doc = Json::obj(vec![
+                    ("trace", Json::Num(trace as f64)),
+                    ("spans", Json::Arr(spans.iter().map(SpanRecord::to_json).collect())),
+                ]);
+                all.push((*seq, doc));
+            }
+        }
+        all.sort_by(|a, b| b.0.cmp(&a.0));
+        all.truncate(n);
+        Json::obj(vec![
+            ("dropped", Json::Num(self.dropped.load(Ordering::Relaxed) as f64)),
+            ("traces", Json::Arr(all.into_iter().map(|(_, t)| t).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dumped_trace(trace_id: u64) -> Option<Json> {
+        let dump = tracer().dump(usize::MAX);
+        dump.get("traces")?
+            .as_arr()?
+            .iter()
+            .find(|t| t.get("trace").and_then(Json::as_f64) == Some(trace_id as f64))
+            .cloned()
+    }
+
+    #[test]
+    fn policy_parses_every_spelling() {
+        assert_eq!(Policy::parse("off"), Some(Policy::Off));
+        assert_eq!(Policy::parse("all"), Some(Policy::All));
+        assert_eq!(Policy::parse(" ratio:4 "), Some(Policy::Ratio(4)));
+        assert_eq!(Policy::parse("ratio:1"), Some(Policy::All));
+        assert!(matches!(Policy::parse("slow"), Some(Policy::Slow(_))));
+        assert_eq!(Policy::parse("sometimes"), None);
+        assert_eq!(Policy::parse("ratio:x"), None);
+        for p in [Policy::Off, Policy::All, Policy::Slow(123), Policy::Ratio(9)] {
+            assert_eq!(decode(encode(p)), p);
+        }
+    }
+
+    #[test]
+    fn off_creates_no_context_and_slow_gates_on_duration() {
+        assert!(TraceCtx::start_with(Policy::Off, "r").is_none());
+        let t = Tracer::new();
+        assert!(!t.should_retain(Policy::Off, u64::MAX));
+        assert!(t.should_retain(Policy::All, 0));
+        assert!(t.should_retain(Policy::Slow(100), 100));
+        assert!(!t.should_retain(Policy::Slow(100), 99));
+        // ratio:3 on a fresh clock: every third finish, starting now.
+        let hits = (0..6).filter(|_| t.should_retain(Policy::Ratio(3), 0)).count();
+        assert_eq!(hits, 2);
+    }
+
+    #[test]
+    fn spans_nest_and_finished_traces_are_dumped_root_first() {
+        let ctx = TraceCtx::start_with(Policy::All, "server.request").expect("traced");
+        let trace_id = ctx.trace_id();
+        ctx.note("kind", "raw_apply");
+        let parent = {
+            let mut s = ctx.span("exec", ctx.root());
+            s.note("batch", 3);
+            s.id()
+        };
+        ctx.event("retry", parent, vec![("attempt".into(), "1".into())]);
+        assert!(ctx.finish(false).is_none());
+
+        let t = dumped_trace(trace_id).expect("retained");
+        let spans = t.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 3);
+        let root = &spans[0];
+        assert_eq!(root.get("name").unwrap().as_str(), Some("server.request"));
+        assert_eq!(root.get("id").unwrap().as_f64(), Some(ctx.root() as f64));
+        assert!(root.get("parent").is_none());
+        assert_eq!(
+            root.get("notes").unwrap().get("kind").unwrap().as_str(),
+            Some("raw_apply")
+        );
+        let exec = spans.iter().find(|s| s.get("name").unwrap().as_str() == Some("exec")).unwrap();
+        assert_eq!(exec.get("parent").unwrap().as_f64(), Some(ctx.root() as f64));
+        let retry = spans.iter().find(|s| s.get("name").unwrap().as_str() == Some("retry")).unwrap();
+        assert_eq!(retry.get("parent").unwrap().as_f64(), Some(parent as f64));
+        assert_eq!(retry.get("dur_us").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn remote_continuation_exports_and_adoption_tags_the_node() {
+        let coord = TraceCtx::start_with(Policy::All, "client.request").expect("traced");
+        let scatter = coord.span("scatter.s0", coord.root()).id();
+        let wire = coord.wire(scatter);
+        let json = wire.to_json();
+        assert_eq!(WireTrace::from_json(&json), Some(wire));
+
+        // The "remote node": continues the trace, exports its spans.
+        let node = TraceCtx::continue_remote(wire, "server.request");
+        assert_eq!(node.trace_id(), coord.trace_id());
+        drop(node.span("exec", node.root()));
+        let payload = node.finish(true).expect("exported");
+
+        coord.adopt(&payload, "127.0.0.1:9000");
+        let _ = coord.finish(false);
+        let t = dumped_trace(coord.trace_id()).expect("retained");
+        let spans = t.get("spans").unwrap().as_arr().unwrap();
+        let remote_root = spans
+            .iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some("server.request"))
+            .expect("adopted");
+        assert_eq!(remote_root.get("parent").unwrap().as_f64(), Some(scatter as f64));
+        assert_eq!(remote_root.get("node").unwrap().as_str(), Some("127.0.0.1:9000"));
+        let remote_exec = spans
+            .iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some("exec") && s.get("node").is_some())
+            .expect("adopted child");
+        assert_eq!(remote_exec.get("trace").unwrap().as_f64(), Some(coord.trace_id() as f64));
+    }
+
+    #[test]
+    fn wire_trace_decode_is_tolerant_of_garbage() {
+        for bad in [
+            Json::Null,
+            Json::Str("trace".into()),
+            Json::obj(vec![("trace", Json::Num(1.0))]),
+            Json::obj(vec![("trace", Json::Str("x".into())), ("parent", Json::Num(2.0))]),
+            Json::obj(vec![("trace", Json::Num(1.5)), ("parent", Json::Num(2.0))]),
+            Json::obj(vec![("trace", Json::Num(-1.0)), ("parent", Json::Num(2.0))]),
+            Json::obj(vec![("trace", Json::Num(1e18)), ("parent", Json::Num(2.0))]),
+        ] {
+            assert_eq!(WireTrace::from_json(&bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn span_records_round_trip_and_tolerate_garbage() {
+        let s = SpanRecord {
+            trace: 7,
+            id: 9,
+            parent: Some(3),
+            name: "queue.wait".into(),
+            start_us: 10,
+            dur_us: 4,
+            notes: vec![("depth".into(), "2".into())],
+            node: Some("n1:1".into()),
+        };
+        assert_eq!(SpanRecord::from_json(&s.to_json()), Some(s.clone()));
+        let mut no_parent = s;
+        no_parent.parent = None;
+        no_parent.notes.clear();
+        no_parent.node = None;
+        assert_eq!(SpanRecord::from_json(&no_parent.to_json()), Some(no_parent));
+        assert_eq!(SpanRecord::from_json(&Json::Num(4.0)), None);
+        assert_eq!(SpanRecord::from_json(&Json::obj(vec![("id", Json::Num(1.0))])), None);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_dump_is_newest_first() {
+        let t = Tracer::new();
+        let mk = |trace: u64| {
+            vec![SpanRecord {
+                trace,
+                id: trace + 1,
+                parent: None,
+                name: "r".into(),
+                start_us: 0,
+                dur_us: 1,
+                notes: vec![],
+                node: None,
+            }]
+        };
+        // Saturate one stripe (trace ids all ≡ 0 mod STRIPES).
+        let n = (TRACES_PER_STRIPE + 5) as u64;
+        for i in 0..n {
+            t.retain(mk(i * STRIPES as u64));
+        }
+        assert_eq!(t.len(), TRACES_PER_STRIPE);
+        assert_eq!(t.dropped.load(Ordering::Relaxed), 5);
+        let dump = t.dump(2);
+        assert_eq!(dump.get("dropped").unwrap().as_f64(), Some(5.0));
+        let traces = dump.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 2);
+        let newest = (n - 1) * STRIPES as u64;
+        assert_eq!(traces[0].get("trace").unwrap().as_f64(), Some(newest as f64));
+        t.clear();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn tls_current_restores_on_exit() {
+        assert!(current().is_none());
+        let ctx = TraceCtx::start_with(Policy::All, "r").unwrap();
+        with_current(&ctx, ctx.root(), || {
+            let (c, parent) = current().expect("installed");
+            assert_eq!(c.trace_id(), ctx.trace_id());
+            assert_eq!(parent, ctx.root());
+            let inner = TraceCtx::start_with(Policy::All, "r2").unwrap();
+            with_current(&inner, 42, || {
+                assert_eq!(current().unwrap().1, 42);
+            });
+            assert_eq!(current().unwrap().1, ctx.root());
+        });
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn fresh_ids_are_distinct_and_json_exact() {
+        let a = fresh_id();
+        let b = fresh_id();
+        assert_ne!(a, b);
+        assert!(a < (1 << 53) && b < (1 << 53));
+        assert_eq!((a as f64) as u64, a);
+    }
+}

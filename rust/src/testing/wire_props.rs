@@ -364,6 +364,97 @@ fn non_finite_values_survive_the_wire_as_nan() {
     }
 }
 
+/// The optional distributed-tracing envelope: `trace` on a v3 job request
+/// round-trips exactly, and an untraced request puts no `trace` key on
+/// the wire at all (v2 peers and old servers see the same bytes as
+/// before tracing existed).
+#[test]
+fn trace_annotated_requests_round_trip() {
+    use crate::obs::trace::WireTrace;
+    let req = Request::Job {
+        id: 9,
+        job: Job::Reprogram { processor: "p".into(), code: vec![1, 2] },
+        trace: Some(WireTrace { trace: 123_456_789, parent: 42 }),
+    };
+    assert_eq!(Request::decode(&req.encode()).expect("traced request decodes"), req);
+    let bare = Request::Job {
+        id: 1,
+        job: Job::Reprogram { processor: "p".into(), code: vec![] },
+        trace: None,
+    };
+    assert!(!bare.encode().contains("\"trace\""), "untraced must stay silent");
+    assert_eq!(Request::decode(&bare.encode()).unwrap(), bare);
+    // Random contexts round-trip across the whole 2^53 JSON-safe range.
+    forall("wire trace round-trip", 100, |g| {
+        let wt = WireTrace {
+            trace: g.usize_in(0, (1 << 53) - 1) as u64,
+            parent: g.usize_in(0, (1 << 53) - 1) as u64,
+        };
+        assert_eq!(WireTrace::from_json(&wt.to_json()), Some(wt));
+    });
+}
+
+/// The pinned forward-compat rule: a malformed or unknown `trace` field
+/// on a v3 request is IGNORED — the job decodes with `trace: None` —
+/// never rejected; and a response envelope's `trace` payload rides
+/// outside the typed [`Response`], so it never disturbs that decode.
+#[test]
+fn malformed_trace_degrades_to_untraced_never_rejects() {
+    let req = Request::Job {
+        id: 4,
+        job: Job::Classify { processor: "c".into(), classifier: 1, point: [0.5, -1.0] },
+        trace: None,
+    };
+    let base = parse(&req.encode()).unwrap();
+    let hostile = [
+        Json::Str("not an object".into()),
+        Json::Num(7.0),
+        Json::Bool(true),
+        Json::Arr(vec![Json::Num(1.0)]),
+        Json::obj(vec![]), // both ids missing
+        Json::obj(vec![("trace", Json::Num(1.5)), ("parent", Json::Num(2.0))]),
+        Json::obj(vec![("trace", Json::Num(-3.0)), ("parent", Json::Num(2.0))]),
+        Json::obj(vec![("trace", Json::Num(9.1e15)), ("parent", Json::Num(2.0))]),
+        Json::obj(vec![("trace", Json::Str("x".into())), ("parent", Json::Num(2.0))]),
+    ];
+    for bad in hostile {
+        let mut doc = base.clone();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("trace".into(), bad.clone());
+        }
+        match Request::decode(&doc.to_string_compact()) {
+            Ok(Request::Job { id, trace, .. }) => {
+                assert_eq!(id, 4);
+                assert_eq!(trace, None, "hostile trace {bad:?} must be ignored");
+            }
+            other => panic!("hostile trace {bad:?} must not reject: {other:?}"),
+        }
+    }
+    // Fuzz: splice arbitrary JSON fragments in as `trace` — the request
+    // must still decode (traced only when the fragment happens valid).
+    forall("hostile trace shapes", 150, |g| {
+        let n = g.usize_in(0, 40);
+        let blob: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+        let frag = parse(&String::from_utf8_lossy(&blob)).unwrap_or(Json::Null);
+        let mut doc = base.clone();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("trace".into(), frag);
+        }
+        assert!(Request::decode(&doc.to_string_compact()).is_ok());
+    });
+    // Response side: attach a span payload where the server would.
+    let resp = Response::Result {
+        id: 4,
+        result: JobResult::Classify { yhat: 0.25, reconfigured: false },
+    };
+    let mut doc = parse(&resp.encode()).unwrap();
+    if let Json::Obj(map) = &mut doc {
+        let span = Json::obj(vec![("name", Json::Str("exec".into()))]);
+        map.insert("trace".into(), Json::obj(vec![("spans", Json::Arr(vec![span]))]));
+    }
+    assert_eq!(Response::decode(&doc.to_string_compact()).unwrap(), resp);
+}
+
 /// Hostile-input sweep: random byte blobs and mutated documents through
 /// every decoder (jobs, results, admin, transport envelopes, framing)
 /// must refuse, never panic — the server runs these paths on whatever a

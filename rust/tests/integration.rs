@@ -811,6 +811,120 @@ fn cluster_transport_auth_gates_connections() {
     }
 }
 
+/// PR-8 acceptance: ONE traced sharded request produces ONE stitched
+/// trace across REAL OS processes. Two `rfnn serve --minimal` children
+/// each serve a shard; the coordinator's `scatter`/`gather` spans and the
+/// children's `server.request` → `frame.decode`/`queue.wait`/`exec`
+/// spans — shipped back in the response envelopes and adopted with a
+/// `node` tag — all share the client's trace id, with every remote root
+/// hanging under the coordinator scatter span that carried it.
+#[test]
+fn cluster_trace_stitches_across_processes() {
+    use rfnn::compiler::{plan_shards, PlanSpec};
+    use rfnn::coordinator::sharded::{ShardConfig, ShardedProcessor};
+    use rfnn::obs::trace::{with_current, Policy, TraceCtx};
+    use rfnn::processor::Fidelity;
+    use rfnn::util::json::Json;
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    /// Spawn one bare serving node with every trace retained, and parse
+    /// its ephemeral address from the `listening on ADDR` banner.
+    fn spawn_node() -> (Child, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_rfnn"))
+            .args(["serve", "--listen", "127.0.0.1:0", "--minimal"])
+            .env("RFNN_TRACE", "all")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn rfnn serve --minimal");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let banner = lines.next().expect("banner line").expect("readable banner");
+        let addr = banner
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected banner {banner:?}"))
+            .trim()
+            .to_string();
+        std::thread::spawn(move || for _ in lines {});
+        (child, addr)
+    }
+
+    let mut nodes: Vec<(Child, String)> = (0..2).map(|_| spawn_node()).collect();
+
+    // One logical 8×6 processor split across the two child processes.
+    let mut rng = Rng::new(0xABE);
+    let target = CMat::from_fn(8, 6, |_, _| C64::new(rng.normal(), rng.normal()));
+    let spec = PlanSpec::new(2, Fidelity::Measured);
+    let shards = plan_shards(&target, &spec, 2).expect("2-way tile-row split");
+    let addrs: Vec<Vec<String>> = (0..2).map(|s| vec![nodes[s].1.clone()]).collect();
+    let sp = ShardedProcessor::deploy("tr", &shards, &addrs, ShardConfig::default())
+        .expect("deploy over two child processes");
+
+    let x = CMat::from_fn(6, 3, |_, _| C64::new(rng.normal(), rng.normal()));
+    let ctx = TraceCtx::start_with(Policy::All, "client.request").expect("All always traces");
+    let y = with_current(&ctx, ctx.root(), || sp.try_apply_batch(&x)).expect("cluster apply");
+    assert_eq!((y.rows(), y.cols()), (8, 3));
+    let payload = ctx.finish(true).expect("exported");
+
+    // ONE stitched trace: every span — local and adopted — carries the
+    // client's trace id.
+    let spans = payload.get("spans").unwrap().as_arr().unwrap();
+    let tid = ctx.trace_id() as f64;
+    for s in spans {
+        assert_eq!(s.get("trace").unwrap().as_f64(), Some(tid), "foreign trace id in {s:?}");
+    }
+    // The coordinator's side: per-shard scatter and gather.
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+    for want in ["scatter.s0", "scatter.s1", "gather.s0", "gather.s1"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+    // The children's side: one adopted, node-tagged server root per
+    // shard process, each parented under a coordinator scatter span.
+    let remote_roots: Vec<&Json> = spans
+        .iter()
+        .filter(|s| {
+            s.get("node").is_some()
+                && s.get("name").and_then(Json::as_str) == Some("server.request")
+        })
+        .collect();
+    assert_eq!(remote_roots.len(), 2, "one remote root per shard process");
+    let scatter_ids: Vec<f64> = spans
+        .iter()
+        .filter(|s| {
+            matches!(s.get("name").and_then(Json::as_str),
+                     Some(n) if n.starts_with("scatter."))
+        })
+        .map(|s| s.get("id").unwrap().as_f64().unwrap())
+        .collect();
+    for s in &remote_roots {
+        let node = s.get("node").unwrap().as_str().unwrap();
+        assert!(node == nodes[0].1 || node == nodes[1].1, "unknown node tag {node}");
+        let parent = s.get("parent").unwrap().as_f64().unwrap();
+        assert!(
+            scatter_ids.contains(&parent),
+            "remote root parented to {parent}, scatters {scatter_ids:?}"
+        );
+    }
+    // Node-internal stages crossed the wire too: transport decode, queue
+    // wait, and the worker's execution span.
+    for want in ["frame.decode", "queue.wait", "exec"] {
+        assert!(
+            spans.iter().any(|s| {
+                s.get("node").is_some()
+                    && s.get("name").and_then(Json::as_str) == Some(want)
+            }),
+            "missing remote {want} span"
+        );
+    }
+
+    for (child, _) in nodes.iter_mut() {
+        child.kill().expect("kill node");
+        child.wait().expect("reap node");
+    }
+}
+
 /// Property: any mesh program applied to the standard basis reconstructs
 /// exactly the columns of its matrix.
 #[test]
