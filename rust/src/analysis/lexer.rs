@@ -1,0 +1,452 @@
+//! A lightweight, std-only Rust lexer for the lint pass.
+//!
+//! The lexer does **not** build a syntax tree. It performs a single
+//! character-level scan that classifies every byte of a source file as
+//! code, comment text, or literal body, and emits one [`Line`] per
+//! source line with:
+//!
+//! * `code` — the line with comment text and string/char literal bodies
+//!   removed (delimiters are kept), so token scans never fire on prose;
+//! * `comment` — the concatenated comment text of the line, used for
+//!   `// SAFETY:` and `// rfnn-lint: allow(...)` detection;
+//! * `in_test` — whether the line sits inside an item gated by
+//!   `#[cfg(test)]` (tracked by brace matching, so nested modules and
+//!   functions inside `mod tests { .. }` are covered).
+//!
+//! Handled literal forms: `"…"` and `b"…"` with escapes (including
+//! multi-line strings), raw strings `r"…"` / `r#"…"#` / `br#"…"#` with
+//! any number of hashes, char and byte-char literals (`'a'`, `b'\n'`),
+//! nested block comments, and lifetimes (`'a`, `'static`), which are
+//! deliberately *not* treated as unterminated char literals.
+
+/// One lexed source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// Code text with comments and literal bodies stripped
+    /// (string/char delimiters are preserved).
+    pub code: String,
+    /// Concatenated comment text that appears on this line.
+    pub comment: String,
+    /// True when the line is inside a `#[cfg(test)]`-gated item.
+    pub in_test: bool,
+    /// Lint rules disabled on this line via `rfnn-lint: allow(...)`,
+    /// either inline or on the comment-only lines directly above.
+    pub allows: Vec<String>,
+}
+
+/// A fully lexed source file.
+#[derive(Debug, Clone)]
+pub struct LexedFile {
+    pub lines: Vec<Line>,
+}
+
+impl LexedFile {
+    /// True when `rule` is allowed on 1-based line `lineno`, either by a
+    /// same-line comment or by the contiguous run of comment-only lines
+    /// directly above it.
+    pub fn is_allowed(&self, lineno: usize, rule: &str) -> bool {
+        let idx = lineno.saturating_sub(1);
+        if self.line_allows(idx, rule) {
+            return true;
+        }
+        // Walk up through comment-only (or blank-with-comment) lines.
+        let mut i = idx;
+        while i > 0 {
+            i -= 1;
+            let l = &self.lines[i];
+            if !l.code.trim().is_empty() {
+                break;
+            }
+            if l.comment.trim().is_empty() {
+                break;
+            }
+            if self.line_allows(i, rule) {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn line_allows(&self, idx: usize, rule: &str) -> bool {
+        self.lines.get(idx).is_some_and(|l| l.allows.iter().any(|a| a == rule))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth of `/* … */`.
+    BlockComment(u32),
+    /// Inside `"…"`; bool = previous char was an unconsumed backslash.
+    Str(bool),
+    /// Inside `r##"…"##`; the count is the number of `#`s.
+    RawStr(u32),
+    /// Inside `'…'`; bool = previous char was an unconsumed backslash.
+    CharLit(bool),
+}
+
+/// Lex `src` into per-line code/comment channels plus test-block and
+/// allow-escape annotations.
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<(String, String)> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // A newline terminates line comments but nothing else.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str(false);
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // Possible raw/byte string prefix: r", r#", b", br#", rb is
+                    // not a thing; plain identifiers fall through to `else`.
+                    if let Some((hashes, len)) = raw_string_at(&chars, i) {
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i += len;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push_str("b\"");
+                        state = State::Str(false);
+                        i += 2;
+                    } else if c == 'b' && next == Some('\'') && char_lit_at(&chars, i + 1) {
+                        code.push_str("b'");
+                        state = State::CharLit(false);
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' && char_lit_at(&chars, i) {
+                    code.push('\'');
+                    state = State::CharLit(false);
+                    i += 1;
+                } else {
+                    // Includes lifetimes: a lone `'` not opening a char
+                    // literal stays in the code channel.
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if d == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(d - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str(escaped) => {
+                if escaped {
+                    state = State::Str(false);
+                } else if c == '\\' {
+                    state = State::Str(true);
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                }
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && hashes_follow(&chars, i + 1, hashes) {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit(escaped) => {
+                if escaped {
+                    state = State::CharLit(false);
+                } else if c == '\\' {
+                    state = State::CharLit(true);
+                } else if c == '\'' {
+                    code.push('\'');
+                    state = State::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push((code, comment));
+    }
+
+    let in_test = mark_test_lines(&lines);
+    let mut out: Vec<Line> = lines
+        .into_iter()
+        .zip(in_test)
+        .map(|((code, comment), in_test)| {
+            let allows = parse_allows(&comment);
+            Line { code, comment, in_test, allows }
+        })
+        .collect();
+    // `#[cfg(test)]` attribute lines themselves count as test code so a
+    // gated single-line item never leaks into the non-test channel.
+    for l in &mut out {
+        if l.code.contains("cfg(test)") {
+            l.in_test = true;
+        }
+    }
+    LexedFile { lines: out }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If a raw string literal starts at `i` (`r"`, `r#"`, `br##"` …),
+/// return `(hash_count, prefix_len_including_quote)`.
+fn raw_string_at(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn hashes_follow(chars: &[char], start: usize, n: u32) -> bool {
+    (0..n as usize).all(|k| chars.get(start + k) == Some(&'#'))
+}
+
+/// Distinguish a char literal from a lifetime at the `'` in `chars[i]`:
+/// `'\…'` and `'x'` are literals; `'a`, `'static`, `'outer:` are not.
+fn char_lit_at(chars: &[char], i: usize) -> bool {
+    debug_assert_eq!(chars.get(i), Some(&'\''));
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Mark which lines fall inside `#[cfg(test)]`-gated brace blocks.
+///
+/// After a `cfg(test)` attribute is seen, the next `{` opened outside
+/// parens/brackets starts a test region that ends at its matching `}`;
+/// a top-level `;` first (brace-less item such as `#[cfg(test)] use …;`)
+/// cancels the pending attribute.
+fn mark_test_lines(lines: &[(String, String)]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut delim: i64 = 0;
+    let mut armed = false;
+    let mut test_depths: Vec<i64> = Vec::new();
+    for (ln, (code, _)) in lines.iter().enumerate() {
+        let mut scan = code.as_str();
+        // Arm on the attribute; skip past it so its own parens/brackets
+        // do not feed the delimiter tracker.
+        if let Some(pos) = code.find("cfg(test)") {
+            armed = true;
+            delim = 0;
+            scan = &code[pos + "cfg(test)".len()..];
+        }
+        let mut line_touches_test = !test_depths.is_empty();
+        for c in scan.chars() {
+            match c {
+                '(' | '[' => delim += 1,
+                ')' | ']' => delim = (delim - 1).max(0),
+                ';' if armed && delim == 0 => armed = false,
+                '{' => {
+                    if armed && delim == 0 {
+                        test_depths.push(depth);
+                        armed = false;
+                        line_touches_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_depths.last() == Some(&depth) {
+                        test_depths.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+        in_test[ln] = line_touches_test || !test_depths.is_empty();
+    }
+    in_test
+}
+
+/// Parse `rfnn-lint: allow(rule-a, rule-b)` escapes out of comment text.
+fn parse_allows(comment: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find("rfnn-lint:") {
+        rest = &rest[pos + "rfnn-lint:".len()..];
+        let trimmed = rest.trim_start();
+        if let Some(body) = trimmed.strip_prefix("allow(") {
+            if let Some(end) = body.find(')') {
+                for name in body[..end].split(',') {
+                    let name = name.trim();
+                    if !name.is_empty() {
+                        out.push(name.to_string());
+                    }
+                }
+                rest = &body[end..];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_move_to_comment_channel() {
+        let f = lex("let x = 1; // trailing note\n");
+        assert_eq!(f.lines[0].code.trim_end(), "let x = 1;");
+        assert!(f.lines[0].comment.contains("trailing note"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_tracked() {
+        let src = "a /* outer /* inner */ still comment */ b\nc\n";
+        let code = code_of(src);
+        assert!(code[0].contains('a') && code[0].contains('b'));
+        assert!(!code[0].contains("still"));
+        assert_eq!(code[1], "c");
+    }
+
+    #[test]
+    fn string_bodies_are_stripped() {
+        let code = code_of("let s = \"unwrap() // not a comment\"; let y = 2;\n");
+        assert!(!code[0].contains("unwrap"));
+        assert!(!code[0].contains("not a comment"));
+        assert!(code[0].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let code = code_of(r#"let s = "a\"b unwrap() c"; done();"#);
+        assert!(!code[0].contains("unwrap"));
+        assert!(code[0].contains("done();"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"panic!(\"x\") \"quoted\"\"#; after();\n";
+        let code = code_of(src);
+        assert!(!code[0].contains("panic"));
+        assert!(code[0].contains("after();"));
+    }
+
+    #[test]
+    fn multiline_strings_span_lines() {
+        let code = code_of("let s = \"line one\nunwrap() inside\nend\"; tail();\n");
+        assert!(!code[1].contains("unwrap"));
+        assert!(code[2].contains("tail();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let code = code_of("fn f<'a>(x: &'a str) -> char { 'x' }\nlet q = '\\'';\n");
+        // Lifetimes stay in the code channel; the char body is stripped.
+        assert!(code[0].contains("<'a>"));
+        assert!(!code[0].contains('x') || code[0].contains("x:"));
+        assert!(code[1].contains("let q ="));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let code = code_of("let a = b\"unwrap()\"; let b = b'x'; let c = br#\"panic!\"#; end();\n");
+        assert!(!code[0].contains("unwrap"));
+        assert!(!code[0].contains("panic"));
+        assert!(code[0].contains("end();"));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let src = "\
+fn live() { work(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { inner(); }
+}
+fn live2() {}
+";
+        let f = lex(src);
+        assert!(!f.lines[0].in_test, "live code before the gate");
+        assert!(f.lines[1].in_test, "the attribute line itself");
+        assert!(f.lines[2].in_test && f.lines[3].in_test && f.lines[4].in_test);
+        assert!(!f.lines[5].in_test, "code after the closing brace");
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_does_not_leak() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn live() { a(); }\n";
+        let f = lex(src);
+        assert!(!f.lines[2].in_test, "the `;` cancels the pending gate");
+    }
+
+    #[test]
+    fn allow_escapes_parse_inline_and_above() {
+        let src = "\
+// rfnn-lint: allow(panic-serving)
+x.unwrap();
+y.unwrap(); // rfnn-lint: allow(panic-serving, wire-cast)
+z.unwrap();
+";
+        let f = lex(src);
+        assert!(f.is_allowed(2, "panic-serving"), "comment line above");
+        assert!(f.is_allowed(3, "panic-serving"), "inline");
+        assert!(f.is_allowed(3, "wire-cast"), "second rule in one escape");
+        assert!(!f.is_allowed(4, "panic-serving"), "escape does not fall through");
+        assert!(!f.is_allowed(2, "wire-cast"), "rule names are exact");
+    }
+}

@@ -1,0 +1,239 @@
+//! In-repo static analysis: `rfnn lint`.
+//!
+//! The serving stack's correctness story rests on contracts that used
+//! to live in review comments: wire decodes never truncate, the serving
+//! path never panics, `unsafe` stays confined to the SIMD kernel with a
+//! written safety argument, and the bit-identity numeric modules never
+//! consult clocks or iterate hash maps. This module mechanizes those
+//! contracts as a lint pass that every CI run executes.
+//!
+//! The pass is std-only, like the rest of the crate: [`lexer`] is a
+//! character-level scanner that separates code from comments and
+//! literal bodies (raw strings, nested block comments, `#[cfg(test)]`
+//! blocks included), and [`rules`] is the registry of checks that walk
+//! the lexed non-test code channel. No syntax tree is built; every rule
+//! is a token-level scan over code text, which keeps the engine small
+//! and the diagnostics fast and deterministic.
+//!
+//! Escape hatch: a violation that is intentional carries an inline
+//! `// rfnn-lint: allow(<rule-id>)` comment (same line or the comment
+//! lines directly above) with a human justification. The escapes are
+//! themselves grep-able, so the set of exceptions stays auditable.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::Json;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Machine-readable rule ID (`wire-cast`, `panic-serving`, …).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// The outcome of linting a tree.
+#[derive(Debug)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// `path:line: [rule] message` per violation, plus a summary line.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{}: [{}] {}\n", d.path, d.line, d.rule, d.message));
+        }
+        out.push_str(&format!(
+            "{} file(s) scanned, {} violation(s)\n",
+            self.files_scanned,
+            self.diagnostics.len()
+        ));
+        out
+    }
+
+    /// Single-line JSON document for CI consumption.
+    pub fn to_json(&self) -> String {
+        let mut violations = Vec::new();
+        for d in &self.diagnostics {
+            violations.push(Json::obj(vec![
+                ("rule", Json::Str(d.rule.to_string())),
+                ("path", Json::Str(d.path.clone())),
+                ("line", Json::Num(d.line as f64)),
+                ("message", Json::Str(d.message.clone())),
+            ]));
+        }
+        Json::obj(vec![
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("count", Json::Num(self.diagnostics.len() as f64)),
+            ("violations", Json::Arr(violations)),
+        ])
+        .to_string_compact()
+    }
+}
+
+/// IDs of every registered rule, in reporting order.
+pub fn rule_ids() -> Vec<&'static str> {
+    rules::registry().iter().map(|r| r.id).collect()
+}
+
+/// Lint a single in-memory source file (fixture entry point; the
+/// self-check and all rule tests go through this).
+pub fn lint_source(path: &str, content: &str, rule: Option<&str>) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(content);
+    let mut out = Vec::new();
+    for r in rules::registry() {
+        if rule.is_some_and(|want| want != r.id) {
+            continue;
+        }
+        if let rules::RuleKind::Source(check) = r.kind {
+            check(path, &lexed, &mut out);
+        }
+    }
+    out
+}
+
+/// Lint the repo tree rooted at `root` (the directory holding
+/// `Cargo.toml` and `rust/src/`). `rule` restricts to one rule ID.
+pub fn lint_tree(root: &Path, rule: Option<&str>) -> io::Result<Report> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("{} is not a crate root (no rust/src/)", root.display()),
+        ));
+    }
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+
+    let mut diagnostics = Vec::new();
+    let mut files_scanned = 0usize;
+    for f in &files {
+        let content = fs::read_to_string(f)?;
+        let rel = rel_path(root, f);
+        diagnostics.extend(lint_source(&rel, &content, rule));
+        files_scanned += 1;
+    }
+
+    let manifest = root.join("Cargo.toml");
+    if manifest.is_file() && rule.is_none_or(|want| want == "zero-dep") {
+        let content = fs::read_to_string(&manifest)?;
+        for r in rules::registry() {
+            if let rules::RuleKind::Manifest(check) = r.kind {
+                if rule.is_none_or(|want| want == r.id) {
+                    check(&content, &mut diagnostics);
+                }
+            }
+        }
+        files_scanned += 1;
+    }
+
+    // Deterministic report order: by path, then line, then rule.
+    diagnostics.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(Report { diagnostics, files_scanned })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes, for scope matching and
+/// stable diagnostics across platforms.
+fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_text_and_json_shapes() {
+        let r = Report {
+            diagnostics: vec![Diagnostic {
+                rule: "wire-cast",
+                path: "rust/src/coordinator/service.rs".to_string(),
+                line: 7,
+                message: "msg".to_string(),
+            }],
+            files_scanned: 3,
+        };
+        let text = r.to_text();
+        assert!(text.contains("rust/src/coordinator/service.rs:7: [wire-cast] msg"));
+        assert!(text.contains("3 file(s) scanned, 1 violation(s)"));
+        let j = crate::util::json::parse(&r.to_json()).expect("report JSON parses");
+        assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        let v = j.get("violations").and_then(|v| v.as_arr()).expect("violations array");
+        assert_eq!(v[0].get("line").and_then(|x| x.as_f64()), Some(7.0));
+    }
+
+    #[test]
+    fn rule_ids_are_unique_and_stable() {
+        let ids = rule_ids();
+        assert_eq!(ids.len(), 6);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate rule IDs");
+        for id in ids {
+            assert!(rules::find(id).is_some());
+        }
+    }
+
+    #[test]
+    fn lint_tree_rejects_non_crate_roots() {
+        let err = lint_tree(Path::new("/nonexistent-rfnn-root"), None);
+        assert!(err.is_err());
+    }
+
+    /// The repo must lint clean against its own rules: this is the same
+    /// gate CI's `lint` job enforces via `rfnn lint --format json`.
+    #[test]
+    fn self_check_repo_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root, None).expect("lint over the repo tree");
+        assert!(report.files_scanned > 20, "walker found the tree");
+        assert!(
+            report.is_clean(),
+            "rfnn lint found violations in the tree:\n{}",
+            report.to_text()
+        );
+    }
+
+    /// `--rule` filtering at the tree level only reports that rule.
+    #[test]
+    fn lint_tree_rule_filter() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root, Some("zero-dep")).expect("filtered lint");
+        assert!(report.is_clean(), "{}", report.to_text());
+    }
+}

@@ -1,0 +1,522 @@
+//! The lint rule registry: the repo's standing review contracts,
+//! mechanized.
+//!
+//! Every rule has a machine-readable ID (used by `--rule` and by the
+//! inline `// rfnn-lint: allow(<rule>)` escape hatch), a one-line
+//! summary for the CLI, and a checker that walks a [`LexedFile`]'s
+//! non-test code channel. Paths are repo-relative with forward slashes
+//! (`rust/src/coordinator/service.rs`), which is what the scope tables
+//! below match against.
+
+use super::lexer::LexedFile;
+use super::Diagnostic;
+
+/// How a rule inspects the tree.
+#[derive(Clone, Copy)]
+pub enum RuleKind {
+    /// Runs on every lexed `.rs` file under `rust/src/`.
+    Source(fn(&str, &LexedFile, &mut Vec<Diagnostic>)),
+    /// Runs on the raw text of `Cargo.toml`.
+    Manifest(fn(&str, &mut Vec<Diagnostic>)),
+}
+
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub kind: RuleKind,
+}
+
+/// All rules, in reporting order.
+pub fn registry() -> &'static [Rule] {
+    &[
+        Rule {
+            id: "wire-cast",
+            summary: "no truncating `as` integer casts in wire-decode scopes \
+                      (util/json, coordinator transport/service/router)",
+            kind: RuleKind::Source(check_wire_cast),
+        },
+        Rule {
+            id: "log-discipline",
+            summary: "no print/eprint/dbg macros outside obs/log.rs, cli.rs, \
+                      main.rs, and bench/",
+            kind: RuleKind::Source(check_log_discipline),
+        },
+        Rule {
+            id: "unsafe-hygiene",
+            summary: "`unsafe` only in allow-listed modules (math/gemm.rs), \
+                      each use preceded by a `// SAFETY:` comment",
+            kind: RuleKind::Source(check_unsafe_hygiene),
+        },
+        Rule {
+            id: "panic-serving",
+            summary: "no unwrap/expect/panic-family macros in non-test \
+                      serving-path code (coordinator transport/router/service/sharded)",
+            kind: RuleKind::Source(check_panic_serving),
+        },
+        Rule {
+            id: "determinism",
+            summary: "no Instant::now/SystemTime/HashMap/HashSet in the \
+                      bit-identity modules (math/, mesh/, compiler/exec.rs)",
+            kind: RuleKind::Source(check_determinism),
+        },
+        Rule {
+            id: "zero-dep",
+            summary: "Cargo.toml must not grow a [dependencies] section",
+            kind: RuleKind::Manifest(check_zero_dep),
+        },
+    ]
+}
+
+/// Look up a rule by ID.
+pub fn find(id: &str) -> Option<&'static Rule> {
+    registry().iter().find(|r| r.id == id)
+}
+
+// ------------------------------------------------------------ helpers ----
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of whole-token occurrences of `word` in `code`.
+fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !code[..at].chars().next_back().is_some_and(is_ident);
+        let after = at + word.len();
+        let after_ok = !code[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + word.len().max(1);
+    }
+    out
+}
+
+/// First non-whitespace char at or after byte offset `at`.
+fn next_nonspace(code: &str, at: usize) -> Option<char> {
+    code[at..].chars().find(|c| !c.is_whitespace())
+}
+
+/// The identifier token starting at the first non-whitespace char after
+/// `at`, if any.
+fn next_ident(code: &str, at: usize) -> Option<&str> {
+    let rest = code[at..].trim_start();
+    let end = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+    if end == 0 { None } else { Some(&rest[..end]) }
+}
+
+/// True when `word` occurs as a macro invocation (`word!`).
+fn macro_sites(code: &str, word: &str) -> Vec<usize> {
+    find_word(code, word)
+        .into_iter()
+        .filter(|&at| next_nonspace(code, at + word.len()) == Some('!'))
+        .collect()
+}
+
+/// True when `word` occurs as a call (`word(` / `.word(`).
+fn call_sites(code: &str, word: &str) -> Vec<usize> {
+    find_word(code, word)
+        .into_iter()
+        .filter(|&at| next_nonspace(code, at + word.len()) == Some('('))
+        .collect()
+}
+
+fn in_scope(path: &str, files: &[&str], prefixes: &[&str]) -> bool {
+    files.contains(&path) || prefixes.iter().any(|p| path.starts_with(p))
+}
+
+fn push(
+    out: &mut Vec<Diagnostic>,
+    file: &LexedFile,
+    rule: &'static str,
+    path: &str,
+    lineno: usize,
+    message: String,
+) {
+    if !file.is_allowed(lineno, rule) {
+        out.push(Diagnostic { rule, path: path.to_string(), line: lineno, message });
+    }
+}
+
+// -------------------------------------------------------------- rules ----
+
+/// Integer `as` targets that can silently truncate a wire value.
+/// 64-bit targets are excluded: the wire carries f64-backed integers
+/// that already fit (the `to_index` validation caps them at 2^53).
+const NARROW_INTS: &[&str] = &["u8", "u16", "u32", "usize", "i8", "i16", "i32", "isize"];
+
+fn check_wire_cast(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    let scoped = in_scope(
+        path,
+        &[
+            "rust/src/util/json.rs",
+            "rust/src/coordinator/service.rs",
+            "rust/src/coordinator/router.rs",
+        ],
+        &["rust/src/coordinator/transport/"],
+    );
+    if !scoped {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for at in find_word(&line.code, "as") {
+            if let Some(target) = next_ident(&line.code, at + 2) {
+                if NARROW_INTS.contains(&target) {
+                    push(
+                        out,
+                        file,
+                        "wire-cast",
+                        path,
+                        i + 1,
+                        format!(
+                            "truncating `as {target}` cast in a wire-decode scope; \
+                             use a checked conversion (`{target}::try_from`, \
+                             `u32::from`) or justify with an allow escape"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn check_log_discipline(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    let exempt = in_scope(
+        path,
+        &["rust/src/obs/log.rs", "rust/src/cli.rs", "rust/src/main.rs"],
+        &["rust/src/bench/"],
+    );
+    if exempt {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for mac in ["println", "eprintln", "print", "eprint", "dbg"] {
+            if !macro_sites(&line.code, mac).is_empty() {
+                push(
+                    out,
+                    file,
+                    "log-discipline",
+                    path,
+                    i + 1,
+                    format!(
+                        "`{mac}!` outside the logging allow-list; route \
+                         through crate::obs::log so serving output stays \
+                         structured"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Modules where `unsafe` is tolerated at all (SIMD kernels only).
+const UNSAFE_MODULES: &[&str] = &["rust/src/math/gemm.rs"];
+
+/// How many preceding lines may separate an `unsafe` token from its
+/// `// SAFETY:` justification.
+const SAFETY_LOOKBACK: usize = 10;
+
+fn check_unsafe_hygiene(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test || find_word(&line.code, "unsafe").is_empty() {
+            continue;
+        }
+        if !UNSAFE_MODULES.contains(&path) {
+            push(
+                out,
+                file,
+                "unsafe-hygiene",
+                path,
+                i + 1,
+                "`unsafe` outside the allow-listed kernel modules".to_string(),
+            );
+            continue;
+        }
+        let documented = (i.saturating_sub(SAFETY_LOOKBACK)..=i)
+            .any(|j| file.lines[j].comment.contains("SAFETY:"));
+        if !documented {
+            push(
+                out,
+                file,
+                "unsafe-hygiene",
+                path,
+                i + 1,
+                "`unsafe` without a `// SAFETY:` comment on or above the site".to_string(),
+            );
+        }
+    }
+}
+
+fn check_panic_serving(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    let scoped = in_scope(
+        path,
+        &[
+            "rust/src/coordinator/router.rs",
+            "rust/src/coordinator/service.rs",
+            "rust/src/coordinator/sharded.rs",
+        ],
+        &["rust/src/coordinator/transport/"],
+    );
+    if !scoped {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for m in ["unwrap", "expect"] {
+            if !call_sites(&line.code, m).is_empty() {
+                push(
+                    out,
+                    file,
+                    "panic-serving",
+                    path,
+                    i + 1,
+                    format!(
+                        "`{m}()` in the serving path; propagate a Result or \
+                         justify with an allow escape"
+                    ),
+                );
+            }
+        }
+        for m in ["panic", "unreachable", "todo", "unimplemented"] {
+            if !macro_sites(&line.code, m).is_empty() {
+                push(
+                    out,
+                    file,
+                    "panic-serving",
+                    path,
+                    i + 1,
+                    format!("`{m}!` in the serving path; return an error instead"),
+                );
+            }
+        }
+    }
+}
+
+fn check_determinism(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    let scoped = in_scope(
+        path,
+        &["rust/src/compiler/exec.rs"],
+        &["rust/src/math/", "rust/src/mesh/"],
+    );
+    if !scoped {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains("Instant::now") {
+            push(
+                out,
+                file,
+                "determinism",
+                path,
+                i + 1,
+                "`Instant::now` in a bit-identity module; timing must not \
+                 steer numerics (allow-escape timing-only uses)"
+                    .to_string(),
+            );
+        }
+        for word in ["SystemTime", "HashMap", "HashSet"] {
+            if !find_word(&line.code, word).is_empty() {
+                push(
+                    out,
+                    file,
+                    "determinism",
+                    path,
+                    i + 1,
+                    format!(
+                        "`{word}` in a bit-identity module; use ordered \
+                         structures / explicit clocks to keep results \
+                         reproducible"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn check_zero_dep(toml: &str, out: &mut Vec<Diagnostic>) {
+    let lines: Vec<&str> = toml.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if !(line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let name = line.trim_matches(['[', ']']).trim();
+        let base = name.rsplit('.').next().unwrap_or(name);
+        if matches!(base, "dependencies" | "dev-dependencies" | "build-dependencies") {
+            let allowed = raw.contains("rfnn-lint: allow(zero-dep)")
+                || (i > 0 && lines[i - 1].contains("rfnn-lint: allow(zero-dep)"));
+            if !allowed {
+                out.push(Diagnostic {
+                    rule: "zero-dep",
+                    path: "Cargo.toml".to_string(),
+                    line: i + 1,
+                    message: format!(
+                        "manifest section `[{name}]` violates the zero-dependency \
+                         contract; the crate builds from std alone"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lint_source;
+
+    const SERVING: &str = "rust/src/coordinator/service.rs";
+    const NEUTRAL: &str = "rust/src/nn/layers.rs";
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    // ---- wire-cast ----
+
+    #[test]
+    fn wire_cast_flags_narrow_casts_in_scope() {
+        let d = lint_source(SERVING, "fn f(x: u64) -> usize { x as usize }\n", None);
+        assert_eq!(ids(&d), ["wire-cast"]);
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn wire_cast_ignores_wide_and_out_of_scope() {
+        let d = lint_source(SERVING, "fn f(x: u32) -> u64 { x as u64 }\n", None);
+        assert!(d.is_empty(), "u64 is not a truncating target: {d:?}");
+        let d = lint_source(NEUTRAL, "fn f(x: u64) -> usize { x as usize }\n", None);
+        assert!(d.is_empty(), "layers.rs is not a wire-decode scope");
+    }
+
+    #[test]
+    fn wire_cast_respects_allow_escape() {
+        let src = "fn f(x: u32) -> usize {\n    x as usize // rfnn-lint: allow(wire-cast)\n}\n";
+        assert!(lint_source(SERVING, src, None).is_empty());
+    }
+
+    #[test]
+    fn wire_cast_ignores_strings_and_comments() {
+        let src = "// x as usize would truncate\nlet s = \"as usize\";\n";
+        assert!(lint_source(SERVING, src, None).is_empty());
+    }
+
+    // ---- log-discipline ----
+
+    #[test]
+    fn log_discipline_flags_eprintln() {
+        let d = lint_source(NEUTRAL, "fn f() { eprintln!(\"x\"); }\n", None);
+        assert_eq!(ids(&d), ["log-discipline"]);
+    }
+
+    #[test]
+    fn log_discipline_exempts_cli_and_tests() {
+        assert!(lint_source("rust/src/cli.rs", "fn f() { println!(\"x\"); }\n", None).is_empty());
+        let gated = "#[cfg(test)]\nmod tests {\n    fn f() { eprintln!(\"x\"); }\n}\n";
+        assert!(lint_source(NEUTRAL, gated, None).is_empty());
+    }
+
+    // ---- unsafe-hygiene ----
+
+    #[test]
+    fn unsafe_flagged_outside_kernel_modules() {
+        let d = lint_source(NEUTRAL, "fn f() { unsafe { g() } }\n", None);
+        assert_eq!(ids(&d), ["unsafe-hygiene"]);
+    }
+
+    #[test]
+    fn unsafe_in_gemm_needs_safety_comment() {
+        let gemm = "rust/src/math/gemm.rs";
+        let undocumented = "fn f() { unsafe { g() } }\n";
+        assert_eq!(ids(&lint_source(gemm, undocumented, None)), ["unsafe-hygiene"]);
+        let documented = "// SAFETY: g is sound because the caller checked avx2.\nfn f() { unsafe { g() } }\n";
+        assert!(lint_source(gemm, documented, None).is_empty());
+    }
+
+    // ---- panic-serving ----
+
+    #[test]
+    fn panic_serving_flags_unwrap_and_macros() {
+        let d = lint_source(SERVING, "fn f(x: Option<u8>) { x.unwrap(); panic!(\"no\"); }\n", None);
+        assert_eq!(ids(&d), ["panic-serving", "panic-serving"]);
+    }
+
+    #[test]
+    fn panic_serving_skips_unwrap_or_else_and_tests() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap_or_else(|| 0).min(x.unwrap_or(1)) }\n";
+        assert!(lint_source(SERVING, src, None).is_empty());
+        let gated = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u8>) { x.unwrap(); }\n}\n";
+        assert!(lint_source(SERVING, gated, None).is_empty());
+    }
+
+    #[test]
+    fn panic_serving_allow_escape_on_line_above() {
+        let src = "// rfnn-lint: allow(panic-serving) — infallible by trait contract\n\
+                   fn f(x: Option<u8>) { x.expect(\"checked\"); }\n";
+        assert!(lint_source(SERVING, src, None).is_empty());
+    }
+
+    // ---- determinism ----
+
+    #[test]
+    fn determinism_flags_clocks_and_hash_iteration() {
+        let mesh = "rust/src/mesh/grid.rs";
+        let d = lint_source(mesh, "fn f() { let t = Instant::now(); }\n", None);
+        assert_eq!(ids(&d), ["determinism"]);
+        let d = lint_source(mesh, "use std::collections::HashMap;\n", None);
+        assert_eq!(ids(&d), ["determinism"]);
+    }
+
+    #[test]
+    fn determinism_out_of_scope_and_allowed() {
+        assert!(lint_source(NEUTRAL, "fn f() { let t = Instant::now(); }\n", None).is_empty());
+        let src = "// rfnn-lint: allow(determinism) — probe timing only\n\
+                   fn f() { let t = Instant::now(); }\n";
+        assert!(lint_source("rust/src/math/gemm.rs", src, None).is_empty());
+    }
+
+    // ---- zero-dep ----
+
+    #[test]
+    fn zero_dep_flags_dependency_sections() {
+        let mut out = Vec::new();
+        check_zero_dep("[package]\nname = \"rfnn\"\n\n[dependencies]\nserde = \"1\"\n", &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 4);
+        let mut out = Vec::new();
+        check_zero_dep("[workspace.dev-dependencies]\n", &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn zero_dep_clean_manifest_passes() {
+        let mut out = Vec::new();
+        check_zero_dep("[package]\nname = \"rfnn\"\n[lints.clippy]\n", &mut out);
+        assert!(out.is_empty());
+    }
+
+    // ---- rule filter plumbed through lint_source ----
+
+    #[test]
+    fn rule_filter_restricts_reporting() {
+        let src = "fn f(x: Option<u8>) -> usize { x.unwrap() as usize }\n";
+        let all = lint_source(SERVING, src, None);
+        assert_eq!(all.len(), 2, "{all:?}");
+        let only = lint_source(SERVING, src, Some("wire-cast"));
+        assert_eq!(ids(&only), ["wire-cast"]);
+    }
+}

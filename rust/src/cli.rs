@@ -119,6 +119,8 @@ USAGE:
                  [--fab-seed S] [--calibration measured|ideal]
                  [--train EVALS] [--dspsa-mode monolithic|block|block-random]
                  [--dspsa-seed S]
+    rfnn lint [--rule NAME] [--format json|text] [--root DIR]
+                                                       in-repo static analysis pass
     rfnn info                                          platform + artifact status
 
 Every command also takes --kernel auto|scalar|avx2 (default auto), the
@@ -177,6 +179,13 @@ within that evaluation budget; --dspsa-mode picks monolithic flat-code
 perturbation or block-coordinate (one tile per step, round-robin or
 random).
 
+lint runs the in-repo static-analysis pass over rust/src/**/*.rs and
+Cargo.toml, mechanizing the standing contracts (rule IDs: wire-cast
+log-discipline unsafe-hygiene panic-serving determinism zero-dep).
+--rule restricts to one rule, --format json emits the machine-readable
+report CI consumes; intentional exceptions carry an inline
+`// rfnn-lint: allow(<rule>)` justification in the source.
+
 EXPERIMENTS: table1 fig3 fig5 fig6 fig8 fig9 fig10 fig12 fig15 fig16 table2 perf";
 
 /// Dispatch a parsed command line; returns the process exit code.
@@ -201,6 +210,7 @@ pub fn run(args: &Args) -> i32 {
         Some("client") => cmd_client(args),
         Some("cluster") => cmd_cluster(args),
         Some("compile") => cmd_compile(args),
+        Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -934,6 +944,39 @@ fn cmd_compile(args: &Args) -> i32 {
     0
 }
 
+/// `rfnn lint` — run the in-repo static analysis pass (see
+/// [`crate::analysis`]) over the tree rooted at `--root` (default the
+/// current directory). Exit code 0 when clean, 1 with `path:line`
+/// diagnostics when violations are found, 2 on usage errors.
+fn cmd_lint(args: &Args) -> i32 {
+    let format = args.get("format").unwrap_or("text");
+    if !matches!(format, "text" | "json") {
+        eprintln!("unknown --format '{format}' (have: text json)");
+        return 2;
+    }
+    let rule = args.get("rule");
+    if let Some(r) = rule {
+        if crate::analysis::rules::find(r).is_none() {
+            eprintln!("unknown --rule '{r}' (have: {})", crate::analysis::rule_ids().join(" "));
+            return 2;
+        }
+    }
+    let root = std::path::PathBuf::from(args.get("root").unwrap_or("."));
+    match crate::analysis::lint_tree(&root, rule) {
+        Ok(report) => {
+            match format {
+                "json" => println!("{}", report.to_json()),
+                _ => print!("{}", report.to_text()),
+            }
+            if report.is_clean() { 0 } else { 1 }
+        }
+        Err(e) => {
+            eprintln!("lint failed: {e}");
+            2
+        }
+    }
+}
+
 fn cmd_info() -> i32 {
     println!("rfnn {} — paper doi:10.1109/TMTT.2023.3293054", env!("CARGO_PKG_VERSION"));
     println!("{}", crate::math::gemm::kernel_report());
@@ -1126,5 +1169,22 @@ mod tests {
         let wrong_version = r#"{"v":999,"kind":"infer","processor":"mnist8","image":[]}"#;
         let a = Args::parse(["job".to_string(), wrong_version.to_string()]);
         assert_eq!(run(&a), 2);
+    }
+
+    #[test]
+    fn lint_usage_errors_before_any_tree_walk() {
+        assert_eq!(run(&parse("lint --format xml")), 2);
+        assert_eq!(run(&parse("lint --rule not-a-rule")), 2);
+        // A root that is not a crate checkout is an I/O error, not a panic.
+        assert_eq!(run(&parse("lint --root /definitely/not/here")), 2);
+    }
+
+    #[test]
+    fn lint_self_check_through_the_cli_is_clean() {
+        // The library-level self check lives in `analysis::tests`; this one
+        // exercises the full `rfnn lint` surface (flag parsing, tree walk,
+        // report printing, exit code) against the repo's own tree.
+        let a = parse(&format!("lint --root {}", env!("CARGO_MANIFEST_DIR")));
+        assert_eq!(run(&a), 0);
     }
 }

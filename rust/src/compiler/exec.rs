@@ -146,6 +146,7 @@ impl VirtualProcessor {
         let tls = crate::obs::trace::current();
         if workers <= 1 || total < 2 {
             for c in 0..gc {
+                // rfnn-lint: allow(determinism) — span timestamps only
                 let col_start = tls.as_ref().map(|_| Instant::now());
                 for r in 0..gr {
                     let idx = self.plan.grid.index(r, c);
@@ -156,7 +157,7 @@ impl VirtualProcessor {
                         "exec.col",
                         *parent,
                         t0,
-                        Instant::now(),
+                        Instant::now(), // rfnn-lint: allow(determinism)
                         vec![
                             ("col".to_string(), c.to_string()),
                             ("tiles".to_string(), gr.to_string()),
@@ -168,6 +169,7 @@ impl VirtualProcessor {
             let workers = workers.min(total);
             let chunk = total.div_ceil(workers);
             let slabs = &*slabs;
+            // rfnn-lint: allow(determinism) — span timestamps only
             let par_start = tls.as_ref().map(|_| Instant::now());
             std::thread::scope(|s| {
                 for (w, slot_chunk) in products.chunks_mut(chunk).enumerate() {
@@ -184,7 +186,7 @@ impl VirtualProcessor {
                     "exec.par",
                     *parent,
                     t0,
-                    Instant::now(),
+                    Instant::now(), // rfnn-lint: allow(determinism)
                     vec![
                         ("tiles".to_string(), total.to_string()),
                         ("workers".to_string(), workers.to_string()),

@@ -36,8 +36,8 @@ use std::sync::{Arc, Mutex};
 
 use super::metrics::{JobKind, Metrics};
 use super::service::{
-    get_index, get_str, Job, JobResult, ProcessorInfo, ProcessorService, SubmitError, Ticket,
-    WIRE_VERSION,
+    get_index, get_str, get_usize, Job, JobResult, ProcessorInfo, ProcessorService, SubmitError,
+    Ticket, WIRE_VERSION,
 };
 
 // ---------------------------------------------------------------------------
@@ -254,8 +254,8 @@ fn info_from_json(v: &Json) -> Result<ProcessorInfo> {
         version: get_index(v, "version")?,
         fidelity: Fidelity::from_name(fid)
             .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?,
-        dims: (get_index(v, "out")? as usize, get_index(v, "in")? as usize),
-        capacity: get_index(v, "capacity")? as usize,
+        dims: (get_usize(v, "out")?, get_usize(v, "in")?),
+        capacity: get_usize(v, "capacity")?,
         kinds,
     })
 }
@@ -466,7 +466,10 @@ impl Router {
                 AdminReply::Cluster(self.svc.metrics().cluster_snapshot())
             }
             Admin::TraceDump { n } => {
-                AdminReply::Traces(crate::obs::trace::tracer().dump(n as usize))
+                // Saturating: a count beyond this host's usize means
+                // "dump everything retained", never a truncated window.
+                let n = usize::try_from(n).unwrap_or(usize::MAX);
+                AdminReply::Traces(crate::obs::trace::tracer().dump(n))
             }
             Admin::MetricsText => AdminReply::MetricsText(crate::obs::prometheus(
                 &self.svc.metrics().snapshot(),

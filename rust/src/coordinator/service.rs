@@ -211,10 +211,10 @@ impl Job {
         let kind = get_str(v, "kind")?;
         if kind == "compile" {
             let name = get_str(v, "name")?.to_string();
-            let rows = get_index(v, "rows")? as usize;
-            let cols = get_index(v, "cols")? as usize;
+            let rows = get_usize(v, "rows")?;
+            let cols = get_usize(v, "cols")?;
             let target = cmat_from_parts(v, rows, cols)?;
-            let tile = get_index(v, "tile")? as usize;
+            let tile = get_usize(v, "tile")?;
             let fid = get_str(v, "fidelity")?;
             let fidelity = Fidelity::from_name(fid)
                 .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?;
@@ -222,9 +222,9 @@ impl Job {
         }
         if kind == "shard_compile" {
             let name = get_str(v, "name")?.to_string();
-            let rows = get_index(v, "rows")? as usize;
-            let cols = get_index(v, "cols")? as usize;
-            let tile = get_index(v, "tile")? as usize;
+            let rows = get_usize(v, "rows")?;
+            let cols = get_usize(v, "cols")?;
+            let tile = get_usize(v, "tile")?;
             let fid = get_str(v, "fidelity")?;
             let fidelity = Fidelity::from_name(fid)
                 .ok_or_else(|| Error::msg(format!("wire: unknown fidelity '{fid}'")))?;
@@ -232,8 +232,8 @@ impl Job {
             let calibration = Calibration::from_name(cal)
                 .ok_or_else(|| Error::msg(format!("wire: unknown calibration '{cal}'")))?;
             let measured_seed = get_index(v, "seed")?;
-            let row_start = get_index(v, "row_start")? as usize;
-            let grid_rows = get_index(v, "grid_rows")? as usize;
+            let row_start = get_usize(v, "row_start")?;
+            let grid_rows = get_usize(v, "grid_rows")?;
             // The slice height is derived from the global geometry, so a
             // document cannot claim one shape and ship another; full
             // consistency (valid tile size, in-grid row range) is enforced
@@ -513,7 +513,7 @@ fn decode_legacy_job(kind: &str, v: &Json) -> Result<Job> {
             Ok(Job::Infer { processor, image })
         }
         "classify" => {
-            let classifier = get_index(v, "classifier")? as usize;
+            let classifier = get_usize(v, "classifier")?;
             let p = get_nums(v, "point")?;
             if p.len() != 2 {
                 return Err(Error::msg("wire: classify point must have 2 coordinates"));
@@ -529,7 +529,7 @@ fn decode_legacy_job(kind: &str, v: &Json) -> Result<Job> {
         "reprogram" => {
             let code = get_nums(v, "code")?
                 .iter()
-                .map(|&c| to_index(c, "code").map(|u| u as usize))
+                .map(|&c| to_state_code(c))
                 .collect::<Result<Vec<usize>>>()?;
             Ok(Job::Reprogram { processor, code })
         }
@@ -622,6 +622,20 @@ pub(crate) fn get_index(v: &Json, key: &str) -> Result<u64> {
     to_index(get_f64(v, key)?, key)
 }
 
+/// A count/index field destined for in-memory indexing: [`get_index`]
+/// validation plus a checked narrowing, so a host whose `usize` cannot
+/// hold the value rejects the document instead of truncating it.
+pub(crate) fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    usize::try_from(get_index(v, key)?)
+        .map_err(|_| Error::msg(format!("wire: '{key}' does not fit this host's usize")))
+}
+
+/// A reprogram state code: index-validated, then narrowed checked.
+fn to_state_code(c: f64) -> Result<usize> {
+    let u = to_index(c, "code")?;
+    usize::try_from(u).map_err(|_| Error::msg("wire: 'code' does not fit this host's usize"))
+}
+
 fn to_index(x: f64, what: &str) -> Result<u64> {
     // NaN fails the range test; 2^53 bounds exact f64 integers.
     if !(0.0..=9.0e15).contains(&x) || x.fract() != 0.0 {
@@ -665,8 +679,8 @@ fn cmat_to_json(m: &CMat) -> Json {
 }
 
 fn cmat_from_json(v: &Json) -> Result<CMat> {
-    let rows = get_index(v, "rows")? as usize;
-    let cols = get_index(v, "cols")? as usize;
+    let rows = get_usize(v, "rows")?;
+    let cols = get_usize(v, "cols")?;
     cmat_from_parts(v, rows, cols)
 }
 
@@ -1240,7 +1254,12 @@ impl ProcessorService {
                     Job::ShardCompile { name, spec } => {
                         shard_compile_and_register(&pool, &name, spec)
                     }
-                    _ => unreachable!("submit_compile is only called with compile-kind jobs"),
+                    // Defensive: submit_compile is only called with
+                    // compile-kind jobs; a dispatch bug degrades to a
+                    // rejection rather than a worker panic.
+                    _ => JobResult::Rejected {
+                        reason: "compile worker received a non-compile job".to_string(),
+                    },
                 }))
                 .unwrap_or_else(|_| JobResult::Rejected {
                     reason: "compile: synthesis panicked (see server log)".to_string(),
@@ -1452,11 +1471,25 @@ fn virtual_worker(
     };
     while let Some(handles) = next_batch(&rx, &cfg.batch) {
         let formed = Instant::now();
-        let (infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
+        let (mut infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
             handles.into_iter().partition(|h| matches!(h.job, Job::Infer { .. }));
-        if !infers.is_empty() {
-            // kinds() only admits Infer when the MNIST head is present.
-            let bundle = mnist.as_ref().expect("infer admitted without an MNIST head");
+        // kinds() only admits Infer when the MNIST head is present; if
+        // that invariant ever breaks, shed the batch with a reason
+        // instead of taking the worker (and every queued ticket) down.
+        let bundle = match (&mnist, infers.is_empty()) {
+            (Some(b), false) => Some(b),
+            (None, false) => {
+                for h in infers {
+                    h.respond(JobResult::Rejected {
+                        reason: "infer admitted without an MNIST head".to_string(),
+                    });
+                }
+                infers = Vec::new();
+                None
+            }
+            _ => None,
+        };
+        if let Some(bundle) = bundle {
             let n = infers.len();
             let mut x = vec![0.0f32; n * 784];
             for (r, h) in infers.iter().enumerate() {

@@ -27,6 +27,8 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
             format!("frame of {} bytes exceeds the {MAX_FRAME}-byte cap", payload.len()),
         ));
     }
+    // Lossless after the MAX_FRAME (2^26) cap above.
+    // rfnn-lint: allow(wire-cast)
     w.write_all(&(payload.len() as u32).to_be_bytes())?;
     w.write_all(payload)?;
     w.flush()
@@ -51,6 +53,8 @@ pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<Option<Vec<u8>>> 
             n => filled += n,
         }
     }
+    // u32 → usize never truncates on the ≥32-bit targets we build for.
+    // rfnn-lint: allow(wire-cast)
     let len = u32::from_be_bytes(len_buf) as usize;
     if len > max {
         return Err(io::Error::new(

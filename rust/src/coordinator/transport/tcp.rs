@@ -426,6 +426,8 @@ fn read_frame_interruptible(
         Fill::Stopped => return Ok(ConnRead::Stopped),
         Fill::Done => {}
     }
+    // u32 → usize never truncates on the ≥32-bit targets we build for.
+    // rfnn-lint: allow(wire-cast)
     let len = u32::from_be_bytes(len_buf) as usize;
     if len > max {
         return Err(io::Error::new(

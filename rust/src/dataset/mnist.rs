@@ -60,7 +60,11 @@ pub fn load_sourced(
             te = te.take(n_test);
             return (tr, te, MnistSource::RealIdx);
         }
-        eprintln!("warning: RFNN_MNIST_DIR set but unreadable; using synthetic digits");
+        crate::obs::log::warn(
+            "dataset",
+            "RFNN_MNIST_DIR set but unreadable; using synthetic digits",
+            &[],
+        );
     }
     (synthetic(n_train, seed), synthetic(n_test, seed ^ 0x7E57_DA7A), MnistSource::Synthetic)
 }

@@ -391,7 +391,49 @@
 //! `MetricsSnapshot` as Prometheus text ([`obs::prometheus`];
 //! `rfnn client admin metrics --format prom`) for scrape-based
 //! collection.
+//!
+//! ## Correctness tooling
+//!
+//! The equivalence claims above (par ≡ seq, sharded ≡ single, SIMD
+//! bit-identity, never-panicking serving path) are enforced by three
+//! layers of tooling, not by review discipline alone:
+//!
+//! **`rfnn lint`** ([`analysis`]) — an in-repo, std-only static
+//! analysis pass over `rust/src/**/*.rs` and `Cargo.toml`. A
+//! character-level lexer separates code from comments, string/raw
+//! string bodies, and `#[cfg(test)]` blocks; a rule registry then
+//! mechanizes the standing contracts:
+//!
+//! | rule ID          | contract                                              |
+//! |------------------|-------------------------------------------------------|
+//! | `wire-cast`      | no truncating `as` int casts in wire-decode scopes    |
+//! | `log-discipline` | no print macros outside obs/log, cli, main, bench     |
+//! | `unsafe-hygiene` | `unsafe` only in math/gemm.rs, with `// SAFETY:`      |
+//! | `panic-serving`  | no unwrap/expect/panic! in the serving path           |
+//! | `determinism`    | no clocks / hash iteration in bit-identity modules    |
+//! | `zero-dep`       | Cargo.toml never grows a `[dependencies]` section     |
+//!
+//! Intentional exceptions carry an inline
+//! `// rfnn-lint: allow(<rule>)` with a written justification (e.g.
+//! the GEMM autotuner's probe timing, which steers blocking but never
+//! values). The pass runs as a blocking CI job and as the
+//! `self_check_repo_tree_is_clean` unit test, so the tree can never
+//! merge with an unexplained violation.
+//!
+//! **Miri** (CI `miri` job) — interprets the pure numeric modules'
+//! tests (`math`, `mesh`, `util::json`, `util::gzip`) under nightly
+//! Miri to catch undefined behavior the lexer pass cannot see (the
+//! AVX2 kernel itself is host-dispatched away under Miri; the scalar
+//! reference path and all index arithmetic run fully checked, with
+//! `RFNN_AUTOTUNE=off` skipping wall-clock probe timing).
+//!
+//! **ThreadSanitizer** (CI `tsan` job) — runs the service admission,
+//! router ticket, and sharded failover concurrency tests under
+//! `-Zsanitizer=thread` to catch data races dynamically; the lexer
+//! pass keeps panics out of the serving path, TSan keeps the
+//! lock/atomic choreography honest.
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod compiler;

@@ -263,9 +263,30 @@ fn candidates() -> Vec<Micro> {
     }
 }
 
+/// `RFNN_AUTOTUNE=off` pins every tier to a deterministic default
+/// microkernel without running the timed probes. Used by the Miri CI
+/// job (wall-clock probe loops are prohibitively slow under the
+/// interpreter) and by anyone who wants tuning out of a measurement.
+/// Latched once per process, like the kernel policy.
+fn autotune_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !std::env::var("RFNN_AUTOTUNE").is_ok_and(|v| v.eq_ignore_ascii_case("off"))
+    })
+}
+
 /// Measure the candidates on this tier's representative shape and keep
 /// the fastest; publish its per-MAC cost for [`par_threshold_macs`].
 fn tune_tier(tier: usize) -> Micro {
+    if !autotune_enabled() {
+        // Still populates the tier cache (so `tuned_tiers()` counts it),
+        // but with the dispatch default instead of a probe winner. All
+        // microkernels are bit-identical, so this is a pure perf choice.
+        return match active() {
+            Kernel::Avx2 => Micro::Avx2,
+            Kernel::Scalar => SCALAR_MICROS[0],
+        };
+    }
     let (m, k, n) = (CLASS_REP[tier / 16], CLASS_REP[(tier / 4) % 4], CLASS_REP[tier % 4]);
     let cands = candidates();
     // Deterministic probe data (xorshift; values are irrelevant to the
@@ -289,6 +310,9 @@ fn tune_tier(tier: usize) -> Micro {
         gemm_into_micro(cand, &a, &b, &mut c, m, k, n); // warm up
         let mut pass_ns = f64::INFINITY;
         for _ in 0..3 {
+            // Probe timing steers only the blocking choice, never values:
+            // all microkernels are bit-identical (module contract).
+            // rfnn-lint: allow(determinism)
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
                 gemm_into_micro(cand, &a, &b, &mut c, m, k, n);
@@ -477,6 +501,11 @@ mod avx2 {
 
     /// One packed 4-column panel: 4-row micro-tiles down `m`, 1-row
     /// micro-tiles on the ragged bottom edge.
+    ///
+    /// SAFETY: `#[target_feature(enable = "avx2")]` makes this fn unsafe
+    /// to call; callers must have checked `avx2_available()`. All memory
+    /// access is through safe slice indexing (bounds-checked), so the
+    /// only obligation is the CPU-feature precondition.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
     unsafe fn panel(

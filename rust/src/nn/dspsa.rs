@@ -374,7 +374,7 @@ mod tests {
             let (off, len) = spans[p.block];
             let cur = d.current();
             for i in 0..9 {
-                let inside = i >= off && i < off + len;
+                let inside = (off..off + len).contains(&i);
                 assert!(p.plus[i] <= 5 && p.minus[i] <= 5);
                 if inside {
                     assert!((p.plus[i] as i64 - p.minus[i] as i64).abs() <= 1);

@@ -213,16 +213,12 @@ pub fn abs_act(x: &Mat) -> Mat {
     x.map(f64::abs)
 }
 
-/// Backward of |·| (subgradient 0 at 0).
+/// Backward of |·| (subgradient 0 at 0; NaN inputs also get 0).
 pub fn abs_backward(x: &Mat, dy: &Mat) -> Mat {
-    x.zip(dy, |xv, dv| {
-        if xv > 0.0 {
-            dv
-        } else if xv < 0.0 {
-            -dv
-        } else {
-            0.0
-        }
+    x.zip(dy, |xv, dv| match xv.partial_cmp(&0.0) {
+        Some(std::cmp::Ordering::Greater) => dv,
+        Some(std::cmp::Ordering::Less) => -dv,
+        _ => 0.0,
     })
 }
 

@@ -224,7 +224,7 @@ impl SpanRecord {
     pub fn from_json(v: &Json) -> Option<SpanRecord> {
         let num = |k: &str| -> Option<u64> {
             let x = v.get(k)?.as_f64()?;
-            (x.is_finite() && x >= 0.0 && x < 9.0e15).then_some(x as u64)
+            (x.is_finite() && (0.0..9.0e15).contains(&x)).then_some(x as u64)
         };
         let mut notes = Vec::new();
         if let Some(Json::Obj(m)) = v.get("notes") {
