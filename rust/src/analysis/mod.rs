@@ -18,15 +18,35 @@
 //! Escape hatch: a violation that is intentional carries an inline
 //! `// rfnn-lint: allow(<rule-id>)` comment (same line or the comment
 //! lines directly above) with a human justification. The escapes are
-//! themselves grep-able, so the set of exceptions stays auditable.
+//! themselves grep-able, so the set of exceptions stays auditable — and
+//! *bounded*: [`ALLOW_BUDGETS`] caps how many escapes each rule may
+//! carry in non-test code, so the hatch cannot silently become the
+//! norm. Exceeding a budget is itself a lint failure; the only way to
+//! add an escape past the ceiling is to raise the table in review.
 
 pub mod lexer;
 pub mod rules;
 
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
+
+/// Per-rule ceilings on `rfnn-lint: allow(<rule>)` escapes in non-test
+/// `.rs` code (the manifest's inline `zero-dep` escape is checked by
+/// that rule directly and is not counted here). The numbers are the
+/// exact current escape population — adding one more anywhere fails
+/// `rfnn lint` until this table is deliberately raised.
+pub const ALLOW_BUDGETS: &[(&str, usize)] = &[
+    ("wire-cast", 3),        // frame.rs length prefix (2), reactor.rs frame slice (1)
+    ("log-discipline", 0),
+    ("unsafe-hygiene", 0),
+    ("panic-serving", 1),    // sharded.rs infallible trait contract
+    ("determinism", 5),      // gemm.rs autotune probe (1), exec.rs span timestamps (4)
+    ("reactor-blocking", 1), // reactor.rs bounded idle pacing sleep
+    ("zero-dep", 0),
+];
 
 /// One rule violation at a source location.
 #[derive(Debug, Clone)]
@@ -107,6 +127,57 @@ pub fn lint_source(path: &str, content: &str, rule: Option<&str>) -> Vec<Diagnos
     out
 }
 
+/// Tally `rfnn-lint: allow(<rule>)` escapes on non-test lines into
+/// `counts`. Only names that match a registered rule are counted: doc
+/// comments legitimately mention the escape syntax with placeholder
+/// names (`allow(<rule>)`, `allow(rule-a, rule-b)`), and a non-rule
+/// name is inert for `is_allowed` anyway.
+fn count_allows(lexed: &lexer::LexedFile, counts: &mut BTreeMap<String, usize>) {
+    for line in &lexed.lines {
+        if line.in_test {
+            continue;
+        }
+        for name in &line.allows {
+            if rules::find(name).is_some() {
+                *counts.entry(name.clone()).or_insert(0) += 1;
+            }
+        }
+    }
+}
+
+/// Turn tree-wide escape tallies into diagnostics for every rule whose
+/// count exceeds its [`ALLOW_BUDGETS`] ceiling (a rule missing from the
+/// table gets a ceiling of zero). Budget diagnostics carry line 0: they
+/// describe the tree, not one location. `rule` applies the same filter
+/// as [`lint_tree`].
+fn budget_diagnostics(counts: &BTreeMap<String, usize>, rule: Option<&str>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (name, &count) in counts {
+        if rule.is_some_and(|want| want != name.as_str()) {
+            continue;
+        }
+        let budget = ALLOW_BUDGETS
+            .iter()
+            .find(|(r, _)| r == name)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        if count > budget {
+            let Some(r) = rules::find(name) else { continue };
+            out.push(Diagnostic {
+                rule: r.id,
+                path: "rust/src".to_string(),
+                line: 0,
+                message: format!(
+                    "{count} `rfnn-lint: allow({name})` escape(s) in non-test code \
+                     exceed the budget of {budget}; remove an escape or deliberately \
+                     raise ALLOW_BUDGETS in analysis/mod.rs"
+                ),
+            });
+        }
+    }
+    out
+}
+
 /// Lint the repo tree rooted at `root` (the directory holding
 /// `Cargo.toml` and `rust/src/`). `rule` restricts to one rule ID.
 pub fn lint_tree(root: &Path, rule: Option<&str>) -> io::Result<Report> {
@@ -122,13 +193,16 @@ pub fn lint_tree(root: &Path, rule: Option<&str>) -> io::Result<Report> {
     files.sort();
 
     let mut diagnostics = Vec::new();
+    let mut allow_counts = BTreeMap::new();
     let mut files_scanned = 0usize;
     for f in &files {
         let content = fs::read_to_string(f)?;
         let rel = rel_path(root, f);
+        count_allows(&lexer::lex(&content), &mut allow_counts);
         diagnostics.extend(lint_source(&rel, &content, rule));
         files_scanned += 1;
     }
+    diagnostics.extend(budget_diagnostics(&allow_counts, rule));
 
     let manifest = root.join("Cargo.toml");
     if manifest.is_file() && rule.is_none_or(|want| want == "zero-dep") {
@@ -199,7 +273,7 @@ mod tests {
     #[test]
     fn rule_ids_are_unique_and_stable() {
         let ids = rule_ids();
-        assert_eq!(ids.len(), 6);
+        assert_eq!(ids.len(), 7);
         let mut sorted = ids.clone();
         sorted.sort_unstable();
         sorted.dedup();
@@ -227,6 +301,57 @@ mod tests {
             "rfnn lint found violations in the tree:\n{}",
             report.to_text()
         );
+    }
+
+    /// Every registered rule has a budget row and every budget row names
+    /// a registered rule — the table cannot drift from the registry.
+    #[test]
+    fn allow_budget_table_covers_every_rule() {
+        for id in rule_ids() {
+            assert!(
+                ALLOW_BUDGETS.iter().any(|(r, _)| *r == id),
+                "no allow budget entry for rule `{id}`"
+            );
+        }
+        for (r, _) in ALLOW_BUDGETS {
+            assert!(rules::find(r).is_some(), "budget entry for unknown rule `{r}`");
+        }
+        assert_eq!(ALLOW_BUDGETS.len(), rule_ids().len());
+    }
+
+    #[test]
+    fn allow_counting_skips_tests_and_placeholder_names() {
+        let src = "// rfnn-lint: allow(determinism) — probe timing\n\
+                   let a = now();\n\
+                   let b = 1; // rfnn-lint: allow(determinism)\n\
+                   //! mention the syntax: `// rfnn-lint: allow(<rule>)`\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    \
+                       // rfnn-lint: allow(determinism)\n    \
+                       fn f() {}\n\
+                   }\n";
+        let mut counts = BTreeMap::new();
+        count_allows(&lexer::lex(src), &mut counts);
+        assert_eq!(counts.get("determinism"), Some(&2), "{counts:?}");
+        assert_eq!(counts.len(), 1, "placeholder `<rule>` must not count: {counts:?}");
+    }
+
+    #[test]
+    fn allow_budget_overspend_is_a_lint_failure() {
+        let mut over = BTreeMap::new();
+        over.insert("determinism".to_string(), 10_000usize);
+        let d = budget_diagnostics(&over, None);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "determinism");
+        assert_eq!(d[0].line, 0);
+        assert!(d[0].message.contains("exceed the budget"), "{}", d[0].message);
+        // Under the table's ceiling: clean.
+        let mut under = BTreeMap::new();
+        under.insert("determinism".to_string(), 1usize);
+        assert!(budget_diagnostics(&under, None).is_empty());
+        // The rule filter applies to budget diagnostics too.
+        assert!(budget_diagnostics(&over, Some("zero-dep")).is_empty());
+        assert_eq!(budget_diagnostics(&over, Some("determinism")).len(), 1);
     }
 
     /// `--rule` filtering at the tree level only reports that rule.

@@ -60,6 +60,12 @@ pub fn registry() -> &'static [Rule] {
             kind: RuleKind::Source(check_determinism),
         },
         Rule {
+            id: "reactor-blocking",
+            summary: "no blocking calls (sleep/recv/join/read_exact/write_all/…) \
+                      inside the transport reactor event-loop module",
+            kind: RuleKind::Source(check_reactor_blocking),
+        },
+        Rule {
             id: "zero-dep",
             summary: "Cargo.toml must not grow a [dependencies] section",
             kind: RuleKind::Manifest(check_zero_dep),
@@ -347,6 +353,51 @@ fn check_determinism(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// Call-shaped tokens that can park the calling thread: fatal inside the
+/// single-threaded readiness loop, where one blocked call stalls every
+/// connection at once. Worker-pool code (`transport/tcp.rs`) may block
+/// freely; short mutex `lock()`s are deliberately tolerated.
+const BLOCKING_CALLS: &[&str] = &[
+    "sleep",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "write_all",
+    "recv",
+    "recv_timeout",
+    "wait",
+    "wait_timeout",
+    "join",
+    "park",
+    "park_timeout",
+];
+
+fn check_reactor_blocking(path: &str, file: &LexedFile, out: &mut Vec<Diagnostic>) {
+    if !in_scope(path, &["rust/src/coordinator/transport/reactor.rs"], &[]) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for m in BLOCKING_CALLS {
+            if !call_sites(&line.code, m).is_empty() {
+                push(
+                    out,
+                    file,
+                    "reactor-blocking",
+                    path,
+                    i + 1,
+                    format!(
+                        "`{m}()` blocks the reactor event loop; hand the work \
+                         to the worker pool or justify with an allow escape"
+                    ),
+                );
+            }
+        }
+    }
+}
+
 fn check_zero_dep(toml: &str, out: &mut Vec<Diagnostic>) {
     let lines: Vec<&str> = toml.lines().collect();
     for (i, raw) in lines.iter().enumerate() {
@@ -487,6 +538,37 @@ mod tests {
         let src = "// rfnn-lint: allow(determinism) — probe timing only\n\
                    fn f() { let t = Instant::now(); }\n";
         assert!(lint_source("rust/src/math/gemm.rs", src, None).is_empty());
+    }
+
+    // ---- reactor-blocking ----
+
+    const REACTOR: &str = "rust/src/coordinator/transport/reactor.rs";
+
+    #[test]
+    fn reactor_blocking_flags_blocking_calls_in_the_event_loop() {
+        let d = lint_source(REACTOR, "fn f(rx: &Receiver<u8>) { let _ = rx.recv(); }\n", None);
+        assert_eq!(ids(&d), ["reactor-blocking"]);
+        let d = lint_source(REACTOR, "fn f(d: Duration) { std::thread::sleep(d); }\n", None);
+        assert_eq!(ids(&d), ["reactor-blocking"]);
+        let d = lint_source(REACTOR, "fn f(j: JoinHandle<()>) { let _ = j.join(); }\n", None);
+        assert_eq!(ids(&d), ["reactor-blocking"]);
+    }
+
+    #[test]
+    fn reactor_blocking_spares_nonblocking_calls_and_other_files() {
+        let src = "fn f(rx: &Receiver<u8>, s: &mut TcpStream, b: &mut [u8]) {\n    \
+                   let _ = rx.try_recv();\n    let _ = s.read(b);\n    let _ = s.write(b);\n}\n";
+        assert!(lint_source(REACTOR, src, None).is_empty());
+        let tcp = "rust/src/coordinator/transport/tcp.rs";
+        let d = lint_source(tcp, "fn f(rx: &Receiver<u8>) { let _ = rx.recv(); }\n", None);
+        assert!(d.is_empty(), "the worker pool may block: {d:?}");
+    }
+
+    #[test]
+    fn reactor_blocking_respects_allow_escape() {
+        let src = "// rfnn-lint: allow(reactor-blocking) — bounded idle pacing\n\
+                   fn f(d: Duration) { std::thread::sleep(d); }\n";
+        assert!(lint_source(REACTOR, src, None).is_empty());
     }
 
     // ---- zero-dep ----

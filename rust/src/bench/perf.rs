@@ -7,7 +7,7 @@
 use super::harness::{bench, BenchStats};
 use crate::compiler::{plan_shards, Calibration, PerturbMode, PlanSpec, VirtualProcessor};
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::router::{JobSink, PendingReply, Router};
+use crate::coordinator::router::{Admin, AdminReply, JobSink, PendingReply, Router};
 use crate::coordinator::server::{Backend, ModelBundle};
 use crate::coordinator::service::{
     Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload, WIRE_VERSION,
@@ -55,6 +55,11 @@ pub const KERNEL_BATCHES: [usize; 3] = [1, 8, 64];
 /// Batch sizes for the tracing-overhead sweep.
 pub const TRACE_BATCHES: [usize; 2] = [1, 64];
 
+/// Client counts for the concurrent-clients reactor sweep. 256 sits
+/// above the soak job's 200-client floor, so the recorded trajectory
+/// covers the same regime the CI concurrency gate pins.
+pub const CONCURRENT_CLIENTS: [usize; 3] = [1, 32, 256];
+
 /// Shard count for the sharded-vs-single serving comparison: one
 /// single-replica loopback node per shard, so the recorded overhead is
 /// pure scatter/gather cost (framing + N sockets + row placement).
@@ -79,8 +84,11 @@ pub const CLUSTER_BATCHES: [usize; 2] = [1, 16];
 /// `BENCH_pr7.json`; override with `RFNN_BENCH7_OUT`), and the tracing
 /// overhead sweep — submit→wait under off/slow/all span-recording
 /// policies (written to `BENCH_pr8.json`; override with
-/// `RFNN_BENCH8_OUT`) — so the perf trajectory tracks each PR. `tile` is
-/// the physical tile size of the virtualization sweep.
+/// `RFNN_BENCH8_OUT`), and the concurrent-clients reactor front-end
+/// sweep — pushed vs deferred/poll replies at 1/32/256 loopback
+/// connections (written to `BENCH_pr10.json`; override with
+/// `RFNN_BENCH10_OUT`) — so the perf trajectory tracks each PR. `tile`
+/// is the physical tile size of the virtualization sweep.
 pub fn all(quick: bool, tile: usize) -> String {
     let samples = if quick { 5 } else { 15 };
     let mut out = String::from("§Perf — hot-path micro-benchmarks\n");
@@ -258,7 +266,175 @@ pub fn all(quick: bool, tile: usize) -> String {
         Ok(()) => out.push_str(&format!("wrote {path8}\n")),
         Err(e) => out.push_str(&format!("could not write {path8}: {e}\n")),
     }
+    out.push_str(
+        "§Perf — reactor front end under concurrent clients (pushed vs deferred/poll)\n",
+    );
+    let (conc_rows, reactor_threads, batch_cap) = run_concurrent_benches(samples);
+    for (c, pushed, deferred) in &conc_rows {
+        out.push_str(&pushed.line());
+        out.push('\n');
+        out.push_str(&deferred.line());
+        out.push('\n');
+        let ratio = deferred.median_ns() as f64 / pushed.median_ns().max(1) as f64;
+        out.push_str(&format!(
+            "  clients {c:>3}: deferred/poll costs {ratio:.2}× the pushed reply path\n"
+        ));
+    }
+    out.push_str(&format!(
+        "  serving threads: {reactor_threads:.0} (1 reactor + fixed worker pool, flat across \
+         the sweep); adaptive batch cap settled at {batch_cap:.0}\n"
+    ));
+    let json10 =
+        concurrent_report_json(&conc_rows, samples, quick, reactor_threads, batch_cap);
+    let path10 =
+        std::env::var("RFNN_BENCH10_OUT").unwrap_or_else(|_| "BENCH_pr10.json".to_string());
+    match std::fs::write(&path10, json10.to_string_pretty()) {
+        Ok(()) => out.push_str(&format!("wrote {path10}\n")),
+        Err(e) => out.push_str(&format!("could not write {path10}: {e}\n")),
+    }
     out
+}
+
+/// Time the reactor front end under concurrent client load: `c` loopback
+/// connections each carry one in-flight infer job (every submit is
+/// written before any reply is drained), first with pushed replies
+/// (`submit` → `RemoteTicket::wait`) and then through the deferred
+/// poll-mode multiplex (`submit_deferred` → `wait_ticket`, which
+/// round-trips `Job::Poll` frames), for each `c` in
+/// [`CONCURRENT_CLIENTS`]. Returns `(clients, pushed, deferred)` stats
+/// plus the serving process's post-sweep `reactor_threads` gauge and
+/// adaptive `batch_cap` — the two observability fields the PR-10 record
+/// pins so a run whose thread count scaled with its client count is
+/// visibly tainted in the artifact trail.
+pub fn run_concurrent_benches(
+    samples: usize,
+) -> (Vec<(usize, BenchStats, BenchStats)>, f64, f64) {
+    let net = MnistRfnn::analog(8, MeshBackend::Ideal, 3);
+    let bundle = ModelBundle::from_trained(&net).expect("analog net exports a bundle");
+    let pool = ProcessorPool::new();
+    pool.register(
+        "mnist8",
+        Workload::Mnist { bundle, backend: Backend::Native },
+        PoolConfig {
+            queue_depth: 4096,
+            batch: BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            ..PoolConfig::default()
+        },
+    )
+    .expect("register mnist8");
+    let svc = Arc::new(ProcessorService::new(pool));
+    let fe = TcpFrontEnd::bind(
+        "127.0.0.1:0",
+        Arc::new(Router::new(svc)),
+        TcpConfig { max_connections: 512, ..TcpConfig::default() },
+    )
+    .expect("bind ephemeral loopback port");
+    let addr = fe.local_addr().to_string();
+    let img: Vec<f32> = (0..784).map(|i| (i % 61) as f32 / 61.0).collect();
+    let mut out = Vec::new();
+    for &c in &CONCURRENT_CLIENTS {
+        let clients: Vec<RemoteClient> =
+            (0..c).map(|_| RemoteClient::connect(&addr).expect("connect to loopback")).collect();
+        let pushed = bench(&format!("reactor pushed   c{c}"), samples, || {
+            let tickets: Vec<_> = clients
+                .iter()
+                .map(|cl| {
+                    cl.submit(Job::Infer { processor: "mnist8".into(), image: img.clone() })
+                        .expect("reactor accepts the frame")
+                })
+                .collect();
+            for t in tickets {
+                match t.wait().expect("served") {
+                    JobResult::Infer { .. } => {}
+                    other => panic!("unexpected result {other:?}"),
+                }
+            }
+        });
+        let deferred = bench(&format!("reactor deferred c{c}"), samples, || {
+            let tickets: Vec<_> = clients
+                .iter()
+                .map(|cl| {
+                    cl.submit_deferred(Job::Infer {
+                        processor: "mnist8".into(),
+                        image: img.clone(),
+                    })
+                    .expect("reactor accepts the frame")
+                })
+                .collect();
+            for (cl, t) in clients.iter().zip(tickets) {
+                match cl.wait_ticket(t).expect("served") {
+                    JobResult::Infer { .. } => {}
+                    other => panic!("unexpected result {other:?}"),
+                }
+            }
+        });
+        out.push((c, pushed, deferred));
+    }
+    let admin = RemoteClient::connect(&addr).expect("connect to loopback");
+    let snapshot = match admin.admin(Admin::MetricsSnapshot).expect("metrics snapshot") {
+        AdminReply::Metrics(json) => json,
+        other => panic!("unexpected admin reply {other:?}"),
+    };
+    let reactor_threads = snapshot
+        .get("transport")
+        .and_then(|t| t.get("reactor_threads"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let batch_cap = snapshot.get("batch_cap").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    drop(admin);
+    fe.shutdown();
+    (out, reactor_threads, batch_cap)
+}
+
+/// The PR-10 perf-trajectory record for [`run_concurrent_benches`]: one
+/// entry per (reply mode, client count) cell — `mode`/`batch` are the
+/// perf gate's identity fields, `clients` the human-facing alias — plus
+/// the serving process's own view of its thread budget (flat as clients
+/// scale: the property the soak job asserts) and the load-adaptive batch
+/// cap the sweep left behind.
+pub fn concurrent_report_json(
+    rows: &[(usize, BenchStats, BenchStats)],
+    samples: usize,
+    quick: bool,
+    reactor_threads: f64,
+    batch_cap: f64,
+) -> Json {
+    let mut results = Vec::new();
+    for (c, pushed, deferred) in rows {
+        let pn = pushed.median_ns() as f64 / *c as f64;
+        let dn = deferred.median_ns() as f64 / *c as f64;
+        results.push(Json::obj(vec![
+            ("mode", Json::Str("pushed".into())),
+            ("clients", Json::Num(*c as f64)),
+            ("batch", Json::Num(*c as f64)),
+            ("ns_per_request", Json::Num(pn)),
+            ("requests_per_sec", Json::Num(1e9 / pn.max(1.0))),
+        ]));
+        results.push(Json::obj(vec![
+            ("mode", Json::Str("deferred".into())),
+            ("clients", Json::Num(*c as f64)),
+            ("batch", Json::Num(*c as f64)),
+            ("ns_per_request", Json::Num(dn)),
+            ("requests_per_sec", Json::Num(1e9 / dn.max(1.0))),
+            ("deferred_over_pushed", Json::Num(dn / pn.max(1.0))),
+        ]));
+    }
+    Json::obj(vec![
+        ("pr", Json::Num(10.0)),
+        ("bench", Json::Str("concurrent_clients_reactor_front_end".into())),
+        ("wire_version", Json::Num(WIRE_VERSION as f64)),
+        ("transport", Json::Str("tcp_loopback_framed".into())),
+        ("max_connections", Json::Num(512.0)),
+        ("reactor_threads", Json::Num(reactor_threads)),
+        ("batch_cap", Json::Num(batch_cap)),
+        ("n", Json::Num(8.0)),
+        ("samples", Json::Num(samples as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Time the end-to-end submit→wait serving path under each tracing
@@ -1086,6 +1262,39 @@ mod tests {
         assert!(report.contains("bit-identical to the single process: true"), "{report}");
         assert!(report.contains("tracing overhead"), "{report}");
         assert!(report.contains("trace all"), "{report}");
+        assert!(report.contains("reactor pushed"), "{report}");
+        assert!(report.contains("reactor deferred"), "{report}");
+    }
+
+    #[test]
+    fn concurrent_report_is_well_formed() {
+        // Minimal samples: correctness of the record, not the timings.
+        let (rows, reactor_threads, batch_cap) = super::run_concurrent_benches(2);
+        assert_eq!(rows.len(), super::CONCURRENT_CLIENTS.len());
+        // The reactor's thread budget must not scale with its client
+        // count: 1 reactor + the default 4-worker pool, even at c=256.
+        assert_eq!(reactor_threads, 5.0, "reactor + 4 default workers");
+        assert!(batch_cap >= 1.0, "batch_cap {batch_cap}");
+        let json =
+            super::concurrent_report_json(&rows, 2, true, reactor_threads, batch_cap);
+        let parsed = crate::util::json::parse(&json.to_string_pretty()).expect("valid JSON");
+        assert_eq!(parsed.get("pr").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(
+            parsed.get("wire_version").and_then(|v| v.as_f64()),
+            Some(super::WIRE_VERSION as f64)
+        );
+        assert_eq!(parsed.get("reactor_threads").and_then(|v| v.as_f64()), Some(5.0));
+        let results = parsed.get("results").and_then(|r| r.as_arr()).expect("results");
+        // One pushed + one deferred entry per client count.
+        assert_eq!(results.len(), 2 * super::CONCURRENT_CLIENTS.len());
+        for r in results {
+            let mode = r.get("mode").and_then(|v| v.as_str()).expect("mode");
+            assert!(mode == "pushed" || mode == "deferred", "mode {mode}");
+            let ns = r.get("ns_per_request").and_then(|v| v.as_f64()).expect("ns");
+            assert!(ns.is_finite() && ns > 0.0, "ns_per_request {ns}");
+            let rps = r.get("requests_per_sec").and_then(|v| v.as_f64()).expect("rps");
+            assert!(rps.is_finite() && rps > 0.0, "requests_per_sec {rps}");
+        }
     }
 
     #[test]

@@ -139,7 +139,7 @@ ephemeral port) serve instead starts the framed-TCP front end over the
 same pool and runs until `rfnn client admin shutdown`.
 
 client speaks the same versioned wire protocol over TCP: `client job`
-submits one job document (a v3 compile job can register a new virtual
+submits one job document (a compile job can register a new virtual
 processor on the running server), `client admin` drives the control
 plane (`admin cluster` prints the per-shard health map of an installed
 sharded coordinator). Default --connect is 127.0.0.1:7878.

@@ -46,6 +46,54 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
     Some(batch)
 }
 
+/// Load-adaptive batch sizing: a coalescing cap that chases queue depth.
+///
+/// The policy's `max_batch` is a *ceiling* (the largest exported batch);
+/// always coalescing up to it buys nothing at light load except the
+/// `max_wait` latency of hoping more work shows up. The adaptive cap
+/// starts small, **doubles** whenever a batch forms full (queue depth
+/// exceeded the cap — there is demand to amortize) and **halves** when a
+/// batch used under a quarter of it (traffic too thin to fill it), so
+/// the serving loop self-tunes between the latency and throughput
+/// regimes. Workers publish the live cap on the `batch_cap` metrics
+/// gauge and the `batch.cap` span note.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveBatch {
+    min: usize,
+    max: usize,
+    cur: usize,
+}
+
+impl AdaptiveBatch {
+    /// Start at `min`; `observe` keeps the cap within `[min, max]`.
+    pub fn new(min: usize, max: usize) -> AdaptiveBatch {
+        let min = min.max(1);
+        let max = max.max(min);
+        AdaptiveBatch { min, max, cur: min }
+    }
+
+    /// The adaptive range for a worker's policy: start near 8 (or the
+    /// policy cap when smaller), grow up to `policy.max_batch`.
+    pub fn for_policy(policy: &BatchPolicy) -> AdaptiveBatch {
+        AdaptiveBatch::new(policy.max_batch.min(8), policy.max_batch)
+    }
+
+    /// The current coalescing cap (use as the effective `max_batch`).
+    pub fn cap(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed back the size of the batch that actually formed under the
+    /// current cap: full → double, under a quarter used → halve.
+    pub fn observe(&mut self, formed: usize) {
+        if formed >= self.cur {
+            self.cur = self.cur.saturating_mul(2).min(self.max);
+        } else if formed.saturating_mul(4) <= self.cur {
+            self.cur = (self.cur / 2).max(self.min);
+        }
+    }
+}
+
 /// Non-blocking top-up: pull everything already queued, up to `max` items.
 /// Workers that keep their own internal queues (the classify worker's
 /// per-state scheduler) use this to fold freshly-arrived work into each
@@ -133,6 +181,43 @@ mod tests {
         assert_eq!(drain_ready(&rx, 8), vec![3, 4]);
         drop(tx);
         assert!(drain_ready(&rx, 8).is_empty());
+    }
+
+    #[test]
+    fn adaptive_cap_grows_on_full_batches_and_shrinks_when_idle() {
+        let mut a = AdaptiveBatch::new(4, 64);
+        assert_eq!(a.cap(), 4);
+        a.observe(4); // full → double
+        assert_eq!(a.cap(), 8);
+        a.observe(8);
+        a.observe(16);
+        a.observe(32);
+        assert_eq!(a.cap(), 64);
+        a.observe(64);
+        assert_eq!(a.cap(), 64, "clamped at max");
+        a.observe(1); // 1 ≤ 64/4 → halve
+        assert_eq!(a.cap(), 32);
+        for _ in 0..10 {
+            a.observe(1);
+        }
+        assert_eq!(a.cap(), 4, "floored at min");
+        a.observe(2); // neither full nor under a quarter: hold
+        assert_eq!(a.cap(), 4);
+    }
+
+    #[test]
+    fn adaptive_bounds_survive_degenerate_policies() {
+        let a = AdaptiveBatch::new(0, 0);
+        assert_eq!(a.cap(), 1);
+        let p = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let a = AdaptiveBatch::for_policy(&p);
+        assert_eq!(a.cap(), 2);
+        let mut a = AdaptiveBatch::for_policy(&BatchPolicy::default());
+        assert_eq!(a.cap(), 8);
+        for _ in 0..10 {
+            a.observe(a.cap());
+        }
+        assert_eq!(a.cap(), BatchPolicy::default().max_batch);
     }
 
     #[test]

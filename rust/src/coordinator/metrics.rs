@@ -32,17 +32,22 @@ pub enum JobKind {
     /// [`crate::compiler::ShardSpec`]) and register it — the cluster
     /// deploy path (control-plane; WIRE_VERSION ≥ 3, cluster-only).
     ShardCompile,
+    /// Poll a deferred job's ticket — the poll-mode multiplexing
+    /// surface, resolved at the router without touching a processor
+    /// queue (WIRE_VERSION ≥ 4).
+    Poll,
 }
 
 impl JobKind {
     /// Every kind, in wire order.
-    pub const ALL: [JobKind; 6] = [
+    pub const ALL: [JobKind; 7] = [
         JobKind::Infer,
         JobKind::Classify,
         JobKind::RawApply,
         JobKind::Reprogram,
         JobKind::Compile,
         JobKind::ShardCompile,
+        JobKind::Poll,
     ];
 
     /// Stable wire/snapshot name.
@@ -54,6 +59,7 @@ impl JobKind {
             JobKind::Reprogram => "reprogram",
             JobKind::Compile => "compile",
             JobKind::ShardCompile => "shard_compile",
+            JobKind::Poll => "poll",
         }
     }
 
@@ -160,8 +166,8 @@ impl LatencyHistogram {
     }
 }
 
-/// Counters for one network transport front end (the TCP listener today;
-/// any future framing shares the same five-counter shape). Folded into
+/// Counters for one network transport front end (the TCP reactor today;
+/// any future framing shares the same counter shape). Folded into
 /// [`Metrics::snapshot`] so the admin `MetricsSnapshot` reply is complete.
 #[derive(Default)]
 pub struct TransportCounters {
@@ -179,6 +185,11 @@ pub struct TransportCounters {
     /// Connections refused by the auth gate (token configured but the
     /// first frame was not a matching `Auth` envelope).
     pub auth_rejects: AtomicU64,
+    /// Gauge: total front-end threads (the reactor event thread plus its
+    /// fixed worker pool), set once at bind. The bounded-concurrency
+    /// contract — thousands of connections never spawn thousands of
+    /// threads — is asserted against this in the soak tests.
+    pub reactor_threads: AtomicU64,
 }
 
 impl TransportCounters {
@@ -196,6 +207,7 @@ impl TransportCounters {
             ("frames_out", Json::Num(self.frames_out.load(Ordering::Relaxed) as f64)),
             ("decode_rejects", Json::Num(self.decode_rejects.load(Ordering::Relaxed) as f64)),
             ("auth_rejects", Json::Num(self.auth_rejects.load(Ordering::Relaxed) as f64)),
+            ("reactor_threads", Json::Num(self.reactor_threads.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -388,8 +400,13 @@ pub struct Metrics {
     pub padded: AtomicU64,
     /// Device re-bias operations (2×2 scheduler and `Reprogram` jobs).
     pub reconfigs: AtomicU64,
+    /// Gauge: the load-adaptive batcher's current coalescing cap (the
+    /// effective `max_batch` the worker last offered `next_batch`).
+    /// Distinct from `padded` — the adaptive cap is a ceiling, not a
+    /// pad-to size, so it never inflates the padding counter.
+    pub batch_cap: AtomicU64,
     /// Per-job-kind admission counters, indexed by [`JobKind`] wire order.
-    pub jobs: [KindCounters; 6],
+    pub jobs: [KindCounters; 7],
     /// Network-transport counters (shared by every front end over this
     /// pool; zero when serving is purely in-process).
     pub transport: TransportCounters,
@@ -407,6 +424,11 @@ impl Metrics {
         self.padded.fetch_add((cap - n) as u64, Ordering::Relaxed);
         self.exec.record(exec_us);
         self.batch_size.record(n as u64);
+    }
+
+    /// Publish the adaptive batcher's newly chosen coalescing cap.
+    pub fn record_batch_cap(&self, cap: usize) {
+        self.batch_cap.store(cap as u64, Ordering::Relaxed);
     }
 
     /// Counters for one job kind.
@@ -527,6 +549,7 @@ impl Metrics {
             ("mean_batch", Json::Num(self.mean_batch_size())),
             ("padded", Json::Num(self.padded.load(Ordering::Relaxed) as f64)),
             ("reconfigs", Json::Num(self.reconfigs.load(Ordering::Relaxed) as f64)),
+            ("batch_cap", Json::Num(self.batch_cap.load(Ordering::Relaxed) as f64)),
             ("jobs", Json::Obj(jobs)),
             ("transport", self.transport.snapshot()),
             ("cluster", self.cluster_snapshot()),
@@ -653,7 +676,15 @@ mod tests {
         let names: Vec<&str> = JobKind::ALL.iter().map(|k| k.name()).collect();
         assert_eq!(
             names,
-            vec!["infer", "classify", "raw_apply", "reprogram", "compile", "shard_compile"]
+            vec![
+                "infer",
+                "classify",
+                "raw_apply",
+                "reprogram",
+                "compile",
+                "shard_compile",
+                "poll"
+            ]
         );
     }
 

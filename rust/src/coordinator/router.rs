@@ -94,8 +94,9 @@ impl std::error::Error for RouterError {}
 // ---------------------------------------------------------------------------
 
 /// Control-plane requests, servable over any transport that carries the
-/// job plane (same framing, same version gate — v3 only; the v2 protocol
-/// had no admin plane, so there is nothing to shim).
+/// job plane (same framing, same version gate — strictly the current
+/// [`WIRE_VERSION`]; the control plane carries no compat shims, so
+/// older admin documents are refused outright).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Admin {
     /// Registry metadata for every pooled processor.
@@ -153,7 +154,7 @@ impl Admin {
         }
     }
 
-    /// Wire form: `{"v":3,"admin":"<name>"}` (`trace_dump` carries its
+    /// Wire form: `{"v":4,"admin":"<name>"}` (`trace_dump` carries its
     /// count as `"n"`).
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
@@ -166,8 +167,9 @@ impl Admin {
         Json::obj(fields)
     }
 
-    /// Decode the wire form; the admin plane is strictly v3. A missing or
-    /// malformed `trace_dump.n` falls back to [`TRACE_DUMP_DEFAULT`].
+    /// Decode the wire form; the admin plane is strictly the current
+    /// version. A missing or malformed `trace_dump.n` falls back to
+    /// [`TRACE_DUMP_DEFAULT`].
     pub fn from_json(v: &Json) -> Result<Admin> {
         let ver = get_index(v, "v")?;
         if ver != WIRE_VERSION {
@@ -261,7 +263,7 @@ fn info_from_json(v: &Json) -> Result<ProcessorInfo> {
 }
 
 impl AdminReply {
-    /// Wire form: `{"v":3,"reply":"<kind>", ...}`.
+    /// Wire form: `{"v":4,"reply":"<kind>", ...}`.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![("v", Json::Num(WIRE_VERSION as f64))];
         match self {
@@ -298,7 +300,8 @@ impl AdminReply {
         Json::obj(fields)
     }
 
-    /// Decode the wire form (strictly v3, like [`Admin`]).
+    /// Decode the wire form (strictly the current version, like
+    /// [`Admin`]).
     pub fn from_json(v: &Json) -> Result<AdminReply> {
         let ver = get_index(v, "v")?;
         if ver != WIRE_VERSION {
@@ -424,15 +427,71 @@ impl Router {
 
     /// Typed submission carrying a tracing context: the service records
     /// queue-wait / execution spans against it while the job is in flight.
+    ///
+    /// [`Job::Poll`] is intercepted here — the router's ticket table IS
+    /// the state it queries — and resolved without touching a processor
+    /// queue: the answer (the polled job's result, or
+    /// [`JobResult::Pending`]) comes back as a pre-resolved ticket under
+    /// a fresh id, so every transport serves polls through the same
+    /// submit → wait surface as real jobs.
     pub fn submit_traced(
         &self,
         job: Job,
         trace: Option<TraceCtx>,
     ) -> Result<u64, RouterError> {
+        if let Job::Poll { ticket } = job {
+            let m = self.metrics().clone();
+            m.record_submitted(JobKind::Poll);
+            let result = match self.poll_ticket(ticket) {
+                Ok(r) => r,
+                Err(e) => {
+                    m.record_rejected(JobKind::Poll);
+                    return Err(e);
+                }
+            };
+            m.record_served(JobKind::Poll);
+            if let Some(ctx) = &trace {
+                ctx.note("poll.ticket", ticket);
+            }
+            let resolved = Ticket::resolved(self.svc.fresh_job_id(), result);
+            let id = resolved.id();
+            self.tickets
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .insert(id, resolved);
+            return Ok(id);
+        }
         let ticket = self.svc.submit_traced(job, trace).map_err(RouterError::Submit)?;
         let id = ticket.id();
         self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner).insert(id, ticket);
         Ok(id)
+    }
+
+    /// Resolve one poll: the polled job's result if it has answered,
+    /// [`JobResult::Pending`] while still in flight, `UnknownTicket` if
+    /// the id was never issued, already consumed, or reaped. A resolved
+    /// or dead ticket is consumed by the poll that observes it.
+    pub fn poll_ticket(&self, ticket: u64) -> Result<JobResult, RouterError> {
+        match self.poll(ticket)? {
+            Some(result) => Ok(result),
+            None => Ok(JobResult::Pending { ticket }),
+        }
+    }
+
+    /// Drop a pending ticket without waiting for (or delivering) its
+    /// reply — the reactor reaps a disconnected peer's in-flight jobs
+    /// with this, so abandoned tickets cannot accumulate for the life of
+    /// the process. The worker's eventual `respond` lands on a closed
+    /// channel and is discarded harmlessly.
+    pub fn forget(&self, ticket: u64) {
+        self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner).remove(&ticket);
+    }
+
+    /// How many tickets are pending (submitted, not yet consumed by
+    /// `wait`/`poll`/`forget`). Exposed as `tickets_pending` in the
+    /// metrics snapshot; the soak tests pin it back to zero.
+    pub fn tickets_pending(&self) -> usize {
+        self.tickets.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
     }
 
     /// Submit an already-parsed wire document (transports that parse the
@@ -452,11 +511,21 @@ impl Router {
         self.submit_traced(job, trace)
     }
 
+    /// The metrics snapshot with the router's view folded in: the
+    /// pending-ticket gauge (`tickets_pending`) the soak tests pin.
+    fn snapshot_with_tickets(&self) -> Json {
+        let mut snap = self.svc.metrics().snapshot();
+        if let Json::Obj(map) = &mut snap {
+            map.insert("tickets_pending".to_string(), Json::Num(self.tickets_pending() as f64));
+        }
+        snap
+    }
+
     /// Execute a typed control-plane request.
     pub fn admin(&self, admin: Admin) -> AdminReply {
         match admin {
             Admin::ListProcessors => AdminReply::Processors(self.svc.pool().processors()),
-            Admin::MetricsSnapshot => AdminReply::Metrics(self.svc.metrics().snapshot()),
+            Admin::MetricsSnapshot => AdminReply::Metrics(self.snapshot_with_tickets()),
             Admin::Health => AdminReply::Health {
                 status: "ok".to_string(),
                 processors: self.svc.pool().count() as u64,
@@ -471,9 +540,9 @@ impl Router {
                 let n = usize::try_from(n).unwrap_or(usize::MAX);
                 AdminReply::Traces(crate::obs::trace::tracer().dump(n))
             }
-            Admin::MetricsText => AdminReply::MetricsText(crate::obs::prometheus(
-                &self.svc.metrics().snapshot(),
-            )),
+            Admin::MetricsText => {
+                AdminReply::MetricsText(crate::obs::prometheus(&self.snapshot_with_tickets()))
+            }
             Admin::Shutdown => {
                 self.stop.store(true, Ordering::SeqCst);
                 AdminReply::ShuttingDown
@@ -637,6 +706,65 @@ mod tests {
     }
 
     #[test]
+    fn poll_jobs_resolve_at_the_router_not_a_processor() {
+        let router = demo_router();
+        let id = router
+            .submit(Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) })
+            .expect("admitted");
+        // A Poll job is itself a submittable job: it answers with the
+        // polled ticket's state through the normal submit → wait surface.
+        let mut answer = None;
+        for _ in 0..200 {
+            let pid = router.submit(Job::Poll { ticket: id }).expect("poll admitted");
+            match router.wait(pid).expect("poll answered") {
+                JobResult::Pending { ticket } => {
+                    assert_eq!(ticket, id);
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                other => {
+                    answer = Some(other);
+                    break;
+                }
+            }
+        }
+        match answer.expect("resolved within 400ms") {
+            JobResult::RawApply { y } => assert_eq!((y.rows(), y.cols()), (4, 4)),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The resolving poll consumed the ticket; the next poll of the
+        // same id is an unknown_ticket error, counted as rejected.
+        let err =
+            router.submit(Job::Poll { ticket: id }).expect_err("consumed ticket is unknown");
+        assert_eq!(err.code(), "unknown_ticket");
+        let m = router.metrics();
+        assert!(m.job(JobKind::Poll).submitted.load(Ordering::Relaxed) >= 2);
+        assert_eq!(m.job(JobKind::Poll).rejected.load(Ordering::Relaxed), 1);
+        // Poll never consumes processor-queue capacity: raw_apply counts
+        // are untouched by all that polling.
+        assert_eq!(m.job(JobKind::RawApply).submitted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn forget_reaps_pending_tickets_and_the_snapshot_sees_them() {
+        let router = demo_router();
+        let id = router
+            .submit(Job::RawApply { processor: "mesh4".into(), x: CMat::eye(4) })
+            .expect("admitted");
+        assert_eq!(router.tickets_pending(), 1);
+        match router.admin(Admin::MetricsSnapshot) {
+            AdminReply::Metrics(snap) => {
+                assert_eq!(snap.get("tickets_pending").and_then(Json::as_f64), Some(1.0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Reaping drops the ticket; the worker's eventual reply lands on
+        // a closed channel and is discarded, never leaking a waiter.
+        router.forget(id);
+        assert_eq!(router.tickets_pending(), 0);
+        assert_eq!(router.wait(id), Err(RouterError::UnknownTicket(id)));
+    }
+
+    #[test]
     fn decode_failures_are_counted_and_coded() {
         let router = demo_router();
         let before =
@@ -680,11 +808,11 @@ mod tests {
         // A bare trace_dump (no `n`) gets the default count; a malformed
         // `n` is ignored, not rejected.
         assert_eq!(
-            Admin::decode(r#"{"v":3,"admin":"trace_dump"}"#).unwrap(),
+            Admin::decode(r#"{"v":4,"admin":"trace_dump"}"#).unwrap(),
             Admin::TraceDump { n: TRACE_DUMP_DEFAULT }
         );
         assert_eq!(
-            Admin::decode(r#"{"v":3,"admin":"trace_dump","n":"lots"}"#).unwrap(),
+            Admin::decode(r#"{"v":4,"admin":"trace_dump","n":"lots"}"#).unwrap(),
             Admin::TraceDump { n: TRACE_DUMP_DEFAULT }
         );
         match router.admin_wire(Admin::ListProcessors.encode().as_bytes()).unwrap() {
@@ -748,11 +876,12 @@ mod tests {
     }
 
     #[test]
-    fn admin_plane_is_strictly_v3() {
+    fn admin_plane_is_strictly_current_version() {
         assert!(Admin::decode(r#"{"v":2,"admin":"health"}"#).is_err());
-        assert!(Admin::decode(r#"{"v":3,"admin":"warp"}"#).is_err());
+        assert!(Admin::decode(r#"{"v":3,"admin":"health"}"#).is_err(), "no admin compat shim");
+        assert!(Admin::decode(r#"{"v":4,"admin":"warp"}"#).is_err());
         assert!(Admin::decode(r#"{"admin":"health"}"#).is_err());
-        assert!(AdminReply::decode(r#"{"v":2,"reply":"shutting_down"}"#).is_err());
+        assert!(AdminReply::decode(r#"{"v":3,"reply":"shutting_down"}"#).is_err());
     }
 
     #[test]

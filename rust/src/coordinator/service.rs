@@ -31,9 +31,9 @@
 //!   overloaded processor sheds with [`SubmitError::Overloaded`] instead
 //!   of blocking the caller or silently growing an unbounded queue.
 //! * **Versioned wire form.** [`Job`] and [`JobResult`] round-trip through
-//!   [`crate::util::json`] under [`WIRE_VERSION`] (v3); v2 documents
-//!   decode through the explicit [`compat`] shim and anything else is
-//!   refused, so the CLI, benches, and the network transports
+//!   [`crate::util::json`] under [`WIRE_VERSION`] (v4); v2 and v3
+//!   documents decode through the explicit [`compat`] shims and anything
+//!   else is refused, so the CLI, benches, and the network transports
 //!   ([`crate::coordinator::transport`]) speak one schema (see
 //!   `testing::wire_props`). The transport-agnostic dispatch layer over
 //!   this module lives in [`crate::coordinator::router`].
@@ -44,7 +44,7 @@
 //! worker groups per device state through [`StateScheduler`] to minimize
 //! re-biases.
 
-use super::batcher::{drain_ready, next_batch, BatchPolicy};
+use super::batcher::{drain_ready, next_batch, AdaptiveBatch, BatchPolicy};
 use super::metrics::{JobKind, Metrics};
 use super::scheduler::{SchedulerPolicy, StateScheduler};
 use super::server::{Backend, MnistExecutor, ModelBundle};
@@ -67,9 +67,9 @@ use std::time::{Duration, Instant};
 /// Version tag of the serialized `Job`/`JobResult` schema. Bump on any
 /// incompatible change; decoders reject documents whose `v` is neither
 /// the current version nor a version an explicit compat shim handles
-/// (today: v2, through [`compat`]). Encoders always write the current
-/// version.
-pub const WIRE_VERSION: u64 = 3;
+/// (today: v2 and v3, through [`compat`]). Encoders always write the
+/// current version.
+pub const WIRE_VERSION: u64 = 4;
 
 // ---------------------------------------------------------------------------
 // Jobs and results
@@ -106,6 +106,16 @@ pub enum Job {
     /// [`JobResult::ShardCompiled`]. New in wire version 3
     /// (cluster-only: refused in v2 documents).
     ShardCompile { name: String, spec: ShardSpec },
+    /// Poll a previously deferred job by its server-assigned ticket id —
+    /// the poll-mode multiplexing surface: a thin client submits jobs
+    /// with the envelope `defer` flag, collects
+    /// [`JobResult::Submitted`] acknowledgements immediately, and later
+    /// polls each ticket, so one cheap connection carries thousands of
+    /// in-flight jobs with out-of-order completion. Answered with the
+    /// job's actual result once resolved, [`JobResult::Pending`] while
+    /// still in flight, or an `unknown_ticket` error. Resolved at the
+    /// router (never enqueued on a processor). New in wire version 4.
+    Poll { ticket: u64 },
 }
 
 impl Job {
@@ -118,11 +128,14 @@ impl Job {
             Job::Reprogram { .. } => JobKind::Reprogram,
             Job::Compile { .. } => JobKind::Compile,
             Job::ShardCompile { .. } => JobKind::ShardCompile,
+            Job::Poll { .. } => JobKind::Poll,
         }
     }
 
     /// The pooled processor this job is addressed to (for `Compile` and
-    /// `ShardCompile`: the name the new processor will register under).
+    /// `ShardCompile`: the name the new processor will register under;
+    /// for `Poll`, which targets a ticket rather than a processor, the
+    /// empty string).
     pub fn processor(&self) -> &str {
         match self {
             Job::Infer { processor, .. }
@@ -130,6 +143,7 @@ impl Job {
             | Job::RawApply { processor, .. }
             | Job::Reprogram { processor, .. } => processor,
             Job::Compile { name, .. } | Job::ShardCompile { name, .. } => name,
+            Job::Poll { .. } => "",
         }
     }
 
@@ -192,15 +206,20 @@ impl Job {
                 fields.push(("re", Json::nums(&re)));
                 fields.push(("im", Json::nums(&im)));
             }
+            Job::Poll { ticket } => {
+                fields.push(("ticket", Json::Num(*ticket as f64)));
+            }
         }
         Json::obj(fields)
     }
 
     /// Decode the wire form; rejects missing fields and unknown versions.
-    /// Version-2 documents route through the explicit [`compat`] shim.
+    /// Version-2 and version-3 documents route through the explicit
+    /// [`compat`] shims.
     pub fn from_json(v: &Json) -> Result<Job> {
         match wire_version(v)? {
             WIRE_VERSION => Job::from_current(v),
+            compat::WIRE_VERSION_V3 => compat::job_from_v3(v),
             compat::WIRE_VERSION_V2 => compat::job_from_v2(v),
             ver => Err(unsupported_version(ver)),
         }
@@ -209,6 +228,9 @@ impl Job {
     /// Decode a current-version document (the `v` tag already checked).
     fn from_current(v: &Json) -> Result<Job> {
         let kind = get_str(v, "kind")?;
+        if kind == "poll" {
+            return Ok(Job::Poll { ticket: get_index(v, "ticket")? });
+        }
         if kind == "compile" {
             let name = get_str(v, "name")?.to_string();
             let rows = get_usize(v, "rows")?;
@@ -337,6 +359,13 @@ pub enum JobResult {
     /// The worker answered but refused the job (bad shape, out-of-range
     /// state code, kind not servable by this workload, …).
     Rejected { reason: String },
+    /// A deferred submission was admitted: `ticket` is the
+    /// server-assigned id to pass back in [`Job::Poll`]. New in wire
+    /// version 4.
+    Submitted { ticket: u64 },
+    /// A polled ticket exists but its job is still in flight — poll
+    /// again. New in wire version 4.
+    Pending { ticket: u64 },
 }
 
 impl JobResult {
@@ -424,15 +453,25 @@ impl JobResult {
                 fields.push(("kind", Json::Str("rejected".into())));
                 fields.push(("reason", Json::Str(reason.clone())));
             }
+            JobResult::Submitted { ticket } => {
+                fields.push(("kind", Json::Str("submitted".into())));
+                fields.push(("ticket", Json::Num(*ticket as f64)));
+            }
+            JobResult::Pending { ticket } => {
+                fields.push(("kind", Json::Str("pending".into())));
+                fields.push(("ticket", Json::Num(*ticket as f64)));
+            }
         }
         Json::obj(fields)
     }
 
     /// Decode the wire form; rejects missing fields and unknown versions.
-    /// Version-2 documents route through the explicit [`compat`] shim.
+    /// Version-2 and version-3 documents route through the explicit
+    /// [`compat`] shims.
     pub fn from_json(v: &Json) -> Result<JobResult> {
         match wire_version(v)? {
             WIRE_VERSION => JobResult::from_current(v),
+            compat::WIRE_VERSION_V3 => compat::result_from_v3(v),
             compat::WIRE_VERSION_V2 => compat::result_from_v2(v),
             ver => Err(unsupported_version(ver)),
         }
@@ -441,6 +480,12 @@ impl JobResult {
     /// Decode a current-version document (the `v` tag already checked).
     fn from_current(v: &Json) -> Result<JobResult> {
         let kind = get_str(v, "kind")?;
+        if kind == "submitted" {
+            return Ok(JobResult::Submitted { ticket: get_index(v, "ticket")? });
+        }
+        if kind == "pending" {
+            return Ok(JobResult::Pending { ticket: get_index(v, "ticket")? });
+        }
         if kind == "compiled" {
             let fid = get_str(v, "fidelity")?;
             return Ok(JobResult::Compiled {
@@ -498,13 +543,15 @@ fn wire_version(v: &Json) -> Result<u64> {
 fn unsupported_version(ver: u64) -> Error {
     Error::msg(format!(
         "wire: unsupported version {ver} (this build speaks {WIRE_VERSION}, \
-         with a v{} compat shim)",
-        compat::WIRE_VERSION_V2
+         with v{} and v{} compat shims)",
+        compat::WIRE_VERSION_V2,
+        compat::WIRE_VERSION_V3
     ))
 }
 
 /// Decode the four v2-era job kinds — the schema shared verbatim by wire
-/// versions 2 and 3 (the `v` tag must already be checked by the caller).
+/// versions 2, 3 and 4 (the `v` tag must already be checked by the
+/// caller).
 fn decode_legacy_job(kind: &str, v: &Json) -> Result<Job> {
     let processor = get_str(v, "processor")?.to_string();
     match kind {
@@ -537,7 +584,7 @@ fn decode_legacy_job(kind: &str, v: &Json) -> Result<Job> {
     }
 }
 
-/// Decode the five v2-era result kinds — shared by wire versions 2 and 3.
+/// Decode the five v2-era result kinds — shared by wire versions 2–4.
 fn decode_legacy_result(kind: &str, v: &Json) -> Result<JobResult> {
     match kind {
         "infer" => Ok(JobResult::Infer {
@@ -560,25 +607,33 @@ fn decode_legacy_result(kind: &str, v: &Json) -> Result<JobResult> {
     }
 }
 
-/// The explicit v2 → v3 compatibility shim.
+/// The explicit v2 → v3 → v4 compatibility shims.
 ///
 /// Upgrade rules (pinned by `testing::wire_props`):
 ///
 /// * The four v2 job kinds (`infer` / `classify` / `raw_apply` /
 ///   `reprogram`) and five v2 result kinds decode **identically** under
-///   v2 and v3 — the field schema did not change, only the version tag.
-/// * v3-only kinds (`compile` / `compiled` / `shard_compile` /
-///   `shard_compiled`) are **refused** in a v2 document: a v2 peer never
-///   produced them, so their appearance means a version-spoofed or
-///   corrupt document.
-/// * Encoders never emit v2; replies to a v2 client are v3 documents
-///   (clients gate on `v` themselves, exactly as this decoder does).
-/// * Any other version (1, 4, …) is refused outright.
+///   v2, v3 and v4 — the field schema did not change, only the version
+///   tag.
+/// * The v3 additions (`compile` / `compiled` / `shard_compile` /
+///   `shard_compiled`) decode identically under v3 and v4, and are
+///   **refused** in a v2 document: a v2 peer never produced them, so
+///   their appearance means a version-spoofed or corrupt document.
+/// * The v4 additions (`poll` jobs; `submitted` / `pending` results —
+///   the poll-mode multiplexing surface) are refused in v2 **and** v3
+///   documents, by the same rule.
+/// * Encoders never emit older versions; replies to a v2/v3 client are
+///   v4 documents (clients gate on `v` themselves, exactly as this
+///   decoder does).
+/// * Any other version (1, 5, …) is refused outright.
 pub mod compat {
     use super::*;
 
-    /// The previous schema version this build still decodes.
+    /// The oldest schema version this build still decodes.
     pub const WIRE_VERSION_V2: u64 = 2;
+
+    /// The previous schema version this build still decodes.
+    pub const WIRE_VERSION_V3: u64 = 3;
 
     /// Decode a v2 job document (the `v` tag must equal 2; callers route
     /// here from [`Job::from_json`]).
@@ -588,6 +643,11 @@ pub mod compat {
             return Err(Error::msg(format!(
                 "wire: '{kind}' jobs require wire version 3 (document claims v2)",
             )));
+        }
+        if kind == "poll" {
+            return Err(Error::msg(
+                "wire: 'poll' jobs require wire version 4 (document claims v2)",
+            ));
         }
         decode_legacy_job(kind, v)
     }
@@ -600,7 +660,35 @@ pub mod compat {
                 "wire: '{kind}' results require wire version 3 (document claims v2)",
             )));
         }
+        if kind == "submitted" || kind == "pending" {
+            return Err(Error::msg(format!(
+                "wire: '{kind}' results require wire version 4 (document claims v2)",
+            )));
+        }
         decode_legacy_result(kind, v)
+    }
+
+    /// Decode a v3 job document: every v3 kind shares the v4 field
+    /// schema, so only the v4-only `poll` kind is refused.
+    pub fn job_from_v3(v: &Json) -> Result<Job> {
+        let kind = get_str(v, "kind")?;
+        if kind == "poll" {
+            return Err(Error::msg(
+                "wire: 'poll' jobs require wire version 4 (document claims v3)",
+            ));
+        }
+        Job::from_current(v)
+    }
+
+    /// Decode a v3 result document (refusing the v4-only kinds).
+    pub fn result_from_v3(v: &Json) -> Result<JobResult> {
+        let kind = get_str(v, "kind")?;
+        if kind == "submitted" || kind == "pending" {
+            return Err(Error::msg(format!(
+                "wire: '{kind}' results require wire version 4 (document claims v3)",
+            )));
+        }
+        JobResult::from_current(v)
     }
 }
 
@@ -749,6 +837,16 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// A ticket born already answered: `wait`/`poll_result` return
+    /// `result` immediately. This is how router-resolved jobs (e.g.
+    /// [`Job::Poll`], which never reaches a processor queue) flow
+    /// through the one ticket-shaped submit surface.
+    pub fn resolved(id: u64, result: JobResult) -> Ticket {
+        let (tx, rx) = channel();
+        let _ = tx.send(result);
+        Ticket { id, processor: String::new(), rx }
+    }
+
     /// Service-assigned job id.
     pub fn id(&self) -> u64 {
         self.id
@@ -1147,6 +1245,14 @@ impl ProcessorService {
         self.pool.metrics()
     }
 
+    /// Allocate a job id from the service's shared id space. Callers
+    /// that answer jobs outside a processor queue (the router's
+    /// [`Job::Poll`] interception mints [`Ticket::resolved`] tickets)
+    /// draw from here so their ids never collide with queue-issued ones.
+    pub fn fresh_job_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Submit a job. Never blocks: a full admission queue returns
     /// [`SubmitError::Overloaded`] immediately. `Compile` and
     /// `ShardCompile` jobs are control-plane: they bypass the worker
@@ -1469,7 +1575,15 @@ fn virtual_worker(
             return;
         }
     };
-    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+    let mut adaptive = AdaptiveBatch::for_policy(&cfg.batch);
+    loop {
+        // Load-adaptive coalescing: the cap chases queue depth between
+        // runs (observable via the `batch_cap` gauge and `batch.cap`
+        // span note), bounded by the configured policy ceiling.
+        let policy = BatchPolicy { max_batch: adaptive.cap(), ..cfg.batch };
+        let Some(handles) = next_batch(&rx, &policy) else { break };
+        adaptive.observe(handles.len());
+        metrics.record_batch_cap(adaptive.cap());
         let formed = Instant::now();
         let (mut infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
             handles.into_iter().partition(|h| matches!(h.job, Job::Infer { .. }));
@@ -1504,7 +1618,7 @@ fn virtual_worker(
             let exec_us = t1.duration_since(t0).as_micros() as u64;
             metrics.record_batch(n, n, exec_us);
             for (r, h) in infers.into_iter().enumerate() {
-                record_batch_spans(&h, formed, t0, t1, n);
+                record_batch_spans(&h, formed, t0, t1, n, policy.max_batch);
                 let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1536,7 +1650,14 @@ fn mnist_worker(
     // The runtime is created inside the worker thread (PJRT client handles
     // are not Send); setup failure falls back to the native GEMM backend.
     let mut exec = MnistExecutor::new(bundle, backend);
-    while let Some(handles) = next_batch(&rx, &cfg.batch) {
+    let mut adaptive = AdaptiveBatch::for_policy(&cfg.batch);
+    loop {
+        // Same load-adaptive cap as the tiled worker; `padded_cap` still
+        // rounds the formed batch up to an exported size afterwards.
+        let policy = BatchPolicy { max_batch: adaptive.cap(), ..cfg.batch };
+        let Some(handles) = next_batch(&rx, &policy) else { break };
+        adaptive.observe(handles.len());
+        metrics.record_batch_cap(adaptive.cap());
         let formed = Instant::now();
         let (infers, others): (Vec<JobHandle>, Vec<JobHandle>) =
             handles.into_iter().partition(|h| matches!(h.job, Job::Infer { .. }));
@@ -1565,7 +1686,7 @@ fn mnist_worker(
                     });
                     continue;
                 }
-                record_batch_spans(&h, formed, t0, t1, served);
+                record_batch_spans(&h, formed, t0, t1, served, policy.max_batch);
                 let queued_us = formed.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1619,7 +1740,7 @@ fn classify_worker(
                 metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
             }
             for (k, h) in batch.into_iter().enumerate() {
-                record_batch_spans(&h, t0, t0, t1, pts.len());
+                record_batch_spans(&h, t0, t0, t1, pts.len(), cfg.batch.max_batch);
                 let queued_us = t0.duration_since(h.enqueued).as_micros() as u64;
                 metrics.queue.record(queued_us);
                 metrics.latency.record(queued_us + exec_us);
@@ -1669,9 +1790,17 @@ fn processor_worker(
 }
 
 /// Record the standard span triplet for one traced batched job: queue
-/// wait (admission → batch formation), coalesce (formation → launch),
-/// and the shared execution window, all parented to the request root.
-fn record_batch_spans(h: &JobHandle, formed: Instant, t0: Instant, end: Instant, batch: usize) {
+/// wait (admission → batch formation), coalesce (formation → launch,
+/// noting the batch size and the coalescing cap in effect), and the
+/// shared execution window, all parented to the request root.
+fn record_batch_spans(
+    h: &JobHandle,
+    formed: Instant,
+    t0: Instant,
+    end: Instant,
+    batch: usize,
+    cap: usize,
+) {
     if let Some(ctx) = &h.trace {
         let root = ctx.root();
         ctx.span_at("queue.wait", root, h.enqueued, formed, vec![]);
@@ -1680,7 +1809,10 @@ fn record_batch_spans(h: &JobHandle, formed: Instant, t0: Instant, end: Instant,
             root,
             formed,
             t0,
-            vec![("batch".to_string(), batch.to_string())],
+            vec![
+                ("batch".to_string(), batch.to_string()),
+                ("batch.cap".to_string(), cap.to_string()),
+            ],
         );
         ctx.span_at(
             "exec",

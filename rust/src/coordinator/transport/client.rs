@@ -12,6 +12,14 @@
 //! replies may arrive out of order. A transport failure fails *every*
 //! pending request with the same reason and marks the client dead —
 //! nothing ever hangs on a vanished server.
+//!
+//! The client also speaks the poll-mode multiplexing surface
+//! (WIRE_VERSION ≥ 4): [`RemoteClient::submit_deferred`] asks the server
+//! to answer immediately with the in-flight ticket
+//! (`JobResult::Submitted`), and [`RemoteClient::poll_ticket`] /
+//! [`RemoteClient::wait_ticket`] resolve it later — from any connection
+//! to the same host — so one cheap link carries thousands of in-flight
+//! jobs with out-of-order completion and no per-job client thread.
 
 use crate::obs::trace::WireTrace;
 use crate::util::error::{Error, Result};
@@ -151,12 +159,58 @@ impl RemoteClient {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         lock(&self.inner.pending_jobs).insert(id, tx);
-        if let Err(e) = self.write(&Request::Job { id, job, trace }) {
+        if let Err(e) = self.write(&Request::Job { id, job, trace, defer: false }) {
             lock(&self.inner.pending_jobs).remove(&id);
             return Err(e);
         }
         self.inner.sweep_if_dead(id);
         Ok(RemoteTicket { id, rx })
+    }
+
+    /// Deferred (multiplexed) submission: the server acknowledges
+    /// immediately with the job's server-side ticket instead of holding
+    /// the request open until completion. The ticket is *client-owned* —
+    /// it survives this connection and resolves later through
+    /// [`Self::poll_ticket`] or [`Self::wait_ticket`].
+    pub fn submit_deferred(&self, job: Job) -> Result<u64> {
+        self.check_alive()?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        lock(&self.inner.pending_jobs).insert(id, tx);
+        if let Err(e) = self.write(&Request::Job { id, job, trace: None, defer: true }) {
+            lock(&self.inner.pending_jobs).remove(&id);
+            return Err(e);
+        }
+        self.inner.sweep_if_dead(id);
+        let (result, _) = rx
+            .recv()
+            .map_err(|_| Error::msg("remote: connection closed before submit ack"))?;
+        match result? {
+            JobResult::Submitted { ticket } => Ok(ticket),
+            other => Err(Error::msg(format!("remote: expected a submit ack, got {other:?}"))),
+        }
+    }
+
+    /// One poll of a deferred ticket (a `Job::Poll` round trip):
+    /// `Ok(Some(result))` *consumes* the ticket, `Ok(None)` while still
+    /// in flight, `Err` once unknown (never issued, already consumed, or
+    /// reaped) or if the job's worker died.
+    pub fn poll_ticket(&self, ticket: u64) -> Result<Option<JobResult>> {
+        match self.submit_wait(Job::Poll { ticket })? {
+            JobResult::Pending { .. } => Ok(None),
+            other => Ok(Some(other)),
+        }
+    }
+
+    /// Block until a deferred ticket resolves, polling with a small
+    /// pause between rounds.
+    pub fn wait_ticket(&self, ticket: u64) -> Result<JobResult> {
+        loop {
+            if let Some(result) = self.poll_ticket(ticket)? {
+                return Ok(result);
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
     }
 
     /// Synchronous convenience: submit + wait.

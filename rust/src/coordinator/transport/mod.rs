@@ -5,21 +5,29 @@
 //! Layering:
 //!
 //! ```text
-//!   [frame]  u32-BE length prefix + UTF-8 JSON payload   (framing)
-//!   [mod]    Request / Response envelopes                 (correlation)
-//!   [tcp]    TcpFrontEnd: accept loop, per-connection
-//!            reader/writer threads, connection limits     (server)
-//!   [client] RemoteClient / RemoteTicket: JobSink over
-//!            a socket, reply demux by request id          (client)
+//!   [frame]   u32-BE length prefix + UTF-8 JSON payload   (framing)
+//!   [mod]     Request / Response envelopes                (correlation)
+//!   [reactor] readiness event loop: one thread owns every
+//!             non-blocking socket, frames, auth, ticket
+//!             polling, write flushing                     (event loop)
+//!   [tcp]     TcpFrontEnd: reactor + fixed worker pool,
+//!             decode/submit/encode, connection limits     (server)
+//!   [client]  RemoteClient / RemoteTicket: JobSink over
+//!             a socket, reply demux by request id         (client)
 //! ```
 //!
 //! Every payload is one envelope. Requests carry a client-chosen `id`
 //! (echoed verbatim in the response, so replies may arrive out of order)
-//! and a nested *complete* wire document — `{"v":3,"id":7,"job":{…}}` or
-//! `{"v":3,"id":8,"admin":{…}}` — whose own `v` tag is validated by the
+//! and a nested *complete* wire document — `{"v":4,"id":7,"job":{…}}` or
+//! `{"v":4,"id":8,"admin":{…}}` — whose own `v` tag is validated by the
 //! shared router decode path, exactly as for `rfnn job`. Responses are
-//! `{"v":3,"id":7,"result":{…}}`, `{"v":3,"id":8,"admin_reply":{…}}`, or
-//! `{"v":3,"id":7,"error":{"code":"overloaded","message":"…"}}`.
+//! `{"v":4,"id":7,"result":{…}}`, `{"v":4,"id":8,"admin_reply":{…}}`, or
+//! `{"v":4,"id":7,"error":{"code":"overloaded","message":"…"}}`. A job
+//! envelope may carry `"defer":true` — the poll-mode multiplexing
+//! surface: the server answers immediately with
+//! `JobResult::Submitted{ticket}` and the client retrieves the real
+//! result later with a `Job::Poll` job, so one connection multiplexes
+//! thousands of in-flight jobs.
 //! Connection-level refusals — connection limit, unreadable framing, or
 //! an undecodable *envelope* (non-UTF-8, malformed JSON, wrong envelope
 //! version, unusable id) — use `id: 0`, which no client request ever
@@ -31,6 +39,7 @@
 
 pub mod client;
 pub mod frame;
+mod reactor;
 pub mod tcp;
 
 pub use client::{RemoteClient, RemoteTicket};
@@ -50,7 +59,7 @@ pub const CONNECTION_ID: u64 = 0;
 
 /// Environment variable holding the optional shared-secret transport
 /// token. When a server is configured with a token, the FIRST frame on
-/// every connection must be the auth envelope `{"v":3,"auth":"<token>"}`
+/// every connection must be the auth envelope `{"v":4,"auth":"<token>"}`
 /// (no `id` — it is connection-scope, not a request); a missing or wrong
 /// token is answered with one id-0 `unauthorized` error frame, counted in
 /// `TransportCounters::auth_rejects`, and the connection is closed.
@@ -68,8 +77,8 @@ pub fn auth_frame(token: &str) -> String {
     .to_string_compact()
 }
 
-/// The token carried by an auth envelope, if `doc` is one (a v3 envelope
-/// with a string `auth` field and no `id`).
+/// The token carried by an auth envelope, if `doc` is one (a
+/// current-version envelope with a string `auth` field and no `id`).
 pub fn auth_token_of(doc: &Json) -> Option<&str> {
     if check_envelope_version(doc).is_err() || doc.get("id").is_some() {
         return None;
@@ -89,8 +98,14 @@ pub enum Request {
     /// span): servers that honor it return their spans in the response
     /// envelope's `trace` field; decoders that don't know it — or find
     /// it malformed — ignore it rather than reject the request (the
-    /// pinned forward-compat rule; `testing/wire_props.rs`).
-    Job { id: u64, job: Job, trace: Option<WireTrace> },
+    /// pinned forward-compat rule; `testing/wire_props.rs`). `defer`
+    /// asks the server to answer immediately with
+    /// [`JobResult::Submitted`] (the server-side ticket id) instead of
+    /// holding the reply until the job resolves; the caller then
+    /// retrieves the result with [`Job::Poll`]. Encoded as
+    /// `"defer":true` only when set, so pre-v4 captures decode
+    /// unchanged.
+    Job { id: u64, job: Job, trace: Option<WireTrace>, defer: bool },
     /// Execute the nested admin call; answered by `Response::AdminReply`.
     Admin { id: u64, admin: Admin },
 }
@@ -106,12 +121,15 @@ impl Request {
     /// Wire form (the nested document carries its own `v` tag).
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Job { id, job, trace } => {
+            Request::Job { id, job, trace, defer } => {
                 let mut pairs = vec![
                     ("v", Json::Num(WIRE_VERSION as f64)),
                     ("id", Json::Num(*id as f64)),
                     ("job", job.to_json()),
                 ];
+                if *defer {
+                    pairs.push(("defer", Json::Bool(true)));
+                }
                 if let Some(t) = trace {
                     pairs.push(("trace", t.to_json()));
                 }
@@ -125,9 +143,9 @@ impl Request {
         }
     }
 
-    /// Decode an envelope. The *envelope* is strictly v3; the nested
+    /// Decode an envelope. The *envelope* is strictly v4; the nested
     /// document is decoded by the shared `Job`/`Admin` paths (which also
-    /// accept v2 jobs through the compat shim).
+    /// accept v2 and v3 jobs through the compat shims).
     pub fn from_json(v: &Json) -> Result<Request> {
         check_envelope_version(v)?;
         let id = get_index(v, "id")?;
@@ -137,8 +155,11 @@ impl Request {
         if let Some(job) = v.get("job") {
             // Tolerant by design: a missing, unknown-shaped, or
             // malformed `trace` field decodes as None, never an error.
+            // `defer` is strict-true: anything but `true` means a plain
+            // synchronous submit.
             let trace = v.get("trace").and_then(WireTrace::from_json);
-            return Ok(Request::Job { id, job: Job::from_json(job)?, trace });
+            let defer = matches!(v.get("defer"), Some(Json::Bool(true)));
+            return Ok(Request::Job { id, job: Job::from_json(job)?, trace, defer });
         }
         if let Some(admin) = v.get("admin") {
             return Ok(Request::Admin { id, admin: Admin::from_json(admin)? });
@@ -206,7 +227,7 @@ impl Response {
         }
     }
 
-    /// Decode an envelope (strictly v3, like [`Request::from_json`]).
+    /// Decode an envelope (strictly v4, like [`Request::from_json`]).
     pub fn from_json(v: &Json) -> Result<Response> {
         check_envelope_version(v)?;
         let id = get_index(v, "id")?;
@@ -259,11 +280,25 @@ mod tests {
                 id: 7,
                 job: Job::Infer { processor: "mnist8".into(), image: vec![0.5, 0.25] },
                 trace: None,
+                defer: false,
             },
             Request::Job {
                 id: 9,
                 job: Job::RawApply { processor: "mesh4".into(), x: crate::CMat::eye(4) },
                 trace: Some(WireTrace { trace: 81_235, parent: 81_236 }),
+                defer: false,
+            },
+            Request::Job {
+                id: 11,
+                job: Job::Poll { ticket: 42 },
+                trace: None,
+                defer: false,
+            },
+            Request::Job {
+                id: 12,
+                job: Job::RawApply { processor: "mesh4".into(), x: crate::CMat::eye(2) },
+                trace: None,
+                defer: true,
             },
             Request::Admin { id: 8, admin: Admin::Health },
         ];
@@ -275,6 +310,8 @@ mod tests {
                 id: 7,
                 result: JobResult::Infer { probs: vec![0.1; 10], queued_us: 1, service_us: 2 },
             },
+            Response::Result { id: 12, result: JobResult::Submitted { ticket: 42 } },
+            Response::Result { id: 13, result: JobResult::Pending { ticket: 42 } },
             Response::AdminReply { id: 8, reply: AdminReply::ShuttingDown },
             Response::Error { id: 9, code: "overloaded".into(), message: "queue full".into() },
         ];
@@ -284,19 +321,48 @@ mod tests {
     }
 
     #[test]
+    fn defer_is_encoded_only_when_set() {
+        let plain = Request::Job {
+            id: 1,
+            job: Job::Poll { ticket: 3 },
+            trace: None,
+            defer: false,
+        };
+        assert!(!plain.encode().contains("defer"), "{}", plain.encode());
+        let deferred = Request::Job {
+            id: 1,
+            job: Job::Poll { ticket: 3 },
+            trace: None,
+            defer: true,
+        };
+        assert!(deferred.encode().contains(r#""defer":true"#), "{}", deferred.encode());
+        // Anything but literal `true` means a plain synchronous submit.
+        let text = r#"{"v":4,"id":2,"defer":"yes","job":{"v":4,"kind":"poll","ticket":1}}"#;
+        match Request::decode(text).unwrap() {
+            Request::Job { defer, .. } => assert!(!defer),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
     fn envelope_rejects_reserved_id_bad_version_and_missing_body() {
         let ok = Request::Job {
             id: 1,
             job: Job::Infer { processor: "m".into(), image: vec![] },
             trace: None,
+            defer: false,
         };
         let mut doc = crate::util::json::parse(&ok.encode()).unwrap();
         if let Json::Obj(map) = &mut doc {
             map.insert("id".into(), Json::Num(0.0));
         }
         assert!(Request::from_json(&doc).is_err(), "id 0 is reserved");
-        assert!(Request::decode(r#"{"v":2,"id":1,"admin":{"v":3,"admin":"health"}}"#).is_err());
-        assert!(Request::decode(r#"{"v":3,"id":1}"#).is_err());
+        assert!(Request::decode(r#"{"v":2,"id":1,"admin":{"v":4,"admin":"health"}}"#).is_err());
+        // Envelopes are strictly v4: a v3 envelope is refused even though
+        // v3 *jobs* still decode through the compat shim.
+        assert!(Request::decode(r#"{"v":3,"id":1,"admin":{"v":4,"admin":"health"}}"#).is_err());
+        assert!(Request::decode(r#"{"v":4,"id":1}"#).is_err());
+        assert!(Response::decode(r#"{"v":4,"id":1}"#).is_err());
         assert!(Response::decode(r#"{"v":3,"id":1}"#).is_err());
     }
 
@@ -310,7 +376,12 @@ mod tests {
         let req = Request::Admin { id: 3, admin: Admin::Health };
         let req_doc = crate::util::json::parse(&req.encode()).unwrap();
         assert_eq!(auth_token_of(&req_doc), None);
-        for text in [r#"{"v":2,"auth":"hunter2"}"#, r#"{"v":3}"#, r#"{"v":3,"auth":7}"#] {
+        for text in [
+            r#"{"v":2,"auth":"hunter2"}"#,
+            r#"{"v":3,"auth":"hunter2"}"#,
+            r#"{"v":4}"#,
+            r#"{"v":4,"auth":7}"#,
+        ] {
             let doc = crate::util::json::parse(text).unwrap();
             assert_eq!(auth_token_of(&doc), None, "{text}");
         }
@@ -318,7 +389,7 @@ mod tests {
 
     #[test]
     fn malformed_trace_fields_are_ignored_not_rejected() {
-        let base = r#"{"v":3,"id":6,"job":{"v":3,"kind":"reprogram","processor":"m","code":[1]}"#;
+        let base = r#"{"v":4,"id":6,"job":{"v":4,"kind":"reprogram","processor":"m","code":[1]}"#;
         for trace in [
             r#""not an object""#,
             "17",
@@ -335,20 +406,28 @@ mod tests {
     }
 
     #[test]
-    fn v2_jobs_ride_inside_v3_envelopes() {
-        // A v2 peer upgraded only its envelope layer: the nested job may
-        // still be v2 and must decode through the compat shim.
-        let text = r#"{"v":3,"id":4,"job":{"v":2,"kind":"reprogram","processor":"mesh8","code":[1,2]}}"#;
-        match Request::decode(text).unwrap() {
-            Request::Job { id, job, trace } => {
-                assert_eq!(id, 4);
-                assert_eq!(trace, None);
-                assert_eq!(
-                    job,
-                    Job::Reprogram { processor: "mesh8".into(), code: vec![1, 2] }
-                );
+    fn v2_and_v3_jobs_ride_inside_v4_envelopes() {
+        // A legacy peer upgraded only its envelope layer: the nested job
+        // may still be v2 or v3 and must decode through the compat shims.
+        for nested in [2u64, 3] {
+            let text = format!(
+                r#"{{"v":4,"id":4,"job":{{"v":{nested},"kind":"reprogram","processor":"mesh8","code":[1,2]}}}}"#
+            );
+            match Request::decode(&text).unwrap() {
+                Request::Job { id, job, trace, defer } => {
+                    assert_eq!(id, 4);
+                    assert_eq!(trace, None);
+                    assert!(!defer);
+                    assert_eq!(
+                        job,
+                        Job::Reprogram { processor: "mesh8".into(), code: vec![1, 2] }
+                    );
+                }
+                other => panic!("unexpected {other:?}"),
             }
-            other => panic!("unexpected {other:?}"),
         }
+        // The v4-only kinds do NOT ride inside legacy job documents.
+        let text = r#"{"v":4,"id":5,"job":{"v":3,"kind":"poll","ticket":1}}"#;
+        assert!(Request::decode(text).is_err(), "poll requires a v4 job document");
     }
 }

@@ -1,0 +1,411 @@
+//! The readiness event loop behind [`TcpFrontEnd`](super::tcp::TcpFrontEnd):
+//! one thread, every socket non-blocking, zero per-connection threads.
+//!
+//! Responsibilities (and *only* these — envelope decode, validation,
+//! execution and reply encoding happen on the worker pool in
+//! [`super::tcp`]):
+//!
+//! * accept new sockets, shedding beyond the connection limit;
+//! * accumulate bytes per connection and slice complete length-prefixed
+//!   frames out of the read buffer — a slow-loris peer that dribbles a
+//!   frame one byte at a time costs one buffer, never a stalled thread;
+//! * gate the first frame on the shared-secret token when configured
+//!   (the one decode the reactor does itself: the frame must be checked
+//!   before anything behind it may be forwarded);
+//! * drain worker effects (encoded replies, ticket registrations, close
+//!   requests) and flush per-connection write buffers as sockets accept
+//!   bytes — a peer that never reads its replies backs up *its own*
+//!   buffer, shed at `TcpConfig::write_buffer_cap`, and stalls nobody;
+//! * poll tracked in-flight tickets (non-blocking `Endpoint::poll`) and
+//!   hand completions back to the workers to encode;
+//! * reap: a dead peer's tracked tickets are forgotten at the router
+//!   (`Router::forget`) the moment the connection drops, so abandoned
+//!   jobs cannot accumulate for the life of the process. Deferred
+//!   tickets are client-owned, never tracked here, and deliberately
+//!   survive disconnects.
+//!
+//! The `reactor-blocking` lint rule holds this file to non-blocking
+//! calls; the single allowed exception is the bounded idle pause at the
+//! bottom of the sweep.
+
+use crate::obs::log;
+use crate::util::json::parse;
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::super::router::Endpoint;
+use super::tcp::{Effect, ReactorShared, Work};
+use super::{write_frame, Response, CONNECTION_ID};
+
+/// Bounded pacing while a sweep makes no progress: the scan granularity,
+/// not a wait on any peer.
+const IDLE: Duration = Duration::from_millis(1);
+
+/// Per-sweep read budget per connection, so one firehose peer cannot
+/// monopolize the loop.
+const READ_BUDGET: usize = 256 * 1024;
+
+/// An in-flight (non-deferred) job awaiting its result for this
+/// connection; polled each sweep, reaped if the connection dies first.
+struct Tracked {
+    ticket: u64,
+    id: u64,
+    ctx: Option<crate::obs::trace::TraceCtx>,
+    export: bool,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Read accumulation: partial frames survive across sweeps.
+    rbuf: Vec<u8>,
+    /// Write accumulation: `wbuf[sent..]` is pending on the socket.
+    wbuf: Vec<u8>,
+    sent: usize,
+    authed: bool,
+    /// Flush pending writes, then close (graceful: id-0 terminal error
+    /// or server-initiated shed).
+    closing: bool,
+    /// Socket gone (EOF, reset, write failure): close now, reap tickets.
+    dead: bool,
+    tracked: Vec<Tracked>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, authed: bool) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            sent: 0,
+            authed,
+            closing: false,
+            dead: false,
+            tracked: Vec::new(),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.dead || (self.closing && self.sent == self.wbuf.len())
+    }
+}
+
+/// The event loop: sweeps accept → effects → per-connection read /
+/// ticket-poll / write until the shutdown flag flips, then reaps every
+/// remaining connection.
+pub(super) fn event_loop(listener: TcpListener, st: Arc<ReactorShared>, work: Sender<Work>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 1;
+    while !st.stop.load(Ordering::SeqCst) {
+        let mut progressed = false;
+        progressed |= accept_ready(&listener, &st, &work, &mut conns, &mut next_conn);
+        progressed |= drain_effects(&st, &mut conns);
+        let mut done: Vec<u64> = Vec::new();
+        for (&cid, conn) in conns.iter_mut() {
+            progressed |= pump_read(cid, conn, &st, &work);
+            progressed |= pump_tickets(cid, conn, &st, &work);
+            progressed |= pump_write(conn);
+            if conn.done() {
+                done.push(cid);
+            }
+        }
+        for cid in done {
+            if let Some(conn) = conns.remove(&cid) {
+                reap(&st, conn);
+            }
+        }
+        if !progressed {
+            // rfnn-lint: allow(reactor-blocking)
+            std::thread::sleep(IDLE);
+        }
+    }
+    for (_, conn) in conns.drain() {
+        reap(&st, conn);
+    }
+}
+
+/// Forget every tracked ticket of a finished connection so abandoned
+/// jobs cannot accumulate; the processor's eventual `respond` lands on a
+/// closed channel and is discarded harmlessly.
+fn reap(st: &ReactorShared, conn: Conn) {
+    for t in conn.tracked {
+        st.router.forget(t.ticket);
+        if let Some(ctx) = t.ctx {
+            let _ = ctx.finish(false);
+        }
+    }
+}
+
+fn accept_ready(
+    listener: &TcpListener,
+    st: &ReactorShared,
+    work: &Sender<Work>,
+    conns: &mut HashMap<u64, Conn>,
+    next_conn: &mut u64,
+) -> bool {
+    let mut progressed = false;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                progressed = true;
+                let t = &st.router.metrics().transport;
+                if conns.len() >= st.cfg.max_connections {
+                    t.connections_refused.fetch_add(1, Ordering::Relaxed);
+                    log::warn(
+                        "tcp",
+                        "connection refused at limit",
+                        &[("max_connections", st.cfg.max_connections.to_string())],
+                    );
+                    // Workers may block; the overload frame is written
+                    // there on a blocking socket.
+                    let _ = work.send(Work::Refuse { stream });
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                t.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                let cid = *next_conn;
+                *next_conn += 1;
+                conns.insert(cid, Conn::new(stream, st.cfg.auth_token.is_none()));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(_) => break,
+        }
+    }
+    progressed
+}
+
+/// Apply queued worker effects to the connection table. Effects against
+/// a connection that died in the meantime are dropped — except ticket
+/// registrations, which are forgotten at the router immediately.
+fn drain_effects(st: &ReactorShared, conns: &mut HashMap<u64, Conn>) -> bool {
+    let effects: Vec<Effect> = {
+        let mut q = st.outbox.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        q.drain(..).collect()
+    };
+    let progressed = !effects.is_empty();
+    for effect in effects {
+        match effect {
+            Effect::Deliver { conn, bytes } => {
+                let Some(c) = conns.get_mut(&conn) else { continue };
+                if c.dead {
+                    continue;
+                }
+                c.wbuf.extend_from_slice(&bytes);
+                st.router.metrics().transport.frames_out.fetch_add(1, Ordering::Relaxed);
+                if c.wbuf.len() - c.sent > st.cfg.write_buffer_cap {
+                    log::warn(
+                        "tcp",
+                        "shedding connection: peer is not reading its replies",
+                        &[("pending_bytes", (c.wbuf.len() - c.sent).to_string())],
+                    );
+                    c.dead = true;
+                }
+            }
+            Effect::Track { conn, ticket, id, ctx, export } => match conns.get_mut(&conn) {
+                Some(c) if !c.dead && !c.closing => {
+                    c.tracked.push(Tracked { ticket, id, ctx, export });
+                }
+                _ => {
+                    // The peer vanished between submit and registration.
+                    st.router.forget(ticket);
+                    if let Some(ctx) = ctx {
+                        let _ = ctx.finish(false);
+                    }
+                }
+            },
+            Effect::Close { conn } => {
+                if let Some(c) = conns.get_mut(&conn) {
+                    c.closing = true;
+                }
+            }
+        }
+    }
+    progressed
+}
+
+/// Read whatever the socket has ready (bounded per sweep), then slice
+/// complete frames out of the accumulation buffer. Partial frames stay
+/// buffered — a slow-loris peer parks bytes here, not a thread.
+fn pump_read(cid: u64, conn: &mut Conn, st: &ReactorShared, work: &Sender<Work>) -> bool {
+    if conn.closing || conn.dead {
+        return false;
+    }
+    let mut progressed = false;
+    let mut budget = READ_BUDGET;
+    let mut tmp = [0u8; 16 * 1024];
+    while budget > 0 {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => {
+                // Peer closed: drop the connection; `reap` forgets its
+                // in-flight tickets (the disconnect-mid-flight fix).
+                conn.dead = true;
+                return true;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&tmp[..n]);
+                budget = budget.saturating_sub(n);
+                progressed = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                return true;
+            }
+        }
+    }
+    while !conn.closing && !conn.dead {
+        if conn.rbuf.len() < 4 {
+            break;
+        }
+        let len_buf = [conn.rbuf[0], conn.rbuf[1], conn.rbuf[2], conn.rbuf[3]];
+        // u32 → usize never truncates on the ≥32-bit targets we build for.
+        // rfnn-lint: allow(wire-cast)
+        let len = u32::from_be_bytes(len_buf) as usize;
+        if len > st.cfg.max_frame {
+            // Broken framing is unrecoverable on a byte stream: answer
+            // once at connection scope, then close.
+            st.router.metrics().transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
+            log::warn("tcp", "closing connection: broken framing", &[(
+                "frame_len",
+                len.to_string(),
+            )]);
+            let resp = Response::Error {
+                id: CONNECTION_ID,
+                code: "bad_frame".to_string(),
+                message: format!(
+                    "frame length {len} exceeds the {}-byte cap",
+                    st.cfg.max_frame
+                ),
+            };
+            enqueue_frame(st, conn, resp.encode().as_bytes());
+            conn.closing = true;
+            break;
+        }
+        if conn.rbuf.len() < 4 + len {
+            break; // partial frame: wait for more bytes
+        }
+        let payload = conn.rbuf[4..4 + len].to_vec();
+        conn.rbuf.drain(..4 + len);
+        st.router.metrics().transport.frames_in.fetch_add(1, Ordering::Relaxed);
+        progressed = true;
+        if !conn.authed {
+            auth_first_frame(st, conn, &payload);
+            continue;
+        }
+        let _ = work.send(Work::Frame { conn: cid, payload });
+    }
+    progressed
+}
+
+/// First-frame authentication, when configured: a matching auth envelope
+/// opens the connection (no acknowledgement frame), anything else is
+/// answered with one id-0 `unauthorized` frame and closed.
+fn auth_first_frame(st: &ReactorShared, conn: &mut Conn, payload: &[u8]) {
+    let Some(token) = st.cfg.auth_token.as_deref() else {
+        conn.authed = true;
+        return;
+    };
+    let presented = std::str::from_utf8(payload).ok().and_then(parse);
+    if presented.as_ref().and_then(super::auth_token_of) == Some(token) {
+        conn.authed = true;
+        return;
+    }
+    st.router.metrics().transport.auth_rejects.fetch_add(1, Ordering::Relaxed);
+    log::warn("tcp", "connection rejected: bad or missing auth token", &[]);
+    let resp = Response::Error {
+        id: CONNECTION_ID,
+        code: "unauthorized".to_string(),
+        message: "this server requires first-frame token authentication".to_string(),
+    };
+    enqueue_frame(st, conn, resp.encode().as_bytes());
+    conn.closing = true;
+}
+
+/// Frame a reactor-originated payload straight into the connection's
+/// write buffer (a `Vec` sink never blocks).
+fn enqueue_frame(st: &ReactorShared, conn: &mut Conn, payload: &[u8]) {
+    if write_frame(&mut conn.wbuf, payload).is_ok() {
+        st.router.metrics().transport.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Poll this connection's tracked tickets; resolved (or dead) ones go
+/// back to the workers as [`Work::Finish`] for trace-finishing and reply
+/// encoding.
+fn pump_tickets(cid: u64, conn: &mut Conn, st: &ReactorShared, work: &Sender<Work>) -> bool {
+    if conn.tracked.is_empty() || conn.dead || conn.closing {
+        return false;
+    }
+    let mut progressed = false;
+    let mut still = Vec::with_capacity(conn.tracked.len());
+    for t in conn.tracked.drain(..) {
+        match st.router.poll(t.ticket) {
+            Ok(None) => still.push(t),
+            Ok(Some(result)) => {
+                progressed = true;
+                let _ = work.send(Work::Finish {
+                    conn: cid,
+                    id: t.id,
+                    outcome: Ok(result),
+                    ctx: t.ctx,
+                    export: t.export,
+                });
+            }
+            Err(e) => {
+                progressed = true;
+                let _ = work.send(Work::Finish {
+                    conn: cid,
+                    id: t.id,
+                    outcome: Err(e),
+                    ctx: t.ctx,
+                    export: t.export,
+                });
+            }
+        }
+    }
+    conn.tracked = still;
+    progressed
+}
+
+/// Flush as much of the write buffer as the socket will take. A peer
+/// that stops reading leaves bytes here; the loop moves on.
+fn pump_write(conn: &mut Conn) -> bool {
+    if conn.dead || conn.sent == conn.wbuf.len() {
+        return false;
+    }
+    let mut progressed = false;
+    loop {
+        match conn.stream.write(&conn.wbuf[conn.sent..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.sent += n;
+                progressed = true;
+                if conn.sent == conn.wbuf.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.sent == conn.wbuf.len() || conn.sent > READ_BUDGET {
+        conn.wbuf.drain(..conn.sent);
+        conn.sent = 0;
+    }
+    progressed
+}

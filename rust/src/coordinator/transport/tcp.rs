@@ -2,37 +2,47 @@
 //! [`Router`](crate::coordinator::router::Router).
 //!
 //! Threading model (no async runtime — `std::net` + threads, matching the
-//! crate's zero-dependency rule):
+//! crate's zero-dependency rule), **bounded regardless of connection or
+//! job count**:
 //!
-//! * one **accept loop** thread (non-blocking listener polled against the
-//!   shutdown flag) enforcing the connection limit — beyond it a
-//!   connection is *shed*, not queued: it gets one
-//!   `{"error":{"code":"overloaded"}}` frame (the transport-level mirror
-//!   of `SubmitError::Overloaded`) and is closed;
-//! * one **reader** thread per connection, decoding frames and submitting
-//!   through the shared router path (`submit_json` — the same decode /
-//!   validation / metrics code the CLI uses);
-//! * one **writer** thread per connection, draining a channel of
-//!   responses (replies may be produced out of order by the waiters);
-//! * one short-lived **waiter** thread per in-flight job, blocking on
-//!   `Router::wait` and handing the response to the writer.
+//! * one **reactor** thread (see [`super::reactor`]) driving the
+//!   non-blocking listener and every non-blocking connection socket:
+//!   accepting, frame reassembly, first-frame auth, write flushing and
+//!   in-flight ticket polling all happen there, so a thousand idle
+//!   connections cost buffers, not threads;
+//! * a **fixed worker pool** ([`TcpConfig::workers`] threads) that
+//!   decodes envelopes, submits jobs through the shared router path
+//!   (`submit_json_traced` — the same decode / validation / metrics code
+//!   the CLI uses), runs the synchronous admin plane, and encodes
+//!   replies. Workers never touch connection sockets; they hand encoded
+//!   frames back to the reactor through an effect queue, and the reactor
+//!   alone writes.
 //!
-//! Reads run under a short socket timeout so every blocked thread
-//! re-checks the shutdown flag; partial frames are preserved across
-//! timeouts (a slow peer never corrupts framing).
+//! There is no per-job waiter thread: the reactor polls in-flight
+//! tickets non-blockingly, and a peer that disconnects mid-flight has
+//! its tickets reaped ([`Router::forget`]) instead of leaking a parked
+//! thread until shutdown. Deferred submissions (`"defer":true` on the
+//! request envelope) are answered immediately with
+//! [`JobResult::Submitted`] and their tickets are *client-owned*: they
+//! survive the connection and resolve later through [`Job::Poll`], which
+//! is how one cheap link multiplexes thousands of in-flight jobs.
+//!
+//! Connections beyond [`TcpConfig::max_connections`] are *shed*, not
+//! queued: one `{"error":{"code":"overloaded"}}` frame (the
+//! transport-level mirror of `SubmitError::Overloaded`), then close.
 
-use crate::obs::log;
 use crate::obs::trace::{TraceCtx, WireTrace};
 use crate::util::error::{Error, Result};
 use crate::util::json::{parse, Json};
-use std::io::{self, Read};
+use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::super::router::{Endpoint, Router};
+use super::super::router::{Router, RouterError};
+use super::super::service::JobResult;
 use super::{write_frame, Response, CONNECTION_ID};
 
 /// Front-end tuning.
@@ -43,8 +53,15 @@ pub struct TcpConfig {
     pub max_connections: usize,
     /// Per-frame payload cap (refused before allocating).
     pub max_frame: usize,
-    /// Socket read timeout — the shutdown-flag polling granularity.
-    pub read_timeout: Duration,
+    /// Fixed worker-pool size: the threads that decode, submit and
+    /// encode. Total transport threads = `workers + 1` (the reactor),
+    /// independent of connection and job counts.
+    pub workers: usize,
+    /// Pending-unwritten reply bytes per connection beyond which the
+    /// peer is shed: a client that never reads its replies backs up its
+    /// own buffer, not the event loop. Keep ≥ `max_frame` so one
+    /// maximal reply can always queue.
+    pub write_buffer_cap: usize,
     /// Optional shared-secret token (see
     /// [`AUTH_TOKEN_ENV`](super::AUTH_TOKEN_ENV)). `Some` requires every
     /// connection's first frame to be a matching auth envelope; `None`
@@ -57,7 +74,8 @@ impl Default for TcpConfig {
         TcpConfig {
             max_connections: 64,
             max_frame: super::MAX_FRAME,
-            read_timeout: Duration::from_millis(50),
+            workers: 4,
+            write_buffer_cap: super::MAX_FRAME,
             auth_token: None,
         }
     }
@@ -71,19 +89,21 @@ impl TcpConfig {
     }
 }
 
-/// A listening framed-TCP front end. Binding spawns the accept loop;
-/// [`Admin::Shutdown`](crate::coordinator::router::Admin) (or
-/// [`TcpFrontEnd::shutdown`]) stops it.
+/// A listening framed-TCP front end. Binding spawns the reactor and the
+/// worker pool; [`Admin::Shutdown`](crate::coordinator::router::Admin)
+/// (or [`TcpFrontEnd::shutdown`]) stops them.
 pub struct TcpFrontEnd {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl TcpFrontEnd {
     /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks an ephemeral
     /// port — read it back with [`Self::local_addr`]) and start
-    /// accepting.
+    /// serving. Publishes the bounded thread count on the
+    /// `reactor_threads` gauge so tests can pin it.
     pub fn bind(addr: &str, router: Arc<Router>, cfg: TcpConfig) -> Result<TcpFrontEnd> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::msg(format!("bind {addr}: {e}")))?;
@@ -94,10 +114,29 @@ impl TcpFrontEnd {
             .local_addr()
             .map_err(|e| Error::msg(format!("local_addr: {e}")))?;
         let stop = router.stop_flag();
-        let accept_stop = stop.clone();
-        let accept =
-            std::thread::spawn(move || accept_loop(listener, router, cfg, accept_stop));
-        Ok(TcpFrontEnd { addr: local, stop, accept: Some(accept) })
+        let n = cfg.workers.max(1);
+        router
+            .metrics()
+            .transport
+            .reactor_threads
+            .store(u64::try_from(n + 1).unwrap_or(u64::MAX), Ordering::Relaxed);
+        let (work_tx, work_rx) = channel::<Work>();
+        let shared = Arc::new(ReactorShared {
+            router,
+            cfg,
+            stop: stop.clone(),
+            outbox: Mutex::new(VecDeque::new()),
+        });
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let st = shared.clone();
+            let rx = work_rx.clone();
+            workers.push(std::thread::spawn(move || worker_loop(st, rx)));
+        }
+        let reactor =
+            std::thread::spawn(move || super::reactor::event_loop(listener, shared, work_tx));
+        Ok(TcpFrontEnd { addr: local, stop, reactor: Some(reactor), workers })
     }
 
     /// The bound address (with the real port when binding port 0).
@@ -113,8 +152,7 @@ impl TcpFrontEnd {
         }
     }
 
-    /// Stop accepting and join the accept loop (connection threads drain
-    /// on their own as peers disconnect or notice the flag).
+    /// Stop serving and join the reactor and worker threads.
     pub fn shutdown(self) {
         drop(self);
     }
@@ -123,43 +161,118 @@ impl TcpFrontEnd {
 impl Drop for TcpFrontEnd {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.accept.take() {
+        // The reactor exits on the flag and drops the work sender; the
+        // workers' queue recv then errors and each of them returns.
+        if let Some(j) = self.reactor.take() {
+            let _ = j.join();
+        }
+        for j in self.workers.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-fn accept_loop(listener: TcpListener, router: Arc<Router>, cfg: TcpConfig, stop: Arc<AtomicBool>) {
-    let live = Arc::new(AtomicUsize::new(0));
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let t = &router.metrics().transport;
-                if live.load(Ordering::SeqCst) >= cfg.max_connections {
-                    t.connections_refused.fetch_add(1, Ordering::Relaxed);
-                    log::warn(
-                        "tcp",
-                        "connection refused at limit",
-                        &[("max_connections", cfg.max_connections.to_string())],
-                    );
-                    refuse(stream);
-                    continue;
-                }
-                t.connections_accepted.fetch_add(1, Ordering::Relaxed);
-                live.fetch_add(1, Ordering::SeqCst);
-                let router = router.clone();
-                let stop = stop.clone();
-                let live = live.clone();
-                let cfg = cfg.clone();
-                std::thread::spawn(move || {
-                    handle_conn(stream, router, cfg, stop);
-                    live.fetch_sub(1, Ordering::SeqCst);
-                });
+// ---------------------------------------------------------------------------
+// Reactor ↔ worker plumbing
+// ---------------------------------------------------------------------------
+
+/// State shared between the reactor thread and the worker pool.
+pub(super) struct ReactorShared {
+    pub(super) router: Arc<Router>,
+    pub(super) cfg: TcpConfig,
+    pub(super) stop: Arc<AtomicBool>,
+    /// Worker → reactor effects, drained once per event-loop sweep.
+    pub(super) outbox: Mutex<VecDeque<Effect>>,
+}
+
+/// Reactor → worker units of (potentially blocking or CPU-heavy) work.
+pub(super) enum Work {
+    /// A complete frame from an authenticated connection: decode the
+    /// envelope, submit/execute, answer.
+    Frame { conn: u64, payload: Vec<u8> },
+    /// A tracked ticket the reactor observed as resolved (or dead):
+    /// finish the trace, encode the reply.
+    Finish {
+        conn: u64,
+        id: u64,
+        outcome: std::result::Result<JobResult, RouterError>,
+        ctx: Option<TraceCtx>,
+        export: bool,
+    },
+    /// A connection shed at the limit: deliver the single `overloaded`
+    /// frame on a blocking socket (workers may block; the reactor never
+    /// does).
+    Refuse { stream: TcpStream },
+}
+
+/// Worker → reactor effects (the reactor alone owns the sockets).
+pub(super) enum Effect {
+    /// Append one fully encoded frame to a connection's write buffer.
+    Deliver { conn: u64, bytes: Vec<u8> },
+    /// Register an in-flight ticket for the reactor to poll; answered
+    /// later via [`Work::Finish`]. Tickets tracked here are reaped when
+    /// the connection dies. Deferred tickets are *not* tracked — they
+    /// are client-owned and resolve through `Job::Poll`.
+    Track { conn: u64, ticket: u64, id: u64, ctx: Option<TraceCtx>, export: bool },
+    /// Flush the connection's pending writes, then close it.
+    Close { conn: u64 },
+}
+
+pub(super) fn push_effect(st: &ReactorShared, effect: Effect) {
+    st.outbox.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push_back(effect);
+}
+
+/// Encode one reply frame (length prefix + JSON payload), merging the
+/// request's server-side spans into the envelope's `trace` field. A
+/// reply that cannot fit one frame (huge RawApply result) must not wedge
+/// the connection: substitute a small error frame under the SAME id so
+/// the waiting client resolves.
+fn encode_reply(st: &ReactorShared, resp: Response, spans: Option<Json>) -> Vec<u8> {
+    let id = resp.id();
+    let mut doc = resp.to_json();
+    if let (Json::Obj(map), Some(t)) = (&mut doc, spans) {
+        map.insert("trace".to_string(), t);
+    }
+    let mut payload = doc.to_string_compact();
+    if payload.len() > st.cfg.max_frame {
+        payload = Response::Error {
+            id,
+            code: "reply_too_large".to_string(),
+            message: format!(
+                "reply of {} bytes exceeds the {}-byte frame cap",
+                payload.len(),
+                st.cfg.max_frame
+            ),
+        }
+        .encode();
+    }
+    let mut bytes = Vec::with_capacity(payload.len() + 4);
+    let _ = write_frame(&mut bytes, payload.as_bytes());
+    bytes
+}
+
+fn deliver(st: &ReactorShared, conn: u64, resp: Response, spans: Option<Json>) {
+    let bytes = encode_reply(st, resp, spans);
+    push_effect(st, Effect::Deliver { conn, bytes });
+}
+
+fn worker_loop(st: Arc<ReactorShared>, rx: Arc<Mutex<Receiver<Work>>>) {
+    loop {
+        // Hold the lock only while waiting: one worker parks in `recv`,
+        // the rest park on the mutex; each dequeue hands the wait over.
+        let work = {
+            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            guard.recv()
+        };
+        let Ok(work) = work else {
+            return; // reactor exited and dropped the sender
+        };
+        match work {
+            Work::Frame { conn, payload } => handle_frame(conn, &payload, &st),
+            Work::Finish { conn, id, outcome, ctx, export } => {
+                finish_job(conn, id, outcome, ctx, export, &st);
             }
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(10));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            Work::Refuse { stream } => refuse(stream),
         }
     }
 }
@@ -175,130 +288,26 @@ fn refuse(mut stream: TcpStream) {
     let _ = write_frame(&mut stream, resp.encode().as_bytes());
 }
 
-fn handle_conn(mut stream: TcpStream, router: Arc<Router>, cfg: TcpConfig, stop: Arc<AtomicBool>) {
-    let metrics = router.metrics().clone();
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_nodelay(true);
-    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
-        return;
-    }
-    // First-frame authentication, when configured. The gate runs before
-    // the writer thread exists, so a refused connection writes its single
-    // id-0 `unauthorized` frame directly and never serves a request.
-    if let Some(token) = cfg.auth_token.as_deref() {
-        match read_frame_interruptible(&mut stream, cfg.max_frame, &stop) {
-            Ok(ConnRead::Frame(payload)) => {
-                metrics.transport.frames_in.fetch_add(1, Ordering::Relaxed);
-                let presented = std::str::from_utf8(&payload).ok().and_then(|t| parse(t));
-                if presented.as_ref().and_then(super::auth_token_of) != Some(token) {
-                    metrics.transport.auth_rejects.fetch_add(1, Ordering::Relaxed);
-                    log::warn("tcp", "connection rejected: bad or missing auth token", &[]);
-                    let resp = Response::Error {
-                        id: CONNECTION_ID,
-                        code: "unauthorized".to_string(),
-                        message: "this server requires first-frame token authentication"
-                            .to_string(),
-                    };
-                    let _ = write_frame(&mut stream, resp.encode().as_bytes());
-                    return;
-                }
-            }
-            // EOF / shutdown / broken framing before any frame: just close.
-            _ => return,
-        }
-    }
-    let Ok(writer_stream) = stream.try_clone() else { return };
-    // Each outgoing response may carry a span payload to merge into the
-    // envelope's `trace` field (requests that arrived with a trace
-    // context get their server-side spans back).
-    let (out_tx, out_rx) = channel::<(Response, Option<Json>)>();
-    let writer_metrics = metrics.clone();
-    let writer = std::thread::spawn(move || {
-        let mut w = io::BufWriter::new(writer_stream);
-        for (resp, spans) in out_rx {
-            // A reply that cannot fit one frame (huge RawApply result)
-            // must not wedge the writer: substitute a small error frame
-            // under the SAME id so the waiting client resolves, and keep
-            // serving the connection. Only real socket errors break.
-            let mut doc = resp.to_json();
-            if let (Json::Obj(map), Some(t)) = (&mut doc, spans) {
-                map.insert("trace".to_string(), t);
-            }
-            let mut payload = doc.to_string_compact();
-            if payload.len() > cfg.max_frame {
-                payload = Response::Error {
-                    id: resp.id(),
-                    code: "reply_too_large".to_string(),
-                    message: format!(
-                        "reply of {} bytes exceeds the {}-byte frame cap",
-                        payload.len(),
-                        cfg.max_frame
-                    ),
-                }
-                .encode();
-            }
-            if write_frame(&mut w, payload.as_bytes()).is_err() {
-                break;
-            }
-            writer_metrics.transport.frames_out.fetch_add(1, Ordering::Relaxed);
-        }
-    });
-    loop {
-        match read_frame_interruptible(&mut stream, cfg.max_frame, &stop) {
-            Ok(ConnRead::Frame(payload)) => {
-                metrics.transport.frames_in.fetch_add(1, Ordering::Relaxed);
-                if !handle_frame(&payload, &router, &out_tx) {
-                    break;
-                }
-            }
-            Ok(ConnRead::Eof) | Ok(ConnRead::Stopped) => break,
-            Err(e) => {
-                // Broken framing is unrecoverable on a byte stream: answer
-                // once at connection scope, then close.
-                metrics.transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
-                log::warn("tcp", "closing connection: broken framing", &[(
-                    "error",
-                    e.to_string(),
-                )]);
-                let _ = out_tx.send((
-                    Response::Error {
-                        id: CONNECTION_ID,
-                        code: "bad_frame".to_string(),
-                        message: e.to_string(),
-                    },
-                    None,
-                ));
-                break;
-            }
-        }
-    }
-    drop(out_tx);
-    // Waiter threads for in-flight jobs hold writer-channel clones; the
-    // writer exits once the last of them answers (or the peer vanishes).
-    let _ = writer.join();
-}
-
 /// Decode one envelope and dispatch it through the shared router path.
-/// Every outcome is answered; nothing is silently dropped. Returns
-/// whether the connection should stay open: an *undecodable envelope*
-/// (non-UTF-8, malformed JSON, wrong envelope version, unusable id) is a
-/// connection-scope failure — answered under id 0 and then closed, which
-/// is exactly how clients treat id-0 errors (terminal). Failures in a
-/// well-enveloped request (bad nested job, unknown processor, overload)
-/// are answered under the request's own id and the connection lives on.
-fn handle_frame(
-    payload: &[u8],
-    router: &Arc<Router>,
-    out: &Sender<(Response, Option<Json>)>,
-) -> bool {
+/// Every outcome is answered; nothing is silently dropped. An
+/// *undecodable envelope* (non-UTF-8, malformed JSON, wrong envelope
+/// version, unusable id) is a connection-scope failure — answered under
+/// id 0 and then closed, which is exactly how clients treat id-0 errors
+/// (terminal). Failures in a well-enveloped request (bad nested job,
+/// unknown processor, overload) are answered under the request's own id
+/// and the connection lives on.
+fn handle_frame(conn: u64, payload: &[u8], st: &ReactorShared) {
     let t0 = Instant::now();
+    let router = &st.router;
     let reject = |message: String| {
         router.metrics().transport.decode_rejects.fetch_add(1, Ordering::Relaxed);
-        let _ = out.send((
+        deliver(
+            st,
+            conn,
             Response::Error { id: CONNECTION_ID, code: "bad_request".to_string(), message },
             None,
-        ));
-        false
+        );
+        push_effect(st, Effect::Close { conn });
     };
     let Ok(text) = std::str::from_utf8(payload) else {
         return reject("frame payload is not UTF-8".to_string());
@@ -313,7 +322,7 @@ fn handle_frame(
     // accepted and ignored, so a token-bearing client interoperates with
     // a server that has no token configured.
     if super::auth_token_of(&doc).is_some() {
-        return true;
+        return;
     }
     let id = match super::super::service::get_index(&doc, "id") {
         Ok(0) => return reject("request id 0 is reserved".to_string()),
@@ -343,40 +352,40 @@ fn handle_frame(
                 vec![("bytes".to_string(), payload.len().to_string())],
             );
         }
+        let defer = matches!(doc.get("defer"), Some(Json::Bool(true)));
         // Job decode + validation + admission + metrics: one shared path
         // (`Router::submit_json_traced`), identical to the CLI's
         // `rfnn job`.
         match router.submit_json_traced(job_doc, ctx.clone()) {
+            Ok(ticket) if defer => {
+                // Deferred submission: answer now with the ticket; the
+                // client polls it later (possibly on another
+                // connection), so the ticket is NOT tracked for reaping.
+                if let Some(ctx) = &ctx {
+                    ctx.note("defer", "true");
+                }
+                let spans = ctx.and_then(|c| c.finish(export));
+                deliver(
+                    st,
+                    conn,
+                    Response::Result { id, result: JobResult::Submitted { ticket } },
+                    spans,
+                );
+            }
             Ok(ticket) => {
-                let router = router.clone();
-                let out = out.clone();
-                std::thread::spawn(move || {
-                    let resp = match router.wait(ticket) {
-                        Ok(result) => Response::Result { id, result },
-                        Err(e) => {
-                            if let Some(ctx) = &ctx {
-                                ctx.note("error", e.code());
-                            }
-                            Response::Error {
-                                id,
-                                code: e.code().to_string(),
-                                message: e.to_string(),
-                            }
-                        }
-                    };
-                    let spans = ctx.and_then(|c| c.finish(export));
-                    let _ = out.send((resp, spans));
-                });
+                push_effect(st, Effect::Track { conn, ticket, id, ctx, export });
             }
             Err(e) => {
                 if let Some(ctx) = &ctx {
                     ctx.note("error", e.code());
                 }
                 let spans = ctx.and_then(|c| c.finish(export));
-                let _ = out.send((
+                deliver(
+                    st,
+                    conn,
                     Response::Error { id, code: e.code().to_string(), message: e.to_string() },
                     spans,
-                ));
+                );
             }
         }
     } else if let Some(admin_doc) = doc.get("admin") {
@@ -386,97 +395,41 @@ fn handle_frame(
                 Response::Error { id, code: e.code().to_string(), message: e.to_string() }
             }
         };
-        let _ = out.send((resp, None));
+        deliver(st, conn, resp, None);
     } else {
-        let _ = out.send((
+        deliver(
+            st,
+            conn,
             Response::Error {
                 id,
                 code: "bad_request".to_string(),
                 message: "request envelope needs a 'job' or 'admin' field".to_string(),
             },
             None,
-        ));
-    }
-    true
-}
-
-enum ConnRead {
-    Frame(Vec<u8>),
-    Eof,
-    Stopped,
-}
-
-enum Fill {
-    Done,
-    Eof,
-    Stopped,
-}
-
-/// [`super::read_frame`] over a socket with a read timeout: timeouts
-/// re-check the shutdown flag and *resume the partial read* — a frame
-/// split across timeout boundaries is reassembled, never corrupted.
-fn read_frame_interruptible(
-    stream: &mut TcpStream,
-    max: usize,
-    stop: &AtomicBool,
-) -> io::Result<ConnRead> {
-    let mut len_buf = [0u8; 4];
-    match fill(stream, &mut len_buf, stop, true)? {
-        Fill::Eof => return Ok(ConnRead::Eof),
-        Fill::Stopped => return Ok(ConnRead::Stopped),
-        Fill::Done => {}
-    }
-    // u32 → usize never truncates on the ≥32-bit targets we build for.
-    // rfnn-lint: allow(wire-cast)
-    let len = u32::from_be_bytes(len_buf) as usize;
-    if len > max {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("frame length {len} exceeds the {max}-byte cap"),
-        ));
-    }
-    let mut payload = vec![0u8; len];
-    match fill(stream, &mut payload, stop, false)? {
-        Fill::Eof => Err(io::Error::new(
-            io::ErrorKind::UnexpectedEof,
-            "truncated frame payload",
-        )),
-        Fill::Stopped => Ok(ConnRead::Stopped),
-        Fill::Done => Ok(ConnRead::Frame(payload)),
+        );
     }
 }
 
-/// Fill `buf` completely, treating timeouts as flag-check points. A clean
-/// EOF is only legal before the first byte (`eof_ok`).
-fn fill(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-    eof_ok: bool,
-) -> io::Result<Fill> {
-    let mut filled = 0;
-    while filled < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(Fill::Stopped);
-        }
-        match stream.read(&mut buf[filled..]) {
-            Ok(0) => {
-                return if filled == 0 && eof_ok {
-                    Ok(Fill::Eof)
-                } else {
-                    Err(io::Error::new(
-                        io::ErrorKind::UnexpectedEof,
-                        "peer closed mid-frame",
-                    ))
-                };
+/// A tracked ticket resolved (or its worker died): finish the trace and
+/// encode the reply, mirroring what the per-job waiter thread used to do
+/// minus the thread.
+fn finish_job(
+    conn: u64,
+    id: u64,
+    outcome: std::result::Result<JobResult, RouterError>,
+    ctx: Option<TraceCtx>,
+    export: bool,
+    st: &ReactorShared,
+) {
+    let resp = match outcome {
+        Ok(result) => Response::Result { id, result },
+        Err(e) => {
+            if let Some(ctx) = &ctx {
+                ctx.note("error", e.code());
             }
-            Ok(n) => filled += n,
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut
-                    || e.kind() == io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
+            Response::Error { id, code: e.code().to_string(), message: e.to_string() }
         }
-    }
-    Ok(Fill::Done)
+    };
+    let spans = ctx.and_then(|c| c.finish(export));
+    deliver(st, conn, resp, spans);
 }

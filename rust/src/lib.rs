@@ -160,13 +160,16 @@
 //! θ/φ state codes; bumps the processor's pool version), and `Compile`
 //! (lower an arbitrary weight matrix onto a tile fleet and register the
 //! resulting virtual processor into the LIVE pool, answered with the plan
-//! summary as `JobResult::Compiled`) — and doubles as the wire schema:
-//! `Job`/`JobResult` round-trip through [`util::json`] under
-//! [`coordinator::service::WIRE_VERSION`] (v3). Version negotiation is
-//! one-sided and explicit: decoders accept v3, route v2 documents through
-//! the [`coordinator::service::compat`] shim (the four legacy job kinds
-//! decode identically; v3-only kinds inside a v2 document are refused),
-//! and reject every other version; encoders always emit v3.
+//! summary as `JobResult::Compiled`), plus `Poll` (resolve a deferred
+//! ticket by id, answered `Pending` while still in flight) — and doubles
+//! as the wire schema: `Job`/`JobResult` round-trip through
+//! [`util::json`] under [`coordinator::service::WIRE_VERSION`] (v4).
+//! Version negotiation is one-sided and explicit: decoders accept v4,
+//! route v2 and v3 documents through the
+//! [`coordinator::service::compat`] shims (legacy kinds decode
+//! identically; newer-version-only kinds inside an old document are
+//! refused, naming the version the document claimed), and reject every
+//! other version; encoders always emit v4.
 //!
 //! The [`coordinator::router::Router`] (the one
 //! [`coordinator::router::Endpoint`] implementation) owns wire decode,
@@ -178,13 +181,41 @@
 //! `[u32 big-endian length][UTF-8 JSON envelope]` (oversized or
 //! truncated frames are refused, never panicking), envelopes correlate
 //! out-of-order replies by client-chosen id, and
-//! [`coordinator::transport::TcpFrontEnd`] serves concurrent connections
-//! with per-connection reader/writer threads, shedding past the
-//! connection limit with the same `Overloaded` semantics as the
-//! admission queues. [`coordinator::transport::RemoteClient`] mirrors
-//! the local API (`submit(Job) -> RemoteTicket` / `wait()`); both it and
+//! [`coordinator::transport::TcpFrontEnd`] serves ALL connections from a
+//! fixed thread budget: one reactor thread runs a std-only readiness
+//! loop over nonblocking sockets (partial frames assemble incrementally
+//! per connection — a slow-loris peer wedges nobody), decoded requests
+//! are handed to a fixed worker pool, and replies drain through bounded
+//! per-connection write buffers (a peer that stops reading is shed at
+//! the cap, with the same `Overloaded` semantics as the admission
+//! queues — so are connections past the limit). The thread count is a
+//! config constant, not a function of load; the transport metrics
+//! export it as `reactor_threads` and the `soak`-prefixed integration
+//! tests pin it at 200+ concurrent clients.
+//!
+//! [`coordinator::transport::RemoteClient`] mirrors the local API
+//! (`submit(Job) -> RemoteTicket` / `wait()`); both it and
 //! `ProcessorService` implement [`coordinator::router::JobSink`], so
-//! driver code is generic over where the fleet lives.
+//! driver code is generic over where the fleet lives. Beyond the pushed
+//! reply-per-request mode, the wire multiplexes: a job envelope carrying
+//! `"defer": true` is answered immediately with
+//! `JobResult::Submitted { ticket }` and the connection is free for
+//! other traffic; the caller resolves the ticket later with `Job::Poll`
+//! frames (`RemoteClient::submit_deferred` / `poll_ticket` /
+//! `wait_ticket`), from the same connection or any other to the same
+//! process. Deferred tickets survive their submitting connection;
+//! tickets awaiting a *pushed* reply are reaped when their connection
+//! dies, so a client crash never strands a waiter or leaks table
+//! entries (`tickets_pending` in the metrics snapshot pins this).
+//!
+//! The batcher adapts to load: each worker's effective batch cap grows
+//! toward `BatchPolicy::max_batch` while the queue is deep and decays
+//! toward the minimum when drains come up short, so light traffic keeps
+//! batch-1 latency while a 256-client burst coalesces into full GEMMs.
+//! The live cap is observable as `batch_cap` in the metrics snapshot
+//! and as a span note on traced requests; the `BENCH_pr10.json` sweep
+//! records the pushed and deferred/poll paths at 1/32/256 concurrent
+//! clients alongside it.
 //!
 //! Compile-over-the-wire lifecycle: a `Job::Compile { name, rows, cols,
 //! weights, tile, fidelity }` document (any transport) runs the tiling
@@ -404,21 +435,25 @@
 //! string bodies, and `#[cfg(test)]` blocks; a rule registry then
 //! mechanizes the standing contracts:
 //!
-//! | rule ID          | contract                                              |
-//! |------------------|-------------------------------------------------------|
-//! | `wire-cast`      | no truncating `as` int casts in wire-decode scopes    |
-//! | `log-discipline` | no print macros outside obs/log, cli, main, bench     |
-//! | `unsafe-hygiene` | `unsafe` only in math/gemm.rs, with `// SAFETY:`      |
-//! | `panic-serving`  | no unwrap/expect/panic! in the serving path           |
-//! | `determinism`    | no clocks / hash iteration in bit-identity modules    |
-//! | `zero-dep`       | Cargo.toml never grows a `[dependencies]` section     |
+//! | rule ID            | contract                                              |
+//! |--------------------|-------------------------------------------------------|
+//! | `wire-cast`        | no truncating `as` int casts in wire-decode scopes    |
+//! | `log-discipline`   | no print macros outside obs/log, cli, main, bench     |
+//! | `unsafe-hygiene`   | `unsafe` only in math/gemm.rs, with `// SAFETY:`      |
+//! | `panic-serving`    | no unwrap/expect/panic! in the serving path           |
+//! | `determinism`      | no clocks / hash iteration in bit-identity modules    |
+//! | `reactor-blocking` | no blocking calls inside the transport reactor loop   |
+//! | `zero-dep`         | Cargo.toml never grows a `[dependencies]` section     |
 //!
 //! Intentional exceptions carry an inline
 //! `// rfnn-lint: allow(<rule>)` with a written justification (e.g.
 //! the GEMM autotuner's probe timing, which steers blocking but never
-//! values). The pass runs as a blocking CI job and as the
-//! `self_check_repo_tree_is_clean` unit test, so the tree can never
-//! merge with an unexplained violation.
+//! values), and the escapes themselves are budgeted: the per-rule
+//! allow counts in non-test code are pinned by `ALLOW_BUDGETS` in
+//! [`analysis`], so an extra escape is a lint failure until the table
+//! is deliberately raised in the same diff. The pass runs as a
+//! blocking CI job and as the `self_check_repo_tree_is_clean` unit
+//! test, so the tree can never merge with an unexplained violation.
 //!
 //! **Miri** (CI `miri` job) — interprets the pure numeric modules'
 //! tests (`math`, `mesh`, `util::json`, `util::gzip`) under nightly

@@ -1,7 +1,8 @@
 //! Wire-protocol contract: every [`Job`]/[`JobResult`] variant round-trips
-//! through the versioned `util::json` form byte-for-value; v2 documents
-//! decode through the explicit compat shim under pinned upgrade rules;
-//! unknown versions, malformed documents, and broken framing are refused
+//! through the versioned `util::json` form byte-for-value; v2 and v3
+//! documents decode through the explicit compat shims under pinned
+//! upgrade rules (the v4 poll-mode kinds are refused in both); unknown
+//! versions, malformed documents, and broken framing are refused
 //! without panicking — the schema the CLI, benches, and the TCP transport
 //! all rely on.
 
@@ -61,7 +62,7 @@ fn arb_shard_spec(g: &mut Gen) -> ShardSpec {
 
 fn arb_job(g: &mut Gen) -> Job {
     let processor = arb_processor(g);
-    match g.usize_in(0, 5) {
+    match g.usize_in(0, 6) {
         0 => {
             let n = g.usize_in(0, 30);
             Job::Infer { processor, image: (0..n).map(|_| g.f64_in(0.0, 1.0) as f32).collect() }
@@ -82,12 +83,13 @@ fn arb_job(g: &mut Gen) -> Job {
             tile: *g.choose(&[2usize, 4, 8]),
             fidelity: arb_fidelity(g),
         },
-        _ => Job::ShardCompile { name: processor, spec: arb_shard_spec(g) },
+        5 => Job::ShardCompile { name: processor, spec: arb_shard_spec(g) },
+        _ => Job::Poll { ticket: g.usize_in(0, 1 << 50) as u64 },
     }
 }
 
 fn arb_result(g: &mut Gen) -> JobResult {
-    match g.usize_in(0, 6) {
+    match g.usize_in(0, 8) {
         0 => JobResult::Infer {
             probs: (0..10).map(|_| g.f64_in(0.0, 1.0) as f32).collect(),
             queued_us: g.usize_in(0, 1 << 40) as u64,
@@ -118,6 +120,8 @@ fn arb_result(g: &mut Gen) -> JobResult {
             fro_error: g.f64_in(0.0, 10.0),
             cache_hit: g.bool(),
         },
+        6 => JobResult::Submitted { ticket: g.usize_in(0, 1 << 50) as u64 },
+        7 => JobResult::Pending { ticket: g.usize_in(0, 1 << 50) as u64 },
         _ => JobResult::Rejected { reason: "a \"quoted\" reason\nwith θ unicode".into() },
     }
 }
@@ -158,12 +162,13 @@ fn fixed_shard_spec() -> ShardSpec {
     }
 }
 
-/// Deterministic coverage of all six job + seven result variants, in case
-/// the random distribution above ever shifts.
+/// Deterministic coverage of all seven job + nine result variants, in
+/// case the random distribution above ever shifts.
 #[test]
 fn every_variant_covered_explicitly() {
     let jobs = vec![
         Job::Infer { processor: "m".into(), image: vec![0.25, 0.5] },
+        Job::Poll { ticket: 99 },
         Job::Classify { processor: "c".into(), classifier: 3, point: [1.5, -2.25] },
         Job::RawApply {
             processor: "p".into(),
@@ -213,6 +218,8 @@ fn every_variant_covered_explicitly() {
             cache_hit: false,
         },
         JobResult::Rejected { reason: "nope".into() },
+        JobResult::Submitted { ticket: 17 },
+        JobResult::Pending { ticket: 17 },
     ];
     for result in results {
         assert_eq!(JobResult::decode(&result.encode()).expect("round trip"), result);
@@ -288,11 +295,123 @@ fn v2_documents_decode_through_the_compat_shim() {
     let job = Job::Reprogram { processor: "p".into(), code: vec![0] };
     let v = parse(&job.encode()).unwrap();
     assert_eq!(v.get("v").and_then(Json::as_f64), Some(WIRE_VERSION as f64));
-    // Rule 4: versions other than 2 and 3 are refused outright.
-    for bad in [0u64, 1, 4, 99] {
+    // Rule 4: versions other than 2, 3, and 4 are refused outright.
+    for bad in [0u64, 1, 5, 99] {
         let text = format!(r#"{{"v":{bad},"kind":"infer","processor":"m","image":[]}}"#);
         assert!(Job::decode(&text).is_err(), "v{bad} must be refused");
     }
+}
+
+/// The pinned v3 → v4 upgrade rules: every v3 kind decodes identically
+/// through the shim, and the v4 poll-mode kinds (`poll` jobs;
+/// `submitted` / `pending` results) are refused in v2 AND v3 documents.
+#[test]
+fn v3_documents_decode_through_the_compat_shim() {
+    // Rule 1: the whole v3 schema (all six job kinds, all seven result
+    // kinds) decodes identically with the version tag rewritten to 3.
+    let v3_jobs = vec![
+        Job::Infer { processor: "m".into(), image: vec![0.5, 0.25] },
+        Job::Classify { processor: "c".into(), classifier: 2, point: [1.0, -2.0] },
+        Job::RawApply { processor: "p".into(), x: CMat::eye(2) },
+        Job::Reprogram { processor: "p".into(), code: vec![1, 4] },
+        Job::Compile {
+            name: "virt".into(),
+            target: CMat::eye(2),
+            tile: 2,
+            fidelity: Fidelity::Digital,
+        },
+        Job::ShardCompile { name: "net.s1".into(), spec: fixed_shard_spec() },
+    ];
+    for job in v3_jobs {
+        let mut doc = parse(&job.encode()).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V3 as f64));
+        }
+        let as_v3 = doc.to_string_compact();
+        assert_eq!(Job::decode(&as_v3).expect("v3 decodes via the shim"), job, "{as_v3}");
+        assert_eq!(compat::job_from_v3(&doc).unwrap(), job);
+    }
+    let v3_results = vec![
+        JobResult::Infer { probs: vec![0.2; 10], queued_us: 3, service_us: 4 },
+        JobResult::Classify { yhat: 0.5, reconfigured: false },
+        JobResult::RawApply { y: CMat::eye(3) },
+        JobResult::Reprogrammed { version: 9 },
+        JobResult::Compiled {
+            name: "virt".into(),
+            version: 1,
+            grid: (2, 1),
+            tile: 2,
+            fidelity: Fidelity::Quantized,
+            state_vars: 16,
+            fro_error: 0.125,
+            cache_hit: true,
+        },
+        JobResult::ShardCompiled {
+            name: "net.s1".into(),
+            version: 1,
+            out_row_start: 2,
+            out_rows: 2,
+            grid: (1, 2),
+            tile: 2,
+            fidelity: Fidelity::Measured,
+            state_vars: 12,
+            fro_error: 0.0625,
+            cache_hit: false,
+        },
+        JobResult::Rejected { reason: "why".into() },
+    ];
+    for result in v3_results {
+        let mut doc = parse(&result.encode()).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("v".into(), Json::Num(compat::WIRE_VERSION_V3 as f64));
+        }
+        assert_eq!(JobResult::decode(&doc.to_string_compact()).unwrap(), result);
+        assert_eq!(compat::result_from_v3(&doc).unwrap(), result);
+    }
+    // Rule 2: the poll-mode kinds are v4-only — refused in v3 AND v2.
+    for old in [compat::WIRE_VERSION_V2, compat::WIRE_VERSION_V3] {
+        let err = Job::decode(&format!(r#"{{"v":{old},"kind":"poll","ticket":7}}"#))
+            .expect_err("poll is v4-only");
+        assert!(err.to_string().contains("version 4"), "{err}");
+        for kind in ["submitted", "pending"] {
+            let err = JobResult::decode(&format!(r#"{{"v":{old},"kind":"{kind}","ticket":7}}"#))
+                .expect_err("poll-mode results are v4-only");
+            assert!(err.to_string().contains("version 4"), "{err}");
+        }
+    }
+    // Rule 3: encoders never emit v3.
+    let v = parse(&Job::Poll { ticket: 1 }.encode()).unwrap();
+    assert_eq!(v.get("v").and_then(Json::as_f64), Some(WIRE_VERSION as f64));
+    assert_eq!(v.get("kind").and_then(Json::as_str), Some("poll"));
+}
+
+/// Malformed poll-mode documents are refused, never panicking and never
+/// truncating a ticket id.
+#[test]
+fn poll_decode_rejects_malformed_tickets() {
+    assert!(Job::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"poll"}}"#)).is_err());
+    assert!(Job::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"poll","ticket":-1}}"#)).is_err());
+    assert!(
+        Job::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"poll","ticket":1.5}}"#)).is_err()
+    );
+    assert!(
+        Job::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"poll","ticket":"7"}}"#)).is_err()
+    );
+    assert!(JobResult::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"submitted"}}"#)).is_err());
+    assert!(
+        JobResult::decode(&format!(r#"{{"v":{WIRE_VERSION},"kind":"pending","ticket":null}}"#))
+            .is_err()
+    );
+    // Fuzz: random junk tickets must refuse or round-trip, never panic.
+    forall("poll ticket fuzz", 150, |g| {
+        let n = g.usize_in(0, 24);
+        let junk: String =
+            (0..n).map(|_| char::from(g.usize_in(32, 126) as u8)).collect();
+        let text = format!(r#"{{"v":{WIRE_VERSION},"kind":"poll","ticket":{junk}}}"#);
+        if let Ok(job) = Job::decode(&text) {
+            assert_eq!(Job::decode(&job.encode()).unwrap(), job);
+        }
+    });
 }
 
 #[test]

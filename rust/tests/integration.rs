@@ -395,7 +395,7 @@ fn mnist_end_to_end_through_quantized_tile_fleet() {
     assert_eq!(svc.pool().info("virt8").unwrap().version, 2);
 }
 
-/// PR-4 acceptance: the transport-agnostic serving API v3 end to end over
+/// PR-4 acceptance: the transport-agnostic serving API end to end over
 /// loopback TCP. A `RemoteClient` round-trips every `Job` kind against a
 /// `TcpFrontEnd` in the same process — including `Job::Compile`
 /// registering a new virtual processor that then serves `RawApply`
@@ -585,12 +585,12 @@ fn loopback_tcp_serves_every_job_kind_and_admin_plane() {
         other => panic!("unexpected {other:?}"),
     }
 
-    // A v2 job inside a v3 envelope still decodes (compat shim) — sent
+    // A v2 job inside a v4 envelope still decodes (compat shim) — sent
     // over a raw socket to exercise the server's shared decode path.
     {
         let mut raw = std::net::TcpStream::connect(&addr).unwrap();
         let envelope = concat!(
-            r#"{"v":3,"id":1,"job":"#,
+            r#"{"v":4,"id":1,"job":"#,
             r#"{"v":2,"kind":"classify","processor":"cls2x2","classifier":1,"point":[2,3]}}"#
         );
         write_frame(&mut raw, envelope.as_bytes()).unwrap();
@@ -809,6 +809,350 @@ fn cluster_transport_auth_gates_connections() {
         AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
         other => panic!("unexpected {other:?}"),
     }
+}
+
+/// PR-10 acceptance (the `soak-smoke` CI gate): the reactor front end
+/// survives 200 concurrent loopback clients driving mixed traffic —
+/// pipelined out-of-order submits, deferred poll-mode multiplexing, and
+/// classify/raw-apply jobs — on a bounded thread budget. Afterwards the
+/// metrics snapshot must show every connection accepted, zero decode
+/// rejects (no wire drift under concurrency), zero stuck tickets, and
+/// exactly `workers + 1` reactor threads regardless of client count.
+#[test]
+fn soak_reactor_front_end_serves_200_concurrent_clients() {
+    use rfnn::coordinator::batcher::BatchPolicy;
+    use rfnn::coordinator::router::{Admin, AdminReply, Router};
+    use rfnn::coordinator::service::{
+        Job, JobResult, PoolConfig, ProcessorPool, ProcessorService, Workload,
+    };
+    use rfnn::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
+    use rfnn::processor::LinearProcessor;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let models = rfnn::cli::demo_classifiers();
+    let mesh = DiscreteMesh::new(8, MeshBackend::Ideal);
+    let baseline = LinearProcessor::matrix(&mesh).clone();
+    let cfg = PoolConfig {
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        ..PoolConfig::default()
+    };
+    let pool = ProcessorPool::new();
+    pool.register("cls2x2", Workload::Classify2x2(models.clone()), cfg).unwrap();
+    pool.register("mesh8", Workload::Processor(Box::new(mesh)), cfg).unwrap();
+    let svc = Arc::new(ProcessorService::new(pool));
+    let router = Arc::new(Router::new(svc));
+    let tcp = TcpConfig { max_connections: 512, workers: 4, ..TcpConfig::default() };
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router.clone(), tcp).expect("bind");
+    let addr = fe.local_addr().to_string();
+
+    const CLIENTS: usize = 200;
+    let mut threads = Vec::new();
+    for t in 0..CLIENTS {
+        let addr = addr.clone();
+        let models = models.clone();
+        let baseline = baseline.clone();
+        threads.push(std::thread::spawn(move || {
+            let client = RemoteClient::connect(&addr).expect("connect");
+            let dev = rfnn::nn::rfnn2x2::ideal_device();
+            let x =
+                CMat::from_fn(8, 2, |i, j| C64::new(0.1 * i as f64, 0.05 * (j + t % 3) as f64));
+            // Pipelined submits resolve out of order (demuxed by id)...
+            let t1 = client
+                .submit(Job::RawApply { processor: "mesh8".into(), x: x.clone() })
+                .expect("submitted");
+            let t2 = client
+                .submit(Job::RawApply { processor: "mesh8".into(), x: x.clone() })
+                .expect("submitted");
+            // ...alongside a deferred submit whose reply is a ticket,
+            // resolved by polling the SAME connection.
+            let ticket = client
+                .submit_deferred(Job::RawApply { processor: "mesh8".into(), x: x.clone() })
+                .expect("deferred");
+            for tk in [t2, t1] {
+                match tk.wait().expect("raw served") {
+                    JobResult::RawApply { y } => {
+                        assert!(baseline.matmul(&x).sub(&y).max_abs() < 1e-10);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            match client.wait_ticket(ticket).expect("deferred job resolves") {
+                JobResult::RawApply { y } => {
+                    assert!(baseline.matmul(&x).sub(&y).max_abs() < 1e-10);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // Polling a bogus ticket errors cleanly, not wedging the wire.
+            let err = client
+                .poll_ticket(ticket.wrapping_add(0x5AFE_0000))
+                .expect_err("bogus tickets refuse")
+                .to_string();
+            assert!(err.contains("unknown_ticket"), "{err}");
+            let classifier = t % 6;
+            let point = [(t % 9) as f64, 12.0 - (t % 7) as f64];
+            match client
+                .submit_wait(Job::Classify { processor: "cls2x2".into(), classifier, point })
+                .expect("classify served")
+            {
+                JobResult::Classify { yhat, .. } => {
+                    let want = models[classifier].forward(&dev, point);
+                    assert!((yhat - want).abs() < 1e-9);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+
+    // The snapshot pins the soak contract.
+    let admin = RemoteClient::connect(&addr).expect("connect");
+    match admin.admin(Admin::MetricsSnapshot).unwrap() {
+        AdminReply::Metrics(snap) => {
+            let t = snap.get("transport").expect("transport counters");
+            let get = |k: &str| t.get(k).and_then(|v| v.as_f64()).unwrap();
+            assert!(get("connections_accepted") >= (CLIENTS + 1) as f64);
+            assert_eq!(get("connections_refused"), 0.0);
+            assert_eq!(get("decode_rejects"), 0.0, "no decode-reject drift");
+            assert_eq!(get("auth_rejects"), 0.0);
+            assert_eq!(get("reactor_threads"), 5.0, "4 workers + 1 reactor, always");
+            assert_eq!(
+                snap.get("tickets_pending").and_then(|v| v.as_f64()),
+                Some(0.0),
+                "no stuck tickets after the soak"
+            );
+            let polls = snap
+                .get("jobs")
+                .and_then(|j| j.get("poll"))
+                .and_then(|p| p.get("served"))
+                .and_then(|v| v.as_f64())
+                .unwrap();
+            assert!(polls >= CLIENTS as f64, "every client polled at least once, got {polls}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    drop(admin);
+    fe.shutdown();
+}
+
+/// Reactor regression: a client that disconnects with replies still in
+/// flight must not leak its tickets — the reactor reaps them on EOF, so
+/// the pending-ticket gauge returns to zero and the stalled worker's
+/// late replies fall on forgotten tickets harmlessly (the old transport
+/// leaked one parked waiter thread per abandoned job here).
+#[test]
+fn soak_disconnect_mid_flight_reaps_tracked_tickets() {
+    use rfnn::coordinator::metrics::JobKind;
+    use rfnn::coordinator::router::{Admin, AdminReply, Router};
+    use rfnn::coordinator::service::{
+        Job, JobResult, PoolConfig, ProcessorPool, ProcessorService,
+    };
+    use rfnn::coordinator::transport::{RemoteClient, TcpConfig, TcpFrontEnd};
+    use rfnn::processor::Fidelity;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let pool = ProcessorPool::new();
+    let stall_rx = pool
+        .register_external(
+            "stall",
+            (2, 2),
+            Fidelity::Digital,
+            &[JobKind::RawApply],
+            PoolConfig { queue_depth: 4, ..PoolConfig::default() },
+        )
+        .unwrap();
+    let svc = Arc::new(ProcessorService::new(pool));
+    let router = Arc::new(Router::new(svc));
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router.clone(), TcpConfig::default()).unwrap();
+    let addr = fe.local_addr().to_string();
+
+    let client = RemoteClient::connect(&addr).expect("connect");
+    let t1 =
+        client.submit(Job::RawApply { processor: "stall".into(), x: CMat::eye(2) }).unwrap();
+    let t2 =
+        client.submit(Job::RawApply { processor: "stall".into(), x: CMat::eye(2) }).unwrap();
+    // Wait until both jobs are admitted and tracked server-side...
+    for _ in 0..400 {
+        if router.tickets_pending() >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(router.tickets_pending() >= 2, "jobs admitted and tracked");
+    // ...then vanish without collecting either reply.
+    drop(t1);
+    drop(t2);
+    drop(client);
+    for _ in 0..400 {
+        if router.tickets_pending() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(router.tickets_pending(), 0, "disconnect must reap tracked tickets");
+    // The stalled worker answers into the void: harmless.
+    for _ in 0..2 {
+        let h = stall_rx.recv().unwrap();
+        let echo = match &h.job {
+            Job::RawApply { x, .. } => x.clone(),
+            other => panic!("unexpected stalled job {other:?}"),
+        };
+        h.respond(JobResult::RawApply { y: echo });
+    }
+    // The reactor is still healthy: a fresh client gets served.
+    let probe = RemoteClient::connect(&addr).expect("reconnect");
+    match probe.admin(Admin::Health).unwrap() {
+        AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
+        other => panic!("unexpected {other:?}"),
+    }
+    fe.shutdown();
+}
+
+/// Hostile connection: a slow-loris client dribbling a frame one byte at
+/// a time must neither wedge the reactor nor corrupt framing — the
+/// partial frame assembles across sweeps and is answered, while a
+/// well-behaved client opened mid-crawl is served immediately.
+#[test]
+fn soak_slow_loris_partial_frames_assemble_without_wedging() {
+    use rfnn::coordinator::router::{Admin, AdminReply, Router};
+    use rfnn::coordinator::service::{ProcessorPool, ProcessorService};
+    use rfnn::coordinator::transport::{
+        read_frame, write_frame, RemoteClient, Response, TcpConfig, TcpFrontEnd, MAX_FRAME,
+    };
+    use std::io::Write;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let svc = Arc::new(ProcessorService::new(ProcessorPool::new()));
+    let router = Arc::new(Router::new(svc));
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router, TcpConfig::default()).unwrap();
+    let addr = fe.local_addr().to_string();
+
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    loris.set_nodelay(true).ok();
+    let mut framed = Vec::new();
+    write_frame(&mut framed, br#"{"v":4,"id":9,"admin":{"v":4,"admin":"health"}}"#).unwrap();
+    let (head, tail) = framed.split_at(framed.len() / 2);
+    let dribble = |sock: &mut std::net::TcpStream, bytes: &[u8]| {
+        for b in bytes {
+            sock.write_all(std::slice::from_ref(b)).expect("loris byte");
+            sock.flush().ok();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+    dribble(&mut loris, head);
+    // Mid-frame, a well-behaved client is served: one stalled read never
+    // blocks the event loop.
+    let ok = RemoteClient::connect(&addr).expect("connect");
+    match ok.admin(Admin::Health).expect("served while the loris crawls") {
+        AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
+        other => panic!("unexpected {other:?}"),
+    }
+    dribble(&mut loris, tail);
+    // The dribbled frame assembled and was answered.
+    let payload = read_frame(&mut loris, MAX_FRAME).unwrap().expect("loris reply");
+    match Response::decode(std::str::from_utf8(&payload).unwrap()).unwrap() {
+        Response::AdminReply { id, reply: AdminReply::Health { status, .. } } => {
+            assert_eq!(id, 9);
+            assert_eq!(status, "ok");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    fe.shutdown();
+}
+
+/// Hostile connection: a client that never reads its replies cannot pin
+/// reactor memory — once its pending reply bytes exceed the configured
+/// write-buffer cap the connection is shed, and the reactor keeps
+/// serving everyone else.
+#[test]
+fn soak_never_reading_client_is_shed_at_the_write_buffer_cap() {
+    use rfnn::coordinator::batcher::BatchPolicy;
+    use rfnn::coordinator::router::{Admin, AdminReply, Router};
+    use rfnn::coordinator::service::{
+        Job, PoolConfig, ProcessorPool, ProcessorService, Workload,
+    };
+    use rfnn::coordinator::transport::{
+        write_frame, RemoteClient, Request, TcpConfig, TcpFrontEnd,
+    };
+    use std::io::{Read, Write};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let cfg = PoolConfig {
+        batch: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        ..PoolConfig::default()
+    };
+    let pool = ProcessorPool::new();
+    pool.register(
+        "mesh8",
+        Workload::Processor(Box::new(DiscreteMesh::new(8, MeshBackend::Ideal))),
+        cfg,
+    )
+    .unwrap();
+    let svc = Arc::new(ProcessorService::new(pool));
+    let router = Arc::new(Router::new(svc));
+    let tcp = TcpConfig { write_buffer_cap: 8 * 1024, ..TcpConfig::default() };
+    let fe = TcpFrontEnd::bind("127.0.0.1:0", router, tcp).unwrap();
+    let addr = fe.local_addr().to_string();
+
+    // Pump sizable raw-apply jobs and never read a single reply: the
+    // replies clog the OS buffers, then the server-side write buffer,
+    // then the cap trips and the server closes on us.
+    let mut sink = std::net::TcpStream::connect(&addr).unwrap();
+    let x = CMat::from_fn(8, 16, |i, j| C64::new(0.25 * i as f64 - 1.0, 0.125 * j as f64));
+    let mut shed = false;
+    let mut framed = Vec::new();
+    for id in 1..=4000u64 {
+        framed.clear();
+        let req = Request::Job {
+            id,
+            job: Job::RawApply { processor: "mesh8".into(), x: x.clone() },
+            trace: None,
+            defer: false,
+        };
+        write_frame(&mut framed, req.encode().as_bytes()).unwrap();
+        if sink.write_all(&framed).is_err() {
+            shed = true;
+            break;
+        }
+    }
+    if !shed {
+        // The close may still be in flight: drain until EOF/reset shows
+        // up (a timeout means we were never disconnected — a failure).
+        sink.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut buf = [0u8; 4096];
+        loop {
+            match sink.read(&mut buf) {
+                Ok(0) => {
+                    shed = true;
+                    break;
+                }
+                Ok(_) => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break;
+                }
+                Err(_) => {
+                    shed = true;
+                    break;
+                }
+            }
+        }
+    }
+    assert!(shed, "a never-reading client must be disconnected at the cap");
+    // The reactor survived the hostile connection: fresh traffic serves.
+    let probe = RemoteClient::connect(&addr).expect("reconnect");
+    match probe.admin(Admin::Health).unwrap() {
+        AdminReply::Health { status, .. } => assert_eq!(status, "ok"),
+        other => panic!("unexpected {other:?}"),
+    }
+    fe.shutdown();
 }
 
 /// PR-8 acceptance: ONE traced sharded request produces ONE stitched
